@@ -1,0 +1,21 @@
+//! Regenerates paper Fig. 2 (initial energy investigation, Sec. IV-A):
+//! 16 models × 100 epochs — accuracy vs energy (2a), energy vs time (2b),
+//! utilisation vs power (2c), with the Pearson r the paper quotes.
+//!
+//! ```bash
+//! cargo run --release --example fig2_initial_investigation [-- setup2]
+//! ```
+
+use frost::config::{setup_no1, setup_no2};
+use frost::figures::fig2_investigation;
+
+fn main() {
+    let setup2 = std::env::args().any(|a| a == "setup2");
+    let hw = if setup2 { setup_no2() } else { setup_no1() };
+    let out = fig2_investigation(&hw, 100, 42);
+    print!("{}", out.table.to_table());
+    println!();
+    println!("Fig 2a  r(accuracy, energy) = {:>6.3}   [paper: 0.34 — weak]", out.r_accuracy_energy);
+    println!("Fig 2b  r(energy, time)     = {:>6.3}   [paper: 0.999 — linear]", out.r_energy_time);
+    println!("Fig 2c  r(util, power)      = {:>6.3}   [high, saturating ~300 W]", out.r_util_power);
+}

@@ -1,0 +1,24 @@
+//! Regenerates paper Fig. 4 (Sec. IV-C): energy & time vs power cap for
+//! MobileNet, DenseNet and EfficientNet on setup no.2, with each model's
+//! optimal limit (paper: 60% / 60% / 40%).
+//!
+//! ```bash
+//! cargo run --release --example fig4_power_capping
+//! ```
+
+use frost::config::setup_no2;
+use frost::figures::fig4_power_capping;
+
+fn main() {
+    let s = fig4_power_capping(&setup_no2(), &["MobileNet", "DenseNet", "EfficientNet"], 42);
+    print!("{}", s.to_table());
+    println!();
+    for model in ["MobileNet", "DenseNet", "EfficientNet"] {
+        let i = s.labels.iter().position(|l| l.starts_with(model)).unwrap();
+        println!(
+            "{model:<13} optimal cap {:>5.1}%  (energy saving {:.1}%)",
+            s.rows[i][3], s.rows[i][4]
+        );
+    }
+    println!("[paper: MobileNet 60%, DenseNet 60%, EfficientNet 40%]");
+}

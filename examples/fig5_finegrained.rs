@@ -1,0 +1,26 @@
+//! Regenerates paper Fig. 5 (Sec. IV-C): ResNet swept at 1% power-cap
+//! increments on setup no.2, and the ED^xP optima for x ∈ {1, 2, 3}.
+//!
+//! ```bash
+//! cargo run --release --example fig5_finegrained
+//! ```
+
+use frost::config::setup_no2;
+use frost::figures::fig5_fine_grained;
+
+fn main() {
+    let out = fig5_fine_grained(&setup_no2(), "ResNet", 42);
+    // Print a decimated view of the 71-point sweep (every 5th point).
+    let mut thin = frost::util::Series::new(out.sweep.name.clone(), &["cap_pct", "rel_energy", "rel_time"]);
+    for (i, (label, row)) in out.sweep.labels.iter().zip(&out.sweep.rows).enumerate() {
+        if i % 5 == 0 || i == out.sweep.len() - 1 {
+            thin.push(label.clone(), row.clone());
+        }
+    }
+    print!("{}", thin.to_table());
+    println!();
+    for (m, cap, saving, delay) in &out.optima {
+        println!("ED{m}P: optimal cap {cap:>5.1}%  saving {saving:>5.1}%  delay {delay:+.1}%");
+    }
+    println!("[paper: optimum rises with x; ED3P optima reach the maximum; EDP saves most]");
+}

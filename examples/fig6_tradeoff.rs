@@ -1,0 +1,24 @@
+//! Regenerates paper Fig. 6 (Sec. IV-C): per-model energy saving vs delay
+//! under ED²P, plus the headline means — paper: 26.4% saving at +6.9% time
+//! on setup no.1; 17.7% at +5.5% on setup no.2.
+//!
+//! ```bash
+//! cargo run --release --example fig6_tradeoff
+//! ```
+
+use frost::config::{setup_no1, setup_no2};
+use frost::figures::fig6_tradeoff;
+
+fn main() {
+    for (hw, paper) in [
+        (setup_no1(), "26.4% @ +6.9%"),
+        (setup_no2(), "17.7% @ +5.5%"),
+    ] {
+        let out = fig6_tradeoff(&hw, 2.0, 42);
+        print!("{}", out.table.to_table());
+        println!(
+            "MEAN {}: saving {:.1}% at {:+.1}% time   [paper: {paper}]\n",
+            hw.name, out.mean_saving_pct, out.mean_delay_pct
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Full O-RAN deployment scenario (paper Fig. 1 + Sec. II).
+//!
+//! ```bash
+//! cargo run --release --example oran_deployment
+//! ```
+//!
+//! Two inference hosts (the paper's setups no.1 and no.2) under one SMO.
+//! Three ML services with different QoS classes arrive; each walks the
+//! six-step AI/ML lifecycle with FROST profiling injected before
+//! deployment.  The demo shows the A1 policy machinery steering the ED^mP
+//! exponent per service, exactly as Sec. III-C proposes.
+
+use frost::config::{setup_no1, setup_no2};
+use frost::frost::{EnergyPolicy, QosClass};
+use frost::oran::MlLifecycle;
+use frost::zoo::model_by_name;
+
+fn main() -> anyhow::Result<()> {
+    let mut lc = MlLifecycle::new(vec![setup_no1(), setup_no2()], 0.80, 7);
+    println!("O-RAN fabric up: SMO, non-RT RIC, near-RT RIC, 2 hosts\n");
+
+    // Three services, three QoS classes (paper Sec. III-C / use-case paper):
+    let services = [
+        // Background V2X trajectory model: maximise savings.
+        ("DenseNet", "host1", QosClass::EnergySaver),
+        // Traffic steering: the balanced default.
+        ("ResNet", "host1", QosClass::Balanced),
+        // Near-RT slicing control: latency critical.
+        ("MobileNetV2", "host2", QosClass::LatencyCritical),
+    ];
+
+    for (model, host, qos) in services {
+        let entry = model_by_name(model).unwrap();
+        let w = entry.workload(&setup_no1().gpu);
+        let policy = EnergyPolicy {
+            id: format!("{model}-policy"),
+            qos,
+            ..EnergyPolicy::default_policy()
+        };
+        println!("--- {model} on {host} ({:?} / {}) ---", qos, qos.criterion());
+        let stages = lc.run_workflow(model, w, host, policy, 60, 50_000)?;
+        let entry = lc.nonrt.catalogue.get(model).unwrap();
+        println!(
+            "  lifecycle: {} stages, catalogue v{}, accuracy {:.2}%",
+            stages.len(),
+            entry.version,
+            entry.validation_accuracy * 100.0
+        );
+        println!(
+            "  FROST decision: cap {:.1}% of TDP",
+            entry.optimal_cap.unwrap() * 100.0
+        );
+        let rec = lc.smo.profile_records.iter().rev().find(|r| r.model == model).unwrap();
+        println!(
+            "  estimated: {:.1}% energy saved at {:+.1}% time",
+            rec.est_energy_saving * 100.0,
+            (rec.est_slowdown - 1.0) * 100.0
+        );
+        println!();
+    }
+
+    println!("=== deployment summary ===");
+    println!("models in catalogue : {}", lc.nonrt.catalogue.len());
+    println!("xApps deployed      : {}", lc.nearrt.xapps().len());
+    println!("KPM reports         : {}", lc.smo.kpms.len());
+    println!("fabric traffic      : {:?}", lc.bus.stats());
+    println!(
+        "energy reported     : {:.1} kJ",
+        lc.smo.total_reported_energy() / 1e3
+    );
+    println!(
+        "mean energy saving  : {:.1}% across FROST decisions",
+        lc.smo.mean_energy_saving() * 100.0
+    );
+
+    // QoS classes must order the chosen caps: latency-critical >= balanced
+    // >= energy-saver is the expected *tendency* (paper Fig. 5).
+    let cap = |m: &str| {
+        lc.smo
+            .profile_records
+            .iter()
+            .rev()
+            .find(|r| r.model == m)
+            .unwrap()
+            .optimal_cap
+    };
+    println!(
+        "\ncaps by QoS: energy-saver {:.0}% <= balanced {:.0}% (different models; \
+         latency-critical {:.0}% runs on the other testbed)",
+        cap("DenseNet") * 100.0,
+        cap("ResNet") * 100.0,
+        cap("MobileNetV2") * 100.0
+    );
+    Ok(())
+}

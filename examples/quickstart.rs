@@ -1,0 +1,63 @@
+//! Quickstart: profile one model with FROST and apply the optimal cap.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the minimal API tour: build a virtual testbed (paper setup
+//! no.1), pick a model from the zoo, run the eight-limit profiler under an
+//! ED²P policy, and inspect the decision.
+
+use frost::config::{setup_no1, ProfilerConfig};
+use frost::frost::{EnergyPolicy, PowerProfiler};
+use frost::simulator::Testbed;
+use frost::zoo::model_by_name;
+
+fn main() {
+    // 1. The hardware FROST manages: i7-8700K + RTX 3080 (paper setup no.1).
+    let hw = setup_no1();
+    let mut testbed = Testbed::new(hw.clone(), 42);
+
+    // 2. The model the SMO just asked us to host.
+    let entry = model_by_name("DenseNet").expect("in the zoo");
+    let workload = entry.workload(&hw.gpu);
+
+    // 3. FROST: eight power limits x 30 s windows, ED²P criterion,
+    //    default A1 policy (cap range 30-100%, +25% slowdown budget).
+    let profiler = PowerProfiler::with_policy(
+        ProfilerConfig::default(),
+        EnergyPolicy::default_policy(),
+    );
+    let outcome = profiler.profile(&mut testbed, &workload, 128);
+
+    println!("FROST quickstart — {} on {}", outcome.model, hw.gpu.name);
+    println!("criterion          : {}", outcome.criterion);
+    println!("profiled points    : {}", outcome.points.len());
+    for p in &outcome.points {
+        println!(
+            "  cap {:>4.0}%  {:>7.2} mJ/sample  {:>7.2} µs/sample  {:>6.1} W",
+            p.cap_frac * 100.0,
+            p.energy_per_sample_j * 1e3,
+            p.time_per_sample_s * 1e6,
+            p.mean_power.0
+        );
+    }
+    println!(
+        "fit                : rel err {:.2}% (good: {})",
+        outcome.fit.rel_error * 100.0,
+        outcome.fit.good_fit
+    );
+    println!(
+        "decision           : cap at {:.1}% of TDP ({:.0} W)",
+        outcome.optimal_cap * 100.0,
+        outcome.optimal_cap * hw.gpu.tdp_w
+    );
+    println!(
+        "estimated effect   : {:.1}% energy saved at {:+.1}% time",
+        outcome.est_energy_saving * 100.0,
+        (outcome.est_slowdown - 1.0) * 100.0
+    );
+    // The testbed is now running at the chosen cap:
+    assert!((testbed.cap_frac() - outcome.optimal_cap).abs() < 1e-9);
+    println!("testbed now capped : {:.1}%", testbed.cap_frac() * 100.0);
+}

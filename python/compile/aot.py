@@ -1,0 +1,179 @@
+"""AOT bridge: lower the L2/L1 stack to HLO **text** artifacts for Rust.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path.  For every trainable model we emit three artifacts:
+
+    artifacts/<model>_init.hlo.txt    () -> (step, params..., m..., v...)
+    artifacts/<model>_train.hlo.txt   (state..., x, y) -> (state..., loss, acc)
+    artifacts/<model>_infer.hlo.txt   (params..., x) -> (logits, preds)
+
+plus ``artifacts/manifest.json`` describing shapes, the state layout, and
+the analytic cost model (FLOPs / bytes) that seeds the Rust simulator's
+workload descriptors.
+
+HLO **text** — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+TRAIN_BATCH = 64
+INFER_BATCH = 128  # paper batch size (Sec. IV)
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr) -> dict:
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def _shape_dtype(arrs):
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrs]
+
+
+def lower_model(name: str, out_dir: str, train_batch: int, infer_batch: int) -> dict:
+    """Lower init/train/infer for one model; return its manifest entry."""
+    state = M.init_state(name, SEED)
+    n_params = len(M.init_params(name, SEED))
+    n_state = len(state)
+
+    x_tr = jax.ShapeDtypeStruct((train_batch, *M.IMAGE_SHAPE), jnp.float32)
+    y_tr = jax.ShapeDtypeStruct((train_batch,), jnp.int32)
+    x_in = jax.ShapeDtypeStruct((infer_batch, *M.IMAGE_SHAPE), jnp.float32)
+
+    entry: dict = {
+        "n_params": n_params,
+        "n_state": n_state,
+        "param_count": M.param_count(name),
+        "state_specs": [_spec(s) for s in state],
+    }
+
+    # --- init: no-arg function baking the seeded initial state ------------
+    init_fn = lambda: tuple(M.init_state(name, SEED))  # noqa: E731
+    lo = jax.jit(init_fn).lower()
+    path = os.path.join(out_dir, f"{name}_init.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lo))
+    entry["init"] = {"file": os.path.basename(path), "n_outputs": n_state}
+
+    # --- train step --------------------------------------------------------
+    train_fn = M.make_train_step(name)
+    lo = jax.jit(train_fn).lower(*_shape_dtype(state), x_tr, y_tr)
+    flops = None
+    try:
+        ca = lo.compile().cost_analysis()
+        if ca and "flops" in ca:
+            flops = float(ca["flops"])
+    except Exception as e:  # pragma: no cover - cost analysis is best-effort
+        print(f"  [warn] cost_analysis failed for {name}: {e}", file=sys.stderr)
+    path = os.path.join(out_dir, f"{name}_train.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lo))
+    entry["train"] = {
+        "file": os.path.basename(path),
+        "batch": train_batch,
+        "inputs": entry["state_specs"]
+        + [
+            {"shape": list(x_tr.shape), "dtype": "float32"},
+            {"shape": list(y_tr.shape), "dtype": "int32"},
+        ],
+        "n_outputs": n_state + 2,
+        "flops_xla": flops,
+        "flops_analytic": M.model_flops(name, train_batch, training=True),
+    }
+
+    # --- inference ----------------------------------------------------------
+    infer_fn = M.make_infer(name)
+    params = M.init_params(name, SEED)
+    lo = jax.jit(infer_fn).lower(*_shape_dtype(params), x_in)
+    flops = None
+    try:
+        ca = lo.compile().cost_analysis()
+        if ca and "flops" in ca:
+            flops = float(ca["flops"])
+    except Exception:  # pragma: no cover
+        pass
+    path = os.path.join(out_dir, f"{name}_infer.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lo))
+    entry["infer"] = {
+        "file": os.path.basename(path),
+        "batch": infer_batch,
+        "n_inputs": n_params + 1,
+        "n_outputs": 2,
+        "flops_xla": flops,
+        "flops_analytic": M.model_flops(name, infer_batch, training=False),
+    }
+
+    # --- per-layer cost (seeds the Rust workload descriptors) --------------
+    entry["layer_costs"] = [
+        {"layer": c.name, "flops": c.flops, "bytes": c.bytes_accessed}
+        for c in M.forward_cost(name, train_batch)
+    ]
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; HLO artifacts go to its directory")
+    ap.add_argument("--models", nargs="*", default=list(M.TRAINABLE_MODELS))
+    ap.add_argument("--train-batch", type=int, default=TRAIN_BATCH)
+    ap.add_argument("--infer-batch", type=int, default=INFER_BATCH)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "jax_version": jax.__version__,
+        "seed": SEED,
+        "image_shape": list(M.IMAGE_SHAPE),
+        "num_classes": M.NUM_CLASSES,
+        "hyperparameters": {
+            "optimizer": "adam",
+            "learning_rate": M.LEARNING_RATE,
+            "beta1": M.ADAM_B1,
+            "beta2": M.ADAM_B2,
+            "eps": M.ADAM_EPS,
+            "loss": "categorical_cross_entropy",
+        },
+        "models": {},
+    }
+    for name in args.models:
+        print(f"lowering {name} ...")
+        manifest["models"][name] = lower_model(
+            name, out_dir, args.train_batch, args.infer_batch
+        )
+
+    blob = json.dumps(manifest, indent=2, sort_keys=True)
+    manifest["sha256"] = hashlib.sha256(blob.encode()).hexdigest()
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

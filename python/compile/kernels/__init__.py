@@ -1,0 +1,29 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .conv2d import conv2d, conv2d_flops, depthwise_conv2d
+from .matmul import (
+    BlockConfig,
+    TPU_BLOCK_K,
+    TPU_BLOCK_M,
+    TPU_BLOCK_N,
+    block_policy,
+    dense,
+    matmul,
+    matmul_flops,
+    vmem_bytes,
+)
+
+__all__ = [
+    "BlockConfig",
+    "TPU_BLOCK_K",
+    "TPU_BLOCK_M",
+    "TPU_BLOCK_N",
+    "block_policy",
+    "conv2d",
+    "conv2d_flops",
+    "dense",
+    "depthwise_conv2d",
+    "matmul",
+    "matmul_flops",
+    "vmem_bytes",
+]

@@ -1,0 +1,105 @@
+"""L1: 2-D convolution lowered onto the Pallas tiled matmul (im2col).
+
+On the paper's CUDA targets cuDNN implements convolution as implicit GEMM;
+we make that explicit: patch extraction (pure data movement, fused by XLA)
+followed by the Pallas matmul kernel, so every convolution FLOP flows
+through the same power-capped hot-spot kernel as the dense layers.
+
+NHWC activations, HWIO weights (kh, kw, in_c, out_c) — JAX conventions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import matmul as mm
+
+
+def _patches(x: jax.Array, kh: int, kw: int, stride: int, padding: str) -> jax.Array:
+    """Extract im2col patches: (B, H', W', C*kh*kw) with (C, kh, kw) order.
+
+    ``conv_general_dilated_patches`` emits the feature dim ordered as
+    (spatial..., channel) varying fastest over the *filter* positions within
+    each input channel — i.e. (C, kh, kw).  The weight reshape in
+    :func:`conv2d` matches this ordering; the pair is validated against the
+    ``lax.conv_general_dilated`` oracle in ``python/tests/test_kernels.py``.
+    """
+    p = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return p
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Convolution as im2col + Pallas GEMM.
+
+    Args:
+        x: (B, H, W, C) activations.
+        w: (kh, kw, C, O) filters.
+        b: optional (O,) bias.
+        stride: spatial stride (same in both dims).
+        padding: "SAME" or "VALID".
+
+    Returns:
+        (B, H', W', O) activations in f32.
+    """
+    kh, kw, c, o = w.shape
+    patches = _patches(x, kh, kw, stride, padding)  # (B, H', W', C*kh*kw)
+    bsz, ho, wo, feat = patches.shape
+    lhs = patches.reshape(bsz * ho * wo, feat)
+    # (kh, kw, C, O) -> (C, kh, kw, O) to match the patches feature order.
+    rhs = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * kh * kw, o)
+    out = mm.matmul(lhs, rhs).reshape(bsz, ho, wo, o)
+    if b is not None:
+        out = out + b[None, None, None, :]
+    return out
+
+
+def depthwise_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Depthwise convolution (MobileNet-style), per-channel filters.
+
+    Depthwise convs are bandwidth-bound (arithmetic intensity < 2 FLOP/B) and
+    gain nothing from an MXU GEMM kernel; we keep them on the XLA native
+    path (`feature_group_count = C`) — the pointwise 1x1 convs that dominate
+    MobileNet FLOPs still run through the Pallas GEMM.
+
+    Args:
+        x: (B, H, W, C).
+        w: (kh, kw, C, 1) per-channel filters.
+    """
+    c = x.shape[-1]
+    assert w.shape[2] == c and w.shape[3] == 1, f"bad depthwise filter {w.shape}"
+    return lax.conv_general_dilated(
+        x,
+        w.reshape(w.shape[0], w.shape[1], 1, c),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def conv2d_flops(
+    batch: int, h_out: int, w_out: int, kh: int, kw: int, c_in: int, c_out: int
+) -> int:
+    """FLOPs of one conv layer (2 * MACs) — for the AOT cost manifest."""
+    return mm.matmul_flops(batch * h_out * w_out, kh * kw * c_in, c_out)

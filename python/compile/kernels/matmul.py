@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: tiled matmul — the compute hot-spot of every model.
+
+The paper's workloads are CNNs whose training cost is dominated by GEMMs
+(convolutions lowered through im2col, plus the dense classifier head).  On
+the paper's CUDA targets these are the kernels the GPU power cap throttles;
+here they are Pallas kernels so that the *same* hot-spot structure flows
+through the AOT bridge into the Rust runtime.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): instead of CUDA
+threadblocks + shared memory we express the HBM<->VMEM schedule with a
+`BlockSpec` grid.  The canonical TPU tiling is 128x128x128 (MXU-systolic
+shaped, f32 accumulation); on this repo's CPU-PJRT correctness path the
+grid-step overhead of interpret mode dominates, so `block_policy` widens
+blocks (fewer grid steps) while keeping the identical kernel body.  The
+TPU-shaped constants are exported for the VMEM/MXU estimates recorded in
+EXPERIMENTS.md §Perf.
+
+All Pallas calls use ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Canonical TPU tile (MXU systolic array is 128x128; VMEM-friendly).
+TPU_BLOCK_M = 128
+TPU_BLOCK_N = 128
+TPU_BLOCK_K = 128
+
+# CPU-interpret policy caps: keep grids small (per-step overhead ~ms).
+_CPU_MAX_BLOCK_M = 4096
+_CPU_MAX_BLOCK_N = 512
+_CPU_MAX_BLOCK_K = 4096
+
+
+class BlockConfig(NamedTuple):
+    """Block shape for one pallas matmul call."""
+
+    bm: int
+    bn: int
+    bk: int
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def block_policy(m: int, k: int, n: int) -> BlockConfig:
+    """Pick block sizes for an (m, k) @ (k, n) matmul.
+
+    Policy: pad every dim to a multiple of 8 (sublane-friendly), then use the
+    full padded dim as the block up to the CPU caps.  On small CNN GEMMs this
+    yields a grid of 1-8 steps, which keeps interpret-mode overhead near the
+    pure-XLA roofline while preserving the tiled kernel structure.
+    """
+    mp = _round_up(m, 8)
+    kp = _round_up(k, 8)
+    np_ = _round_up(n, 8)
+    bm = min(mp, _CPU_MAX_BLOCK_M)
+    bn = min(np_, _CPU_MAX_BLOCK_N)
+    bk = min(kp, _CPU_MAX_BLOCK_K)
+    return BlockConfig(bm=bm, bn=bn, bk=bk)
+
+
+def vmem_bytes(cfg: BlockConfig, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (x, w and o blocks).
+
+    Used by DESIGN.md/EXPERIMENTS.md §Perf to check the kernel against the
+    ~16 MiB/core VMEM budget of a TPU.
+    """
+    return dtype_bytes * (cfg.bm * cfg.bk + cfg.bk * cfg.bn + cfg.bm * cfg.bn)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """Pallas kernel body: one (bm, bk) x (bk, bn) MXU tile, f32 accumulate.
+
+    The output block is revisited across the k grid dimension and doubles as
+    the accumulator (out index_map ignores k), which avoids a scratch
+    allocation and works identically in interpret and compiled modes.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_pallas(x: jax.Array, w: jax.Array, cfg: BlockConfig) -> jax.Array:
+    """Raw pallas tiled matmul over padded operands."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    mp, kp, np_ = _round_up(m, cfg.bm), _round_up(k, cfg.bk), _round_up(n, cfg.bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    grid = (mp // cfg.bm, np_ // cfg.bn, kp // cfg.bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((cfg.bm, cfg.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` through the Pallas tiled kernel, differentiable.
+
+    A ``custom_vjp`` routes the backward pass through the same Pallas kernel
+    (``dx = g @ w.T``, ``dw = x.T @ g``) instead of relying on pallas_call
+    transpose rules, so the *entire* train-step GEMM traffic is kernel
+    traffic — exactly what the paper's power cap throttles.
+    """
+    cfg = block_policy(x.shape[0], x.shape[1], w.shape[1])
+    return _matmul_pallas(x, w, cfg)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    g = g.astype(jnp.float32)
+    dx_cfg = block_policy(g.shape[0], g.shape[1], w.shape[0])
+    dw_cfg = block_policy(x.shape[1], x.shape[0], g.shape[1])
+    dx = _matmul_pallas(g, w.T, dx_cfg)
+    dw = _matmul_pallas(x.T, g, dw_cfg)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense layer ``x @ w + b`` with the Pallas matmul on the hot path."""
+    return matmul(x, w) + b[None, :]
+
+
+def matmul_flops(m: int, k: int, n: int) -> int:
+    """MACs*2 for one GEMM — consumed by the AOT cost manifest."""
+    return 2 * m * k * n

@@ -1,0 +1,66 @@
+"""Pure-jnp/lax oracles for the Pallas kernels.
+
+These are the CORE correctness signal of the build path: every kernel must
+match its oracle to float tolerance before `aot.py` is allowed to emit
+artifacts (enforced by pytest at build time, see Makefile `test`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul.matmul: plain XLA dot in f32."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul.dense."""
+    return matmul_ref(x, w) + b[None, :]
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Oracle for kernels.conv2d.conv2d: native XLA convolution."""
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b[None, None, None, :]
+    return out
+
+
+def depthwise_conv2d_ref(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """Oracle for kernels.conv2d.depthwise_conv2d via explicit per-channel loop."""
+    c = x.shape[-1]
+    outs = []
+    for ch in range(c):
+        outs.append(
+            lax.conv_general_dilated(
+                x[..., ch : ch + 1],
+                w[:, :, ch : ch + 1, :],
+                window_strides=(stride, stride),
+                padding=padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        )
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,404 @@
+"""L2: JAX CNN model family — forward, loss, Adam train step, inference.
+
+This is the "given a CNN model, a dataset, and a training setup" half of the
+paper's problem statement.  Four small-but-real CNN architectures mirror the
+paper's zoo diversity (classic LeNet, a plain deep stack, residual blocks,
+depthwise-separable blocks); all convolution/dense FLOPs flow through the L1
+Pallas kernels so that the AOT-lowered HLO has the paper's hot-spot
+structure.  The Rust coordinator (L3) never imports this module — it loads
+the HLO text artifacts produced by :mod:`compile.aot`.
+
+State layout (the contract with ``rust/src/runtime``):
+
+    state = [step(f32 scalar), *params, *m, *v]
+
+``train_step(*state, x, y)`` returns ``(*state', loss, acc)`` with state
+tensors in the *same order*, so the Rust training loop simply feeds outputs
+``0..n_state`` back as inputs ``0..n_state``.
+
+Hyperparameters follow the paper (Sec. IV): Adam, lr 1e-3, categorical
+cross-entropy.  (Batch size is a lowering parameter; the paper's 128 is the
+inference default, training artifacts default to 64 to bound CPU-interpret
+step time.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, conv2d_flops, dense, depthwise_conv2d, matmul_flops
+
+# Paper hyperparameters (Sec. IV).
+LEARNING_RATE = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+NUM_CLASSES = 10
+IMAGE_SHAPE = (32, 32, 3)  # CIFAR-10
+
+# ---------------------------------------------------------------------------
+# Architecture IR
+# ---------------------------------------------------------------------------
+# Layers are declarative tuples interpreted by `init_params` / `apply`:
+#   ("conv", out_c, k, stride, padding)      conv + bias + relu
+#   ("conv_linear", out_c, k, stride, pad)   conv + bias (no activation)
+#   ("dwsep", out_c, stride)                 depthwise 3x3 + pointwise 1x1, relu
+#   ("res", out_c, stride)                   2x conv residual block, relu
+#   ("avgpool", k)                           average pool kxk stride k
+#   ("maxpool", k)                           max pool kxk stride k
+#   ("gap",)                                 global average pool
+#   ("flatten",)
+#   ("dense", n)                             dense + bias + relu
+#   ("dense_linear", n)                      dense + bias (logits head)
+
+ARCHS: dict[str, list[tuple[Any, ...]]] = {
+    # Classic LeNet-5 (the paper's outlier model — too small to load a GPU).
+    "lenet": [
+        ("conv", 6, 5, 1, "VALID"),
+        ("avgpool", 2),
+        ("conv", 16, 5, 1, "VALID"),
+        ("avgpool", 2),
+        ("flatten",),
+        ("dense", 120),
+        ("dense", 84),
+        ("dense_linear", NUM_CLASSES),
+    ],
+    # Plain deep conv stack (SimpleDLA-flavoured).
+    "simpledla": [
+        ("conv", 32, 3, 1, "SAME"),
+        ("conv", 32, 3, 2, "SAME"),
+        ("conv", 64, 3, 1, "SAME"),
+        ("conv", 64, 3, 2, "SAME"),
+        ("conv", 128, 3, 2, "SAME"),
+        ("gap",),
+        ("dense_linear", NUM_CLASSES),
+    ],
+    # Residual network (ResNet-flavoured).
+    "resnet_mini": [
+        ("conv", 16, 3, 1, "SAME"),
+        ("res", 16, 1),
+        ("res", 32, 2),
+        ("res", 64, 2),
+        ("gap",),
+        ("dense_linear", NUM_CLASSES),
+    ],
+    # Depthwise-separable network (MobileNet-flavoured).
+    "mobilenet_mini": [
+        ("conv", 16, 3, 2, "SAME"),
+        ("dwsep", 32, 1),
+        ("dwsep", 64, 2),
+        ("dwsep", 128, 2),
+        ("gap",),
+        ("dense_linear", NUM_CLASSES),
+    ],
+}
+
+TRAINABLE_MODELS = tuple(sorted(ARCHS))
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(rng: jax.Array, kh: int, kw: int, cin: int, cout: int):
+    """He-normal conv filter + zero bias."""
+    std = (2.0 / (kh * kw * cin)) ** 0.5
+    w = jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32) * std
+    return w, jnp.zeros((cout,), jnp.float32)
+
+
+def _dense_init(rng: jax.Array, nin: int, nout: int):
+    std = (2.0 / nin) ** 0.5
+    w = jax.random.normal(rng, (nin, nout), jnp.float32) * std
+    return w, jnp.zeros((nout,), jnp.float32)
+
+
+def _shape_after(layers: Sequence[tuple], upto: int) -> tuple[int, int, int]:
+    """Spatial/channel shape after `upto` layers, starting from IMAGE_SHAPE."""
+    h, w, c = IMAGE_SHAPE
+    flat = None
+    for layer in layers[:upto]:
+        kind = layer[0]
+        if kind in ("conv", "conv_linear"):
+            _, cout, k, s, pad = layer
+            if pad == "VALID":
+                h, w = (h - k) // s + 1, (w - k) // s + 1
+            else:
+                h, w = -(-h // s), -(-w // s)
+            c = cout
+        elif kind == "dwsep":
+            _, cout, s = layer
+            h, w = -(-h // s), -(-w // s)
+            c = cout
+        elif kind == "res":
+            _, cout, s = layer
+            h, w = -(-h // s), -(-w // s)
+            c = cout
+        elif kind in ("avgpool", "maxpool"):
+            k = layer[1]
+            h, w = h // k, w // k
+        elif kind == "gap":
+            flat = c
+            h = w = 1
+        elif kind == "flatten":
+            flat = h * w * c
+        elif kind in ("dense", "dense_linear"):
+            flat = layer[1]
+    if flat is not None:
+        return 1, 1, flat
+    return h, w, c
+
+
+def init_params(name: str, seed: int = 0) -> list[jax.Array]:
+    """Build the flat parameter list for architecture `name`."""
+    layers = ARCHS[name]
+    rng = jax.random.PRNGKey(seed)
+    params: list[jax.Array] = []
+    for i, layer in enumerate(layers):
+        kind = layer[0]
+        _, _, cin = _shape_after(layers, i)
+        if i == 0:
+            cin = IMAGE_SHAPE[2]
+        else:
+            cin = _shape_after(layers, i)[2]
+        if kind in ("conv", "conv_linear"):
+            _, cout, k, _, _ = layer
+            rng, sub = jax.random.split(rng)
+            w, b = _conv_init(sub, k, k, cin, cout)
+            params += [w, b]
+        elif kind == "dwsep":
+            _, cout, _ = layer
+            rng, s1 = jax.random.split(rng)
+            rng, s2 = jax.random.split(rng)
+            dw = jax.random.normal(s1, (3, 3, cin, 1), jnp.float32) * (2.0 / 9) ** 0.5
+            pw, pb = _conv_init(s2, 1, 1, cin, cout)
+            params += [dw, pw, pb]
+        elif kind == "res":
+            _, cout, s = layer
+            rng, s1 = jax.random.split(rng)
+            rng, s2 = jax.random.split(rng)
+            w1, b1 = _conv_init(s1, 3, 3, cin, cout)
+            w2, b2 = _conv_init(s2, 3, 3, cout, cout)
+            params += [w1, b1, w2, b2]
+            if s != 1 or cin != cout:
+                rng, s3 = jax.random.split(rng)
+                ws, bs = _conv_init(s3, 1, 1, cin, cout)
+                params += [ws, bs]
+        elif kind in ("dense", "dense_linear"):
+            nout = layer[1]
+            nin = _shape_after(layers, i)[0] * _shape_after(layers, i)[1]
+            # flatten dim computed by _shape_after at this index:
+            h, w_, c = _shape_after(layers, i)
+            nin = h * w_ * c
+            rng, sub = jax.random.split(rng)
+            w, b = _dense_init(sub, nin, nout)
+            params += [w, b]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _avg_pool(x: jax.Array, k: int) -> jax.Array:
+    b, h, w, c = x.shape
+    x = x[:, : h // k * k, : w // k * k, :]
+    x = x.reshape(b, h // k, k, w // k, k, c)
+    return x.mean(axis=(2, 4))
+
+
+def _max_pool(x: jax.Array, k: int) -> jax.Array:
+    b, h, w, c = x.shape
+    x = x[:, : h // k * k, : w // k * k, :]
+    x = x.reshape(b, h // k, k, w // k, k, c)
+    return x.max(axis=(2, 4))
+
+
+def apply(name: str, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Forward pass: (B, 32, 32, 3) images -> (B, 10) logits."""
+    layers = ARCHS[name]
+    p = list(params)
+    i = 0
+
+    def take(n: int):
+        nonlocal i
+        out = p[i : i + n]
+        i += n
+        return out
+
+    for li, layer in enumerate(layers):
+        kind = layer[0]
+        if kind == "conv":
+            _, cout, k, s, pad = layer
+            w, b = take(2)
+            x = jax.nn.relu(conv2d(x, w, b, stride=s, padding=pad))
+        elif kind == "conv_linear":
+            _, cout, k, s, pad = layer
+            w, b = take(2)
+            x = conv2d(x, w, b, stride=s, padding=pad)
+        elif kind == "dwsep":
+            _, cout, s = layer
+            dw, pw, pb = take(3)
+            x = depthwise_conv2d(x, dw, stride=s, padding="SAME")
+            x = jax.nn.relu(conv2d(x, pw, pb, stride=1, padding="SAME"))
+        elif kind == "res":
+            _, cout, s = layer
+            cin = x.shape[-1]
+            w1, b1, w2, b2 = take(4)
+            y = jax.nn.relu(conv2d(x, w1, b1, stride=s, padding="SAME"))
+            y = conv2d(y, w2, b2, stride=1, padding="SAME")
+            if s != 1 or cin != cout:
+                ws, bs = take(2)
+                x = conv2d(x, ws, bs, stride=s, padding="SAME")
+            x = jax.nn.relu(x + y)
+        elif kind == "avgpool":
+            x = _avg_pool(x, layer[1])
+        elif kind == "maxpool":
+            x = _max_pool(x, layer[1])
+        elif kind == "gap":
+            x = x.mean(axis=(1, 2))
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "dense":
+            w, b = take(2)
+            x = jax.nn.relu(dense(x, w, b))
+        elif kind == "dense_linear":
+            w, b = take(2)
+            x = dense(x, w, b)
+        else:  # pragma: no cover - IR is static
+            raise ValueError(f"unknown layer {kind}")
+    assert i == len(p), f"{name}: consumed {i} of {len(p)} params"
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step / inference
+# ---------------------------------------------------------------------------
+
+
+def loss_and_acc(
+    name: str, params: Sequence[jax.Array], x: jax.Array, y: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Categorical cross-entropy + accuracy (paper Sec. IV hyperparameters)."""
+    logits = apply(name, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES, dtype=jnp.float32)
+    loss = -(onehot * logp).sum(axis=-1).mean()
+    acc = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32).mean()
+    return loss, acc
+
+
+def make_train_step(name: str):
+    """Adam train step over the flat state layout (see module docstring)."""
+    n = len(init_params(name))
+
+    def train_step(*args):
+        step = args[0]
+        params = list(args[1 : 1 + n])
+        m = list(args[1 + n : 1 + 2 * n])
+        v = list(args[1 + 2 * n : 1 + 3 * n])
+        x, y = args[1 + 3 * n], args[2 + 3 * n]
+
+        (loss, acc), grads = jax.value_and_grad(
+            lambda ps: loss_and_acc(name, ps, x, y), has_aux=True
+        )(params)
+
+        step1 = step + 1.0
+        # Bias-corrected Adam.
+        lr_t = LEARNING_RATE * jnp.sqrt(1.0 - ADAM_B2**step1) / (1.0 - ADAM_B1**step1)
+        new_params, new_m, new_v = [], [], []
+        for pi, mi, vi, gi in zip(params, m, v, grads):
+            mi1 = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+            vi1 = ADAM_B2 * vi + (1.0 - ADAM_B2) * gi * gi
+            pi1 = pi - lr_t * mi1 / (jnp.sqrt(vi1) + ADAM_EPS)
+            new_params.append(pi1)
+            new_m.append(mi1)
+            new_v.append(vi1)
+        return (step1, *new_params, *new_m, *new_v, loss, acc)
+
+    return train_step
+
+
+def make_infer(name: str):
+    """Inference fn: (params..., x) -> (logits, predictions)."""
+    n = len(init_params(name))
+
+    def infer(*args):
+        params = list(args[:n])
+        x = args[n]
+        logits = apply(name, params, x)
+        return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return infer
+
+
+def init_state(name: str, seed: int = 0) -> list[jax.Array]:
+    """Initial flat state [step, params..., m..., v...] for `name`."""
+    params = init_params(name, seed)
+    zeros = [jnp.zeros_like(p) for p in params]
+    zeros2 = [jnp.zeros_like(p) for p in params]
+    return [jnp.zeros((), jnp.float32), *params, *zeros, *zeros2]
+
+
+# ---------------------------------------------------------------------------
+# Cost model (consumed by the AOT manifest -> Rust zoo)
+# ---------------------------------------------------------------------------
+
+
+class LayerCost(NamedTuple):
+    name: str
+    flops: int
+    bytes_accessed: int
+
+
+def forward_cost(name: str, batch: int) -> list[LayerCost]:
+    """Analytic per-layer forward cost: FLOPs and HBM bytes (f32)."""
+    layers = ARCHS[name]
+    costs: list[LayerCost] = []
+    h, w, c = IMAGE_SHAPE
+    for i, layer in enumerate(layers):
+        kind = layer[0]
+        hin, win, cin = (h, w, c) if i == 0 else _shape_after(layers, i)
+        if i == 0:
+            hin, win, cin = IMAGE_SHAPE
+        ho, wo, co = _shape_after(layers, i + 1)
+        if kind in ("conv", "conv_linear"):
+            k = layer[2]
+            fl = conv2d_flops(batch, ho, wo, k, k, cin, co)
+            by = 4 * batch * (hin * win * cin + ho * wo * co) + 4 * k * k * cin * co
+        elif kind == "dwsep":
+            fl = 2 * batch * ho * wo * cin * 9 + conv2d_flops(batch, ho, wo, 1, 1, cin, co)
+            by = 4 * batch * (hin * win * cin + 2 * ho * wo * co)
+        elif kind == "res":
+            fl = conv2d_flops(batch, ho, wo, 3, 3, cin, co) + conv2d_flops(
+                batch, ho, wo, 3, 3, co, co
+            )
+            if cin != co or layer[2] != 1:
+                fl += conv2d_flops(batch, ho, wo, 1, 1, cin, co)
+            by = 4 * batch * (hin * win * cin + 3 * ho * wo * co)
+        elif kind in ("dense", "dense_linear"):
+            nin = hin * win * cin
+            fl = matmul_flops(batch, nin, layer[1])
+            by = 4 * (batch * (nin + layer[1]) + nin * layer[1])
+        else:
+            fl = 0
+            by = 4 * batch * hin * win * cin
+        costs.append(LayerCost(f"{i}:{kind}", fl, by))
+    return costs
+
+
+def model_flops(name: str, batch: int, training: bool = True) -> int:
+    """Total FLOPs per batch; backward ~= 2x forward for conv nets."""
+    fwd = sum(c.flops for c in forward_cost(name, batch))
+    return fwd * 3 if training else fwd
+
+
+def param_count(name: str) -> int:
+    return int(sum(p.size for p in init_params(name)))

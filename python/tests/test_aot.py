@@ -1,0 +1,66 @@
+"""AOT bridge tests: HLO-text emission and manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    """Any jitted fn must lower to parseable HLO text with an ENTRY."""
+    lo = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+    )
+    text = aot.to_hlo_text(lo)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_to_hlo_text_contains_no_serialized_proto():
+    """Interchange format is text — regression guard for the 64-bit-id trap."""
+    lo = jax.jit(lambda a: (a * 2,)).lower(jax.ShapeDtypeStruct((2,), jnp.float32))
+    text = aot.to_hlo_text(lo)
+    assert text.isprintable() or "\n" in text  # plain text, not proto bytes
+
+
+def test_lower_model_tiny(tmp_path):
+    """Full lower_model pass for the smallest arch into a temp dir."""
+    entry = aot.lower_model("lenet", str(tmp_path), train_batch=4, infer_batch=4)
+    assert entry["n_state"] == 1 + 3 * entry["n_params"]
+    for kind in ("init", "train", "infer"):
+        f = tmp_path / entry[kind]["file"]
+        assert f.exists(), f"missing artifact {f}"
+        assert "HloModule" in f.read_text()[:200]
+    assert entry["train"]["n_outputs"] == entry["n_state"] + 2
+    assert entry["train"]["flops_analytic"] > 0
+    assert len(entry["layer_costs"]) == len(M.ARCHS["lenet"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_consistency():
+    """The checked-out artifacts/ must be self-consistent with model.py."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    assert set(m["models"]) <= set(M.TRAINABLE_MODELS)
+    for name, entry in m["models"].items():
+        assert entry["param_count"] == M.param_count(name)
+        assert entry["n_state"] == len(M.init_state(name))
+        for kind in ("init", "train", "infer"):
+            assert os.path.exists(os.path.join(ARTIFACTS, entry[kind]["file"]))
+        # state spec shapes match a fresh init
+        fresh = M.init_state(name)
+        for spec, arr in zip(entry["state_specs"], fresh):
+            assert tuple(spec["shape"]) == arr.shape

@@ -1,0 +1,178 @@
+"""Kernel vs oracle — the CORE correctness signal of the build path.
+
+hypothesis sweeps shapes/strides/paddings; every Pallas result must match
+the pure-XLA reference to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    block_policy,
+    conv2d,
+    depthwise_conv2d,
+    dense,
+    matmul,
+    vmem_bytes,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)), np.asarray(ref.matmul_ref(x, w)), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),
+        (128, 128, 128),
+        (129, 65, 33),  # forces padding on every dim
+        (1024, 27, 16),  # first-conv im2col shape
+        (5, 2304, 512),  # wide-K GEMM
+    ],
+)
+def test_matmul_shapes(m, k, n):
+    rng = np.random.default_rng(42)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    got = matmul(x, w)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(x, w)), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_matmul_grad_matches_ref():
+    """custom_vjp backward must equal autodiff through the oracle."""
+    rng = np.random.default_rng(7)
+    x, w = _rand(rng, 17, 9), _rand(rng, 9, 5)
+
+    def f_pallas(x, w):
+        return (matmul(x, w) ** 2).sum()
+
+    def f_ref(x, w):
+        return (ref.matmul_ref(x, w) ** 2).sum()
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_matches_ref():
+    rng = np.random.default_rng(3)
+    x, w, b = _rand(rng, 32, 400), _rand(rng, 400, 120), _rand(rng, 120)
+    np.testing.assert_allclose(
+        np.asarray(dense(x, w, b)),
+        np.asarray(ref.dense_ref(x, w, b)),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_block_policy_divides_padded_dims():
+    cfg = block_policy(129, 65, 33)
+    assert cfg.bm % 8 == 0 and cfg.bn % 8 == 0 and cfg.bk % 8 == 0
+    assert vmem_bytes(cfg) > 0
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.integers(4, 16),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref_hypothesis(b, hw, cin, cout, k, stride, padding, seed):
+    if padding == "VALID" and k > hw:
+        return
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, hw, hw, cin)
+    w = _rand(rng, k, k, cin, cout)
+    bias = _rand(rng, cout)
+    got = conv2d(x, w, bias, stride=stride, padding=padding)
+    want = ref.conv2d_ref(x, w, bias, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"), (1, "VALID")])
+def test_conv2d_cifar_shape(stride, padding):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 8, 32, 32, 3)
+    w = _rand(rng, 3, 3, 3, 16)
+    got = conv2d(x, w, stride=stride, padding=padding)
+    want = ref.conv2d_ref(x, w, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_grad_flows():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 2, 8, 8, 3)
+    w = _rand(rng, 3, 3, 3, 4)
+
+    g = jax.grad(lambda w: conv2d(x, w).sum())(w)
+    gr = jax.grad(lambda w: ref.conv2d_ref(x, w).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw=st.integers(4, 12),
+    c=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_matches_ref_hypothesis(b, hw, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, hw, hw, c)
+    w = _rand(rng, 3, 3, c, 1)
+    got = depthwise_conv2d(x, w, stride=stride)
+    want = ref.depthwise_conv2d_ref(x, w, stride=stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,97 @@
+"""L2 model tests: shapes, state layout contract, and learning progress."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _fake_batch(batch=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, *M.IMAGE_SHAPE), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, M.NUM_CLASSES, batch, dtype=np.int32))
+    return x, y
+
+
+@pytest.mark.parametrize("name", M.TRAINABLE_MODELS)
+def test_forward_shapes(name):
+    params = M.init_params(name)
+    x, _ = _fake_batch()
+    logits = M.apply(name, params, x)
+    assert logits.shape == (8, M.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", M.TRAINABLE_MODELS)
+def test_state_layout_contract(name):
+    """state = [step, params, m, v] and train_step preserves the layout."""
+    state = M.init_state(name)
+    n = len(M.init_params(name))
+    assert len(state) == 1 + 3 * n
+    assert state[0].shape == ()
+
+    x, y = _fake_batch()
+    out = M.make_train_step(name)(*state, x, y)
+    assert len(out) == len(state) + 2  # + loss + acc
+    for s_in, s_out in zip(state, out):
+        assert s_in.shape == s_out.shape
+        assert s_in.dtype == s_out.dtype
+    assert float(out[0]) == 1.0  # step incremented
+
+
+@pytest.mark.parametrize("name", M.TRAINABLE_MODELS)
+def test_infer_outputs(name):
+    params = M.init_params(name)
+    x, _ = _fake_batch()
+    logits, preds = M.make_infer(name)(*params, x)
+    assert logits.shape == (8, M.NUM_CLASSES)
+    assert preds.shape == (8,)
+    assert preds.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(preds), np.asarray(jnp.argmax(logits, axis=-1))
+    )
+
+
+def test_loss_decreases_lenet():
+    """A few Adam steps on a fixed batch must reduce CCE (sanity of grads)."""
+    name = "lenet"
+    state = list(M.init_state(name))
+    x, y = _fake_batch(batch=16, seed=1)
+    step_fn = jax.jit(M.make_train_step(name))
+    first_loss = None
+    last_loss = None
+    for _ in range(8):
+        out = step_fn(*state, x, y)
+        state = list(out[:-2])
+        loss = float(out[-2])
+        if first_loss is None:
+            first_loss = loss
+        last_loss = loss
+    assert last_loss < first_loss, f"loss did not decrease: {first_loss} -> {last_loss}"
+
+
+def test_param_count_positive_and_stable():
+    c1 = M.param_count("lenet")
+    c2 = M.param_count("lenet")
+    assert c1 == c2 > 10_000  # LeNet-5 is ~62k params
+
+
+@pytest.mark.parametrize("name", M.TRAINABLE_MODELS)
+def test_forward_cost_positive(name):
+    costs = M.forward_cost(name, 64)
+    assert sum(c.flops for c in costs) > 0
+    assert all(c.bytes_accessed > 0 for c in costs)
+    assert M.model_flops(name, 64, training=True) == 3 * M.model_flops(
+        name, 64, training=False
+    )
+
+
+def test_init_deterministic():
+    a = M.init_params("resnet_mini", seed=0)
+    b = M.init_params("resnet_mini", seed=0)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))

@@ -1,0 +1,95 @@
+"""Cross-layer contract tests: the Python model family must keep the
+promises the Rust coordinator relies on (flat state layout, shapes, costs).
+hypothesis sweeps batch sizes and seeds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=8, deadline=None)
+@given(batch=st.sampled_from([1, 2, 8, 16]), seed=st.integers(0, 10_000))
+def test_forward_any_batch_lenet(batch, seed):
+    """Forward must work at any batch size (lowering picks one statically,
+    but the function itself is batch-polymorphic)."""
+    params = M.init_params("lenet", seed=0)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, *M.IMAGE_SHAPE), dtype=np.float32))
+    logits = M.apply("lenet", params, x)
+    assert logits.shape == (batch, M.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_different_seeds_give_different_params(seed):
+    a = M.init_params("simpledla", seed=seed)
+    b = M.init_params("simpledla", seed=seed + 1)
+    diffs = sum(float(jnp.abs(x - y).sum()) for x, y in zip(a, b))
+    assert diffs > 0.0
+
+
+@pytest.mark.parametrize("name", M.TRAINABLE_MODELS)
+def test_state_order_is_step_params_m_v(name):
+    """The Rust executor feeds outputs[0..n_state] back as inputs — that is
+    only sound if the state tuple order is exactly [step, params, m, v]."""
+    state = M.init_state(name)
+    n = len(M.init_params(name))
+    # step scalar
+    assert state[0].shape == ()
+    # params match a fresh init exactly
+    fresh = M.init_params(name, seed=0)
+    for s, p in zip(state[1 : 1 + n], fresh):
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(p))
+    # m and v start at zero
+    for s in state[1 + n :]:
+        assert float(jnp.abs(s).sum()) == 0.0
+
+
+@pytest.mark.parametrize("name", M.TRAINABLE_MODELS)
+def test_two_train_steps_advance_counter_and_change_params(name):
+    state = list(M.init_state(name))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, *M.IMAGE_SHAPE), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 4, dtype=np.int32))
+    step_fn = M.make_train_step(name)
+    out1 = step_fn(*state, x, y)
+    out2 = step_fn(*out1[:-2], x, y)
+    assert float(out2[0]) == 2.0
+    n = len(M.init_params(name))
+    moved = sum(
+        float(jnp.abs(a - b).sum()) for a, b in zip(state[1 : 1 + n], out2[1 : 1 + n])
+    )
+    assert moved > 0.0, "parameters must move under Adam"
+
+
+def test_cost_model_scales_linearly_with_batch():
+    f64 = M.model_flops("resnet_mini", 64)
+    f128 = M.model_flops("resnet_mini", 128)
+    assert abs(f128 / f64 - 2.0) < 0.01
+
+
+def test_cost_model_ranks_architectures_sanely():
+    """resnet_mini (full convs) must cost more per sample than
+    mobilenet_mini (depthwise separable) and lenet."""
+    costs = {n: M.model_flops(n, 64) for n in M.TRAINABLE_MODELS}
+    assert costs["resnet_mini"] > costs["mobilenet_mini"]
+    assert costs["resnet_mini"] > costs["lenet"]
+    assert costs["simpledla"] > costs["lenet"]
+
+
+def test_loss_is_cce_at_uniform_logits():
+    """Categorical cross-entropy of uniform predictions is ln(10)."""
+    params = M.init_params("lenet")
+    zeroed = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, *M.IMAGE_SHAPE), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 8, dtype=np.int32))
+    loss, acc = M.loss_and_acc("lenet", zeroed, x, y)
+    np.testing.assert_allclose(float(loss), np.log(10.0), rtol=1e-5)

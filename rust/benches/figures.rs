@@ -1,0 +1,40 @@
+//! Benches for the figure-regeneration harnesses — the end-to-end cost of
+//! reproducing each paper table/figure on the virtual testbeds.
+//!
+//! One bench per evaluation artefact (DESIGN.md §5):
+//!   Fig. 2  — 16 models × 100 epochs initial investigation
+//!   Fig. 4  — 3-model × 8-cap capping sweep
+//!   Fig. 5  — 71-point fine-grained sweep + 3 ED^xP optimisations
+//!   Fig. 6  — 16-model ED²P tradeoff (the headline numbers)
+//! (Fig. 3 exercises real PJRT inference and lives in `benches/runtime.rs`.)
+
+use frost::config::{setup_no1, setup_no2};
+use frost::figures;
+use frost::util::bench::{bench, group};
+
+fn main() {
+    group("figure regeneration (simulated testbeds)");
+
+    bench("fig2: 16 models x 100 epochs", 3.0, || {
+        figures::fig2_investigation(&setup_no1(), 100, 42)
+    });
+
+    bench("fig4: 3 models x 8 caps (setup no.2)", 3.0, || {
+        figures::fig4_power_capping(&setup_no2(), &["MobileNet", "DenseNet", "EfficientNet"], 42)
+    });
+
+    bench("fig5: ResNet 71-cap sweep + ED^xP optima", 3.0, || {
+        figures::fig5_fine_grained(&setup_no2(), "ResNet", 42)
+    });
+
+    bench("fig6: 16-model ED2P tradeoff (setup no.1)", 3.0, || {
+        figures::fig6_tradeoff(&setup_no1(), 2.0, 42)
+    });
+
+    bench("fig6: both setups (paper headline)", 4.0, || {
+        (
+            figures::fig6_tradeoff(&setup_no1(), 2.0, 42),
+            figures::fig6_tradeoff(&setup_no2(), 2.0, 42),
+        )
+    });
+}

@@ -1,0 +1,57 @@
+//! Benches for FROST's decision core: the response fit (Eqs. 6–7), the
+//! downhill simplex, the ED^mP scoring, and the full 8-cap profiling sweep.
+//!
+//! These are the operations that run *online* inside an O-RAN deployment
+//! every time a new model arrives, so their latency budget matters (the
+//! paper's profiler touches the hardware for 8 × 30 s; the decision math
+//! itself must be negligible next to that).
+
+use frost::config::{setup_no1, setup_no2, ProfilerConfig};
+use frost::frost::fit::fit_response;
+use frost::frost::{nelder_mead, EdpCriterion, NelderMeadOptions, PowerProfiler};
+use frost::simulator::Testbed;
+use frost::util::bench::{bench, group};
+use frost::zoo::model_by_name;
+
+fn paper_shaped_points() -> Vec<(f64, f64)> {
+    (3..=10)
+        .map(|i| {
+            let x = i as f64 / 10.0;
+            (x, 3.0 * (-14.0 * (x - 0.3)).exp() + 1.0 / (1.0 + (-6.0 * (x - 0.55)).exp()) + 2.0)
+        })
+        .collect()
+}
+
+fn main() {
+    group("frost decision core");
+
+    let pts = paper_shaped_points();
+    bench("fit_response (7-coef LSQ, 8 points)", 1.0, || {
+        fit_response(&pts, 0.05)
+    });
+
+    let fit = fit_response(&pts, 0.05);
+    bench("F(x) argmin via downhill simplex", 0.5, || fit.minimize(0.3, 1.0));
+
+    bench("nelder_mead rosenbrock-2d", 0.5, || {
+        nelder_mead(
+            |x| (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2),
+            &[-1.2, 1.0],
+            &NelderMeadOptions { max_evals: 20_000, ..Default::default() },
+        )
+    });
+
+    let c = EdpCriterion::ed2p();
+    bench("ED2P score", 0.2, || c.score(std::hint::black_box(0.05), 1.5e-4));
+
+    group("profiler sweeps (virtual 30 s windows)");
+    let w = model_by_name("ResNet").unwrap().workload(&setup_no1().gpu);
+    bench("8-cap profile sweep (ResNet, setup no.2)", 2.0, || {
+        let mut tb = Testbed::new(setup_no2(), 42);
+        PowerProfiler::new(ProfilerConfig::default()).profile(&mut tb, &w, 128)
+    });
+    bench("71-cap fine-grained sweep (ResNet)", 2.0, || {
+        let mut tb = Testbed::new(setup_no2(), 42);
+        PowerProfiler::new(ProfilerConfig::fine_grained()).profile(&mut tb, &w, 128)
+    });
+}

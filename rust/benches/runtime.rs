@@ -1,0 +1,67 @@
+//! Benches for the REAL request path: PJRT compile/train/infer latency for
+//! the AOT artifacts, plus the Fig. 3 tool drag measured on genuine
+//! inference steps.  Skips gracefully when `make artifacts` hasn't run.
+
+use frost::config::setup_no1;
+use frost::data::SyntheticCifar;
+use frost::pipeline::calibrated_workload;
+use frost::runtime::{InferenceSession, Runtime, TrainSession};
+use frost::util::bench::{bench, group};
+use frost::zoo::Manifest;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("artifacts not built — run `make artifacts` first; skipping runtime benches");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    group(&format!("PJRT request path (platform: {})", rt.platform()));
+
+    // Compile cost (paid once per model at startup).
+    let lenet = manifest.model("lenet").unwrap();
+    bench("compile lenet_train.hlo.txt", 3.0, || {
+        rt.load(manifest.artifact_path(&lenet.train)).unwrap()
+    });
+
+    for name in ["lenet", "mobilenet_mini", "simpledla", "resnet_mini"] {
+        let mut session = TrainSession::new(&rt, &manifest, name).unwrap();
+        let mut ds = SyntheticCifar::new(1);
+        let batch = ds.next_batch(session.batch as usize);
+        session.step(&batch).unwrap(); // warmup
+        let stats = bench(&format!("train step {name} (batch {})", session.batch), 3.0, || {
+            session.step(&batch).unwrap()
+        });
+        let sps = session.batch as f64 * stats.throughput_per_s();
+        println!("       -> {sps:.0} samples/s training");
+    }
+
+    for name in ["lenet", "mobilenet_mini"] {
+        let mut session = InferenceSession::new(&rt, &manifest, name).unwrap();
+        let ds = SyntheticCifar::new(2);
+        let batch = ds.eval_batch(session.batch as usize, 3);
+        session.run(&batch.images).unwrap(); // warmup
+        let stats = bench(&format!("infer step {name} (batch {})", session.batch), 3.0, || {
+            session.run(&batch.images).unwrap()
+        });
+        let sps = session.batch as f64 * stats.throughput_per_s();
+        println!("       -> {sps:.0} samples/s inference");
+    }
+
+    group("fig3 overhead on real inference (1 rep, small)");
+    let hw = setup_no1();
+    let m = manifest.model("lenet").unwrap();
+    let w = calibrated_workload(m, &hw.gpu, None).unwrap();
+    let results = frost::pipeline::run_overhead_experiment(
+        &rt, &manifest, &hw, &w, "lenet", 1280, 1,
+    )
+    .unwrap();
+    for r in &results {
+        println!(
+            "tool {:<16} {:>8.3} s  ({:+.2}% vs baseline, {} samples collected)",
+            r.tool,
+            r.wall_s,
+            (r.relative - 1.0) * 100.0,
+            r.tool_samples
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! Benches for the telemetry hot path — the per-sample cost FROST adds to
+//! a running ML pipeline.  The paper's requirement (Sec. IV-B): overhead
+//! indistinguishable from the no-measurement baseline.  DESIGN.md §Perf
+//! budgets < 1% of the inference loop; these benches quantify each piece.
+
+use std::sync::Arc;
+
+use frost::simulator::Testbed;
+use frost::telemetry::hub::{PowerReading, TelemetryHub};
+use frost::telemetry::nvml::NvmlDevice;
+use frost::telemetry::rapl::{RaplDomain, RaplMsr};
+use frost::telemetry::sampler::PowerSampler;
+use frost::telemetry::tools::{CodeCarbonLike, Eco2AiLike, FrostTool, MeasurementTool};
+use frost::util::bench::{bench, group};
+use frost::util::{Seconds, Watts};
+use frost::config::setup_no1;
+use frost::zoo::model_by_name;
+
+fn reading(at: f64) -> PowerReading {
+    PowerReading {
+        at: Seconds(at),
+        gpu: Watts(280.0),
+        cpu: Watts(65.0),
+        dram: Watts(24.0),
+        gpu_util: 0.97,
+        freq_mhz: 1650.0,
+    }
+}
+
+fn main() {
+    group("telemetry primitives");
+
+    let hub = Arc::new(TelemetryHub::new());
+    let mut t = 0.0;
+    bench("hub publish", 0.5, || {
+        t += 0.01;
+        hub.publish(reading(t));
+    });
+
+    let nvml = NvmlDevice::new(hub.clone(), 320.0, 0.3125, 1);
+    bench("nvml power_usage read", 0.5, || nvml.power_usage_mw());
+
+    let rapl = RaplMsr::new(hub.clone(), RaplDomain::Pkg, 1);
+    bench("rapl counter read", 0.5, || rapl.read_raw());
+
+    let mut sampler = PowerSampler::new(hub.clone(), 320.0, 0.3125, Seconds(0.1), 2);
+    let mut ts = 0.0;
+    bench("sampler poll (mostly not due)", 0.5, || {
+        ts += 0.001;
+        sampler.poll(Seconds(ts))
+    });
+
+    group("measurement tool ticks (the Fig. 3 mechanism)");
+    let mut frost_tool = FrostTool::new(hub.clone(), 320.0, 3);
+    let mut tf = 0.0;
+    frost_tool.on_tick(Seconds(0.0));
+    bench("FROST tick (due)", 0.5, || {
+        tf += 0.2; // always due at 0.1 s period
+        frost_tool.on_tick(Seconds(tf));
+    });
+
+    let mut cc = CodeCarbonLike::new(hub.clone(), 320.0, 3);
+    let mut tc = 0.0;
+    cc.on_tick(Seconds(0.0));
+    bench("CodeCarbon-like tick (due)", 1.0, || {
+        tc += 2.0;
+        cc.on_tick(Seconds(tc));
+    });
+
+    let mut eco = Eco2AiLike::new(hub.clone(), 320.0, 3);
+    let mut te = 0.0;
+    eco.on_tick(Seconds(0.0));
+    bench("Eco2AI-like tick (due)", 1.0, || {
+        te += 2.0;
+        eco.on_tick(Seconds(te));
+    });
+
+    group("simulator step throughput");
+    let hw = setup_no1();
+    let w = model_by_name("ResNet").unwrap().workload(&hw.gpu);
+    let mut tb = Testbed::new(hw.clone(), 5);
+    bench("testbed train step (roofline + capping fixpoint)", 1.0, || {
+        tb.train_steps(&w, 128, 1)
+    });
+    let mut tb2 = Testbed::new(hw, 5);
+    bench("testbed train epoch (fast path, 391 steps)", 1.0, || {
+        tb2.train_epoch(&w, 128, 50_000)
+    });
+}

@@ -1,0 +1,207 @@
+//! Experiment configuration: the knobs of the paper's evaluation (Sec. IV).
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+
+/// Training hyperparameters — fixed across the paper's evaluation:
+/// batch 128, lr 1e-3, Adam, categorical cross-entropy, fixed seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingConfig {
+    pub batch_size: u32,
+    pub learning_rate: f64,
+    pub epochs: u32,
+    pub seed: u64,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        TrainingConfig { batch_size: 128, learning_rate: 1e-3, epochs: 100, seed: 0 }
+    }
+}
+
+/// FROST profiler parameters (Sec. III-C).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfilerConfig {
+    /// Power-cap fractions to test. Paper: eight limits, 30%–100% in 10% steps.
+    pub cap_fracs: Vec<f64>,
+    /// Duration of each profiling window (paper: 30 s).
+    pub window_s: f64,
+    /// Duration of the idle baseline measurement `T_m` (Eqs. 1–2).
+    pub idle_window_s: f64,
+    /// Telemetry sampling period (paper: FROST samples every 0.1 s).
+    pub sample_period_s: f64,
+    /// `m` in ED^m P (paper: ED²P is the sweet spot).
+    pub edp_exponent: f64,
+    /// Relative fit-error threshold below which F(x) is accepted (paper: 5%).
+    pub fit_error_threshold: f64,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        ProfilerConfig {
+            cap_fracs: (3..=10).map(|i| i as f64 / 10.0).collect(),
+            window_s: 30.0,
+            idle_window_s: 30.0,
+            sample_period_s: 0.1,
+            edp_exponent: 2.0,
+            fit_error_threshold: 0.05,
+        }
+    }
+}
+
+impl ProfilerConfig {
+    /// Fine-grained variant: 1% cap increments (paper Fig. 5).
+    pub fn fine_grained() -> Self {
+        ProfilerConfig {
+            cap_fracs: (30..=100).map(|i| i as f64 / 100.0).collect(),
+            ..Default::default()
+        }
+    }
+}
+
+/// A full experiment: hardware + training + profiler settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub hardware: super::HardwareConfig,
+    pub training: TrainingConfig,
+    pub profiler: ProfilerConfig,
+}
+
+impl TrainingConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("learning_rate", Json::Num(self.learning_rate)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(TrainingConfig {
+            batch_size: j.req("batch_size")?.as_f64().context("batch_size")? as u32,
+            learning_rate: j.req("learning_rate")?.as_f64().context("learning_rate")?,
+            epochs: j.req("epochs")?.as_f64().context("epochs")? as u32,
+            seed: j.req("seed")?.as_f64().context("seed")? as u64,
+        })
+    }
+}
+
+impl ProfilerConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cap_fracs", Json::arr_f64(&self.cap_fracs)),
+            ("window_s", Json::Num(self.window_s)),
+            ("idle_window_s", Json::Num(self.idle_window_s)),
+            ("sample_period_s", Json::Num(self.sample_period_s)),
+            ("edp_exponent", Json::Num(self.edp_exponent)),
+            ("fit_error_threshold", Json::Num(self.fit_error_threshold)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let caps = j
+            .req("cap_fracs")?
+            .as_arr()
+            .context("cap_fracs must be an array")?
+            .iter()
+            .map(|v| v.as_f64().context("cap_fracs entries must be numbers"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ProfilerConfig {
+            cap_fracs: caps,
+            window_s: j.req("window_s")?.as_f64().context("window_s")?,
+            idle_window_s: j.req("idle_window_s")?.as_f64().context("idle_window_s")?,
+            sample_period_s: j
+                .req("sample_period_s")?
+                .as_f64()
+                .context("sample_period_s")?,
+            edp_exponent: j.req("edp_exponent")?.as_f64().context("edp_exponent")?,
+            fit_error_threshold: j
+                .req("fit_error_threshold")?
+                .as_f64()
+                .context("fit_error_threshold")?,
+        })
+    }
+}
+
+impl ExperimentConfig {
+    pub fn setup_no1() -> Self {
+        ExperimentConfig {
+            hardware: super::setup_no1(),
+            training: TrainingConfig::default(),
+            profiler: ProfilerConfig::default(),
+        }
+    }
+
+    pub fn setup_no2() -> Self {
+        ExperimentConfig {
+            hardware: super::setup_no2(),
+            training: TrainingConfig::default(),
+            profiler: ProfilerConfig::default(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hardware", self.hardware.to_json()),
+            ("training", self.training.to_json()),
+            ("profiler", self.profiler.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ExperimentConfig {
+            hardware: super::HardwareConfig::from_json(j.req("hardware")?)?,
+            training: TrainingConfig::from_json(j.req("training")?)?,
+            profiler: ProfilerConfig::from_json(j.req("profiler")?)?,
+        })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        Ok(std::fs::write(path, self.to_json().pretty())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profiler_matches_paper() {
+        let p = ProfilerConfig::default();
+        assert_eq!(p.cap_fracs.len(), 8);
+        assert_eq!(p.cap_fracs[0], 0.3);
+        assert_eq!(*p.cap_fracs.last().unwrap(), 1.0);
+        assert_eq!(p.window_s, 30.0);
+        assert_eq!(p.edp_exponent, 2.0);
+        assert_eq!(p.fit_error_threshold, 0.05);
+    }
+
+    #[test]
+    fn fine_grained_has_71_caps() {
+        let p = ProfilerConfig::fine_grained();
+        assert_eq!(p.cap_fracs.len(), 71);
+    }
+
+    #[test]
+    fn default_training_matches_paper() {
+        let t = TrainingConfig::default();
+        assert_eq!(t.batch_size, 128);
+        assert_eq!(t.learning_rate, 1e-3);
+        assert_eq!(t.epochs, 100);
+    }
+
+    #[test]
+    fn experiment_json_roundtrip() {
+        let e = ExperimentConfig::setup_no2();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&e.to_json().pretty()).unwrap())
+                .unwrap();
+        assert_eq!(e, back);
+    }
+}

@@ -1,0 +1,320 @@
+//! Hardware testbed descriptions.
+//!
+//! The paper evaluates two setups (Sec. IV):
+//!
+//! * **no.1** — Intel i7-8700K, 64 GB DDR4 (4×16 GB @ 3600 MHz), RTX 3080
+//! * **no.2** — Intel i9-11900KF, 128 GB DDR4 (4×32 GB @ 3200 MHz), RTX 3090
+//!
+//! We reconstruct both as virtual testbeds from datasheet constants; the
+//! power physics lives in [`crate::power`].  Configs serialise to JSON via
+//! the in-tree [`crate::util::Json`] (the build environment is offline —
+//! DESIGN.md §2).
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+
+/// GPU datasheet constants driving the power/VF model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Thermal design power — the 100% power-cap reference (W).
+    pub tdp_w: f64,
+    /// Idle power draw (W).
+    pub idle_w: f64,
+    /// Base core clock (MHz) — sustainable at TDP on all-unit workloads.
+    pub base_clock_mhz: f64,
+    /// Boost core clock (MHz).
+    pub boost_clock_mhz: f64,
+    /// Minimum stable core clock under capping (MHz).
+    pub min_clock_mhz: f64,
+    /// Peak FP32 throughput at boost clock (GFLOP/s).
+    pub peak_gflops: f64,
+    /// Peak HBM/GDDR bandwidth (GB/s).
+    pub mem_bw_gbs: f64,
+    /// Fraction of (TDP − idle) that is static/leakage at nominal voltage.
+    pub static_frac: f64,
+    /// Lowest supported power-limit fraction exposed by the driver
+    /// (nvidia-smi clamps around 30% on Ampere).
+    pub min_cap_frac: f64,
+    /// Voltage at the minimum stable clock (V).
+    pub v_min: f64,
+    /// Voltage at the knee frequency (V) — end of the efficient segment.
+    pub v_knee: f64,
+    /// Voltage at boost frequency (V) — top of the steep V² wall.
+    pub v_max: f64,
+    /// Knee as a fraction of boost clock: below it V(f) rises gently, above
+    /// it the curve climbs the voltage wall (stock clocks sit deep in it).
+    pub vf_knee_frac: f64,
+}
+
+/// CPU package constants (RAPL domain).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuSpec {
+    pub name: String,
+    pub tdp_w: f64,
+    pub idle_w: f64,
+    pub cores: u32,
+    /// Whether the part exposes the RAPL DRAM domain (server parts only —
+    /// both paper setups are consumer, hence the analytic DRAM model).
+    pub rapl_dram_domain: bool,
+}
+
+/// One DRAM DIMM (drives `P_DRAM = N · 3/8 · S` per paper Sec. III-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DimmSpec {
+    pub size_gb: f64,
+    pub freq_mhz: f64,
+}
+
+/// A complete testbed: the unit FROST profiles and reconfigures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareConfig {
+    pub name: String,
+    pub cpu: CpuSpec,
+    pub gpu: GpuSpec,
+    pub dimms: Vec<DimmSpec>,
+}
+
+fn f(j: &Json, k: &str) -> Result<f64> {
+    j.req(k)?.as_f64().with_context(|| format!("'{k}' must be a number"))
+}
+
+fn s(j: &Json, k: &str) -> Result<String> {
+    Ok(j.req(k)?
+        .as_str()
+        .with_context(|| format!("'{k}' must be a string"))?
+        .to_string())
+}
+
+impl GpuSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("tdp_w", Json::Num(self.tdp_w)),
+            ("idle_w", Json::Num(self.idle_w)),
+            ("base_clock_mhz", Json::Num(self.base_clock_mhz)),
+            ("boost_clock_mhz", Json::Num(self.boost_clock_mhz)),
+            ("min_clock_mhz", Json::Num(self.min_clock_mhz)),
+            ("peak_gflops", Json::Num(self.peak_gflops)),
+            ("mem_bw_gbs", Json::Num(self.mem_bw_gbs)),
+            ("static_frac", Json::Num(self.static_frac)),
+            ("min_cap_frac", Json::Num(self.min_cap_frac)),
+            ("v_min", Json::Num(self.v_min)),
+            ("v_knee", Json::Num(self.v_knee)),
+            ("v_max", Json::Num(self.v_max)),
+            ("vf_knee_frac", Json::Num(self.vf_knee_frac)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(GpuSpec {
+            name: s(j, "name")?,
+            tdp_w: f(j, "tdp_w")?,
+            idle_w: f(j, "idle_w")?,
+            base_clock_mhz: f(j, "base_clock_mhz")?,
+            boost_clock_mhz: f(j, "boost_clock_mhz")?,
+            min_clock_mhz: f(j, "min_clock_mhz")?,
+            peak_gflops: f(j, "peak_gflops")?,
+            mem_bw_gbs: f(j, "mem_bw_gbs")?,
+            static_frac: f(j, "static_frac")?,
+            min_cap_frac: f(j, "min_cap_frac")?,
+            v_min: f(j, "v_min")?,
+            v_knee: f(j, "v_knee")?,
+            v_max: f(j, "v_max")?,
+            vf_knee_frac: f(j, "vf_knee_frac")?,
+        })
+    }
+}
+
+impl CpuSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("tdp_w", Json::Num(self.tdp_w)),
+            ("idle_w", Json::Num(self.idle_w)),
+            ("cores", Json::Num(self.cores as f64)),
+            ("rapl_dram_domain", Json::Bool(self.rapl_dram_domain)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(CpuSpec {
+            name: s(j, "name")?,
+            tdp_w: f(j, "tdp_w")?,
+            idle_w: f(j, "idle_w")?,
+            cores: f(j, "cores")? as u32,
+            rapl_dram_domain: j.req("rapl_dram_domain")?.as_bool().unwrap_or(false),
+        })
+    }
+}
+
+impl DimmSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("size_gb", Json::Num(self.size_gb)),
+            ("freq_mhz", Json::Num(self.freq_mhz)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(DimmSpec { size_gb: f(j, "size_gb")?, freq_mhz: f(j, "freq_mhz")? })
+    }
+}
+
+impl HardwareConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("cpu", self.cpu.to_json()),
+            ("gpu", self.gpu.to_json()),
+            ("dimms", Json::Arr(self.dimms.iter().map(|d| d.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let dimms = j
+            .req("dimms")?
+            .as_arr()
+            .context("'dimms' must be an array")?
+            .iter()
+            .map(DimmSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(HardwareConfig {
+            name: s(j, "name")?,
+            cpu: CpuSpec::from_json(j.req("cpu")?)?,
+            gpu: GpuSpec::from_json(j.req("gpu")?)?,
+            dimms,
+        })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        Ok(std::fs::write(path, self.to_json().pretty())?)
+    }
+
+    /// Total installed DRAM (GB).
+    pub fn dram_gb(&self) -> f64 {
+        self.dimms.iter().map(|d| d.size_gb).sum()
+    }
+}
+
+/// Paper setup no.1: i7-8700K + 64 GB DDR4-3600 + RTX 3080.
+pub fn setup_no1() -> HardwareConfig {
+    HardwareConfig {
+        name: "setup_no1".into(),
+        cpu: CpuSpec {
+            name: "Intel Core i7-8700K".into(),
+            tdp_w: 95.0,
+            idle_w: 8.0,
+            cores: 6,
+            rapl_dram_domain: false,
+        },
+        gpu: GpuSpec {
+            name: "NVIDIA GeForce RTX 3080".into(),
+            tdp_w: 320.0,
+            idle_w: 22.0,
+            base_clock_mhz: 1440.0,
+            boost_clock_mhz: 1710.0,
+            min_clock_mhz: 210.0,
+            peak_gflops: 29_770.0,
+            mem_bw_gbs: 760.0,
+            static_frac: 0.16,
+            min_cap_frac: 0.3125, // 100 W floor / 320 W TDP (nvidia-smi)
+            v_min: 0.725,
+            v_knee: 0.831,
+            v_max: 1.093,
+            vf_knee_frac: 0.90,
+        },
+        dimms: vec![
+            DimmSpec { size_gb: 16.0, freq_mhz: 3600.0 },
+            DimmSpec { size_gb: 16.0, freq_mhz: 3600.0 },
+            DimmSpec { size_gb: 16.0, freq_mhz: 3600.0 },
+            DimmSpec { size_gb: 16.0, freq_mhz: 3600.0 },
+        ],
+    }
+}
+
+/// Paper setup no.2: i9-11900KF + 128 GB DDR4-3200 + RTX 3090.
+pub fn setup_no2() -> HardwareConfig {
+    HardwareConfig {
+        name: "setup_no2".into(),
+        cpu: CpuSpec {
+            name: "Intel Core i9-11900KF".into(),
+            tdp_w: 125.0,
+            idle_w: 10.0,
+            cores: 8,
+            rapl_dram_domain: false,
+        },
+        gpu: GpuSpec {
+            name: "NVIDIA GeForce RTX 3090".into(),
+            tdp_w: 350.0,
+            idle_w: 25.0,
+            base_clock_mhz: 1395.0,
+            boost_clock_mhz: 1695.0,
+            min_clock_mhz: 210.0,
+            peak_gflops: 35_580.0,
+            mem_bw_gbs: 936.0,
+            static_frac: 0.17,
+            min_cap_frac: 0.286, // 100 W floor / 350 W TDP
+            v_min: 0.725,
+            v_knee: 0.843,
+            v_max: 1.093,
+            vf_knee_frac: 0.89,
+        },
+        dimms: vec![
+            DimmSpec { size_gb: 32.0, freq_mhz: 3200.0 },
+            DimmSpec { size_gb: 32.0, freq_mhz: 3200.0 },
+            DimmSpec { size_gb: 32.0, freq_mhz: 3200.0 },
+            DimmSpec { size_gb: 32.0, freq_mhz: 3200.0 },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_setups_match_paper() {
+        let s1 = setup_no1();
+        assert_eq!(s1.dram_gb(), 64.0);
+        assert_eq!(s1.gpu.tdp_w, 320.0);
+        let s2 = setup_no2();
+        assert_eq!(s2.dram_gb(), 128.0);
+        assert_eq!(s2.gpu.tdp_w, 350.0);
+        assert!(!s1.cpu.rapl_dram_domain, "consumer CPU has no DRAM MSR");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for hw in [setup_no1(), setup_no2()] {
+            let text = hw.to_json().pretty();
+            let back =
+                HardwareConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(hw, back);
+        }
+    }
+
+    #[test]
+    fn missing_key_is_reported() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        let err = HardwareConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("dimms"), "err was: {err}");
+    }
+
+    #[test]
+    fn vf_envelope_sane() {
+        for hw in [setup_no1(), setup_no2()] {
+            let g = &hw.gpu;
+            assert!(g.min_clock_mhz < g.base_clock_mhz);
+            assert!(g.base_clock_mhz < g.boost_clock_mhz);
+            assert!(g.v_min < g.v_knee && g.v_knee < g.v_max);
+            assert!(g.min_cap_frac > 0.2 && g.min_cap_frac < 0.5);
+            assert!(g.idle_w < g.tdp_w * 0.15);
+        }
+    }
+}

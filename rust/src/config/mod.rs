@@ -1,0 +1,7 @@
+//! Configuration system: hardware testbeds, experiment parameters, TOML I/O.
+
+pub mod experiment;
+pub mod hardware;
+
+pub use experiment::{ExperimentConfig, ProfilerConfig, TrainingConfig};
+pub use hardware::{CpuSpec, DimmSpec, GpuSpec, HardwareConfig, setup_no1, setup_no2};

@@ -1,0 +1,10 @@
+//! Synthetic CIFAR-10: the dataset substitute (DESIGN.md §2).
+//!
+//! Deterministic class-conditional Gaussian-mixture images with CIFAR-10's
+//! exact shapes and cardinality.  Energy behaviour depends on tensor shapes
+//! and throughput, not pixel content, and the class structure keeps the
+//! end-to-end training demo learnable.
+
+pub mod cifar;
+
+pub use cifar::{Batch, SyntheticCifar};

@@ -1,0 +1,117 @@
+//! Fig. 4 — power capping sweeps for three example models
+//! (paper Sec. IV-C, setup no.2): energy and time vs the eight cap levels,
+//! normalised to the 100% default, plus each model's optimal limit.
+//!
+//! Paper: MobileNet and DenseNet optimal at 60%, EfficientNet at 40%;
+//! energy reductions are more significant than the delays introduced.
+
+use crate::config::{HardwareConfig, ProfilerConfig};
+use crate::frost::PowerProfiler;
+use crate::simulator::Testbed;
+use crate::util::Series;
+use crate::zoo::model_by_name;
+
+/// Sweep `models` on `hw`; one row per (model, cap) with relative
+/// energy/time, plus a summary row per model carrying the fitted optimum.
+pub fn fig4_power_capping(hw: &HardwareConfig, models: &[&str], seed: u64) -> Series {
+    let reference_gpu = crate::config::setup_no1().gpu;
+    let mut series = Series::new(
+        format!("Fig4: power capping on {}", hw.name),
+        &["cap_pct", "rel_energy", "rel_time", "optimal_cap_pct", "saving_pct"],
+    );
+    for model in models {
+        let entry = model_by_name(model).unwrap_or_else(|| panic!("unknown model {model}"));
+        let w = entry.workload(&reference_gpu);
+        let mut tb = Testbed::new(hw.clone(), seed);
+        let profiler = PowerProfiler::new(ProfilerConfig {
+            edp_exponent: 1.0, // Fig. 4 shows the raw energy/time response
+            ..Default::default()
+        });
+        let out = profiler.profile(&mut tb, &w, 128);
+        let baseline = out.points.last().unwrap();
+        for p in &out.points {
+            series.push(format!("{model}@{:.0}%", p.cap_frac * 100.0), vec![
+                p.cap_frac * 100.0,
+                p.energy_per_sample_j / baseline.energy_per_sample_j,
+                p.time_per_sample_s / baseline.time_per_sample_s,
+                out.optimal_cap * 100.0,
+                out.est_energy_saving * 100.0,
+            ]);
+        }
+    }
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no2;
+
+    fn sweep() -> Series {
+        fig4_power_capping(&setup_no2(), &["MobileNet", "DenseNet", "EfficientNet"], 42)
+    }
+
+    #[test]
+    fn three_models_by_eight_caps() {
+        let s = sweep();
+        assert_eq!(s.len(), 24);
+    }
+
+    #[test]
+    fn optima_interior_and_ordered() {
+        let s = sweep();
+        let opt = |model: &str| {
+            let i = s.labels.iter().position(|l| l.starts_with(model)).unwrap();
+            s.rows[i][3]
+        };
+        let (mob, den, eff) = (opt("MobileNet"), opt("DenseNet"), opt("EfficientNet"));
+        // All interior (capping pays off for all three — paper Fig. 4)…
+        for (name, o) in [("MobileNet", mob), ("DenseNet", den), ("EfficientNet", eff)] {
+            assert!(o >= 30.0 && o <= 75.0, "{name} optimum {o}% not interior");
+        }
+        // …and EfficientNet (most bandwidth-bound) caps lowest (paper: 40%
+        // vs 60%/60%).
+        assert!(eff <= mob + 2.5 && eff <= den + 2.5, "eff {eff} mob {mob} den {den}");
+    }
+
+    #[test]
+    fn energy_reductions_exceed_delays() {
+        // Paper: "energy reductions were more significant than delays".
+        let s = sweep();
+        for (label, row) in s.labels.iter().zip(&s.rows) {
+            let (cap, rel_e, rel_t) = (row[0], row[1], row[2]);
+            if (45.0..95.0).contains(&cap) {
+                let saving = 1.0 - rel_e;
+                let delay = rel_t - 1.0;
+                // Tolerance: deep in the memory-bound plateau both are ~0.
+                assert!(
+                    saving > delay - 0.01,
+                    "{label}: saving {saving:.3} must exceed delay {delay:.3}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_caps_blow_up() {
+        // Paper: below 30–40% energy AND time increase sharply.
+        let s = sweep();
+        for model in ["MobileNet", "DenseNet", "EfficientNet"] {
+            let rows: Vec<&Vec<f64>> = s
+                .labels
+                .iter()
+                .zip(&s.rows)
+                .filter(|(l, _)| l.starts_with(model))
+                .map(|(_, r)| r)
+                .collect();
+            let at30 = rows.iter().find(|r| r[0] < 35.0).unwrap();
+            let best_time = rows.iter().map(|r| r[2]).fold(f64::INFINITY, f64::min);
+            assert!(
+                at30[2] > best_time * 1.05,
+                "{model}: 30% cap time {} should exceed best {}",
+                at30[2],
+                best_time
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Fig. 5 — fine-grained experiment (paper Sec. IV-C): ResNet swept at 1%
+//! cap increments on setup no.2, with the ED^xP optimum located for
+//! x ∈ {1, 2, 3}.
+//!
+//! Paper findings: the more weight on delay, the higher the optimal cap;
+//! for ED³P some optima sit at the maximum; EDP yields the biggest energy
+//! savings.
+
+use crate::config::{HardwareConfig, ProfilerConfig};
+use crate::frost::{EdpCriterion, PowerProfiler};
+use crate::simulator::Testbed;
+use crate::util::Series;
+use crate::zoo::model_by_name;
+
+/// Output: the sweep plus per-criterion optima.
+#[derive(Debug, Clone)]
+pub struct Fig5Output {
+    /// Rows per cap %: rel_energy, rel_time.
+    pub sweep: Series,
+    /// (exponent, optimal cap %, est saving %, est slowdown %).
+    pub optima: Vec<(f64, f64, f64, f64)>,
+}
+
+pub fn fig5_fine_grained(hw: &HardwareConfig, model: &str, seed: u64) -> Fig5Output {
+    let reference_gpu = crate::config::setup_no1().gpu;
+    let entry = model_by_name(model).unwrap_or_else(|| panic!("unknown model {model}"));
+    let w = entry.workload(&reference_gpu);
+
+    // One fine sweep (71 caps) measured once…
+    let mut tb = Testbed::new(hw.clone(), seed);
+    let profiler = PowerProfiler::new(ProfilerConfig {
+        edp_exponent: 1.0,
+        ..ProfilerConfig::fine_grained()
+    });
+    let out = profiler.profile(&mut tb, &w, 128);
+    let baseline = out.points.last().unwrap().clone();
+    let mut sweep = Series::new(
+        format!("Fig5: {model} fine-grained sweep on {}", hw.name),
+        &["cap_pct", "rel_energy", "rel_time"],
+    );
+    for p in &out.points {
+        sweep.push(format!("{:.0}%", p.cap_frac * 100.0), vec![
+            p.cap_frac * 100.0,
+            p.energy_per_sample_j / baseline.energy_per_sample_j,
+            p.time_per_sample_s / baseline.time_per_sample_s,
+        ]);
+    }
+
+    // …then re-scored under each ED^xP criterion (the measurements are the
+    // same; only the decision metric changes).
+    let mut optima = Vec::new();
+    for exponent in [1.0, 2.0, 3.0] {
+        let criterion = EdpCriterion::new(exponent);
+        let xy: Vec<(f64, f64)> = out
+            .points
+            .iter()
+            .map(|p| {
+                (p.cap_frac, criterion.score(p.energy_per_sample_j, p.time_per_sample_s))
+            })
+            .collect();
+        let fit = crate::frost::fit::fit_response(&xy, 0.05);
+        let lo = out.points.first().unwrap().cap_frac;
+        let hi = out.points.last().unwrap().cap_frac;
+        let (opt, _) = fit.minimize(lo, hi);
+        // Interpolate energy/time at the optimum from the measured sweep.
+        let interp = |f: &dyn Fn(&crate::frost::ProfilePoint) -> f64| -> f64 {
+            let mut prev = &out.points[0];
+            if opt <= prev.cap_frac {
+                return f(prev);
+            }
+            for p in &out.points[1..] {
+                if opt <= p.cap_frac {
+                    let t = (opt - prev.cap_frac) / (p.cap_frac - prev.cap_frac);
+                    return f(prev) * (1.0 - t) + f(p) * t;
+                }
+                prev = p;
+            }
+            f(out.points.last().unwrap())
+        };
+        let e = interp(&|p| p.energy_per_sample_j);
+        let t = interp(&|p| p.time_per_sample_s);
+        optima.push((
+            exponent,
+            opt * 100.0,
+            (1.0 - e / baseline.energy_per_sample_j) * 100.0,
+            (t / baseline.time_per_sample_s - 1.0) * 100.0,
+        ));
+    }
+    Fig5Output { sweep, optima }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no2;
+
+    fn output() -> Fig5Output {
+        fig5_fine_grained(&setup_no2(), "ResNet", 42)
+    }
+
+    #[test]
+    fn sweep_covers_the_driver_range() {
+        let out = output();
+        assert!(out.sweep.len() >= 65, "{} points", out.sweep.len());
+        let caps = out.sweep.column("cap_pct").unwrap();
+        assert!(caps[0] <= 31.0);
+        assert!(*caps.last().unwrap() >= 99.0);
+    }
+
+    #[test]
+    fn optimum_rises_with_exponent() {
+        // Paper: "the more weight attributed to delay, the higher the
+        // optimal power limit becomes".
+        let out = output();
+        let caps: Vec<f64> = out.optima.iter().map(|o| o.1).collect();
+        assert!(caps[1] >= caps[0] - 1.5, "ED2P {} < EDP {}", caps[1], caps[0]);
+        assert!(caps[2] >= caps[1] - 1.5, "ED3P {} < ED2P {}", caps[2], caps[1]);
+        assert!(caps[2] > caps[0], "ED3P must exceed EDP strictly");
+        // More delay weight must not pick a *slower* configuration.
+        let delays: Vec<f64> = out.optima.iter().map(|o| o.3).collect();
+        assert!(delays[2] <= delays[0] + 0.5, "ED3P delay {} vs EDP {}", delays[2], delays[0]);
+    }
+
+    #[test]
+    fn edp_gives_biggest_savings() {
+        let out = output();
+        let savings: Vec<f64> = out.optima.iter().map(|o| o.2).collect();
+        assert!(
+            savings[0] >= savings[1] - 0.5 && savings[0] >= savings[2] - 0.5,
+            "EDP saving {savings:?} must be the largest"
+        );
+        assert!(savings[0] > 5.0, "EDP must deliver real savings, got {savings:?}");
+    }
+
+    #[test]
+    fn time_monotone_nonincreasing_in_cap() {
+        // More power never makes training slower (within noise).
+        let out = output();
+        let caps = out.sweep.column("cap_pct").unwrap();
+        let times = out.sweep.column("rel_time").unwrap();
+        for i in 1..caps.len() {
+            assert!(
+                times[i] <= times[i - 1] * 1.05,
+                "time jumped at {}%: {} -> {}",
+                caps[i],
+                times[i - 1],
+                times[i]
+            );
+        }
+    }
+}

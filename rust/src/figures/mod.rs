@@ -1,0 +1,24 @@
+//! Figure/table regeneration harnesses — one per figure of the paper's
+//! evaluation (DESIGN.md §5 experiment index).
+//!
+//! Every harness returns [`crate::util::Series`] tables so the CLI, the
+//! integration tests and the benches all consume the same code path:
+//!
+//! * [`fig2`]  — initial energy investigation (accuracy/energy/time/util);
+//! * [`fig3`]  — measurement-tool overhead on real PJRT inference;
+//! * [`fig4`]  — power-capping sweeps for three example models;
+//! * [`fig5`]  — fine-grained 1% sweep + ED^xP optima for ResNet;
+//! * [`fig6`]  — energy-saving vs delay tradeoff across all 16 models,
+//!   including the paper's headline means.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+
+pub use fig2::{fig2_investigation, Fig2Output};
+pub use fig3::fig3_overhead;
+pub use fig4::fig4_power_capping;
+pub use fig5::{fig5_fine_grained, Fig5Output};
+pub use fig6::{fig6_tradeoff, Fig6Output};

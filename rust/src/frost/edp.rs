@@ -1,0 +1,95 @@
+//! The ED^mP decision criterion (paper Sec. III-C).
+//!
+//! `ED^m P = E · D^m`: energy times delay to the m-th power.  `m` weights
+//! the delay term to match an application's QoS class: ED¹P favours energy
+//! (largest savings), ED³P favours latency (optimum drifts to high caps),
+//! ED²P is the paper's sweet spot (Fig. 5/6).
+
+/// A configured criterion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdpCriterion {
+    /// The delay exponent m ≥ 0.
+    pub exponent: f64,
+}
+
+impl EdpCriterion {
+    pub fn new(exponent: f64) -> Self {
+        assert!(exponent >= 0.0, "ED^mP exponent must be non-negative");
+        EdpCriterion { exponent }
+    }
+
+    /// Plain EDP (m = 1).
+    pub fn edp() -> Self {
+        Self::new(1.0)
+    }
+
+    /// The paper's sweet spot, ED²P.
+    pub fn ed2p() -> Self {
+        Self::new(2.0)
+    }
+
+    /// Latency-weighted ED³P.
+    pub fn ed3p() -> Self {
+        Self::new(3.0)
+    }
+
+    /// Pure energy (m = 0).
+    pub fn energy_only() -> Self {
+        Self::new(0.0)
+    }
+
+    /// Score a (energy, delay) pair; lower is better.
+    pub fn score(&self, energy_j: f64, delay_s: f64) -> f64 {
+        energy_j * delay_s.powf(self.exponent)
+    }
+}
+
+impl std::fmt::Display for EdpCriterion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.exponent == 0.0 {
+            write!(f, "E (energy only)")
+        } else if (self.exponent - 1.0).abs() < 1e-12 {
+            write!(f, "EDP")
+        } else {
+            write!(f, "ED{}P", self.exponent)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_definition() {
+        let c = EdpCriterion::ed2p();
+        assert_eq!(c.score(100.0, 2.0), 400.0);
+        assert_eq!(EdpCriterion::edp().score(100.0, 2.0), 200.0);
+        assert_eq!(EdpCriterion::energy_only().score(100.0, 2.0), 100.0);
+    }
+
+    #[test]
+    fn higher_exponent_prefers_faster_configs() {
+        // Config A: cheap but slow; config B: costly but fast.
+        let a = (60.0, 12.0);
+        let b = (100.0, 8.0);
+        // Energy-only prefers A…
+        assert!(EdpCriterion::energy_only().score(a.0, a.1)
+            < EdpCriterion::energy_only().score(b.0, b.1));
+        // …ED³P prefers B.
+        assert!(EdpCriterion::ed3p().score(b.0, b.1) < EdpCriterion::ed3p().score(a.0, a.1));
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(EdpCriterion::edp().to_string(), "EDP");
+        assert_eq!(EdpCriterion::ed2p().to_string(), "ED2P");
+        assert_eq!(EdpCriterion::energy_only().to_string(), "E (energy only)");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_exponent_rejected() {
+        let _ = EdpCriterion::new(-1.0);
+    }
+}

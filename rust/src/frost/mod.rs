@@ -1,0 +1,25 @@
+//! FROST — the paper's contribution (Sec. III).
+//!
+//! * [`profiler`] — tests eight power limits (30%–100% of TDP) for 30 s
+//!   each and picks the best configuration for the model at hand;
+//! * [`fit`] — the response model `F(x) = a·e^(bx−c) + d·σ(ex−f) + g`
+//!   fitted by least squares (Eqs. 6–7);
+//! * [`simplex`] — the downhill-simplex (Nelder–Mead) minimiser used both
+//!   for the fit and for locating the optimum of F;
+//! * [`edp`] — the `ED^m P` decision criterion (energy × delay^m);
+//! * [`policy`] — A1-style energy policies mapping QoS classes to `m` and
+//!   cap bounds (managed by the SMO, Sec. III-C).
+
+pub mod edp;
+pub mod fit;
+pub mod online;
+pub mod policy;
+pub mod profiler;
+pub mod simplex;
+
+pub use edp::EdpCriterion;
+pub use online::{ContinuousMonitor, MonitorAction, MonitorConfig, Observation};
+pub use fit::{FitResult, ResponseModel};
+pub use policy::{EnergyPolicy, QosClass};
+pub use profiler::{PowerProfiler, ProfileOutcome, ProfilePoint};
+pub use simplex::{nelder_mead, NelderMeadOptions};

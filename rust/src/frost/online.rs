@@ -1,0 +1,203 @@
+//! Continuous operation: online monitoring + re-profiling triggers.
+//!
+//! Step vi of the O-RAN AI/ML workflow (paper Sec. II): deployed models
+//! "are continuously monitored and, if required, are fine-tuned online".
+//! A power cap chosen for yesterday's workload can be wrong after a model
+//! update, a batch-size change or a dataset shift — this monitor watches
+//! the KPM stream for drift in the power/throughput signature and asks
+//! FROST to re-profile when it moves, with hysteresis and a cooldown so
+//! profiling energy (Eqs. 4–5) isn't burned on noise.
+
+use crate::util::Seconds;
+
+/// One observation from the KPM stream.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub at: Seconds,
+    pub gpu_power_w: f64,
+    pub samples_per_s: f64,
+}
+
+/// Monitor configuration.
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// EWMA smoothing factor per observation.
+    pub alpha: f64,
+    /// Relative drift in the power/throughput signature that triggers a
+    /// re-profile.
+    pub drift_threshold: f64,
+    /// Minimum observations before the baseline is considered settled.
+    pub warmup: usize,
+    /// Minimum virtual time between re-profiles (profiling costs energy).
+    pub cooldown: Seconds,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            alpha: 0.1,
+            drift_threshold: 0.15,
+            warmup: 20,
+            cooldown: Seconds(600.0),
+        }
+    }
+}
+
+/// What the monitor wants done after an observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MonitorAction {
+    /// Keep operating.
+    None,
+    /// Workload signature drifted: re-run the FROST profiler.
+    Reprofile,
+}
+
+/// EWMA drift monitor over the energy-per-sample signature.
+#[derive(Debug, Clone)]
+pub struct ContinuousMonitor {
+    config: MonitorConfig,
+    /// Settled baseline J/sample (None until warm).
+    baseline: Option<f64>,
+    ewma: Option<f64>,
+    seen: usize,
+    last_reprofile: Option<Seconds>,
+    /// Count of re-profiles triggered (for reporting).
+    pub reprofiles: u64,
+}
+
+impl ContinuousMonitor {
+    pub fn new(config: MonitorConfig) -> Self {
+        ContinuousMonitor {
+            config,
+            baseline: None,
+            ewma: None,
+            seen: 0,
+            last_reprofile: None,
+            reprofiles: 0,
+        }
+    }
+
+    /// Energy-per-sample signature of one observation.
+    fn signature(obs: &Observation) -> f64 {
+        if obs.samples_per_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        obs.gpu_power_w / obs.samples_per_s
+    }
+
+    /// Feed one observation; returns the requested action.
+    pub fn observe(&mut self, obs: Observation) -> MonitorAction {
+        let sig = Self::signature(&obs);
+        if !sig.is_finite() {
+            return MonitorAction::None;
+        }
+        let a = self.config.alpha;
+        self.ewma = Some(match self.ewma {
+            Some(prev) => prev * (1.0 - a) + sig * a,
+            None => sig,
+        });
+        self.seen += 1;
+        if self.seen < self.config.warmup {
+            return MonitorAction::None;
+        }
+        let ewma = self.ewma.unwrap();
+        match self.baseline {
+            None => {
+                self.baseline = Some(ewma);
+                MonitorAction::None
+            }
+            Some(base) => {
+                let drift = (ewma - base).abs() / base.max(1e-12);
+                let cooled = self
+                    .last_reprofile
+                    .map_or(true, |t| obs.at.0 - t.0 >= self.config.cooldown.0);
+                if drift > self.config.drift_threshold && cooled {
+                    // Re-baseline on the new regime and request profiling.
+                    self.baseline = Some(ewma);
+                    self.last_reprofile = Some(obs.at);
+                    self.reprofiles += 1;
+                    MonitorAction::Reprofile
+                } else {
+                    MonitorAction::None
+                }
+            }
+        }
+    }
+
+    pub fn baseline(&self) -> Option<f64> {
+        self.baseline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(at: f64, power: f64, tput: f64) -> Observation {
+        Observation { at: Seconds(at), gpu_power_w: power, samples_per_s: tput }
+    }
+
+    fn feed_steady(m: &mut ContinuousMonitor, from: f64, n: usize, power: f64, tput: f64) -> u64 {
+        let mut triggers = 0;
+        for i in 0..n {
+            if m.observe(obs(from + i as f64, power, tput)) == MonitorAction::Reprofile {
+                triggers += 1;
+            }
+        }
+        triggers
+    }
+
+    #[test]
+    fn steady_workload_never_triggers() {
+        let mut m = ContinuousMonitor::new(MonitorConfig::default());
+        let t = feed_steady(&mut m, 0.0, 500, 280.0, 4000.0);
+        assert_eq!(t, 0);
+        assert!(m.baseline().is_some());
+    }
+
+    #[test]
+    fn noise_within_threshold_ignored() {
+        let mut m = ContinuousMonitor::new(MonitorConfig::default());
+        feed_steady(&mut m, 0.0, 50, 280.0, 4000.0);
+        // ±5% power ripple.
+        let mut triggers = 0;
+        for i in 0..200 {
+            let p = 280.0 * (1.0 + 0.05 * ((i % 7) as f64 - 3.0) / 3.0);
+            if m.observe(obs(100.0 + i as f64, p, 4000.0)) == MonitorAction::Reprofile {
+                triggers += 1;
+            }
+        }
+        assert_eq!(triggers, 0);
+    }
+
+    #[test]
+    fn regime_change_triggers_once() {
+        let mut m = ContinuousMonitor::new(MonitorConfig::default());
+        feed_steady(&mut m, 0.0, 100, 280.0, 4000.0);
+        // Model update halves throughput at the same power: signature 2x.
+        let t = feed_steady(&mut m, 100.0, 300, 280.0, 2000.0);
+        assert_eq!(t, 1, "exactly one re-profile for one regime change");
+        assert_eq!(m.reprofiles, 1);
+    }
+
+    #[test]
+    fn cooldown_suppresses_thrash() {
+        let cfg = MonitorConfig { cooldown: Seconds(1000.0), ..Default::default() };
+        let mut m = ContinuousMonitor::new(cfg);
+        feed_steady(&mut m, 0.0, 100, 280.0, 4000.0);
+        // Oscillating regimes faster than the cooldown.
+        let mut triggers = 0;
+        for k in 0..6 {
+            let tput = if k % 2 == 0 { 2000.0 } else { 4000.0 };
+            triggers += feed_steady(&mut m, 100.0 + k as f64 * 100.0, 100, 280.0, tput);
+        }
+        assert!(triggers <= 1, "cooldown must limit re-profiles, got {triggers}");
+    }
+
+    #[test]
+    fn zero_throughput_is_ignored() {
+        let mut m = ContinuousMonitor::new(MonitorConfig::default());
+        feed_steady(&mut m, 0.0, 100, 280.0, 4000.0);
+        assert_eq!(m.observe(obs(200.0, 280.0, 0.0)), MonitorAction::None);
+    }
+}

@@ -1,0 +1,161 @@
+//! A1-style energy policies (paper Sec. III-C).
+//!
+//! "These decisions can align with pre-defined QoS characteristics and be
+//! shaped as policies managed by the A1 Policy Management Service" — a
+//! policy maps an application's QoS class to the ED^mP exponent and bounds
+//! on the cap range FROST may choose from.  Policies travel over the O-RAN
+//! A1 interface as JSON ([`crate::oran::a1`]).
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+
+use super::edp::EdpCriterion;
+
+/// QoS class of the ML application the policy covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Background / batch training: maximise energy savings (EDP).
+    EnergySaver,
+    /// Default: the paper's ED²P sweet spot.
+    Balanced,
+    /// Near-RT inference: latency dominates (ED³P).
+    LatencyCritical,
+}
+
+impl QosClass {
+    pub fn criterion(self) -> EdpCriterion {
+        match self {
+            QosClass::EnergySaver => EdpCriterion::edp(),
+            QosClass::Balanced => EdpCriterion::ed2p(),
+            QosClass::LatencyCritical => EdpCriterion::ed3p(),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QosClass::EnergySaver => "energy_saver",
+            QosClass::Balanced => "balanced",
+            QosClass::LatencyCritical => "latency_critical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "energy_saver" => Ok(QosClass::EnergySaver),
+            "balanced" => Ok(QosClass::Balanced),
+            "latency_critical" => Ok(QosClass::LatencyCritical),
+            other => anyhow::bail!("unknown QoS class '{other}'"),
+        }
+    }
+}
+
+/// An energy policy as distributed by the SMO via A1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyPolicy {
+    /// Policy instance id (A1 policy-instance identifier).
+    pub id: String,
+    pub qos: QosClass,
+    /// FROST may only choose caps within these bounds.
+    pub min_cap_frac: f64,
+    pub max_cap_frac: f64,
+    /// Master switch: false = leave hardware at defaults.
+    pub enabled: bool,
+    /// Maximum tolerated slowdown vs uncapped (1.10 = +10% time), enforced
+    /// as a constraint on the chosen configuration.
+    pub max_slowdown: f64,
+}
+
+impl EnergyPolicy {
+    /// The paper's default evaluation policy: ED²P over the full 30–100%
+    /// driver range with a liberal slowdown budget.
+    pub fn default_policy() -> Self {
+        EnergyPolicy {
+            id: "frost-default".into(),
+            qos: QosClass::Balanced,
+            min_cap_frac: 0.3,
+            max_cap_frac: 1.0,
+            enabled: true,
+            max_slowdown: 1.25,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.min_cap_frac)
+                && (0.0..=1.0).contains(&self.max_cap_frac)
+                && self.min_cap_frac <= self.max_cap_frac,
+            "cap bounds [{}, {}] invalid",
+            self.min_cap_frac,
+            self.max_cap_frac
+        );
+        anyhow::ensure!(self.max_slowdown >= 1.0, "max_slowdown must be >= 1.0");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("qos", Json::str(self.qos.as_str())),
+            ("min_cap_frac", Json::Num(self.min_cap_frac)),
+            ("max_cap_frac", Json::Num(self.max_cap_frac)),
+            ("enabled", Json::Bool(self.enabled)),
+            ("max_slowdown", Json::Num(self.max_slowdown)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let policy = EnergyPolicy {
+            id: j.req("id")?.as_str().context("id")?.to_string(),
+            qos: QosClass::parse(j.req("qos")?.as_str().context("qos")?)?,
+            min_cap_frac: j.req("min_cap_frac")?.as_f64().context("min_cap_frac")?,
+            max_cap_frac: j.req("max_cap_frac")?.as_f64().context("max_cap_frac")?,
+            enabled: j.req("enabled")?.as_bool().context("enabled")?,
+            max_slowdown: j.req("max_slowdown")?.as_f64().context("max_slowdown")?,
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qos_maps_to_paper_exponents() {
+        assert_eq!(QosClass::EnergySaver.criterion().exponent, 1.0);
+        assert_eq!(QosClass::Balanced.criterion().exponent, 2.0);
+        assert_eq!(QosClass::LatencyCritical.criterion().exponent, 3.0);
+    }
+
+    #[test]
+    fn qos_roundtrip() {
+        for q in [QosClass::EnergySaver, QosClass::Balanced, QosClass::LatencyCritical] {
+            assert_eq!(QosClass::parse(q.as_str()).unwrap(), q);
+        }
+        assert!(QosClass::parse("turbo").is_err());
+    }
+
+    #[test]
+    fn policy_json_roundtrip() {
+        let p = EnergyPolicy::default_policy();
+        let back = EnergyPolicy::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn invalid_policies_rejected() {
+        let mut p = EnergyPolicy::default_policy();
+        p.min_cap_frac = 0.9;
+        p.max_cap_frac = 0.4;
+        assert!(p.validate().is_err());
+        let mut p = EnergyPolicy::default_policy();
+        p.max_slowdown = 0.5;
+        assert!(p.validate().is_err());
+        // And a malformed JSON policy must fail closed.
+        let j = Json::parse(r#"{"id": "x", "qos": "warp", "min_cap_frac": 0.3,
+            "max_cap_frac": 1.0, "enabled": true, "max_slowdown": 1.1}"#)
+        .unwrap();
+        assert!(EnergyPolicy::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! The FROST power profiler (paper Sec. III-C).
+//!
+//! When a new ML model arrives on an inference host, the profiler:
+//!
+//! 1. measures the idle baseline over the hardcoded window `T_m`;
+//! 2. tests each power limit (default: eight, 30%–100% of TDP in 10% steps)
+//!    for a brief window (default 30 s), measuring energy-per-sample and
+//!    time-per-sample under each cap;
+//! 3. scores each point with the policy's `ED^m P` criterion, fits
+//!    `F(x)` by least squares (Eqs. 6–7), and locates the minimum with the
+//!    downhill simplex;
+//! 4. enforces the policy's cap bounds and slowdown budget, then applies
+//!    the chosen cap.
+//!
+//! The energy consumed *by profiling itself* is accounted and charged to
+//! the pipeline per Eqs. 4–5.
+
+use crate::config::ProfilerConfig;
+use crate::simulator::{Testbed, WorkloadDescriptor};
+use crate::util::{Joules, Seconds, Watts};
+
+use super::edp::EdpCriterion;
+use super::fit::{fit_response, FitResult};
+use super::policy::EnergyPolicy;
+
+/// One profiled power limit.
+#[derive(Debug, Clone)]
+pub struct ProfilePoint {
+    /// Cap fraction actually enforced by the driver (after clamping).
+    pub cap_frac: f64,
+    /// Profiling window wall time.
+    pub window: Seconds,
+    /// Batches executed in the window.
+    pub steps: u64,
+    /// Samples processed in the window.
+    pub samples: u64,
+    /// Gross platform energy over the window.
+    pub energy: Joules,
+    pub mean_power: Watts,
+    pub energy_per_sample_j: f64,
+    pub time_per_sample_s: f64,
+    /// Criterion score (per-sample ED^mP); the quantity F(x) is fitted to.
+    pub score: f64,
+}
+
+/// The profiler's decision for one model.
+#[derive(Debug, Clone)]
+pub struct ProfileOutcome {
+    pub model: String,
+    pub criterion: EdpCriterion,
+    pub points: Vec<ProfilePoint>,
+    pub fit: FitResult,
+    /// The cap FROST chose (within policy bounds, slowdown-constrained).
+    pub optimal_cap: f64,
+    /// Energy consumed by the profiling sweep itself (the `8·∫P_pr dt`
+    /// charge of Eqs. 4–5).
+    pub profiling_energy: Joules,
+    /// Idle platform power measured over `T_m`.
+    pub idle_power: Watts,
+    /// Estimated energy saving at `optimal_cap` vs the 100% default (>0 is
+    /// a saving).
+    pub est_energy_saving: f64,
+    /// Estimated slowdown at `optimal_cap` vs the 100% default (1.05 =
+    /// +5% time).
+    pub est_slowdown: f64,
+}
+
+/// The profiler.
+#[derive(Debug, Clone)]
+pub struct PowerProfiler {
+    pub config: ProfilerConfig,
+    pub policy: EnergyPolicy,
+    /// Some(m): explicit ED^mP override (no-policy construction);
+    /// None: the A1 policy's QoS class decides.
+    exponent_override: Option<f64>,
+}
+
+impl PowerProfiler {
+    /// Standalone profiler: the config's `edp_exponent` is authoritative.
+    pub fn new(config: ProfilerConfig) -> Self {
+        PowerProfiler {
+            policy: EnergyPolicy::default_policy(),
+            exponent_override: Some(config.edp_exponent),
+            config,
+        }
+    }
+
+    /// Policy-driven profiler (the O-RAN deployment path): the A1 policy's
+    /// QoS class selects the ED^mP exponent.
+    pub fn with_policy(config: ProfilerConfig, policy: EnergyPolicy) -> Self {
+        PowerProfiler { config, policy, exponent_override: None }
+    }
+
+    /// The active decision criterion.
+    pub fn criterion(&self) -> EdpCriterion {
+        match self.exponent_override {
+            Some(m) => EdpCriterion::new(m),
+            None => self.policy.qos.criterion(),
+        }
+    }
+
+    /// Profile a (virtual-testbed) training workload and choose the cap.
+    ///
+    /// Restores the testbed to the chosen cap before returning.
+    pub fn profile(
+        &self,
+        tb: &mut Testbed,
+        w: &WorkloadDescriptor,
+        batch: u32,
+    ) -> ProfileOutcome {
+        let criterion = self.criterion();
+
+        // 1. Idle baseline over T_m (Eqs. 1–2).
+        let idle = tb.idle_window(Seconds(self.config.idle_window_s));
+        let idle_power = idle.energy.mean_power(idle.wall);
+
+        // 2. Sweep the limits within policy bounds.
+        let mut points = Vec::new();
+        let mut profiling_energy = Joules(0.0);
+        for &cap in &self.config.cap_fracs {
+            if cap < self.policy.min_cap_frac - 1e-9 || cap > self.policy.max_cap_frac + 1e-9
+            {
+                continue;
+            }
+            let enforced = tb.set_cap_frac(cap);
+            let agg = tb.train_window(w, batch, Seconds(self.config.window_s));
+            profiling_energy += agg.energy;
+            let samples = agg.steps * batch as u64;
+            let eps = agg.energy.0 / samples as f64;
+            let tps = agg.wall.0 / samples as f64;
+            points.push(ProfilePoint {
+                cap_frac: enforced,
+                window: agg.wall,
+                steps: agg.steps,
+                samples,
+                energy: agg.energy,
+                mean_power: agg.energy.mean_power(agg.wall),
+                energy_per_sample_j: eps,
+                time_per_sample_s: tps,
+                score: criterion.score(eps, tps),
+            });
+        }
+        assert!(
+            points.len() >= 4,
+            "policy bounds left too few caps to profile ({})",
+            points.len()
+        );
+
+        // 3. Fit F(x) to the scores and minimise (Eqs. 6–7 + simplex).
+        let xy: Vec<(f64, f64)> =
+            points.iter().map(|p| (p.cap_frac, p.score)).collect();
+        let fit = fit_response(&xy, self.config.fit_error_threshold);
+        let lo = points.first().unwrap().cap_frac;
+        let hi = points.last().unwrap().cap_frac;
+        let (mut optimal_cap, _) = fit.minimize(lo, hi);
+
+        // 4. Enforce the slowdown budget: walk the cap up (time is monotone
+        //    non-increasing in cap) until the estimate fits the policy.
+        let baseline = points.last().unwrap(); // highest cap = reference
+        while optimal_cap < hi - 1e-6 {
+            let t = interp(&points, optimal_cap, |p| p.time_per_sample_s);
+            if t / baseline.time_per_sample_s <= self.policy.max_slowdown {
+                break;
+            }
+            optimal_cap = (optimal_cap + 0.02).min(hi);
+        }
+
+        let est_energy = interp(&points, optimal_cap, |p| p.energy_per_sample_j);
+        let est_time = interp(&points, optimal_cap, |p| p.time_per_sample_s);
+        let est_energy_saving = 1.0 - est_energy / baseline.energy_per_sample_j;
+        let est_slowdown = est_time / baseline.time_per_sample_s;
+
+        // 5. Apply the decision.
+        let applied = if self.policy.enabled { optimal_cap } else { 1.0 };
+        tb.set_cap_frac(applied);
+
+        ProfileOutcome {
+            model: w.name.clone(),
+            criterion,
+            points,
+            fit,
+            optimal_cap,
+            profiling_energy,
+            idle_power,
+            est_energy_saving,
+            est_slowdown,
+        }
+    }
+}
+
+/// Linear interpolation of a per-point quantity at an arbitrary cap.
+fn interp(points: &[ProfilePoint], cap: f64, f: impl Fn(&ProfilePoint) -> f64) -> f64 {
+    let mut prev = &points[0];
+    if cap <= prev.cap_frac {
+        return f(prev);
+    }
+    for p in &points[1..] {
+        if cap <= p.cap_frac {
+            let t = (cap - prev.cap_frac) / (p.cap_frac - prev.cap_frac);
+            return f(prev) * (1.0 - t) + f(p) * t;
+        }
+        prev = p;
+    }
+    f(points.last().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{setup_no1, setup_no2, ProfilerConfig};
+    use crate::frost::policy::QosClass;
+    use crate::zoo::model_by_name;
+
+    fn profile_model(name: &str, exponent: f64) -> ProfileOutcome {
+        let hw = setup_no2();
+        let entry = model_by_name(name).unwrap();
+        let w = entry.workload(&setup_no1().gpu);
+        let mut tb = Testbed::new(hw, 42);
+        let config = ProfilerConfig { edp_exponent: exponent, ..Default::default() };
+        PowerProfiler::new(config).profile(&mut tb, &w, 128)
+    }
+
+    #[test]
+    fn profiles_eight_points_with_good_fit() {
+        let out = profile_model("ResNet", 1.0);
+        assert_eq!(out.points.len(), 8);
+        assert!(out.fit.good_fit, "rel_error {}", out.fit.rel_error);
+        // Caps enforced in ascending order, clamped to the driver floor.
+        for pair in out.points.windows(2) {
+            assert!(pair[1].cap_frac > pair[0].cap_frac);
+        }
+        assert!(out.points[0].cap_frac >= 0.28);
+    }
+
+    #[test]
+    fn optimal_cap_interior_for_balanced_model() {
+        let out = profile_model("ResNet", 1.0);
+        assert!(
+            out.optimal_cap > 0.35 && out.optimal_cap < 0.95,
+            "ResNet optimal cap {} not interior",
+            out.optimal_cap
+        );
+        assert!(out.est_energy_saving > 0.05, "saving {}", out.est_energy_saving);
+    }
+
+    #[test]
+    fn memory_bound_model_gets_lower_cap_than_compute_bound() {
+        let eff = profile_model("EfficientNet", 1.0);
+        let rx = profile_model("ResNeXt", 1.0);
+        assert!(
+            eff.optimal_cap < rx.optimal_cap,
+            "EfficientNet {} should cap below ResNeXt {}",
+            eff.optimal_cap,
+            rx.optimal_cap
+        );
+    }
+
+    #[test]
+    fn higher_exponent_raises_optimal_cap() {
+        // Paper Fig. 5: "the more weight attributed to delay, the higher
+        // the optimal power limit becomes".
+        let e1 = profile_model("ResNet", 1.0);
+        let e3 = profile_model("ResNet", 3.0);
+        assert!(
+            e3.optimal_cap >= e1.optimal_cap - 0.02,
+            "ED3P cap {} must not be below EDP cap {}",
+            e3.optimal_cap,
+            e1.optimal_cap
+        );
+    }
+
+    #[test]
+    fn lenet_outlier_keeps_high_cap() {
+        // Paper: "LeNet was an outlier and showed no change in behaviour".
+        let out = profile_model("LeNet", 1.0);
+        // Capping a host-bound model neither saves much energy nor slows it;
+        // the optimum must not promise meaningful savings.
+        assert!(
+            out.est_energy_saving.abs() < 0.12,
+            "LeNet savings should be negligible, got {}",
+            out.est_energy_saving
+        );
+        assert!(out.est_slowdown < 1.03);
+    }
+
+    #[test]
+    fn profiling_energy_charged() {
+        let out = profile_model("ResNet", 2.0);
+        // Eight ~30 s windows at a few hundred watts -> tens of kJ.
+        assert!(out.profiling_energy.0 > 8.0 * 30.0 * 100.0);
+        assert!(out.profiling_energy.0 < 8.0 * 31.0 * 500.0);
+        assert!(out.idle_power.0 > 20.0 && out.idle_power.0 < 150.0);
+    }
+
+    #[test]
+    fn disabled_policy_leaves_default_cap() {
+        let hw = setup_no2();
+        let entry = model_by_name("ResNet").unwrap();
+        let w = entry.workload(&setup_no1().gpu);
+        let mut tb = Testbed::new(hw, 1);
+        let mut policy = EnergyPolicy::default_policy();
+        policy.enabled = false;
+        let out = PowerProfiler::with_policy(ProfilerConfig::default(), policy)
+            .profile(&mut tb, &w, 128);
+        assert_eq!(tb.cap_frac(), 1.0, "disabled policy must not cap");
+        assert!(out.optimal_cap < 1.0, "recommendation still computed");
+    }
+
+    #[test]
+    fn policy_bounds_respected() {
+        let hw = setup_no2();
+        let entry = model_by_name("EfficientNet").unwrap();
+        let w = entry.workload(&setup_no1().gpu);
+        let mut tb = Testbed::new(hw, 1);
+        let policy = EnergyPolicy {
+            min_cap_frac: 0.6,
+            max_cap_frac: 1.0,
+            ..EnergyPolicy::default_policy()
+        };
+        let out = PowerProfiler::with_policy(ProfilerConfig::default(), policy)
+            .profile(&mut tb, &w, 128);
+        assert!(out.optimal_cap >= 0.6 - 1e-9);
+        assert!(out.points.iter().all(|p| p.cap_frac >= 0.6 - 1e-9));
+    }
+
+    #[test]
+    fn latency_policy_bounds_slowdown() {
+        let hw = setup_no2();
+        let entry = model_by_name("VGG").unwrap(); // compute-bound: caps hurt
+        let w = entry.workload(&setup_no1().gpu);
+        let mut tb = Testbed::new(hw, 1);
+        let policy = EnergyPolicy {
+            qos: QosClass::LatencyCritical,
+            max_slowdown: 1.05,
+            ..EnergyPolicy::default_policy()
+        };
+        let out = PowerProfiler::with_policy(ProfilerConfig::default(), policy)
+            .profile(&mut tb, &w, 128);
+        assert!(
+            out.est_slowdown <= 1.06,
+            "slowdown {} exceeds policy budget",
+            out.est_slowdown
+        );
+    }
+
+    #[test]
+    fn fine_grained_sweep_71_points() {
+        let hw = setup_no2();
+        let entry = model_by_name("ResNet").unwrap();
+        let w = entry.workload(&setup_no1().gpu);
+        let mut tb = Testbed::new(hw, 7);
+        let out = PowerProfiler::new(ProfilerConfig::fine_grained())
+            .profile(&mut tb, &w, 128);
+        // 71 requested caps, but those below the 3090's driver floor (28.6%)
+        // clamp to the same enforced value; all >= floor survive distinctly.
+        assert!(out.points.len() >= 65, "{} points", out.points.len());
+    }
+}

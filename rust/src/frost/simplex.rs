@@ -1,0 +1,263 @@
+//! Downhill simplex (Nelder–Mead) minimiser — implemented from scratch.
+//!
+//! The paper uses "the downhill simplex algorithm" to find the minimum of
+//! the fitted response F(x) (Sec. III-C); we additionally use it as the
+//! inner optimiser of the nonlinear least-squares fit itself.  Standard
+//! Nelder & Mead (1965) with the usual coefficients: reflection α = 1,
+//! expansion γ = 2, contraction ρ = ½, shrink σ = ½.
+
+/// Termination and scaling options.
+#[derive(Debug, Clone)]
+pub struct NelderMeadOptions {
+    /// Maximum function evaluations.
+    pub max_evals: usize,
+    /// Stop when the simplex's function-value spread falls below this.
+    pub f_tol: f64,
+    /// Stop when the simplex's vertex spread falls below this.
+    pub x_tol: f64,
+    /// Initial simplex edge length relative to |x0| (absolute for zeros).
+    pub initial_step: f64,
+}
+
+impl Default for NelderMeadOptions {
+    fn default() -> Self {
+        NelderMeadOptions {
+            max_evals: 4000,
+            f_tol: 1e-12,
+            x_tol: 1e-10,
+            initial_step: 0.1,
+        }
+    }
+}
+
+/// Result of a minimisation.
+#[derive(Debug, Clone)]
+pub struct SimplexResult {
+    pub x: Vec<f64>,
+    pub fx: f64,
+    pub evals: usize,
+    pub converged: bool,
+}
+
+/// Minimise `f` starting from `x0`.
+pub fn nelder_mead(
+    f: impl Fn(&[f64]) -> f64,
+    x0: &[f64],
+    opts: &NelderMeadOptions,
+) -> SimplexResult {
+    let n = x0.len();
+    assert!(n >= 1, "need at least one dimension");
+    const ALPHA: f64 = 1.0;
+    const GAMMA: f64 = 2.0;
+    const RHO: f64 = 0.5;
+    const SIGMA: f64 = 0.5;
+
+    let mut evals = 0usize;
+    let eval = |x: &[f64], evals: &mut usize| -> f64 {
+        *evals += 1;
+        let v = f(x);
+        if v.is_nan() {
+            f64::INFINITY
+        } else {
+            v
+        }
+    };
+
+    // Initial simplex: x0 plus one perturbed vertex per dimension.
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    let fx0 = eval(x0, &mut evals);
+    simplex.push((x0.to_vec(), fx0));
+    for i in 0..n {
+        let mut v = x0.to_vec();
+        let step = if v[i].abs() > 1e-12 {
+            v[i].abs() * opts.initial_step
+        } else {
+            opts.initial_step
+        };
+        v[i] += step;
+        let fv = eval(&v, &mut evals);
+        simplex.push((v, fv));
+    }
+
+    while evals < opts.max_evals {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let (best_f, worst_f) = (simplex[0].1, simplex[n].1);
+
+        // Convergence checks.
+        let f_spread = (worst_f - best_f).abs();
+        let x_spread = (0..n)
+            .map(|i| {
+                let vals: Vec<f64> = simplex.iter().map(|(v, _)| v[i]).collect();
+                let mx = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mn = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+                mx - mn
+            })
+            .fold(0.0f64, f64::max);
+        if f_spread < opts.f_tol && x_spread < opts.x_tol {
+            return SimplexResult {
+                x: simplex[0].0.clone(),
+                fx: simplex[0].1,
+                evals,
+                converged: true,
+            };
+        }
+
+        // Centroid of all but worst.
+        let mut centroid = vec![0.0; n];
+        for (v, _) in &simplex[..n] {
+            for (c, vi) in centroid.iter_mut().zip(v) {
+                *c += vi / n as f64;
+            }
+        }
+
+        let worst = simplex[n].clone();
+        let reflected: Vec<f64> = centroid
+            .iter()
+            .zip(&worst.0)
+            .map(|(c, w)| c + ALPHA * (c - w))
+            .collect();
+        let f_ref = eval(&reflected, &mut evals);
+
+        if f_ref < simplex[0].1 {
+            // Try expansion.
+            let expanded: Vec<f64> = centroid
+                .iter()
+                .zip(&reflected)
+                .map(|(c, r)| c + GAMMA * (r - c))
+                .collect();
+            let f_exp = eval(&expanded, &mut evals);
+            simplex[n] = if f_exp < f_ref { (expanded, f_exp) } else { (reflected, f_ref) };
+        } else if f_ref < simplex[n - 1].1 {
+            simplex[n] = (reflected, f_ref);
+        } else {
+            // Contraction (outside if reflected better than worst, else inside).
+            let towards = if f_ref < worst.1 { &reflected } else { &worst.0 };
+            let contracted: Vec<f64> = centroid
+                .iter()
+                .zip(towards)
+                .map(|(c, t)| c + RHO * (t - c))
+                .collect();
+            let f_con = eval(&contracted, &mut evals);
+            if f_con < worst.1.min(f_ref) {
+                simplex[n] = (contracted, f_con);
+            } else {
+                // Shrink towards best.
+                let best = simplex[0].0.clone();
+                for (v, fv) in simplex.iter_mut().skip(1) {
+                    for (vi, bi) in v.iter_mut().zip(&best) {
+                        *vi = bi + SIGMA * (*vi - bi);
+                    }
+                    *fv = eval(v, &mut evals);
+                }
+            }
+        }
+    }
+
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    SimplexResult { x: simplex[0].0.clone(), fx: simplex[0].1, evals, converged: false }
+}
+
+/// Convenience: 1-D bounded minimisation by multi-start Nelder–Mead +
+/// clamping — used to locate the optimum of the fitted F(x) over the cap
+/// range [lo, hi].
+pub fn minimize_1d(f: impl Fn(f64) -> f64, lo: f64, hi: f64) -> (f64, f64) {
+    assert!(lo < hi);
+    let wrapped = |x: &[f64]| {
+        let xc = x[0];
+        // Penalised bounds keep the simplex inside [lo, hi].
+        if xc < lo || xc > hi {
+            let d = (xc - hi).max(lo - xc);
+            return f(xc.clamp(lo, hi)) + d * d * 1e6;
+        }
+        f(xc)
+    };
+    let opts = NelderMeadOptions { initial_step: (hi - lo) * 0.1, ..Default::default() };
+    let mut best = (f64::NAN, f64::INFINITY);
+    for k in 0..7 {
+        let x0 = lo + (hi - lo) * (k as f64 + 0.5) / 7.0;
+        let r = nelder_mead(&wrapped, &[x0], &opts);
+        let x = r.x[0].clamp(lo, hi);
+        let fx = f(x);
+        if fx < best.1 {
+            best = (x, fx);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimises_quadratic() {
+        let r = nelder_mead(|x| (x[0] - 3.0).powi(2) + 2.0, &[0.0], &Default::default());
+        assert!((r.x[0] - 3.0).abs() < 1e-4, "x = {}", r.x[0]);
+        assert!((r.fx - 2.0).abs() < 1e-8);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn minimises_rosenbrock_2d() {
+        let rosen =
+            |x: &[f64]| (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2);
+        let r = nelder_mead(rosen, &[-1.2, 1.0], &NelderMeadOptions {
+            max_evals: 20_000,
+            ..Default::default()
+        });
+        assert!((r.x[0] - 1.0).abs() < 1e-3 && (r.x[1] - 1.0).abs() < 1e-3, "{:?}", r.x);
+    }
+
+    #[test]
+    fn minimises_5d_sphere() {
+        let r = nelder_mead(
+            |x| x.iter().map(|v| v * v).sum(),
+            &[1.0, -2.0, 3.0, -4.0, 5.0],
+            &NelderMeadOptions { max_evals: 20_000, ..Default::default() },
+        );
+        assert!(r.fx < 1e-6, "fx = {}", r.fx);
+    }
+
+    #[test]
+    fn handles_nan_objective() {
+        // NaN regions must not poison the search.
+        let f = |x: &[f64]| if x[0] < 0.0 { f64::NAN } else { (x[0] - 1.0).powi(2) };
+        let r = nelder_mead(f, &[2.0], &Default::default());
+        assert!((r.x[0] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn bounded_1d_interior_minimum() {
+        let (x, fx) = minimize_1d(|x| (x - 0.6).powi(2) + 1.0, 0.3, 1.0);
+        assert!((x - 0.6).abs() < 1e-5);
+        assert!((fx - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_1d_boundary_minimum() {
+        // Monotone decreasing on the interval -> optimum at hi.
+        let (x, _) = minimize_1d(|x| -x, 0.3, 1.0);
+        assert!((x - 1.0).abs() < 1e-5, "x = {x}");
+        // Monotone increasing -> optimum at lo.
+        let (x, _) = minimize_1d(|x| x, 0.3, 1.0);
+        assert!((x - 0.3).abs() < 1e-5, "x = {x}");
+    }
+
+    #[test]
+    fn respects_eval_budget() {
+        let mut count = std::cell::Cell::new(0usize);
+        let _ = &mut count;
+        let f = |x: &[f64]| {
+            count.set(count.get() + 1);
+            x[0].sin() * x[0].cos()
+        };
+        let r = nelder_mead(f, &[1.0], &NelderMeadOptions {
+            max_evals: 50,
+            f_tol: 0.0,
+            x_tol: 0.0,
+            ..Default::default()
+        });
+        assert!(!r.converged);
+        assert!(count.get() <= 55, "evals {}", count.get());
+    }
+}

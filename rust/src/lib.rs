@@ -1,0 +1,42 @@
+//! # FROST — Flexible Reconfiguration method with Online System Tuning
+//!
+//! A reproduction of *"FROST: Towards Energy-efficient AI-on-5G Platforms —
+//! A GPU Power Capping Evaluation"* (Mavromatis et al., 2023) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! This crate is **Layer 3**: the coordinator.  It owns
+//!
+//! * the physics substrates replacing the paper's hardware (GPU/CPU/DRAM
+//!   power models, NVML/RAPL-style telemetry interfaces) — [`power`],
+//!   [`telemetry`], [`simulator`];
+//! * the paper's contribution — the FROST power profiler, the
+//!   `F(x) = a·e^(bx−c) + d·σ(ex−f) + g` response fit, the downhill-simplex
+//!   minimiser and the `ED^m P` decision criterion — [`frost`];
+//! * the O-RAN fabric it deploys into (SMO, non-RT/near-RT RICs, A1
+//!   policies, the AI/ML lifecycle) — [`oran`];
+//! * the real compute path: AOT-lowered JAX/Pallas models executed through
+//!   PJRT — [`runtime`], [`pipeline`].
+//!
+//! Python (Layers 1 & 2, under `python/`) runs only at build time to emit
+//! `artifacts/*.hlo.txt`; it is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every figure of the paper to a regeneration harness.
+
+pub mod config;
+pub mod data;
+pub mod figures;
+pub mod frost;
+pub mod metrics;
+pub mod oran;
+pub mod pipeline;
+pub mod power;
+pub mod runtime;
+pub mod simulator;
+pub mod telemetry;
+pub mod util;
+pub mod zoo;
+
+
+pub use crate::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
+

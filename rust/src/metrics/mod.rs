@@ -1,0 +1,5 @@
+//! Statistics and derived metrics used across the evaluation.
+
+pub mod stats;
+
+pub use stats::{linear_fit, mean, pearson, std_dev, Summary};

@@ -1,0 +1,150 @@
+//! The A1 Policy Management Service.
+//!
+//! Holds energy-policy instances (paper Sec. III-C: ED^mP choices "shaped
+//! as policies managed by the A1 Policy Management Service") and
+//! distributes create/update/delete over the fabric to subscribed
+//! endpoints.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::frost::EnergyPolicy;
+
+use super::bus::Bus;
+use super::messages::OranMessage;
+
+/// The policy service, owned by the SMO/non-RT-RIC side.
+#[derive(Debug)]
+pub struct A1PolicyService {
+    bus: Arc<Bus>,
+    /// This service's endpoint name on the fabric.
+    pub name: String,
+    policies: HashMap<String, EnergyPolicy>,
+    subscribers: Vec<String>,
+}
+
+impl A1PolicyService {
+    pub fn new(bus: Arc<Bus>, name: &str) -> Self {
+        bus.endpoint(name);
+        A1PolicyService {
+            bus,
+            name: name.to_string(),
+            policies: HashMap::new(),
+            subscribers: Vec::new(),
+        }
+    }
+
+    /// Subscribe an endpoint to policy updates (idempotent).
+    pub fn subscribe(&mut self, endpoint: &str) {
+        if !self.subscribers.iter().any(|s| s == endpoint) {
+            self.subscribers.push(endpoint.to_string());
+            // Late subscribers receive the current policy set immediately.
+            for p in self.policies.values() {
+                self.bus.send(&self.name, endpoint, OranMessage::PolicyUpdate(p.clone()));
+            }
+        }
+    }
+
+    /// Create or update a policy instance; pushes to all subscribers.
+    pub fn put_policy(&mut self, policy: EnergyPolicy) -> Result<()> {
+        policy.validate()?;
+        self.policies.insert(policy.id.clone(), policy.clone());
+        for s in &self.subscribers {
+            self.bus.send(&self.name, s, OranMessage::PolicyUpdate(policy.clone()));
+        }
+        Ok(())
+    }
+
+    /// Delete a policy instance; notifies subscribers.
+    pub fn delete_policy(&mut self, id: &str) -> bool {
+        let existed = self.policies.remove(id).is_some();
+        if existed {
+            for s in &self.subscribers {
+                self.bus
+                    .send(&self.name, s, OranMessage::PolicyDelete { id: id.to_string() });
+            }
+        }
+        existed
+    }
+
+    pub fn get(&self, id: &str) -> Option<&EnergyPolicy> {
+        self.policies.get(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frost::QosClass;
+
+    #[test]
+    fn policies_pushed_to_subscribers() {
+        let bus = Bus::new();
+        let host = bus.endpoint("host1");
+        let mut a1 = A1PolicyService::new(bus.clone(), "a1");
+        a1.subscribe("host1");
+        a1.put_policy(EnergyPolicy::default_policy()).unwrap();
+        bus.deliver_all();
+        let msgs = host.drain();
+        assert_eq!(msgs.len(), 1);
+        assert!(matches!(msgs[0].1, OranMessage::PolicyUpdate(_)));
+    }
+
+    #[test]
+    fn late_subscriber_receives_current_policies() {
+        let bus = Bus::new();
+        let mut a1 = A1PolicyService::new(bus.clone(), "a1");
+        a1.put_policy(EnergyPolicy::default_policy()).unwrap();
+        let host = bus.endpoint("late");
+        a1.subscribe("late");
+        bus.deliver_all();
+        assert_eq!(host.drain().len(), 1);
+    }
+
+    #[test]
+    fn delete_notifies() {
+        let bus = Bus::new();
+        let host = bus.endpoint("h");
+        let mut a1 = A1PolicyService::new(bus.clone(), "a1");
+        a1.subscribe("h");
+        a1.put_policy(EnergyPolicy::default_policy()).unwrap();
+        assert!(a1.delete_policy("frost-default"));
+        assert!(!a1.delete_policy("frost-default"));
+        bus.deliver_all();
+        let msgs = host.drain();
+        assert_eq!(msgs.len(), 2);
+        assert!(matches!(msgs[1].1, OranMessage::PolicyDelete { .. }));
+    }
+
+    #[test]
+    fn invalid_policy_rejected() {
+        let bus = Bus::new();
+        let mut a1 = A1PolicyService::new(bus, "a1");
+        let mut bad = EnergyPolicy::default_policy();
+        bad.min_cap_frac = 2.0;
+        assert!(a1.put_policy(bad).is_err());
+        assert!(a1.is_empty());
+    }
+
+    #[test]
+    fn update_overwrites_by_id() {
+        let bus = Bus::new();
+        let mut a1 = A1PolicyService::new(bus, "a1");
+        a1.put_policy(EnergyPolicy::default_policy()).unwrap();
+        let mut p2 = EnergyPolicy::default_policy();
+        p2.qos = QosClass::LatencyCritical;
+        a1.put_policy(p2).unwrap();
+        assert_eq!(a1.len(), 1);
+        assert_eq!(a1.get("frost-default").unwrap().qos, QosClass::LatencyCritical);
+    }
+}

@@ -1,0 +1,159 @@
+//! The in-process message fabric standing in for O-RAN's standardised
+//! interfaces.
+//!
+//! Deterministic by construction: messages are delivered in FIFO order via
+//! explicit [`Bus::deliver_all`] pumping, so O-RAN simulations replay
+//! bit-for-bit.  (The build environment has no async runtime — the fabric
+//! is a from-scratch substrate, DESIGN.md §2.)
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use super::messages::OranMessage;
+
+/// An addressable fabric endpoint (SMO, a RIC, a host).
+#[derive(Debug)]
+pub struct Endpoint {
+    pub name: String,
+    inbox: Mutex<VecDeque<(String, OranMessage)>>,
+}
+
+impl Endpoint {
+    fn new(name: &str) -> Arc<Self> {
+        Arc::new(Endpoint { name: name.to_string(), inbox: Mutex::new(VecDeque::new()) })
+    }
+
+    /// Drain all pending messages (sender, message).
+    pub fn drain(&self) -> Vec<(String, OranMessage)> {
+        self.inbox.lock().unwrap().drain(..).collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inbox.lock().unwrap().len()
+    }
+}
+
+/// The fabric: named endpoints + an undelivered queue + statistics.
+#[derive(Debug, Default)]
+pub struct Bus {
+    endpoints: Mutex<HashMap<String, Arc<Endpoint>>>,
+    /// (interface name → messages carried), for fabric statistics.
+    stats: Mutex<HashMap<&'static str, u64>>,
+    /// In-flight messages not yet pumped into inboxes.
+    queue: Mutex<VecDeque<(String, String, OranMessage)>>,
+}
+
+impl Bus {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Bus::default())
+    }
+
+    /// Register (or fetch) an endpoint by name.
+    pub fn endpoint(&self, name: &str) -> Arc<Endpoint> {
+        self.endpoints
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Endpoint::new(name))
+            .clone()
+    }
+
+    /// Queue a message from `from` to `to`.
+    pub fn send(&self, from: &str, to: &str, msg: OranMessage) {
+        *self.stats.lock().unwrap().entry(msg.interface()).or_insert(0) += 1;
+        self.queue.lock().unwrap().push_back((from.to_string(), to.to_string(), msg));
+    }
+
+    /// Broadcast to every endpoint except the sender.
+    pub fn broadcast(&self, from: &str, msg: OranMessage) {
+        let names: Vec<String> =
+            self.endpoints.lock().unwrap().keys().cloned().collect();
+        for to in names {
+            if to != from {
+                self.send(from, &to, msg.clone());
+            }
+        }
+    }
+
+    /// Pump queued messages into inboxes; returns how many were delivered.
+    /// Unknown recipients are dropped (counted as routing failures).
+    pub fn deliver_all(&self) -> usize {
+        let mut delivered = 0;
+        loop {
+            let next = self.queue.lock().unwrap().pop_front();
+            let Some((from, to, msg)) = next else { break };
+            let ep = self.endpoints.lock().unwrap().get(&to).cloned();
+            match ep {
+                Some(ep) => {
+                    ep.inbox.lock().unwrap().push_back((from, msg));
+                    delivered += 1;
+                }
+                None => {
+                    *self.stats.lock().unwrap().entry("dropped").or_insert(0) += 1;
+                }
+            }
+        }
+        delivered
+    }
+
+    /// Per-interface traffic counters.
+    pub fn stats(&self) -> HashMap<&'static str, u64> {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frost::EnergyPolicy;
+
+    #[test]
+    fn fifo_delivery() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        let _b = bus.endpoint("b");
+        bus.send("b", "a", OranMessage::PolicyDelete { id: "1".into() });
+        bus.send("b", "a", OranMessage::PolicyDelete { id: "2".into() });
+        assert_eq!(a.pending(), 0, "not delivered before pump");
+        assert_eq!(bus.deliver_all(), 2);
+        let msgs = a.drain();
+        assert_eq!(msgs.len(), 2);
+        assert_eq!(msgs[0].1, OranMessage::PolicyDelete { id: "1".into() });
+        assert_eq!(msgs[1].1, OranMessage::PolicyDelete { id: "2".into() });
+        assert_eq!(a.pending(), 0);
+    }
+
+    #[test]
+    fn broadcast_excludes_sender() {
+        let bus = Bus::new();
+        let smo = bus.endpoint("smo");
+        let h1 = bus.endpoint("h1");
+        let h2 = bus.endpoint("h2");
+        bus.broadcast("smo", OranMessage::PolicyUpdate(EnergyPolicy::default_policy()));
+        bus.deliver_all();
+        assert_eq!(smo.pending(), 0);
+        assert_eq!(h1.pending(), 1);
+        assert_eq!(h2.pending(), 1);
+    }
+
+    #[test]
+    fn unknown_recipient_counted_as_dropped() {
+        let bus = Bus::new();
+        let _a = bus.endpoint("a");
+        bus.send("a", "ghost", OranMessage::PolicyDelete { id: "x".into() });
+        bus.deliver_all();
+        assert_eq!(bus.stats().get("dropped"), Some(&1));
+    }
+
+    #[test]
+    fn interface_stats_tracked() {
+        let bus = Bus::new();
+        let _a = bus.endpoint("a");
+        bus.send("x", "a", OranMessage::PolicyUpdate(EnergyPolicy::default_policy()));
+        bus.send("x", "a", OranMessage::ProfileRequest { model: "m".into(), host: "a".into() });
+        bus.deliver_all();
+        let stats = bus.stats();
+        assert_eq!(stats.get("A1"), Some(&1));
+        assert_eq!(stats.get("O2"), Some(&1));
+    }
+}

@@ -1,0 +1,217 @@
+//! The AI/ML model catalogue (paper Sec. II-B).
+//!
+//! Trained models are validated at the non-RT RIC and, if they pass,
+//! published here; inference hosts deploy from the catalogue; the SMO can
+//! flag entries for replacement, pulling a new version.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+/// Lifecycle state of a catalogue entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelState {
+    Trained,
+    Validated,
+    Published,
+    Deployed,
+    FlaggedForUpdate,
+    Retired,
+}
+
+impl ModelState {
+    /// Legal state transitions of the catalogue workflow.
+    pub fn can_transition_to(self, next: ModelState) -> bool {
+        use ModelState::*;
+        matches!(
+            (self, next),
+            (Trained, Validated)
+                | (Validated, Published)
+                | (Published, Deployed)
+                | (Deployed, FlaggedForUpdate)
+                | (FlaggedForUpdate, Retired)
+                | (FlaggedForUpdate, Deployed)   // updated in place
+                | (Deployed, Retired)
+                | (Published, Retired)
+        )
+    }
+}
+
+/// One catalogue entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CatalogueEntry {
+    pub name: String,
+    pub version: u32,
+    pub state: ModelState,
+    pub validation_accuracy: f64,
+    /// Optimal power cap discovered by FROST (None before profiling).
+    pub optimal_cap: Option<f64>,
+    /// Artifact backing the model, when it is a real trainable one.
+    pub artifact: Option<String>,
+}
+
+/// The catalogue itself.
+#[derive(Debug, Default)]
+pub struct ModelCatalogue {
+    entries: HashMap<String, CatalogueEntry>,
+    /// Validation threshold: models below it are rejected for publishing.
+    pub min_accuracy: f64,
+}
+
+impl ModelCatalogue {
+    pub fn new(min_accuracy: f64) -> Self {
+        ModelCatalogue { entries: HashMap::new(), min_accuracy }
+    }
+
+    /// Register a freshly trained model (state = Trained, version 1 or bump).
+    pub fn register_trained(
+        &mut self,
+        name: &str,
+        accuracy: f64,
+        artifact: Option<String>,
+    ) -> &CatalogueEntry {
+        let version = self.entries.get(name).map(|e| e.version + 1).unwrap_or(1);
+        self.entries.insert(
+            name.to_string(),
+            CatalogueEntry {
+                name: name.to_string(),
+                version,
+                state: ModelState::Trained,
+                validation_accuracy: accuracy,
+                optimal_cap: None,
+                artifact,
+            },
+        );
+        &self.entries[name]
+    }
+
+    /// Validate: passes iff accuracy ≥ threshold; moves to Validated or
+    /// leaves the model Trained (flagged for retraining by the caller).
+    pub fn validate(&mut self, name: &str) -> Result<bool> {
+        let min_acc = self.min_accuracy;
+        let e = self.entry_mut(name)?;
+        let passed = e.validation_accuracy >= min_acc;
+        if passed {
+            e.state = ModelState::Validated;
+        }
+        Ok(passed)
+    }
+
+    pub fn publish(&mut self, name: &str) -> Result<()> {
+        self.transition(name, ModelState::Published)
+    }
+
+    pub fn mark_deployed(&mut self, name: &str) -> Result<()> {
+        self.transition(name, ModelState::Deployed)
+    }
+
+    pub fn flag_for_update(&mut self, name: &str) -> Result<()> {
+        self.transition(name, ModelState::FlaggedForUpdate)
+    }
+
+    pub fn retire(&mut self, name: &str) -> Result<()> {
+        self.transition(name, ModelState::Retired)
+    }
+
+    /// Record FROST's profiling decision on the entry.
+    pub fn set_optimal_cap(&mut self, name: &str, cap: f64) -> Result<()> {
+        self.entry_mut(name)?.optimal_cap = Some(cap);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&CatalogueEntry> {
+        self.entries.get(name)
+    }
+
+    /// All entries deployable right now (Published).
+    pub fn published(&self) -> Vec<&CatalogueEntry> {
+        let mut v: Vec<_> = self
+            .entries
+            .values()
+            .filter(|e| e.state == ModelState::Published)
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn entry_mut(&mut self, name: &str) -> Result<&mut CatalogueEntry> {
+        self.entries.get_mut(name).with_context(|| format!("model '{name}' not in catalogue"))
+    }
+
+    fn transition(&mut self, name: &str, next: ModelState) -> Result<()> {
+        let e = self.entry_mut(name)?;
+        anyhow::ensure!(
+            e.state.can_transition_to(next),
+            "illegal transition {:?} -> {:?} for '{name}'",
+            e.state,
+            next
+        );
+        e.state = next;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path_to_deployment() {
+        let mut cat = ModelCatalogue::new(0.9);
+        cat.register_trained("resnet", 0.955, Some("resnet_mini".into()));
+        assert!(cat.validate("resnet").unwrap());
+        cat.publish("resnet").unwrap();
+        assert_eq!(cat.published().len(), 1);
+        cat.mark_deployed("resnet").unwrap();
+        assert_eq!(cat.get("resnet").unwrap().state, ModelState::Deployed);
+    }
+
+    #[test]
+    fn low_accuracy_fails_validation() {
+        let mut cat = ModelCatalogue::new(0.9);
+        cat.register_trained("lenet", 0.754, None);
+        assert!(!cat.validate("lenet").unwrap());
+        assert_eq!(cat.get("lenet").unwrap().state, ModelState::Trained);
+        // Publishing an unvalidated model must be rejected.
+        assert!(cat.publish("lenet").is_err());
+    }
+
+    #[test]
+    fn version_bumps_on_retrain() {
+        let mut cat = ModelCatalogue::new(0.5);
+        cat.register_trained("m", 0.8, None);
+        assert_eq!(cat.get("m").unwrap().version, 1);
+        cat.register_trained("m", 0.85, None);
+        assert_eq!(cat.get("m").unwrap().version, 2);
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut cat = ModelCatalogue::new(0.5);
+        cat.register_trained("m", 0.9, None);
+        assert!(cat.mark_deployed("m").is_err()); // Trained -> Deployed skips steps
+        assert!(cat.retire("m").is_err());
+        assert!(cat.flag_for_update("missing").is_err());
+    }
+
+    #[test]
+    fn update_cycle() {
+        let mut cat = ModelCatalogue::new(0.5);
+        cat.register_trained("m", 0.9, None);
+        cat.validate("m").unwrap();
+        cat.publish("m").unwrap();
+        cat.mark_deployed("m").unwrap();
+        cat.flag_for_update("m").unwrap();
+        cat.mark_deployed("m").unwrap(); // replaced in place
+        cat.set_optimal_cap("m", 0.6).unwrap();
+        assert_eq!(cat.get("m").unwrap().optimal_cap, Some(0.6));
+    }
+}

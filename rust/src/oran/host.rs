@@ -1,0 +1,319 @@
+//! An ML-enabled O-RAN inference host.
+//!
+//! One node of the deployment: a virtual testbed (GPU + CPU + DRAM with the
+//! power physics), the FROST microservice running beside the ML pipeline
+//! (paper Fig. 1), a local model store, and the KPM reporting upward.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{HardwareConfig, ProfilerConfig};
+use crate::frost::{EnergyPolicy, PowerProfiler, ProfileOutcome};
+use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
+use crate::util::Seconds;
+
+use super::bus::{Bus, Endpoint};
+use super::messages::{KpmReport, LifecycleEvent, OranMessage};
+
+/// The host node.
+pub struct InferenceHost {
+    pub name: String,
+    bus: Arc<Bus>,
+    endpoint: Arc<Endpoint>,
+    pub testbed: Testbed,
+    profiler_config: ProfilerConfig,
+    /// Active A1 policy (default until the SMO pushes one).
+    pub policy: EnergyPolicy,
+    /// Models deployed on this host (model → workload descriptor).
+    store: HashMap<String, WorkloadDescriptor>,
+    /// Batch size used for profiling/inference on this host.
+    pub batch: u32,
+    /// Running totals for KPM reporting.
+    pub total_energy_j: f64,
+    pub total_samples: u64,
+    /// Messages that could not be handled (unknown model, etc.).
+    pub errors: u64,
+    /// Profile outcomes kept for inspection.
+    pub profile_log: Vec<ProfileOutcome>,
+}
+
+impl InferenceHost {
+    pub fn new(bus: Arc<Bus>, name: &str, hw: HardwareConfig, seed: u64) -> Self {
+        let endpoint = bus.endpoint(name);
+        InferenceHost {
+            name: name.to_string(),
+            bus,
+            endpoint,
+            testbed: Testbed::new(hw, seed),
+            profiler_config: ProfilerConfig::default(),
+            policy: EnergyPolicy::default_policy(),
+            store: HashMap::new(),
+            batch: 128,
+            total_energy_j: 0.0,
+            total_samples: 0,
+            errors: 0,
+            profile_log: Vec::new(),
+        }
+    }
+
+    /// Deploy a model (from the catalogue) onto this host.
+    pub fn deploy(&mut self, model: &str, workload: WorkloadDescriptor, as_xapp: bool) {
+        self.store.insert(model.to_string(), workload);
+        self.bus.send(
+            &self.name,
+            "smo",
+            OranMessage::Lifecycle(LifecycleEvent::Deployed {
+                model: model.to_string(),
+                host: self.name.clone(),
+                as_xapp,
+            }),
+        );
+    }
+
+    pub fn deployed_models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.store.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Handle everything in the inbox (policies, profile requests).
+    pub fn step(&mut self) {
+        for (_from, msg) in self.endpoint.drain() {
+            match msg {
+                OranMessage::PolicyUpdate(p) => {
+                    self.policy = p;
+                    if !self.policy.enabled {
+                        self.testbed.set_cap_frac(1.0);
+                    }
+                }
+                OranMessage::PolicyDelete { .. } => {
+                    self.policy = EnergyPolicy::default_policy();
+                    self.testbed.set_cap_frac(1.0);
+                }
+                OranMessage::ProfileRequest { model, host } if host == self.name => {
+                    match self.store.get(&model).cloned() {
+                        Some(w) => {
+                            let out = self.run_profiler(&w);
+                            self.bus.send(
+                                &self.name,
+                                "smo",
+                                OranMessage::ProfileResult {
+                                    model: model.clone(),
+                                    host: self.name.clone(),
+                                    optimal_cap: out.optimal_cap,
+                                    est_energy_saving: out.est_energy_saving,
+                                    est_slowdown: out.est_slowdown,
+                                    profiling_energy_j: out.profiling_energy.0,
+                                },
+                            );
+                            self.profile_log.push(out);
+                        }
+                        None => self.errors += 1,
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn run_profiler(&mut self, w: &WorkloadDescriptor) -> ProfileOutcome {
+        let profiler =
+            PowerProfiler::with_policy(self.profiler_config.clone(), self.policy.clone());
+        let out = profiler.profile(&mut self.testbed, w, self.batch);
+        self.total_energy_j += out.profiling_energy.0;
+        out
+    }
+
+    /// Run `steps` inference batches of a deployed model; sends one KPM
+    /// report and returns (wall seconds, energy joules).
+    pub fn run_inference(&mut self, model: &str, steps: u64) -> Option<(f64, f64)> {
+        let w = self.store.get(model)?.clone();
+        let samples = self.testbed.infer_steps(&w, self.batch, steps);
+        let wall: f64 = samples.iter().map(|s| s.duration.0).sum();
+        let energy: f64 = samples.iter().map(|s| s.energy().0).sum();
+        let n = steps * self.batch as u64;
+        self.total_energy_j += energy;
+        self.total_samples += n;
+        let last = samples.last()?;
+        self.bus.send(
+            &self.name,
+            "smo",
+            OranMessage::Kpm(KpmReport {
+                host: self.name.clone(),
+                at: self.testbed.clock.now(),
+                model: Some(model.to_string()),
+                gpu_power_w: last.gpu_power.0,
+                cpu_power_w: last.cpu_power.0,
+                dram_power_w: last.dram_power.0,
+                gpu_util: last.gpu_util,
+                cap_frac: self.testbed.cap_frac(),
+                samples_processed: n,
+                energy_j: energy,
+            }),
+        );
+        Some((wall, energy))
+    }
+
+    /// Simulate training of a model for `epochs` over `n_samples` each;
+    /// reports lifecycle events and returns (accuracy, wall, energy).
+    pub fn run_training(
+        &mut self,
+        model: &str,
+        epochs: u32,
+        n_samples: u64,
+    ) -> Option<(f64, f64, f64)> {
+        let w = self.store.get(model)?.clone();
+        self.bus.send(
+            &self.name,
+            "smo",
+            OranMessage::Lifecycle(LifecycleEvent::TrainingStarted {
+                model: model.to_string(),
+                host: self.name.clone(),
+            }),
+        );
+        let mut wall = 0.0;
+        let mut energy = 0.0;
+        for _ in 0..epochs {
+            let agg = self.testbed.train_epoch(&w, self.batch, n_samples);
+            wall += agg.wall.0;
+            energy += agg.energy.0;
+        }
+        self.total_energy_j += energy;
+        // Accuracy: reference accuracy approached with an epoch-count ramp
+        // (training numerics are unaffected by capping, Sec. I).
+        let ramp = 1.0 - (-(epochs as f64) / 35.0).exp();
+        let accuracy = (w.reference_accuracy * (0.62 + 0.38 * ramp)).min(1.0);
+        self.bus.send(
+            &self.name,
+            "smo",
+            OranMessage::Lifecycle(LifecycleEvent::TrainingFinished {
+                model: model.to_string(),
+                host: self.name.clone(),
+                accuracy,
+                energy_j: energy,
+            }),
+        );
+        Some((accuracy, wall, energy))
+    }
+
+    /// Idle wait (keeps KPM timestamps honest in simulations).
+    pub fn idle(&mut self, window: Seconds) {
+        self.testbed.idle_window(window);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no1;
+    use crate::zoo::model_by_name;
+
+    fn host_with_model(model: &str) -> (Arc<Bus>, InferenceHost) {
+        let bus = Bus::new();
+        bus.endpoint("smo");
+        let mut h = InferenceHost::new(bus.clone(), "host1", setup_no1(), 7);
+        let w = model_by_name(model).unwrap().workload(&setup_no1().gpu);
+        h.deploy(model, w, true);
+        (bus, h)
+    }
+
+    #[test]
+    fn deploy_and_list() {
+        let (bus, h) = host_with_model("ResNet");
+        assert_eq!(h.deployed_models(), vec!["ResNet"]);
+        bus.deliver_all();
+        let smo = bus.endpoint("smo");
+        let msgs = smo.drain();
+        assert!(matches!(
+            msgs[0].1,
+            OranMessage::Lifecycle(LifecycleEvent::Deployed { .. })
+        ));
+    }
+
+    #[test]
+    fn profile_request_round_trip() {
+        let (bus, mut h) = host_with_model("ResNet");
+        bus.send("smo", "host1", OranMessage::ProfileRequest {
+            model: "ResNet".into(),
+            host: "host1".into(),
+        });
+        bus.deliver_all();
+        h.step();
+        bus.deliver_all();
+        let msgs = bus.endpoint("smo").drain();
+        let result = msgs.iter().find_map(|(_, m)| match m {
+            OranMessage::ProfileResult { optimal_cap, .. } => Some(*optimal_cap),
+            _ => None,
+        });
+        let cap = result.expect("profile result sent to SMO");
+        assert!(cap > 0.3 && cap <= 1.0);
+        // And the testbed now runs at the chosen cap.
+        assert!((h.testbed.cap_frac() - cap).abs() < 1e-9);
+        assert_eq!(h.profile_log.len(), 1);
+    }
+
+    #[test]
+    fn unknown_model_counts_error() {
+        let (bus, mut h) = host_with_model("ResNet");
+        bus.send("smo", "host1", OranMessage::ProfileRequest {
+            model: "ghost".into(),
+            host: "host1".into(),
+        });
+        bus.deliver_all();
+        h.step();
+        assert_eq!(h.errors, 1);
+    }
+
+    #[test]
+    fn policy_disable_resets_cap() {
+        let (bus, mut h) = host_with_model("ResNet");
+        h.testbed.set_cap_frac(0.5);
+        let mut p = EnergyPolicy::default_policy();
+        p.enabled = false;
+        bus.send("smo", "host1", OranMessage::PolicyUpdate(p));
+        bus.deliver_all();
+        h.step();
+        assert_eq!(h.testbed.cap_frac(), 1.0);
+    }
+
+    #[test]
+    fn inference_reports_kpm() {
+        let (bus, mut h) = host_with_model("ResNet");
+        bus.deliver_all();
+        bus.endpoint("smo").drain();
+        let (wall, energy) = h.run_inference("ResNet", 50).unwrap();
+        assert!(wall > 0.0 && energy > 0.0);
+        bus.deliver_all();
+        let msgs = bus.endpoint("smo").drain();
+        let kpm = msgs.iter().find_map(|(_, m)| match m {
+            OranMessage::Kpm(k) => Some(k.clone()),
+            _ => None,
+        });
+        let k = kpm.expect("KPM sent");
+        assert_eq!(k.samples_processed, 50 * 128);
+        assert!(k.gpu_power_w > 0.0);
+    }
+
+    #[test]
+    fn training_emits_lifecycle_events() {
+        let (bus, mut h) = host_with_model("ResNet");
+        let (acc, wall, energy) = h.run_training("ResNet", 10, 5_000).unwrap();
+        assert!(acc > 0.5 && acc < 1.0);
+        assert!(wall > 0.0 && energy > 0.0);
+        bus.deliver_all();
+        let msgs = bus.endpoint("smo").drain();
+        let kinds: Vec<&str> = msgs
+            .iter()
+            .filter_map(|(_, m)| match m {
+                OranMessage::Lifecycle(LifecycleEvent::TrainingStarted { .. }) => {
+                    Some("start")
+                }
+                OranMessage::Lifecycle(LifecycleEvent::TrainingFinished { .. }) => {
+                    Some("finish")
+                }
+                _ => None,
+            })
+            .collect();
+        assert!(kinds.contains(&"start") && kinds.contains(&"finish"));
+    }
+}

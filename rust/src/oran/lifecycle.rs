@@ -1,0 +1,250 @@
+//! The six-step O-RAN AI/ML lifecycle, end to end (paper Sec. II).
+//!
+//! *i)* data collection and processing, *ii)* training, *iii)* validation
+//! and publishing, *iv)* deployment, *v)* execution and inference, *vi)*
+//! continuous operation — orchestrated over the fabric across the SMO,
+//! the non-RT RIC and the inference hosts, with FROST profiling injected
+//! between training and deployment (the integration point of Fig. 1).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::HardwareConfig;
+use crate::frost::EnergyPolicy;
+use crate::simulator::WorkloadDescriptor;
+use crate::util::Seconds;
+
+use super::bus::Bus;
+use super::host::InferenceHost;
+use super::messages::{LifecycleEvent, OranMessage};
+use super::nearrt_ric::{NearRtRic, XApp};
+use super::nonrt_ric::NonRtRic;
+use super::smo::Smo;
+
+/// Where a model currently sits in the six-step workflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleStage {
+    DataCollection,
+    Training,
+    ValidationPublishing,
+    Deployment,
+    Inference,
+    ContinuousOperation,
+}
+
+/// The whole deployment under one orchestrator.
+pub struct MlLifecycle {
+    pub bus: Arc<Bus>,
+    pub smo: Smo,
+    pub nonrt: NonRtRic,
+    pub nearrt: NearRtRic,
+    pub hosts: Vec<InferenceHost>,
+}
+
+impl MlLifecycle {
+    /// Build a deployment with one host per hardware config.
+    pub fn new(hardware: Vec<HardwareConfig>, min_accuracy: f64, seed: u64) -> Self {
+        let bus = Bus::new();
+        let mut smo = Smo::new(bus.clone());
+        let nonrt = NonRtRic::new(bus.clone(), min_accuracy);
+        let hosts: Vec<InferenceHost> = hardware
+            .into_iter()
+            .enumerate()
+            .map(|(i, hw)| {
+                let name = format!("host{}", i + 1);
+                let h = InferenceHost::new(bus.clone(), &name, hw, seed + i as u64);
+                smo.enrol_host(&name);
+                h
+            })
+            .collect();
+        MlLifecycle { bus, smo, nonrt, nearrt: NearRtRic::new(), hosts }
+    }
+
+    /// Pump the fabric and step every stationary component.
+    pub fn pump(&mut self) -> Result<()> {
+        self.bus.deliver_all();
+        for h in &mut self.hosts {
+            h.step();
+        }
+        self.bus.deliver_all();
+        self.nonrt.step()?;
+        self.bus.deliver_all();
+        self.smo.step();
+        Ok(())
+    }
+
+    fn host_mut(&mut self, name: &str) -> Result<&mut InferenceHost> {
+        self.hosts
+            .iter_mut()
+            .find(|h| h.name == name)
+            .with_context(|| format!("no host '{name}'"))
+    }
+
+    /// Run the full six-step workflow for one model on one host.
+    ///
+    /// Returns the stage-by-stage log.  `epochs`/`n_samples` control the
+    /// (simulated) training; profiling runs between validation and
+    /// deployment so the deployed xApp starts life under the optimal cap.
+    pub fn run_workflow(
+        &mut self,
+        model: &str,
+        workload: WorkloadDescriptor,
+        host: &str,
+        policy: EnergyPolicy,
+        epochs: u32,
+        n_samples: u64,
+    ) -> Result<Vec<LifecycleStage>> {
+        let mut stages = Vec::new();
+
+        // SMO pushes the energy policy first (A1).
+        self.smo.push_policy(policy)?;
+        self.pump()?;
+
+        // i) data collection & processing.
+        self.bus.send(
+            "smo",
+            "nonrt-ric",
+            OranMessage::Lifecycle(LifecycleEvent::DataCollected {
+                dataset: "synthetic-cifar10".into(),
+                samples: n_samples,
+            }),
+        );
+        stages.push(LifecycleStage::DataCollection);
+        self.pump()?;
+
+        // ii) training (offline, on the designated host).
+        self.host_mut(host)?.deploy(model, workload, false);
+        self.pump()?;
+        self.host_mut(host)?
+            .run_training(model, epochs, n_samples)
+            .context("training failed")?;
+        stages.push(LifecycleStage::Training);
+        self.pump()?; // SMO ingests the trainer's lifecycle events…
+        // …and routes TrainingFinished onward to the non-RT RIC.
+        let events: Vec<_> = self
+            .smo
+            .lifecycle_log
+            .iter()
+            .filter(|e| matches!(e, LifecycleEvent::TrainingFinished { model: m, .. } if m == model))
+            .cloned()
+            .collect();
+        for ev in events {
+            self.bus.send("smo", "nonrt-ric", OranMessage::Lifecycle(ev));
+        }
+
+        // iii) validation + publishing at the non-RT RIC.
+        self.pump()?;
+        stages.push(LifecycleStage::ValidationPublishing);
+        let entry = self
+            .nonrt
+            .catalogue
+            .get(model)
+            .with_context(|| format!("model '{model}' missing from catalogue"))?;
+        anyhow::ensure!(
+            entry.state == super::catalogue::ModelState::Published,
+            "model '{model}' failed validation (accuracy {:.4})",
+            entry.validation_accuracy
+        );
+
+        // FROST profiling before deployment (paper Fig. 1 integration).
+        self.smo.request_profile(model, host);
+        self.pump()?;
+        let cap = self
+            .smo
+            .profile_records
+            .iter()
+            .rev()
+            .find(|r| r.model == model)
+            .map(|r| r.optimal_cap)
+            .context("no profile result")?;
+        self.nonrt.catalogue.set_optimal_cap(model, cap)?;
+
+        // iv) deployment as an xApp.
+        self.nearrt.deploy_xapp(XApp::new(
+            &format!("{model}-xapp"),
+            model,
+            host,
+            0.1,
+        ));
+        self.bus.send(
+            "smo",
+            "nonrt-ric",
+            OranMessage::Lifecycle(LifecycleEvent::Deployed {
+                model: model.to_string(),
+                host: host.to_string(),
+                as_xapp: true,
+            }),
+        );
+        stages.push(LifecycleStage::Deployment);
+        self.pump()?;
+
+        // v) execution & inference: run near-RT control rounds.
+        let t0 = {
+            let h = self.host_mut(host)?;
+            use crate::simulator::Clock;
+            h.testbed.clock.now()
+        };
+        for round in 0..20 {
+            let now = Seconds(t0.0 + round as f64 * 0.1);
+            let mut refs: Vec<&mut InferenceHost> = self.hosts.iter_mut().collect();
+            self.nearrt.step(now, refs.as_mut_slice());
+        }
+        stages.push(LifecycleStage::Inference);
+        self.pump()?;
+
+        // vi) continuous operation: monitoring stays on; report totals.
+        stages.push(LifecycleStage::ContinuousOperation);
+        Ok(stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{setup_no1, setup_no2};
+    use crate::zoo::model_by_name;
+
+    #[test]
+    fn full_workflow_reaches_continuous_operation() {
+        let mut lc = MlLifecycle::new(vec![setup_no1(), setup_no2()], 0.80, 11);
+        let w = model_by_name("ResNet").unwrap().workload(&setup_no1().gpu);
+        let stages = lc
+            .run_workflow("ResNet", w, "host1", EnergyPolicy::default_policy(), 60, 10_000)
+            .unwrap();
+        assert_eq!(stages.len(), 6);
+        assert_eq!(*stages.last().unwrap(), LifecycleStage::ContinuousOperation);
+        // FROST decision recorded in the catalogue and applied on the host.
+        let cap = lc.nonrt.catalogue.get("ResNet").unwrap().optimal_cap.unwrap();
+        assert!(cap > 0.3 && cap <= 1.0);
+        let host = lc.hosts.iter().find(|h| h.name == "host1").unwrap();
+        assert!((host.testbed.cap_frac() - cap).abs() < 1e-9);
+        // Inference ran and produced KPM telemetry.
+        assert!(lc.smo.kpms.iter().any(|k| k.samples_processed > 0));
+        assert!(lc.nearrt.xapps()[0].invocations > 0);
+    }
+
+    #[test]
+    fn weak_model_blocks_at_validation() {
+        let mut lc = MlLifecycle::new(vec![setup_no1()], 0.95, 3);
+        let w = model_by_name("LeNet").unwrap().workload(&setup_no1().gpu);
+        // LeNet's reference accuracy (~0.75) cannot reach a 0.95 threshold.
+        let err = lc
+            .run_workflow("LeNet", w, "host1", EnergyPolicy::default_policy(), 30, 5_000)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("failed validation"), "err: {err}");
+    }
+
+    #[test]
+    fn fabric_stats_cover_all_interfaces() {
+        let mut lc = MlLifecycle::new(vec![setup_no1()], 0.80, 5);
+        let w = model_by_name("MobileNet").unwrap().workload(&setup_no1().gpu);
+        lc.run_workflow("MobileNet", w, "host1", EnergyPolicy::default_policy(), 40, 5_000)
+            .unwrap();
+        let stats = lc.bus.stats();
+        assert!(stats.get("A1").copied().unwrap_or(0) >= 1, "A1 missing: {stats:?}");
+        assert!(stats.get("O1").copied().unwrap_or(0) >= 3, "O1 missing: {stats:?}");
+        assert!(stats.get("O2").copied().unwrap_or(0) >= 2, "O2 missing: {stats:?}");
+    }
+}

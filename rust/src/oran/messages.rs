@@ -1,0 +1,104 @@
+//! Typed messages crossing the O-RAN interfaces.
+//!
+//! The real interfaces are A1 (policy), O1 (management), E2 (near-RT
+//! control) — we model the payloads FROST's workflow needs, each tagged
+//! with the interface it would ride on.
+
+use crate::frost::EnergyPolicy;
+use crate::util::Seconds;
+
+/// Key Performance Measurement report (E2/O1): what an inference host
+/// periodically reports upward to the SMO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KpmReport {
+    pub host: String,
+    pub at: Seconds,
+    pub model: Option<String>,
+    pub gpu_power_w: f64,
+    pub cpu_power_w: f64,
+    pub dram_power_w: f64,
+    pub gpu_util: f64,
+    pub cap_frac: f64,
+    pub samples_processed: u64,
+    pub energy_j: f64,
+}
+
+/// Events of the AI/ML lifecycle (paper Sec. II-B).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LifecycleEvent {
+    DataCollected { dataset: String, samples: u64 },
+    TrainingStarted { model: String, host: String },
+    TrainingFinished { model: String, host: String, accuracy: f64, energy_j: f64 },
+    Validated { model: String, accuracy: f64, passed: bool },
+    Published { model: String, version: u32 },
+    Deployed { model: String, host: String, as_xapp: bool },
+    InferenceReport { model: String, host: String, samples: u64, latency_s: f64 },
+    FlaggedForRetraining { model: String, reason: String },
+    Retired { model: String },
+}
+
+/// Everything that travels on the bus.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OranMessage {
+    /// A1: SMO → RICs/hosts policy push.
+    PolicyUpdate(EnergyPolicy),
+    /// A1: policy deletion.
+    PolicyDelete { id: String },
+    /// O1/E2: telemetry upward.
+    Kpm(KpmReport),
+    /// Lifecycle event (rApp orchestration).
+    Lifecycle(LifecycleEvent),
+    /// SMO command: profile a model on a host and apply the result.
+    ProfileRequest { model: String, host: String },
+    /// FROST microservice response.
+    ProfileResult {
+        model: String,
+        host: String,
+        optimal_cap: f64,
+        est_energy_saving: f64,
+        est_slowdown: f64,
+        profiling_energy_j: f64,
+    },
+}
+
+impl OranMessage {
+    /// The O-RAN interface this message would ride on — used for routing
+    /// assertions and fabric statistics.
+    pub fn interface(&self) -> &'static str {
+        match self {
+            OranMessage::PolicyUpdate(_) | OranMessage::PolicyDelete { .. } => "A1",
+            OranMessage::Kpm(_) => "O1",
+            OranMessage::Lifecycle(_) => "O1",
+            OranMessage::ProfileRequest { .. } | OranMessage::ProfileResult { .. } => "O2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interfaces_assigned() {
+        let p = OranMessage::PolicyUpdate(EnergyPolicy::default_policy());
+        assert_eq!(p.interface(), "A1");
+        let k = OranMessage::Kpm(KpmReport {
+            host: "h1".into(),
+            at: Seconds(0.0),
+            model: None,
+            gpu_power_w: 0.0,
+            cpu_power_w: 0.0,
+            dram_power_w: 0.0,
+            gpu_util: 0.0,
+            cap_frac: 1.0,
+            samples_processed: 0,
+            energy_j: 0.0,
+        });
+        assert_eq!(k.interface(), "O1");
+        assert_eq!(
+            OranMessage::ProfileRequest { model: "m".into(), host: "h".into() }
+                .interface(),
+            "O2"
+        );
+    }
+}

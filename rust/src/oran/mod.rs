@@ -1,0 +1,36 @@
+//! The O-RAN fabric FROST deploys into (paper Sec. II, Fig. 1).
+//!
+//! A single-process, deterministic simulation of the pieces the paper's
+//! architecture diagram names:
+//!
+//! * [`bus`] — the message fabric standing in for the O1/A1/E2 interfaces;
+//! * [`messages`] — typed interface messages (KPM reports, policy pushes,
+//!   lifecycle events);
+//! * [`a1`] — the A1 Policy Management Service (energy policies);
+//! * [`catalogue`] — the AI/ML model catalogue (validated/published models);
+//! * [`smo`] — Service Management & Orchestration: closed-loop control;
+//! * [`nonrt_ric`] — non-RT RIC hosting rApps (training, FROST profiling);
+//! * [`nearrt_ric`] — near-RT RIC hosting xApps (online inference);
+//! * [`host`] — an ML-enabled inference host: virtual testbed + FROST
+//!   microservice;
+//! * [`lifecycle`] — the six-step AI/ML workflow the O-RAN spec defines.
+
+pub mod a1;
+pub mod bus;
+pub mod catalogue;
+pub mod host;
+pub mod lifecycle;
+pub mod messages;
+pub mod nearrt_ric;
+pub mod nonrt_ric;
+pub mod smo;
+
+pub use a1::A1PolicyService;
+pub use bus::{Bus, Endpoint};
+pub use catalogue::{CatalogueEntry, ModelCatalogue, ModelState};
+pub use host::InferenceHost;
+pub use lifecycle::{LifecycleStage, MlLifecycle};
+pub use messages::OranMessage;
+pub use nearrt_ric::{NearRtRic, XApp};
+pub use nonrt_ric::{NonRtRic, RApp};
+pub use smo::Smo;

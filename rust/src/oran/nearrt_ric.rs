@@ -1,0 +1,145 @@
+//! The near-Real-Time RIC: xApps with 10 ms – 1 s control loops.
+//!
+//! Trained models deployed as xApps perform online inference for
+//! network-related control (paper Sec. II-A).  The RIC enforces the
+//! periodicity envelope and schedules due xApps against their hosts.
+
+use crate::util::Seconds;
+
+use super::host::InferenceHost;
+
+/// O-RAN near-RT control-loop periodicity bounds.
+pub const MIN_PERIOD_S: f64 = 0.010;
+pub const MAX_PERIOD_S: f64 = 1.0;
+
+/// A deployed inference microservice.
+#[derive(Debug, Clone)]
+pub struct XApp {
+    pub name: String,
+    pub model: String,
+    pub host: String,
+    pub period: Seconds,
+    next_due: f64,
+    pub invocations: u64,
+    /// Inference batches per invocation.
+    pub steps_per_invocation: u64,
+}
+
+impl XApp {
+    /// Create an xApp; the period is clamped into the near-RT envelope.
+    pub fn new(name: &str, model: &str, host: &str, period_s: f64) -> Self {
+        XApp {
+            name: name.to_string(),
+            model: model.to_string(),
+            host: host.to_string(),
+            period: Seconds(period_s.clamp(MIN_PERIOD_S, MAX_PERIOD_S)),
+            next_due: 0.0,
+            invocations: 0,
+            steps_per_invocation: 1,
+        }
+    }
+}
+
+/// The near-RT RIC node.
+#[derive(Debug, Default)]
+pub struct NearRtRic {
+    xapps: Vec<XApp>,
+    /// Control-loop conflicts detected (two xApps steering the same host
+    /// in one round) — the RIC's conflict-mitigation duty.
+    pub conflicts: u64,
+}
+
+impl NearRtRic {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn deploy_xapp(&mut self, xapp: XApp) {
+        self.xapps.push(xapp);
+    }
+
+    pub fn xapps(&self) -> &[XApp] {
+        &self.xapps
+    }
+
+    /// Run one scheduling round at time `now`: every due xApp performs its
+    /// inference on its host.  Returns the number of invocations.
+    pub fn step(&mut self, now: Seconds, hosts: &mut [&mut InferenceHost]) -> usize {
+        let mut ran = 0;
+        let mut touched: Vec<&str> = Vec::new();
+        for xapp in &mut self.xapps {
+            if now.0 + 1e-12 < xapp.next_due {
+                continue;
+            }
+            if let Some(host) = hosts.iter_mut().find(|h| h.name == xapp.host) {
+                if touched.contains(&xapp.host.as_str()) {
+                    self.conflicts += 1;
+                }
+                let _ = host.run_inference(&xapp.model, xapp.steps_per_invocation);
+                touched.push(xapp.host.as_str());
+                xapp.invocations += 1;
+                xapp.next_due = now.0 + xapp.period.0;
+                ran += 1;
+            }
+        }
+        ran
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no1;
+    use crate::oran::bus::Bus;
+    use crate::zoo::model_by_name;
+
+    fn host(bus: &std::sync::Arc<Bus>) -> InferenceHost {
+        bus.endpoint("smo");
+        let mut h = InferenceHost::new(bus.clone(), "h1", setup_no1(), 3);
+        let w = model_by_name("MobileNet").unwrap().workload(&setup_no1().gpu);
+        h.deploy("MobileNet", w, true);
+        h
+    }
+
+    #[test]
+    fn period_clamped_to_nearrt_envelope() {
+        let x = XApp::new("x", "m", "h", 0.001);
+        assert_eq!(x.period, Seconds(MIN_PERIOD_S));
+        let x = XApp::new("x", "m", "h", 10.0);
+        assert_eq!(x.period, Seconds(MAX_PERIOD_S));
+    }
+
+    #[test]
+    fn due_xapps_invoke_inference() {
+        let bus = Bus::new();
+        let mut h = host(&bus);
+        let mut ric = NearRtRic::new();
+        ric.deploy_xapp(XApp::new("traffic-steer", "MobileNet", "h1", 0.1));
+        assert_eq!(ric.step(Seconds(0.0), &mut [&mut h]), 1);
+        // Not due again until +0.1 s.
+        assert_eq!(ric.step(Seconds(0.05), &mut [&mut h]), 0);
+        assert_eq!(ric.step(Seconds(0.11), &mut [&mut h]), 1);
+        assert_eq!(ric.xapps()[0].invocations, 2);
+        assert!(h.total_samples > 0);
+    }
+
+    #[test]
+    fn conflict_detection_same_host() {
+        let bus = Bus::new();
+        let mut h = host(&bus);
+        let mut ric = NearRtRic::new();
+        ric.deploy_xapp(XApp::new("a", "MobileNet", "h1", 0.1));
+        ric.deploy_xapp(XApp::new("b", "MobileNet", "h1", 0.1));
+        ric.step(Seconds(0.0), &mut [&mut h]);
+        assert_eq!(ric.conflicts, 1);
+    }
+
+    #[test]
+    fn unknown_host_skipped() {
+        let bus = Bus::new();
+        let mut h = host(&bus);
+        let mut ric = NearRtRic::new();
+        ric.deploy_xapp(XApp::new("x", "MobileNet", "ghost", 0.1));
+        assert_eq!(ric.step(Seconds(0.0), &mut [&mut h]), 0);
+    }
+}

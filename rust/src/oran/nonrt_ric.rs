@@ -1,0 +1,213 @@
+//! The non-Real-Time RIC: rApps + the AI/ML training workflow.
+//!
+//! Operates at > 1 s time scales (paper Sec. II-A).  Owns the model
+//! catalogue: training results arrive as lifecycle events, validation runs
+//! against the held-out set, passing models are published (Sec. II-B).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::bus::{Bus, Endpoint};
+use super::catalogue::{ModelCatalogue, ModelState};
+use super::messages::{LifecycleEvent, OranMessage};
+
+/// A microservice hosted by the non-RT RIC.
+pub trait RApp: Send {
+    fn name(&self) -> &str;
+    /// Called once per orchestration round with the RIC context.
+    fn step(&mut self, ric: &mut RicContext);
+}
+
+/// What an rApp may touch during a step.
+pub struct RicContext<'a> {
+    pub catalogue: &'a mut ModelCatalogue,
+    pub outbox: Vec<(String, OranMessage)>,
+}
+
+/// The non-RT RIC node.
+pub struct NonRtRic {
+    bus: Arc<Bus>,
+    endpoint: Arc<Endpoint>,
+    pub name: String,
+    pub catalogue: ModelCatalogue,
+    rapps: Vec<Box<dyn RApp>>,
+}
+
+impl NonRtRic {
+    pub fn new(bus: Arc<Bus>, min_accuracy: f64) -> Self {
+        let endpoint = bus.endpoint("nonrt-ric");
+        NonRtRic {
+            bus,
+            endpoint,
+            name: "nonrt-ric".into(),
+            catalogue: ModelCatalogue::new(min_accuracy),
+            rapps: Vec::new(),
+        }
+    }
+
+    pub fn add_rapp(&mut self, rapp: Box<dyn RApp>) {
+        self.rapps.push(rapp);
+    }
+
+    /// Process inbox (training events) and run every rApp once.
+    pub fn step(&mut self) -> Result<()> {
+        for (_from, msg) in self.endpoint.drain() {
+            if let OranMessage::Lifecycle(ev) = msg {
+                self.handle_lifecycle(ev)?;
+            }
+        }
+        let mut ctx = RicContext { catalogue: &mut self.catalogue, outbox: Vec::new() };
+        for rapp in &mut self.rapps {
+            rapp.step(&mut ctx);
+        }
+        for (to, msg) in ctx.outbox {
+            self.bus.send(&self.name, &to, msg);
+        }
+        Ok(())
+    }
+
+    fn handle_lifecycle(&mut self, ev: LifecycleEvent) -> Result<()> {
+        match ev {
+            LifecycleEvent::TrainingFinished { model, accuracy, .. } => {
+                self.catalogue.register_trained(&model, accuracy, None);
+                // Validate immediately (Sec. II-B: "validated at the
+                // Non-RT-RIC, typically using a validation test dataset").
+                let passed = self.catalogue.validate(&model)?;
+                let event = LifecycleEvent::Validated { model: model.clone(), accuracy, passed };
+                self.bus.send(&self.name, "smo", OranMessage::Lifecycle(event));
+                if passed {
+                    self.catalogue.publish(&model)?;
+                    let version = self.catalogue.get(&model).map(|e| e.version).unwrap_or(1);
+                    self.bus.send(
+                        &self.name,
+                        "smo",
+                        OranMessage::Lifecycle(LifecycleEvent::Published { model, version }),
+                    );
+                } else {
+                    self.bus.send(
+                        &self.name,
+                        "smo",
+                        OranMessage::Lifecycle(LifecycleEvent::FlaggedForRetraining {
+                            model,
+                            reason: format!("accuracy {accuracy:.4} below threshold"),
+                        }),
+                    );
+                }
+            }
+            LifecycleEvent::Deployed { model, .. } => {
+                // Catalogue may or may not know the model (hosts can deploy
+                // from elsewhere); update when it does and the transition is
+                // legal.
+                if self
+                    .catalogue
+                    .get(&model)
+                    .map(|e| e.state == ModelState::Published)
+                    .unwrap_or(false)
+                {
+                    self.catalogue.mark_deployed(&model)?;
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn training_finished(model: &str, acc: f64) -> OranMessage {
+        OranMessage::Lifecycle(LifecycleEvent::TrainingFinished {
+            model: model.into(),
+            host: "h1".into(),
+            accuracy: acc,
+            energy_j: 1000.0,
+        })
+    }
+
+    #[test]
+    fn good_model_validated_and_published() {
+        let bus = Bus::new();
+        bus.endpoint("smo");
+        let mut ric = NonRtRic::new(bus.clone(), 0.9);
+        bus.send("h1", "nonrt-ric", training_finished("resnet", 0.95));
+        bus.deliver_all();
+        ric.step().unwrap();
+        assert_eq!(ric.catalogue.get("resnet").unwrap().state, ModelState::Published);
+        bus.deliver_all();
+        let msgs = bus.endpoint("smo").drain();
+        assert!(msgs.iter().any(|(_, m)| matches!(
+            m,
+            OranMessage::Lifecycle(LifecycleEvent::Published { .. })
+        )));
+    }
+
+    #[test]
+    fn weak_model_flagged_for_retraining() {
+        let bus = Bus::new();
+        bus.endpoint("smo");
+        let mut ric = NonRtRic::new(bus.clone(), 0.9);
+        bus.send("h1", "nonrt-ric", training_finished("lenet", 0.75));
+        bus.deliver_all();
+        ric.step().unwrap();
+        assert_eq!(ric.catalogue.get("lenet").unwrap().state, ModelState::Trained);
+        bus.deliver_all();
+        let msgs = bus.endpoint("smo").drain();
+        assert!(msgs.iter().any(|(_, m)| matches!(
+            m,
+            OranMessage::Lifecycle(LifecycleEvent::FlaggedForRetraining { .. })
+        )));
+    }
+
+    #[test]
+    fn rapps_run_and_can_send() {
+        struct Ping(u32);
+        impl RApp for Ping {
+            fn name(&self) -> &str {
+                "ping"
+            }
+            fn step(&mut self, ric: &mut RicContext) {
+                self.0 += 1;
+                ric.outbox.push((
+                    "smo".to_string(),
+                    OranMessage::Lifecycle(LifecycleEvent::DataCollected {
+                        dataset: "cifar".into(),
+                        samples: 50_000,
+                    }),
+                ));
+            }
+        }
+        let bus = Bus::new();
+        bus.endpoint("smo");
+        let mut ric = NonRtRic::new(bus.clone(), 0.9);
+        ric.add_rapp(Box::new(Ping(0)));
+        ric.step().unwrap();
+        ric.step().unwrap();
+        bus.deliver_all();
+        assert_eq!(bus.endpoint("smo").drain().len(), 2);
+    }
+
+    #[test]
+    fn deployment_updates_catalogue() {
+        let bus = Bus::new();
+        bus.endpoint("smo");
+        let mut ric = NonRtRic::new(bus.clone(), 0.5);
+        bus.send("h1", "nonrt-ric", training_finished("m", 0.9));
+        bus.deliver_all();
+        ric.step().unwrap();
+        bus.send(
+            "h1",
+            "nonrt-ric",
+            OranMessage::Lifecycle(LifecycleEvent::Deployed {
+                model: "m".into(),
+                host: "h1".into(),
+                as_xapp: true,
+            }),
+        );
+        bus.deliver_all();
+        ric.step().unwrap();
+        assert_eq!(ric.catalogue.get("m").unwrap().state, ModelState::Deployed);
+    }
+}

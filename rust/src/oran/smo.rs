@@ -1,0 +1,169 @@
+//! Service Management and Orchestration (SMO).
+//!
+//! The top of the closed loop: owns the A1 policy service, aggregates KPM
+//! telemetry from every host, tracks FROST's profiling decisions, and can
+//! flag models for replacement (paper Sec. II-B).
+
+use std::sync::Arc;
+
+use crate::frost::EnergyPolicy;
+
+use super::a1::A1PolicyService;
+use super::bus::{Bus, Endpoint};
+use super::messages::{KpmReport, LifecycleEvent, OranMessage};
+
+/// A recorded FROST decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileRecord {
+    pub model: String,
+    pub host: String,
+    pub optimal_cap: f64,
+    pub est_energy_saving: f64,
+    pub est_slowdown: f64,
+    pub profiling_energy_j: f64,
+}
+
+/// The SMO node.
+pub struct Smo {
+    bus: Arc<Bus>,
+    endpoint: Arc<Endpoint>,
+    pub name: String,
+    pub a1: A1PolicyService,
+    pub kpms: Vec<KpmReport>,
+    pub profile_records: Vec<ProfileRecord>,
+    pub lifecycle_log: Vec<LifecycleEvent>,
+}
+
+impl Smo {
+    pub fn new(bus: Arc<Bus>) -> Self {
+        let endpoint = bus.endpoint("smo");
+        let a1 = A1PolicyService::new(bus.clone(), "a1");
+        Smo {
+            bus,
+            endpoint,
+            name: "smo".into(),
+            a1,
+            kpms: Vec::new(),
+            profile_records: Vec::new(),
+            lifecycle_log: Vec::new(),
+        }
+    }
+
+    /// Push an energy policy to all subscribed hosts via A1.
+    pub fn push_policy(&mut self, policy: EnergyPolicy) -> anyhow::Result<()> {
+        self.a1.put_policy(policy)
+    }
+
+    /// Enrol a host: subscribe it to A1 policies.
+    pub fn enrol_host(&mut self, host: &str) {
+        self.a1.subscribe(host);
+    }
+
+    /// Ask FROST on `host` to profile `model` and apply the result.
+    pub fn request_profile(&self, model: &str, host: &str) {
+        self.bus.send(
+            &self.name,
+            host,
+            OranMessage::ProfileRequest { model: model.to_string(), host: host.to_string() },
+        );
+    }
+
+    /// Drain the inbox, recording telemetry and decisions.
+    pub fn step(&mut self) {
+        for (_from, msg) in self.endpoint.drain() {
+            match msg {
+                OranMessage::Kpm(k) => self.kpms.push(k),
+                OranMessage::ProfileResult {
+                    model,
+                    host,
+                    optimal_cap,
+                    est_energy_saving,
+                    est_slowdown,
+                    profiling_energy_j,
+                } => self.profile_records.push(ProfileRecord {
+                    model,
+                    host,
+                    optimal_cap,
+                    est_energy_saving,
+                    est_slowdown,
+                    profiling_energy_j,
+                }),
+                OranMessage::Lifecycle(ev) => self.lifecycle_log.push(ev),
+                _ => {}
+            }
+        }
+    }
+
+    /// Total energy reported by all hosts so far (J).
+    pub fn total_reported_energy(&self) -> f64 {
+        self.kpms.iter().map(|k| k.energy_j).sum()
+    }
+
+    /// Mean energy saving across the FROST decisions recorded so far.
+    pub fn mean_energy_saving(&self) -> f64 {
+        if self.profile_records.is_empty() {
+            return 0.0;
+        }
+        self.profile_records.iter().map(|r| r.est_energy_saving).sum::<f64>()
+            / self.profile_records.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_profile_results_and_kpm() {
+        let bus = Bus::new();
+        let mut smo = Smo::new(bus.clone());
+        bus.send("h1", "smo", OranMessage::ProfileResult {
+            model: "m".into(),
+            host: "h1".into(),
+            optimal_cap: 0.6,
+            est_energy_saving: 0.25,
+            est_slowdown: 1.06,
+            profiling_energy_j: 50_000.0,
+        });
+        bus.send("h1", "smo", OranMessage::Kpm(KpmReport {
+            host: "h1".into(),
+            at: crate::util::Seconds(1.0),
+            model: Some("m".into()),
+            gpu_power_w: 200.0,
+            cpu_power_w: 50.0,
+            dram_power_w: 24.0,
+            gpu_util: 0.9,
+            cap_frac: 0.6,
+            samples_processed: 1000,
+            energy_j: 123.0,
+        }));
+        bus.deliver_all();
+        smo.step();
+        assert_eq!(smo.profile_records.len(), 1);
+        assert_eq!(smo.kpms.len(), 1);
+        assert!((smo.total_reported_energy() - 123.0).abs() < 1e-12);
+        assert!((smo.mean_energy_saving() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn enrolled_hosts_get_policies() {
+        let bus = Bus::new();
+        let h1 = bus.endpoint("h1");
+        let mut smo = Smo::new(bus.clone());
+        smo.enrol_host("h1");
+        smo.push_policy(EnergyPolicy::default_policy()).unwrap();
+        bus.deliver_all();
+        assert_eq!(h1.drain().len(), 1);
+    }
+
+    #[test]
+    fn profile_request_routed() {
+        let bus = Bus::new();
+        let h1 = bus.endpoint("h1");
+        let smo = Smo::new(bus.clone());
+        smo.request_profile("ResNet", "h1");
+        bus.deliver_all();
+        let msgs = h1.drain();
+        assert!(matches!(msgs[0].1, OranMessage::ProfileRequest { .. }));
+    }
+}

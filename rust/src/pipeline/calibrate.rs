@@ -1,0 +1,126 @@
+//! Workload calibration for the four trainable models.
+//!
+//! The zoo's simulated entries use published architecture characteristics;
+//! the *trainable* minis instead derive their descriptors from ground truth
+//! available in this repo:
+//!
+//! * FLOPs — from the AOT manifest (XLA cost analysis of the lowered HLO);
+//! * HBM bytes — from the manifest's analytic per-layer costs;
+//! * host overhead & efficiency class — from the architecture kind;
+//! * optionally, measured PJRT step times refine `kernel_efficiency` so the
+//!   virtual testbed's step time matches what this machine actually runs
+//!   (recorded in EXPERIMENTS.md).
+
+use anyhow::{Context, Result};
+
+use crate::config::GpuSpec;
+use crate::simulator::WorkloadDescriptor;
+use crate::zoo::ManifestModel;
+
+/// Backward pass ≈ 2× forward traffic on top of forward.
+const TRAIN_BYTES_FACTOR: f64 = 3.0;
+
+/// Build a calibrated descriptor for a trainable manifest model.
+///
+/// `measured_step_s`: mean wall time of one training batch measured through
+/// PJRT on this machine, if available.  When given, it scales the virtual
+/// GPU's `kernel_efficiency` so that simulated uncapped step time on the
+/// paper's hardware keeps the same *relative* cost across the four minis.
+pub fn calibrated_workload(
+    model: &ManifestModel,
+    reference_gpu: &GpuSpec,
+    measured_step_s: Option<f64>,
+) -> Result<WorkloadDescriptor> {
+    let batch = model.train.batch.context("train batch missing")? as f64;
+    let train_flops_per_sample =
+        model.train_flops_per_sample().context("manifest missing FLOPs")?;
+    let fwd_bytes =
+        model.fwd_bytes_per_sample().context("manifest missing layer costs")?;
+    let train_bytes_per_sample = fwd_bytes * TRAIN_BYTES_FACTOR;
+
+    // Architecture class defaults (mirrors zoo/models.rs reasoning).
+    let (mut eff, host_ms, cpu_util, ref_acc) = match model.name.as_str() {
+        "lenet" => (0.04, 15.0, 0.55, 0.754),
+        "mobilenet_mini" => (0.15, 2.4, 0.38, 0.9262),
+        "resnet_mini" => (0.40, 1.4, 0.28, 0.9550),
+        "simpledla" => (0.38, 1.6, 0.30, 0.9389),
+        other => {
+            anyhow::bail!("unknown trainable model '{other}'")
+        }
+    };
+
+    if let Some(measured) = measured_step_s {
+        // Effective achieved FLOP/s on this CPU through the whole stack:
+        let achieved = train_flops_per_sample * batch / measured;
+        // Keep the *relative* efficiency of this model vs the CPU roofline
+        // (measured here ≈ tens of GFLOP/s) mapped onto the paper GPU's
+        // class default: blend 50/50 so measurements matter but the virtual
+        // testbed stays in the paper's regime.
+        let cpu_roofline = 9.0e10; // ~90 GFLOP/s: this image's jnp matmul peak
+        let rel = (achieved / cpu_roofline).clamp(0.05, 1.0);
+        eff = (0.5 * eff + 0.5 * eff * rel / 0.35).clamp(0.02, 0.9);
+    }
+
+    let w = WorkloadDescriptor {
+        name: model.name.clone(),
+        train_flops_per_sample,
+        infer_flops_per_sample: train_flops_per_sample / 3.0,
+        train_bytes_per_sample,
+        infer_bytes_per_sample: fwd_bytes,
+        host_s_per_batch: host_ms / 1e3,
+        kernel_efficiency: eff,
+        cpu_util,
+        params: model.param_count,
+        reference_accuracy: ref_acc,
+    };
+    w.validate()?;
+    let _ = reference_gpu;
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no1;
+    use crate::zoo::Manifest;
+
+    #[test]
+    fn calibrates_all_manifest_models() {
+        let Ok(m) = Manifest::load_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for model in &m.models {
+            let w = calibrated_workload(model, &setup_no1().gpu, None)
+                .unwrap_or_else(|e| panic!("{}: {e}", model.name));
+            assert!(w.train_flops_per_sample > 1e5, "{}", model.name);
+            assert!(w.train_bytes_per_sample > 1e3, "{}", model.name);
+            assert!(w.train_intensity() > 0.1, "{}", model.name);
+        }
+    }
+
+    #[test]
+    fn measured_step_time_shifts_efficiency() {
+        let Ok(m) = Manifest::load_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = m.model("resnet_mini").unwrap();
+        let base = calibrated_workload(model, &setup_no1().gpu, None).unwrap();
+        let slow = calibrated_workload(model, &setup_no1().gpu, Some(10.0)).unwrap();
+        let fast = calibrated_workload(model, &setup_no1().gpu, Some(0.05)).unwrap();
+        assert!(slow.kernel_efficiency < base.kernel_efficiency);
+        assert!(fast.kernel_efficiency >= slow.kernel_efficiency);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let Ok(m) = Manifest::load_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut model = m.models[0].clone();
+        model.name = "alexnet".into();
+        assert!(calibrated_workload(&model, &setup_no1().gpu, None).is_err());
+    }
+}

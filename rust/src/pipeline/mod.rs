@@ -1,0 +1,16 @@
+//! The ML pipeline driver: ties real PJRT compute to the power substrate.
+//!
+//! * [`calibrate`] — build a simulator workload descriptor for a trainable
+//!   model from its AOT manifest costs + measured step times;
+//! * [`overhead`] — the Fig. 3 experiment: real inference with measurement
+//!   tools attached inline, timing each tool's drag on the hot path;
+//! * [`account`] — hybrid energy accounting for real runs (real wall time &
+//!   loss, virtual-testbed power), per Eqs. 1–5.
+
+pub mod account;
+pub mod calibrate;
+pub mod overhead;
+
+pub use account::HybridAccountant;
+pub use calibrate::calibrated_workload;
+pub use overhead::{run_overhead_experiment, OverheadResult};

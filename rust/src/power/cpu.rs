@@ -1,0 +1,71 @@
+//! CPU package power model (the RAPL PKG domain source).
+//!
+//! The ML pipeline loads the CPU with data loading, host-side orchestration
+//! and the PJRT dispatch path.  Package power is modelled as
+//! `P = idle + (TDP − idle) · util^γ` with γ slightly above 1 (frequency
+//! scaling makes high utilisation disproportionately expensive on consumer
+//! parts with aggressive turbo, like both paper setups).
+
+use crate::config::CpuSpec;
+use crate::util::Watts;
+
+#[derive(Debug, Clone)]
+pub struct CpuPowerModel {
+    pub spec: CpuSpec,
+    gamma: f64,
+}
+
+impl CpuPowerModel {
+    pub fn new(spec: CpuSpec) -> Self {
+        CpuPowerModel { spec, gamma: 1.15 }
+    }
+
+    /// Package power at a given utilisation in [0, 1].
+    pub fn power_at(&self, util: f64) -> Watts {
+        let u = util.clamp(0.0, 1.0);
+        Watts(self.spec.idle_w + (self.spec.tdp_w - self.spec.idle_w) * u.powf(self.gamma))
+    }
+
+    pub fn idle_power(&self) -> Watts {
+        Watts(self.spec.idle_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no1;
+
+    fn model() -> CpuPowerModel {
+        CpuPowerModel::new(setup_no1().cpu)
+    }
+
+    #[test]
+    fn endpoints() {
+        let m = model();
+        assert_eq!(m.power_at(0.0).0, m.spec.idle_w);
+        assert!((m.power_at(1.0).0 - m.spec.tdp_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_and_clamped() {
+        let m = model();
+        let mut last = 0.0;
+        for i in 0..=20 {
+            let p = m.power_at(i as f64 / 20.0).0;
+            assert!(p >= last);
+            last = p;
+        }
+        assert_eq!(m.power_at(-1.0).0, m.spec.idle_w);
+        assert!((m.power_at(2.0).0 - m.spec.tdp_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn convexity_gamma_above_one() {
+        // util 0.5 should cost less than half of the dynamic range.
+        let m = model();
+        let half = m.power_at(0.5).0 - m.spec.idle_w;
+        let full = m.power_at(1.0).0 - m.spec.idle_w;
+        assert!(half < 0.5 * full);
+    }
+}

@@ -1,0 +1,264 @@
+//! GPU power & power-capping model.
+//!
+//! Total draw at a core frequency `f` with issue activity `a ∈ [0, 1]`:
+//!
+//! ```text
+//! P(f, a) = P_idle + P_leak·(V(f)/V_max) + C_dyn·V(f)²·f·a
+//! ```
+//!
+//! calibrated so that `P(f_max, 1) = TDP`.  The driver's power-capping loop
+//! is modelled by inverting this relation: given a cap `κ·TDP` and the
+//! workload's activity, find the highest stable frequency whose predicted
+//! power stays under the cap (bisection; P is monotone in f).
+//!
+//! Two second-order effects the paper observes are included:
+//!
+//! * **boost excursions** — "hardware boosts can force a device to operate
+//!   momentarily over the limits" (Sec. III-C): the telemetry layer samples
+//!   short over-cap spikes around phase changes.
+//! * **low-cap instability** — "aggressively low limits can create
+//!   instability in the GPU's circuitry" (Sec. IV-C): once the cap forces
+//!   the clock against the `f_min`/`v_min` wall the capping loop dithers,
+//!   wasting cycles; we charge a throughput penalty that grows as the
+//!   requested cap sinks below the lowest honourable power.
+
+use crate::config::GpuSpec;
+use crate::util::Watts;
+
+use super::vf::VfCurve;
+
+/// Steady-state operating point chosen by the capping loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuOperatingPoint {
+    /// Core clock the driver settles at (MHz).
+    pub freq_mhz: f64,
+    /// Core voltage at that clock (V).
+    pub voltage: f64,
+    /// Predicted average power draw (W).
+    pub power: Watts,
+    /// Throughput derating from capping-loop dither in the instability
+    /// region (1.0 = none; 1.3 = steps take 30% longer than 1/f predicts).
+    pub dither_penalty: f64,
+    /// True when the cap could not be honoured even at `f_min`.
+    pub saturated_low: bool,
+}
+
+/// Physics-based replacement for an NVML-capped GPU.
+#[derive(Debug, Clone)]
+pub struct GpuPowerModel {
+    pub spec: GpuSpec,
+    pub vf: VfCurve,
+    /// Dynamic-power coefficient (W / (V²·MHz)).
+    c_dyn: f64,
+    /// Leakage power at V_max (W).
+    p_leak: f64,
+    /// Current power-limit fraction of TDP.
+    cap_frac: f64,
+}
+
+impl GpuPowerModel {
+    pub fn new(spec: GpuSpec) -> Self {
+        let vf = VfCurve::from_spec(&spec);
+        let p_leak = spec.static_frac * (spec.tdp_w - spec.idle_w);
+        let p_dyn_max = spec.tdp_w - spec.idle_w - p_leak;
+        let c_dyn = p_dyn_max / (spec.v_max * spec.v_max * spec.boost_clock_mhz);
+        GpuPowerModel { spec, vf, c_dyn, p_leak, cap_frac: 1.0 }
+    }
+
+    /// Set the software power limit as a fraction of TDP.  The driver clamps
+    /// to the supported range (`min_cap_frac`..1.0) exactly like nvidia-smi.
+    pub fn set_cap_frac(&mut self, frac: f64) -> f64 {
+        self.cap_frac = frac.clamp(self.spec.min_cap_frac, 1.0);
+        self.cap_frac
+    }
+
+    pub fn cap_frac(&self) -> f64 {
+        self.cap_frac
+    }
+
+    /// Enforced power limit in watts.
+    pub fn cap_watts(&self) -> Watts {
+        Watts(self.cap_frac * self.spec.tdp_w)
+    }
+
+    /// Predicted total power at frequency `f_mhz` and activity `a`.
+    pub fn power_at(&self, f_mhz: f64, activity: f64) -> Watts {
+        let f = self.vf.clamp_freq(f_mhz);
+        let v = self.vf.voltage(f);
+        let a = activity.clamp(0.0, 1.0);
+        let leak = self.p_leak * (v / self.spec.v_max);
+        let dyn_p = self.c_dyn * v * v * f * a;
+        Watts(self.spec.idle_w + leak + dyn_p)
+    }
+
+    /// The capping loop: highest stable frequency whose predicted power is
+    /// under the current cap, plus the dither penalty in the unstable zone.
+    pub fn operating_point(&self, activity: f64) -> GpuOperatingPoint {
+        let cap = self.cap_watts();
+        let a = activity.clamp(0.0, 1.0);
+        let f_lo = self.vf.f_min_mhz;
+        let f_hi = self.vf.f_max_mhz;
+
+        if self.power_at(f_hi, a).0 <= cap.0 {
+            // Cap not binding: run at boost.
+            return GpuOperatingPoint {
+                freq_mhz: f_hi,
+                voltage: self.vf.voltage(f_hi),
+                power: self.power_at(f_hi, a),
+                dither_penalty: 1.0,
+                saturated_low: false,
+            };
+        }
+        if self.power_at(f_lo, a).0 > cap.0 {
+            // Even the floor clock exceeds the cap: the loop oscillates
+            // between stalling and running — sharp penalty (paper Sec. IV-C).
+            let overshoot = self.power_at(f_lo, a).0 / cap.0;
+            return GpuOperatingPoint {
+                freq_mhz: f_lo,
+                voltage: self.vf.voltage(f_lo),
+                power: self.power_at(f_lo, a),
+                dither_penalty: 1.0 + 1.5 * (overshoot - 1.0),
+                saturated_low: true,
+            };
+        }
+        // Bisection on monotone P(f).
+        let (mut lo, mut hi) = (f_lo, f_hi);
+        for _ in 0..48 {
+            let mid = 0.5 * (lo + hi);
+            if self.power_at(mid, a).0 <= cap.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        // Dither when pinned below the knee: the capping loop quantises
+        // clocks (15 MHz bins on Ampere) and bounces between neighbouring
+        // bins; the deeper below the efficient segment the clock is forced,
+        // the more throughput the oscillation wastes.
+        let near_floor = ((self.vf.f_knee_mhz - lo) / self.vf.f_knee_mhz).max(0.0);
+        let dither = 1.0 + 0.45 * near_floor.powf(1.5);
+        GpuOperatingPoint {
+            freq_mhz: lo,
+            voltage: self.vf.voltage(lo),
+            power: self.power_at(lo, a),
+            dither_penalty: dither,
+            saturated_low: false,
+        }
+    }
+
+    /// Idle draw (enters the paper's `P_idle` baseline, Eqs. 1–2).
+    pub fn idle_power(&self) -> Watts {
+        Watts(self.spec.idle_w)
+    }
+
+    /// Peak FP32 throughput at a given core clock (GFLOP/s).
+    pub fn gflops_at(&self, f_mhz: f64) -> f64 {
+        self.spec.peak_gflops * (self.vf.clamp_freq(f_mhz) / self.vf.f_max_mhz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{setup_no1, setup_no2};
+
+    fn model() -> GpuPowerModel {
+        GpuPowerModel::new(setup_no1().gpu)
+    }
+
+    #[test]
+    fn calibrated_to_tdp_at_boost() {
+        let m = model();
+        let p = m.power_at(m.vf.f_max_mhz, 1.0);
+        assert!((p.0 - m.spec.tdp_w).abs() < 1e-6, "P(f_max,1)={p} != TDP");
+    }
+
+    #[test]
+    fn power_monotone_in_freq_and_activity() {
+        let m = model();
+        let mut last = 0.0;
+        for i in 0..=50 {
+            let f = m.vf.f_min_mhz + (m.vf.f_max_mhz - m.vf.f_min_mhz) * i as f64 / 50.0;
+            let p = m.power_at(f, 0.8).0;
+            assert!(p >= last);
+            last = p;
+        }
+        assert!(m.power_at(1500.0, 0.9).0 > m.power_at(1500.0, 0.5).0);
+    }
+
+    #[test]
+    fn uncapped_runs_at_boost() {
+        let mut m = model();
+        m.set_cap_frac(1.0);
+        let op = m.operating_point(0.2); // light activity -> under TDP at boost
+        assert_eq!(op.freq_mhz, m.vf.f_max_mhz);
+        assert_eq!(op.dither_penalty, 1.0);
+    }
+
+    #[test]
+    fn capping_reduces_frequency_and_respects_cap() {
+        let mut m = model();
+        for cap in [0.9, 0.7, 0.5, 0.4] {
+            m.set_cap_frac(cap);
+            let op = m.operating_point(1.0);
+            assert!(
+                op.power.0 <= m.cap_watts().0 + 1e-6,
+                "cap {cap}: {} > {}",
+                op.power,
+                m.cap_watts()
+            );
+            assert!(op.freq_mhz < m.vf.f_max_mhz);
+        }
+    }
+
+    #[test]
+    fn freq_monotone_in_cap() {
+        let mut m = model();
+        let mut last = 0.0;
+        for i in 31..=100 {
+            m.set_cap_frac(i as f64 / 100.0);
+            let f = m.operating_point(1.0).freq_mhz;
+            assert!(f >= last, "freq must not drop as cap rises");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn cap_clamped_to_driver_floor() {
+        let mut m = model();
+        let eff = m.set_cap_frac(0.05);
+        assert!((eff - m.spec.min_cap_frac).abs() < 1e-12);
+        let eff = m.set_cap_frac(1.4);
+        assert_eq!(eff, 1.0);
+    }
+
+    #[test]
+    fn light_activity_draws_less_for_same_cap() {
+        let mut m = model();
+        m.set_cap_frac(1.0);
+        let heavy = m.operating_point(1.0).power.0;
+        let light = m.operating_point(0.1).power.0;
+        assert!(light < heavy * 0.6, "light {light} vs heavy {heavy}");
+    }
+
+    #[test]
+    fn instability_penalty_below_floor() {
+        // Force an activity so high that even f_min overshoots a tiny cap:
+        // dither must kick in and flag saturation.
+        let spec = setup_no2().gpu;
+        let mut m = GpuPowerModel::new(GpuSpec { min_cap_frac: 0.05, ..spec });
+        m.set_cap_frac(0.08);
+        let op = m.operating_point(1.0);
+        assert!(op.saturated_low);
+        assert!(op.dither_penalty > 1.0);
+    }
+
+    #[test]
+    fn gflops_scale_with_clock() {
+        let m = model();
+        let full = m.gflops_at(m.vf.f_max_mhz);
+        let half = m.gflops_at(m.vf.f_max_mhz / 2.0);
+        assert!((half / full - 0.5).abs() < 1e-9);
+        assert!((full - m.spec.peak_gflops).abs() < 1e-9);
+    }
+}

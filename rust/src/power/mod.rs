@@ -1,0 +1,24 @@
+//! Device power physics — the substrate that replaces the paper's hardware.
+//!
+//! The paper's entire evaluation rests on how a GPU's power draw and
+//! throughput respond to a software power cap.  That response is governed by
+//! well-understood physics (`P ≈ P_static(V) + C·V²·f·activity`, the
+//! voltage–frequency envelope, and the roofline between compute- and
+//! memory-bound work), which this module implements directly, calibrated to
+//! the datasheet constants in [`crate::config::hardware`].
+//!
+//! DESIGN.md §2 argues why this preserves every behaviour the paper
+//! measures: the interior EDP optimum, runtime insensitivity while
+//! memory-bound, the blow-up at extreme caps, and the LeNet outlier.
+
+pub mod cpu;
+pub mod dram;
+pub mod gpu;
+pub mod shifting;
+pub mod vf;
+
+pub use cpu::CpuPowerModel;
+pub use dram::DramPowerModel;
+pub use gpu::{GpuOperatingPoint, GpuPowerModel};
+pub use shifting::{allocate_budget, total_throughput, Allocation, HostProfile};
+pub use vf::VfCurve;

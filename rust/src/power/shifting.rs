@@ -1,0 +1,237 @@
+//! Power shifting: global power budgets across an O-RAN deployment.
+//!
+//! Paper Sec. II-C: *"Power shifting is the dynamic setting of power budgets
+//! for individual system components to maintain a global power level.  This
+//! is particularly important in an O-RAN deployment where multiple nodes
+//! may be involved in training or inference tasks, and optimising their
+//! power consumption locally or globally is necessary."*
+//!
+//! The allocator distributes a site-level GPU power budget across hosts
+//! using each host's FROST profile (the measured throughput-vs-cap curve):
+//! starting from every host at its driver floor, budget increments go to
+//! the host with the best marginal samples-per-second per watt until the
+//! budget is exhausted — a classic greedy water-filling that is optimal for
+//! concave throughput curves (which capped GPUs are, by the roofline).
+
+use crate::frost::ProfilePoint;
+
+/// One host's profiled cap→throughput curve.
+#[derive(Debug, Clone)]
+pub struct HostProfile {
+    pub host: String,
+    /// GPU TDP of the host (W).
+    pub tdp_w: f64,
+    /// Profiled points, ascending by cap (from `frost::ProfileOutcome`).
+    pub points: Vec<(f64, f64)>, // (cap_frac, samples_per_second)
+}
+
+impl HostProfile {
+    pub fn from_profile(host: &str, tdp_w: f64, points: &[ProfilePoint]) -> Self {
+        HostProfile {
+            host: host.to_string(),
+            tdp_w,
+            points: points
+                .iter()
+                .map(|p| (p.cap_frac, 1.0 / p.time_per_sample_s))
+                .collect(),
+        }
+    }
+
+    /// Interpolated throughput at an arbitrary cap.
+    pub fn throughput_at(&self, cap: f64) -> f64 {
+        let mut prev = &self.points[0];
+        if cap <= prev.0 {
+            return prev.1;
+        }
+        for p in &self.points[1..] {
+            if cap <= p.0 {
+                let t = (cap - prev.0) / (p.0 - prev.0);
+                return prev.1 * (1.0 - t) + p.1 * t;
+            }
+            prev = p;
+        }
+        self.points.last().unwrap().1
+    }
+
+    pub fn min_cap(&self) -> f64 {
+        self.points.first().map(|p| p.0).unwrap_or(0.3)
+    }
+
+    pub fn max_cap(&self) -> f64 {
+        self.points.last().map(|p| p.0).unwrap_or(1.0)
+    }
+}
+
+/// The allocator's decision for one host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub host: String,
+    pub cap_frac: f64,
+    pub watts: f64,
+    pub throughput: f64,
+}
+
+/// Greedy marginal-utility allocation of `budget_w` across `hosts`.
+///
+/// Every host gets at least its driver-floor power; remaining budget is
+/// handed out in `step_w` increments to the host with the highest marginal
+/// throughput per watt.  Returns None when the budget cannot even cover the
+/// floors (the site operator must shed load instead).
+pub fn allocate_budget(
+    hosts: &[HostProfile],
+    budget_w: f64,
+    step_w: f64,
+) -> Option<Vec<Allocation>> {
+    assert!(step_w > 0.0, "step must be positive");
+    let mut caps: Vec<f64> = hosts.iter().map(|h| h.min_cap()).collect();
+    let mut spent: f64 = hosts
+        .iter()
+        .zip(&caps)
+        .map(|(h, c)| h.tdp_w * c)
+        .sum();
+    if spent > budget_w + 1e-9 {
+        return None;
+    }
+    loop {
+        // Best marginal throughput/W among hosts that can still grow.
+        let mut best: Option<(usize, f64)> = None;
+        for (i, h) in hosts.iter().enumerate() {
+            if caps[i] >= h.max_cap() - 1e-12 {
+                continue;
+            }
+            let dcap = (step_w / h.tdp_w).min(h.max_cap() - caps[i]);
+            let dw = dcap * h.tdp_w;
+            if spent + dw > budget_w + 1e-9 {
+                continue;
+            }
+            let gain = (h.throughput_at(caps[i] + dcap) - h.throughput_at(caps[i])) / dw;
+            if best.map_or(true, |(_, g)| gain > g) {
+                best = Some((i, gain));
+            }
+        }
+        let Some((i, gain)) = best else { break };
+        // Stop once no host gains anything (past everyone's knee): spending
+        // more power buys nothing — leave headroom for the site.
+        if gain <= 1e-9 {
+            break;
+        }
+        let dcap = (step_w / hosts[i].tdp_w).min(hosts[i].max_cap() - caps[i]);
+        caps[i] += dcap;
+        spent += dcap * hosts[i].tdp_w;
+    }
+    Some(
+        hosts
+            .iter()
+            .zip(&caps)
+            .map(|(h, &c)| Allocation {
+                host: h.host.clone(),
+                cap_frac: c,
+                watts: c * h.tdp_w,
+                throughput: h.throughput_at(c),
+            })
+            .collect(),
+    )
+}
+
+/// Total throughput of an allocation (samples/s).
+pub fn total_throughput(allocs: &[Allocation]) -> f64 {
+    allocs.iter().map(|a| a.throughput).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Concave synthetic curve: throughput saturates above a knee.
+    fn host(name: &str, tdp: f64, knee: f64, peak: f64) -> HostProfile {
+        let points = (3..=10)
+            .map(|i| {
+                let cap = i as f64 / 10.0;
+                let t = peak * (cap / knee).min(1.0);
+                (cap, t)
+            })
+            .collect();
+        HostProfile { host: name.into(), tdp_w: tdp, points }
+    }
+
+    #[test]
+    fn budget_respected_and_floors_guaranteed() {
+        let hosts = vec![host("a", 320.0, 0.7, 1000.0), host("b", 350.0, 0.6, 800.0)];
+        let allocs = allocate_budget(&hosts, 450.0, 5.0).unwrap();
+        let spent: f64 = allocs.iter().map(|a| a.watts).sum();
+        assert!(spent <= 450.0 + 1e-6, "spent {spent}");
+        for a in &allocs {
+            assert!(a.cap_frac >= 0.3 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let hosts = vec![host("a", 320.0, 0.7, 1000.0), host("b", 350.0, 0.6, 800.0)];
+        // Floors alone need 0.3*(320+350) = 201 W.
+        assert!(allocate_budget(&hosts, 150.0, 5.0).is_none());
+    }
+
+    #[test]
+    fn more_budget_never_hurts() {
+        let hosts = vec![host("a", 320.0, 0.7, 1000.0), host("b", 350.0, 0.5, 900.0)];
+        let mut last = 0.0;
+        for budget in [250.0, 350.0, 450.0, 600.0, 800.0] {
+            let t = total_throughput(&allocate_budget(&hosts, budget, 2.0).unwrap());
+            assert!(t >= last - 1e-9, "budget {budget}: {t} < {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn budget_flows_to_the_hungrier_host() {
+        // Host a gains throughput up to cap 0.9; host b saturates at 0.4.
+        let hosts = vec![host("a", 320.0, 0.9, 1000.0), host("b", 320.0, 0.4, 1000.0)];
+        let allocs = allocate_budget(&hosts, 450.0, 2.0).unwrap();
+        let a = allocs.iter().find(|x| x.host == "a").unwrap();
+        let b = allocs.iter().find(|x| x.host == "b").unwrap();
+        assert!(
+            a.cap_frac > b.cap_frac + 0.1,
+            "a {} should out-allocate b {}",
+            a.cap_frac,
+            b.cap_frac
+        );
+    }
+
+    #[test]
+    fn saturated_site_leaves_headroom() {
+        // Both hosts saturate at 0.5: the allocator must stop spending there
+        // even with a huge budget (paper: power beyond the knee buys nothing).
+        let hosts = vec![host("a", 320.0, 0.5, 1000.0), host("b", 320.0, 0.5, 800.0)];
+        let allocs = allocate_budget(&hosts, 10_000.0, 2.0).unwrap();
+        let spent: f64 = allocs.iter().map(|a| a.watts).sum();
+        assert!(spent < 0.55 * 640.0, "spent {spent} past saturation");
+    }
+
+    #[test]
+    fn works_with_real_profiles() {
+        use crate::config::{setup_no1, setup_no2, ProfilerConfig};
+        use crate::frost::PowerProfiler;
+        use crate::simulator::Testbed;
+        use crate::zoo::model_by_name;
+        let mut profiles = Vec::new();
+        for (hw, model) in [(setup_no1(), "ResNet"), (setup_no2(), "DenseNet")] {
+            let w = model_by_name(model).unwrap().workload(&setup_no1().gpu);
+            let mut tb = Testbed::new(hw.clone(), 3);
+            let out = PowerProfiler::new(ProfilerConfig::default()).profile(&mut tb, &w, 128);
+            profiles.push(HostProfile::from_profile(&hw.name, hw.gpu.tdp_w, &out.points));
+        }
+        let full: f64 = profiles.iter().map(|p| p.tdp_w).sum();
+        let allocs = allocate_budget(&profiles, 0.7 * full, 5.0).unwrap();
+        let spent: f64 = allocs.iter().map(|a| a.watts).sum();
+        assert!(spent <= 0.7 * full + 1e-6);
+        // The constrained site must still deliver most of the unconstrained
+        // throughput (the roofline knee means the last watts buy little).
+        let unconstrained = total_throughput(&allocate_budget(&profiles, full, 5.0).unwrap());
+        let constrained = total_throughput(&allocs);
+        assert!(
+            constrained > 0.8 * unconstrained,
+            "70% budget should keep >80% throughput: {constrained} vs {unconstrained}"
+        );
+    }
+}

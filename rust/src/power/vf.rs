@@ -1,0 +1,133 @@
+//! Voltage–frequency envelope of a GPU core domain.
+//!
+//! The paper (Sec. IV-C) leans on `P = C·V²·f` with "voltage has a quadratic
+//! relationship to power" and "increasing frequency requires a corresponding
+//! increase in voltage to maintain stability".  We model the DVFS table the
+//! driver actually walks as **two linear segments**:
+//!
+//! * `f_min → f_knee` — the *efficient* segment: voltage rises gently from
+//!   `v_min` to `v_knee`;
+//! * `f_knee → f_max` — the *voltage wall*: the last ~12% of clocks cost a
+//!   steep voltage climb to `v_max`.
+//!
+//! Stock boost clocks sit deep inside the wall, which is precisely why
+//! moderate power caps shed a lot of power for little frequency (the
+//! mechanism behind every energy saving the paper reports), and why
+//! "increasing frequency beyond a certain point leads to improved training
+//! times but significantly higher energy consumption" (Sec. IV-C, Fig. 5).
+
+use crate::config::GpuSpec;
+
+/// Two-segment piecewise-linear V(f) curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VfCurve {
+    pub f_min_mhz: f64,
+    pub f_knee_mhz: f64,
+    pub f_max_mhz: f64,
+    pub v_min: f64,
+    pub v_knee: f64,
+    pub v_max: f64,
+}
+
+impl VfCurve {
+    pub fn from_spec(spec: &GpuSpec) -> Self {
+        VfCurve {
+            f_min_mhz: spec.min_clock_mhz,
+            f_knee_mhz: spec.boost_clock_mhz * spec.vf_knee_frac,
+            f_max_mhz: spec.boost_clock_mhz,
+            v_min: spec.v_min,
+            v_knee: spec.v_knee,
+            v_max: spec.v_max,
+        }
+    }
+
+    /// Core voltage required to run stably at `f_mhz`.
+    pub fn voltage(&self, f_mhz: f64) -> f64 {
+        let f = f_mhz.clamp(self.f_min_mhz, self.f_max_mhz);
+        if f <= self.f_knee_mhz {
+            let t = (f - self.f_min_mhz) / (self.f_knee_mhz - self.f_min_mhz);
+            self.v_min + t * (self.v_knee - self.v_min)
+        } else {
+            let t = (f - self.f_knee_mhz) / (self.f_max_mhz - self.f_knee_mhz);
+            self.v_knee + t * (self.v_max - self.v_knee)
+        }
+    }
+
+    /// Clamp a frequency into the stable envelope.
+    pub fn clamp_freq(&self, f_mhz: f64) -> f64 {
+        f_mhz.clamp(self.f_min_mhz, self.f_max_mhz)
+    }
+
+    /// dV/df in the wall segment relative to the efficient segment — a
+    /// diagnostic for how sharp the knee is (tests assert > 3×).
+    pub fn wall_steepness(&self) -> f64 {
+        let eff = (self.v_knee - self.v_min) / (self.f_knee_mhz - self.f_min_mhz);
+        let wall = (self.v_max - self.v_knee) / (self.f_max_mhz - self.f_knee_mhz);
+        wall / eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{setup_no1, setup_no2};
+
+    fn curve() -> VfCurve {
+        VfCurve::from_spec(&setup_no1().gpu)
+    }
+
+    #[test]
+    fn voltage_monotone_nondecreasing() {
+        let c = curve();
+        let mut last = 0.0;
+        let mut f = c.f_min_mhz;
+        while f <= c.f_max_mhz {
+            let v = c.voltage(f);
+            assert!(v >= last, "V(f) must be non-decreasing");
+            last = v;
+            f += 10.0;
+        }
+    }
+
+    #[test]
+    fn endpoints_match_spec() {
+        let c = curve();
+        assert!((c.voltage(c.f_min_mhz) - c.v_min).abs() < 1e-12);
+        assert!((c.voltage(c.f_knee_mhz) - c.v_knee).abs() < 1e-12);
+        assert!((c.voltage(c.f_max_mhz) - c.v_max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wall_is_steep() {
+        // The whole point of the two-segment model: the top clocks must be
+        // disproportionately expensive in voltage.
+        for hw in [setup_no1(), setup_no2()] {
+            let c = VfCurve::from_spec(&hw.gpu);
+            assert!(
+                c.wall_steepness() > 3.0,
+                "{}: wall steepness {}",
+                hw.gpu.name,
+                c.wall_steepness()
+            );
+        }
+    }
+
+    #[test]
+    fn voltage_clamps_out_of_range() {
+        let c = curve();
+        assert_eq!(c.voltage(0.0), c.v_min);
+        assert_eq!(c.voltage(1e6), c.v_max);
+    }
+
+    #[test]
+    fn power_at_90pct_clock_is_much_cheaper() {
+        // P ∝ V²f: dropping 10% of clock from boost must shed >25% of
+        // dynamic power on both setups (the paper's headline mechanism).
+        for hw in [setup_no1(), setup_no2()] {
+            let c = VfCurve::from_spec(&hw.gpu);
+            let p = |f: f64| c.voltage(f).powi(2) * f;
+            let ratio = p(0.9 * c.f_max_mhz) / p(c.f_max_mhz);
+            assert!(ratio < 0.75, "{}: ratio {}", hw.gpu.name, ratio);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! Interchange format is HLO **text**, not serialised `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids
+//! and round-trips cleanly (see `/opt/xla-example/README.md` and
+//! `python/compile/aot.py`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU in this environment).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<LoadedComputation> {
+        let path = path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedComputation {
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+            compile_time_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// One compiled executable.
+pub struct LoadedComputation {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_time_s: f64,
+}
+
+impl LoadedComputation {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// device output is a tuple literal we decompose.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Like [`run`](Self::run) but borrowing the inputs (no copies on the
+    /// Rust side; PJRT still copies host→device).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expected as usize == data.len(),
+        "shape {:?} wants {} elements, got {}",
+        dims,
+        expected,
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(expected as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/manifest.json"
+        ))
+        .exists()
+    }
+
+    #[test]
+    fn literal_builders_validate_shape() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(literal_i32(&[1, 2, 3], &[3]).is_ok());
+    }
+
+    #[test]
+    fn loads_and_runs_lenet_infer() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        let manifest = crate::zoo::Manifest::load_default().unwrap();
+        let lenet = manifest.model("lenet").unwrap();
+        let init = rt.load(manifest.artifact_path(&lenet.init)).unwrap();
+        let state = init.run(&[]).unwrap();
+        assert_eq!(state.len(), lenet.n_state);
+
+        let infer = rt.load(manifest.artifact_path(&lenet.infer)).unwrap();
+        let batch = lenet.infer.batch.unwrap() as usize;
+        let x = vec![0.1f32; batch * 32 * 32 * 3];
+        let xl = literal_f32(&x, &[batch as i64, 32, 32, 3]).unwrap();
+        // Inference takes params only (state[1..1+n_params]).
+        let mut inputs: Vec<&xla::Literal> = state[1..1 + lenet.n_params].iter().collect();
+        inputs.push(&xl);
+        let out = infer.run_refs(&inputs).unwrap();
+        assert_eq!(out.len(), 2); // (logits, preds)
+        let logits: Vec<f32> = out[0].to_vec().unwrap();
+        assert_eq!(logits.len(), batch * 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

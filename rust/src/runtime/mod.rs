@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts.
+//!
+//! The request-path half of the three-layer architecture: Rust loads the
+//! HLO **text** emitted by `python/compile/aot.py`, compiles it once on the
+//! PJRT CPU client, and executes train/infer steps with zero Python.
+//!
+//! * [`client`] — thin wrapper over the `xla` crate (PJRT C API);
+//! * [`executor`] — stateful training/inference sessions implementing the
+//!   flat state-layout contract of `python/compile/model.py`.
+
+pub mod client;
+pub mod executor;
+
+pub use client::{LoadedComputation, Runtime};
+pub use executor::{InferenceSession, StepMetrics, TrainSession};

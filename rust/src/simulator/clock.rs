@@ -1,0 +1,102 @@
+//! Virtual and wall clocks behind one trait.
+//!
+//! Telemetry, the profiler and the O-RAN fabric all take time from a
+//! [`Clock`] so the same code path serves both the simulator (virtual time,
+//! advanced explicitly) and real PJRT runs (wall time).
+
+use crate::util::Seconds;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+pub trait Clock: Send + Sync {
+    /// Monotonic now.
+    fn now(&self) -> Seconds;
+}
+
+/// Virtual clock: time advances only via [`SimClock::advance`].
+#[derive(Debug, Default)]
+pub struct SimClock {
+    /// f64 seconds stored as bits for lock-free Sync access.
+    bits: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(SimClock { bits: AtomicU64::new(0f64.to_bits()) })
+    }
+
+    pub fn advance(&self, dt: Seconds) {
+        assert!(dt.0 >= 0.0, "time cannot flow backwards (dt={})", dt.0);
+        // Single-writer model: simulations advance time from one thread.
+        let now = f64::from_bits(self.bits.load(Ordering::Acquire));
+        self.bits.store((now + dt.0).to_bits(), Ordering::Release);
+    }
+
+    pub fn set(&self, t: Seconds) {
+        self.bits.store(t.0.to_bits(), Ordering::Release);
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Seconds {
+        Seconds(f64::from_bits(self.bits.load(Ordering::Acquire)))
+    }
+}
+
+/// Wall clock anchored at construction.
+#[derive(Debug)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(WallClock { start: Instant::now() })
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Seconds {
+        Seconds(self.start.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_starts_at_zero_and_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), Seconds(0.0));
+        c.advance(Seconds(1.5));
+        c.advance(Seconds(0.5));
+        assert_eq!(c.now(), Seconds(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn sim_clock_rejects_negative() {
+        let c = SimClock::new();
+        c.advance(Seconds(-1.0));
+    }
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b.0 >= a.0);
+    }
+
+    #[test]
+    fn sim_clock_shared_across_threads() {
+        let c = SimClock::new();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.now());
+        c.advance(Seconds(1.0));
+        let _ = h.join().unwrap();
+        assert_eq!(c.now(), Seconds(1.0));
+    }
+}

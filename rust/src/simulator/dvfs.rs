@@ -1,0 +1,216 @@
+//! DVFS baseline: the alternative knob the paper argues *against*.
+//!
+//! Paper Sec. II-C: DVFS "dynamically adjusts the voltage and frequency to
+//! match the workload, providing more precise control than power capping
+//! and resulting in better energy savings" — but "there is no direct
+//! correlation between frequency and energy consumption across GPU models"
+//! and vendor/OS support is inconsistent, so capping is the only viable
+//! O-RAN-wide mechanism.  This module provides the DVFS comparator so the
+//! tradeoff can be measured (ablation in `rust/benches/figures.rs` and
+//! EXPERIMENTS.md §Ablations): DVFS picks the exact clock, capping picks a
+//! power limit and lets the driver find the clock.
+
+use super::exec::ExecutionModel;
+use super::workload::WorkloadDescriptor;
+
+/// Ampere-style clock quantisation (MHz per DVFS bin).
+pub const CLOCK_BIN_MHZ: f64 = 15.0;
+
+/// Result of a DVFS search.
+#[derive(Debug, Clone, Copy)]
+pub struct DvfsChoice {
+    pub freq_mhz: f64,
+    pub energy_per_sample_j: f64,
+    pub time_per_sample_s: f64,
+    /// ED^mP score at the chosen clock.
+    pub score: f64,
+}
+
+/// Evaluate one fixed core clock for a workload (no power cap involved —
+/// the frequency is pinned as `nvidia-smi -lgc` would).
+pub fn evaluate_at_clock(
+    exec: &ExecutionModel,
+    w: &WorkloadDescriptor,
+    batch: u32,
+    freq_mhz: f64,
+) -> (f64, f64) {
+    let f = exec.gpu.vf.clamp_freq(freq_mhz);
+    // Step time at pinned clock: same roofline as the capped path but
+    // without the capping loop (no dither — the clock is stable).
+    let flops = w.train_flops_per_sample * batch as f64;
+    let bytes = w.train_bytes_per_sample * batch as f64;
+    let t_c = flops / (exec.gpu.gflops_at(f) * 1e9 * w.kernel_efficiency);
+    let t_m = bytes / (exec.gpu.spec.mem_bw_gbs * 1e9);
+    let t_gpu = (t_c.powf(4.0) + t_m.powf(4.0)).powf(0.25);
+    let step_time = t_gpu.max(w.host_s_per_batch) + 0.25 * w.host_s_per_batch;
+
+    // Activity & power at the pinned clock (same physics as exec::step).
+    let r_c = (t_c / t_gpu).min(1.0);
+    let r_m = (t_m / t_gpu).min(1.0);
+    let activity = (r_c * (0.18 + 1.35 * w.kernel_efficiency) + 0.18 * r_m).clamp(0.05, 1.0);
+    let gpu_util = (t_gpu / step_time).clamp(0.0, 1.0);
+    let p_busy = exec.gpu.power_at(f, activity).0;
+    let p_idle = exec.gpu.idle_power().0;
+    let gpu_power = p_busy * gpu_util + p_idle * (1.0 - gpu_util);
+    let total = gpu_power + exec.cpu.power_at(w.cpu_util).0 + exec.dram.power().0;
+
+    let eps = total * step_time / batch as f64;
+    let tps = step_time / batch as f64;
+    (eps, tps)
+}
+
+/// Sweep the DVFS table and pick the ED^mP-optimal clock.
+pub fn dvfs_optimal(
+    exec: &ExecutionModel,
+    w: &WorkloadDescriptor,
+    batch: u32,
+    exponent: f64,
+) -> DvfsChoice {
+    let (f_min, f_max) = (exec.gpu.vf.f_min_mhz, exec.gpu.vf.f_max_mhz);
+    let mut best: Option<DvfsChoice> = None;
+    let mut f = f_min;
+    while f <= f_max + 1e-9 {
+        let (eps, tps) = evaluate_at_clock(exec, w, batch, f);
+        let score = eps * tps.powf(exponent);
+        if best.map_or(true, |b| score < b.score) {
+            best = Some(DvfsChoice {
+                freq_mhz: f,
+                energy_per_sample_j: eps,
+                time_per_sample_s: tps,
+                score,
+            });
+        }
+        f += CLOCK_BIN_MHZ;
+    }
+    best.expect("non-empty DVFS table")
+}
+
+/// Ablation record comparing capping vs DVFS for one model.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub model: String,
+    pub capping_saving: f64,
+    pub dvfs_saving: f64,
+    pub capping_slowdown: f64,
+    pub dvfs_slowdown: f64,
+}
+
+/// Run the capping-vs-DVFS ablation for one workload (both under ED^mP).
+pub fn capping_vs_dvfs(
+    hw: &crate::config::HardwareConfig,
+    w: &WorkloadDescriptor,
+    batch: u32,
+    exponent: f64,
+    seed: u64,
+) -> AblationRow {
+    use crate::config::ProfilerConfig;
+    use crate::frost::PowerProfiler;
+    use crate::simulator::Testbed;
+
+    // Capping path: the FROST profiler.
+    let mut tb = Testbed::new(hw.clone(), seed);
+    let out = PowerProfiler::new(ProfilerConfig { edp_exponent: exponent, ..Default::default() })
+        .profile(&mut tb, w, batch);
+
+    // DVFS path: exact clock choice on the same physics.
+    let exec = &tb.exec;
+    let choice = dvfs_optimal(exec, w, batch, exponent);
+    let (base_eps, base_tps) = evaluate_at_clock(exec, w, batch, exec.gpu.vf.f_max_mhz);
+
+    AblationRow {
+        model: w.name.clone(),
+        capping_saving: out.est_energy_saving,
+        dvfs_saving: 1.0 - choice.energy_per_sample_j / base_eps,
+        capping_slowdown: out.est_slowdown,
+        dvfs_slowdown: choice.time_per_sample_s / base_tps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no1;
+    use crate::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
+    use crate::zoo::model_by_name;
+
+    fn exec() -> ExecutionModel {
+        let hw = setup_no1();
+        ExecutionModel::new(
+            GpuPowerModel::new(hw.gpu),
+            CpuPowerModel::new(hw.cpu),
+            DramPowerModel::new(hw.dimms),
+        )
+    }
+
+    #[test]
+    fn dvfs_optimum_is_interior_for_balanced_model() {
+        let e = exec();
+        let w = model_by_name("ResNet").unwrap().workload(&setup_no1().gpu);
+        let c = dvfs_optimal(&e, &w, 128, 1.0);
+        assert!(
+            c.freq_mhz > e.gpu.vf.f_min_mhz && c.freq_mhz < e.gpu.vf.f_max_mhz,
+            "DVFS clock {} not interior",
+            c.freq_mhz
+        );
+    }
+
+    #[test]
+    fn dvfs_beats_or_matches_capping_on_savings() {
+        // The paper's concession: DVFS gives finer control, hence >= savings
+        // — capping wins on portability, not on the physics.
+        let hw = setup_no1();
+        for model in ["ResNet", "DenseNet", "VGG"] {
+            let w = model_by_name(model).unwrap().workload(&hw.gpu);
+            let row = capping_vs_dvfs(&hw, &w, 128, 1.0, 5);
+            assert!(
+                row.dvfs_saving >= row.capping_saving - 0.03,
+                "{model}: DVFS {:.3} vs capping {:.3}",
+                row.dvfs_saving,
+                row.capping_saving
+            );
+        }
+    }
+
+    #[test]
+    fn capping_stays_competitive() {
+        // ...but capping must capture most of DVFS's benefit (the paper's
+        // justification for choosing it would collapse otherwise).
+        let hw = setup_no1();
+        let w = model_by_name("ResNet").unwrap().workload(&hw.gpu);
+        let row = capping_vs_dvfs(&hw, &w, 128, 1.0, 5);
+        assert!(
+            row.capping_saving > 0.6 * row.dvfs_saving,
+            "capping {:.3} captures too little of DVFS {:.3}",
+            row.capping_saving,
+            row.dvfs_saving
+        );
+    }
+
+    #[test]
+    fn pinned_clock_energy_monotone_behaviour() {
+        // Energy per sample must have a single interior dip over the clock
+        // range (V²f left arm vs static-time right arm).
+        let e = exec();
+        let w = model_by_name("DenseNet").unwrap().workload(&setup_no1().gpu);
+        let mut values = Vec::new();
+        let mut f = e.gpu.vf.f_min_mhz;
+        while f <= e.gpu.vf.f_max_mhz {
+            values.push(evaluate_at_clock(&e, &w, 128, f).0);
+            f += CLOCK_BIN_MHZ * 4.0;
+        }
+        let min_idx = values
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(min_idx > 0 && min_idx < values.len() - 1, "dip not interior");
+        // Left of the dip decreasing, right increasing (unimodal).
+        for i in 1..=min_idx {
+            assert!(values[i] <= values[i - 1] * 1.02);
+        }
+        for i in min_idx + 1..values.len() {
+            assert!(values[i] >= values[i - 1] * 0.98);
+        }
+    }
+}

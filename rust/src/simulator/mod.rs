@@ -1,0 +1,22 @@
+//! Workload execution simulator.
+//!
+//! Combines the [`crate::power`] physics with a roofline execution model to
+//! predict, for a given model workload and power cap: step time, GPU
+//! utilisation, and per-component power draw.  This is the substrate that
+//! stands in for the paper's physical testbeds (DESIGN.md §2).
+//!
+//! Simulations run on a virtual clock ([`SimClock`]) so a paper-scale
+//! experiment (16 models × 100 epochs × 8 caps) takes milliseconds of wall
+//! time while reporting paper-scale durations.
+
+pub mod clock;
+pub mod dvfs;
+pub mod exec;
+pub mod testbed;
+pub mod workload;
+
+pub use clock::{Clock, SimClock, WallClock};
+pub use dvfs::{capping_vs_dvfs, dvfs_optimal, DvfsChoice};
+pub use exec::{ExecutionModel, StepEstimate};
+pub use testbed::{StepSample, Testbed};
+pub use workload::WorkloadDescriptor;

@@ -1,0 +1,141 @@
+//! Workload descriptors: what one model's training/inference costs.
+//!
+//! Each zoo model is characterised by the quantities the roofline model
+//! needs — FLOPs and HBM bytes per sample, host-side time per batch, and a
+//! kernel efficiency.  For the four *trainable* models these numbers come
+//! straight from the AOT manifest (`artifacts/manifest.json`, analytic +
+//! XLA cost analysis); for the remaining zoo entries they come from the
+//! published architecture characteristics (see `zoo/models.rs`).
+
+use crate::config::GpuSpec;
+
+/// Cost profile of one model under a fixed batch size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadDescriptor {
+    pub name: String,
+    /// Forward+backward FLOPs per training sample.
+    pub train_flops_per_sample: f64,
+    /// Forward FLOPs per inference sample.
+    pub infer_flops_per_sample: f64,
+    /// HBM traffic per training sample (bytes).
+    pub train_bytes_per_sample: f64,
+    /// HBM traffic per inference sample (bytes).
+    pub infer_bytes_per_sample: f64,
+    /// Host-side (CPU) time per batch: data loading, launch overhead (s).
+    pub host_s_per_batch: f64,
+    /// Fraction of peak FLOPs the model's kernels achieve at boost clock.
+    pub kernel_efficiency: f64,
+    /// CPU utilisation while the GPU trains (input pipeline load).
+    pub cpu_util: f64,
+    /// Parameter count (for reporting).
+    pub params: u64,
+    /// Reference top-1 accuracy on CIFAR-10 after the paper's 100 epochs.
+    pub reference_accuracy: f64,
+}
+
+impl WorkloadDescriptor {
+    /// Arithmetic intensity of training (FLOP per HBM byte).
+    pub fn train_intensity(&self) -> f64 {
+        self.train_flops_per_sample / self.train_bytes_per_sample
+    }
+
+    /// Memory-boundedness β vs a reference GPU: ratio of memory time to
+    /// compute time at boost clock.  β > 1 means runtime is insensitive to
+    /// moderate down-clocking (the paper's "partially memory-bound" regime).
+    pub fn beta(&self, gpu: &GpuSpec) -> f64 {
+        let t_c = self.train_flops_per_sample
+            / (gpu.peak_gflops * 1e9 * self.kernel_efficiency);
+        let t_m = self.train_bytes_per_sample / (gpu.mem_bw_gbs * 1e9);
+        t_m / t_c
+    }
+
+    /// Construct HBM bytes from a target β on a reference GPU — used by the
+    /// zoo to express each architecture's boundedness portably.
+    pub fn bytes_for_beta(
+        flops_per_sample: f64,
+        kernel_efficiency: f64,
+        beta: f64,
+        gpu: &GpuSpec,
+    ) -> f64 {
+        let t_c = flops_per_sample / (gpu.peak_gflops * 1e9 * kernel_efficiency);
+        beta * t_c * gpu.mem_bw_gbs * 1e9
+    }
+
+    /// Validate physical plausibility; used by zoo tests.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.train_flops_per_sample > 0.0, "flops must be positive");
+        anyhow::ensure!(self.train_bytes_per_sample > 0.0, "bytes must be positive");
+        anyhow::ensure!(
+            (0.01..=1.0).contains(&self.kernel_efficiency),
+            "kernel efficiency {} out of range",
+            self.kernel_efficiency
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.cpu_util),
+            "cpu_util out of range"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.reference_accuracy),
+            "accuracy out of range"
+        );
+        anyhow::ensure!(self.host_s_per_batch >= 0.0, "host time negative");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no1;
+
+    fn wl() -> WorkloadDescriptor {
+        WorkloadDescriptor {
+            name: "test".into(),
+            train_flops_per_sample: 1.5e9,
+            infer_flops_per_sample: 0.5e9,
+            train_bytes_per_sample: 80e6,
+            infer_bytes_per_sample: 25e6,
+            host_s_per_batch: 2e-3,
+            kernel_efficiency: 0.35,
+            cpu_util: 0.3,
+            params: 11_000_000,
+            reference_accuracy: 0.95,
+        }
+    }
+
+    #[test]
+    fn intensity_and_beta_consistent() {
+        let w = wl();
+        let gpu = setup_no1().gpu;
+        let beta = w.beta(&gpu);
+        let bytes = WorkloadDescriptor::bytes_for_beta(
+            w.train_flops_per_sample,
+            w.kernel_efficiency,
+            beta,
+            &gpu,
+        );
+        assert!((bytes - w.train_bytes_per_sample).abs() / bytes < 1e-9);
+    }
+
+    #[test]
+    fn higher_beta_means_more_bytes() {
+        let gpu = setup_no1().gpu;
+        let b1 = WorkloadDescriptor::bytes_for_beta(1e9, 0.3, 0.5, &gpu);
+        let b2 = WorkloadDescriptor::bytes_for_beta(1e9, 0.3, 1.5, &gpu);
+        assert!(b2 > b1 * 2.9 && b2 < b1 * 3.1);
+    }
+
+    #[test]
+    fn validation_catches_nonsense() {
+        let mut w = wl();
+        assert!(w.validate().is_ok());
+        w.kernel_efficiency = 1.5;
+        assert!(w.validate().is_err());
+        let mut w = wl();
+        w.train_flops_per_sample = -1.0;
+        assert!(w.validate().is_err());
+        let mut w = wl();
+        w.reference_accuracy = 1.2;
+        assert!(w.validate().is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Energy integration and the paper's accounting equations.
+//!
+//! Eq. 1:  E_tr = ∫₀^T_tr P_tr dt − ∫₀^T_m P_idle dt
+//! Eq. 2:  E_in = ∫₀^T_in P_in dt − ∫₀^T_m P_idle dt
+//! Eq. 3:  P(t) = P_CPU(t) + P_GPU(t) + P_DRAM(t)
+//! Eq. 4/5: with the profiler, 8·∫₀^T_pr P_pr dt is charged on top.
+//!
+//! Integration is trapezoidal over the sampled series.
+
+use crate::util::{Joules, Seconds, Watts};
+
+use super::sampler::PowerSample;
+
+/// Trapezoidal integral of total power over a sample series.
+pub fn integrate(samples: &[PowerSample]) -> Joules {
+    if samples.len() < 2 {
+        return Joules(0.0);
+    }
+    let mut total = 0.0;
+    for pair in samples.windows(2) {
+        let dt = pair[1].at.0 - pair[0].at.0;
+        let p0 = pair[0].total().0;
+        let p1 = pair[1].total().0;
+        total += 0.5 * (p0 + p1) * dt;
+    }
+    Joules(total)
+}
+
+/// Trapezoidal integral of one component selected by `f`.
+pub fn integrate_component(
+    samples: &[PowerSample],
+    f: impl Fn(&PowerSample) -> Watts,
+) -> Joules {
+    if samples.len() < 2 {
+        return Joules(0.0);
+    }
+    let mut total = 0.0;
+    for pair in samples.windows(2) {
+        let dt = pair[1].at.0 - pair[0].at.0;
+        total += 0.5 * (f(&pair[0]).0 + f(&pair[1]).0) * dt;
+    }
+    Joules(total)
+}
+
+/// The full energy account of one pipeline run (Eqs. 1–5).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyAccount {
+    /// Gross ∫P dt over the workload (training or inference).
+    pub gross: Joules,
+    /// Workload duration T_tr / T_in.
+    pub duration: Seconds,
+    /// Idle baseline ∫₀^T_m P_idle dt.
+    pub idle_baseline: Joules,
+    /// Idle measurement window T_m.
+    pub idle_window: Seconds,
+    /// Profiling overhead 8·∫P_pr dt (zero when FROST didn't profile).
+    pub profiling: Joules,
+}
+
+impl EnergyAccount {
+    /// Net energy per Eq. 1/2 (+ the Eq. 4/5 profiling charge):
+    /// `E = profiling + gross − idle_baseline`.
+    ///
+    /// Note the paper subtracts the idle integral over the *fixed* window
+    /// T_m (a hardcoded interval), not over the workload duration — we
+    /// follow that definition exactly.
+    pub fn net(&self) -> Joules {
+        self.profiling + self.gross - self.idle_baseline
+    }
+
+    /// Mean gross power over the workload.
+    pub fn mean_power(&self) -> Watts {
+        self.gross.mean_power(self.duration)
+    }
+
+    /// Energy-delay product with exponent m: `E · D^m` (Sec. III-C).
+    pub fn edp(&self, m: f64) -> f64 {
+        self.net().0 * self.duration.0.powf(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(powers: &[(f64, f64)]) -> Vec<PowerSample> {
+        powers
+            .iter()
+            .map(|&(t, p)| PowerSample {
+                at: Seconds(t),
+                gpu: Watts(p),
+                cpu: Watts(0.0),
+                dram: Watts(0.0),
+                gpu_util: 1.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trapezoid_constant_power() {
+        let s = series(&[(0.0, 100.0), (1.0, 100.0), (2.0, 100.0)]);
+        assert!((integrate(&s).0 - 200.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trapezoid_ramp() {
+        // P ramps 0→100 over 10 s: E = 500 J.
+        let s = series(&[(0.0, 0.0), (10.0, 100.0)]);
+        assert!((integrate(&s).0 - 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_series_zero() {
+        assert_eq!(integrate(&[]).0, 0.0);
+        assert_eq!(integrate(&series(&[(0.0, 50.0)])).0, 0.0);
+    }
+
+    #[test]
+    fn component_integral() {
+        let s = series(&[(0.0, 100.0), (2.0, 100.0)]);
+        assert_eq!(integrate_component(&s, |x| x.gpu).0, 200.0);
+        assert_eq!(integrate_component(&s, |x| x.cpu).0, 0.0);
+    }
+
+    #[test]
+    fn account_net_follows_eq_1_and_4() {
+        let acc = EnergyAccount {
+            gross: Joules(10_000.0),
+            duration: Seconds(100.0),
+            idle_baseline: Joules(54.0 * 30.0), // 54 W idle × T_m = 30 s
+            idle_window: Seconds(30.0),
+            profiling: Joules(8.0 * 250.0 * 30.0 / 8.0), // 8 windows lumped
+        };
+        let expected = 7500.0 + 10_000.0 - 1620.0;
+        assert!((acc.net().0 - expected).abs() < 1e-9);
+        assert!((acc.mean_power().0 - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edp_exponents() {
+        let acc = EnergyAccount {
+            gross: Joules(1000.0),
+            duration: Seconds(10.0),
+            ..Default::default()
+        };
+        assert!((acc.edp(1.0) - 10_000.0).abs() < 1e-9);
+        assert!((acc.edp(2.0) - 100_000.0).abs() < 1e-9);
+        assert!((acc.edp(0.0) - 1000.0).abs() < 1e-9);
+    }
+}

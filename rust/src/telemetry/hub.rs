@@ -1,0 +1,137 @@
+//! The telemetry hub: where the execution substrate publishes component
+//! power, and where all measurement interfaces read from.
+//!
+//! In simulation the workload driver publishes after every simulated step
+//! (virtual time); on the real PJRT path the training loop publishes after
+//! every executed batch (wall time).  NVML/RAPL facades and samplers only
+//! ever see the hub, so they are identical in both modes.
+
+use std::sync::Mutex;
+
+use crate::util::{Seconds, Watts};
+
+/// Instantaneous component state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerReading {
+    pub at: Seconds,
+    pub gpu: Watts,
+    pub cpu: Watts,
+    pub dram: Watts,
+    pub gpu_util: f64,
+    pub freq_mhz: f64,
+}
+
+impl Default for PowerReading {
+    fn default() -> Self {
+        PowerReading {
+            at: Seconds(0.0),
+            gpu: Watts(0.0),
+            cpu: Watts(0.0),
+            dram: Watts(0.0),
+            gpu_util: 0.0,
+            freq_mhz: 0.0,
+        }
+    }
+}
+
+impl PowerReading {
+    pub fn total(&self) -> Watts {
+        self.gpu + self.cpu + self.dram
+    }
+}
+
+/// Shared publication point.  Subscribers (RAPL counters) accumulate energy
+/// between publications; instantaneous readers (NVML) see the latest value.
+#[derive(Debug, Default)]
+pub struct TelemetryHub {
+    state: Mutex<HubState>,
+}
+
+#[derive(Debug, Default)]
+struct HubState {
+    current: PowerReading,
+    /// Cumulative true energy per component since construction (J) — the
+    /// ground truth RAPL counters quantise.
+    gpu_j: f64,
+    cpu_j: f64,
+    dram_j: f64,
+}
+
+impl TelemetryHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish a new reading at time `r.at`; energy accumulates assuming the
+    /// previous reading held since its timestamp (piecewise-constant).
+    pub fn publish(&self, r: PowerReading) {
+        let mut s = self.state.lock().unwrap();
+        let dt = (r.at.0 - s.current.at.0).max(0.0);
+        s.gpu_j += s.current.gpu.0 * dt;
+        s.cpu_j += s.current.cpu.0 * dt;
+        s.dram_j += s.current.dram.0 * dt;
+        s.current = r;
+    }
+
+    /// Latest instantaneous reading.
+    pub fn read(&self) -> PowerReading {
+        self.state.lock().unwrap().current
+    }
+
+    /// Ground-truth cumulative energy (gpu, cpu, dram) in joules.
+    pub fn true_energy(&self) -> (f64, f64, f64) {
+        let s = self.state.lock().unwrap();
+        (s.gpu_j, s.cpu_j, s.dram_j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reading(at: f64, gpu: f64) -> PowerReading {
+        PowerReading {
+            at: Seconds(at),
+            gpu: Watts(gpu),
+            cpu: Watts(50.0),
+            dram: Watts(24.0),
+            gpu_util: 0.9,
+            freq_mhz: 1700.0,
+        }
+    }
+
+    #[test]
+    fn publishes_and_reads_latest() {
+        let hub = TelemetryHub::new();
+        hub.publish(reading(1.0, 300.0));
+        assert_eq!(hub.read().gpu, Watts(300.0));
+        hub.publish(reading(2.0, 200.0));
+        assert_eq!(hub.read().gpu, Watts(200.0));
+    }
+
+    #[test]
+    fn accumulates_energy_piecewise_constant() {
+        let hub = TelemetryHub::new();
+        hub.publish(reading(0.0, 300.0));
+        hub.publish(reading(10.0, 100.0)); // 300 W held for 10 s
+        hub.publish(reading(15.0, 0.0));   // 100 W held for 5 s
+        let (gpu_j, cpu_j, dram_j) = hub.true_energy();
+        assert!((gpu_j - (300.0 * 10.0 + 100.0 * 5.0)).abs() < 1e-9);
+        assert!((cpu_j - 50.0 * 15.0).abs() < 1e-9);
+        assert!((dram_j - 24.0 * 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_order_timestamps_do_not_uncount() {
+        let hub = TelemetryHub::new();
+        hub.publish(reading(10.0, 300.0));
+        hub.publish(reading(5.0, 100.0)); // dt clamps to 0
+        let (gpu_j, _, _) = hub.true_energy();
+        assert_eq!(gpu_j, 0.0);
+    }
+
+    #[test]
+    fn total_sums_components() {
+        assert_eq!(reading(0.0, 300.0).total(), Watts(374.0));
+    }
+}

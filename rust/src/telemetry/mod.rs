@@ -1,0 +1,29 @@
+//! Software power telemetry — FROST's measurement half (paper Sec. III-A/B).
+//!
+//! Mirrors the real interfaces the paper reads so the measurement problems
+//! are faithfully reproduced:
+//!
+//! * [`nvml`] — an NVML-like GPU device facade (mW readings, integer-percent
+//!   utilisation, enforced power limits, sensor ripple);
+//! * [`rapl`] — a RAPL-like MSR energy counter (µJ units, 32-bit wraparound,
+//!   per-device calibration offset within the validated ±5 W band);
+//! * [`hub`] — the publication point the simulator/runtime drives;
+//! * [`sampler`] — periodic power sampling (FROST samples every 0.1 s);
+//! * [`energy`] — trapezoidal integration + idle-baseline subtraction,
+//!   implementing Eqs. 1–5;
+//! * [`tools`] — FROST vs CodeCarbon-like vs Eco2AI-like instrumentation
+//!   for the overhead comparison (Fig. 3).
+
+pub mod energy;
+pub mod hub;
+pub mod nvml;
+pub mod rapl;
+pub mod sampler;
+pub mod tools;
+
+pub use energy::{integrate, EnergyAccount};
+pub use hub::{PowerReading, TelemetryHub};
+pub use nvml::NvmlDevice;
+pub use rapl::RaplMsr;
+pub use sampler::{PowerSample, PowerSampler};
+pub use tools::{BaselineTool, CodeCarbonLike, Eco2AiLike, FrostTool, MeasurementTool};

@@ -1,0 +1,146 @@
+//! NVML-like GPU device facade.
+//!
+//! Mirrors the subset of the NVIDIA Management Library the paper uses
+//! (Sec. III-A): instantaneous power in milliwatts, device utilisation as
+//! integer percent, the enforced power limit, and graphics clock.  NVML
+//! "reports raw measurements" — so this facade adds sensor ripple and the
+//! per-device calibration offset of the validated ±5 W band, on top of the
+//! hub's ground truth.
+
+use std::sync::Arc;
+
+use crate::util::{Pcg32, Watts};
+
+use super::hub::TelemetryHub;
+
+/// Handle analogous to `nvmlDeviceGetHandleByIndex`.
+#[derive(Debug)]
+pub struct NvmlDevice {
+    hub: Arc<TelemetryHub>,
+    rng: std::sync::Mutex<Pcg32>,
+    /// Fixed calibration bias of this sensor (W), within ±5 W.
+    bias_w: f64,
+    /// TDP in mW (default power limit).
+    tdp_mw: u64,
+    /// Currently enforced limit in mW.
+    limit_mw: std::sync::atomic::AtomicU64,
+    /// Driver floor for limits, in mW.
+    min_limit_mw: u64,
+}
+
+impl NvmlDevice {
+    pub fn new(hub: Arc<TelemetryHub>, tdp_w: f64, min_cap_frac: f64, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0x4E564D);
+        let bias_w = rng.uniform(-4.0, 4.0);
+        let tdp_mw = (tdp_w * 1e3) as u64;
+        NvmlDevice {
+            hub,
+            rng: std::sync::Mutex::new(rng),
+            bias_w,
+            tdp_mw,
+            limit_mw: std::sync::atomic::AtomicU64::new(tdp_mw),
+            min_limit_mw: (tdp_w * min_cap_frac * 1e3) as u64,
+        }
+    }
+
+    /// `nvmlDeviceGetPowerUsage`: current draw in milliwatts, with sensor
+    /// ripple (~0.8 W RMS) and the device's calibration bias.
+    pub fn power_usage_mw(&self) -> u64 {
+        let truth = self.hub.read().gpu.0;
+        let noise = self.rng.lock().unwrap().normal() * 0.8;
+        ((truth + self.bias_w + noise).max(0.0) * 1e3) as u64
+    }
+
+    /// `nvmlDeviceGetUtilizationRates().gpu`: integer percent.
+    pub fn utilization_pct(&self) -> u32 {
+        (self.hub.read().gpu_util * 100.0).round().clamp(0.0, 100.0) as u32
+    }
+
+    /// `nvmlDeviceGetClockInfo(NVML_CLOCK_GRAPHICS)`: MHz.
+    pub fn graphics_clock_mhz(&self) -> u32 {
+        self.hub.read().freq_mhz.round() as u32
+    }
+
+    /// `nvmlDeviceGetEnforcedPowerLimit`: mW.
+    pub fn enforced_power_limit_mw(&self) -> u64 {
+        self.limit_mw.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// `nvmlDeviceSetPowerManagementLimit`: clamps to the driver's supported
+    /// range, exactly like nvidia-smi -pl.  Returns the enforced value.
+    pub fn set_power_limit_mw(&self, mw: u64) -> u64 {
+        let clamped = mw.clamp(self.min_limit_mw, self.tdp_mw);
+        self.limit_mw.store(clamped, std::sync::atomic::Ordering::Release);
+        clamped
+    }
+
+    /// Default (100%) limit = TDP, in mW.
+    pub fn default_power_limit_mw(&self) -> u64 {
+        self.tdp_mw
+    }
+
+    /// Convenience: enforced limit as a Watts fraction of TDP.
+    pub fn enforced_cap_frac(&self) -> f64 {
+        self.enforced_power_limit_mw() as f64 / self.tdp_mw as f64
+    }
+
+    /// Sensor calibration bias (test/diagnostic access).
+    pub fn bias(&self) -> Watts {
+        Watts(self.bias_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::hub::PowerReading;
+    use crate::util::Seconds;
+
+    fn hub_at(gpu_w: f64, util: f64) -> Arc<TelemetryHub> {
+        let hub = Arc::new(TelemetryHub::new());
+        hub.publish(PowerReading {
+            at: Seconds(0.0),
+            gpu: Watts(gpu_w),
+            cpu: Watts(40.0),
+            dram: Watts(24.0),
+            gpu_util: util,
+            freq_mhz: 1710.0,
+        });
+        hub
+    }
+
+    #[test]
+    fn power_reading_within_validated_band() {
+        let dev = NvmlDevice::new(hub_at(300.0, 0.97), 320.0, 0.3125, 1);
+        for _ in 0..100 {
+            let w = dev.power_usage_mw() as f64 / 1e3;
+            assert!((w - 300.0).abs() < 8.0, "reading {w} too far from truth");
+        }
+    }
+
+    #[test]
+    fn utilization_integer_percent() {
+        let dev = NvmlDevice::new(hub_at(300.0, 0.974), 320.0, 0.3125, 1);
+        assert_eq!(dev.utilization_pct(), 97);
+    }
+
+    #[test]
+    fn power_limit_clamped_to_driver_range() {
+        let dev = NvmlDevice::new(hub_at(0.0, 0.0), 320.0, 0.3125, 1);
+        assert_eq!(dev.default_power_limit_mw(), 320_000);
+        // nvidia-smi -pl 50 on a 3080 -> clamped to 100 W.
+        assert_eq!(dev.set_power_limit_mw(50_000), 100_000);
+        assert_eq!(dev.set_power_limit_mw(400_000), 320_000);
+        let set = dev.set_power_limit_mw(192_000);
+        assert_eq!(set, 192_000);
+        assert!((dev.enforced_cap_frac() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distinct_devices_have_distinct_biases() {
+        let a = NvmlDevice::new(hub_at(0.0, 0.0), 320.0, 0.3125, 1);
+        let b = NvmlDevice::new(hub_at(0.0, 0.0), 320.0, 0.3125, 2);
+        assert_ne!(a.bias().0, b.bias().0);
+        assert!(a.bias().0.abs() < 5.0 && b.bias().0.abs() < 5.0);
+    }
+}

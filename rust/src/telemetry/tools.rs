@@ -1,0 +1,424 @@
+//! Energy-measurement tool implementations for the overhead comparison
+//! (paper Fig. 3): FROST vs CodeCarbon-like vs Eco2AI-like vs baseline.
+//!
+//! The real tools are in-process Python threads that contend with the
+//! training loop (GIL), so their per-tick work steals time from the ML
+//! pipeline.  We reproduce that mechanism by running each tool's tick
+//! *inline* on the executor's hot path (cooperative instrumentation): the
+//! heavier the tick, the larger the measured overhead — faithfully the
+//! effect the paper measures.  Tick work is real CPU work (parsing,
+//! formatting, table scans), not sleeps.
+//!
+//! Periods follow the paper (Sec. IV-B): FROST samples every 0.1 s with a
+//! raw-counter read; CodeCarbon/Eco2AI tick at 1 Hz but do far more per
+//! tick (carbon-intensity analytics / generic per-process attribution).
+
+use std::sync::Arc;
+
+use crate::util::Seconds;
+
+use super::hub::TelemetryHub;
+use super::nvml::NvmlDevice;
+use super::rapl::{RaplDomain, RaplMsr};
+
+/// A power/energy measurement tool attachable to a pipeline loop.
+pub trait MeasurementTool: Send {
+    fn name(&self) -> &'static str;
+    /// Called by the executor as time advances; the tool decides whether a
+    /// tick is due and does its (real) per-tick work.
+    fn on_tick(&mut self, now: Seconds);
+    /// Number of samples the tool has collected.
+    fn samples(&self) -> usize;
+    /// Total energy the tool believes was consumed (J), for parity checks.
+    fn measured_energy(&self) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: no measurement at all.
+// ---------------------------------------------------------------------------
+
+/// The paper's "baseline experiment with no energy measurement".
+#[derive(Debug, Default)]
+pub struct BaselineTool;
+
+impl MeasurementTool for BaselineTool {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+    fn on_tick(&mut self, _now: Seconds) {}
+    fn samples(&self) -> usize {
+        0
+    }
+    fn measured_energy(&self) -> f64 {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FROST: raw counter reads at 10 Hz.
+// ---------------------------------------------------------------------------
+
+/// FROST's sampler: NVML power + RAPL counter, nothing else.
+pub struct FrostTool {
+    nvml: NvmlDevice,
+    rapl: RaplMsr,
+    hub: Arc<TelemetryHub>,
+    period: f64,
+    next: Option<f64>,
+    records: Vec<(f64, f64)>, // (t, total W)
+    last_raw: u32,
+    last_t: f64,
+    energy_j: f64,
+}
+
+impl FrostTool {
+    pub fn new(hub: Arc<TelemetryHub>, tdp_w: f64, seed: u64) -> Self {
+        FrostTool {
+            nvml: NvmlDevice::new(hub.clone(), tdp_w, 0.3, seed),
+            rapl: RaplMsr::new(hub.clone(), RaplDomain::Pkg, seed),
+            hub,
+            period: 0.1,
+            next: None,
+            records: Vec::new(),
+            last_raw: 0,
+            last_t: 0.0,
+            energy_j: 0.0,
+        }
+    }
+}
+
+impl MeasurementTool for FrostTool {
+    fn name(&self) -> &'static str {
+        "FROST"
+    }
+
+    fn on_tick(&mut self, now: Seconds) {
+        let due = match self.next {
+            None => {
+                self.next = Some(now.0 + self.period);
+                self.last_raw = self.rapl.read_raw();
+                self.last_t = now.0;
+                return;
+            }
+            Some(d) => d,
+        };
+        if now.0 < due {
+            return;
+        }
+        // Raw reads only — this is the entire per-tick cost of FROST.
+        let gpu_w = self.nvml.power_usage_mw() as f64 / 1e3;
+        let raw = self.rapl.read_raw();
+        let dt = (now.0 - self.last_t).max(1e-9);
+        let cpu_w = RaplMsr::delta_joules(self.last_raw, raw) / dt;
+        let dram_w = self.hub.read().dram.0;
+        let total = gpu_w + cpu_w + dram_w;
+        self.records.push((now.0, total));
+        self.energy_j += total * dt;
+        self.last_raw = raw;
+        self.last_t = now.0;
+        self.next = Some(due + self.period);
+    }
+
+    fn samples(&self) -> usize {
+        self.records.len()
+    }
+
+    fn measured_energy(&self) -> f64 {
+        self.energy_j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared helper: deterministic CPU-bound busy work (hash/format churn).
+// ---------------------------------------------------------------------------
+
+/// Burn real CPU on string/number churn roughly proportional to `units`.
+/// Returns a checksum so the optimiser cannot elide the work.
+fn busy_work(units: usize, salt: u64) -> u64 {
+    let mut acc = salt;
+    let mut buf = String::with_capacity(64);
+    for i in 0..units {
+        use std::fmt::Write as _;
+        buf.clear();
+        let v = (i as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ acc;
+        let _ = write!(buf, "{:.6},{:x},{}", v as f64 * 1e-9, v, v % 997);
+        // Parse it back — the tools spend their time in exactly this kind of
+        // serialise/deserialise churn (CSV rows, /proc text, JSON).
+        let parsed: f64 = buf.split(',').next().unwrap().parse().unwrap_or(0.0);
+        acc = acc.wrapping_add(parsed.to_bits()).rotate_left(7);
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// CodeCarbon-like: 1 Hz, counters + carbon analytics + CSV emission.
+// ---------------------------------------------------------------------------
+
+/// CodeCarbon-style tracker: same counters as FROST plus per-tick carbon
+/// intensity analytics (regional grid mix), cumulative emission statistics
+/// and a CSV row append.
+pub struct CodeCarbonLike {
+    inner: FrostTool,
+    period: f64,
+    next: Option<f64>,
+    csv: String,
+    checksum: u64,
+    ticks: usize,
+    /// Per-tick analytic workload (regions × mix terms).
+    pub work_units: usize,
+}
+
+impl CodeCarbonLike {
+    pub fn new(hub: Arc<TelemetryHub>, tdp_w: f64, seed: u64) -> Self {
+        CodeCarbonLike {
+            inner: FrostTool::new(hub, tdp_w, seed),
+            period: 1.0,
+            next: None,
+            csv: String::new(),
+            checksum: 0,
+            ticks: 0,
+            work_units: 60_000,
+        }
+    }
+}
+
+impl MeasurementTool for CodeCarbonLike {
+    fn name(&self) -> &'static str {
+        "CodeCarbon-like"
+    }
+
+    fn on_tick(&mut self, now: Seconds) {
+        // Uses the same APIs as FROST for the raw numbers (paper Sec. IV-B)…
+        self.inner.on_tick(now);
+        let due = match self.next {
+            None => {
+                self.next = Some(now.0 + self.period);
+                return;
+            }
+            Some(d) => d,
+        };
+        if now.0 < due {
+            return;
+        }
+        // …then the extra analytics that explain its overhead: grid-mix
+        // carbon intensity over many regions, rolling statistics, CSV row.
+        self.checksum ^= busy_work(self.work_units, 0xC0DE);
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            self.csv,
+            "{:.3},{:.3},{:.6},{}",
+            now.0,
+            self.inner.measured_energy(),
+            self.inner.measured_energy() * 0.000475, // kgCO2e at ~475 g/kWh
+            self.checksum % 1000,
+        );
+        self.ticks += 1;
+        self.next = Some(due + self.period);
+    }
+
+    fn samples(&self) -> usize {
+        self.ticks
+    }
+
+    fn measured_energy(&self) -> f64 {
+        self.inner.measured_energy()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eco2AI-like: 1 Hz, NVML + generic per-process CPU attribution.
+// ---------------------------------------------------------------------------
+
+/// Eco2AI-style tracker: NVML for the GPU plus a *generic* CPU
+/// implementation that scans a process table and attributes shares —
+/// text-parsing heavy, like reading /proc.
+pub struct Eco2AiLike {
+    nvml: NvmlDevice,
+    hub: Arc<TelemetryHub>,
+    period: f64,
+    next: Option<f64>,
+    proc_table: Vec<String>,
+    ticks: usize,
+    energy_j: f64,
+    last_t: f64,
+    checksum: u64,
+    /// Simulated process-table size.
+    pub n_procs: usize,
+}
+
+impl Eco2AiLike {
+    pub fn new(hub: Arc<TelemetryHub>, tdp_w: f64, seed: u64) -> Self {
+        // Build a /proc-like table once; rescanned (re-parsed) every tick.
+        let n_procs = 400;
+        let proc_table = (0..n_procs)
+            .map(|pid| {
+                format!(
+                    "{pid} (proc{pid}) S {} {} {} {}",
+                    pid * 7 % 977,
+                    (pid * 37) % 10_000,
+                    (pid * 91) % 10_000,
+                    (pid * 13) % 100
+                )
+            })
+            .collect();
+        Eco2AiLike {
+            nvml: NvmlDevice::new(hub.clone(), tdp_w, 0.3, seed),
+            hub,
+            period: 1.0,
+            next: None,
+            proc_table,
+            ticks: 0,
+            energy_j: 0.0,
+            last_t: 0.0,
+            checksum: 0,
+            n_procs,
+        }
+    }
+}
+
+impl MeasurementTool for Eco2AiLike {
+    fn name(&self) -> &'static str {
+        "Eco2AI-like"
+    }
+
+    fn on_tick(&mut self, now: Seconds) {
+        let due = match self.next {
+            None => {
+                self.next = Some(now.0 + self.period);
+                self.last_t = now.0;
+                return;
+            }
+            Some(d) => d,
+        };
+        if now.0 < due {
+            return;
+        }
+        let gpu_w = self.nvml.power_usage_mw() as f64 / 1e3;
+        // Generic CPU attribution: parse every row of the process table and
+        // compute utilisation shares (the expensive part of psutil-style
+        // implementations) — several passes, like the real tool's
+        // per-logical-cpu times.
+        let mut total_jiffies = 0u64;
+        for _pass in 0..40 {
+            for row in &self.proc_table {
+                let mut it = row.split_whitespace();
+                let _pid: u64 = it.next().unwrap().parse().unwrap_or(0);
+                let _ = it.next();
+                let _ = it.next();
+                let utime: u64 = it.next().unwrap_or("0").parse().unwrap_or(0);
+                let stime: u64 = it.next().unwrap_or("0").parse().unwrap_or(0);
+                total_jiffies = total_jiffies.wrapping_add(utime + stime);
+            }
+        }
+        self.checksum = self.checksum.wrapping_add(total_jiffies);
+        let cpu_w = self.hub.read().cpu.0; // generic model, not RAPL
+        let dt = (now.0 - self.last_t).max(1e-9);
+        self.energy_j += (gpu_w + cpu_w) * dt;
+        self.last_t = now.0;
+        self.ticks += 1;
+        self.next = Some(due + self.period);
+    }
+
+    fn samples(&self) -> usize {
+        self.ticks
+    }
+
+    fn measured_energy(&self) -> f64 {
+        self.energy_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::hub::PowerReading;
+    use crate::util::Watts;
+    use std::time::Instant;
+
+    fn hub_with_power() -> Arc<TelemetryHub> {
+        let hub = Arc::new(TelemetryHub::new());
+        hub.publish(PowerReading {
+            at: Seconds(0.0),
+            gpu: Watts(250.0),
+            cpu: Watts(70.0),
+            dram: Watts(24.0),
+            gpu_util: 0.95,
+            freq_mhz: 1650.0,
+        });
+        hub
+    }
+
+    fn drive(tool: &mut dyn MeasurementTool, hub: &TelemetryHub, secs: f64) {
+        let mut t = 0.0;
+        while t <= secs {
+            hub.publish(PowerReading {
+                at: Seconds(t),
+                gpu: Watts(250.0),
+                cpu: Watts(70.0),
+                dram: Watts(24.0),
+                gpu_util: 0.95,
+                freq_mhz: 1650.0,
+            });
+            tool.on_tick(Seconds(t));
+            t += 0.05;
+        }
+    }
+
+    #[test]
+    fn frost_collects_more_samples_than_1hz_tools() {
+        let hub = hub_with_power();
+        let mut frost = FrostTool::new(hub.clone(), 320.0, 1);
+        let mut cc = CodeCarbonLike::new(hub.clone(), 320.0, 1);
+        let mut eco = Eco2AiLike::new(hub.clone(), 320.0, 1);
+        drive(&mut frost, &hub, 10.0);
+        drive(&mut cc, &hub, 10.0);
+        drive(&mut eco, &hub, 10.0);
+        assert!(frost.samples() >= 95, "frost {}", frost.samples());
+        assert!((9..=11).contains(&cc.samples()), "cc {}", cc.samples());
+        assert!((9..=11).contains(&eco.samples()), "eco {}", eco.samples());
+    }
+
+    #[test]
+    fn tools_measure_similar_energy() {
+        // Paper: "Both tools provide similar energy measurements with FROST".
+        let hub = hub_with_power();
+        let mut frost = FrostTool::new(hub.clone(), 320.0, 2);
+        let mut cc = CodeCarbonLike::new(hub.clone(), 320.0, 2);
+        drive(&mut frost, &hub, 20.0);
+        drive(&mut cc, &hub, 20.0);
+        let truth = (250.0 + 70.0 + 24.0) * 20.0;
+        assert!((frost.measured_energy() - truth).abs() / truth < 0.08);
+        assert!((cc.measured_energy() - truth).abs() / truth < 0.08);
+    }
+
+    #[test]
+    fn per_tick_cost_ordering() {
+        // The mechanism of Fig. 3: FROST's tick is orders of magnitude
+        // cheaper than the analytics-laden tools'.
+        let hub = hub_with_power();
+        let time_tool = |tool: &mut dyn MeasurementTool| {
+            // Arm, then measure exactly one due tick.
+            tool.on_tick(Seconds(0.0));
+            let t0 = Instant::now();
+            tool.on_tick(Seconds(5.0));
+            t0.elapsed().as_secs_f64()
+        };
+        let mut frost = FrostTool::new(hub.clone(), 320.0, 3);
+        let mut cc = CodeCarbonLike::new(hub.clone(), 320.0, 3);
+        let mut eco = Eco2AiLike::new(hub.clone(), 320.0, 3);
+        let t_frost = time_tool(&mut frost);
+        let t_cc = time_tool(&mut cc);
+        let t_eco = time_tool(&mut eco);
+        assert!(frost.samples() == 1 && cc.samples() == 1 && eco.samples() == 1);
+        assert!(t_cc > t_frost * 10.0, "cc {t_cc} vs frost {t_frost}");
+        assert!(t_eco > t_frost * 10.0, "eco {t_eco} vs frost {t_frost}");
+    }
+
+    #[test]
+    fn baseline_does_nothing() {
+        let mut b = BaselineTool;
+        b.on_tick(Seconds(1.0));
+        assert_eq!(b.samples(), 0);
+        assert_eq!(b.measured_energy(), 0.0);
+    }
+}

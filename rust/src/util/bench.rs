@@ -1,0 +1,98 @@
+//! Micro-benchmark harness (criterion is unavailable offline — DESIGN.md §2).
+//!
+//! Auto-calibrating: picks an iteration count targeting ~0.5 s per bench,
+//! reports mean / median / p95 like criterion's summary line, and returns
+//! the stats so the perf pass can record before/after in EXPERIMENTS.md.
+//!
+//! Used by every file under `rust/benches/` (all `harness = false`).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark's summary statistics (nanoseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly, auto-calibrated to ~`target_s` seconds total, and
+/// print a summary line. Returns the stats.
+pub fn bench<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    // Calibration: run once to estimate cost.
+    let t0 = Instant::now();
+    black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once).ceil() as u64).clamp(3, 1_000_000);
+
+    let mut samples_ns: Vec<f64> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        black_box(f());
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+    let stats = BenchStats {
+        iters,
+        mean_ns: mean,
+        median_ns: samples_ns[samples_ns.len() / 2],
+        p95_ns: samples_ns
+            [((samples_ns.len() as f64 * 0.95) as usize).min(samples_ns.len() - 1)],
+        min_ns: samples_ns[0],
+    };
+    println!(
+        "bench {name:<44} {:>12}/iter  (median {:>10}, p95 {:>10}, n={})",
+        fmt_ns(stats.mean_ns),
+        fmt_ns(stats.median_ns),
+        fmt_ns(stats.p95_ns),
+        stats.iters
+    );
+    stats
+}
+
+/// Group header for readability in `cargo bench` output.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let stats = bench("noop-ish", 0.02, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.iters >= 3);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.median_ns <= stats.p95_ns);
+        assert!(stats.min_ns <= stats.median_ns);
+    }
+}

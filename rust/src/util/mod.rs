@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, unit newtypes, series I/O.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod series;
+pub mod units;
+
+pub use json::Json;
+pub use rng::Pcg32;
+pub use series::Series;
+pub use units::{Joules, Seconds, Watts};

@@ -1,0 +1,138 @@
+//! Labelled numeric series: the common currency between experiment
+//! harnesses, figure regenerators and CSV output.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// A named table of rows — each figure regenerator returns one of these and
+/// the CLI renders it as an aligned table or CSV.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+    /// Optional per-row labels (e.g. model names).
+    pub labels: Vec<String>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, columns: &[&str]) -> Self {
+        Series {
+            name: name.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    /// Push a labelled row; panics if the arity disagrees with `columns`.
+    pub fn push(&mut self, label: impl Into<String>, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row arity mismatch in series '{}'",
+            self.name
+        );
+        self.labels.push(label.into());
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Extract one column by name.
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    /// Render as an aligned text table (what the CLI prints).
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let label_w = self
+            .labels
+            .iter()
+            .map(|l| l.len())
+            .chain(std::iter::once(5))
+            .max()
+            .unwrap_or(5);
+        let _ = writeln!(out, "# {}", self.name);
+        let _ = write!(out, "{:label_w$}", "");
+        for c in &self.columns {
+            let _ = write!(out, "  {:>14}", c);
+        }
+        let _ = writeln!(out);
+        for (label, row) in self.labels.iter().zip(&self.rows) {
+            let _ = write!(out, "{:label_w$}", label);
+            for v in row {
+                let _ = write!(out, "  {:>14.4}", v);
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Render as CSV (label column first).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "label,{}", self.columns.join(","));
+        for (label, row) in self.labels.iter().zip(&self.rows) {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            let _ = writeln!(out, "{},{}", label, cells.join(","));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Series {
+        let mut s = Series::new("fig", &["energy_j", "time_s"]);
+        s.push("lenet", vec![10.0, 1.0]);
+        s.push("resnet", vec![200.0, 12.5]);
+        s
+    }
+
+    #[test]
+    fn push_and_column() {
+        let s = sample();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.column("energy_j").unwrap(), vec![10.0, 200.0]);
+        assert!(s.column("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut s = sample();
+        s.push("bad", vec![1.0]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "label,energy_j,time_s");
+        assert!(lines[1].starts_with("lenet,"));
+    }
+
+    #[test]
+    fn table_contains_headers_and_labels() {
+        let t = sample().to_table();
+        assert!(t.contains("energy_j"));
+        assert!(t.contains("resnet"));
+    }
+}

@@ -1,0 +1,169 @@
+//! Unit newtypes for the energy accounting (Eqs. 1–5 of the paper).
+//!
+//! Power/energy book-keeping bugs (mW vs W, J vs Wh) are the classic failure
+//! mode of measurement frameworks, so the crate keeps all three quantities
+//! in distinct newtypes and only converts at the presentation boundary.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// Power in watts.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Watts(pub f64);
+
+/// Energy in joules.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Joules(pub f64);
+
+/// Duration in seconds (simulation time; f64 keeps integration simple).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Seconds(pub f64);
+
+impl Watts {
+    pub fn value(self) -> f64 {
+        self.0
+    }
+    /// Energy accumulated over a duration: J = W · s.
+    pub fn over(self, dt: Seconds) -> Joules {
+        Joules(self.0 * dt.0)
+    }
+    pub fn milliwatts(self) -> f64 {
+        self.0 * 1e3
+    }
+    pub fn clamp(self, lo: Watts, hi: Watts) -> Watts {
+        Watts(self.0.clamp(lo.0, hi.0))
+    }
+}
+
+impl Joules {
+    pub fn value(self) -> f64 {
+        self.0
+    }
+    pub fn watt_hours(self) -> f64 {
+        self.0 / 3600.0
+    }
+    pub fn kilojoules(self) -> f64 {
+        self.0 / 1e3
+    }
+    /// Average power over a duration.
+    pub fn mean_power(self, dt: Seconds) -> Watts {
+        Watts(if dt.0 > 0.0 { self.0 / dt.0 } else { 0.0 })
+    }
+}
+
+impl Seconds {
+    pub fn value(self) -> f64 {
+        self.0
+    }
+    pub fn from_millis(ms: f64) -> Seconds {
+        Seconds(ms / 1e3)
+    }
+    pub fn as_millis(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+macro_rules! impl_linear {
+    ($t:ident) => {
+        impl Add for $t {
+            type Output = $t;
+            fn add(self, o: $t) -> $t {
+                $t(self.0 + o.0)
+            }
+        }
+        impl AddAssign for $t {
+            fn add_assign(&mut self, o: $t) {
+                self.0 += o.0;
+            }
+        }
+        impl Sub for $t {
+            type Output = $t;
+            fn sub(self, o: $t) -> $t {
+                $t(self.0 - o.0)
+            }
+        }
+        impl Neg for $t {
+            type Output = $t;
+            fn neg(self) -> $t {
+                $t(-self.0)
+            }
+        }
+        impl Mul<f64> for $t {
+            type Output = $t;
+            fn mul(self, k: f64) -> $t {
+                $t(self.0 * k)
+            }
+        }
+        impl Div<f64> for $t {
+            type Output = $t;
+            fn div(self, k: f64) -> $t {
+                $t(self.0 / k)
+            }
+        }
+        impl Sum for $t {
+            fn sum<I: Iterator<Item = $t>>(it: I) -> $t {
+                $t(it.map(|v| v.0).sum())
+            }
+        }
+    };
+}
+
+impl_linear!(Watts);
+impl_linear!(Joules);
+impl_linear!(Seconds);
+
+impl fmt::Display for Watts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.2} W", self.0)
+    }
+}
+impl fmt::Display for Joules {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0.abs() >= 1e3 {
+            write!(f, "{:.2} kJ", self.0 / 1e3)
+        } else {
+            write!(f, "{:.2} J", self.0)
+        }
+    }
+}
+impl fmt::Display for Seconds {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3} s", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_times_time_is_energy() {
+        let e = Watts(320.0).over(Seconds(10.0));
+        assert_eq!(e, Joules(3200.0));
+        assert!((e.watt_hours() - 3200.0 / 3600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_power_roundtrip() {
+        let p = Joules(3200.0).mean_power(Seconds(10.0));
+        assert!((p.0 - 320.0).abs() < 1e-12);
+        assert_eq!(Joules(1.0).mean_power(Seconds(0.0)), Watts(0.0));
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(Watts(1.0) + Watts(2.0), Watts(3.0));
+        assert_eq!(Joules(5.0) - Joules(2.0), Joules(3.0));
+        assert_eq!(Seconds(2.0) * 3.0, Seconds(6.0));
+        let total: Joules = vec![Joules(1.0), Joules(2.5)].into_iter().sum();
+        assert_eq!(total, Joules(3.5));
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", Watts(320.0)), "320.00 W");
+        assert_eq!(format!("{}", Joules(1500.0)), "1.50 kJ");
+        assert_eq!(format!("{}", Joules(10.0)), "10.00 J");
+    }
+}

@@ -1,0 +1,258 @@
+//! Parser for the AOT manifest (`artifacts/manifest.json`).
+//!
+//! The manifest is the contract between the Python build path (L1/L2) and
+//! this crate: artifact file names, the flat state layout, tensor shapes,
+//! and the cost model that seeds the simulator for trainable models.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Shape+dtype of one tensor in the state layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("shape must be an array")?
+            .iter()
+            .map(|v| v.as_usize().context("shape entries must be usize"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.req("dtype")?.as_str().context("dtype")?.to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One HLO artifact (init / train / infer) of a model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub batch: Option<u32>,
+    pub n_outputs: usize,
+    pub flops_xla: Option<f64>,
+    pub flops_analytic: Option<f64>,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ArtifactEntry {
+            file: j.req("file")?.as_str().context("file")?.to_string(),
+            batch: j.get("batch").and_then(|v| v.as_f64()).map(|v| v as u32),
+            n_outputs: j.get("n_outputs").and_then(|v| v.as_usize()).unwrap_or(0),
+            flops_xla: j.get("flops_xla").and_then(|v| v.as_f64()),
+            flops_analytic: j.get("flops_analytic").and_then(|v| v.as_f64()),
+        })
+    }
+}
+
+/// One trainable model in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestModel {
+    pub name: String,
+    pub n_params: usize,
+    pub n_state: usize,
+    pub param_count: u64,
+    pub state_specs: Vec<TensorSpec>,
+    pub init: ArtifactEntry,
+    pub train: ArtifactEntry,
+    pub infer: ArtifactEntry,
+    /// Per-layer (flops, bytes) forward costs.
+    pub layer_costs: Vec<(String, f64, f64)>,
+}
+
+impl ManifestModel {
+    /// Training FLOPs per sample (prefers the XLA cost analysis).
+    pub fn train_flops_per_sample(&self) -> Option<f64> {
+        let batch = self.train.batch? as f64;
+        self.train.flops_xla.or(self.train.flops_analytic).map(|f| f / batch)
+    }
+
+    /// Forward HBM bytes per sample from the analytic layer costs.
+    pub fn fwd_bytes_per_sample(&self) -> Option<f64> {
+        let batch = self.train.batch? as f64;
+        let total: f64 = self.layer_costs.iter().map(|(_, _, b)| b).sum();
+        Some(total / batch)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub jax_version: String,
+    pub seed: u64,
+    pub image_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub models: Vec<ManifestModel>,
+    /// Directory the artifact files live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Self::from_json(&j, dir)
+    }
+
+    /// Default location relative to the crate root.
+    pub fn load_default() -> Result<Self> {
+        let candidates = [
+            PathBuf::from("artifacts/manifest.json"),
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json"),
+        ];
+        for c in &candidates {
+            if c.exists() {
+                return Self::load(c);
+            }
+        }
+        anyhow::bail!("artifacts/manifest.json not found — run `make artifacts`")
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<Self> {
+        let models_obj = j.req("models")?.as_obj().context("models must be an object")?;
+        let mut models = Vec::new();
+        for (name, m) in models_obj {
+            let state_specs = m
+                .req("state_specs")?
+                .as_arr()
+                .context("state_specs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let layer_costs = m
+                .get("layer_costs")
+                .and_then(|v| v.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|lc| {
+                            Some((
+                                lc.get("layer")?.as_str()?.to_string(),
+                                lc.get("flops")?.as_f64()?,
+                                lc.get("bytes")?.as_f64()?,
+                            ))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.push(ManifestModel {
+                name: name.clone(),
+                n_params: m.req("n_params")?.as_usize().context("n_params")?,
+                n_state: m.req("n_state")?.as_usize().context("n_state")?,
+                param_count: m.req("param_count")?.as_i64().context("param_count")? as u64,
+                state_specs,
+                init: ArtifactEntry::from_json(m.req("init")?)?,
+                train: ArtifactEntry::from_json(m.req("train")?)?,
+                infer: ArtifactEntry::from_json(m.req("infer")?)?,
+                layer_costs,
+            });
+        }
+        Ok(Manifest {
+            jax_version: j
+                .get("jax_version")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            seed: j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+            image_shape: j
+                .get("image_shape")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default(),
+            num_classes: j.get("num_classes").and_then(|v| v.as_usize()).unwrap_or(10),
+            models,
+            dir,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ManifestModel> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> &'static str {
+        r#"{
+          "jax_version": "0.8.2",
+          "seed": 0,
+          "image_shape": [32, 32, 3],
+          "num_classes": 10,
+          "models": {
+            "lenet": {
+              "n_params": 10,
+              "n_state": 31,
+              "param_count": 62006,
+              "state_specs": [{"shape": [], "dtype": "float32"},
+                              {"shape": [5, 5, 3, 6], "dtype": "float32"}],
+              "init": {"file": "lenet_init.hlo.txt", "n_outputs": 31},
+              "train": {"file": "lenet_train.hlo.txt", "batch": 64,
+                        "n_outputs": 33, "flops_xla": 381883040.0,
+                        "flops_analytic": 250260480},
+              "infer": {"file": "lenet_infer.hlo.txt", "batch": 128,
+                        "n_outputs": 2},
+              "layer_costs": [{"layer": "0:conv", "flops": 1000, "bytes": 4000}]
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let j = Json::parse(mini_manifest()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let lenet = m.model("lenet").unwrap();
+        assert_eq!(lenet.n_state, 31);
+        assert_eq!(lenet.param_count, 62_006);
+        assert_eq!(lenet.state_specs[1].elements(), 5 * 5 * 3 * 6);
+        assert_eq!(lenet.train.batch, Some(64));
+        let fps = lenet.train_flops_per_sample().unwrap();
+        assert!((fps - 381883040.0 / 64.0).abs() < 1.0);
+        assert_eq!(
+            m.artifact_path(&lenet.infer),
+            PathBuf::from("/tmp/lenet_infer.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        if let Ok(m) = Manifest::load_default() {
+            assert_eq!(m.models.len(), 4);
+            for model in &m.models {
+                assert_eq!(model.n_state, 1 + 3 * model.n_params);
+                assert!(m.artifact_path(&model.train).exists());
+                assert!(model.train_flops_per_sample().unwrap() > 1e5);
+                assert!(model.fwd_bytes_per_sample().unwrap() > 1e3);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_model_lookup_is_none() {
+        let j = Json::parse(mini_manifest()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from(".")).unwrap();
+        assert!(m.model("vgg").is_none());
+    }
+}

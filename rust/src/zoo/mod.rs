@@ -1,0 +1,18 @@
+//! Model zoo: the 16 CNN architectures of the paper's evaluation.
+//!
+//! Two kinds of entries:
+//!
+//! * **Simulated** — all 16 architectures from Sec. IV with workload
+//!   descriptors built from their published characteristics (params, FLOPs,
+//!   arithmetic intensity class).  These drive the paper-scale figure
+//!   sweeps.
+//! * **Trainable** — the four mini architectures that exist as real
+//!   AOT-lowered JAX/Pallas artifacts (`artifacts/manifest.json`) and
+//!   execute through PJRT; their descriptors can be calibrated against
+//!   measured step times ([`manifest::Manifest`]).
+
+pub mod manifest;
+pub mod models;
+
+pub use manifest::{ArtifactEntry, Manifest, ManifestModel};
+pub use models::{all_models, model_by_name, ZooEntry};

@@ -1,0 +1,115 @@
+//! Figure-level shape assertions: the qualitative findings of every paper
+//! figure must hold on the reproduction (DESIGN.md §5).  Absolute numbers
+//! differ (virtual testbeds), the *shape* may not.
+
+use frost::config::{setup_no1, setup_no2};
+use frost::figures;
+
+#[test]
+fn fig2_shape_holds_on_both_setups() {
+    for hw in [setup_no1(), setup_no2()] {
+        let out = figures::fig2_investigation(&hw, 100, 42);
+        // 2a: weak accuracy-energy coupling.
+        assert!(
+            out.r_accuracy_energy.abs() < 0.7,
+            "{}: r(acc,E) = {}",
+            hw.name,
+            out.r_accuracy_energy
+        );
+        // 2b: energy ~ time.
+        assert!(
+            out.r_energy_time > 0.95,
+            "{}: r(E,t) = {}",
+            hw.name,
+            out.r_energy_time
+        );
+        // 2c: someone crosses 300 W on a 320/350 W part.
+        let max_p = out
+            .table
+            .column("gpu_power_w")
+            .unwrap()
+            .into_iter()
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(max_p > 300.0, "{}: max GPU power {max_p}", hw.name);
+    }
+}
+
+#[test]
+fn fig4_per_model_optima_as_in_paper() {
+    let s = figures::fig4_power_capping(
+        &setup_no2(),
+        &["MobileNet", "DenseNet", "EfficientNet"],
+        42,
+    );
+    let opt = |model: &str| {
+        let i = s.labels.iter().position(|l| l.starts_with(model)).unwrap();
+        s.rows[i][3]
+    };
+    // Paper: 60 / 60 / 40. Reproduction requirement: all interior, and the
+    // most bandwidth-bound model (EfficientNet) caps lowest-or-equal.
+    for m in ["MobileNet", "DenseNet", "EfficientNet"] {
+        let o = opt(m);
+        assert!((30.0..=80.0).contains(&o), "{m} optimum {o}%");
+    }
+    assert!(opt("EfficientNet") <= opt("DenseNet") + 2.5);
+}
+
+#[test]
+fn fig5_edxp_ordering() {
+    let out = figures::fig5_fine_grained(&setup_no2(), "ResNet", 42);
+    let caps: Vec<f64> = out.optima.iter().map(|o| o.1).collect();
+    let savings: Vec<f64> = out.optima.iter().map(|o| o.2).collect();
+    assert!(caps[2] > caps[0], "ED3P {} must exceed EDP {}", caps[2], caps[0]);
+    assert!(savings[0] >= savings[2], "EDP saves most: {savings:?}");
+    // Across the zoo, the ED3P *mean* optimum must sit above the EDP mean
+    // (the paper's "more weight on delay -> higher optimal limit", Fig. 5;
+    // on our steeper virtual V-wall the shift is real but smaller than the
+    // paper's "some optima at the maximum" — recorded in EXPERIMENTS.md).
+    let z1 = figures::fig6_tradeoff(&setup_no1(), 1.0, 42);
+    let z3 = figures::fig6_tradeoff(&setup_no1(), 3.0, 42);
+    let mean_cap = |o: &figures::Fig6Output| {
+        o.table.column("optimal_cap_pct").unwrap().iter().sum::<f64>() / 16.0
+    };
+    assert!(
+        mean_cap(&z3) > mean_cap(&z1),
+        "zoo mean ED3P cap {} must exceed EDP {}",
+        mean_cap(&z3),
+        mean_cap(&z1)
+    );
+}
+
+#[test]
+fn fig6_headline_reproduced() {
+    let s1 = figures::fig6_tradeoff(&setup_no1(), 2.0, 42);
+    let s2 = figures::fig6_tradeoff(&setup_no2(), 2.0, 42);
+    // Paper: 26.4% (no.1) / 17.7% (no.2) savings at +6.9% / +5.5% time.
+    // Shape: double-digit savings, single-digit delays, setup1 >= setup2.
+    assert!(
+        (10.0..40.0).contains(&s1.mean_saving_pct),
+        "setup1 saving {:.1}%",
+        s1.mean_saving_pct
+    );
+    assert!(
+        (8.0..35.0).contains(&s2.mean_saving_pct),
+        "setup2 saving {:.1}%",
+        s2.mean_saving_pct
+    );
+    assert!(s1.mean_delay_pct < 10.0 && s2.mean_delay_pct < 10.0);
+    assert!(s1.mean_saving_pct >= s2.mean_saving_pct - 2.0);
+    // Savings dominate delays overall (the paper's conclusion).
+    assert!(s1.mean_saving_pct > 2.0 * s1.mean_delay_pct);
+}
+
+#[test]
+fn capping_never_changes_accuracy() {
+    // Sec. I: "without compromising the model's accuracy" — capping changes
+    // clocks, not numerics. The simulated accuracy model must not depend on
+    // the cap at all.
+    let hw = setup_no1();
+    let a = figures::fig2_investigation(&hw, 30, 7);
+    let b = figures::fig2_investigation(&hw, 30, 7);
+    assert_eq!(
+        a.table.column("accuracy").unwrap(),
+        b.table.column("accuracy").unwrap()
+    );
+}

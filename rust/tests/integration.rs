@@ -1,0 +1,235 @@
+//! Cross-module integration tests: profiler × policies × O-RAN fabric ×
+//! zoo × manifest, on the full simulated stack.
+
+use frost::config::{setup_no1, setup_no2, ExperimentConfig, ProfilerConfig};
+use frost::frost::{EnergyPolicy, PowerProfiler, QosClass};
+use frost::oran::{Bus, InferenceHost, MlLifecycle, OranMessage};
+use frost::simulator::Testbed;
+use frost::util::Json;
+use frost::zoo::{all_models, Manifest};
+
+#[test]
+fn every_zoo_model_profiles_cleanly_on_both_setups() {
+    let reference = setup_no1().gpu;
+    for hw in [setup_no1(), setup_no2()] {
+        for entry in all_models() {
+            let w = entry.workload(&reference);
+            let mut tb = Testbed::new(hw.clone(), 42);
+            let out = PowerProfiler::new(ProfilerConfig::default()).profile(&mut tb, &w, 128);
+            assert_eq!(out.points.len(), 8, "{} on {}", entry.name, hw.name);
+            assert!(
+                out.optimal_cap >= hw.gpu.min_cap_frac - 1e-9 && out.optimal_cap <= 1.0,
+                "{} on {}: cap {}",
+                entry.name,
+                hw.name,
+                out.optimal_cap
+            );
+            // The chosen configuration never violates the default policy's
+            // slowdown budget.
+            assert!(
+                out.est_slowdown <= EnergyPolicy::default_policy().max_slowdown + 0.01,
+                "{} on {}: slowdown {}",
+                entry.name,
+                hw.name,
+                out.est_slowdown
+            );
+        }
+    }
+}
+
+#[test]
+fn qos_classes_order_the_caps_per_model() {
+    // For each model: the latency-critical cap must be >= the energy-saver
+    // cap (paper Fig. 5: weight on delay pushes the optimum up).
+    let reference = setup_no1().gpu;
+    let hw = setup_no2();
+    for entry in all_models().into_iter().take(8) {
+        let w = entry.workload(&reference);
+        let cap_for = |qos: QosClass| {
+            let mut tb = Testbed::new(hw.clone(), 42);
+            let policy = EnergyPolicy { qos, ..EnergyPolicy::default_policy() };
+            let config = ProfilerConfig {
+                edp_exponent: qos.criterion().exponent,
+                ..Default::default()
+            };
+            PowerProfiler::with_policy(config, policy).profile(&mut tb, &w, 128).optimal_cap
+        };
+        let saver = cap_for(QosClass::EnergySaver);
+        let critical = cap_for(QosClass::LatencyCritical);
+        assert!(
+            critical >= saver - 0.03,
+            "{}: latency-critical cap {} below energy-saver {}",
+            entry.name,
+            critical,
+            saver
+        );
+    }
+}
+
+#[test]
+fn policy_update_reprofiles_to_different_decision() {
+    // A1 policy change (energy-saver -> latency-critical) must move the
+    // applied cap on a live host.
+    let bus = Bus::new();
+    bus.endpoint("smo");
+    let mut host = InferenceHost::new(bus.clone(), "h1", setup_no2(), 9);
+    let w = frost::zoo::model_by_name("ResNet").unwrap().workload(&setup_no1().gpu);
+    host.deploy("m", w, true);
+
+    let mut saver = EnergyPolicy::default_policy();
+    saver.qos = QosClass::EnergySaver;
+    bus.send("a1", "h1", OranMessage::PolicyUpdate(saver));
+    bus.deliver_all();
+    host.step();
+    bus.send("smo", "h1", OranMessage::ProfileRequest { model: "m".into(), host: "h1".into() });
+    bus.deliver_all();
+    host.step();
+    let cap_saver = host.testbed.cap_frac();
+
+    let mut crit = EnergyPolicy::default_policy();
+    crit.qos = QosClass::LatencyCritical;
+    crit.max_slowdown = 1.02;
+    bus.send("a1", "h1", OranMessage::PolicyUpdate(crit));
+    bus.deliver_all();
+    host.step();
+    bus.send("smo", "h1", OranMessage::ProfileRequest { model: "m".into(), host: "h1".into() });
+    bus.deliver_all();
+    host.step();
+    let cap_crit = host.testbed.cap_frac();
+
+    assert!(
+        cap_crit > cap_saver,
+        "latency-critical policy must raise the cap: {cap_saver} -> {cap_crit}"
+    );
+}
+
+#[test]
+fn multi_host_lifecycle_with_mixed_policies() {
+    let mut lc = MlLifecycle::new(vec![setup_no1(), setup_no2()], 0.80, 21);
+    let reference = setup_no1().gpu;
+    let models = [("DenseNet", "host1"), ("ResNet", "host2")];
+    for (model, host) in models {
+        let w = frost::zoo::model_by_name(model).unwrap().workload(&reference);
+        lc.run_workflow(model, w, host, EnergyPolicy::default_policy(), 50, 20_000)
+            .unwrap();
+    }
+    assert_eq!(lc.nonrt.catalogue.len(), 2);
+    assert_eq!(lc.nearrt.xapps().len(), 2);
+    assert!(lc.smo.profile_records.len() >= 2);
+    // Both hosts ended up capped below default.
+    for h in &lc.hosts {
+        assert!(h.testbed.cap_frac() <= 1.0);
+    }
+    // Energy accounting flows to the SMO.
+    assert!(lc.smo.total_reported_energy() > 0.0);
+}
+
+#[test]
+fn experiment_config_files_roundtrip_through_disk() {
+    let dir = std::env::temp_dir().join("frost_it_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.json");
+    let cfg = ExperimentConfig::setup_no2();
+    cfg.save(&path).unwrap();
+    let back = ExperimentConfig::load(&path).unwrap();
+    assert_eq!(cfg, back);
+    // And the file is plain JSON parseable by the in-tree parser.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(Json::parse(&text).is_ok());
+}
+
+#[test]
+fn manifest_and_zoo_agree_when_artifacts_built() {
+    let Ok(manifest) = Manifest::load_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // Every trainable zoo entry's artifact exists in the manifest.
+    for entry in all_models() {
+        if let Some(artifact) = entry.artifact {
+            let m = manifest
+                .model(artifact)
+                .unwrap_or_else(|| panic!("{artifact} missing from manifest"));
+            assert!(m.param_count > 0);
+            assert_eq!(m.n_state, 1 + 3 * m.n_params);
+        }
+    }
+}
+
+#[test]
+fn profiling_energy_charge_is_consistent_with_windows() {
+    // Eq. 4: the profiler's energy charge must equal the sum of its window
+    // energies — no free profiling.
+    let w = all_models()[11].workload(&setup_no1().gpu); // ResNet
+    let mut tb = Testbed::new(setup_no2(), 4);
+    let out = PowerProfiler::new(ProfilerConfig::default()).profile(&mut tb, &w, 128);
+    let sum: f64 = out.points.iter().map(|p| p.energy.0).sum();
+    assert!(
+        (out.profiling_energy.0 - sum).abs() / sum < 1e-9,
+        "charge {} != window sum {}",
+        out.profiling_energy.0,
+        sum
+    );
+}
+
+#[test]
+fn continuous_monitor_drives_reprofiling_on_workload_drift() {
+    // O-RAN workflow step vi end to end: a deployed model's workload
+    // signature drifts (model update doubles per-sample FLOPs); the
+    // continuous monitor must notice, trigger exactly one re-profile, and
+    // FROST must land on a different cap for the new regime.
+    use frost::frost::{ContinuousMonitor, MonitorAction, MonitorConfig, Observation};
+
+    let hw = setup_no2();
+    let reference = setup_no1().gpu;
+    let mut tb = Testbed::new(hw.clone(), 17);
+    let w_old = frost::zoo::model_by_name("MobileNetV2").unwrap().workload(&reference);
+    // "Model update": a heavier revision of the same service.
+    let mut w_new = frost::zoo::model_by_name("DenseNet").unwrap().workload(&reference);
+    w_new.name = "MobileNetV2-v2".into();
+
+    let profiler = PowerProfiler::new(ProfilerConfig::default());
+    let first = profiler.profile(&mut tb, &w_old, 128);
+    let mut monitor = ContinuousMonitor::new(MonitorConfig {
+        cooldown: frost::util::Seconds(60.0),
+        ..Default::default()
+    });
+
+    // Steady operation under the old workload: no triggers.
+    let mut action_count = 0;
+    for s in tb.train_steps(&w_old, 128, 200) {
+        let obs = Observation {
+            at: s.at,
+            gpu_power_w: s.gpu_power.0,
+            samples_per_s: 128.0 / s.duration.0,
+        };
+        if monitor.observe(obs) == MonitorAction::Reprofile {
+            action_count += 1;
+        }
+    }
+    assert_eq!(action_count, 0, "steady workload must not trigger");
+
+    // The update rolls out: signature drifts, monitor must fire once.
+    let mut triggered_at = None;
+    for s in tb.train_steps(&w_new, 128, 400) {
+        let obs = Observation {
+            at: s.at,
+            gpu_power_w: s.gpu_power.0,
+            samples_per_s: 128.0 / s.duration.0,
+        };
+        if monitor.observe(obs) == MonitorAction::Reprofile {
+            triggered_at.get_or_insert(s.at);
+        }
+    }
+    assert!(triggered_at.is_some(), "drift must trigger a re-profile");
+    assert_eq!(monitor.reprofiles, 1, "one regime change, one re-profile");
+
+    // Re-profile for the new regime: the decision must move.
+    let second = profiler.profile(&mut tb, &w_new, 128);
+    assert!(
+        (second.optimal_cap - first.optimal_cap).abs() > 0.03,
+        "new regime should get a different cap: {} vs {}",
+        first.optimal_cap,
+        second.optimal_cap
+    );
+}

@@ -1,0 +1,148 @@
+//! End-to-end tests over the REAL request path (PJRT + AOT artifacts).
+//! Every test skips gracefully when `make artifacts` hasn't run.
+
+use frost::config::setup_no1;
+use frost::data::SyntheticCifar;
+use frost::pipeline::{calibrated_workload, run_overhead_experiment, HybridAccountant};
+use frost::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
+use frost::runtime::{InferenceSession, Runtime, TrainSession};
+use frost::simulator::ExecutionModel;
+use frost::util::Joules;
+use frost::zoo::Manifest;
+
+fn setup() -> Option<(Runtime, Manifest)> {
+    let manifest = Manifest::load_default().ok()?;
+    let rt = Runtime::cpu().ok()?;
+    Some((rt, manifest))
+}
+
+#[test]
+fn lenet_trains_to_low_loss_on_synthetic_cifar() {
+    let Some((rt, manifest)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut session = TrainSession::new(&rt, &manifest, "lenet").unwrap();
+    let mut ds = SyntheticCifar::new(0);
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..30 {
+        let batch = ds.next_batch(session.batch as usize);
+        let m = session.step(&batch).unwrap();
+        first.get_or_insert(m.loss);
+        last = m.loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.6,
+        "30 fresh-batch steps must cut loss substantially: {first} -> {last}"
+    );
+    assert_eq!(session.steps_done().unwrap(), 30);
+}
+
+#[test]
+fn trained_model_generalises_on_heldout_batch() {
+    let Some((rt, manifest)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut session = TrainSession::new(&rt, &manifest, "lenet").unwrap();
+    let mut ds = SyntheticCifar::new(5);
+    for _ in 0..40 {
+        let batch = ds.next_batch(session.batch as usize);
+        session.step(&batch).unwrap();
+    }
+    let params: Vec<xla::Literal> = session
+        .params()
+        .iter()
+        .map(|p| {
+            let dims: Vec<i64> =
+                p.array_shape().unwrap().dims().iter().map(|&d| d as i64).collect();
+            p.reshape(&dims).unwrap()
+        })
+        .collect();
+    let mut infer = InferenceSession::with_params(&rt, &manifest, "lenet", params).unwrap();
+    let eval = ds.eval_batch(infer.batch as usize, 77);
+    let acc = infer.accuracy(&eval).unwrap();
+    assert!(
+        acc > 0.35,
+        "held-out accuracy {acc} after 40 steps should beat 10% chance by far"
+    );
+}
+
+#[test]
+fn hybrid_accounting_books_real_steps() {
+    let Some((rt, manifest)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let hw = setup_no1();
+    let m = manifest.model("lenet").unwrap();
+    let w = calibrated_workload(m, &hw.gpu, None).unwrap();
+    let mut session = TrainSession::new(&rt, &manifest, "lenet").unwrap();
+    let exec = ExecutionModel::new(
+        GpuPowerModel::new(hw.gpu.clone()),
+        CpuPowerModel::new(hw.cpu.clone()),
+        DramPowerModel::new(hw.dimms.clone()),
+    );
+    let mut acct = HybridAccountant::new(
+        exec,
+        w,
+        session.batch,
+        hw.gpu.tdp_w,
+        hw.gpu.min_cap_frac,
+        3,
+    );
+    let mut ds = SyntheticCifar::new(1);
+    for _ in 0..8 {
+        let batch = ds.next_batch(session.batch as usize);
+        let metrics = session.step(&batch).unwrap();
+        acct.on_train_step(metrics.wall_s);
+    }
+    let account = acct.finish(Joules(0.0));
+    let wall: f64 = session.step_times_s.iter().sum();
+    assert!((account.duration.0 - wall).abs() / wall < 1e-6);
+    assert!(account.gross.0 > 0.0);
+    // LeNet is host-bound: mean platform power well below GPU TDP.
+    assert!(account.mean_power().0 < 200.0, "{}", account.mean_power());
+}
+
+#[test]
+fn overhead_experiment_runs_and_frost_tracks_baseline() {
+    let Some((rt, manifest)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let hw = setup_no1();
+    let m = manifest.model("lenet").unwrap();
+    let w = calibrated_workload(m, &hw.gpu, None).unwrap();
+    let results =
+        run_overhead_experiment(&rt, &manifest, &hw, &w, "lenet", 1280, 1).unwrap();
+    assert_eq!(results.len(), 4);
+    let frost_rel = results.iter().find(|r| r.tool == "FROST").unwrap().relative;
+    assert!(frost_rel < 1.12, "FROST overhead {frost_rel}");
+    // Both heavy tools sampled at 1 Hz — fewer samples than FROST's 10 Hz.
+    let frost_samples = results.iter().find(|r| r.tool == "FROST").unwrap().tool_samples;
+    let cc_samples = results
+        .iter()
+        .find(|r| r.tool == "CodeCarbon-like")
+        .unwrap()
+        .tool_samples;
+    assert!(frost_samples >= cc_samples, "{frost_samples} vs {cc_samples}");
+}
+
+#[test]
+fn all_four_models_load_and_step_once() {
+    let Some((rt, manifest)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for name in ["lenet", "mobilenet_mini", "resnet_mini", "simpledla"] {
+        let mut session = TrainSession::new(&rt, &manifest, name).unwrap();
+        let mut ds = SyntheticCifar::new(2);
+        let batch = ds.next_batch(session.batch as usize);
+        let m = session.step(&batch).unwrap();
+        assert!(m.loss.is_finite() && m.loss > 0.0, "{name}: loss {}", m.loss);
+        assert!((0.0..=1.0).contains(&(m.accuracy as f64)), "{name}");
+    }
+}
