@@ -1,0 +1,140 @@
+//! Fleet roll-up: an N-site FROST deployment vs the identical baseline
+//! fleet (same seed, same hardware mix, same workloads, stock power caps).
+//!
+//! Extends the paper's single-host Fig. 6 tradeoff to RAN scale: the
+//! headline number is the **steady-state fleet energy saving** — the final
+//! orchestration round's workload energy under FROST relative to the
+//! baseline's (initial training rounds run uncapped in both fleets, so
+//! lifetime totals dilute the effect; the steady state is what a deployed
+//! fleet pays forever). Per the paper, savings land in the 10–26% band
+//! with no per-site accuracy loss.
+
+use anyhow::Result;
+
+use crate::oran::{Fleet, FleetConfig, FleetReport};
+use crate::util::Series;
+
+/// Output of [`fleet_comparison`].
+#[derive(Debug, Clone)]
+pub struct FleetFigOutput {
+    /// One row per site: cap, ED^mP exponent, baseline/FROST steady-state
+    /// energy, savings, accuracy.
+    pub table: Series,
+    /// 1 − (FROST final-round fleet energy / baseline final-round energy).
+    pub steady_saving_frac: f64,
+    /// Mean of FROST's own per-site saving estimates (profiled sites).
+    pub mean_est_saving_frac: f64,
+    pub baseline_round_j: f64,
+    pub frost_round_j: f64,
+    /// Total energy charged to profiling sweeps across the fleet.
+    pub profiling_j: f64,
+    pub mean_cap_frac: f64,
+    /// True iff no site's validation accuracy dropped under FROST.
+    pub accuracy_unchanged: bool,
+    pub kpm_reports: usize,
+    /// The full FROST-run roll-up, for callers that want more detail.
+    pub frost: FleetReport,
+    /// The baseline roll-up.
+    pub baseline: FleetReport,
+}
+
+/// Run the fleet twice — FROST on, then the stock-cap baseline — and
+/// compare site by site. `config.frost_enabled` is overridden per run.
+pub fn fleet_comparison(config: &FleetConfig) -> Result<FleetFigOutput> {
+    let mut frost_cfg = config.clone();
+    frost_cfg.frost_enabled = true;
+    let mut base_cfg = config.clone();
+    base_cfg.frost_enabled = false;
+    base_cfg.budget_frac = 1.0;
+
+    let frost = Fleet::new(frost_cfg)?.run()?;
+    let baseline = Fleet::new(base_cfg)?.run()?;
+
+    let mut table = Series::new(
+        format!("Fleet tradeoff: {} sites, seed {}", config.sites, config.seed),
+        &[
+            "cap_pct",
+            "edp_m",
+            "base_round_kj",
+            "frost_round_kj",
+            "steady_saving_pct",
+            "est_saving_pct",
+            "accuracy_pct",
+            "accuracy_delta_pp",
+        ],
+    );
+    let mut accuracy_unchanged = true;
+    for (f, b) in frost.sites.iter().zip(&baseline.sites) {
+        let steady = if b.round_energy_j > 0.0 {
+            1.0 - f.round_energy_j / b.round_energy_j
+        } else {
+            0.0
+        };
+        let delta_pp = (f.accuracy - b.accuracy) * 100.0;
+        if f.accuracy + 1e-12 < b.accuracy {
+            accuracy_unchanged = false;
+        }
+        table.push(format!("{} {}", f.name, f.model), vec![
+            f.cap_frac * 100.0,
+            f.qos.criterion().exponent,
+            b.round_energy_j / 1e3,
+            f.round_energy_j / 1e3,
+            steady * 100.0,
+            f.est_saving * 100.0,
+            f.accuracy * 100.0,
+            delta_pp,
+        ]);
+    }
+
+    let steady_saving_frac = if baseline.fleet_round_energy_j > 0.0 {
+        1.0 - frost.fleet_round_energy_j / baseline.fleet_round_energy_j
+    } else {
+        0.0
+    };
+    Ok(FleetFigOutput {
+        steady_saving_frac,
+        mean_est_saving_frac: frost.mean_est_saving,
+        baseline_round_j: baseline.fleet_round_energy_j,
+        frost_round_j: frost.fleet_round_energy_j,
+        profiling_j: frost.fleet_profiling_energy_j,
+        mean_cap_frac: frost.mean_cap_frac,
+        accuracy_unchanged,
+        kpm_reports: frost.kpm_reports,
+        table,
+        frost,
+        baseline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_comparison_saves_without_accuracy_loss() {
+        let cfg = FleetConfig {
+            sites: 4,
+            seed: 21,
+            rounds: 6,
+            train_epochs: 40,
+            samples_per_epoch: 10_000,
+            infer_steps_per_round: 25,
+            max_concurrent_profiles: 2,
+            ..FleetConfig::default()
+        };
+        let out = fleet_comparison(&cfg).unwrap();
+        assert_eq!(out.table.len(), 4);
+        assert!(
+            out.steady_saving_frac > 0.02 && out.steady_saving_frac < 0.50,
+            "steady saving {:.3}",
+            out.steady_saving_frac
+        );
+        assert!(out.accuracy_unchanged, "capping must not change accuracy");
+        assert!(out.profiling_j > 0.0);
+        assert!(out.frost_round_j < out.baseline_round_j);
+        // Per-site steady savings dominate: most sites save energy.
+        let saving_col = out.table.column("steady_saving_pct").unwrap();
+        let saved = saving_col.iter().filter(|&&s| s > 0.0).count();
+        assert!(saved >= 3, "{saved} of 4 sites saved");
+    }
+}

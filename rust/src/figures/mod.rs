@@ -12,13 +12,17 @@
 //!   including the paper's headline means.
 
 pub mod fig2;
+#[cfg(feature = "pjrt")]
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod fleet;
 
 pub use fig2::{fig2_investigation, Fig2Output};
+#[cfg(feature = "pjrt")]
 pub use fig3::fig3_overhead;
 pub use fig4::fig4_power_capping;
 pub use fig5::{fig5_fine_grained, Fig5Output};
 pub use fig6::{fig6_tradeoff, Fig6Output};
+pub use fleet::{fleet_comparison, FleetFigOutput};

@@ -114,14 +114,37 @@ impl PowerProfiler {
         let idle = tb.idle_window(Seconds(self.config.idle_window_s));
         let idle_power = idle.energy.mean_power(idle.wall);
 
-        // 2. Sweep the limits within policy bounds.
+        // 2. Sweep the limits within policy bounds. A narrow policy window
+        //    (e.g. a fleet power-budget allocation capping a site at 45%)
+        //    can leave fewer coarse caps than the fit needs — densify the
+        //    sweep across the allowed range instead of failing.
+        let mut caps: Vec<f64> = self
+            .config
+            .cap_fracs
+            .iter()
+            .copied()
+            .filter(|&c| {
+                c >= self.policy.min_cap_frac - 1e-9 && c <= self.policy.max_cap_frac + 1e-9
+            })
+            .collect();
+        if caps.len() < 4 {
+            // Densify *within* the policy window: the sweep must never set
+            // a cap the policy forbids — a fleet power budget may be in
+            // force while a re-profile runs, and a LatencyCritical floor
+            // must hold even during measurement. A (near-)degenerate
+            // window yields repeated caps and a forced decision, which the
+            // candidate-based minimiser handles.
+            let floor = self.config.cap_fracs.first().copied().unwrap_or(0.3);
+            let ceil = self.config.cap_fracs.last().copied().unwrap_or(1.0);
+            let win_lo = self.policy.min_cap_frac.max(floor).min(ceil);
+            let win_hi = self.policy.max_cap_frac.min(ceil).max(win_lo);
+            caps = (0..6)
+                .map(|i| win_lo + (win_hi - win_lo) * i as f64 / 5.0)
+                .collect();
+        }
         let mut points = Vec::new();
         let mut profiling_energy = Joules(0.0);
-        for &cap in &self.config.cap_fracs {
-            if cap < self.policy.min_cap_frac - 1e-9 || cap > self.policy.max_cap_frac + 1e-9
-            {
-                continue;
-            }
+        for &cap in &caps {
             let enforced = tb.set_cap_frac(cap);
             let agg = tb.train_window(w, batch, Seconds(self.config.window_s));
             profiling_energy += agg.energy;
@@ -154,15 +177,25 @@ impl PowerProfiler {
         let hi = points.last().unwrap().cap_frac;
         let (mut optimal_cap, _) = fit.minimize(lo, hi);
 
+        // Decision window: policy bounds ∩ swept range. The sweep may range
+        // wider than the policy (narrow fleet-budget windows), but the
+        // decision never escapes it.
+        let cap_lo = self.policy.min_cap_frac.max(lo).min(self.policy.max_cap_frac);
+        let cap_hi = self.policy.max_cap_frac.min(hi).max(cap_lo);
+        optimal_cap = optimal_cap.clamp(cap_lo, cap_hi);
+
         // 4. Enforce the slowdown budget: walk the cap up (time is monotone
-        //    non-increasing in cap) until the estimate fits the policy.
+        //    non-increasing in cap) until the estimate fits the policy —
+        //    within the decision window. An explicit cap window takes
+        //    precedence: if even cap_hi violates the slowdown budget, the
+        //    decision stands at cap_hi.
         let baseline = points.last().unwrap(); // highest cap = reference
-        while optimal_cap < hi - 1e-6 {
+        while optimal_cap < cap_hi - 1e-6 {
             let t = interp(&points, optimal_cap, |p| p.time_per_sample_s);
             if t / baseline.time_per_sample_s <= self.policy.max_slowdown {
                 break;
             }
-            optimal_cap = (optimal_cap + 0.02).min(hi);
+            optimal_cap = (optimal_cap + 0.02).min(cap_hi);
         }
 
         let est_energy = interp(&points, optimal_cap, |p| p.energy_per_sample_j);
@@ -321,6 +354,40 @@ mod tests {
             .profile(&mut tb, &w, 128);
         assert!(out.optimal_cap >= 0.6 - 1e-9);
         assert!(out.points.iter().all(|p| p.cap_frac >= 0.6 - 1e-9));
+    }
+
+    #[test]
+    fn narrow_policy_window_densifies_inside_bounds() {
+        // A fleet power-budget allocation can pin a site into a window that
+        // contains fewer than four of the coarse 10% caps. The profiler
+        // must densify *within* the window — sweeping outside it would
+        // physically violate an in-force power budget during measurement.
+        let hw = setup_no2();
+        let entry = model_by_name("ResNet").unwrap();
+        let w = entry.workload(&setup_no1().gpu);
+        let mut tb = Testbed::new(hw, 6);
+        let policy = EnergyPolicy {
+            min_cap_frac: 0.30,
+            max_cap_frac: 0.45,
+            ..EnergyPolicy::default_policy()
+        };
+        let out = PowerProfiler::with_policy(ProfilerConfig::default(), policy)
+            .profile(&mut tb, &w, 128);
+        assert!(out.points.len() >= 4, "{} points", out.points.len());
+        for p in &out.points {
+            assert!(
+                p.cap_frac >= 0.30 - 1e-9 && p.cap_frac <= 0.45 + 1e-9,
+                "swept cap {} escaped the policy window",
+                p.cap_frac
+            );
+        }
+        assert!(
+            out.optimal_cap >= 0.30 - 1e-9 && out.optimal_cap <= 0.45 + 1e-9,
+            "decision {} escaped the policy window",
+            out.optimal_cap
+        );
+        // The applied cap honours the window too.
+        assert!(tb.cap_frac() <= 0.45 + 1e-9);
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod metrics;
 pub mod oran;
 pub mod pipeline;
 pub mod power;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod simulator;
 pub mod telemetry;

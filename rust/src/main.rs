@@ -17,16 +17,11 @@ use std::collections::HashMap;
 use anyhow::{Context, Result};
 
 use frost::config::{setup_no1, setup_no2, HardwareConfig, ProfilerConfig};
-use frost::data::SyntheticCifar;
 use frost::figures;
 use frost::frost::{EnergyPolicy, PowerProfiler};
 use frost::oran::MlLifecycle;
-use frost::pipeline::{calibrated_workload, HybridAccountant};
-use frost::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
-use frost::runtime::{Runtime, TrainSession};
-use frost::simulator::{ExecutionModel, Testbed};
-use frost::util::Joules;
-use frost::zoo::{all_models, model_by_name, Manifest};
+use frost::simulator::Testbed;
+use frost::zoo::{all_models, model_by_name};
 
 /// Minimal flag parser: `--key value` pairs + positional subcommand.
 struct Args {
@@ -86,6 +81,7 @@ fn main() {
         "train" => cmd_train(&args),
         "overhead" => cmd_overhead(&args),
         "oran-demo" => cmd_oran_demo(&args),
+        "fleet" => cmd_fleet(&args),
         "shift" => cmd_shift(&args),
         "dvfs-ablation" => cmd_dvfs_ablation(&args),
         "help" | "--help" | "-h" => {
@@ -113,11 +109,18 @@ COMMANDS:
   profile   --model NAME [--setup 1|2] [--exponent M] [--fine]
   sweep     --model NAME [--setup 1|2]      per-cap table (Fig. 4 style)
   figures   [--fig all|2|3|4|5|6] [--setup 1|2] [--out DIR] [--epochs N]
-  train     --model NAME [--steps N] [--batch-seed S] [--cap FRAC]
-  overhead  [--samples N] [--reps R]        real Fig. 3 experiment
+  train     --model NAME [--steps N] [--batch-seed S] [--cap FRAC]   (pjrt)
+  overhead  [--samples N] [--reps R]        real Fig. 3 experiment   (pjrt)
   oran-demo [--model NAME] [--epochs N]     six-step AI/ML lifecycle
+  fleet     [--sites N] [--seed S] [--rounds R] [--threads T]
+            [--epochs N] [--samples N] [--infer-steps N]
+            [--budget-frac F] [--max-profiles K] [--churn-every C]
+            [--out DIR]                     multi-host fleet simulation
   shift     [--budget-frac F]               site-level power shifting
   dvfs-ablation [--setup 1|2] [--exponent M]  capping vs DVFS per model
+
+Commands marked (pjrt) execute real AOT artifacts and need a build with
+--features pjrt plus real xla bindings (see DESIGN.md).
 ";
 
 fn cmd_list_models() -> Result<()> {
@@ -191,15 +194,20 @@ fn cmd_figures(args: &Args) -> Result<()> {
         emitted.push(("fig2.csv".into(), out.table.to_csv()));
     }
     if which == "all" || which == "3" {
-        let samples = args.num("samples", 2560.0) as u64;
-        match figures::fig3_overhead(&hw, &["lenet", "mobilenet_mini"], samples, 1) {
-            Ok(s) => {
-                print!("{}", s.to_table());
-                println!();
-                emitted.push(("fig3.csv".into(), s.to_csv()));
+        #[cfg(feature = "pjrt")]
+        {
+            let samples = args.num("samples", 2560.0) as u64;
+            match figures::fig3_overhead(&hw, &["lenet", "mobilenet_mini"], samples, 1) {
+                Ok(s) => {
+                    print!("{}", s.to_table());
+                    println!();
+                    emitted.push(("fig3.csv".into(), s.to_csv()));
+                }
+                Err(e) => eprintln!("fig3 skipped ({e}); run `make artifacts` first"),
             }
-            Err(e) => eprintln!("fig3 skipped ({e}); run `make artifacts` first"),
         }
+        #[cfg(not(feature = "pjrt"))]
+        eprintln!("fig3 skipped (real PJRT inference; rebuild with --features pjrt)");
     }
     if which == "all" || which == "4" {
         let s = figures::fig4_power_capping(&hw, &["MobileNet", "DenseNet", "EfficientNet"], 42);
@@ -240,7 +248,23 @@ fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "'train' executes real AOT artifacts through PJRT; rebuild with --features pjrt"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use frost::data::SyntheticCifar;
+    use frost::pipeline::{calibrated_workload, HybridAccountant};
+    use frost::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
+    use frost::runtime::{Runtime, TrainSession};
+    use frost::simulator::ExecutionModel;
+    use frost::util::Joules;
+    use frost::zoo::Manifest;
+
     let model = args.get_or("model", "lenet");
     let steps = args.num("steps", 50.0) as u64;
     let cap = args.num("cap", 1.0);
@@ -293,6 +317,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_overhead(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "'overhead' measures real PJRT inference; rebuild with --features pjrt"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_overhead(args: &Args) -> Result<()> {
     let hw = args.setup();
     let samples = args.num("samples", 2560.0) as u64;
@@ -363,6 +395,78 @@ fn cmd_dvfs_ablation(args: &Args) -> Result<()> {
     println!("
 [paper Sec. II-C: DVFS is finer-grained (>= savings) but device-specific;");
     println!(" capping captures most of the benefit portably — the numbers above quantify it]");
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use frost::oran::FleetConfig;
+    let config = FleetConfig {
+        sites: args.num("sites", 16.0).max(1.0) as usize,
+        seed: args.num("seed", 7.0) as u64,
+        threads: args.num("threads", 0.0) as usize,
+        rounds: args.num("rounds", 8.0).max(1.0) as u32,
+        train_epochs: args.num("epochs", 60.0).max(1.0) as u32,
+        samples_per_epoch: args.num("samples", 20_000.0).max(1.0) as u64,
+        infer_steps_per_round: args.num("infer-steps", 40.0).max(1.0) as u64,
+        budget_frac: args.num("budget-frac", 1.0),
+        max_concurrent_profiles: args.num("max-profiles", 4.0).max(1.0) as usize,
+        churn_every: args.num("churn-every", 0.0) as u32,
+        ..FleetConfig::default()
+    };
+    let sites = config.sites;
+    let out = figures::fleet_comparison(&config)?;
+    print!("{}", out.table.to_table());
+    println!();
+    println!("=== fleet KPM/energy roll-up ===");
+    println!("sites                : {sites} (mixed setup no.1/no.2, zoo workloads)");
+    println!("mean applied cap     : {:.1}% of TDP", out.mean_cap_frac * 100.0);
+    println!(
+        "steady-state energy  : {:.1} kJ/round under FROST vs {:.1} kJ/round baseline",
+        out.frost_round_j / 1e3,
+        out.baseline_round_j / 1e3
+    );
+    println!(
+        "fleet energy saving  : {:.1}% steady state  [paper band: 10-26%]",
+        out.steady_saving_frac * 100.0
+    );
+    println!(
+        "mean FROST estimate  : {:.1}% per profiled site",
+        out.mean_est_saving_frac * 100.0
+    );
+    println!("profiling charge     : {:.1} kJ (Eqs. 4-5)", out.profiling_j / 1e3);
+    println!("KPM reports ingested : {}", out.kpm_reports);
+    for (host, energy_j, samples, gpu_w) in &out.frost.kpm_by_host {
+        println!(
+            "  KPM {host}: {:>8.1} kJ over {:>9} samples, last GPU {:>5.0} W",
+            energy_j / 1e3,
+            samples,
+            gpu_w
+        );
+    }
+    if let Some(budget) = out.frost.budget_w {
+        if out.frost.budget_enforced {
+            println!(
+                "global GPU budget    : {:.0} W; enforced worst-case cap power {:.0} W",
+                budget, out.frost.cap_power_w
+            );
+        } else {
+            println!(
+                "global GPU budget    : {:.0} W; NOT yet enforced (profiling stagger \
+                 incomplete — raise --rounds); current cap power {:.0} W",
+                budget, out.frost.cap_power_w
+            );
+        }
+    }
+    println!(
+        "per-site accuracy    : {}",
+        if out.accuracy_unchanged { "unchanged vs baseline on every site" } else { "CHANGED (unexpected)" }
+    );
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join("fleet.csv");
+        std::fs::write(&path, out.table.to_csv())?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 

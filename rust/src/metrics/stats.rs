@@ -75,6 +75,11 @@ pub struct Summary {
 
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
+        // Empty input yields all-zero fields: folding from ±infinity would
+        // leak `inf`/`-inf` into JSON reports, which is not valid JSON.
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
         Summary {
             n: xs.len(),
             mean: mean(xs),
@@ -135,5 +140,15 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.mean, 2.0);
+    }
+
+    #[test]
+    fn empty_summary_is_finite_zeros() {
+        // Regression: min/max used to come out ±infinity, poisoning JSON.
+        let s = Summary::of(&[]);
+        assert_eq!(s, Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 });
+        for v in [s.mean, s.std, s.min, s.max] {
+            assert!(v.is_finite());
+        }
     }
 }

@@ -64,6 +64,15 @@ impl Bus {
         self.queue.lock().unwrap().push_back((from.to_string(), to.to_string(), msg));
     }
 
+    /// Send one message to several named recipients, in the given order —
+    /// the fleet gateway uses this to fan lifecycle events out to both the
+    /// SMO and the non-RT RIC (multi-host routing).
+    pub fn fanout(&self, from: &str, tos: &[&str], msg: OranMessage) {
+        for to in tos {
+            self.send(from, to, msg.clone());
+        }
+    }
+
     /// Broadcast to every endpoint except the sender.
     pub fn broadcast(&self, from: &str, msg: OranMessage) {
         let names: Vec<String> =
@@ -143,6 +152,21 @@ mod tests {
         bus.send("a", "ghost", OranMessage::PolicyDelete { id: "x".into() });
         bus.deliver_all();
         assert_eq!(bus.stats().get("dropped"), Some(&1));
+    }
+
+    #[test]
+    fn fanout_reaches_listed_recipients_in_order() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        let b = bus.endpoint("b");
+        let _c = bus.endpoint("c");
+        bus.fanout("x", &["a", "b"], OranMessage::PolicyDelete { id: "p".into() });
+        bus.deliver_all();
+        let msgs = a.drain();
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].1, OranMessage::PolicyDelete { id: "p".into() });
+        assert_eq!(b.pending(), 1);
+        assert_eq!(bus.endpoint("c").pending(), 0, "fanout is not broadcast");
     }
 
     #[test]

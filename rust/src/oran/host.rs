@@ -84,6 +84,17 @@ impl InferenceHost {
                     self.policy = p;
                     if !self.policy.enabled {
                         self.testbed.set_cap_frac(1.0);
+                    } else {
+                        // Enforce the new bounds immediately: a tightened
+                        // per-site policy (e.g. a fleet power-budget
+                        // allocation) must bite without waiting for the
+                        // next profiling run.
+                        let cap = self.testbed.cap_frac();
+                        let clamped =
+                            cap.clamp(self.policy.min_cap_frac, self.policy.max_cap_frac);
+                        if (clamped - cap).abs() > 1e-12 {
+                            self.testbed.set_cap_frac(clamped);
+                        }
                     }
                 }
                 OranMessage::PolicyDelete { .. } => {
@@ -274,6 +285,25 @@ mod tests {
         bus.deliver_all();
         h.step();
         assert_eq!(h.testbed.cap_frac(), 1.0);
+    }
+
+    #[test]
+    fn tightened_policy_clamps_cap_immediately() {
+        let (bus, mut h) = host_with_model("ResNet");
+        h.testbed.set_cap_frac(0.9);
+        let mut p = EnergyPolicy::default_policy();
+        p.max_cap_frac = 0.55;
+        bus.send("smo", "host1", OranMessage::PolicyUpdate(p));
+        bus.deliver_all();
+        h.step();
+        assert!((h.testbed.cap_frac() - 0.55).abs() < 1e-9);
+        // A policy that does not bind leaves the cap alone.
+        let mut loose = EnergyPolicy::default_policy();
+        loose.max_cap_frac = 0.80;
+        bus.send("smo", "host1", OranMessage::PolicyUpdate(loose));
+        bus.deliver_all();
+        h.step();
+        assert!((h.testbed.cap_frac() - 0.55).abs() < 1e-9);
     }
 
     #[test]

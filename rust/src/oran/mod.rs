@@ -13,11 +13,14 @@
 //! * [`nearrt_ric`] — near-RT RIC hosting xApps (online inference);
 //! * [`host`] — an ML-enabled inference host: virtual testbed + FROST
 //!   microservice;
-//! * [`lifecycle`] — the six-step AI/ML workflow the O-RAN spec defines.
+//! * [`lifecycle`] — the six-step AI/ML workflow the O-RAN spec defines;
+//! * [`fleet`] — N-host fleet simulation: thread-pooled sites, staggered
+//!   FROST profiling, global power budgets as per-site A1 policies.
 
 pub mod a1;
 pub mod bus;
 pub mod catalogue;
+pub mod fleet;
 pub mod host;
 pub mod lifecycle;
 pub mod messages;
@@ -28,9 +31,10 @@ pub mod smo;
 pub use a1::A1PolicyService;
 pub use bus::{Bus, Endpoint};
 pub use catalogue::{CatalogueEntry, ModelCatalogue, ModelState};
+pub use fleet::{site_seed, Fleet, FleetConfig, FleetReport, FleetSite, SiteReport};
 pub use host::InferenceHost;
 pub use lifecycle::{LifecycleStage, MlLifecycle};
 pub use messages::OranMessage;
 pub use nearrt_ric::{NearRtRic, XApp};
-pub use nonrt_ric::{NonRtRic, RApp};
+pub use nonrt_ric::{FleetAssignments, FleetProfileScheduler, NonRtRic, RApp};
 pub use smo::Smo;

@@ -4,13 +4,82 @@
 //! catalogue: training results arrive as lifecycle events, validation runs
 //! against the held-out set, passing models are published (Sec. II-B).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use super::bus::{Bus, Endpoint};
 use super::catalogue::{ModelCatalogue, ModelState};
 use super::messages::{LifecycleEvent, OranMessage};
+
+/// Shared (site → deployed model) table the fleet coordinator keeps up to
+/// date under workload churn and the scheduler rApp reads each round.
+pub type FleetAssignments = Arc<Mutex<Vec<(String, String)>>>;
+
+/// rApp that schedules FROST profiling across a fleet of inference hosts.
+///
+/// Every orchestration round it scans the assignment table in site order
+/// (starting from a rolling cursor, so re-profiles stagger instead of
+/// stampeding) and requests a profile for every published-or-deployed model
+/// that has no recorded optimal cap yet, up to `max_per_round` requests.
+pub struct FleetProfileScheduler {
+    assignments: FleetAssignments,
+    /// Profiling is expensive (8×30 s windows + energy charge): at most
+    /// this many sites profile in any one round.
+    pub max_per_round: usize,
+    cursor: usize,
+    /// Total profile requests issued over the scheduler's lifetime.
+    pub requested: u64,
+}
+
+impl FleetProfileScheduler {
+    pub fn new(assignments: FleetAssignments, max_per_round: usize) -> Self {
+        FleetProfileScheduler {
+            assignments,
+            max_per_round: max_per_round.max(1),
+            cursor: 0,
+            requested: 0,
+        }
+    }
+}
+
+impl RApp for FleetProfileScheduler {
+    fn name(&self) -> &str {
+        "fleet-profile-scheduler"
+    }
+
+    fn step(&mut self, ric: &mut RicContext) {
+        let assignments = self.assignments.lock().unwrap().clone();
+        let n = assignments.len();
+        if n == 0 {
+            return;
+        }
+        let mut issued = 0;
+        for k in 0..n {
+            if issued >= self.max_per_round {
+                break;
+            }
+            let (host, model) = &assignments[(self.cursor + k) % n];
+            let due = ric
+                .catalogue
+                .get(model)
+                .map(|e| {
+                    matches!(e.state, ModelState::Published | ModelState::Deployed)
+                        && e.optimal_cap.is_none()
+                })
+                .unwrap_or(false);
+            if due {
+                ric.outbox.push((
+                    host.clone(),
+                    OranMessage::ProfileRequest { model: model.clone(), host: host.clone() },
+                ));
+                issued += 1;
+                self.requested += 1;
+            }
+        }
+        self.cursor = (self.cursor + 1) % n;
+    }
+}
 
 /// A microservice hosted by the non-RT RIC.
 pub trait RApp: Send {
@@ -187,6 +256,52 @@ mod tests {
         ric.step().unwrap();
         bus.deliver_all();
         assert_eq!(bus.endpoint("smo").drain().len(), 2);
+    }
+
+    #[test]
+    fn fleet_scheduler_staggers_and_stops_when_capped() {
+        let bus = Bus::new();
+        bus.endpoint("smo");
+        bus.endpoint("siteA");
+        bus.endpoint("siteB");
+        bus.endpoint("siteC");
+        let mut ric = NonRtRic::new(bus.clone(), 0.5);
+        let assignments: FleetAssignments = Arc::new(Mutex::new(vec![
+            ("siteA".to_string(), "m1".to_string()),
+            ("siteB".to_string(), "m2".to_string()),
+            ("siteC".to_string(), "m3".to_string()),
+        ]));
+        ric.add_rapp(Box::new(FleetProfileScheduler::new(assignments, 2)));
+        // All three models finish training; the scheduler must not request
+        // more than 2 profiles in one round.
+        for m in ["m1", "m2", "m3"] {
+            bus.send("h", "nonrt-ric", training_finished(m, 0.9));
+        }
+        bus.deliver_all();
+        ric.step().unwrap();
+        bus.deliver_all();
+        let round1: usize = ["siteA", "siteB", "siteC"]
+            .iter()
+            .map(|s| bus.endpoint(s).drain().len())
+            .sum();
+        assert_eq!(round1, 2, "stagger cap");
+        // Record caps for the two profiled models: only the third remains.
+        ric.catalogue.set_optimal_cap("m1", 0.6).unwrap();
+        ric.catalogue.set_optimal_cap("m2", 0.7).unwrap();
+        ric.step().unwrap();
+        bus.deliver_all();
+        let round2: Vec<usize> = ["siteA", "siteB", "siteC"]
+            .iter()
+            .map(|s| bus.endpoint(s).drain().len())
+            .collect();
+        assert_eq!(round2, vec![0, 0, 1]);
+        // Everything profiled: the scheduler goes quiet.
+        ric.catalogue.set_optimal_cap("m3", 0.5).unwrap();
+        ric.step().unwrap();
+        bus.deliver_all();
+        for s in ["siteA", "siteB", "siteC"] {
+            assert_eq!(bus.endpoint(s).drain().len(), 0);
+        }
     }
 
     #[test]

@@ -54,6 +54,14 @@ impl Smo {
         self.a1.put_policy(policy)
     }
 
+    /// Push a per-site A1 policy instance to one specific host — how the
+    /// fleet's global power budget is enforced site by site.
+    pub fn push_policy_to(&self, host: &str, policy: EnergyPolicy) -> anyhow::Result<()> {
+        policy.validate()?;
+        self.bus.send(&self.name, host, OranMessage::PolicyUpdate(policy));
+        Ok(())
+    }
+
     /// Enrol a host: subscribe it to A1 policies.
     pub fn enrol_host(&mut self, host: &str) {
         self.a1.subscribe(host);
@@ -97,6 +105,26 @@ impl Smo {
     /// Total energy reported by all hosts so far (J).
     pub fn total_reported_energy(&self) -> f64 {
         self.kpms.iter().map(|k| k.energy_j).sum()
+    }
+
+    /// Fleet KPM roll-up: per-host (energy J, samples, latest reported GPU
+    /// power W), sorted by host name for deterministic reporting. Single
+    /// pass over the (unbounded, ever-growing) report log.
+    pub fn kpm_rollup(&self) -> Vec<(String, f64, u64, f64)> {
+        let mut per_host: std::collections::BTreeMap<&str, (f64, u64, f64)> =
+            std::collections::BTreeMap::new();
+        for k in &self.kpms {
+            let entry = per_host.entry(k.host.as_str()).or_insert((0.0, 0, 0.0));
+            entry.0 += k.energy_j;
+            entry.1 += k.samples_processed;
+            entry.2 = k.gpu_power_w;
+        }
+        per_host
+            .into_iter()
+            .map(|(h, (energy, samples, last_power))| {
+                (h.to_string(), energy, samples, last_power)
+            })
+            .collect()
     }
 
     /// Mean energy saving across the FROST decisions recorded so far.
@@ -154,6 +182,51 @@ mod tests {
         smo.push_policy(EnergyPolicy::default_policy()).unwrap();
         bus.deliver_all();
         assert_eq!(h1.drain().len(), 1);
+    }
+
+    #[test]
+    fn per_site_policy_goes_to_one_host() {
+        let bus = Bus::new();
+        let h1 = bus.endpoint("h1");
+        let h2 = bus.endpoint("h2");
+        let smo = Smo::new(bus.clone());
+        let mut p = EnergyPolicy::default_policy();
+        p.max_cap_frac = 0.55;
+        smo.push_policy_to("h1", p).unwrap();
+        bus.deliver_all();
+        assert_eq!(h1.pending(), 1);
+        assert_eq!(h2.pending(), 0);
+        let mut bad = EnergyPolicy::default_policy();
+        bad.min_cap_frac = 2.0;
+        assert!(smo.push_policy_to("h1", bad).is_err());
+    }
+
+    #[test]
+    fn kpm_rollup_aggregates_per_host() {
+        let bus = Bus::new();
+        let mut smo = Smo::new(bus.clone());
+        for (host, e, n, p) in
+            [("h2", 10.0, 100u64, 200.0), ("h1", 5.0, 50, 150.0), ("h2", 20.0, 200, 220.0)]
+        {
+            bus.send(host, "smo", OranMessage::Kpm(KpmReport {
+                host: host.into(),
+                at: crate::util::Seconds(1.0),
+                model: None,
+                gpu_power_w: p,
+                cpu_power_w: 0.0,
+                dram_power_w: 0.0,
+                gpu_util: 0.5,
+                cap_frac: 1.0,
+                samples_processed: n,
+                energy_j: e,
+            }));
+        }
+        bus.deliver_all();
+        smo.step();
+        let rollup = smo.kpm_rollup();
+        assert_eq!(rollup.len(), 2);
+        assert_eq!(rollup[0], ("h1".to_string(), 5.0, 50, 150.0));
+        assert_eq!(rollup[1], ("h2".to_string(), 30.0, 300, 220.0));
     }
 
     #[test]

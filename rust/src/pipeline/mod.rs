@@ -9,8 +9,10 @@
 
 pub mod account;
 pub mod calibrate;
+#[cfg(feature = "pjrt")]
 pub mod overhead;
 
 pub use account::HybridAccountant;
 pub use calibrate::calibrated_workload;
+#[cfg(feature = "pjrt")]
 pub use overhead::{run_overhead_experiment, OverheadResult};

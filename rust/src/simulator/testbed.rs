@@ -150,10 +150,16 @@ impl Testbed {
         n_samples: u64,
     ) -> RunAggregate {
         let est = self.exec.train_step(w, batch);
-        let steps = n_samples.div_ceil(batch as u64);
+        // At least one step: `sqrt(0)` would turn the jitter term into a
+        // NaN that poisons every downstream energy total.
+        let steps = n_samples.div_ceil(batch as u64).max(1);
         let jitter = 1.0 + self.rng.normal() * self.jitter / (steps as f64).sqrt();
         let wall = Seconds(est.step_time.0 * steps as f64 * jitter.max(0.5));
-        let boost_bonus = 1.0 + self.boost_prob * 0.06; // expected boost uplift
+        // Expected boost uplift — only under an active cap, matching the
+        // `perturb` step path (boosts are excursions *over the cap*; an
+        // uncapped GPU has nothing to boost past).
+        let boosts = self.exec.gpu.cap_frac() < 1.0 && est.gpu_util > 0.5;
+        let boost_bonus = if boosts { 1.0 + self.boost_prob * 0.06 } else { 1.0 };
         let gpu_power = est.gpu_power * boost_bonus;
         let energy = (gpu_power + est.cpu_power + est.dram_power).over(wall);
         self.clock.advance(wall);
@@ -277,19 +283,50 @@ mod tests {
 
     #[test]
     fn epoch_fast_path_agrees_with_step_path() {
+        // The epoch fast path must agree with the step path in expectation
+        // both uncapped (no boost uplift on either path) and capped (both
+        // paths carry the expected boost uplift).
         let w = wl();
-        let mut a = Testbed::new(setup_no1(), 3);
-        let agg = a.train_epoch(&w, 128, 50_000);
-        let mut b = Testbed::new(setup_no1(), 3);
-        let steps = b.train_steps(&w, 128, agg.steps);
-        let wall: f64 = steps.iter().map(|s| s.duration.0).sum();
-        let energy: f64 = steps.iter().map(|s| s.energy().0).sum();
-        assert!((agg.wall.0 - wall).abs() / wall < 0.02, "{} vs {}", agg.wall.0, wall);
+        for cap in [1.0, 0.6] {
+            let mut a = Testbed::new(setup_no1(), 3);
+            a.set_cap_frac(cap);
+            let agg = a.train_epoch(&w, 128, 50_000);
+            let mut b = Testbed::new(setup_no1(), 3);
+            b.set_cap_frac(cap);
+            let steps = b.train_steps(&w, 128, agg.steps);
+            let wall: f64 = steps.iter().map(|s| s.duration.0).sum();
+            let energy: f64 = steps.iter().map(|s| s.energy().0).sum();
+            assert!(
+                (agg.wall.0 - wall).abs() / wall < 0.02,
+                "cap {cap}: wall {} vs {}",
+                agg.wall.0,
+                wall
+            );
+            assert!(
+                (agg.energy.0 - energy).abs() / energy < 0.03,
+                "cap {cap}: energy {} vs {}",
+                agg.energy.0,
+                energy
+            );
+        }
+    }
+
+    #[test]
+    fn uncapped_epoch_carries_no_boost_bonus() {
+        // Regression: the fast path used to add the expected boost uplift
+        // unconditionally, overestimating uncapped GPU power by ~0.24%.
+        let w = wl();
+        let mut tb = Testbed::new(setup_no1(), 8);
+        let est = tb.exec.train_step(&w, 128);
+        let agg = tb.train_epoch(&w, 128, 50_000);
+        let implied_gpu_w = agg.gpu_energy.0 / agg.wall.0;
+        // Uncapped: implied mean GPU power equals the steady-state estimate
+        // exactly (the only epoch-level noise is in wall time, which divides
+        // out of energy/wall).
         assert!(
-            (agg.energy.0 - energy).abs() / energy < 0.03,
-            "{} vs {}",
-            agg.energy.0,
-            energy
+            (implied_gpu_w - est.gpu_power.0).abs() < 1e-9,
+            "uncapped epoch GPU power {implied_gpu_w} != estimate {}",
+            est.gpu_power.0
         );
     }
 

@@ -7,21 +7,31 @@
 //! deterministic.
 
 use std::fmt;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character '{1}' at byte {0}")]
     Unexpected(usize, char),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid \\u escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(at) => write!(f, "unexpected end of input at byte {at}"),
+            JsonError::Unexpected(at, c) => {
+                write!(f, "unexpected character '{c}' at byte {at}")
+            }
+            JsonError::BadNumber(at) => write!(f, "invalid number at byte {at}"),
+            JsonError::BadEscape(at) => write!(f, "invalid \\u escape at byte {at}"),
+            JsonError::Trailing(at) => write!(f, "trailing garbage at byte {at}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// A JSON value.  Numbers are f64 (adequate for every manifest field; FLOP
 /// counts < 2^53 are exact).

@@ -78,19 +78,115 @@ impl Series {
         out
     }
 
-    /// Render as CSV (label column first).
+    /// Render as CSV (label column first). Labels and headers containing
+    /// commas, quotes or newlines are RFC-4180 quoted so columns never
+    /// silently shift (model labels like `ResNeXt-29 (2x64d), v2` happen).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
-        let _ = writeln!(out, "label,{}", self.columns.join(","));
+        let header: Vec<String> = self.columns.iter().map(|c| csv_escape(c)).collect();
+        let _ = writeln!(out, "label,{}", header.join(","));
         for (label, row) in self.labels.iter().zip(&self.rows) {
             let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
-            let _ = writeln!(out, "{},{}", label, cells.join(","));
+            let _ = writeln!(out, "{},{}", csv_escape(label), cells.join(","));
         }
         out
     }
 
+    /// Parse the output of [`Series::to_csv`] back (quoted labels included,
+    /// even ones spanning physical lines).
+    pub fn from_csv(name: impl Into<String>, text: &str) -> Option<Series> {
+        let mut records = split_csv_records(text).into_iter();
+        let header = parse_csv_record(&records.next()?)?;
+        if header.first().map(String::as_str) != Some("label") {
+            return None;
+        }
+        let mut series = Series {
+            name: name.into(),
+            columns: header[1..].to_vec(),
+            rows: Vec::new(),
+            labels: Vec::new(),
+        };
+        for record in records {
+            if record.is_empty() {
+                continue;
+            }
+            let mut cells = parse_csv_record(&record)?;
+            if cells.len() != series.columns.len() + 1 {
+                return None;
+            }
+            let label = cells.remove(0);
+            let row: Option<Vec<f64>> = cells.iter().map(|c| c.parse().ok()).collect();
+            series.push(label, row?);
+        }
+        Some(series)
+    }
+
     pub fn write_csv(&self, path: impl AsRef<Path>) -> io::Result<()> {
         std::fs::write(path, self.to_csv())
+    }
+}
+
+/// RFC-4180 field quoting: wrap in quotes when the field contains a comma,
+/// quote or newline; double any embedded quotes.
+fn csv_escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Split CSV text into records: newlines inside quoted fields do not end a
+/// record (escaped `""` toggles the state twice, so it nets out).
+fn split_csv_records(text: &str) -> Vec<String> {
+    let mut records = Vec::new();
+    let mut current = String::new();
+    let mut quoted = false;
+    for c in text.chars() {
+        match c {
+            '"' => {
+                quoted = !quoted;
+                current.push(c);
+            }
+            '\n' if !quoted => records.push(std::mem::take(&mut current)),
+            _ => current.push(c),
+        }
+    }
+    if !current.is_empty() {
+        records.push(current);
+    }
+    records
+}
+
+/// Split one CSV record into fields, honouring RFC-4180 quoting.
+fn parse_csv_record(line: &str) -> Option<Vec<String>> {
+    let mut fields = Vec::new();
+    let mut field = String::new();
+    let mut chars = line.chars().peekable();
+    let mut quoted = false;
+    loop {
+        match chars.next() {
+            None => {
+                if quoted {
+                    return None; // unterminated quote
+                }
+                fields.push(field);
+                return Some(fields);
+            }
+            Some('"') if quoted => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    quoted = false;
+                }
+            }
+            Some('"') if field.is_empty() && !quoted => quoted = true,
+            Some(',') if !quoted => {
+                fields.push(std::mem::take(&mut field));
+            }
+            Some(c) => field.push(c),
+        }
     }
 }
 
@@ -134,5 +230,35 @@ mod tests {
         let t = sample().to_table();
         assert!(t.contains("energy_j"));
         assert!(t.contains("resnet"));
+    }
+
+    #[test]
+    fn csv_quotes_labels_with_commas_and_quotes() {
+        // Regression: labels with commas used to shift every later column.
+        let mut s = Series::new("fig", &["energy_j"]);
+        s.push("ResNeXt-29 (2x64d), v2", vec![1.5]);
+        s.push("plain", vec![2.5]);
+        s.push("say \"hi\"", vec![3.5]);
+        let csv = s.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines[1], "\"ResNeXt-29 (2x64d), v2\",1.5");
+        assert_eq!(lines[2], "plain,2.5");
+        assert_eq!(lines[3], "\"say \"\"hi\"\"\",3.5");
+        // Every record still has exactly two fields.
+        for line in &lines[1..] {
+            assert_eq!(parse_csv_record(line).unwrap().len(), 2, "{line}");
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_with_hostile_labels() {
+        let mut s = Series::new("fleet", &["energy_j", "cap_pct"]);
+        s.push("site01, setup_no1 (\"RTX 3080\")", vec![1234.5, 60.0]);
+        s.push("site02", vec![-2.0e-3, 100.0]);
+        s.push("multi\nline label", vec![7.0, 30.0]);
+        let back = Series::from_csv("fleet", &s.to_csv()).expect("parse back");
+        assert_eq!(s, back);
+        // And the second generation is byte-identical (fixed point).
+        assert_eq!(s.to_csv(), back.to_csv());
     }
 }

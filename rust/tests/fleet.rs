@@ -1,0 +1,164 @@
+//! Fleet-scale integration tests: determinism (across runs and worker
+//! thread counts), N=1 equivalence with the single-host O-RAN path, and
+//! the paper-band energy savings of a 16-site fleet.
+
+use frost::config::setup_no1;
+use frost::figures::fleet_comparison;
+use frost::frost::{EnergyPolicy, QosClass};
+use frost::oran::{site_seed, Bus, Fleet, FleetConfig, InferenceHost, OranMessage};
+use frost::zoo::all_models;
+
+fn cfg(sites: usize, seed: u64) -> FleetConfig {
+    FleetConfig {
+        sites,
+        seed,
+        rounds: 5,
+        train_epochs: 40,
+        samples_per_epoch: 10_000,
+        infer_steps_per_round: 20,
+        max_concurrent_profiles: 2,
+        ..FleetConfig::default()
+    }
+}
+
+#[test]
+fn fleet_energy_identical_across_runs_and_thread_counts() {
+    // Same seed ⇒ bit-identical fleet totals, for any worker-thread count.
+    let mut reports = Vec::new();
+    for threads in [1, 2, 5] {
+        let mut c = cfg(5, 42);
+        c.threads = threads;
+        reports.push(Fleet::new(c).unwrap().run().unwrap());
+    }
+    let first = &reports[0];
+    for r in &reports[1..] {
+        assert_eq!(
+            first.fleet_workload_energy_j.to_bits(),
+            r.fleet_workload_energy_j.to_bits()
+        );
+        assert_eq!(
+            first.fleet_profiling_energy_j.to_bits(),
+            r.fleet_profiling_energy_j.to_bits()
+        );
+        assert_eq!(first.fleet_round_energy_j.to_bits(), r.fleet_round_energy_j.to_bits());
+        assert_eq!(first.fleet_samples, r.fleet_samples);
+        assert_eq!(first.kpm_reports, r.kpm_reports);
+        for (a, b) in first.sites.iter().zip(&r.sites) {
+            assert_eq!(a.cap_frac.to_bits(), b.cap_frac.to_bits(), "{}", a.name);
+            assert_eq!(
+                a.workload_energy_j.to_bits(),
+                b.workload_energy_j.to_bits(),
+                "{}",
+                a.name
+            );
+            assert_eq!(a.hub_energy_j.to_bits(), b.hub_energy_j.to_bits(), "{}", a.name);
+        }
+    }
+    // And a different seed genuinely changes the trajectory.
+    let other = Fleet::new(cfg(5, 43)).unwrap().run().unwrap();
+    assert_ne!(
+        first.fleet_workload_energy_j.to_bits(),
+        other.fleet_workload_energy_j.to_bits()
+    );
+}
+
+#[test]
+fn single_site_fleet_reproduces_single_host_path() {
+    // An N=1 fleet must be exactly the existing single-host O-RAN pipeline
+    // (deploy → A1 policy → train → FROST profile on the host → inference,
+    // as in `oran_deployment`): same seed, same call order, bit-identical
+    // energy and the same applied cap.
+    let seed = 5;
+    let mut fleet_cfg = cfg(1, seed);
+    fleet_cfg.rounds = 3;
+    let mut fleet = Fleet::new(fleet_cfg).unwrap();
+    for _ in 0..3 {
+        fleet.run_round().unwrap();
+    }
+    let site = &fleet.sites[0];
+
+    // Reference: drive one InferenceHost by hand through the same rounds.
+    let bus = Bus::new();
+    bus.endpoint("smo");
+    let mut host = InferenceHost::new(bus.clone(), "site01", setup_no1(), site_seed(seed, 0));
+    let zoo = all_models();
+    let entry = &zoo[0];
+    let model_id = format!("{}@site01", entry.name);
+    let mut w = entry.workload(&setup_no1().gpu);
+    w.name = model_id.clone();
+    host.deploy(&model_id, w, true);
+    let policy = EnergyPolicy {
+        id: "site01-qos".into(),
+        qos: QosClass::EnergySaver,
+        enabled: true,
+        ..EnergyPolicy::default_policy()
+    };
+    // Round 1: policy lands, initial training.
+    bus.send("smo", "site01", OranMessage::PolicyUpdate(policy));
+    bus.deliver_all();
+    host.step();
+    host.run_training(&model_id, 40, 10_000).unwrap();
+    // Round 2: staggered FROST profile, then steady-state inference.
+    bus.send("smo", "site01", OranMessage::ProfileRequest {
+        model: model_id.clone(),
+        host: "site01".into(),
+    });
+    bus.deliver_all();
+    host.step();
+    host.run_inference(&model_id, 20).unwrap();
+    // Round 3: steady state.
+    bus.deliver_all();
+    host.step();
+    host.run_inference(&model_id, 20).unwrap();
+
+    assert_eq!(
+        site.host.testbed.cap_frac().to_bits(),
+        host.testbed.cap_frac().to_bits(),
+        "fleet cap {} vs single-host {}",
+        site.host.testbed.cap_frac(),
+        host.testbed.cap_frac()
+    );
+    assert_eq!(
+        site.host.total_energy_j.to_bits(),
+        host.total_energy_j.to_bits(),
+        "fleet energy {} vs single-host {}",
+        site.host.total_energy_j,
+        host.total_energy_j
+    );
+    assert_eq!(site.host.profile_log.len(), 1);
+    assert_eq!(host.profile_log.len(), 1);
+    assert_eq!(
+        site.host.profile_log[0].optimal_cap.to_bits(),
+        host.profile_log[0].optimal_cap.to_bits()
+    );
+}
+
+#[test]
+fn sixteen_site_fleet_saves_in_paper_band_without_accuracy_loss() {
+    // The acceptance scenario: 16 heterogeneous sites with FROST vs the
+    // identical stock-cap baseline. The paper's single-host band is
+    // 10–26%; the mixed fleet must land in (a tolerance around) it, with
+    // no site losing validation accuracy.
+    let config = FleetConfig { sites: 16, seed: 7, ..FleetConfig::default() };
+    let out = fleet_comparison(&config).unwrap();
+    assert_eq!(out.table.len(), 16);
+    assert!(
+        out.steady_saving_frac > 0.05 && out.steady_saving_frac < 0.40,
+        "steady-state fleet saving {:.1}% outside the plausible band",
+        out.steady_saving_frac * 100.0
+    );
+    assert!(
+        out.mean_est_saving_frac > 0.05 && out.mean_est_saving_frac < 0.40,
+        "mean FROST estimate {:.1}%",
+        out.mean_est_saving_frac * 100.0
+    );
+    assert!(out.accuracy_unchanged, "capping must not change any site's accuracy");
+    // Every site profiled exactly once and runs at (or below) stock caps.
+    for site in &out.frost.sites {
+        assert!(site.profiling_energy_j > 0.0, "{} never profiled", site.name);
+        assert!(site.cap_frac <= 1.0);
+    }
+    // Baseline fleet burned profiling energy nowhere.
+    assert_eq!(out.baseline.fleet_profiling_energy_j, 0.0);
+    assert!(out.kpm_reports >= 16, "KPM roll-up missing reports");
+}

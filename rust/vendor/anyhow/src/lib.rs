@@ -1,0 +1,197 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no access to crates.io, so this in-tree
+//! implementation provides the surface the workspace actually uses:
+//!
+//! * [`Error`] — a context-chain error type (`{}` shows the outermost
+//!   message, `{:#}` the full `outer: inner: …` chain, like anyhow);
+//! * [`Result`] — `Result<T, Error>` alias with a defaulted error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros;
+//! * a blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts std and in-tree error types.
+//!
+//! Intentionally *not* provided: downcasting, backtraces, `Error::new`
+//! source preservation. The chain is flattened to strings at conversion
+//! time, which is all the CLI/test surface of this repository observes.
+
+use std::fmt::{self, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error. `chain[0]` is the outermost (most recent) context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The `outer: inner: …` rendering used by `{:#}` and `Debug`.
+    fn full(&self) -> String {
+        self.chain.join(": ")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.full())
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.full())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment on fallible values, as in anyhow.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily computed context message.
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(e.to_string().contains("while formatting"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(3u32).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("seven is right out");
+            }
+            ensure!(x != 3);
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert!(f(12).unwrap_err().to_string().contains("x too big: 12"));
+        assert!(f(7).unwrap_err().to_string().contains("seven"));
+        assert!(f(3).unwrap_err().to_string().contains("condition failed"));
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(e.to_string(), "plain 42");
+    }
+}

@@ -1,0 +1,234 @@
+//! Stub of the `xla` PJRT bindings used by the `pjrt` feature.
+//!
+//! The real crate wraps `xla_extension` (PJRT C API). That library is not
+//! vendorable in this offline tree, so this stub keeps the *types* so the
+//! `pjrt`-gated code compiles, while every operation that would touch PJRT
+//! returns [`Error`]. Host-side [`Literal`] plumbing (shapes, reshape,
+//! tuple flattening) is implemented for real, since tests exercise it.
+//!
+//! Swap this path dependency for the real bindings to run actual AOT
+//! artifacts; nothing above this crate needs to change.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: a plain message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} unavailable: built against the in-tree xla stub (real PJRT bindings not vendored)"
+    )))
+}
+
+/// Element payload of a [`Literal`].
+#[derive(Debug, Clone)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor value (array or tuple), as in the real bindings.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Element types [`Literal`] can hold; sealed to f32/i32 (all this repo's
+/// artifacts use).
+pub trait NativeType: Copy + Sized {
+    fn make_literal(data: &[Self]) -> Literal;
+    fn read_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn make_literal(data: &[Self]) -> Literal {
+        Literal { payload: Payload::F32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn read_literal(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            _ => unavailable("f32 read of non-f32 literal"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn make_literal(data: &[Self]) -> Literal {
+        Literal { payload: Payload::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn read_literal(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            _ => unavailable("i32 read of non-i32 literal"),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::make_literal(data)
+    }
+
+    /// Reshape (copies, as the real bindings do).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.element_count() as i64 {
+            return Err(Error(format!(
+                "reshape to {:?} wants {} elements, literal has {}",
+                dims,
+                want,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(t) => t.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.payload {
+            Payload::Tuple(_) => unavailable("array_shape of tuple literal"),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    /// Flatten a tuple literal into its element literals.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(t) => Ok(t),
+            _ => unavailable("to_tuple of array literal"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read_literal(self)
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from text here).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device-resident buffer returned by execution.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("buffer readback")
+    }
+}
+
+/// Values accepted as execution inputs (`Literal` or `&Literal`).
+pub trait ExecuteInput {}
+impl ExecuteInput for Literal {}
+impl<'a> ExecuteInput for &'a Literal {}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: ExecuteInput>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+/// The PJRT client.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_plumbing_works() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(l.reshape(&[3]).is_err());
+        let v: Vec<f32> = r.to_vec().unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
