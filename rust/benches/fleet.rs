@@ -1,0 +1,22 @@
+//! Fleet hot-path benches: steady-state round throughput at 4/16/64 sites
+//! plus the cached-vs-uncached execution-model microbench.
+//!
+//! This is the perf trajectory the ROADMAP's "as fast as the hardware
+//! allows" north star is measured against: the numbers land in
+//! `BENCH_fleet.json` (written to the working directory; CI uploads it as
+//! an artifact), and the checked-in copy at the repository root records
+//! the pre-/post-optimisation pair for each PR that touches the hot path.
+//!
+//! The suite definition lives in `frost::oran::fleet::run_bench_suite`,
+//! shared with the `frost bench` CLI subcommand so the two recorders
+//! cannot drift.
+
+use frost::oran::run_bench_suite;
+use frost::util::bench::{write_json, BenchStats};
+
+fn main() {
+    let results = run_bench_suite(2.0).expect("fleet bench suite");
+    let refs: Vec<(&str, BenchStats)> =
+        results.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+    write_json("BENCH_fleet.json", "fleet", &refs).expect("write BENCH_fleet.json");
+}

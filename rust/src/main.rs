@@ -82,6 +82,7 @@ fn main() {
         "overhead" => cmd_overhead(&args),
         "oran-demo" => cmd_oran_demo(&args),
         "fleet" => cmd_fleet(&args),
+        "bench" => cmd_bench(&args),
         "shift" => cmd_shift(&args),
         "dvfs-ablation" => cmd_dvfs_ablation(&args),
         "help" | "--help" | "-h" => {
@@ -115,7 +116,8 @@ COMMANDS:
   fleet     [--sites N] [--seed S] [--rounds R] [--threads T]
             [--epochs N] [--samples N] [--infer-steps N]
             [--budget-frac F] [--max-profiles K] [--churn-every C]
-            [--out DIR]                     multi-host fleet simulation
+            [--sample-retention N] [--out DIR] multi-host fleet simulation
+  bench     [--target-s S] [--out FILE] [--force]  hot-path benches -> BENCH_fleet.json
   shift     [--budget-frac F]               site-level power shifting
   dvfs-ablation [--setup 1|2] [--exponent M]  capping vs DVFS per model
 
@@ -411,6 +413,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         budget_frac: args.num("budget-frac", 1.0),
         max_concurrent_profiles: args.num("max-profiles", 4.0).max(1.0) as usize,
         churn_every: args.num("churn-every", 0.0) as u32,
+        sample_retention: args.num("sample-retention", 512.0).max(0.0) as usize,
         ..FleetConfig::default()
     };
     let sites = config.sites;
@@ -467,6 +470,36 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         std::fs::write(&path, out.table.to_csv())?;
         println!("wrote {}", path.display());
     }
+    Ok(())
+}
+
+/// Fleet hot-path benches from the CLI (the same suite as
+/// `cargo bench --bench fleet` — one definition, `oran::run_bench_suite`,
+/// so the two recorders cannot drift; DESIGN.md §8), recorded to a
+/// `BENCH_fleet.json`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use frost::oran::run_bench_suite;
+    use frost::util::bench::{write_json, BenchStats};
+    let target = args.num("target-s", 2.0);
+    let out = args.get_or("out", "BENCH_fleet.json");
+    // Refuse to clobber the curated perf-trajectory record (the checked-in
+    // root BENCH_fleet.json wraps baseline+optimized result sets) unless
+    // explicitly forced; raw runs should land elsewhere (e.g. rust/, which
+    // is gitignored).
+    if args.get("force").is_none() {
+        if let Ok(existing) = std::fs::read_to_string(out) {
+            if existing.contains("frost-bench-v1+trajectory") {
+                anyhow::bail!(
+                    "{out} holds a curated trajectory record; \
+                     pass --out FILE or --force to overwrite"
+                );
+            }
+        }
+    }
+    let results = run_bench_suite(target)?;
+    let refs: Vec<(&str, BenchStats)> =
+        results.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+    write_json(out, "fleet", &refs)?;
     Ok(())
 }
 

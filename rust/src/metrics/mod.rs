@@ -2,4 +2,4 @@
 
 pub mod stats;
 
-pub use stats::{linear_fit, mean, pearson, std_dev, Summary};
+pub use stats::{linear_fit, mean, pearson, std_dev, StreamingSummary, Summary};

@@ -90,9 +90,96 @@ impl Summary {
     }
 }
 
+/// Streaming (one-pass) counterpart of [`Summary::of`]: Welford's online
+/// mean/variance plus running min/max, O(1) memory.  Feeds the telemetry
+/// retention rings (DESIGN.md §8): summary statistics stay exact over the
+/// *entire* stream even after old samples are evicted.  On any window both
+/// have seen in full, `finish()` matches the vector-based `Summary::of` up
+/// to floating-point accumulation order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamingSummary {
+    n: u64,
+    mean: f64,
+    /// Sum of squared deviations from the running mean (Welford's M2).
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl StreamingSummary {
+    pub fn new() -> StreamingSummary {
+        StreamingSummary::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        if self.n == 1 {
+            self.mean = x;
+            self.m2 = 0.0;
+            self.min = x;
+            self.max = x;
+            return;
+        }
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// The same five-number summary [`Summary::of`] computes, without the
+    /// vector: empty → all zeros, n = 1 → std 0, else population std.
+    pub fn finish(&self) -> Summary {
+        if self.n == 0 {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
+        let std = if self.n < 2 { 0.0 } else { (self.m2 / self.n as f64).max(0.0).sqrt() };
+        Summary { n: self.n as usize, mean: self.mean, std, min: self.min, max: self.max }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn close(a: f64, b: f64) {
+        let scale = a.abs().max(b.abs()).max(1e-12);
+        assert!((a - b).abs() / scale < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn streaming_matches_vector_summary_on_full_window() {
+        // Deterministic pseudo-random-ish series with spread and drift.
+        let xs: Vec<f64> = (0..500)
+            .map(|i| {
+                let t = i as f64;
+                50.0 + 30.0 * (t * 0.13).sin() + 0.02 * t
+            })
+            .collect();
+        let mut acc = StreamingSummary::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        let streamed = acc.finish();
+        let vector = Summary::of(&xs);
+        assert_eq!(streamed.n, vector.n);
+        close(streamed.mean, vector.mean);
+        close(streamed.std, vector.std);
+        assert_eq!(streamed.min, vector.min);
+        assert_eq!(streamed.max, vector.max);
+    }
+
+    #[test]
+    fn streaming_edge_cases_match_summary_of() {
+        assert_eq!(StreamingSummary::new().finish(), Summary::of(&[]));
+        let mut one = StreamingSummary::new();
+        one.push(7.5);
+        assert_eq!(one.finish(), Summary::of(&[7.5]));
+    }
 
     #[test]
     fn mean_and_std() {

@@ -5,26 +5,49 @@
 //! explicit [`Bus::deliver_all`] pumping, so O-RAN simulations replay
 //! bit-for-bit.  (The build environment has no async runtime — the fabric
 //! is a from-scratch substrate, DESIGN.md §2.)
+//!
+//! Hot-path design (DESIGN.md §8): endpoint names are **interned** to small
+//! integer [`EndpointId`]s backed by an `Arc<str>` reverse table, so the
+//! per-message queue entry is `(u32, u32, OranMessage)` and routing a
+//! message allocates nothing.  String-keyed [`Bus::send`] survives as the
+//! convenience path (two intern-table lookups); fleet-scale callers resolve
+//! ids once and use [`Bus::send_ids`].
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use super::messages::OranMessage;
 
+/// Interned endpoint identity: an index into the fabric's reverse table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EndpointId(u32);
+
+impl EndpointId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
 /// An addressable fabric endpoint (SMO, a RIC, a host).
 #[derive(Debug)]
 pub struct Endpoint {
-    pub name: String,
-    inbox: Mutex<VecDeque<(String, OranMessage)>>,
+    id: EndpointId,
+    name: Arc<str>,
+    inbox: Mutex<VecDeque<(Arc<str>, OranMessage)>>,
 }
 
 impl Endpoint {
-    fn new(name: &str) -> Arc<Self> {
-        Arc::new(Endpoint { name: name.to_string(), inbox: Mutex::new(VecDeque::new()) })
+    pub fn id(&self) -> EndpointId {
+        self.id
     }
 
-    /// Drain all pending messages (sender, message).
-    pub fn drain(&self) -> Vec<(String, OranMessage)> {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Drain all pending messages (sender, message).  Senders are shared
+    /// `Arc<str>` handles into the fabric's intern table, not fresh copies.
+    pub fn drain(&self) -> Vec<(Arc<str>, OranMessage)> {
         self.inbox.lock().unwrap().drain(..).collect()
     }
 
@@ -33,14 +56,52 @@ impl Endpoint {
     }
 }
 
-/// The fabric: named endpoints + an undelivered queue + statistics.
+/// Intern table + registered endpoints, behind one lock.
+#[derive(Debug, Default)]
+struct Directory {
+    ids: HashMap<Arc<str>, EndpointId>,
+    /// Reverse table: id → display name.
+    names: Vec<Arc<str>>,
+    /// Registered inboxes, indexed by id.  Interned-but-unregistered names
+    /// (unknown recipients) keep a `None` slot so sends to them still count
+    /// as routing failures at delivery time.
+    slots: Vec<Option<Arc<Endpoint>>>,
+}
+
+impl Directory {
+    fn intern(&mut self, name: &str) -> EndpointId {
+        if let Some(&id) = self.ids.get(name) {
+            return id;
+        }
+        let id = EndpointId(self.names.len() as u32);
+        let shared: Arc<str> = Arc::from(name);
+        self.ids.insert(shared.clone(), id);
+        self.names.push(shared);
+        self.slots.push(None);
+        id
+    }
+}
+
+/// A queued message's destination.  Known names ride as interned ids (the
+/// allocation-free hot path); names nobody has interned yet ride as a
+/// transient `Arc<str>` that dies with the queue entry — so a stream of
+/// sends to bogus recipients cannot grow the intern table without bound,
+/// while an endpoint registered between send and pump is still found at
+/// delivery time (the pre-interning semantics).
+#[derive(Debug)]
+enum Recipient {
+    Id(EndpointId),
+    Pending(Arc<str>),
+}
+
+/// The fabric: interned endpoints + an undelivered queue + statistics.
 #[derive(Debug, Default)]
 pub struct Bus {
-    endpoints: Mutex<HashMap<String, Arc<Endpoint>>>,
+    dir: Mutex<Directory>,
     /// (interface name → messages carried), for fabric statistics.
     stats: Mutex<HashMap<&'static str, u64>>,
     /// In-flight messages not yet pumped into inboxes.
-    queue: Mutex<VecDeque<(String, String, OranMessage)>>,
+    queue: Mutex<VecDeque<(EndpointId, Recipient, OranMessage)>>,
 }
 
 impl Bus {
@@ -48,20 +109,55 @@ impl Bus {
         Arc::new(Bus::default())
     }
 
-    /// Register (or fetch) an endpoint by name.
-    pub fn endpoint(&self, name: &str) -> Arc<Endpoint> {
-        self.endpoints
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert_with(|| Endpoint::new(name))
-            .clone()
+    /// Intern a name without registering an inbox for it.
+    pub fn resolve(&self, name: &str) -> EndpointId {
+        self.dir.lock().unwrap().intern(name)
     }
 
-    /// Queue a message from `from` to `to`.
+    /// Display name of an interned id (shared handle, no copy).
+    pub fn name_of(&self, id: EndpointId) -> Arc<str> {
+        self.dir.lock().unwrap().names[id.index()].clone()
+    }
+
+    /// Register (or fetch) an endpoint by name.
+    pub fn endpoint(&self, name: &str) -> Arc<Endpoint> {
+        let mut dir = self.dir.lock().unwrap();
+        let id = dir.intern(name);
+        if let Some(ep) = &dir.slots[id.index()] {
+            return ep.clone();
+        }
+        let ep = Arc::new(Endpoint {
+            id,
+            name: dir.names[id.index()].clone(),
+            inbox: Mutex::new(VecDeque::new()),
+        });
+        dir.slots[id.index()] = Some(ep.clone());
+        ep
+    }
+
+    /// Queue a message from `from` to `to` (name-keyed convenience path).
+    /// Senders intern (they are real actors); an unknown recipient does
+    /// NOT intern — it travels as a transient name and either finds a
+    /// late-registered endpoint at delivery or counts as dropped.
     pub fn send(&self, from: &str, to: &str, msg: OranMessage) {
+        let (from, to) = {
+            let mut dir = self.dir.lock().unwrap();
+            let from = dir.intern(from);
+            let to = match dir.ids.get(to) {
+                Some(&id) => Recipient::Id(id),
+                None => Recipient::Pending(Arc::from(to)),
+            };
+            (from, to)
+        };
         *self.stats.lock().unwrap().entry(msg.interface()).or_insert(0) += 1;
-        self.queue.lock().unwrap().push_back((from.to_string(), to.to_string(), msg));
+        self.queue.lock().unwrap().push_back((from, to, msg));
+    }
+
+    /// Hot path: queue a message between already-interned endpoints — no
+    /// name lookups, no allocation beyond the queue slot.
+    pub fn send_ids(&self, from: EndpointId, to: EndpointId, msg: OranMessage) {
+        *self.stats.lock().unwrap().entry(msg.interface()).or_insert(0) += 1;
+        self.queue.lock().unwrap().push_back((from, Recipient::Id(to), msg));
     }
 
     /// Send one message to several named recipients, in the given order —
@@ -73,14 +169,31 @@ impl Bus {
         }
     }
 
-    /// Broadcast to every endpoint except the sender.
+    /// Id-keyed [`Bus::fanout`].
+    pub fn fanout_ids(&self, from: EndpointId, tos: &[EndpointId], msg: OranMessage) {
+        for &to in tos {
+            self.send_ids(from, to, msg.clone());
+        }
+    }
+
+    /// Broadcast to every registered endpoint except the sender, in
+    /// registration order (deterministic).
     pub fn broadcast(&self, from: &str, msg: OranMessage) {
-        let names: Vec<String> =
-            self.endpoints.lock().unwrap().keys().cloned().collect();
-        for to in names {
-            if to != from {
-                self.send(from, &to, msg.clone());
-            }
+        let (from_id, targets) = {
+            let mut dir = self.dir.lock().unwrap();
+            let from_id = dir.intern(from);
+            let targets: Vec<EndpointId> = dir
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, slot)| slot.is_some())
+                .map(|(i, _)| EndpointId(i as u32))
+                .filter(|&id| id != from_id)
+                .collect();
+            (from_id, targets)
+        };
+        for to in targets {
+            self.send_ids(from_id, to, msg.clone());
         }
     }
 
@@ -91,10 +204,22 @@ impl Bus {
         loop {
             let next = self.queue.lock().unwrap().pop_front();
             let Some((from, to, msg)) = next else { break };
-            let ep = self.endpoints.lock().unwrap().get(&to).cloned();
+            let (sender, ep) = {
+                let dir = self.dir.lock().unwrap();
+                let ep = match &to {
+                    Recipient::Id(id) => dir.slots[id.index()].clone(),
+                    // Delivery-time lookup: the endpoint may have been
+                    // registered after the send.
+                    Recipient::Pending(name) => dir
+                        .ids
+                        .get(&**name)
+                        .and_then(|id| dir.slots[id.index()].clone()),
+                };
+                (dir.names[from.index()].clone(), ep)
+            };
             match ep {
                 Some(ep) => {
-                    ep.inbox.lock().unwrap().push_back((from, msg));
+                    ep.inbox.lock().unwrap().push_back((sender, msg));
                     delivered += 1;
                 }
                 None => {
@@ -133,6 +258,33 @@ mod tests {
     }
 
     #[test]
+    fn interning_is_stable_and_names_round_trip() {
+        let bus = Bus::new();
+        let a = bus.resolve("alpha");
+        let b = bus.resolve("beta");
+        assert_ne!(a, b);
+        assert_eq!(bus.resolve("alpha"), a, "same name, same id");
+        assert_eq!(&*bus.name_of(a), "alpha");
+        assert_eq!(&*bus.name_of(b), "beta");
+        // Registration reuses the interned id and the shared name.
+        let ep = bus.endpoint("alpha");
+        assert_eq!(ep.id(), a);
+        assert_eq!(ep.name(), "alpha");
+    }
+
+    #[test]
+    fn id_send_is_equivalent_to_name_send() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        let from = bus.resolve("x");
+        bus.send_ids(from, a.id(), OranMessage::PolicyDelete { id: "p".into() });
+        bus.deliver_all();
+        let msgs = a.drain();
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(&*msgs[0].0, "x", "sender name resolves via reverse table");
+    }
+
+    #[test]
     fn broadcast_excludes_sender() {
         let bus = Bus::new();
         let smo = bus.endpoint("smo");
@@ -152,6 +304,19 @@ mod tests {
         bus.send("a", "ghost", OranMessage::PolicyDelete { id: "x".into() });
         bus.deliver_all();
         assert_eq!(bus.stats().get("dropped"), Some(&1));
+        // Registering after the drop starts fresh: nothing was delivered.
+        assert_eq!(bus.endpoint("ghost").pending(), 0);
+    }
+
+    #[test]
+    fn late_registration_still_receives_queued_messages() {
+        let bus = Bus::new();
+        let _a = bus.endpoint("a");
+        bus.send("a", "late", OranMessage::PolicyDelete { id: "x".into() });
+        let late = bus.endpoint("late"); // registered after the send
+        assert_eq!(bus.deliver_all(), 1);
+        assert_eq!(late.pending(), 1);
+        assert_eq!(bus.stats().get("dropped"), None);
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //!
 //! * each site owns an [`InferenceHost`] (virtual testbed + FROST
 //!   microservice), a **private fabric shard** (its own [`Bus`]) and a
-//!   **per-host [`TelemetryHub`] shard**;
-//! * sites step **concurrently on a thread pool**; cross-site traffic only
-//!   crosses between phases, through a gateway that merges per-site
-//!   outboxes onto the global fabric **in site order** — so a run is
-//!   bit-for-bit identical for any worker-thread count;
+//!   **per-host [`TelemetryHub`] shard** with a bounded power-sample ring;
+//! * sites step **concurrently on a persistent worker pool** (spawned once
+//!   in [`Fleet::new`], fed over channels — no per-round thread spawning);
+//!   cross-site traffic only crosses between phases, through a gateway that
+//!   merges per-site outboxes onto the global fabric **in site-index
+//!   order** — so a run is bit-for-bit identical for any worker-thread
+//!   count;
 //! * the non-RT RIC hosts a [`FleetProfileScheduler`] rApp that staggers
 //!   FROST profiling (at most `max_concurrent_profiles` sites per round);
 //! * the SMO enforces a **global GPU power budget** by water-filling the
@@ -33,7 +35,15 @@
 //! 5. FROST decisions recorded into the model catalogue;
 //! 6. budget allocation once every site is profiled;
 //! 7. optional workload churn (sites rotate to the next zoo model).
+//!
+//! Hot-path notes (DESIGN.md §8): workload estimates are memoized per
+//! testbed (`simulator::StepEstimateCache`), endpoints are interned
+//! (`bus::EndpointId`), gateway transfers move messages instead of cloning
+//! them, and SMO logs are ingested by index, so a steady-state round does
+//! no avoidable repeated work.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 
@@ -42,12 +52,14 @@ use anyhow::{Context, Result};
 use crate::config::{setup_no1, setup_no2, HardwareConfig};
 use crate::frost::{EnergyPolicy, QosClass};
 use crate::power::{allocate_budget, HostProfile};
-use crate::simulator::Clock;
-use crate::simulator::WorkloadDescriptor;
+use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
 use crate::telemetry::hub::{PowerReading, TelemetryHub};
-use crate::zoo::all_models;
+use crate::telemetry::sampler::PowerSampler;
+use crate::util::bench::{bench, group, BenchStats};
+use crate::util::Seconds;
+use crate::zoo::{all_models, model_by_name};
 
-use super::bus::Bus;
+use super::bus::{Bus, Endpoint, EndpointId};
 use super::host::InferenceHost;
 use super::messages::{LifecycleEvent, OranMessage};
 use super::nonrt_ric::{FleetAssignments, FleetProfileScheduler, NonRtRic};
@@ -81,6 +93,10 @@ pub struct FleetConfig {
     pub churn_every: u32,
     /// Validation threshold at the non-RT RIC.
     pub min_accuracy: f64,
+    /// Per-site power-sample retention: ring capacity of each site's
+    /// `PowerSampler` (0 = unbounded). Bounded by default so arbitrarily
+    /// long fleet runs stay O(1) in memory.
+    pub sample_retention: usize,
 }
 
 impl Default for FleetConfig {
@@ -98,6 +114,7 @@ impl Default for FleetConfig {
             frost_enabled: true,
             churn_every: 0,
             min_accuracy: 0.68,
+            sample_retention: 512,
         }
     }
 }
@@ -112,6 +129,9 @@ pub fn site_seed(fleet_seed: u64, site_index: usize) -> u64 {
 pub struct FleetSite {
     pub index: usize,
     pub name: String,
+    /// This site's endpoint on the *global* fabric (downward gateway
+    /// target; resolved once at construction).
+    global_ep: Arc<Endpoint>,
     /// The site-local fabric: everything the host sends during the
     /// parallel phase stays here until the gateway merges it upward.
     local_bus: Arc<Bus>,
@@ -119,6 +139,9 @@ pub struct FleetSite {
     pub host: InferenceHost,
     /// Per-host telemetry shard (the fleet's sharded `TelemetryHub`).
     pub hub: Arc<TelemetryHub>,
+    /// Periodic power sampling against this site's shard, with a bounded
+    /// retention ring (`FleetConfig::sample_retention`).
+    pub sampler: PowerSampler,
     zoo_index: usize,
     pub zoo_model: &'static str,
     /// Catalogue-unique deployment id, e.g. `ResNet@site03`.
@@ -131,7 +154,9 @@ pub struct FleetSite {
     /// the accuracy ramp converges past any threshold below the model's
     /// reference accuracy.
     pub epochs_trained: u32,
-    outbox: Vec<(String, OranMessage)>,
+    /// Messages bound for the SMO once the gateway merges outboxes upward
+    /// (in site-index order). Moved, never cloned.
+    outbox: Vec<OranMessage>,
     /// Workload (training + inference) energy, profiling excluded.
     pub workload_energy_j: f64,
     /// Workload energy of the most recent round only (steady-state metric).
@@ -155,11 +180,13 @@ impl FleetSite {
         self.host.step();
         self.profiling_energy_j += self.host.total_energy_j - before;
 
-        // Workload phase under the (possibly just-updated) cap.
+        // Workload phase under the (possibly just-updated) cap. The
+        // estimate is memoized: in steady state this is a cache hit, not a
+        // fixed-point solve.
         let est = if self.trained {
-            self.host.testbed.exec.infer_step(&self.workload, self.host.batch)
+            self.host.testbed.infer_estimate(&self.workload, self.host.batch)
         } else {
-            self.host.testbed.exec.train_step(&self.workload, self.host.batch)
+            self.host.testbed.train_estimate(&self.workload, self.host.batch)
         };
         let t0 = self.host.testbed.clock.now();
         let (gpu, cpu, dram) = self.host.testbed.instantaneous(Some(&est));
@@ -171,6 +198,7 @@ impl FleetSite {
             gpu_util: est.gpu_util,
             freq_mhz: est.op.freq_mhz,
         });
+        self.sampler.poll(t0);
         self.last_gpu_power_w = gpu.0;
 
         let before = self.host.total_energy_j;
@@ -204,13 +232,15 @@ impl FleetSite {
             gpu_util: 0.0,
             freq_mhz: 0.0,
         });
+        self.sampler.poll(t1);
         self.wall_s = t1.0;
 
         // Everything the host reported on the local fabric goes upward
-        // once the coordinator merges outboxes (in site order).
+        // once the coordinator merges outboxes (in site order). Messages
+        // move; nothing is re-serialised or cloned on the hop.
         self.local_bus.deliver_all();
         for (_from, msg) in self.local_smo.drain() {
-            self.outbox.push(("smo".to_string(), msg));
+            self.outbox.push(msg);
         }
     }
 }
@@ -262,14 +292,131 @@ pub struct FleetReport {
     pub cap_power_w: f64,
 }
 
+/// Sites in flight between the coordinator and a worker: the original
+/// site index rides along so the merge is in site-index order.
+type SiteBatch = Vec<(usize, FleetSite)>;
+
+/// Persistent channel-fed worker pool for the parallel site phase.
+///
+/// Spawned once in [`Fleet::new`]; every round the coordinator partitions
+/// the sites into contiguous index chunks (the same deterministic
+/// partition the old per-round `thread::scope` used), moves each chunk to
+/// a worker, and reassembles the returned sites by index. Worker panics
+/// are caught and re-raised on the coordinator thread.
+struct SitePool {
+    injectors: Vec<Sender<SiteBatch>>,
+    results: Receiver<thread::Result<SiteBatch>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl SitePool {
+    fn spawn(workers: usize, cfg: Arc<FleetConfig>) -> SitePool {
+        let workers = workers.max(1);
+        let (results_tx, results) = channel::<thread::Result<SiteBatch>>();
+        let mut injectors = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<SiteBatch>();
+            let results_tx = results_tx.clone();
+            let cfg = cfg.clone();
+            handles.push(thread::spawn(move || {
+                while let Ok(mut batch) = rx.recv() {
+                    let ran = catch_unwind(AssertUnwindSafe(|| {
+                        for (_, site) in batch.iter_mut() {
+                            site.run_round(&cfg);
+                        }
+                        batch
+                    }));
+                    if results_tx.send(ran).is_err() {
+                        break; // coordinator gone
+                    }
+                }
+            }));
+            injectors.push(tx);
+        }
+        SitePool { injectors, results, handles }
+    }
+
+    fn workers(&self) -> usize {
+        self.injectors.len()
+    }
+
+    /// Run one parallel site phase over `sites`, in place.
+    fn run_phase(&self, sites: &mut Vec<FleetSite>) {
+        let n = sites.len();
+        if n == 0 {
+            return;
+        }
+        let chunk = n.div_ceil(self.workers());
+        let mut slots: Vec<Option<FleetSite>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+
+        let mut batches = 0usize;
+        let mut batch: SiteBatch = Vec::with_capacity(chunk);
+        for (i, site) in std::mem::take(sites).into_iter().enumerate() {
+            batch.push((i, site));
+            if batch.len() == chunk {
+                self.injectors[batches]
+                    .send(std::mem::replace(&mut batch, Vec::with_capacity(chunk)))
+                    .expect("site worker alive");
+                batches += 1;
+            }
+        }
+        if !batch.is_empty() {
+            self.injectors[batches].send(batch).expect("site worker alive");
+            batches += 1;
+        }
+
+        let mut panicked: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..batches {
+            match self.results.recv().expect("site worker pool alive") {
+                Ok(done) => {
+                    for (i, site) in done {
+                        slots[i] = Some(site);
+                    }
+                }
+                // Keep draining the remaining batches so the pool is not
+                // left with stale results, then re-raise.
+                Err(payload) => {
+                    panicked.get_or_insert(payload);
+                }
+            }
+        }
+        if let Some(payload) = panicked {
+            resume_unwind(payload);
+        }
+        *sites = slots
+            .into_iter()
+            .map(|slot| slot.expect("every site returned by the pool"))
+            .collect();
+    }
+}
+
+impl Drop for SitePool {
+    fn drop(&mut self) {
+        // Closing the injector channels ends every worker's recv loop.
+        self.injectors.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
 /// The fleet simulator (see module docs for the round structure).
 pub struct Fleet {
-    pub config: FleetConfig,
+    /// The scenario, frozen at construction: the worker pool and the
+    /// coordinator read the same shared snapshot, so the configuration
+    /// cannot drift mid-run (`Arc` makes it immutable by construction).
+    pub config: Arc<FleetConfig>,
     pub bus: Arc<Bus>,
     pub smo: Smo,
     pub nonrt: NonRtRic,
     pub sites: Vec<FleetSite>,
     assignments: FleetAssignments,
+    pool: SitePool,
+    /// Interned global-fabric ids the gateway routes by.
+    smo_id: EndpointId,
+    nonrt_id: EndpointId,
     pub round: u32,
     profiles_ingested: usize,
     lifecycle_ingested: usize,
@@ -283,14 +430,20 @@ impl Fleet {
         let bus = Bus::new();
         let mut smo = Smo::new(bus.clone());
         let mut nonrt = NonRtRic::new(bus.clone(), config.min_accuracy);
+        let smo_id = bus.resolve("smo");
+        let nonrt_id = bus.resolve("nonrt-ric");
         let zoo = all_models();
         let reference_gpu = setup_no1().gpu;
         let assignments: FleetAssignments = Arc::new(Mutex::new(Vec::new()));
+        let retention =
+            if config.sample_retention > 0 { Some(config.sample_retention) } else { None };
         let mut sites = Vec::with_capacity(config.sites);
         for i in 0..config.sites {
             let name = format!("site{:02}", i + 1);
-            bus.endpoint(&name); // global endpoint: downward routing target
+            let global_ep = bus.endpoint(&name); // downward routing target
             let hw: HardwareConfig = if i % 2 == 0 { setup_no1() } else { setup_no2() };
+            let tdp_w = hw.gpu.tdp_w;
+            let min_cap_frac = hw.gpu.min_cap_frac;
             let zoo_index = i % zoo.len();
             let entry = &zoo[zoo_index];
             let model_id = format!("{}@{}", entry.name, name);
@@ -302,6 +455,15 @@ impl Fleet {
             let mut host =
                 InferenceHost::new(local_bus.clone(), &name, hw, site_seed(config.seed, i));
             host.deploy(&model_id, workload.clone(), true);
+            let hub = Arc::new(TelemetryHub::new());
+            let sampler = PowerSampler::with_retention(
+                hub.clone(),
+                tdp_w,
+                min_cap_frac,
+                Seconds(0.1),
+                site_seed(config.seed, i) ^ 0x5A3F,
+                retention,
+            );
             let qos = [QosClass::EnergySaver, QosClass::Balanced, QosClass::LatencyCritical]
                 [i % 3];
             let policy = EnergyPolicy {
@@ -317,10 +479,12 @@ impl Fleet {
             sites.push(FleetSite {
                 index: i,
                 name,
+                global_ep,
                 local_bus,
                 local_smo,
                 host,
-                hub: Arc::new(TelemetryHub::new()),
+                hub,
+                sampler,
                 zoo_index,
                 zoo_model: entry.name,
                 model_id,
@@ -344,6 +508,14 @@ impl Fleet {
                 config.max_concurrent_profiles,
             )));
         }
+        let requested = if config.threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            config.threads
+        };
+        let workers = requested.clamp(1, config.sites);
+        let config = Arc::new(config);
+        let pool = SitePool::spawn(workers, config.clone());
         Ok(Fleet {
             config,
             bus,
@@ -351,6 +523,9 @@ impl Fleet {
             nonrt,
             sites,
             assignments,
+            pool,
+            smo_id,
+            nonrt_id,
             round: 0,
             profiles_ingested: 0,
             lifecycle_ingested: 0,
@@ -366,38 +541,22 @@ impl Fleet {
         self.nonrt.step()?;
         self.bus.deliver_all();
 
-        // 2. Gateway down.
-        for site in &mut self.sites {
-            let down = self.bus.endpoint(&site.name).drain();
-            for (from, msg) in down {
+        // 2. Gateway down: global → site-local, moving each message (the
+        //    sender rides along as a shared intern-table handle).
+        for site in &self.sites {
+            for (from, msg) in site.global_ep.drain() {
                 site.local_bus.send(&from, &site.name, msg);
             }
         }
 
-        // 3. Parallel site phase.
-        let cfg = self.config.clone();
-        let requested = if cfg.threads == 0 {
-            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            cfg.threads
-        };
-        let threads = requested.clamp(1, self.sites.len());
-        let chunk = self.sites.len().div_ceil(threads);
-        thread::scope(|scope| {
-            for chunk_sites in self.sites.chunks_mut(chunk) {
-                let cfg = &cfg;
-                scope.spawn(move || {
-                    for site in chunk_sites {
-                        site.run_round(cfg);
-                    }
-                });
-            }
-        });
+        // 3. Parallel site phase on the persistent pool.
+        self.pool.run_phase(&mut self.sites);
 
         // 4. Gateway up, in site order (thread-count independent), with
         //    training/deployment lifecycle fanned out to the non-RT RIC.
         for site in &mut self.sites {
-            for (to, msg) in std::mem::take(&mut site.outbox) {
+            let from = site.global_ep.id();
+            for msg in site.outbox.drain(..) {
                 let for_ric = matches!(
                     &msg,
                     OranMessage::Lifecycle(
@@ -405,10 +564,10 @@ impl Fleet {
                             | LifecycleEvent::Deployed { .. }
                     )
                 );
-                if to == "smo" && for_ric {
-                    self.bus.fanout(&site.name, &["smo", "nonrt-ric"], msg);
+                if for_ric {
+                    self.bus.fanout_ids(from, &[self.smo_id, self.nonrt_id], msg);
                 } else {
-                    self.bus.send(&site.name, &to, msg);
+                    self.bus.send_ids(from, self.smo_id, msg);
                 }
             }
         }
@@ -418,20 +577,22 @@ impl Fleet {
         // 5. Record fresh FROST decisions in the catalogue so the
         //    scheduler stops re-requesting them, and react to validation
         //    failures: a flagged model retrains next round with an
-        //    escalated epoch budget.
+        //    escalated epoch budget. Both logs are ingested by index —
+        //    no per-record cloning.
         while self.profiles_ingested < self.smo.profile_records.len() {
-            let r = self.smo.profile_records[self.profiles_ingested].clone();
-            self.profiles_ingested += 1;
+            let r = &self.smo.profile_records[self.profiles_ingested];
             let _ = self.nonrt.catalogue.set_optimal_cap(&r.model, r.optimal_cap);
+            self.profiles_ingested += 1;
         }
         while self.lifecycle_ingested < self.smo.lifecycle_log.len() {
-            let ev = self.smo.lifecycle_log[self.lifecycle_ingested].clone();
-            self.lifecycle_ingested += 1;
-            if let LifecycleEvent::FlaggedForRetraining { model, .. } = ev {
-                if let Some(site) = self.sites.iter_mut().find(|s| s.model_id == model) {
+            if let LifecycleEvent::FlaggedForRetraining { model, .. } =
+                &self.smo.lifecycle_log[self.lifecycle_ingested]
+            {
+                if let Some(site) = self.sites.iter_mut().find(|s| &s.model_id == model) {
                     site.trained = false;
                 }
             }
+            self.lifecycle_ingested += 1;
         }
 
         // 6. Global power budget, once the stagger has profiled every site.
@@ -600,6 +761,65 @@ impl Fleet {
     }
 }
 
+/// Canonical hot-path bench scenario (DESIGN.md §8): site counts swept by
+/// the perf-trajectory record.
+pub const BENCH_SITE_COUNTS: [usize; 3] = [4, 16, 64];
+/// Rounds run before measurement so every site is trained and profiled
+/// (the stagger is widened to the site count) and measured rounds are
+/// pure steady state — the cost a deployed fleet pays forever.
+pub const BENCH_WARMUP_ROUNDS: u32 = 3;
+
+/// The config of `frost fleet --sites N --seed 7`, stagger widened for a
+/// fast warm-up.
+pub fn bench_config(sites: usize) -> FleetConfig {
+    FleetConfig { sites, seed: 7, max_concurrent_profiles: sites, ..FleetConfig::default() }
+}
+
+/// The whole fleet bench suite — steady-state round throughput across
+/// [`BENCH_SITE_COUNTS`] plus the cached-vs-uncached execution-model
+/// microbench. One definition, called by BOTH `benches/fleet.rs` and the
+/// `frost bench` CLI subcommand, so the two `BENCH_fleet.json` recorders
+/// cannot drift apart.
+pub fn run_bench_suite(target_s: f64) -> Result<Vec<(String, BenchStats)>> {
+    let mut results: Vec<(String, BenchStats)> = Vec::new();
+
+    group("fleet steady-state round throughput (seed 7)");
+    for sites in BENCH_SITE_COUNTS {
+        let mut fleet = Fleet::new(bench_config(sites))?;
+        for _ in 0..BENCH_WARMUP_ROUNDS {
+            fleet.run_round()?;
+        }
+        let name = format!("fleet round ({sites} sites)");
+        let stats = bench(&name, target_s, || {
+            fleet.run_round().expect("steady-state round")
+        });
+        results.push((name, stats));
+    }
+
+    group("execution model: fixed-point solver vs memoized estimate");
+    let hw = setup_no1();
+    let w = model_by_name("ResNet").expect("zoo model").workload(&hw.gpu);
+
+    // Uncached: the raw 12-iteration fixed point (with the capping loop's
+    // 48-step bisection engaged) on every call.
+    let mut uncached = Testbed::new(hw.clone(), 7);
+    uncached.set_cap_frac(0.6);
+    let name = "train_step fixed-point solve (cap 60%)";
+    let solver = bench(name, target_s / 2.0, || uncached.exec.train_step(&w, 128));
+    results.push((name.to_string(), solver));
+
+    // Cached: one miss, then pure lookups — the steady-state fleet path.
+    let mut cached = Testbed::new(hw, 7);
+    cached.set_cap_frac(0.6);
+    let name = "train_estimate memoized (cap 60%)";
+    let memo = bench(name, target_s / 2.0, || cached.train_estimate(&w, 128));
+    results.push((name.to_string(), memo));
+    let (hits, misses) = cached.cache.stats();
+    println!("cache stats: {hits} hits / {misses} misses (solver ran {misses}×)");
+
+    Ok(results)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -667,6 +887,36 @@ mod tests {
         for (x, y) in a.sites.iter().zip(&b.sites) {
             assert_eq!(x.cap_frac.to_bits(), y.cap_frac.to_bits());
             assert_eq!(x.samples, y.samples);
+        }
+    }
+
+    #[test]
+    fn pool_survives_more_workers_than_sites() {
+        let mut cfg = small_cfg();
+        cfg.threads = 16; // > sites: clamps to one worker per site
+        let report = Fleet::new(cfg).unwrap().run().unwrap();
+        assert_eq!(report.sites.len(), 3);
+        let baseline = Fleet::new(small_cfg()).unwrap().run().unwrap();
+        assert_eq!(
+            report.fleet_workload_energy_j.to_bits(),
+            baseline.fleet_workload_energy_j.to_bits()
+        );
+    }
+
+    #[test]
+    fn bounded_sampler_retention_holds_in_long_runs() {
+        let mut cfg = small_cfg();
+        cfg.sample_retention = 8;
+        cfg.rounds = 12;
+        let mut fleet = Fleet::new(cfg).unwrap();
+        fleet.run().unwrap();
+        for site in &fleet.sites {
+            assert!(site.sampler.retained_len() <= 8, "{}", site.name);
+            assert!(
+                site.sampler.recorded() > site.sampler.retained_len() as u64,
+                "{} should have evicted old samples",
+                site.name
+            );
         }
     }
 

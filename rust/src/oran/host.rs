@@ -12,7 +12,7 @@ use crate::frost::{EnergyPolicy, PowerProfiler, ProfileOutcome};
 use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
 use crate::util::Seconds;
 
-use super::bus::{Bus, Endpoint};
+use super::bus::{Bus, Endpoint, EndpointId};
 use super::messages::{KpmReport, LifecycleEvent, OranMessage};
 
 /// The host node.
@@ -20,6 +20,10 @@ pub struct InferenceHost {
     pub name: String,
     bus: Arc<Bus>,
     endpoint: Arc<Endpoint>,
+    /// Interned fabric ids (self and the SMO): KPM/lifecycle reporting
+    /// queues by id, with no name lookups on the hot path.
+    self_id: EndpointId,
+    smo_id: EndpointId,
     pub testbed: Testbed,
     profiler_config: ProfilerConfig,
     /// Active A1 policy (default until the SMO pushes one).
@@ -40,10 +44,14 @@ pub struct InferenceHost {
 impl InferenceHost {
     pub fn new(bus: Arc<Bus>, name: &str, hw: HardwareConfig, seed: u64) -> Self {
         let endpoint = bus.endpoint(name);
+        let self_id = endpoint.id();
+        let smo_id = bus.resolve("smo");
         InferenceHost {
             name: name.to_string(),
             bus,
             endpoint,
+            self_id,
+            smo_id,
             testbed: Testbed::new(hw, seed),
             profiler_config: ProfilerConfig::default(),
             policy: EnergyPolicy::default_policy(),
@@ -59,9 +67,9 @@ impl InferenceHost {
     /// Deploy a model (from the catalogue) onto this host.
     pub fn deploy(&mut self, model: &str, workload: WorkloadDescriptor, as_xapp: bool) {
         self.store.insert(model.to_string(), workload);
-        self.bus.send(
-            &self.name,
-            "smo",
+        self.bus.send_ids(
+            self.self_id,
+            self.smo_id,
             OranMessage::Lifecycle(LifecycleEvent::Deployed {
                 model: model.to_string(),
                 host: self.name.clone(),
@@ -105,9 +113,9 @@ impl InferenceHost {
                     match self.store.get(&model).cloned() {
                         Some(w) => {
                             let out = self.run_profiler(&w);
-                            self.bus.send(
-                                &self.name,
-                                "smo",
+                            self.bus.send_ids(
+                                self.self_id,
+                                self.smo_id,
                                 OranMessage::ProfileResult {
                                     model: model.clone(),
                                     host: self.name.clone(),
@@ -138,17 +146,19 @@ impl InferenceHost {
     /// Run `steps` inference batches of a deployed model; sends one KPM
     /// report and returns (wall seconds, energy joules).
     pub fn run_inference(&mut self, model: &str, steps: u64) -> Option<(f64, f64)> {
-        let w = self.store.get(model)?.clone();
-        let samples = self.testbed.infer_steps(&w, self.batch, steps);
+        // Borrow, don't clone: the store and the testbed are disjoint
+        // fields, and this runs every steady-state fleet round.
+        let w = self.store.get(model)?;
+        let samples = self.testbed.infer_steps(w, self.batch, steps);
         let wall: f64 = samples.iter().map(|s| s.duration.0).sum();
         let energy: f64 = samples.iter().map(|s| s.energy().0).sum();
         let n = steps * self.batch as u64;
         self.total_energy_j += energy;
         self.total_samples += n;
         let last = samples.last()?;
-        self.bus.send(
-            &self.name,
-            "smo",
+        self.bus.send_ids(
+            self.self_id,
+            self.smo_id,
             OranMessage::Kpm(KpmReport {
                 host: self.name.clone(),
                 at: self.testbed.clock.now(),
@@ -173,10 +183,10 @@ impl InferenceHost {
         epochs: u32,
         n_samples: u64,
     ) -> Option<(f64, f64, f64)> {
-        let w = self.store.get(model)?.clone();
-        self.bus.send(
-            &self.name,
-            "smo",
+        let w = self.store.get(model)?;
+        self.bus.send_ids(
+            self.self_id,
+            self.smo_id,
             OranMessage::Lifecycle(LifecycleEvent::TrainingStarted {
                 model: model.to_string(),
                 host: self.name.clone(),
@@ -185,7 +195,7 @@ impl InferenceHost {
         let mut wall = 0.0;
         let mut energy = 0.0;
         for _ in 0..epochs {
-            let agg = self.testbed.train_epoch(&w, self.batch, n_samples);
+            let agg = self.testbed.train_epoch(w, self.batch, n_samples);
             wall += agg.wall.0;
             energy += agg.energy.0;
         }
@@ -194,9 +204,9 @@ impl InferenceHost {
         // (training numerics are unaffected by capping, Sec. I).
         let ramp = 1.0 - (-(epochs as f64) / 35.0).exp();
         let accuracy = (w.reference_accuracy * (0.62 + 0.38 * ramp)).min(1.0);
-        self.bus.send(
-            &self.name,
-            "smo",
+        self.bus.send_ids(
+            self.self_id,
+            self.smo_id,
             OranMessage::Lifecycle(LifecycleEvent::TrainingFinished {
                 model: model.to_string(),
                 host: self.name.clone(),

@@ -29,9 +29,12 @@ pub mod nonrt_ric;
 pub mod smo;
 
 pub use a1::A1PolicyService;
-pub use bus::{Bus, Endpoint};
+pub use bus::{Bus, Endpoint, EndpointId};
 pub use catalogue::{CatalogueEntry, ModelCatalogue, ModelState};
-pub use fleet::{site_seed, Fleet, FleetConfig, FleetReport, FleetSite, SiteReport};
+pub use fleet::{
+    bench_config, run_bench_suite, site_seed, Fleet, FleetConfig, FleetReport, FleetSite,
+    SiteReport,
+};
 pub use host::InferenceHost;
 pub use lifecycle::{LifecycleStage, MlLifecycle};
 pub use messages::OranMessage;

@@ -84,7 +84,7 @@ impl HybridAccountant {
 
     /// Close the books: integrate the sampled series per Eqs. 1–5.
     pub fn finish(&mut self, profiling: Joules) -> EnergyAccount {
-        let gross = integrate(&self.sampler.samples);
+        let gross = integrate(self.sampler.retained());
         let duration = Seconds(self.now);
         EnergyAccount {
             gross,
@@ -96,7 +96,7 @@ impl HybridAccountant {
     }
 
     pub fn samples(&self) -> usize {
-        self.sampler.samples.len()
+        self.sampler.retained_len()
     }
 
     /// Change the cap the virtual GPU enforces while real steps execute.

@@ -1,0 +1,255 @@
+//! Memoized step estimates: the hot-path cache in front of the roofline
+//! solver (DESIGN.md §8).
+//!
+//! [`ExecutionModel::step`] runs a 12-iteration activity/operating-point
+//! fixed point — and, whenever the cap binds, each iteration bisects the
+//! V(f) curve 48 times.  Its result is a *pure function* of the workload's
+//! solver-relevant numbers, the batch size, and the enforced cap, yet the
+//! fleet simulator used to re-run it on every simulated step: a steady-state
+//! round asked the solver the same question twice per site, and a paper-scale
+//! epoch sweep asked it once per epoch.  [`StepEstimateCache`] memoizes the
+//! answer so each distinct operating point is solved exactly once.
+//!
+//! Correctness contract (the fleet's bit-for-bit determinism depends on it):
+//!
+//! * workloads are **interned** to small [`WorkloadId`]s by the exact bit
+//!   patterns of every field the solver reads — two descriptors that differ
+//!   only in display name share an id, two that differ in any numeric field
+//!   never do;
+//! * the enforced cap enters the key by its exact bit pattern (the driver's
+//!   clamp in `GpuPowerModel::set_cap_frac` is the quantisation step, so no
+//!   further rounding is needed — and none would be safe, since aliasing two
+//!   nearby caps would return an estimate computed under the wrong cap);
+//! * a cached hit returns the identical `StepEstimate` bits the solver
+//!   would produce, so cached and uncached runs are indistinguishable
+//!   (asserted across a full cap sweep in this module's tests).
+//!
+//! The owner ([`crate::simulator::Testbed`]) additionally invalidates the
+//! cache whenever the enforced cap changes, which keeps the live entry set
+//! bounded by (deployed workloads × batch sizes × 2 modes) even across long
+//! profiling sweeps.
+
+use std::collections::HashMap;
+
+use super::exec::{ExecutionModel, StepEstimate};
+use super::workload::WorkloadDescriptor;
+
+/// Which of the two FLOP/byte columns of a workload an estimate is for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    Train,
+    Infer,
+}
+
+/// Bit-exact identity of the solver-relevant workload fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct WorkloadFingerprint {
+    train_flops: u64,
+    train_bytes: u64,
+    infer_flops: u64,
+    infer_bytes: u64,
+    host_s: u64,
+    efficiency: u64,
+    cpu_util: u64,
+}
+
+impl WorkloadFingerprint {
+    fn of(w: &WorkloadDescriptor) -> WorkloadFingerprint {
+        WorkloadFingerprint {
+            train_flops: w.train_flops_per_sample.to_bits(),
+            train_bytes: w.train_bytes_per_sample.to_bits(),
+            infer_flops: w.infer_flops_per_sample.to_bits(),
+            infer_bytes: w.infer_bytes_per_sample.to_bits(),
+            host_s: w.host_s_per_batch.to_bits(),
+            efficiency: w.kernel_efficiency.to_bits(),
+            cpu_util: w.cpu_util.to_bits(),
+        }
+    }
+}
+
+/// Interned workload identity (index into the cache's intern table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkloadId(u32);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct StepKey {
+    workload: WorkloadId,
+    batch: u32,
+    kind: StepKind,
+    /// Enforced cap fraction, keyed by exact bit pattern (see module docs).
+    cap_bits: u64,
+}
+
+/// Memo table for [`StepEstimate`]s; owned by a `Testbed`.
+#[derive(Debug, Clone, Default)]
+pub struct StepEstimateCache {
+    interner: HashMap<WorkloadFingerprint, WorkloadId>,
+    entries: HashMap<StepKey, StepEstimate>,
+    hits: u64,
+    misses: u64,
+}
+
+impl StepEstimateCache {
+    pub fn new() -> StepEstimateCache {
+        StepEstimateCache::default()
+    }
+
+    fn intern(&mut self, w: &WorkloadDescriptor) -> WorkloadId {
+        let fp = WorkloadFingerprint::of(w);
+        let next = WorkloadId(self.interner.len() as u32);
+        *self.interner.entry(fp).or_insert(next)
+    }
+
+    /// The memoized equivalent of `exec.train_step(w, batch)` /
+    /// `exec.infer_step(w, batch)` under `exec`'s current cap.
+    pub fn estimate(
+        &mut self,
+        exec: &ExecutionModel,
+        w: &WorkloadDescriptor,
+        batch: u32,
+        kind: StepKind,
+    ) -> StepEstimate {
+        let key = StepKey {
+            workload: self.intern(w),
+            batch,
+            kind,
+            cap_bits: exec.gpu.cap_frac().to_bits(),
+        };
+        if let Some(est) = self.entries.get(&key) {
+            self.hits += 1;
+            return *est;
+        }
+        self.misses += 1;
+        let est = match kind {
+            StepKind::Train => exec.train_step(w, batch),
+            StepKind::Infer => exec.infer_step(w, batch),
+        };
+        self.entries.insert(key, est);
+        est
+    }
+
+    /// Drop every memoized estimate (interned ids survive).  Called when
+    /// the enforced cap changes; with the cap also in the key this is a
+    /// memory bound, not a correctness requirement.
+    pub fn invalidate(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// (hits, misses) since construction — misses equal solver runs.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::setup_no1;
+    use crate::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
+
+    fn exec() -> ExecutionModel {
+        let hw = setup_no1();
+        ExecutionModel::new(
+            GpuPowerModel::new(hw.gpu),
+            CpuPowerModel::new(hw.cpu),
+            DramPowerModel::new(hw.dimms),
+        )
+    }
+
+    fn wl(name: &str, flops: f64) -> WorkloadDescriptor {
+        WorkloadDescriptor {
+            name: name.into(),
+            train_flops_per_sample: flops,
+            infer_flops_per_sample: flops / 3.0,
+            train_bytes_per_sample: 60e6,
+            infer_bytes_per_sample: 20e6,
+            host_s_per_batch: 1e-3,
+            kernel_efficiency: 0.35,
+            cpu_util: 0.3,
+            params: 10_000_000,
+            reference_accuracy: 0.95,
+        }
+    }
+
+    fn assert_bit_identical(a: &StepEstimate, b: &StepEstimate) {
+        assert_eq!(a.step_time.0.to_bits(), b.step_time.0.to_bits());
+        assert_eq!(a.gpu_util.to_bits(), b.gpu_util.to_bits());
+        assert_eq!(a.activity.to_bits(), b.activity.to_bits());
+        assert_eq!(a.op.freq_mhz.to_bits(), b.op.freq_mhz.to_bits());
+        assert_eq!(a.op.power.0.to_bits(), b.op.power.0.to_bits());
+        assert_eq!(a.op.dither_penalty.to_bits(), b.op.dither_penalty.to_bits());
+        assert_eq!(a.gpu_power.0.to_bits(), b.gpu_power.0.to_bits());
+        assert_eq!(a.cpu_power.0.to_bits(), b.cpu_power.0.to_bits());
+        assert_eq!(a.dram_power.0.to_bits(), b.dram_power.0.to_bits());
+    }
+
+    #[test]
+    fn cached_bit_identical_to_solver_across_full_cap_sweep() {
+        let mut e = exec();
+        let mut cache = StepEstimateCache::new();
+        let w = wl("sweep", 1.6e9);
+        // Sweep strictly above the driver floor (0.3125 for setup no.1):
+        // caps below it clamp to the same enforced value and would
+        // legitimately share a cache entry, confusing the exact counts.
+        for i in 32..=100 {
+            e.gpu.set_cap_frac(i as f64 / 100.0);
+            for kind in [StepKind::Train, StepKind::Infer] {
+                let miss = cache.estimate(&e, &w, 128, kind);
+                let hit = cache.estimate(&e, &w, 128, kind);
+                let solver = match kind {
+                    StepKind::Train => e.train_step(&w, 128),
+                    StepKind::Infer => e.infer_step(&w, 128),
+                };
+                assert_bit_identical(&miss, &solver);
+                assert_bit_identical(&hit, &solver);
+            }
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 69 * 2, "one solver run per (cap, kind)");
+        assert_eq!(hits, 69 * 2, "second lookups all hit");
+    }
+
+    #[test]
+    fn same_name_different_numbers_never_share_an_entry() {
+        let e = exec();
+        let mut cache = StepEstimateCache::new();
+        let a = wl("w", 1.6e9);
+        let b = wl("w", 3.2e9); // same display name, heavier model
+        let ea = cache.estimate(&e, &a, 128, StepKind::Train);
+        let eb = cache.estimate(&e, &b, 128, StepKind::Train);
+        assert_eq!(cache.stats().1, 2, "two distinct workloads, two misses");
+        assert!(eb.step_time.0 > ea.step_time.0, "heavier model must be slower");
+    }
+
+    #[test]
+    fn batch_and_kind_are_part_of_the_key() {
+        let e = exec();
+        let mut cache = StepEstimateCache::new();
+        let w = wl("w", 1.6e9);
+        cache.estimate(&e, &w, 128, StepKind::Train);
+        cache.estimate(&e, &w, 64, StepKind::Train);
+        cache.estimate(&e, &w, 128, StepKind::Infer);
+        assert_eq!(cache.stats(), (0, 3));
+    }
+
+    #[test]
+    fn invalidate_clears_entries_but_keeps_interner() {
+        let e = exec();
+        let mut cache = StepEstimateCache::new();
+        let w = wl("w", 1.6e9);
+        cache.estimate(&e, &w, 128, StepKind::Train);
+        assert_eq!(cache.len(), 1);
+        cache.invalidate();
+        assert!(cache.is_empty());
+        cache.estimate(&e, &w, 128, StepKind::Train);
+        assert_eq!(cache.stats(), (0, 2), "re-solve after invalidation");
+    }
+}

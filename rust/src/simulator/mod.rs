@@ -9,12 +9,14 @@
 //! experiment (16 models × 100 epochs × 8 caps) takes milliseconds of wall
 //! time while reporting paper-scale durations.
 
+pub mod cache;
 pub mod clock;
 pub mod dvfs;
 pub mod exec;
 pub mod testbed;
 pub mod workload;
 
+pub use cache::{StepEstimateCache, StepKind};
 pub use clock::{Clock, SimClock, WallClock};
 pub use dvfs::{capping_vs_dvfs, dvfs_optimal, DvfsChoice};
 pub use exec::{ExecutionModel, StepEstimate};

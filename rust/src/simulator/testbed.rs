@@ -11,6 +11,7 @@ use crate::config::HardwareConfig;
 use crate::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
 use crate::util::{Joules, Pcg32, Seconds, Watts};
 
+use super::cache::{StepEstimateCache, StepKind};
 use super::clock::{Clock, SimClock};
 use super::exec::{ExecutionModel, StepEstimate};
 use super::workload::WorkloadDescriptor;
@@ -57,6 +58,9 @@ pub struct Testbed {
     pub hw: HardwareConfig,
     pub exec: ExecutionModel,
     pub clock: Arc<SimClock>,
+    /// Memoized step estimates (DESIGN.md §8): the fixed-point solver runs
+    /// once per distinct (workload, batch, mode, cap) instead of per step.
+    pub cache: StepEstimateCache,
     rng: Pcg32,
     /// Relative std-dev of per-step duration jitter.
     jitter: f64,
@@ -75,6 +79,7 @@ impl Testbed {
             hw,
             exec,
             clock: SimClock::new(),
+            cache: StepEstimateCache::new(),
             rng: Pcg32::new(seed, 0xF05),
             jitter: 0.015,
             boost_prob: 0.04,
@@ -82,9 +87,27 @@ impl Testbed {
     }
 
     /// Apply a power cap (fraction of TDP); returns the clamped value the
-    /// driver actually enforces.
+    /// driver actually enforces.  A change of enforced cap invalidates the
+    /// step-estimate cache (cap-keyed entries would only pile up).
     pub fn set_cap_frac(&mut self, frac: f64) -> f64 {
-        self.exec.gpu.set_cap_frac(frac)
+        let before = self.exec.gpu.cap_frac();
+        let enforced = self.exec.gpu.set_cap_frac(frac);
+        if enforced.to_bits() != before.to_bits() {
+            self.cache.invalidate();
+        }
+        enforced
+    }
+
+    /// Memoized steady-state estimate of one training step under the
+    /// current cap (bit-identical to `exec.train_step`).
+    pub fn train_estimate(&mut self, w: &WorkloadDescriptor, batch: u32) -> StepEstimate {
+        self.cache.estimate(&self.exec, w, batch, StepKind::Train)
+    }
+
+    /// Memoized steady-state estimate of one inference step under the
+    /// current cap (bit-identical to `exec.infer_step`).
+    pub fn infer_estimate(&mut self, w: &WorkloadDescriptor, batch: u32) -> StepEstimate {
+        self.cache.estimate(&self.exec, w, batch, StepKind::Infer)
     }
 
     pub fn cap_frac(&self) -> f64 {
@@ -98,7 +121,7 @@ impl Testbed {
         batch: u32,
         n: u64,
     ) -> Vec<StepSample> {
-        let est = self.exec.train_step(w, batch);
+        let est = self.train_estimate(w, batch);
         (0..n).map(|_| self.perturb(&est)).collect()
     }
 
@@ -109,7 +132,7 @@ impl Testbed {
         batch: u32,
         n: u64,
     ) -> Vec<StepSample> {
-        let est = self.exec.infer_step(w, batch);
+        let est = self.infer_estimate(w, batch);
         (0..n).map(|_| self.perturb(&est)).collect()
     }
 
@@ -122,7 +145,7 @@ impl Testbed {
         window: Seconds,
     ) -> RunAggregate {
         let end = self.clock.now() + window;
-        let est = self.exec.train_step(w, batch);
+        let est = self.train_estimate(w, batch);
         let mut agg = RunAggregate::default();
         let mut util_sum = 0.0;
         let mut freq_sum = 0.0;
@@ -149,7 +172,7 @@ impl Testbed {
         batch: u32,
         n_samples: u64,
     ) -> RunAggregate {
-        let est = self.exec.train_step(w, batch);
+        let est = self.train_estimate(w, batch);
         // At least one step: `sqrt(0)` would turn the jitter term into a
         // NaN that poisons every downstream energy total.
         let steps = n_samples.div_ceil(batch as u64).max(1);
@@ -328,6 +351,30 @@ mod tests {
             "uncapped epoch GPU power {implied_gpu_w} != estimate {}",
             est.gpu_power.0
         );
+    }
+
+    #[test]
+    fn step_cache_memoizes_and_invalidates_on_cap_change() {
+        let mut tb = Testbed::new(setup_no1(), 9);
+        let w = wl();
+        let a = tb.train_steps(&w, 128, 5);
+        assert_eq!(tb.cache.stats(), (0, 1), "five steps, one solver run");
+        let _ = tb.train_steps(&w, 128, 5);
+        assert_eq!(tb.cache.stats(), (1, 1), "second batch of steps hits");
+        tb.set_cap_frac(0.7);
+        assert!(tb.cache.is_empty(), "cap change must invalidate");
+        tb.set_cap_frac(0.7);
+        let _ = tb.train_steps(&w, 128, 1);
+        tb.set_cap_frac(0.7); // unchanged cap: entries survive
+        assert_eq!(tb.cache.len(), 1);
+        // Memoization is invisible to the physics: a fresh testbed at the
+        // same seed replays bit-identical samples.
+        let mut tb2 = Testbed::new(setup_no1(), 9);
+        let b = tb2.train_steps(&w, 128, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.duration.0.to_bits(), y.duration.0.to_bits());
+            assert_eq!(x.gpu_power.0.to_bits(), y.gpu_power.0.to_bits());
+        }
     }
 
     #[test]

@@ -8,7 +8,8 @@
 
 use std::sync::Mutex;
 
-use crate::util::{Seconds, Watts};
+use crate::metrics::{StreamingSummary, Summary};
+use crate::util::{Ring, Seconds, Watts};
 
 /// Instantaneous component state.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,14 +41,21 @@ impl PowerReading {
     }
 }
 
+/// Default retained window of recent readings per hub shard.
+pub const DEFAULT_RECENT_CAPACITY: usize = 64;
+
 /// Shared publication point.  Subscribers (RAPL counters) accumulate energy
 /// between publications; instantaneous readers (NVML) see the latest value.
-#[derive(Debug, Default)]
+///
+/// Memory is O(1) regardless of run length (DESIGN.md §8): a bounded ring
+/// keeps the recent readings, and one-pass [`StreamingSummary`]
+/// accumulators keep whole-stream power statistics exact past eviction.
+#[derive(Debug)]
 pub struct TelemetryHub {
     state: Mutex<HubState>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct HubState {
     current: PowerReading,
     /// Cumulative true energy per component since construction (J) — the
@@ -55,11 +63,38 @@ struct HubState {
     gpu_j: f64,
     cpu_j: f64,
     dram_j: f64,
+    /// Bounded window of the latest publications.
+    recent: Ring<PowerReading>,
+    /// One-pass stats over every published reading (total platform W).
+    total_w: StreamingSummary,
+    /// One-pass stats over every published reading (GPU W).
+    gpu_w: StreamingSummary,
+}
+
+impl Default for TelemetryHub {
+    fn default() -> Self {
+        TelemetryHub::with_recent_capacity(Some(DEFAULT_RECENT_CAPACITY))
+    }
 }
 
 impl TelemetryHub {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A hub retaining `capacity` recent readings (`None` = unbounded).
+    pub fn with_recent_capacity(capacity: Option<usize>) -> Self {
+        TelemetryHub {
+            state: Mutex::new(HubState {
+                current: PowerReading::default(),
+                gpu_j: 0.0,
+                cpu_j: 0.0,
+                dram_j: 0.0,
+                recent: Ring::with_capacity(capacity),
+                total_w: StreamingSummary::new(),
+                gpu_w: StreamingSummary::new(),
+            }),
+        }
     }
 
     /// Publish a new reading at time `r.at`; energy accumulates assuming the
@@ -71,6 +106,9 @@ impl TelemetryHub {
         s.cpu_j += s.current.cpu.0 * dt;
         s.dram_j += s.current.dram.0 * dt;
         s.current = r;
+        s.recent.push(r);
+        s.total_w.push(r.total().0);
+        s.gpu_w.push(r.gpu.0);
     }
 
     /// Latest instantaneous reading.
@@ -82,6 +120,26 @@ impl TelemetryHub {
     pub fn true_energy(&self) -> (f64, f64, f64) {
         let s = self.state.lock().unwrap();
         (s.gpu_j, s.cpu_j, s.dram_j)
+    }
+
+    /// Copy of the retained recent-reading window, oldest first.
+    pub fn recent(&self) -> Vec<PowerReading> {
+        self.state.lock().unwrap().recent.iter().copied().collect()
+    }
+
+    /// Total publications since construction (evicted ones included).
+    pub fn published(&self) -> u64 {
+        self.state.lock().unwrap().total_w.count()
+    }
+
+    /// One-pass summary of total platform power over *every* publication.
+    pub fn total_power_summary(&self) -> Summary {
+        self.state.lock().unwrap().total_w.finish()
+    }
+
+    /// One-pass summary of GPU power over *every* publication.
+    pub fn gpu_power_summary(&self) -> Summary {
+        self.state.lock().unwrap().gpu_w.finish()
     }
 }
 
@@ -133,5 +191,34 @@ mod tests {
     #[test]
     fn total_sums_components() {
         assert_eq!(reading(0.0, 300.0).total(), Watts(374.0));
+    }
+
+    #[test]
+    fn recent_window_is_bounded_but_summaries_cover_everything() {
+        let hub = TelemetryHub::with_recent_capacity(Some(4));
+        for i in 0..100 {
+            hub.publish(reading(i as f64, 100.0 + i as f64));
+        }
+        let recent = hub.recent();
+        assert_eq!(recent.len(), 4, "retained window bounded");
+        assert_eq!(recent[0].gpu, Watts(196.0), "oldest retained is #96");
+        assert_eq!(hub.published(), 100, "accumulators saw every reading");
+        let gpu = hub.gpu_power_summary();
+        assert_eq!(gpu.n, 100);
+        assert_eq!(gpu.min, 100.0);
+        assert_eq!(gpu.max, 199.0);
+        assert!((gpu.mean - 149.5).abs() < 1e-9);
+        // Energy integration is unaffected by eviction.
+        let (gpu_j, _, _) = hub.true_energy();
+        assert!(gpu_j > 0.0);
+    }
+
+    #[test]
+    fn default_hub_retains_default_window() {
+        let hub = TelemetryHub::new();
+        for i in 0..(DEFAULT_RECENT_CAPACITY + 10) {
+            hub.publish(reading(i as f64, 200.0));
+        }
+        assert_eq!(hub.recent().len(), DEFAULT_RECENT_CAPACITY);
     }
 }

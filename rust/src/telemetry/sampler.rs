@@ -5,10 +5,18 @@
 //! [`PowerSampler::poll`] as (virtual or wall) time advances, and the
 //! sampler decides whether a sample is due.  This keeps simulation
 //! deterministic and lets the same sampler instrument the real PJRT loop.
+//!
+//! Retention is configurable (DESIGN.md §8): the sample log is a
+//! [`Ring`] — unbounded for energy-integration consumers that need the full
+//! series (the hybrid accountant), bounded for fleet runs that would
+//! otherwise grow without limit.  One-pass [`StreamingSummary`]
+//! accumulators keep whole-run statistics exact past eviction, and they
+//! match the vector-based [`Summary::of`] on any fully retained window.
 
 use std::sync::Arc;
 
-use crate::util::{Seconds, Watts};
+use crate::metrics::{StreamingSummary, Summary};
+use crate::util::{Ring, Seconds, Watts};
 
 use super::hub::TelemetryHub;
 use super::nvml::NvmlDevice;
@@ -40,16 +48,35 @@ pub struct PowerSampler {
     period: Seconds,
     next_due: Option<Seconds>,
     last_pkg: Option<(Seconds, u32)>,
-    pub samples: Vec<PowerSample>,
+    samples: Ring<PowerSample>,
+    gpu_w: StreamingSummary,
+    total_w: StreamingSummary,
 }
 
 impl PowerSampler {
+    /// Unbounded retention: every sample is kept (the right default for
+    /// consumers that integrate the full series, e.g. the hybrid
+    /// accountant's Eqs. 1–5 trapezoid).
     pub fn new(
         hub: Arc<TelemetryHub>,
         tdp_w: f64,
         min_cap_frac: f64,
         period: Seconds,
         seed: u64,
+    ) -> Self {
+        Self::with_retention(hub, tdp_w, min_cap_frac, period, seed, None)
+    }
+
+    /// Configurable retention: keep at most `retention` samples
+    /// (`None` = unbounded).  Fleet runs use a bounded window so arbitrary
+    /// run lengths stay O(1) in memory.
+    pub fn with_retention(
+        hub: Arc<TelemetryHub>,
+        tdp_w: f64,
+        min_cap_frac: f64,
+        period: Seconds,
+        seed: u64,
+        retention: Option<usize>,
     ) -> Self {
         PowerSampler {
             nvml: NvmlDevice::new(hub.clone(), tdp_w, min_cap_frac, seed),
@@ -58,7 +85,9 @@ impl PowerSampler {
             period,
             next_due: None,
             last_pkg: None,
-            samples: Vec::new(),
+            samples: Ring::with_capacity(retention),
+            gpu_w: StreamingSummary::new(),
+            total_w: StreamingSummary::new(),
         }
     }
 
@@ -83,7 +112,10 @@ impl PowerSampler {
                 self.last_pkg = Some((now, raw));
                 let dram = self.hub.read().dram;
                 let util = self.nvml.utilization_pct() as f64 / 100.0;
-                self.samples.push(PowerSample { at: now, gpu, cpu, dram, gpu_util: util });
+                let sample = PowerSample { at: now, gpu, cpu, dram, gpu_util: util };
+                self.gpu_w.push(sample.gpu.0);
+                self.total_w.push(sample.total().0);
+                self.samples.push(sample);
                 self.next_due = Some(Seconds(due.0 + self.period.0));
                 true
             }
@@ -95,8 +127,45 @@ impl PowerSampler {
         &self.nvml
     }
 
+    /// Contiguous view of the retained sample window, oldest first.
+    pub fn retained(&mut self) -> &[PowerSample] {
+        self.samples.as_slice()
+    }
+
+    pub fn retained_len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Total samples ever recorded (retained + evicted).
+    pub fn recorded(&self) -> u64 {
+        self.samples.pushed()
+    }
+
+    /// Samples dropped to honour the retention bound.
+    pub fn evicted(&self) -> u64 {
+        self.samples.evicted()
+    }
+
+    pub fn last(&self) -> Option<&PowerSample> {
+        self.samples.back()
+    }
+
+    /// One-pass GPU-power summary over *every* recorded sample; matches
+    /// `Summary::of` over the retained window whenever nothing has been
+    /// evicted.
+    pub fn gpu_summary(&self) -> Summary {
+        self.gpu_w.finish()
+    }
+
+    /// One-pass total-platform-power summary over every recorded sample.
+    pub fn total_summary(&self) -> Summary {
+        self.total_w.finish()
+    }
+
     pub fn clear(&mut self) {
         self.samples.clear();
+        self.gpu_w = StreamingSummary::new();
+        self.total_w = StreamingSummary::new();
         self.next_due = None;
         self.last_pkg = None;
     }
@@ -133,8 +202,8 @@ mod tests {
             t += 0.01;
         }
         // 1 s at 0.1 s period -> 10 samples (first poll arms).
-        assert!((9..=11).contains(&s.samples.len()), "{} samples", s.samples.len());
-        for pair in s.samples.windows(2) {
+        assert!((9..=11).contains(&s.retained_len()), "{} samples", s.retained_len());
+        for pair in s.retained().windows(2) {
             let dt = pair[1].at.0 - pair[0].at.0;
             assert!((dt - 0.1).abs() < 0.011, "period drift {dt}");
         }
@@ -150,12 +219,66 @@ mod tests {
             s.poll(Seconds(t));
             t += 0.02;
         }
-        let mean_gpu: f64 =
-            s.samples.iter().map(|x| x.gpu.0).sum::<f64>() / s.samples.len() as f64;
-        let mean_cpu: f64 =
-            s.samples.iter().map(|x| x.cpu.0).sum::<f64>() / s.samples.len() as f64;
+        let n = s.retained_len() as f64;
+        let mean_gpu: f64 = s.retained().iter().map(|x| x.gpu.0).sum::<f64>() / n;
+        let mean_cpu: f64 = s.retained().iter().map(|x| x.cpu.0).sum::<f64>() / n;
         assert!((mean_gpu - 250.0).abs() < 6.0, "gpu {mean_gpu}");
         assert!((mean_cpu - 65.0).abs() < 6.0, "cpu {mean_cpu}");
+    }
+
+    #[test]
+    fn bounded_retention_evicts_but_summaries_stay_whole_run() {
+        let h = hub();
+        let mut s = PowerSampler::with_retention(
+            h.clone(),
+            320.0,
+            0.3125,
+            Seconds(0.1),
+            4,
+            Some(5),
+        );
+        let mut t = 0.0;
+        while t < 3.001 {
+            publish(&h, t, 280.0, 70.0);
+            s.poll(Seconds(t));
+            t += 0.05;
+        }
+        assert_eq!(s.retained_len(), 5, "window bounded");
+        assert!(s.evicted() > 0);
+        assert_eq!(s.recorded(), s.evicted() + 5);
+        let summary = s.gpu_summary();
+        assert_eq!(summary.n as u64, s.recorded(), "summary covers evicted samples");
+        assert!((summary.mean - 280.0).abs() < 6.0, "mean {}", summary.mean);
+    }
+
+    #[test]
+    fn streaming_summary_matches_vector_path_on_retained_window() {
+        // With retention large enough that nothing evicts, the streaming
+        // accumulator and `Summary::of` over the retained vector must agree.
+        let h = hub();
+        let mut s = PowerSampler::with_retention(
+            h.clone(),
+            320.0,
+            0.3125,
+            Seconds(0.1),
+            7,
+            Some(1024),
+        );
+        let mut t = 0.0;
+        while t < 2.0 {
+            publish(&h, t, 260.0 + (t * 3.0).sin() * 30.0, 60.0);
+            s.poll(Seconds(t));
+            t += 0.02;
+        }
+        assert_eq!(s.evicted(), 0);
+        let streamed = s.gpu_summary();
+        let gpu_values: Vec<f64> = s.retained().iter().map(|x| x.gpu.0).collect();
+        let vector = crate::metrics::Summary::of(&gpu_values);
+        assert_eq!(streamed.n, vector.n);
+        assert!((streamed.mean - vector.mean).abs() < 1e-9, "mean");
+        assert!((streamed.std - vector.std).abs() < 1e-9, "std");
+        assert_eq!(streamed.min, vector.min);
+        assert_eq!(streamed.max, vector.max);
     }
 
     #[test]
@@ -166,9 +289,11 @@ mod tests {
         s.poll(Seconds(0.0));
         publish(&h, 0.2, 100.0, 50.0);
         s.poll(Seconds(0.2));
-        assert!(!s.samples.is_empty());
+        assert!(s.retained_len() > 0);
         s.clear();
-        assert!(s.samples.is_empty());
+        assert_eq!(s.retained_len(), 0);
+        assert_eq!(s.recorded(), 0);
+        assert_eq!(s.gpu_summary().n, 0);
         assert!(!s.poll(Seconds(0.3))); // re-arms instead of sampling
     }
 }

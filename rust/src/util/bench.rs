@@ -2,12 +2,17 @@
 //!
 //! Auto-calibrating: picks an iteration count targeting ~0.5 s per bench,
 //! reports mean / median / p95 like criterion's summary line, and returns
-//! the stats so the perf pass can record before/after in EXPERIMENTS.md.
+//! the stats so the perf pass can record before/after in `BENCH_*.json`
+//! (see [`write_json`]).
 //!
 //! Used by every file under `rust/benches/` (all `harness = false`).
+//! `FROST_BENCH_TARGET_S` overrides every bench's time target — CI's smoke
+//! job sets it to a few milliseconds so the harness can't rot unexercised.
 
 use std::hint::black_box;
 use std::time::Instant;
+
+use super::json::Json;
 
 /// One benchmark's summary statistics (nanoseconds).
 #[derive(Debug, Clone, Copy)]
@@ -37,10 +42,35 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Nearest-rank p95 index: the smallest rank covering 95% of the sorted
+/// sample (`ceil(0.95·n) − 1`), never past the end.  The old truncating
+/// `(n·0.95) as usize` overshot the rank for every n not divisible by 20.
+fn p95_index(n: usize) -> usize {
+    debug_assert!(n > 0);
+    let rank = (n as f64 * 0.95).ceil() as usize;
+    rank.max(1).min(n) - 1
+}
+
+/// The per-run time budget: `FROST_BENCH_TARGET_S` overrides the caller's
+/// target when set (and parseable).
+fn effective_target_s(target_s: f64) -> f64 {
+    std::env::var("FROST_BENCH_TARGET_S")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|v| *v > 0.0)
+        .unwrap_or(target_s)
+}
+
 /// Run `f` repeatedly, auto-calibrated to ~`target_s` seconds total, and
 /// print a summary line. Returns the stats.
+///
+/// The calibration run is excluded from the samples (it is a cold-cache
+/// outlier by construction), and every sample is floored at 1 ns so a
+/// clock too coarse to see a fast `f` cannot produce zero-duration samples
+/// (which would make throughput infinite).
 pub fn bench<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T) -> BenchStats {
-    // Calibration: run once to estimate cost.
+    let target_s = effective_target_s(target_s);
+    // Calibration: run once to estimate cost — not sampled.
     let t0 = Instant::now();
     black_box(f());
     let once = t0.elapsed().as_secs_f64().max(1e-9);
@@ -50,16 +80,15 @@ pub fn bench<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T) -> BenchSta
     for _ in 0..iters {
         let t = Instant::now();
         black_box(f());
-        samples_ns.push(t.elapsed().as_nanos() as f64);
+        samples_ns.push((t.elapsed().as_nanos() as f64).max(1.0));
     }
     samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
     let stats = BenchStats {
         iters,
-        mean_ns: mean,
+        mean_ns: mean.max(1.0),
         median_ns: samples_ns[samples_ns.len() / 2],
-        p95_ns: samples_ns
-            [((samples_ns.len() as f64 * 0.95) as usize).min(samples_ns.len() - 1)],
+        p95_ns: samples_ns[p95_index(samples_ns.len())],
         min_ns: samples_ns[0],
     };
     println!(
@@ -75,6 +104,46 @@ pub fn bench<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T) -> BenchSta
 /// Group header for readability in `cargo bench` output.
 pub fn group(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Serialise bench results to a `BENCH_<name>.json` file so a PR can
+/// record a point of the perf trajectory.  Schema:
+///
+/// ```json
+/// { "schema": "frost-bench-v1", "bench": "<suite>",
+///   "results": { "<bench name>": { "iters": …, "mean_ns": …, … } } }
+/// ```
+pub fn write_json(
+    path: &str,
+    suite: &str,
+    results: &[(&str, BenchStats)],
+) -> std::io::Result<()> {
+    let entries: Vec<(String, Json)> = results
+        .iter()
+        .map(|(name, s)| {
+            (
+                (*name).to_string(),
+                Json::obj(vec![
+                    ("iters", Json::Num(s.iters as f64)),
+                    ("mean_ns", Json::Num(s.mean_ns)),
+                    ("median_ns", Json::Num(s.median_ns)),
+                    ("p95_ns", Json::Num(s.p95_ns)),
+                    ("min_ns", Json::Num(s.min_ns)),
+                    ("throughput_per_s", Json::Num(s.throughput_per_s())),
+                ]),
+            )
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("frost-bench-v1".to_string())),
+        ("bench", Json::Str(suite.to_string())),
+        ("results", Json::Obj(entries)),
+    ]);
+    let mut text = doc.pretty();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -94,5 +163,49 @@ mod tests {
         assert!(stats.mean_ns > 0.0);
         assert!(stats.median_ns <= stats.p95_ns);
         assert!(stats.min_ns <= stats.median_ns);
+        assert!(stats.throughput_per_s().is_finite());
+    }
+
+    #[test]
+    fn zero_duration_samples_are_floored() {
+        // An empty closure can complete inside one clock tick; the floor
+        // keeps every derived statistic finite and positive.
+        let stats = bench("empty", 0.001, || {});
+        assert!(stats.mean_ns >= 1.0);
+        assert!(stats.min_ns >= 1.0);
+        assert!(stats.throughput_per_s().is_finite());
+    }
+
+    #[test]
+    fn p95_index_is_nearest_rank() {
+        assert_eq!(p95_index(1), 0);
+        assert_eq!(p95_index(3), 2);
+        assert_eq!(p95_index(10), 9); // ceil(9.5) - 1
+        assert_eq!(p95_index(20), 18); // exactly 19th of 20
+        assert_eq!(p95_index(100), 94);
+        assert_eq!(p95_index(101), 95);
+    }
+
+    #[test]
+    fn write_json_round_trips() {
+        let stats = BenchStats {
+            iters: 10,
+            mean_ns: 1234.5,
+            median_ns: 1200.0,
+            p95_ns: 1500.0,
+            min_ns: 1100.0,
+        };
+        let path = std::env::temp_dir().join("BENCH_harness_test.json");
+        let path = path.to_str().unwrap();
+        write_json(path, "harness-test", &[("case a", stats), ("case b", stats)]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.req("schema").unwrap().as_str(), Some("frost-bench-v1"));
+        assert_eq!(parsed.req("bench").unwrap().as_str(), Some("harness-test"));
+        let results = parsed.req("results").unwrap();
+        let a = results.req("case a").unwrap();
+        assert_eq!(a.req("mean_ns").unwrap().as_f64(), Some(1234.5));
+        assert_eq!(a.req("iters").unwrap().as_f64(), Some(10.0));
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -2,11 +2,13 @@
 
 pub mod bench;
 pub mod json;
+pub mod ring;
 pub mod rng;
 pub mod series;
 pub mod units;
 
 pub use json::Json;
+pub use ring::Ring;
 pub use rng::Pcg32;
 pub use series::Series;
 pub use units::{Joules, Seconds, Watts};

@@ -1,0 +1,158 @@
+//! A bounded ring buffer with an eviction counter.
+//!
+//! The telemetry retention primitive (DESIGN.md §8): long fleet runs
+//! publish power readings and samples forever, so every retention point
+//! (`TelemetryHub` recent window, `PowerSampler` sample log) keeps at most
+//! a fixed window in memory and counts what it evicted.  Backed by a
+//! `VecDeque` so a contiguous view is available for slice-based consumers
+//! (trapezoidal integration, summary statistics).
+
+use std::collections::VecDeque;
+
+/// Bounded (or explicitly unbounded) FIFO ring.
+#[derive(Debug, Clone, Default)]
+pub struct Ring<T> {
+    buf: VecDeque<T>,
+    /// `None` = unbounded (an ordinary growable queue).
+    capacity: Option<usize>,
+    evicted: u64,
+}
+
+impl<T> Ring<T> {
+    /// A ring that never evicts.
+    pub fn unbounded() -> Ring<T> {
+        Ring { buf: VecDeque::new(), capacity: None, evicted: 0 }
+    }
+
+    /// A ring retaining at most `capacity` items (clamped to >= 1).
+    pub fn bounded(capacity: usize) -> Ring<T> {
+        let capacity = capacity.max(1);
+        Ring { buf: VecDeque::with_capacity(capacity), capacity: Some(capacity), evicted: 0 }
+    }
+
+    /// `Some(n)` → bounded at `n`; `None` → unbounded.
+    pub fn with_capacity(capacity: Option<usize>) -> Ring<T> {
+        match capacity {
+            Some(n) => Ring::bounded(n),
+            None => Ring::unbounded(),
+        }
+    }
+
+    /// Append, evicting the oldest item when at capacity.
+    pub fn push(&mut self, item: T) {
+        if let Some(cap) = self.capacity {
+            if self.buf.len() == cap {
+                self.buf.pop_front();
+                self.evicted += 1;
+            }
+        }
+        self.buf.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Items dropped to honour the capacity bound, since construction or
+    /// the last [`Ring::clear`].
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Total items ever pushed (retained + evicted).
+    pub fn pushed(&self) -> u64 {
+        self.evicted + self.buf.len() as u64
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+
+    pub fn front(&self) -> Option<&T> {
+        self.buf.front()
+    }
+
+    pub fn back(&self) -> Option<&T> {
+        self.buf.back()
+    }
+
+    /// Contiguous view of the retained window, oldest first.
+    pub fn as_slice(&mut self) -> &[T] {
+        self.buf.make_contiguous()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.evicted = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_ring_evicts_oldest() {
+        let mut r = Ring::bounded(3);
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.evicted(), 2);
+        assert_eq!(r.pushed(), 5);
+        assert_eq!(r.as_slice(), &[2, 3, 4]);
+        assert_eq!(r.front(), Some(&2));
+        assert_eq!(r.back(), Some(&4));
+    }
+
+    #[test]
+    fn unbounded_ring_never_evicts() {
+        let mut r = Ring::unbounded();
+        for i in 0..1000 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 1000);
+        assert_eq!(r.evicted(), 0);
+        assert_eq!(r.capacity(), None);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = Ring::bounded(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.as_slice(), &[2]);
+    }
+
+    #[test]
+    fn clear_resets_contents_and_counter() {
+        let mut r = Ring::bounded(2);
+        r.push(1);
+        r.push(2);
+        r.push(3);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.evicted(), 0);
+        assert_eq!(r.capacity(), Some(2), "capacity survives clear");
+    }
+
+    #[test]
+    fn as_slice_is_in_push_order_across_wraparound() {
+        let mut r = Ring::bounded(4);
+        for i in 0..11 {
+            r.push(i);
+        }
+        assert_eq!(r.as_slice(), &[7, 8, 9, 10]);
+        let collected: Vec<i32> = r.iter().copied().collect();
+        assert_eq!(collected, vec![7, 8, 9, 10]);
+    }
+}

@@ -6,6 +6,7 @@ use frost::config::setup_no1;
 use frost::figures::fleet_comparison;
 use frost::frost::{EnergyPolicy, QosClass};
 use frost::oran::{site_seed, Bus, Fleet, FleetConfig, InferenceHost, OranMessage};
+use frost::simulator::Testbed;
 use frost::zoo::all_models;
 
 fn cfg(sites: usize, seed: u64) -> FleetConfig {
@@ -23,11 +24,20 @@ fn cfg(sites: usize, seed: u64) -> FleetConfig {
 
 #[test]
 fn fleet_energy_identical_across_runs_and_thread_counts() {
-    // Same seed ⇒ bit-identical fleet totals, for any worker-thread count.
+    // Same seed ⇒ bit-identical fleet totals, for any worker-thread count
+    // of the persistent pool: serial, two workers, one per site, and
+    // whatever the host machine reports as available parallelism
+    // (threads = 0), which exercises a machine-dependent pool width.
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut reports = Vec::new();
-    for threads in [1, 2, 5] {
+    for threads in [1, 2, 5, avail] {
         let mut c = cfg(5, 42);
         c.threads = threads;
+        reports.push(Fleet::new(c).unwrap().run().unwrap());
+    }
+    {
+        let mut c = cfg(5, 42);
+        c.threads = 0; // resolves to available_parallelism inside Fleet::new
         reports.push(Fleet::new(c).unwrap().run().unwrap());
     }
     let first = &reports[0];
@@ -131,6 +141,45 @@ fn single_site_fleet_reproduces_single_host_path() {
         site.host.profile_log[0].optimal_cap.to_bits(),
         host.profile_log[0].optimal_cap.to_bits()
     );
+}
+
+#[test]
+fn cached_estimates_bit_identical_to_solver_across_full_cap_sweep() {
+    // The memoized hot path must be invisible: for every cap the profiler
+    // can enforce, the cached estimate a fleet site uses is bit-identical
+    // to a direct fixed-point solve on an identical testbed.
+    let zoo = all_models();
+    let gpu = setup_no1().gpu;
+    for entry in &zoo[..4] {
+        let w = entry.workload(&gpu);
+        let mut cached = Testbed::new(setup_no1(), 99);
+        let mut solver = Testbed::new(setup_no1(), 99);
+        for cap_pct in (30..=100).step_by(5) {
+            let cap = cap_pct as f64 / 100.0;
+            cached.set_cap_frac(cap);
+            solver.set_cap_frac(cap);
+            let memo_t = cached.train_estimate(&w, 128);
+            let raw_t = solver.exec.train_step(&w, 128);
+            assert_eq!(memo_t.step_time.0.to_bits(), raw_t.step_time.0.to_bits());
+            assert_eq!(memo_t.gpu_power.0.to_bits(), raw_t.gpu_power.0.to_bits());
+            assert_eq!(memo_t.op.freq_mhz.to_bits(), raw_t.op.freq_mhz.to_bits());
+            let memo_i = cached.infer_estimate(&w, 128);
+            let raw_i = solver.exec.infer_step(&w, 128);
+            assert_eq!(memo_i.step_time.0.to_bits(), raw_i.step_time.0.to_bits());
+            assert_eq!(memo_i.gpu_power.0.to_bits(), raw_i.gpu_power.0.to_bits());
+            // And a repeat lookup (a cache hit) is still bit-identical.
+            let hit = cached.train_estimate(&w, 128);
+            assert_eq!(hit.step_time.0.to_bits(), raw_t.step_time.0.to_bits());
+        }
+        let (hits, misses) = cached.cache.stats();
+        assert!(hits >= 15, "{}: repeat lookups must hit ({hits})", entry.name);
+        assert_eq!(
+            misses,
+            15 * 2,
+            "{}: one solve per (cap, kind) after invalidation",
+            entry.name
+        );
+    }
 }
 
 #[test]
