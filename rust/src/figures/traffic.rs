@@ -1,0 +1,303 @@
+//! Traffic-day roll-up: a user-driven fleet under FROST vs the identical
+//! stock-cap baseline (same seed, same hardware mix, same arrival
+//! streams), compared over one seeded diurnal day (DESIGN.md §9).
+//!
+//! The headline numbers are the **traffic-day fleet energy saving**
+//! (slot energy only — training and profiling are reported separately)
+//! and the **SLO attainment per QoS class**: p50/p95/p99 request latency
+//! against each class's deadline, plus dropped/late counts.  Off-peak and
+//! peak slots are compared separately, because that is where a
+//! load-blind cap and a FROST cap differ most.
+
+use anyhow::{Context, Result};
+
+use crate::config::setup_no1;
+use crate::frost::QosClass;
+use crate::metrics::percentile;
+use crate::oran::{Fleet, FleetConfig, FleetReport};
+use crate::traffic::{SloSpec, SloSummary};
+use crate::util::Series;
+
+/// Class order used in every per-class table and vector.
+pub const QOS_CLASSES: [QosClass; 3] =
+    [QosClass::LatencyCritical, QosClass::Balanced, QosClass::EnergySaver];
+
+/// Output of [`traffic_comparison`].
+#[derive(Debug, Clone)]
+pub struct TrafficFigOutput {
+    /// One row per QoS class: deadline, FROST p50/p95/p99, baseline p99,
+    /// attainment both ways, FROST dropped/late.
+    pub class_table: Series,
+    /// One row per slot of the day: offered rate, baseline/FROST energy,
+    /// saving.
+    pub slot_table: Series,
+    /// One row per site: serving memory-boundedness (`infer_beta`), the
+    /// day's demand, cap, energy both ways, and the site's p99.
+    pub site_table: Series,
+    pub frost_day_energy_j: f64,
+    pub base_day_energy_j: f64,
+    /// 1 − FROST/baseline over the whole traffic day.
+    pub day_saving_frac: f64,
+    /// Same, restricted to slots with below-mean offered load.
+    pub offpeak_saving_frac: f64,
+    /// Same, restricted to slots with above-mean offered load.
+    pub peak_saving_frac: f64,
+    /// Per-class roll-ups, in [`QOS_CLASSES`] order.
+    pub frost_slo: Vec<SloSummary>,
+    pub base_slo: Vec<SloSummary>,
+    /// Monitor-requested re-profiles in the FROST run (signature drift or
+    /// demand shift)…
+    pub reprofile_requests: u64,
+    /// …of which this many were demand-shift driven.
+    pub load_shift_reprofiles: u64,
+    pub frost: FleetReport,
+    pub baseline: FleetReport,
+}
+
+/// The per-day aggregates of one fleet run.
+struct DayCollect {
+    day_energy_j: f64,
+    slot_energy_j: Vec<f64>,
+    slot_offered: Vec<u64>,
+    slo: Vec<SloSummary>,
+    reprofiles: u64,
+    load_shifts: u64,
+}
+
+fn collect_day(fleet: &Fleet, slots_per_day: u32, slo: &SloSpec) -> DayCollect {
+    let n_slots = slots_per_day as usize;
+    let mut slot_energy_j = vec![0.0; n_slots];
+    let mut slot_offered = vec![0u64; n_slots];
+    let mut day_energy_j = 0.0;
+    let mut reprofiles = 0;
+    let mut load_shifts = 0;
+    let mut lat: Vec<Vec<f64>> = vec![Vec::new(); QOS_CLASSES.len()];
+    let mut counts = [(0u64, 0u64, 0u64, 0u64); 3]; // offered/served/dropped/late
+    // Site-index order everywhere: the aggregation itself is part of the
+    // §6 determinism contract.
+    for site in &fleet.sites {
+        let t = site.traffic.as_ref().expect("traffic-driven fleet");
+        let class = QOS_CLASSES.iter().position(|c| *c == site.qos).expect("known class");
+        lat[class].extend_from_slice(&t.latencies);
+        for s in &t.slot_log {
+            let k = (s.slot_in_day as usize).min(n_slots - 1);
+            slot_energy_j[k] += s.energy_j;
+            slot_offered[k] += s.offered;
+            counts[class].0 += s.offered;
+            counts[class].1 += s.served;
+            counts[class].2 += s.dropped;
+            counts[class].3 += s.late;
+        }
+        day_energy_j += t.day_energy_j;
+        reprofiles += t.reprofile_requests;
+        load_shifts += t.load_shift_reprofiles();
+    }
+    let slo = QOS_CLASSES
+        .iter()
+        .zip(lat.iter_mut())
+        .zip(counts.iter())
+        .map(|((qos, lat), &(offered, served, dropped, late))| {
+            SloSummary::from_latencies(
+                *qos,
+                slo.deadline_for(*qos),
+                offered,
+                served,
+                dropped,
+                late,
+                lat,
+            )
+        })
+        .collect();
+    DayCollect { day_energy_j, slot_energy_j, slot_offered, slo, reprofiles, load_shifts }
+}
+
+fn saving(frost_j: f64, base_j: f64) -> f64 {
+    if base_j > 0.0 {
+        1.0 - frost_j / base_j
+    } else {
+        0.0
+    }
+}
+
+/// Run the same seeded diurnal day twice — FROST on, then stock caps —
+/// and compare energy and SLO attainment.  `config.traffic` must be set;
+/// `frost_enabled` is overridden per run.
+pub fn traffic_comparison(config: &FleetConfig) -> Result<TrafficFigOutput> {
+    let tr = config
+        .traffic
+        .clone()
+        .context("traffic_comparison needs FleetConfig::traffic set")?;
+    let mut frost_cfg = config.clone();
+    frost_cfg.frost_enabled = true;
+    let mut base_cfg = config.clone();
+    base_cfg.frost_enabled = false;
+    base_cfg.budget_frac = 1.0;
+
+    let mut frost_fleet = Fleet::new(frost_cfg)?;
+    let frost_report = frost_fleet.run()?;
+    let mut base_fleet = Fleet::new(base_cfg)?;
+    let base_report = base_fleet.run()?;
+
+    let f = collect_day(&frost_fleet, tr.slots_per_day, &tr.slo);
+    let b = collect_day(&base_fleet, tr.slots_per_day, &tr.slo);
+
+    let mut class_table = Series::new(
+        format!("Traffic SLO: {} sites, seed {}", config.sites, config.seed),
+        &[
+            "deadline_ms",
+            "frost_p50_ms",
+            "frost_p95_ms",
+            "frost_p99_ms",
+            "base_p99_ms",
+            "frost_attain_pct",
+            "base_attain_pct",
+            "frost_dropped",
+            "frost_late",
+        ],
+    );
+    for (fs, bs) in f.slo.iter().zip(&b.slo) {
+        class_table.push(fs.qos.as_str(), vec![
+            fs.deadline_s * 1e3,
+            fs.p50_s * 1e3,
+            fs.p95_s * 1e3,
+            fs.p99_s * 1e3,
+            bs.p99_s * 1e3,
+            fs.attainment * 100.0,
+            bs.attainment * 100.0,
+            fs.dropped as f64,
+            fs.late as f64,
+        ]);
+    }
+
+    let slot_s = tr.slot_s();
+    let mut slot_table = Series::new(
+        format!("Traffic day: {} slots of {:.0} s", tr.slots_per_day, slot_s),
+        &["offered_per_s", "base_kj", "frost_kj", "saving_pct"],
+    );
+    let mean_offered = f.slot_offered.iter().sum::<u64>() as f64
+        / f.slot_offered.len().max(1) as f64;
+    let (mut off_f, mut off_b, mut pk_f, mut pk_b) = (0.0, 0.0, 0.0, 0.0);
+    for (k, (&fj, &bj)) in f.slot_energy_j.iter().zip(&b.slot_energy_j).enumerate() {
+        let offered = f.slot_offered[k] as f64;
+        slot_table.push(format!("slot {k:02}"), vec![
+            offered / slot_s,
+            bj / 1e3,
+            fj / 1e3,
+            saving(fj, bj) * 100.0,
+        ]);
+        if offered < mean_offered {
+            off_f += fj;
+            off_b += bj;
+        } else {
+            pk_f += fj;
+            pk_b += bj;
+        }
+    }
+
+    let reference_gpu = setup_no1().gpu;
+    let mut site_table = Series::new(
+        "Per-site traffic day",
+        &[
+            "infer_beta",
+            "offered",
+            "cap_pct",
+            "base_day_kj",
+            "frost_day_kj",
+            "saving_pct",
+            "p99_ms",
+            "deadline_ms",
+        ],
+    );
+    for (fsite, bsite) in frost_fleet.sites.iter().zip(&base_fleet.sites) {
+        let ft = fsite.traffic.as_ref().expect("traffic-driven fleet");
+        let bt = bsite.traffic.as_ref().expect("traffic-driven fleet");
+        let mut lat = ft.latencies.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+        site_table.push(format!("{} {}", fsite.name, fsite.zoo_model), vec![
+            // Serving is the memory-boundedness that decides how
+            // cap-tolerant this site's traffic is.
+            fsite.workload.infer_beta(&reference_gpu),
+            ft.offered_today as f64,
+            fsite.host.testbed.cap_frac() * 100.0,
+            bt.day_energy_j / 1e3,
+            ft.day_energy_j / 1e3,
+            saving(ft.day_energy_j, bt.day_energy_j) * 100.0,
+            percentile(&lat, 0.99) * 1e3,
+            ft.deadline_s * 1e3,
+        ]);
+    }
+
+    Ok(TrafficFigOutput {
+        class_table,
+        slot_table,
+        site_table,
+        frost_day_energy_j: f.day_energy_j,
+        base_day_energy_j: b.day_energy_j,
+        day_saving_frac: saving(f.day_energy_j, b.day_energy_j),
+        offpeak_saving_frac: saving(off_f, off_b),
+        peak_saving_frac: saving(pk_f, pk_b),
+        frost_slo: f.slo,
+        base_slo: b.slo,
+        reprofile_requests: f.reprofiles,
+        load_shift_reprofiles: f.load_shifts,
+        frost: frost_report,
+        baseline: base_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::TrafficConfig;
+
+    #[test]
+    fn traffic_comparison_reports_classes_slots_and_saving() {
+        let tr = TrafficConfig {
+            users_per_site: 200,
+            requests_per_user_per_day: 30.0,
+            day_s: 600.0,
+            slots_per_day: 6,
+            warmup_rounds: 3,
+            max_batch: 32,
+            ..TrafficConfig::default()
+        };
+        let config = FleetConfig {
+            sites: 3,
+            seed: 9,
+            rounds: tr.rounds_for_one_day(),
+            train_epochs: 40,
+            samples_per_epoch: 5_000,
+            infer_steps_per_round: 10,
+            max_concurrent_profiles: 3,
+            traffic: Some(tr),
+            ..FleetConfig::default()
+        };
+        let out = traffic_comparison(&config).unwrap();
+        assert_eq!(out.class_table.len(), 3);
+        assert_eq!(out.slot_table.len(), 6);
+        assert_eq!(out.site_table.len(), 3);
+        assert!(out.base_day_energy_j > 0.0);
+        assert!(out.frost_day_energy_j > 0.0);
+        assert!(
+            out.frost_day_energy_j < out.base_day_energy_j,
+            "FROST day {} must undercut baseline {}",
+            out.frost_day_energy_j,
+            out.base_day_energy_j
+        );
+        // Requests conserve per class: offered = served + dropped.
+        for s in &out.frost_slo {
+            assert_eq!(s.offered, s.served + s.dropped, "{:?}", s.qos);
+        }
+        // The baseline never profiles and never drops below stock caps.
+        assert_eq!(out.baseline.fleet_profiling_energy_j, 0.0);
+        for site in &out.baseline.sites {
+            assert_eq!(site.cap_frac, 1.0);
+        }
+    }
+
+    #[test]
+    fn traffic_comparison_requires_traffic_config() {
+        let config = FleetConfig { sites: 2, ..FleetConfig::default() };
+        assert!(traffic_comparison(&config).is_err());
+    }
+}

@@ -16,6 +16,15 @@ pub struct Observation {
     pub at: Seconds,
     pub gpu_power_w: f64,
     pub samples_per_s: f64,
+    /// Offered request load (requests/s) behind this window.  Zero is
+    /// data — a traffic-driven host reporting "no demand this window"
+    /// moves the tracker just like any other value — while a host that is
+    /// not traffic-driven reports a constant 0.0 and never develops a
+    /// positive load baseline, so the demand trigger stays inert for it.
+    /// A demand shift is a second re-profile trigger: the energy-optimal
+    /// cap for a loaded server is not the optimal cap for a mostly-idle
+    /// one (DESIGN.md §9).
+    pub offered_load_per_s: f64,
 }
 
 /// Monitor configuration.
@@ -30,6 +39,10 @@ pub struct MonitorConfig {
     pub warmup: usize,
     /// Minimum virtual time between re-profiles (profiling costs energy).
     pub cooldown: Seconds,
+    /// Relative shift of the offered load (vs the settled baseline) that
+    /// triggers a re-profile.  Only consulted when observations carry a
+    /// positive `offered_load_per_s`.
+    pub load_shift_threshold: f64,
 }
 
 impl Default for MonitorConfig {
@@ -39,6 +52,7 @@ impl Default for MonitorConfig {
             drift_threshold: 0.15,
             warmup: 20,
             cooldown: Seconds(600.0),
+            load_shift_threshold: 0.5,
         }
     }
 }
@@ -59,10 +73,16 @@ pub struct ContinuousMonitor {
     /// Settled baseline J/sample (None until warm).
     baseline: Option<f64>,
     ewma: Option<f64>,
+    /// Settled baseline offered load and its EWMA (None until the stream
+    /// carries a positive load).
+    load_baseline: Option<f64>,
+    load_ewma: Option<f64>,
     seen: usize,
     last_reprofile: Option<Seconds>,
     /// Count of re-profiles triggered (for reporting).
     pub reprofiles: u64,
+    /// How many of those carried an offered-load shift past the threshold.
+    pub load_shifts: u64,
 }
 
 impl ContinuousMonitor {
@@ -71,9 +91,12 @@ impl ContinuousMonitor {
             config,
             baseline: None,
             ewma: None,
+            load_baseline: None,
+            load_ewma: None,
             seen: 0,
             last_reprofile: None,
             reprofiles: 0,
+            load_shifts: 0,
         }
     }
 
@@ -85,10 +108,26 @@ impl ContinuousMonitor {
         obs.gpu_power_w / obs.samples_per_s
     }
 
+    /// EWMA-track the offered load.  Zero counts (a demand collapse must
+    /// move the tracker); negative/NaN input is discarded as malformed.
+    fn track_load(&mut self, load: f64) {
+        if !load.is_finite() || load < 0.0 {
+            return;
+        }
+        let a = self.config.alpha;
+        self.load_ewma = Some(match self.load_ewma {
+            Some(prev) => prev * (1.0 - a) + load * a,
+            None => load,
+        });
+    }
+
     /// Feed one observation; returns the requested action.
     pub fn observe(&mut self, obs: Observation) -> MonitorAction {
+        self.track_load(obs.offered_load_per_s);
         let sig = Self::signature(&obs);
         if !sig.is_finite() {
+            // An idle window has no service signature, but the load
+            // tracker above still saw the (possibly zero) demand.
             return MonitorAction::None;
         }
         let a = self.config.alpha;
@@ -104,16 +143,44 @@ impl ContinuousMonitor {
         match self.baseline {
             None => {
                 self.baseline = Some(ewma);
+                self.load_baseline = self.load_ewma;
                 MonitorAction::None
             }
             Some(base) => {
+                // A load stream that only started after the baseline
+                // settled still gets a baseline to drift against.
+                if self.load_baseline.is_none() {
+                    self.load_baseline = self.load_ewma;
+                }
                 let drift = (ewma - base).abs() / base.max(1e-12);
+                let load_shift = match (self.load_baseline, self.load_ewma) {
+                    (Some(lb), Some(le)) if lb > 0.0 => (le - lb).abs() / lb,
+                    // Demand appearing out of nowhere is an infinite
+                    // relative shift; a flat-zero stream (e.g. a host
+                    // that is not traffic-driven) never shifts.
+                    (Some(lb), Some(le)) if le > 0.0 && lb <= 0.0 => f64::INFINITY,
+                    _ => 0.0,
+                };
                 let cooled = self
                     .last_reprofile
                     .map_or(true, |t| obs.at.0 - t.0 >= self.config.cooldown.0);
-                if drift > self.config.drift_threshold && cooled {
+                let drifted = drift > self.config.drift_threshold;
+                let shifted = load_shift > self.config.load_shift_threshold;
+                if (drifted || shifted) && cooled {
                     // Re-baseline on the new regime and request profiling.
                     self.baseline = Some(ewma);
+                    if shifted {
+                        self.load_shifts += 1;
+                        // Snap the load tracker to the observed regime so
+                        // one sustained shift fires once, instead of
+                        // re-triggering every cooldown while the EWMA is
+                        // still converging toward the new level.
+                        if obs.offered_load_per_s.is_finite() && obs.offered_load_per_s >= 0.0
+                        {
+                            self.load_ewma = Some(obs.offered_load_per_s);
+                        }
+                    }
+                    self.load_baseline = self.load_ewma;
                     self.last_reprofile = Some(obs.at);
                     self.reprofiles += 1;
                     MonitorAction::Reprofile
@@ -134,7 +201,21 @@ mod tests {
     use super::*;
 
     fn obs(at: f64, power: f64, tput: f64) -> Observation {
-        Observation { at: Seconds(at), gpu_power_w: power, samples_per_s: tput }
+        Observation {
+            at: Seconds(at),
+            gpu_power_w: power,
+            samples_per_s: tput,
+            offered_load_per_s: 0.0,
+        }
+    }
+
+    fn obs_loaded(at: f64, power: f64, tput: f64, load: f64) -> Observation {
+        Observation {
+            at: Seconds(at),
+            gpu_power_w: power,
+            samples_per_s: tput,
+            offered_load_per_s: load,
+        }
     }
 
     fn feed_steady(m: &mut ContinuousMonitor, from: f64, n: usize, power: f64, tput: f64) -> u64 {
@@ -199,5 +280,104 @@ mod tests {
         let mut m = ContinuousMonitor::new(MonitorConfig::default());
         feed_steady(&mut m, 0.0, 100, 280.0, 4000.0);
         assert_eq!(m.observe(obs(200.0, 280.0, 0.0)), MonitorAction::None);
+    }
+
+    #[test]
+    fn load_shift_triggers_reprofile_without_signature_drift() {
+        // Constant power/throughput signature — only the offered load
+        // moves (a diurnal morning ramp).  The demand tracker alone must
+        // request exactly one re-profile for one sustained shift.
+        let mut m = ContinuousMonitor::new(MonitorConfig::default());
+        let mut triggers = 0;
+        for i in 0..100 {
+            if m.observe(obs_loaded(i as f64, 280.0, 4000.0, 10.0)) == MonitorAction::Reprofile
+            {
+                triggers += 1;
+            }
+        }
+        assert_eq!(triggers, 0, "steady load must not trigger");
+        for i in 0..200 {
+            if m.observe(obs_loaded(100.0 + i as f64, 280.0, 4000.0, 40.0))
+                == MonitorAction::Reprofile
+            {
+                triggers += 1;
+            }
+        }
+        assert_eq!(triggers, 1, "one sustained load shift, one re-profile");
+        assert_eq!(m.load_shifts, 1);
+        assert_eq!(m.reprofiles, 1);
+    }
+
+    #[test]
+    fn flat_zero_load_stream_never_shifts() {
+        // A host that is not traffic-driven reports a constant 0.0: the
+        // tracker sees it, but a zero baseline with zero demand can never
+        // shift — only the signature can trigger, as before the field
+        // existed.
+        let mut m = ContinuousMonitor::new(MonitorConfig::default());
+        let t = feed_steady(&mut m, 0.0, 500, 280.0, 4000.0);
+        assert_eq!(t, 0);
+        assert_eq!(m.load_shifts, 0);
+    }
+
+    #[test]
+    fn demand_collapse_and_reappearance_both_shift() {
+        // High → zero: the EWMA must decay and fire one re-profile; zero
+        // baseline → positive demand is an infinite relative shift and
+        // fires again after the cooldown.
+        let cfg = MonitorConfig { cooldown: Seconds(50.0), ..Default::default() };
+        let mut m = ContinuousMonitor::new(cfg);
+        for i in 0..100 {
+            m.observe(obs_loaded(i as f64, 280.0, 4000.0, 30.0));
+        }
+        let mut collapse_triggers = 0;
+        for i in 0..100 {
+            if m.observe(obs_loaded(100.0 + i as f64, 280.0, 4000.0, 0.0))
+                == MonitorAction::Reprofile
+            {
+                collapse_triggers += 1;
+            }
+        }
+        assert!(collapse_triggers >= 1, "demand collapse must re-profile");
+        let mut rebound_triggers = 0;
+        for i in 0..100 {
+            if m.observe(obs_loaded(200.0 + i as f64, 280.0, 4000.0, 30.0))
+                == MonitorAction::Reprofile
+            {
+                rebound_triggers += 1;
+            }
+        }
+        assert!(rebound_triggers >= 1, "demand reappearing must re-profile");
+        assert_eq!(m.load_shifts, m.reprofiles, "every trigger here was load-driven");
+    }
+
+    #[test]
+    fn backwards_timestamps_do_not_bypass_cooldown() {
+        // A KPM stream with a replayed/out-of-order timestamp must not be
+        // able to sneak past the cooldown: the elapsed time since the last
+        // re-profile is negative, which can never reach the cooldown.
+        let cfg = MonitorConfig { cooldown: Seconds(100.0), warmup: 1, ..Default::default() };
+        let mut m = ContinuousMonitor::new(cfg);
+        assert_eq!(m.observe(obs(0.0, 280.0, 4000.0)), MonitorAction::None); // baseline
+        assert_eq!(m.observe(obs(1.0, 2800.0, 4000.0)), MonitorAction::Reprofile);
+        // Massive drift, but stamped *before* the re-profile: suppressed.
+        assert_eq!(m.observe(obs(-50.0, 28_000.0, 4000.0)), MonitorAction::None);
+        assert_eq!(m.observe(obs(0.5, 28_000.0, 4000.0)), MonitorAction::None);
+        assert_eq!(m.reprofiles, 1);
+    }
+
+    #[test]
+    fn drift_exactly_at_cooldown_boundary_fires() {
+        // The cooldown is inclusive: elapsed == cooldown may re-profile,
+        // one tick less may not.
+        let cfg = MonitorConfig { cooldown: Seconds(100.0), warmup: 1, ..Default::default() };
+        let mut m = ContinuousMonitor::new(cfg);
+        assert_eq!(m.observe(obs(0.0, 280.0, 4000.0)), MonitorAction::None); // baseline
+        assert_eq!(m.observe(obs(1.0, 2800.0, 4000.0)), MonitorAction::Reprofile);
+        // Still drifting hard, but 0.5 s inside the cooldown window.
+        assert_eq!(m.observe(obs(100.5, 28_000.0, 4000.0)), MonitorAction::None);
+        // Exactly at the boundary (1.0 + 100.0): fires.
+        assert_eq!(m.observe(obs(101.0, 28_000.0, 4000.0)), MonitorAction::Reprofile);
+        assert_eq!(m.reprofiles, 2);
     }
 }

@@ -35,6 +35,7 @@ pub mod power;
 pub mod runtime;
 pub mod simulator;
 pub mod telemetry;
+pub mod traffic;
 pub mod util;
 pub mod zoo;
 

@@ -31,7 +31,10 @@ struct Args {
 
 impl Args {
     fn parse() -> Args {
-        let mut it = std::env::args().skip(1);
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    fn parse_from(mut it: impl Iterator<Item = String>) -> Args {
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = HashMap::new();
         let mut key: Option<String> = None;
@@ -63,6 +66,49 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Parse `--key` as an unsigned integer with a lower bound; missing →
+    /// default.  Malformed or out-of-range values are hard errors — the
+    /// CLI never silently corrects a flag (e.g. the old `--sites 0` clamp
+    /// quietly ran a 1-site fleet).
+    fn require_u64(&self, key: &str, default: u64, min: u64) -> Result<u64> {
+        let Some(raw) = self.get(key) else { return Ok(default) };
+        let value: u64 = match raw.parse() {
+            Ok(v) => v,
+            Err(_) => anyhow::bail!(
+                "invalid value for --{key}: '{raw}' is not a non-negative integer"
+            ),
+        };
+        anyhow::ensure!(value >= min, "--{key} {value} is out of range (must be >= {min})");
+        Ok(value)
+    }
+
+    /// [`Self::require_u64`] for u32-typed config fields: values past
+    /// u32::MAX are range errors, never silent truncations.
+    fn require_u32(&self, key: &str, default: u32, min: u32) -> Result<u32> {
+        let value = self.require_u64(key, default as u64, min as u64)?;
+        anyhow::ensure!(
+            value <= u32::MAX as u64,
+            "--{key} {value} is out of range (must be <= {})",
+            u32::MAX
+        );
+        Ok(value as u32)
+    }
+
+    /// Parse `--key` as a finite float within `[min, max]`; missing →
+    /// default, malformed or out-of-range → hard error.
+    fn require_f64(&self, key: &str, default: f64, min: f64, max: f64) -> Result<f64> {
+        let Some(raw) = self.get(key) else { return Ok(default) };
+        let value: f64 = match raw.parse() {
+            Ok(v) => v,
+            Err(_) => anyhow::bail!("invalid value for --{key}: '{raw}' is not a number"),
+        };
+        anyhow::ensure!(
+            value.is_finite() && value >= min && value <= max,
+            "--{key} {value} is out of range [{min}, {max}]"
+        );
+        Ok(value)
+    }
+
     fn setup(&self) -> HardwareConfig {
         match self.get_or("setup", "1") {
             "2" => setup_no2(),
@@ -82,6 +128,7 @@ fn main() {
         "overhead" => cmd_overhead(&args),
         "oran-demo" => cmd_oran_demo(&args),
         "fleet" => cmd_fleet(&args),
+        "traffic" => cmd_traffic(&args),
         "bench" => cmd_bench(&args),
         "shift" => cmd_shift(&args),
         "dvfs-ablation" => cmd_dvfs_ablation(&args),
@@ -117,6 +164,10 @@ COMMANDS:
             [--epochs N] [--samples N] [--infer-steps N]
             [--budget-frac F] [--max-profiles K] [--churn-every C]
             [--sample-retention N] [--out DIR] multi-host fleet simulation
+  traffic   [--sites N] [--seed S] [--threads T] [--users N]
+            [--req-per-user R] [--day-s S] [--slots N] [--max-batch B]
+            [--arrivals poisson|bursty] [--budget-frac F] [--smoke]
+            [--out DIR]   seeded diurnal day, FROST vs stock caps + SLOs
   bench     [--target-s S] [--out FILE] [--force]  hot-path benches -> BENCH_fleet.json
   shift     [--budget-frac F]               site-level power shifting
   dvfs-ablation [--setup 1|2] [--exponent M]  capping vs DVFS per model
@@ -128,17 +179,18 @@ Commands marked (pjrt) execute real AOT artifacts and need a build with
 fn cmd_list_models() -> Result<()> {
     let gpu = setup_no1().gpu;
     println!(
-        "{:<14} {:>12} {:>10} {:>6} {:>6} {:>9}  artifact",
-        "model", "params", "MFLOP/img", "beta", "eff", "ref acc"
+        "{:<14} {:>12} {:>10} {:>6} {:>7} {:>6} {:>9}  artifact",
+        "model", "params", "MFLOP/img", "beta", "i-beta", "eff", "ref acc"
     );
     for m in all_models() {
         let w = m.workload(&gpu);
         println!(
-            "{:<14} {:>12} {:>10.1} {:>6.2} {:>6.2} {:>8.2}%  {}",
+            "{:<14} {:>12} {:>10.1} {:>6.2} {:>7.2} {:>6.2} {:>8.2}%  {}",
             m.name,
             m.params,
             m.fwd_mflops,
             w.beta(&gpu),
+            w.infer_beta(&gpu),
             m.kernel_efficiency,
             m.reference_accuracy * 100.0,
             m.artifact.unwrap_or("-"),
@@ -403,17 +455,17 @@ fn cmd_dvfs_ablation(args: &Args) -> Result<()> {
 fn cmd_fleet(args: &Args) -> Result<()> {
     use frost::oran::FleetConfig;
     let config = FleetConfig {
-        sites: args.num("sites", 16.0).max(1.0) as usize,
-        seed: args.num("seed", 7.0) as u64,
-        threads: args.num("threads", 0.0) as usize,
-        rounds: args.num("rounds", 8.0).max(1.0) as u32,
-        train_epochs: args.num("epochs", 60.0).max(1.0) as u32,
-        samples_per_epoch: args.num("samples", 20_000.0).max(1.0) as u64,
-        infer_steps_per_round: args.num("infer-steps", 40.0).max(1.0) as u64,
-        budget_frac: args.num("budget-frac", 1.0),
-        max_concurrent_profiles: args.num("max-profiles", 4.0).max(1.0) as usize,
-        churn_every: args.num("churn-every", 0.0) as u32,
-        sample_retention: args.num("sample-retention", 512.0).max(0.0) as usize,
+        sites: args.require_u64("sites", 16, 1)? as usize,
+        seed: args.require_u64("seed", 7, 0)?,
+        threads: args.require_u64("threads", 0, 0)? as usize,
+        rounds: args.require_u32("rounds", 8, 1)?,
+        train_epochs: args.require_u32("epochs", 60, 1)?,
+        samples_per_epoch: args.require_u64("samples", 20_000, 1)?,
+        infer_steps_per_round: args.require_u64("infer-steps", 40, 1)?,
+        budget_frac: args.require_f64("budget-frac", 1.0, 1e-6, 10.0)?,
+        max_concurrent_profiles: args.require_u64("max-profiles", 4, 1)? as usize,
+        churn_every: args.require_u32("churn-every", 0, 0)?,
+        sample_retention: args.require_u64("sample-retention", 512, 0)? as usize,
         ..FleetConfig::default()
     };
     let sites = config.sites;
@@ -469,6 +521,119 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         let path = std::path::Path::new(dir).join("fleet.csv");
         std::fs::write(&path, out.table.to_csv())?;
         println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// The acceptance scenario of DESIGN.md §9: run the same seeded diurnal
+/// day twice (FROST vs stock caps) and report fleet energy saving plus
+/// p50/p95/p99 latency and SLO attainment per QoS class.
+fn cmd_traffic(args: &Args) -> Result<()> {
+    use frost::oran::FleetConfig;
+    use frost::traffic::{ArrivalKind, TrafficConfig};
+    let smoke = args.get("smoke").is_some();
+    let base = if smoke { TrafficConfig::smoke() } else { TrafficConfig::default() };
+    let tr = TrafficConfig {
+        users_per_site: args.require_u64("users", base.users_per_site, 1)?,
+        requests_per_user_per_day: args.require_f64(
+            "req-per-user",
+            base.requests_per_user_per_day,
+            1e-6,
+            1e9,
+        )?,
+        day_s: args.require_f64("day-s", base.day_s, 1.0, 1e9)?,
+        slots_per_day: args.require_u32("slots", base.slots_per_day, 2)?,
+        max_batch: args.require_u32("max-batch", base.max_batch, 1)?,
+        kind: match args.get_or("arrivals", "poisson") {
+            "poisson" => ArrivalKind::Poisson,
+            "bursty" => ArrivalKind::bursty(),
+            other => anyhow::bail!(
+                "invalid value for --arrivals: '{other}' (expected poisson or bursty)"
+            ),
+        },
+        ..base
+    };
+    // The smoke fleet still needs 3 sites so every QoS class (the i % 3
+    // rotation) — including latency_critical — is exercised end to end.
+    let sites = args.require_u64("sites", if smoke { 3 } else { 16 }, 1)? as usize;
+    let config = FleetConfig {
+        sites,
+        seed: args.require_u64("seed", 7, 0)?,
+        threads: args.require_u64("threads", 0, 0)? as usize,
+        rounds: tr.rounds_for_one_day(),
+        train_epochs: args.require_u32("epochs", if smoke { 30 } else { 60 }, 1)?,
+        samples_per_epoch: if smoke { 5_000 } else { 20_000 },
+        budget_frac: args.require_f64("budget-frac", 1.0, 1e-6, 10.0)?,
+        // Wide stagger: every site is profiled before the day starts.
+        max_concurrent_profiles: sites,
+        traffic: Some(tr.clone()),
+        ..FleetConfig::default()
+    };
+    let out = figures::traffic_comparison(&config)?;
+    print!("{}", out.class_table.to_table());
+    println!();
+    print!("{}", out.slot_table.to_table());
+    println!();
+    print!("{}", out.site_table.to_table());
+    println!();
+    println!("=== traffic day roll-up ===");
+    let kind = if tr.kind == ArrivalKind::Poisson { "poisson" } else { "bursty" };
+    println!(
+        "sites                : {sites}; {} slots of {:.0} s ({kind} arrivals, \
+         {} users/site mean)",
+        tr.slots_per_day,
+        tr.slot_s(),
+        tr.users_per_site
+    );
+    println!(
+        "fleet day energy     : {:.1} kJ under FROST vs {:.1} kJ stock caps",
+        out.frost_day_energy_j / 1e3,
+        out.base_day_energy_j / 1e3
+    );
+    println!(
+        "traffic-day saving   : {:.1}%  (off-peak {:.1}%, peak {:.1}%)",
+        out.day_saving_frac * 100.0,
+        out.offpeak_saving_frac * 100.0,
+        out.peak_saving_frac * 100.0
+    );
+    println!(
+        "profiling charge     : {:.1} kJ; monitor re-profiles: {} ({} demand-shift)",
+        out.frost.fleet_profiling_energy_j / 1e3,
+        out.reprofile_requests,
+        out.load_shift_reprofiles
+    );
+    for s in &out.frost_slo {
+        println!(
+            "SLO {:<16} : p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms  \
+             (deadline {:>6.0} ms)  attainment {:>6.2}%  dropped {}  late {}",
+            s.qos.as_str(),
+            s.p50_s * 1e3,
+            s.p95_s * 1e3,
+            s.p99_s * 1e3,
+            s.deadline_s * 1e3,
+            s.attainment * 100.0,
+            s.dropped,
+            s.late
+        );
+    }
+    if let Some(budget) = out.frost.budget_w {
+        println!(
+            "global GPU budget    : {:.0} W (load-weighted water-fill){}",
+            budget,
+            if out.frost.budget_enforced { "" } else { " — NOT yet enforced" }
+        );
+    }
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        for (name, csv) in [
+            ("traffic_slo.csv", out.class_table.to_csv()),
+            ("traffic_slots.csv", out.slot_table.to_csv()),
+            ("traffic_sites.csv", out.site_table.to_csv()),
+        ] {
+            let path = std::path::Path::new(dir).join(name);
+            std::fs::write(&path, csv)?;
+            println!("wrote {}", path.display());
+        }
     }
     Ok(())
 }
@@ -530,4 +695,58 @@ fn cmd_oran_demo(args: &Args) -> Result<()> {
         lc.smo.mean_energy_saving() * 100.0
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(line: &[&str]) -> Args {
+        Args::parse_from(line.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn out_of_range_flags_error_instead_of_clamping() {
+        // `fleet --sites 0` used to run a silently clamped 1-site fleet.
+        let a = args(&["fleet", "--sites", "0"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("--sites 0"), "got: {err}");
+        assert!(err.contains("must be >= 1"), "got: {err}");
+        let a = args(&["traffic", "--slots", "1"]);
+        let err = cmd_traffic(&a).unwrap_err().to_string();
+        assert!(err.contains("--slots 1"), "got: {err}");
+        let a = args(&["fleet", "--budget-frac", "-0.5"]);
+        assert!(cmd_fleet(&a).is_err());
+    }
+
+    #[test]
+    fn malformed_numbers_error_clearly() {
+        let a = args(&["fleet", "--sites", "many"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("invalid value for --sites"), "got: {err}");
+        assert!(err.contains("'many'"), "got: {err}");
+        let a = args(&["traffic", "--day-s", "1h"]);
+        let err = cmd_traffic(&a).unwrap_err().to_string();
+        assert!(err.contains("invalid value for --day-s"), "got: {err}");
+        let a = args(&["traffic", "--arrivals", "lumpy"]);
+        let err = cmd_traffic(&a).unwrap_err().to_string();
+        assert!(err.contains("--arrivals"), "got: {err}");
+        // NaN is out of range, not a silent pass-through.
+        let a = args(&["fleet", "--budget-frac", "NaN"]);
+        assert!(cmd_fleet(&a).is_err());
+        // Values past u32::MAX error instead of silently wrapping (the
+        // old `as u32` cast turned --rounds 4294967297 into 1 round).
+        let a = args(&["fleet", "--rounds", "4294967297"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "got: {err}");
+    }
+
+    #[test]
+    fn valid_flags_still_parse() {
+        let a = args(&["fleet", "--sites", "3", "--budget-frac", "0.8"]);
+        assert_eq!(a.require_u64("sites", 16, 1).unwrap(), 3);
+        assert!((a.require_f64("budget-frac", 1.0, 1e-6, 10.0).unwrap() - 0.8).abs() < 1e-12);
+        // Missing flags fall back to their defaults.
+        assert_eq!(a.require_u64("rounds", 8, 1).unwrap(), 8);
+    }
 }

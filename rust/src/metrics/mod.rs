@@ -2,4 +2,6 @@
 
 pub mod stats;
 
-pub use stats::{linear_fit, mean, pearson, std_dev, StreamingSummary, Summary};
+pub use stats::{
+    linear_fit, mean, pearson, percentile, percentile_index, std_dev, StreamingSummary, Summary,
+};

@@ -63,6 +63,33 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
     (my - slope * mx, slope)
 }
 
+/// Nearest-rank index of quantile `q` in an ascending-sorted sample of
+/// size `n`: the smallest rank covering `q·n` of the sample
+/// (`ceil(q·n) − 1`), clamped to the valid index range.  Shared by the
+/// bench harness (p95 summary line) and the traffic SLO reporting
+/// (p50/p95/p99 latency), so the two cannot disagree on rank semantics.
+pub fn percentile_index(n: usize, q: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (n as f64 * q).ceil() as usize;
+    rank.max(1).min(n) - 1
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.  Empty input
+/// yields 0.0, matching [`Summary::of`]'s empty-input convention.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(
+        sorted.windows(2).all(|p| p[0] <= p[1]),
+        "percentile input must be sorted ascending"
+    );
+    sorted[percentile_index(sorted.len(), q)]
+}
+
 /// Five-number summary used in reports.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
@@ -179,6 +206,42 @@ mod tests {
         let mut one = StreamingSummary::new();
         one.push(7.5);
         assert_eq!(one.finish(), Summary::of(&[7.5]));
+    }
+
+    #[test]
+    fn percentile_index_is_nearest_rank() {
+        // p95 boundaries (the bench harness's summary line).
+        assert_eq!(percentile_index(1, 0.95), 0);
+        assert_eq!(percentile_index(3, 0.95), 2);
+        assert_eq!(percentile_index(10, 0.95), 9); // ceil(9.5) − 1
+        assert_eq!(percentile_index(20, 0.95), 18); // exactly the 19th of 20
+        assert_eq!(percentile_index(100, 0.95), 94);
+        assert_eq!(percentile_index(101, 0.95), 95);
+        // p50: the lower of the two middle ranks (`ceil(0.5n) − 1`),
+        // never past the end.
+        assert_eq!(percentile_index(1, 0.50), 0);
+        assert_eq!(percentile_index(2, 0.50), 0);
+        assert_eq!(percentile_index(4, 0.50), 1);
+        assert_eq!(percentile_index(5, 0.50), 2);
+        // p99 needs ≥ 100 samples to move off the p95 rank.
+        assert_eq!(percentile_index(100, 0.99), 98);
+        assert_eq!(percentile_index(1000, 0.99), 989);
+        // Degenerate quantiles clamp to the ends.
+        assert_eq!(percentile_index(10, 0.0), 0);
+        assert_eq!(percentile_index(10, 1.0), 9);
+        assert_eq!(percentile_index(10, 2.0), 9);
+        assert_eq!(percentile_index(0, 0.5), 0);
+    }
+
+    #[test]
+    fn percentile_reads_sorted_values() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
     }
 
     #[test]

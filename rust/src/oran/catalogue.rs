@@ -119,6 +119,14 @@ impl ModelCatalogue {
         Ok(())
     }
 
+    /// Forget the recorded cap so the profile scheduler re-requests it
+    /// under its stagger — how demand-shift re-profiling is routed
+    /// without stampeding the fleet (DESIGN.md §9).
+    pub fn clear_optimal_cap(&mut self, name: &str) -> Result<()> {
+        self.entry_mut(name)?.optimal_cap = None;
+        Ok(())
+    }
+
     pub fn get(&self, name: &str) -> Option<&CatalogueEntry> {
         self.entries.get(name)
     }

@@ -29,8 +29,10 @@
 //!    local fabric;
 //! 3. **parallel** site phase: each site applies policies, runs any
 //!    requested FROST profile, then its workload (initial training in its
-//!    first round, steady-state inference afterwards), publishing to its
-//!    telemetry shard;
+//!    first round; afterwards steady-state inference — or, in a
+//!    traffic-driven scenario (`FleetConfig::traffic`, DESIGN.md §9), one
+//!    seeded diurnal traffic slot through the queue + batch former),
+//!    publishing to its telemetry shard;
 //! 4. gateway **up** (site order) + SMO ingest of KPM/profile results;
 //! 5. FROST decisions recorded into the model catalogue;
 //! 6. budget allocation once every site is profiled;
@@ -50,11 +52,17 @@ use std::thread;
 use anyhow::{Context, Result};
 
 use crate::config::{setup_no1, setup_no2, HardwareConfig};
-use crate::frost::{EnergyPolicy, QosClass};
+use crate::frost::{
+    ContinuousMonitor, EnergyPolicy, MonitorAction, MonitorConfig, Observation, QosClass,
+};
 use crate::power::{allocate_budget, HostProfile};
 use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
 use crate::telemetry::hub::{PowerReading, TelemetryHub};
 use crate::telemetry::sampler::PowerSampler;
+use crate::traffic::{
+    ArrivalGen, ArrivalKind, BatchFormer, Request, SlotReport, SlotWindow, TrafficConfig,
+    TrafficServer,
+};
 use crate::util::bench::{bench, group, BenchStats};
 use crate::util::Seconds;
 use crate::zoo::{all_models, model_by_name};
@@ -97,6 +105,11 @@ pub struct FleetConfig {
     /// `PowerSampler` (0 = unbounded). Bounded by default so arbitrarily
     /// long fleet runs stay O(1) in memory.
     pub sample_retention: usize,
+    /// User-driven request load (DESIGN.md §9).  When set, trained sites
+    /// serve seeded diurnal traffic slots instead of the fixed
+    /// `infer_steps_per_round` loop once `TrafficConfig::warmup_rounds`
+    /// have passed; None keeps the legacy fixed workload bit-identical.
+    pub traffic: Option<TrafficConfig>,
 }
 
 impl Default for FleetConfig {
@@ -115,6 +128,7 @@ impl Default for FleetConfig {
             churn_every: 0,
             min_accuracy: 0.68,
             sample_retention: 512,
+            traffic: None,
         }
     }
 }
@@ -123,6 +137,79 @@ impl Default for FleetConfig {
 /// single site's exact testbed).
 pub fn site_seed(fleet_seed: u64, site_index: usize) -> u64 {
     fleet_seed ^ (site_index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Per-site traffic state: the seeded arrival stream, the persistent
+/// serving queue, the SLO ledger and the demand monitor.  Lives entirely
+/// on the site (stepped on the worker thread), so the §6 determinism
+/// contract holds untouched.
+pub struct SiteTraffic {
+    gen: ArrivalGen,
+    pub server: TrafficServer,
+    former: BatchFormer,
+    monitor: ContinuousMonitor,
+    /// This site's QoS deadline (seconds of traffic time).
+    pub deadline_s: f64,
+    /// Per-request latencies of the current day (cleared at day rollover
+    /// so multi-day runs stay bounded in memory).
+    pub latencies: Vec<f64>,
+    /// Per-slot records of the current day.
+    pub slot_log: Vec<SlotReport>,
+    /// Total slots served over the site's lifetime (day index derives
+    /// from it).
+    pub slots_served: u32,
+    /// Current-day aggregates.
+    pub offered_today: u64,
+    pub day_energy_j: f64,
+    /// Re-profiles the monitor has requested (signature drift OR demand
+    /// shift; see [`Self::load_shift_reprofiles`] for the demand subset).
+    pub reprofile_requests: u64,
+    /// Set on the worker thread when the monitor fires; the coordinator
+    /// consumes it by clearing the catalogue cap, so the re-profile goes
+    /// through the scheduler's stagger instead of stampeding the fleet.
+    reprofile_pending: bool,
+}
+
+impl SiteTraffic {
+    /// How many of the requested re-profiles carried an offered-load
+    /// shift past the monitor's threshold (demand-driven, as opposed to
+    /// pure signature drift).
+    pub fn load_shift_reprofiles(&self) -> u64 {
+        self.monitor.load_shifts
+    }
+
+    fn new(cfg: &TrafficConfig, site_index: usize, qos: QosClass, seed: u64) -> SiteTraffic {
+        let deadline_s = cfg.slo.deadline_for(qos);
+        SiteTraffic {
+            gen: ArrivalGen::new(
+                cfg.kind,
+                cfg.diurnal.clone(),
+                cfg.site_base_rate(site_index),
+                cfg.day_s,
+                seed,
+            ),
+            server: TrafficServer::new(),
+            former: BatchFormer::new(cfg.max_batch, deadline_s),
+            // Slot-cadence monitoring: settle after a few slots, then
+            // re-profile on demand shifts with a cooldown of roughly a
+            // sixth of a day so one diurnal ramp triggers once.
+            monitor: ContinuousMonitor::new(MonitorConfig {
+                alpha: 0.4,
+                drift_threshold: 0.25,
+                warmup: 3,
+                cooldown: Seconds(cfg.day_s / 6.0),
+                load_shift_threshold: 0.5,
+            }),
+            deadline_s,
+            latencies: Vec::new(),
+            slot_log: Vec::new(),
+            slots_served: 0,
+            offered_today: 0,
+            day_energy_j: 0.0,
+            reprofile_requests: 0,
+            reprofile_pending: false,
+        }
+    }
 }
 
 /// One ML-enabled site: host + private fabric shard + telemetry shard.
@@ -146,7 +233,7 @@ pub struct FleetSite {
     pub zoo_model: &'static str,
     /// Catalogue-unique deployment id, e.g. `ResNet@site03`.
     pub model_id: String,
-    workload: WorkloadDescriptor,
+    pub workload: WorkloadDescriptor,
     pub qos: QosClass,
     pub trained: bool,
     /// Cumulative epochs the current model has been trained for. Grows on
@@ -167,12 +254,17 @@ pub struct FleetSite {
     pub samples: u64,
     pub accuracy: f64,
     pub last_gpu_power_w: f64,
+    /// Rounds this site has run (drives the warm-up → traffic handover).
+    rounds_run: u32,
+    /// Traffic state when the scenario is traffic-driven.
+    pub traffic: Option<SiteTraffic>,
 }
 
 impl FleetSite {
     /// One site round, run on a worker thread. Touches only site-local
     /// state; cross-site traffic is deferred to `outbox`.
     fn run_round(&mut self, cfg: &FleetConfig) {
+        self.rounds_run += 1;
         // Apply coordinator-injected traffic (A1 policies, profile
         // requests). Profiling runs here, on the worker thread.
         self.local_bus.deliver_all();
@@ -202,7 +294,13 @@ impl FleetSite {
         self.last_gpu_power_w = gpu.0;
 
         let before = self.host.total_energy_j;
-        if self.trained {
+        let traffic_now = self.trained
+            && self.traffic.is_some()
+            && cfg.traffic.as_ref().map_or(false, |t| self.rounds_run > t.warmup_rounds);
+        if traffic_now {
+            let tr = cfg.traffic.as_ref().expect("checked above");
+            self.serve_traffic_slot(tr, cfg.frost_enabled);
+        } else if self.trained {
             let _ = self.host.run_inference(&self.model_id, cfg.infer_steps_per_round);
             self.samples += cfg.infer_steps_per_round * self.host.batch as u64;
         } else {
@@ -242,6 +340,75 @@ impl FleetSite {
         for (_from, msg) in self.local_smo.drain() {
             self.outbox.push(msg);
         }
+    }
+
+    /// Serve the site's next traffic slot (DESIGN.md §9): generate the
+    /// slot's seeded arrivals, push them through the host's batch former
+    /// under the current cap, and feed the demand monitor, which may ask
+    /// FROST to re-profile (routed through the scheduler stagger via the
+    /// coordinator — see `reprofile_pending`).
+    fn serve_traffic_slot(&mut self, tr: &TrafficConfig, frost_enabled: bool) {
+        let slot_s = tr.slot_s();
+        let t = self.traffic.as_mut().expect("traffic state initialised");
+        let slot_in_day = t.slots_served % tr.slots_per_day;
+        if slot_in_day == 0 && t.slots_served > 0 {
+            // Day rollover: the previous day flushed its queue at the
+            // last slot; reset the per-day ledgers so multi-day runs
+            // stay bounded in memory.
+            t.latencies.clear();
+            t.slot_log.clear();
+            t.offered_today = 0;
+            t.day_energy_j = 0.0;
+        }
+        let t0 = t.slots_served as f64 * slot_s;
+        let deadline_s = t.deadline_s;
+        let arrivals: Vec<Request> = t
+            .gen
+            .slot(t0, slot_s)
+            .into_iter()
+            .map(|a| Request { arrival: a, deadline: a + deadline_s })
+            .collect();
+        let window = SlotWindow {
+            t0,
+            dur: slot_s,
+            slot_in_day,
+            flush: slot_in_day + 1 == tr.slots_per_day,
+        };
+        let report = self
+            .host
+            .serve_slot(
+                &self.model_id,
+                &mut t.server,
+                &t.former,
+                arrivals,
+                window,
+                &mut t.latencies,
+            )
+            .expect("deployed model serves traffic");
+        t.slots_served += 1;
+        t.offered_today += report.offered;
+        t.day_energy_j += report.energy_j;
+        self.samples += report.served;
+        // Close the loop: the monitor watches the busy-power /
+        // service-throughput signature plus the offered load.
+        let service_tput =
+            if report.busy_s > 0.0 { report.batch_samples as f64 / report.busy_s } else { 0.0 };
+        let action = t.monitor.observe(Observation {
+            at: Seconds(t0 + slot_s),
+            gpu_power_w: report.gpu_busy_power_w,
+            samples_per_s: service_tput,
+            offered_load_per_s: report.offered_rate_per_s,
+        });
+        if frost_enabled && action == MonitorAction::Reprofile {
+            t.reprofile_requests += 1;
+            // Don't self-issue a ProfileRequest: a diurnal ramp shifts
+            // every site in the same round, and direct requests would
+            // stampede N concurrent profiles.  The coordinator clears the
+            // catalogue cap instead, and the FleetProfileScheduler
+            // re-requests it under max_concurrent_profiles.
+            t.reprofile_pending = true;
+        }
+        t.slot_log.push(report);
     }
 }
 
@@ -423,10 +590,21 @@ pub struct Fleet {
     budget_applied: bool,
 }
 
+/// How often a traffic-driven fleet re-runs the load-weighted budget
+/// water-fill (in rounds).  Non-traffic fleets allocate once, as before.
+const BUDGET_REFRESH_ROUNDS: u32 = 4;
+/// Lower bound on a site's offered-load budget weight: even a site whose
+/// last slot saw zero demand keeps a quarter share, so its throughput
+/// curve never collapses to all-zeros (which would pin it at min_cap).
+const MIN_BUDGET_WEIGHT: f64 = 0.25;
+
 impl Fleet {
     pub fn new(config: FleetConfig) -> Result<Fleet> {
         anyhow::ensure!(config.sites > 0, "fleet needs at least one site");
         anyhow::ensure!(config.budget_frac > 0.0, "budget_frac must be positive");
+        if let Some(tr) = &config.traffic {
+            tr.validate().context("invalid traffic config")?;
+        }
         let bus = Bus::new();
         let mut smo = Smo::new(bus.clone());
         let mut nonrt = NonRtRic::new(bus.clone(), config.min_accuracy);
@@ -466,6 +644,12 @@ impl Fleet {
             );
             let qos = [QosClass::EnergySaver, QosClass::Balanced, QosClass::LatencyCritical]
                 [i % 3];
+            // Traffic state is seeded per site so arrival streams replay
+            // bit-for-bit regardless of worker-thread count (§6).
+            let traffic = config
+                .traffic
+                .as_ref()
+                .map(|tr| SiteTraffic::new(tr, i, qos, site_seed(config.seed, i)));
             let policy = EnergyPolicy {
                 id: format!("{name}-qos"),
                 qos,
@@ -500,6 +684,8 @@ impl Fleet {
                 samples: 0,
                 accuracy: 0.0,
                 last_gpu_power_w: 0.0,
+                rounds_run: 0,
+                traffic,
             });
         }
         if config.frost_enabled {
@@ -594,11 +780,28 @@ impl Fleet {
             }
             self.lifecycle_ingested += 1;
         }
+        // Demand-shift re-profiles route through the scheduler: forget
+        // the model's recorded cap, and the FleetProfileScheduler
+        // re-requests it at ≤ max_concurrent_profiles sites per round.
+        for site in &mut self.sites {
+            if let Some(t) = site.traffic.as_mut() {
+                if std::mem::take(&mut t.reprofile_pending) {
+                    let _ = self.nonrt.catalogue.clear_optimal_cap(&site.model_id);
+                }
+            }
+        }
 
-        // 6. Global power budget, once the stagger has profiled every site.
-        if self.config.frost_enabled && self.config.budget_frac < 1.0 && !self.budget_applied
-        {
-            self.enforce_budget()?;
+        // 6. Global power budget, once the stagger has profiled every
+        //    site.  Traffic-driven fleets re-balance periodically: the
+        //    water-fill weights sites by offered load, and the diurnal
+        //    day keeps moving that load around.
+        if self.config.frost_enabled && self.config.budget_frac < 1.0 {
+            let refresh = self.config.traffic.is_some()
+                && self.budget_applied
+                && self.round % BUDGET_REFRESH_ROUNDS == 0;
+            if !self.budget_applied || refresh {
+                self.enforce_budget()?;
+            }
         }
 
         // 7. Workload churn.
@@ -610,7 +813,18 @@ impl Fleet {
 
     /// Water-fill the global GPU budget across the profiled throughput
     /// curves and push the allocation down as per-site A1 policies.
+    /// Traffic-driven sites report their offered load on KPM; the
+    /// water-fill scales each site's throughput curve by its load share,
+    /// so budget watts flow to the sites with the most demand behind
+    /// them.  Without load reports every weight is exactly 1.0 and the
+    /// allocation is bit-identical to the unweighted one.
     fn enforce_budget(&mut self) -> Result<()> {
+        let loads = self.smo.offered_load_by_host();
+        let mean_load = if loads.is_empty() {
+            0.0
+        } else {
+            loads.values().sum::<f64>() / loads.len() as f64
+        };
         let mut profiles = Vec::new();
         for site in &self.sites {
             match site.host.profile_log.last() {
@@ -630,11 +844,26 @@ impl Fleet {
                         .cloned()
                         .collect();
                     let pts = if legal.is_empty() { out.points.clone() } else { legal };
-                    profiles.push(HostProfile::from_profile(
+                    let mut profile = HostProfile::from_profile(
                         &site.name,
                         site.host.testbed.hw.gpu.tdp_w,
                         &pts,
-                    ));
+                    );
+                    // Floored: a site that reported zero demand for one
+                    // slot must shrink, not vanish — weight 0 would zero
+                    // its whole curve and pin it at min_cap until the
+                    // next refresh, which a latency_critical site cannot
+                    // afford at the next morning ramp.
+                    let weight = match loads.get(&site.name) {
+                        Some(&l) if mean_load > 0.0 => {
+                            (l / mean_load).max(MIN_BUDGET_WEIGHT)
+                        }
+                        _ => 1.0,
+                    };
+                    for p in profile.points.iter_mut() {
+                        p.1 *= weight;
+                    }
+                    profiles.push(profile);
                 }
                 _ => return Ok(()), // stagger not done yet; retry next round
             }
@@ -794,6 +1023,34 @@ pub fn run_bench_suite(target_s: f64) -> Result<Vec<(String, BenchStats)>> {
             fleet.run_round().expect("steady-state round")
         });
         results.push((name, stats));
+    }
+
+    group("traffic: queue + batch-former round (8 sites, seed 7)");
+    {
+        let tr = TrafficConfig {
+            users_per_site: 2_000,
+            requests_per_user_per_day: 40.0,
+            day_s: 1_200.0,
+            slots_per_day: 12,
+            warmup_rounds: 3,
+            max_batch: 64,
+            kind: ArrivalKind::bursty(),
+            ..TrafficConfig::default()
+        };
+        let warmup = tr.warmup_rounds;
+        let mut cfg = bench_config(8);
+        cfg.traffic = Some(tr);
+        let mut fleet = Fleet::new(cfg)?;
+        // Warm past training + stagger so every benched round serves a
+        // traffic slot (the day wraps, so rounds are unlimited).
+        for _ in 0..=warmup {
+            fleet.run_round()?;
+        }
+        let name = "traffic round (8 sites)";
+        let stats = bench(name, target_s, || {
+            fleet.run_round().expect("traffic round")
+        });
+        results.push((name.to_string(), stats));
     }
 
     group("execution model: fixed-point solver vs memoized estimate");

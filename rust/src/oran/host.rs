@@ -10,6 +10,7 @@ use std::sync::Arc;
 use crate::config::{HardwareConfig, ProfilerConfig};
 use crate::frost::{EnergyPolicy, PowerProfiler, ProfileOutcome};
 use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
+use crate::traffic::{BatchCost, BatchFormer, Request, SlotReport, SlotWindow, TrafficServer};
 use crate::util::Seconds;
 
 use super::bus::{Bus, Endpoint, EndpointId};
@@ -170,9 +171,98 @@ impl InferenceHost {
                 cap_frac: self.testbed.cap_frac(),
                 samples_processed: n,
                 energy_j: energy,
+                offered_load_per_s: 0.0,
             }),
         );
         Some((wall, energy))
+    }
+
+    /// Serve one traffic slot of user requests against a deployed model
+    /// (DESIGN.md §9): the batch former cuts the FIFO into dynamic
+    /// batches, each priced by the memoized roofline estimate under the
+    /// current cap; the idle remainder of the slot draws idle power.
+    /// Appends per-request latencies, charges the slot's energy to the
+    /// host totals, advances the virtual clock by the slot, and reports
+    /// one KPM carrying the offered load.  None if `model` is unknown.
+    pub fn serve_slot(
+        &mut self,
+        model: &str,
+        server: &mut TrafficServer,
+        former: &BatchFormer,
+        arrivals: Vec<Request>,
+        window: SlotWindow,
+        latencies: &mut Vec<f64>,
+    ) -> Option<SlotReport> {
+        let w = self.store.get(model)?.clone();
+        let offered = arrivals.len() as u64;
+        // A batch from the previous slot may still occupy the GPU at the
+        // window start; that spill was busy-charged when the batch
+        // started, so it is deducted from this slot's idle time here.
+        let spill_in = (server.t_free - window.t0).clamp(0.0, window.dur);
+        let usage = server.run_slot(
+            arrivals,
+            window,
+            former,
+            |b| {
+                let est = self.testbed.infer_estimate(&w, b);
+                BatchCost {
+                    service_s: est.step_time.0,
+                    gpu_power_w: est.gpu_power.0,
+                    cpu_power_w: est.cpu_power.0,
+                    dram_power_w: est.dram_power.0,
+                }
+            },
+            latencies,
+        );
+        let idle_power_w = self.testbed.exec.idle_power().0;
+        let idle_s = (window.dur - spill_in - usage.busy_in_window_s).max(0.0);
+        let energy_j = usage.busy_energy_j + idle_power_w * idle_s;
+        self.total_energy_j += energy_j;
+        self.total_samples += usage.served;
+        self.testbed.clock.advance(Seconds(window.dur));
+        let gpu_busy_power_w =
+            if usage.busy_s > 0.0 { usage.gpu_busy_energy_j / usage.busy_s } else { 0.0 };
+        let offered_rate_per_s = offered as f64 / window.dur;
+        self.bus.send_ids(
+            self.self_id,
+            self.smo_id,
+            OranMessage::Kpm(KpmReport {
+                host: self.name.clone(),
+                at: self.testbed.clock.now(),
+                model: Some(model.to_string()),
+                gpu_power_w: gpu_busy_power_w,
+                cpu_power_w: if usage.busy_s > 0.0 {
+                    usage.cpu_busy_energy_j / usage.busy_s
+                } else {
+                    0.0
+                },
+                dram_power_w: if usage.busy_s > 0.0 {
+                    usage.dram_busy_energy_j / usage.busy_s
+                } else {
+                    0.0
+                },
+                gpu_util: (usage.busy_s / window.dur).clamp(0.0, 1.0),
+                cap_frac: self.testbed.cap_frac(),
+                samples_processed: usage.served,
+                energy_j,
+                offered_load_per_s: offered_rate_per_s,
+            }),
+        );
+        Some(SlotReport {
+            slot_in_day: window.slot_in_day,
+            t0: window.t0,
+            offered,
+            served: usage.served,
+            dropped: usage.dropped,
+            late: usage.late,
+            batches: usage.batches,
+            batch_samples: usage.batch_samples,
+            busy_s: usage.busy_s,
+            energy_j,
+            gpu_busy_power_w,
+            offered_rate_per_s,
+            cap_frac: self.testbed.cap_frac(),
+        })
     }
 
     /// Simulate training of a model for `epochs` over `n_samples` each;
@@ -332,6 +422,49 @@ mod tests {
         let k = kpm.expect("KPM sent");
         assert_eq!(k.samples_processed, 50 * 128);
         assert!(k.gpu_power_w > 0.0);
+    }
+
+    #[test]
+    fn serve_slot_accounts_energy_and_reports_offered_load() {
+        let (bus, mut h) = host_with_model("ResNet");
+        bus.deliver_all();
+        bus.endpoint("smo").drain();
+        let mut server = TrafficServer::new();
+        let former = BatchFormer::new(32, 0.5);
+        let arrivals: Vec<Request> = (0..40)
+            .map(|i| {
+                let a = i as f64 * 0.1;
+                Request { arrival: a, deadline: a + 0.5 }
+            })
+            .collect();
+        let window = SlotWindow { t0: 0.0, dur: 10.0, slot_in_day: 0, flush: true };
+        let mut lat = Vec::new();
+        let before = h.total_energy_j;
+        let report =
+            h.serve_slot("ResNet", &mut server, &former, arrivals, window, &mut lat).unwrap();
+        assert_eq!(report.offered, 40);
+        assert_eq!(report.served + report.dropped, 40, "day flush resolves everything");
+        assert_eq!(lat.len(), report.served as usize);
+        assert!(report.energy_j > 0.0);
+        assert!((h.total_energy_j - before - report.energy_j).abs() < 1e-9);
+        assert!(report.busy_s > 0.0 && report.busy_s < 10.0);
+        assert!(report.gpu_busy_power_w > 0.0);
+        // The KPM went out carrying the offered load.
+        bus.deliver_all();
+        let msgs = bus.endpoint("smo").drain();
+        let kpm = msgs
+            .iter()
+            .find_map(|(_, m)| match m {
+                OranMessage::Kpm(k) => Some(k.clone()),
+                _ => None,
+            })
+            .expect("KPM sent");
+        assert!((kpm.offered_load_per_s - 4.0).abs() < 1e-9);
+        assert_eq!(kpm.samples_processed, report.served);
+        // Unknown model: no service, no report.
+        assert!(h
+            .serve_slot("ghost", &mut server, &former, Vec::new(), window, &mut lat)
+            .is_none());
     }
 
     #[test]

@@ -21,6 +21,10 @@ pub struct KpmReport {
     pub cap_frac: f64,
     pub samples_processed: u64,
     pub energy_j: f64,
+    /// Offered request load behind this report (requests/s; 0.0 for
+    /// hosts that are not traffic-driven).  The SMO's budget water-fill
+    /// weights per-site shares by it (DESIGN.md §9).
+    pub offered_load_per_s: f64,
 }
 
 /// Events of the AI/ML lifecycle (paper Sec. II-B).
@@ -93,6 +97,7 @@ mod tests {
             cap_frac: 1.0,
             samples_processed: 0,
             energy_j: 0.0,
+            offered_load_per_s: 0.0,
         });
         assert_eq!(k.interface(), "O1");
         assert_eq!(

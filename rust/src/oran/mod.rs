@@ -15,7 +15,8 @@
 //!   microservice;
 //! * [`lifecycle`] — the six-step AI/ML workflow the O-RAN spec defines;
 //! * [`fleet`] — N-host fleet simulation: thread-pooled sites, staggered
-//!   FROST profiling, global power budgets as per-site A1 policies.
+//!   FROST profiling, global power budgets as per-site A1 policies, and
+//!   user-driven traffic serving ([`crate::traffic`], DESIGN.md §9).
 
 pub mod a1;
 pub mod bus;
@@ -33,7 +34,7 @@ pub use bus::{Bus, Endpoint, EndpointId};
 pub use catalogue::{CatalogueEntry, ModelCatalogue, ModelState};
 pub use fleet::{
     bench_config, run_bench_suite, site_seed, Fleet, FleetConfig, FleetReport, FleetSite,
-    SiteReport,
+    SiteReport, SiteTraffic,
 };
 pub use host::InferenceHost;
 pub use lifecycle::{LifecycleStage, MlLifecycle};

@@ -32,6 +32,11 @@ pub struct Smo {
     pub kpms: Vec<KpmReport>,
     pub profile_records: Vec<ProfileRecord>,
     pub lifecycle_log: Vec<LifecycleEvent>,
+    /// Latest KPM-reported offered load per host (requests/s), updated
+    /// incrementally on ingest so budget refreshes never rescan the
+    /// unbounded KPM log.  Zero is data ("no demand this window"), so an
+    /// idle site cannot keep a stale busy-hour weight.
+    offered_load: std::collections::BTreeMap<String, f64>,
 }
 
 impl Smo {
@@ -46,6 +51,7 @@ impl Smo {
             kpms: Vec::new(),
             profile_records: Vec::new(),
             lifecycle_log: Vec::new(),
+            offered_load: std::collections::BTreeMap::new(),
         }
     }
 
@@ -80,7 +86,10 @@ impl Smo {
     pub fn step(&mut self) {
         for (_from, msg) in self.endpoint.drain() {
             match msg {
-                OranMessage::Kpm(k) => self.kpms.push(k),
+                OranMessage::Kpm(k) => {
+                    self.offered_load.insert(k.host.clone(), k.offered_load_per_s);
+                    self.kpms.push(k);
+                }
                 OranMessage::ProfileResult {
                     model,
                     host,
@@ -127,6 +136,14 @@ impl Smo {
             .collect()
     }
 
+    /// Latest KPM-reported offered load per host (requests/s), keyed and
+    /// iterated in host order.  A reported zero stays zero (an idle site
+    /// must not keep its busy-hour weight); hosts that never sent a KPM
+    /// are absent and the budget weighting treats them as weight 1.
+    pub fn offered_load_by_host(&self) -> &std::collections::BTreeMap<String, f64> {
+        &self.offered_load
+    }
+
     /// Mean energy saving across the FROST decisions recorded so far.
     pub fn mean_energy_saving(&self) -> f64 {
         if self.profile_records.is_empty() {
@@ -164,6 +181,7 @@ mod tests {
             cap_frac: 0.6,
             samples_processed: 1000,
             energy_j: 123.0,
+            offered_load_per_s: 0.0,
         }));
         bus.deliver_all();
         smo.step();
@@ -219,6 +237,7 @@ mod tests {
                 cap_frac: 1.0,
                 samples_processed: n,
                 energy_j: e,
+                offered_load_per_s: if host == "h2" { 25.0 } else { 0.0 },
             }));
         }
         bus.deliver_all();
@@ -227,6 +246,12 @@ mod tests {
         assert_eq!(rollup.len(), 2);
         assert_eq!(rollup[0], ("h1".to_string(), 5.0, 50, 150.0));
         assert_eq!(rollup[1], ("h2".to_string(), 30.0, 300, 220.0));
+        // The load map tracks the latest report per host — including an
+        // explicit zero (an idle site must not keep a stale busy weight).
+        let loads = smo.offered_load_by_host();
+        assert_eq!(loads.len(), 2);
+        assert_eq!(loads.get("h1"), Some(&0.0));
+        assert_eq!(loads.get("h2"), Some(&25.0));
     }
 
     #[test]

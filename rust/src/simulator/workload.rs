@@ -39,6 +39,15 @@ impl WorkloadDescriptor {
         self.train_flops_per_sample / self.train_bytes_per_sample
     }
 
+    /// Arithmetic intensity of inference (FLOP per HBM byte).  Inference
+    /// reuses weights less per byte moved, so for every zoo model this is
+    /// strictly below [`Self::train_intensity`] — serving is the more
+    /// memory-bound phase, which is what makes inference hosts tolerate
+    /// deeper power caps than training does.
+    pub fn infer_intensity(&self) -> f64 {
+        self.infer_flops_per_sample / self.infer_bytes_per_sample
+    }
+
     /// Memory-boundedness β vs a reference GPU: ratio of memory time to
     /// compute time at boost clock.  β > 1 means runtime is insensitive to
     /// moderate down-clocking (the paper's "partially memory-bound" regime).
@@ -47,6 +56,15 @@ impl WorkloadDescriptor {
             / (gpu.peak_gflops * 1e9 * self.kernel_efficiency);
         let t_m = self.train_bytes_per_sample / (gpu.mem_bw_gbs * 1e9);
         t_m / t_c
+    }
+
+    /// Memory-boundedness of *inference* vs a reference GPU — the number
+    /// that decides how cap-tolerant request serving is (traffic
+    /// subsystem, DESIGN.md §9).  β is the machine's effective FLOP:byte
+    /// balance over the workload's [`Self::infer_intensity`] — the same
+    /// quantity [`Self::beta`] computes for training from its time ratio.
+    pub fn infer_beta(&self, gpu: &GpuSpec) -> f64 {
+        (gpu.peak_gflops * self.kernel_efficiency) / (gpu.mem_bw_gbs * self.infer_intensity())
     }
 
     /// Construct HBM bytes from a target β on a reference GPU — used by the
@@ -123,6 +141,31 @@ mod tests {
         let b1 = WorkloadDescriptor::bytes_for_beta(1e9, 0.3, 0.5, &gpu);
         let b2 = WorkloadDescriptor::bytes_for_beta(1e9, 0.3, 1.5, &gpu);
         assert!(b2 > b1 * 2.9 && b2 < b1 * 3.1);
+    }
+
+    #[test]
+    fn zoo_inference_is_more_memory_bound_than_training() {
+        // The zoo builds inference byte counts at a higher β than training
+        // (weights are reused less per byte during serving), so for a zoo
+        // model the intensity ordering is pinned: training does strictly
+        // more FLOPs per byte than inference, and the inference β is
+        // strictly the larger boundedness.
+        let gpu = setup_no1().gpu;
+        let w = crate::zoo::model_by_name("ResNet").unwrap().workload(&gpu);
+        assert!(
+            w.train_intensity() > w.infer_intensity(),
+            "train intensity {} must exceed infer intensity {}",
+            w.train_intensity(),
+            w.infer_intensity()
+        );
+        assert!(
+            w.infer_beta(&gpu) > w.beta(&gpu),
+            "infer β {} must exceed train β {}",
+            w.infer_beta(&gpu),
+            w.beta(&gpu)
+        );
+        // And both intensities are physical (positive, finite).
+        assert!(w.infer_intensity() > 0.0 && w.infer_intensity().is_finite());
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! User-driven request load, queueing, and SLO-aware serving (DESIGN.md §9).
+//!
+//! FROST optimises the cap for a fixed workload, but O-RAN energy is
+//! traffic-driven: demand varies over the day and the fleet's caps must be
+//! stress-tested against it.  This subsystem drives every fleet site with
+//! a seeded arrival process — Poisson or bursty MMPP, modulated by a 24 h
+//! diurnal profile scaled to N users per site ([`arrivals`]) — feeds the
+//! requests through a per-model FIFO queue with a dynamic batch former
+//! ([`queue`]), prices each batch with the memoized roofline estimate, and
+//! checks every request's latency (queue wait + batched service) against
+//! its QoS class's deadline ([`slo`]).
+//!
+//! Closed loop: offered load rides on KPM reports and
+//! [`crate::frost::Observation`], so the `ContinuousMonitor` re-profiles
+//! on demand shifts and the SMO's water-filling weights per-site budget
+//! shares by offered load.  `figures::traffic_comparison` / the
+//! `frost traffic` CLI run FROST vs stock caps over the same seeded day.
+//!
+//! Determinism (§6 contract): arrival streams derive from
+//! `oran::fleet::site_seed`, serving draws no randomness, and all fleet
+//! merges stay in site-index order — same seed ⇒ bit-identical days for
+//! any worker-thread count.
+
+pub mod arrivals;
+pub mod queue;
+pub mod slo;
+
+use anyhow::Result;
+
+pub use arrivals::{ArrivalGen, ArrivalKind, DiurnalProfile};
+pub use queue::{BatchCost, BatchFormer, Request, SlotUsage, TrafficServer};
+pub use slo::{SloSpec, SloSummary};
+
+/// Scenario knobs of a traffic-driven fleet day.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Subscribers attached to a site (per-site heterogeneity is applied
+    /// on top — see [`TrafficConfig::site_users`]).
+    pub users_per_site: u64,
+    /// Mean inference requests each user issues per day.
+    pub requests_per_user_per_day: f64,
+    /// Length of the simulated day in virtual seconds.  The 24 h diurnal
+    /// *shape* always spans one day; shrinking `day_s` accelerates the
+    /// day without changing the per-day request volume (rates scale up).
+    pub day_s: f64,
+    /// Traffic slots the day is sliced into (one fleet round serves one
+    /// slot; the day wraps for longer runs).
+    pub slots_per_day: u32,
+    /// Fleet rounds before the day starts: round 1 trains, the following
+    /// rounds run the profiling stagger on the legacy fixed-step workload.
+    pub warmup_rounds: u32,
+    /// Serving batch ceiling for the dynamic batch former.
+    pub max_batch: u32,
+    /// The arrival point process (Poisson or bursty MMPP).
+    pub kind: ArrivalKind,
+    /// The 24 h load shape.
+    pub diurnal: DiurnalProfile,
+    /// Per-QoS-class completion deadlines.
+    pub slo: SloSpec,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            users_per_site: 5_000,
+            requests_per_user_per_day: 40.0,
+            // Accelerated day: the full diurnal shape over one virtual
+            // hour, so default CLI runs stay interactive.
+            day_s: 3_600.0,
+            slots_per_day: 24,
+            warmup_rounds: 5,
+            max_batch: 64,
+            kind: ArrivalKind::Poisson,
+            diurnal: DiurnalProfile::typical(),
+            slo: SloSpec::default(),
+        }
+    }
+}
+
+impl TrafficConfig {
+    /// A tiny preset for CI smoke runs (`frost traffic --smoke`).
+    pub fn smoke() -> TrafficConfig {
+        TrafficConfig {
+            users_per_site: 300,
+            requests_per_user_per_day: 30.0,
+            day_s: 600.0,
+            slots_per_day: 6,
+            warmup_rounds: 3,
+            max_batch: 32,
+            ..TrafficConfig::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.users_per_site >= 1, "need at least one user per site");
+        anyhow::ensure!(
+            self.requests_per_user_per_day > 0.0 && self.requests_per_user_per_day.is_finite(),
+            "requests per user per day must be positive"
+        );
+        anyhow::ensure!(
+            self.day_s.is_finite() && self.day_s >= 1.0,
+            "day_s {} must be >= 1",
+            self.day_s
+        );
+        anyhow::ensure!(self.slots_per_day >= 2, "need at least two slots per day");
+        anyhow::ensure!(self.warmup_rounds >= 1, "need at least the training warm-up round");
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be at least 1");
+        self.slo.validate()
+    }
+
+    /// Virtual seconds one traffic slot covers.
+    pub fn slot_s(&self) -> f64 {
+        self.day_s / self.slots_per_day as f64
+    }
+
+    /// Users attached to site `i`: the configured mean with a fixed
+    /// heterogeneity cycle, so offered load differs per site and the
+    /// SMO's load-weighted budget shares have something to weight.  The
+    /// cycle has mean 1.0, so `users_per_site` stays the fleet-wide mean
+    /// (exactly so for fleets whose size is a multiple of the cycle).
+    pub fn site_users(&self, site_index: usize) -> f64 {
+        const MULT: [f64; 4] = [1.0, 0.6, 1.4, 1.0];
+        self.users_per_site as f64 * MULT[site_index % MULT.len()]
+    }
+
+    /// Daily-mean request rate of site `i` (requests/s).
+    pub fn site_base_rate(&self, site_index: usize) -> f64 {
+        self.site_users(site_index) * self.requests_per_user_per_day / self.day_s
+    }
+
+    /// Fleet rounds that cover warm-up plus exactly one traffic day.
+    pub fn rounds_for_one_day(&self) -> u32 {
+        self.warmup_rounds + self.slots_per_day
+    }
+}
+
+/// What one site's traffic slot did — the per-slot record the energy
+/// comparison and the CLI tables are built from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlotReport {
+    /// Slot index within the day (wraps for multi-day runs).
+    pub slot_in_day: u32,
+    /// Slot start in continuous traffic seconds.
+    pub t0: f64,
+    pub offered: u64,
+    pub served: u64,
+    pub dropped: u64,
+    pub late: u64,
+    pub batches: u64,
+    pub batch_samples: u64,
+    /// GPU-busy seconds of the slot.
+    pub busy_s: f64,
+    /// Slot energy: busy energy plus the idle remainder (J).
+    pub energy_j: f64,
+    /// Mean GPU power while serving (0 when the slot was idle).
+    pub gpu_busy_power_w: f64,
+    /// Offered load of the slot (requests/s).
+    pub offered_rate_per_s: f64,
+    /// Cap in force while the slot was served.
+    pub cap_frac: f64,
+}
+
+/// The window a slot serve call covers.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotWindow {
+    pub t0: f64,
+    pub dur: f64,
+    pub slot_in_day: u32,
+    /// Day end: drain the queue completely, even past the window.
+    pub flush: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validates_and_derives() {
+        let c = TrafficConfig::default();
+        assert!(c.validate().is_ok());
+        assert!((c.slot_s() - 150.0).abs() < 1e-12);
+        assert_eq!(c.rounds_for_one_day(), 29);
+        // Heterogeneity cycles deterministically and preserves scale.
+        assert!((c.site_users(0) - 5_000.0).abs() < 1e-9);
+        assert!((c.site_users(4) - 5_000.0).abs() < 1e-9);
+        assert!(c.site_users(3) > c.site_users(1));
+        let mean_rate = c.site_base_rate(0);
+        assert!((mean_rate - 5_000.0 * 40.0 / 3_600.0).abs() < 1e-9);
+        assert!(TrafficConfig::smoke().validate().is_ok());
+
+        let bad = TrafficConfig { slots_per_day: 1, ..TrafficConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = TrafficConfig { requests_per_user_per_day: 0.0, ..TrafficConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = TrafficConfig { max_batch: 0, ..TrafficConfig::default() };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! Per-model FIFO request queue with a dynamic batch former and a
+//! discrete-event serving loop.
+//!
+//! The server model is one GPU serving batched inference sequentially.
+//! The batch former fills towards `max_batch` but flushes early on
+//! deadline slack: a batch starts when it fills, or at the head request's
+//! flush point — `min(arrival + max_wait, deadline − reserve)` where the
+//! reserve covers a full batch's service time under the *current* power
+//! cap (so a capped server self-adapts by flushing earlier).  Requests
+//! whose deadline passes before service can begin are shed (dropped);
+//! requests served past their deadline count as late.
+//!
+//! Everything here is deterministic: service times come from the memoized
+//! roofline estimate (`simulator::StepEstimateCache`), and the loop draws
+//! no randomness, so a traffic day replays bit-for-bit (DESIGN.md §6/§9).
+
+use std::collections::VecDeque;
+
+use super::SlotWindow;
+
+/// One user request (times are continuous traffic seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub arrival: f64,
+    /// Absolute completion deadline (arrival + the QoS class's budget).
+    pub deadline: f64,
+}
+
+/// What serving one batch of `b` requests costs under the current cap.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchCost {
+    pub service_s: f64,
+    pub gpu_power_w: f64,
+    pub cpu_power_w: f64,
+    pub dram_power_w: f64,
+}
+
+impl BatchCost {
+    pub fn total_power_w(&self) -> f64 {
+        self.gpu_power_w + self.cpu_power_w + self.dram_power_w
+    }
+}
+
+/// The dynamic batch former's knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchFormer {
+    /// Hard batch-size ceiling (the model's serving batch limit).
+    pub max_batch: u32,
+    /// The flush reserve is `slack_mult ×` a full batch's service time —
+    /// how much of the head's deadline budget is kept for the GPU.
+    pub slack_mult: f64,
+    /// Never hold the head request longer than this, even with deadline
+    /// budget to spare (bounds latency at low load).
+    pub max_wait_s: f64,
+}
+
+impl BatchFormer {
+    pub fn new(max_batch: u32, deadline_s: f64) -> BatchFormer {
+        BatchFormer {
+            max_batch: max_batch.max(1),
+            slack_mult: 1.5,
+            // A quarter of the deadline budget is the default batching
+            // window: enough to amortise launch overhead, far enough from
+            // the deadline that service fits comfortably.
+            max_wait_s: 0.25 * deadline_s,
+        }
+    }
+}
+
+/// Counters and usage accumulated while serving one slot.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotUsage {
+    pub served: u64,
+    pub dropped: u64,
+    pub late: u64,
+    pub batches: u64,
+    /// Σ batch sizes (== served; kept separate for mean-batch reporting).
+    pub batch_samples: u64,
+    /// GPU-busy seconds spent on batches started this slot.
+    pub busy_s: f64,
+    /// The part of `busy_s` that falls inside the slot window itself —
+    /// batches may spill past the slot end; the spill is deducted from
+    /// the *next* slot's idle time instead (no interval is ever both
+    /// busy-charged and idle-charged).
+    pub busy_in_window_s: f64,
+    /// Busy energy, total and per component (J).
+    pub busy_energy_j: f64,
+    pub gpu_busy_energy_j: f64,
+    pub cpu_busy_energy_j: f64,
+    pub dram_busy_energy_j: f64,
+}
+
+/// The per-model serving state that persists across slots: the FIFO queue
+/// of waiting requests and the time the server next frees up.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficServer {
+    queue: VecDeque<Request>,
+    /// When the GPU finishes its current batch (continuous seconds).
+    pub t_free: f64,
+    /// Lifetime counters (across all slots served).
+    pub served: u64,
+    pub dropped: u64,
+    pub late: u64,
+    pub batches: u64,
+    pub batch_samples: u64,
+}
+
+impl TrafficServer {
+    pub fn new() -> TrafficServer {
+        TrafficServer::default()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serve this slot's arrivals (plus any queue carried over) within
+    /// `window`.  Batches may *finish* past the window end; batches that
+    /// would *start* past it stay queued for the next slot — unless
+    /// `window.flush` is set (day end), in which case everything is
+    /// served.  Nothing starts before the window begins: a head carried
+    /// over from the previous slot was (by construction) not servable
+    /// back then, so its earliest start is the current window's `t0` even
+    /// if a cap change has since moved its flush point into the past.
+    /// `service(b)` prices one batch of `b` requests under the current
+    /// cap; per-request latencies (queue wait + batched service) are
+    /// appended to `latencies`.
+    ///
+    /// Requests must be enqueued in arrival order and share one deadline
+    /// offset (one QoS class per queue), so the head always carries the
+    /// earliest deadline.
+    pub fn run_slot(
+        &mut self,
+        arrivals: Vec<Request>,
+        window: SlotWindow,
+        former: &BatchFormer,
+        mut service: impl FnMut(u32) -> BatchCost,
+        latencies: &mut Vec<f64>,
+    ) -> SlotUsage {
+        let slot_start = window.t0;
+        let slot_end = window.t0 + window.dur;
+        let flush = window.flush;
+        for r in arrivals {
+            debug_assert!(
+                self.queue.back().map_or(true, |b| b.arrival <= r.arrival),
+                "arrivals must be enqueued in order"
+            );
+            self.queue.push_back(r);
+        }
+        let mut usage = SlotUsage::default();
+        let max_b = former.max_batch as usize;
+        // The flush reserve covers a full batch under the current cap;
+        // the cap cannot change inside a slot, so price it once.
+        let reserve = former.slack_mult * service(former.max_batch).service_s;
+        while let Some(&head) = self.queue.front() {
+            let start_earliest = self.t_free.max(head.arrival).max(slot_start);
+            if !flush && start_earliest >= slot_end {
+                break;
+            }
+            if start_earliest > head.deadline {
+                // The deadline passed before service could even begin:
+                // shed the request instead of burning GPU time on it.
+                self.queue.pop_front();
+                self.dropped += 1;
+                usage.dropped += 1;
+                continue;
+            }
+            // Flush point of the head: bounded wait, minus the reserve.
+            // Not a clamp — under backlog the earliest start can sit past
+            // the deadline bound, and then serving as soon as possible is
+            // the policy.
+            let mut t_flush = (head.arrival + former.max_wait_s).min(head.deadline - reserve);
+            if t_flush < start_earliest {
+                t_flush = start_earliest;
+            }
+            // The batch starts when it fills or at the flush point,
+            // whichever comes first (never before the server frees).
+            let fill_at = self.queue.get(max_b - 1).map(|r| r.arrival);
+            let start = match fill_at {
+                Some(at) if at <= t_flush => start_earliest.max(at),
+                _ => t_flush,
+            };
+            if !flush && start >= slot_end {
+                // The next slot's arrivals may still fill this batch.
+                break;
+            }
+            let b = self
+                .queue
+                .iter()
+                .take(max_b)
+                .take_while(|r| r.arrival <= start)
+                .count();
+            debug_assert!(b >= 1, "the head is always ready by its own start time");
+            let cost = service(b as u32);
+            let finish = start + cost.service_s;
+            for _ in 0..b {
+                let r = self.queue.pop_front().expect("counted above");
+                latencies.push(finish - r.arrival);
+                self.served += 1;
+                usage.served += 1;
+                if finish > r.deadline {
+                    self.late += 1;
+                    usage.late += 1;
+                }
+            }
+            self.batches += 1;
+            usage.batches += 1;
+            self.batch_samples += b as u64;
+            usage.batch_samples += b as u64;
+            usage.busy_s += cost.service_s;
+            usage.busy_in_window_s += cost.service_s.min((slot_end - start).max(0.0));
+            usage.gpu_busy_energy_j += cost.gpu_power_w * cost.service_s;
+            usage.cpu_busy_energy_j += cost.cpu_power_w * cost.service_s;
+            usage.dram_busy_energy_j += cost.dram_power_w * cost.service_s;
+            usage.busy_energy_j += cost.total_power_w() * cost.service_s;
+            self.t_free = finish;
+        }
+        usage
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_service(service_s: f64) -> impl FnMut(u32) -> BatchCost {
+        move |_b| BatchCost {
+            service_s,
+            gpu_power_w: 200.0,
+            cpu_power_w: 40.0,
+            dram_power_w: 10.0,
+        }
+    }
+
+    fn reqs(arrivals: &[f64], deadline_s: f64) -> Vec<Request> {
+        arrivals.iter().map(|&a| Request { arrival: a, deadline: a + deadline_s }).collect()
+    }
+
+    fn win(t0: f64, dur: f64, flush: bool) -> SlotWindow {
+        SlotWindow { t0, dur, slot_in_day: 0, flush }
+    }
+
+    #[test]
+    fn backlog_forms_full_batches() {
+        // Ten requests already queued: the former cuts 4 + 4, then waits
+        // for the 2-request tail at its flush point.
+        let mut srv = TrafficServer::new();
+        let former = BatchFormer { max_batch: 4, slack_mult: 1.5, max_wait_s: 0.25 };
+        let mut lat = Vec::new();
+        let arrivals = reqs(&[0.0; 10], 10.0);
+        let u =
+            srv.run_slot(arrivals, win(0.0, 100.0, false), &former, flat_service(0.1), &mut lat);
+        assert_eq!(u.served, 10);
+        assert_eq!(u.batches, 3);
+        assert_eq!(u.late, 0);
+        assert_eq!(u.dropped, 0);
+        assert_eq!(lat.len(), 10);
+        // First two batches back-to-back, tail flushed at max_wait.
+        assert!((u.busy_s - 0.3).abs() < 1e-12);
+        assert!((srv.t_free - 0.35).abs() < 1e-12, "t_free {}", srv.t_free);
+        // Energy: 250 W over 0.3 busy seconds.
+        assert!((u.busy_energy_j - 250.0 * 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flush_on_wait_cap_batches_nearby_requests() {
+        // Two requests 50 ms apart, deadline 1 s, wait cap 0.25 s: one
+        // batch at the head's flush point, both on time.
+        let mut srv = TrafficServer::new();
+        let former = BatchFormer { max_batch: 4, slack_mult: 1.5, max_wait_s: 0.25 };
+        let mut lat = Vec::new();
+        let arrivals = reqs(&[0.0, 0.05], 1.0);
+        let u =
+            srv.run_slot(arrivals, win(0.0, 100.0, false), &former, flat_service(0.1), &mut lat);
+        assert_eq!(u.served, 2);
+        assert_eq!(u.batches, 1);
+        assert_eq!(u.late, 0);
+        // Batch starts at 0.25 (head's wait cap), finishes at 0.35.
+        assert!((lat[0] - 0.35).abs() < 1e-12);
+        assert!((lat[1] - 0.30).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_slack_flushes_before_wait_cap() {
+        // Tight deadline: flush point = deadline − 1.5×service(max), well
+        // before the 10 s wait cap — the batch goes out early enough to
+        // finish on time.
+        let mut srv = TrafficServer::new();
+        let former = BatchFormer { max_batch: 4, slack_mult: 1.5, max_wait_s: 10.0 };
+        let mut lat = Vec::new();
+        let arrivals = reqs(&[0.0], 0.5);
+        let u =
+            srv.run_slot(arrivals, win(0.0, 100.0, false), &former, flat_service(0.1), &mut lat);
+        assert_eq!(u.served, 1);
+        assert_eq!(u.late, 0);
+        // start = 0.5 − 0.15 = 0.35, finish 0.45 ≤ deadline 0.5.
+        assert!((lat[0] - 0.45).abs() < 1e-12, "latency {}", lat[0]);
+    }
+
+    #[test]
+    fn overload_drops_expired_and_marks_late() {
+        // A 10 s monster batch occupies the server; a short-deadline
+        // request arriving behind it can never start in time: dropped.
+        let mut srv = TrafficServer::new();
+        let former = BatchFormer { max_batch: 4, slack_mult: 1.5, max_wait_s: 0.25 };
+        let mut lat = Vec::new();
+        let mut arrivals = reqs(&[0.0], 100.0);
+        arrivals.push(Request { arrival: 1.0, deadline: 2.5 });
+        let u = srv
+            .run_slot(arrivals, win(0.0, 1_000.0, false), &former, flat_service(10.0), &mut lat);
+        assert_eq!(u.served, 1);
+        assert_eq!(u.dropped, 1);
+        assert_eq!(srv.dropped, 1);
+        // And an impossible deadline (shorter than service) is late, not
+        // dropped: service starts in time but finishes past it.
+        let mut srv = TrafficServer::new();
+        let mut lat = Vec::new();
+        let arrivals = reqs(&[0.0], 0.05);
+        let u =
+            srv.run_slot(arrivals, win(0.0, 100.0, false), &former, flat_service(0.1), &mut lat);
+        assert_eq!(u.served, 1);
+        assert_eq!(u.late, 1);
+    }
+
+    #[test]
+    fn slot_boundary_carries_queue_and_flush_drains_it() {
+        let mut srv = TrafficServer::new();
+        let former = BatchFormer { max_batch: 8, slack_mult: 1.5, max_wait_s: 0.5 };
+        let mut lat = Vec::new();
+        // Arrival near the end of the slot: its batch would start past
+        // slot_end, so it carries over.
+        let arrivals = reqs(&[9.9], 5.0);
+        let u =
+            srv.run_slot(arrivals, win(0.0, 10.0, false), &former, flat_service(0.1), &mut lat);
+        assert_eq!(u.served, 0);
+        assert_eq!(srv.queue_len(), 1);
+        // Next slot (flush = day end) serves it.
+        let u =
+            srv.run_slot(Vec::new(), win(10.0, 10.0, true), &former, flat_service(0.1), &mut lat);
+        assert_eq!(u.served, 1);
+        assert_eq!(srv.queue_len(), 0);
+        assert_eq!(lat.len(), 1);
+        // Waited until its flush point (9.9 + 0.5 wait cap), then 0.1 s
+        // service.
+        assert!((lat[0] - 0.6).abs() < 1e-12, "latency {}", lat[0]);
+    }
+
+    #[test]
+    fn carried_head_never_starts_before_the_current_window() {
+        // A request arrives late in slot 1 and carries over (its flush
+        // point lies past the slot end).  Before slot 2, a cap change
+        // inflates the service time, pulling the recomputed flush point
+        // *before* the window — the batch must still start at the window
+        // boundary, never retroactively in the past.
+        let mut srv = TrafficServer::new();
+        let former = BatchFormer { max_batch: 4, slack_mult: 1.5, max_wait_s: 0.3 };
+        let mut lat = Vec::new();
+        let arrivals = reqs(&[9.9], 0.6); // deadline 10.5
+        let u =
+            srv.run_slot(arrivals, win(0.0, 10.0, false), &former, flat_service(0.1), &mut lat);
+        assert_eq!(u.served, 0, "flush point 10.2 is past the slot end");
+        // "Cap tightened" between slots: a full batch now takes 0.5 s, so
+        // the recomputed flush point (10.5 − 0.75 = 9.75) precedes t0.
+        let u =
+            srv.run_slot(Vec::new(), win(10.0, 10.0, true), &former, flat_service(0.5), &mut lat);
+        assert_eq!(u.served, 1);
+        // Started exactly at the window boundary, not at 9.75 or 9.9.
+        assert!((lat[0] - 0.6).abs() < 1e-12, "latency {}", lat[0]);
+        assert!((srv.t_free - 10.5).abs() < 1e-12, "t_free {}", srv.t_free);
+        // Finishing exactly at the deadline is on time.
+        assert_eq!(u.late, 0);
+    }
+
+    #[test]
+    fn capped_service_self_adapts_flush_reserve() {
+        // Slower (capped) service grows the reserve, pulling the flush
+        // point earlier relative to the deadline — the served batch still
+        // finishes on time.
+        for service_s in [0.05, 0.2] {
+            let mut srv = TrafficServer::new();
+            let former = BatchFormer { max_batch: 4, slack_mult: 1.5, max_wait_s: 10.0 };
+            let mut lat = Vec::new();
+            let arrivals = reqs(&[0.0], 1.0);
+            let s = flat_service(service_s);
+            let u = srv.run_slot(arrivals, win(0.0, 100.0, false), &former, s, &mut lat);
+            assert_eq!(u.served, 1);
+            assert_eq!(u.late, 0, "service {service_s} must stay on time");
+            assert!(lat[0] <= 1.0 + 1e-12);
+        }
+    }
+}

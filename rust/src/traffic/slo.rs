@@ -1,0 +1,153 @@
+//! Per-QoS-class latency SLOs and attainment accounting.
+//!
+//! The A1 energy policies (`frost::policy`) map applications to QoS
+//! classes; this module gives each class a completion deadline and rolls
+//! per-request latencies up into the p50/p95/p99 + attainment numbers the
+//! `frost traffic` harness reports.  Percentiles use the shared
+//! nearest-rank `metrics::percentile`, the same helper the bench harness
+//! summarises with.
+
+use anyhow::Result;
+
+use crate::frost::QosClass;
+use crate::metrics::percentile;
+
+/// Completion deadlines per QoS class (seconds of traffic time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Near-RT inference (ED³P sites): tight interactive budget.
+    pub latency_critical_s: f64,
+    /// Default serving (ED²P sites).
+    pub balanced_s: f64,
+    /// Background/batchable inference (EDP sites).
+    pub energy_saver_s: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { latency_critical_s: 0.08, balanced_s: 0.40, energy_saver_s: 2.0 }
+    }
+}
+
+impl SloSpec {
+    pub fn deadline_for(&self, qos: QosClass) -> f64 {
+        match qos {
+            QosClass::LatencyCritical => self.latency_critical_s,
+            QosClass::Balanced => self.balanced_s,
+            QosClass::EnergySaver => self.energy_saver_s,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, d) in [
+            ("latency_critical", self.latency_critical_s),
+            ("balanced", self.balanced_s),
+            ("energy_saver", self.energy_saver_s),
+        ] {
+            anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "{name} deadline {d} must be positive and finite"
+            );
+        }
+        anyhow::ensure!(
+            self.latency_critical_s <= self.balanced_s
+                && self.balanced_s <= self.energy_saver_s,
+            "deadlines must be ordered latency_critical <= balanced <= energy_saver"
+        );
+        Ok(())
+    }
+}
+
+/// One QoS class's day roll-up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSummary {
+    pub qos: QosClass,
+    pub deadline_s: f64,
+    /// Requests offered (served + dropped; the day flushes, so nothing
+    /// stays queued).
+    pub offered: u64,
+    pub served: u64,
+    pub dropped: u64,
+    /// Served, but past the deadline.
+    pub late: u64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    /// On-time served / offered (1.0 when nothing was offered).
+    pub attainment: f64,
+}
+
+impl SloSummary {
+    /// Roll a class's counters and latency sample up into a summary.
+    /// Sorts `latencies` in place (nearest-rank percentiles need order).
+    pub fn from_latencies(
+        qos: QosClass,
+        deadline_s: f64,
+        offered: u64,
+        served: u64,
+        dropped: u64,
+        late: u64,
+        latencies: &mut [f64],
+    ) -> SloSummary {
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let on_time = served.saturating_sub(late);
+        SloSummary {
+            qos,
+            deadline_s,
+            offered,
+            served,
+            dropped,
+            late,
+            p50_s: percentile(latencies, 0.50),
+            p95_s: percentile(latencies, 0.95),
+            p99_s: percentile(latencies, 0.99),
+            attainment: if offered > 0 { on_time as f64 / offered as f64 } else { 1.0 },
+        }
+    }
+
+    /// True when the class met its SLO outright: no drops and p99 within
+    /// the deadline.
+    pub fn met(&self) -> bool {
+        self.dropped == 0 && self.p99_s <= self.deadline_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadlines_map_by_class_and_validate() {
+        let slo = SloSpec::default();
+        assert!(slo.validate().is_ok());
+        assert!(
+            slo.deadline_for(QosClass::LatencyCritical) < slo.deadline_for(QosClass::Balanced)
+        );
+        assert!(slo.deadline_for(QosClass::Balanced) < slo.deadline_for(QosClass::EnergySaver));
+        let bad = SloSpec { latency_critical_s: -1.0, ..SloSpec::default() };
+        assert!(bad.validate().is_err());
+        let inverted = SloSpec { latency_critical_s: 3.0, ..SloSpec::default() };
+        assert!(inverted.validate().is_err());
+    }
+
+    #[test]
+    fn summary_percentiles_and_attainment() {
+        // 100 latencies 1..=100 ms against a 95 ms deadline: 5 late.
+        let mut lat: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let s = SloSummary::from_latencies(QosClass::Balanced, 0.095, 102, 100, 2, 5, &mut lat);
+        assert!((s.p50_s - 0.050).abs() < 1e-12);
+        assert!((s.p95_s - 0.095).abs() < 1e-12);
+        assert!((s.p99_s - 0.099).abs() < 1e-12);
+        assert!((s.attainment - 95.0 / 102.0).abs() < 1e-12);
+        assert!(!s.met(), "dropped requests break the SLO");
+        let mut ok: Vec<f64> = vec![0.01, 0.02, 0.03];
+        let s = SloSummary::from_latencies(QosClass::Balanced, 0.095, 3, 3, 0, 0, &mut ok);
+        assert!(s.met());
+        assert_eq!(s.attainment, 1.0);
+        // Empty class: vacuously met, attainment 1.
+        let s = SloSummary::from_latencies(QosClass::EnergySaver, 2.0, 0, 0, 0, 0, &mut []);
+        assert!(s.met());
+        assert_eq!(s.attainment, 1.0);
+        assert_eq!(s.p99_s, 0.0);
+    }
+}

@@ -12,6 +12,8 @@
 use std::hint::black_box;
 use std::time::Instant;
 
+use crate::metrics::percentile_index;
+
 use super::json::Json;
 
 /// One benchmark's summary statistics (nanoseconds).
@@ -40,15 +42,6 @@ fn fmt_ns(ns: f64) -> String {
     } else {
         format!("{:.3} s", ns / 1e9)
     }
-}
-
-/// Nearest-rank p95 index: the smallest rank covering 95% of the sorted
-/// sample (`ceil(0.95·n) − 1`), never past the end.  The old truncating
-/// `(n·0.95) as usize` overshot the rank for every n not divisible by 20.
-fn p95_index(n: usize) -> usize {
-    debug_assert!(n > 0);
-    let rank = (n as f64 * 0.95).ceil() as usize;
-    rank.max(1).min(n) - 1
 }
 
 /// The per-run time budget: `FROST_BENCH_TARGET_S` overrides the caller's
@@ -88,7 +81,7 @@ pub fn bench<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T) -> BenchSta
         iters,
         mean_ns: mean.max(1.0),
         median_ns: samples_ns[samples_ns.len() / 2],
-        p95_ns: samples_ns[p95_index(samples_ns.len())],
+        p95_ns: samples_ns[percentile_index(samples_ns.len(), 0.95)],
         min_ns: samples_ns[0],
     };
     println!(
@@ -174,16 +167,6 @@ mod tests {
         assert!(stats.mean_ns >= 1.0);
         assert!(stats.min_ns >= 1.0);
         assert!(stats.throughput_per_s().is_finite());
-    }
-
-    #[test]
-    fn p95_index_is_nearest_rank() {
-        assert_eq!(p95_index(1), 0);
-        assert_eq!(p95_index(3), 2);
-        assert_eq!(p95_index(10), 9); // ceil(9.5) - 1
-        assert_eq!(p95_index(20), 18); // exactly 19th of 20
-        assert_eq!(p95_index(100), 94);
-        assert_eq!(p95_index(101), 95);
     }
 
     #[test]

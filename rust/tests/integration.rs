@@ -202,6 +202,7 @@ fn continuous_monitor_drives_reprofiling_on_workload_drift() {
             at: s.at,
             gpu_power_w: s.gpu_power.0,
             samples_per_s: 128.0 / s.duration.0,
+            offered_load_per_s: 0.0,
         };
         if monitor.observe(obs) == MonitorAction::Reprofile {
             action_count += 1;
@@ -216,6 +217,7 @@ fn continuous_monitor_drives_reprofiling_on_workload_drift() {
             at: s.at,
             gpu_power_w: s.gpu_power.0,
             samples_per_s: 128.0 / s.duration.0,
+            offered_load_per_s: 0.0,
         };
         if monitor.observe(obs) == MonitorAction::Reprofile {
             triggered_at.get_or_insert(s.at);
