@@ -1,0 +1,22 @@
+//! Traffic hot-path benches: slot throughput at 1k / 100k / 5M users per
+//! site, exact per-request vs aggregated count path, plus the SLO
+//! roll-up (sort vs histogram) microbench.
+//!
+//! The numbers land in `BENCH_traffic.json` (written to the working
+//! directory; CI uploads it as an artifact), and the checked-in copy at
+//! the repository root records the pre-/post-optimisation pair — the
+//! "millions of users" point on the ROADMAP's perf trajectory.
+//!
+//! The suite definition lives in `frost::traffic::run_traffic_bench_suite`,
+//! shared with the `frost bench --traffic` CLI subcommand so the two
+//! recorders cannot drift.
+
+use frost::traffic::run_traffic_bench_suite;
+use frost::util::bench::{write_json, BenchStats};
+
+fn main() {
+    let results = run_traffic_bench_suite(2.0).expect("traffic bench suite");
+    let refs: Vec<(&str, BenchStats)> =
+        results.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+    write_json("BENCH_traffic.json", "traffic", &refs).expect("write BENCH_traffic.json");
+}

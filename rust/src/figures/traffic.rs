@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 
 use crate::config::setup_no1;
 use crate::frost::QosClass;
-use crate::metrics::percentile;
+use crate::metrics::LatencyHistogram;
 use crate::oran::{Fleet, FleetConfig, FleetReport};
 use crate::traffic::{SloSpec, SloSummary};
 use crate::util::Series;
@@ -71,14 +71,17 @@ fn collect_day(fleet: &Fleet, slots_per_day: u32, slo: &SloSpec) -> DayCollect {
     let mut day_energy_j = 0.0;
     let mut reprofiles = 0;
     let mut load_shifts = 0;
-    let mut lat: Vec<Vec<f64>> = vec![Vec::new(); QOS_CLASSES.len()];
+    let mut hists: Vec<LatencyHistogram> =
+        (0..QOS_CLASSES.len()).map(|_| LatencyHistogram::new()).collect();
     let mut counts = [(0u64, 0u64, 0u64, 0u64); 3]; // offered/served/dropped/late
     // Site-index order everywhere: the aggregation itself is part of the
-    // §6 determinism contract.
+    // §6 determinism contract.  Latencies merge as O(1) histograms
+    // (DESIGN.md §10) — no per-request vector is ever concatenated or
+    // sorted, so the roll-up cost is independent of the user count.
     for site in &fleet.sites {
         let t = site.traffic.as_ref().expect("traffic-driven fleet");
         let class = QOS_CLASSES.iter().position(|c| *c == site.qos).expect("known class");
-        lat[class].extend_from_slice(&t.latencies);
+        hists[class].merge(&t.hist);
         for s in &t.slot_log {
             let k = (s.slot_in_day as usize).min(n_slots - 1);
             slot_energy_j[k] += s.energy_j;
@@ -94,17 +97,17 @@ fn collect_day(fleet: &Fleet, slots_per_day: u32, slo: &SloSpec) -> DayCollect {
     }
     let slo = QOS_CLASSES
         .iter()
-        .zip(lat.iter_mut())
+        .zip(hists.iter())
         .zip(counts.iter())
-        .map(|((qos, lat), &(offered, served, dropped, late))| {
-            SloSummary::from_latencies(
+        .map(|((qos, hist), &(offered, served, dropped, late))| {
+            SloSummary::from_histogram(
                 *qos,
                 slo.deadline_for(*qos),
                 offered,
                 served,
                 dropped,
                 late,
-                lat,
+                hist,
             )
         })
         .collect();
@@ -211,8 +214,6 @@ pub fn traffic_comparison(config: &FleetConfig) -> Result<TrafficFigOutput> {
     for (fsite, bsite) in frost_fleet.sites.iter().zip(&base_fleet.sites) {
         let ft = fsite.traffic.as_ref().expect("traffic-driven fleet");
         let bt = bsite.traffic.as_ref().expect("traffic-driven fleet");
-        let mut lat = ft.latencies.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
         site_table.push(format!("{} {}", fsite.name, fsite.zoo_model), vec![
             // Serving is the memory-boundedness that decides how
             // cap-tolerant this site's traffic is.
@@ -222,7 +223,9 @@ pub fn traffic_comparison(config: &FleetConfig) -> Result<TrafficFigOutput> {
             bt.day_energy_j / 1e3,
             ft.day_energy_j / 1e3,
             saving(ft.day_energy_j, bt.day_energy_j) * 100.0,
-            percentile(&lat, 0.99) * 1e3,
+            // Histogram p99 — no clone-and-sort of the day's latency
+            // vector (which the aggregated path does not even keep).
+            ft.hist.percentile(0.99) * 1e3,
             ft.deadline_s * 1e3,
         ]);
     }

@@ -166,9 +166,12 @@ COMMANDS:
             [--sample-retention N] [--out DIR] multi-host fleet simulation
   traffic   [--sites N] [--seed S] [--threads T] [--users N]
             [--req-per-user R] [--day-s S] [--slots N] [--max-batch B]
-            [--arrivals poisson|bursty] [--budget-frac F] [--smoke]
-            [--out DIR]   seeded diurnal day, FROST vs stock caps + SLOs
-  bench     [--target-s S] [--out FILE] [--force]  hot-path benches -> BENCH_fleet.json
+            [--arrivals poisson|bursty] [--diurnal typical|flat|W0,..,W23]
+            [--exact-threshold N] [--path auto|exact|aggregate]
+            [--budget-frac F] [--smoke] [--out DIR]
+            seeded diurnal day, FROST vs stock caps + SLOs
+  bench     [--traffic] [--target-s S] [--out FILE] [--force]
+            hot-path benches -> BENCH_fleet.json / BENCH_traffic.json
   shift     [--budget-frac F]               site-level power shifting
   dvfs-ablation [--setup 1|2] [--exponent M]  capping vs DVFS per model
 
@@ -530,7 +533,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// p50/p95/p99 latency and SLO attainment per QoS class.
 fn cmd_traffic(args: &Args) -> Result<()> {
     use frost::oran::FleetConfig;
-    use frost::traffic::{ArrivalKind, TrafficConfig};
+    use frost::traffic::{ArrivalKind, DiurnalProfile, TrafficConfig, TrafficPath};
     let smoke = args.get("smoke").is_some();
     let base = if smoke { TrafficConfig::smoke() } else { TrafficConfig::default() };
     let tr = TrafficConfig {
@@ -549,6 +552,42 @@ fn cmd_traffic(args: &Args) -> Result<()> {
             "bursty" => ArrivalKind::bursty(),
             other => anyhow::bail!(
                 "invalid value for --arrivals: '{other}' (expected poisson or bursty)"
+            ),
+        },
+        diurnal: match args.get_or("diurnal", "typical") {
+            "typical" => DiurnalProfile::typical(),
+            "flat" => DiurnalProfile::flat(),
+            // 24 comma-separated hourly weights; a zero or non-finite
+            // weight is a hard error from try_normalised, never a clamp.
+            raw => {
+                let parts: Vec<&str> = raw.split(',').collect();
+                anyhow::ensure!(
+                    parts.len() == 24,
+                    "invalid value for --diurnal: expected typical, flat, or 24 \
+                     comma-separated hourly weights (got {} values)",
+                    parts.len()
+                );
+                let mut weights = [0.0f64; 24];
+                for (h, p) in parts.iter().enumerate() {
+                    weights[h] = p.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("invalid value for --diurnal: '{p}' is not a number")
+                    })?;
+                }
+                DiurnalProfile::try_normalised(weights)
+                    .context("invalid value for --diurnal")?
+            }
+        },
+        exact_request_threshold: args.require_u64(
+            "exact-threshold",
+            base.exact_request_threshold,
+            1,
+        )?,
+        path: match args.get_or("path", "auto") {
+            "auto" => TrafficPath::Auto,
+            "exact" => TrafficPath::ForceExact,
+            "aggregate" => TrafficPath::ForceAggregate,
+            other => anyhow::bail!(
+                "invalid value for --path: '{other}' (expected auto, exact, or aggregate)"
             ),
         },
         ..base
@@ -585,6 +624,12 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         tr.slot_s(),
         tr.users_per_site
     );
+    let aggregated_sites = (0..sites).filter(|&i| tr.aggregate_for_site(i)).count();
+    println!(
+        "serving path         : {} of {sites} sites aggregated (threshold {} req/slot, \
+         path {:?})",
+        aggregated_sites, tr.exact_request_threshold, tr.path
+    );
     println!(
         "fleet day energy     : {:.1} kJ under FROST vs {:.1} kJ stock caps",
         out.frost_day_energy_j / 1e3,
@@ -602,6 +647,16 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         out.reprofile_requests,
         out.load_shift_reprofiles
     );
+    // The SMO-side view of the serving tail (KPM `p99_latency_s`): the
+    // worst host p99 a latency-aware rApp would react to.
+    if let Some((host, p99)) = out
+        .frost
+        .kpm_p99_by_host
+        .iter()
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+    {
+        println!("worst host p99 (KPM) : {:.1} ms at {host}", p99 * 1e3);
+    }
     for s in &out.frost_slo {
         println!(
             "SLO {:<16} : p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms  \
@@ -638,15 +693,20 @@ fn cmd_traffic(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Fleet hot-path benches from the CLI (the same suite as
-/// `cargo bench --bench fleet` — one definition, `oran::run_bench_suite`,
-/// so the two recorders cannot drift; DESIGN.md §8), recorded to a
-/// `BENCH_fleet.json`.
+/// Hot-path benches from the CLI: the fleet suite by default, the
+/// traffic suite with `--traffic` (the same definitions as
+/// `cargo bench --bench fleet` / `--bench traffic` — one definition
+/// each, `oran::run_bench_suite` and `traffic::run_traffic_bench_suite`,
+/// so the recorders cannot drift; DESIGN.md §8/§10), recorded to a
+/// `BENCH_fleet.json` / `BENCH_traffic.json`.
 fn cmd_bench(args: &Args) -> Result<()> {
     use frost::oran::run_bench_suite;
+    use frost::traffic::run_traffic_bench_suite;
     use frost::util::bench::{write_json, BenchStats};
+    let traffic = args.get("traffic").is_some();
     let target = args.num("target-s", 2.0);
-    let out = args.get_or("out", "BENCH_fleet.json");
+    let default_out = if traffic { "BENCH_traffic.json" } else { "BENCH_fleet.json" };
+    let out = args.get_or("out", default_out);
     // Refuse to clobber the curated perf-trajectory record (the checked-in
     // root BENCH_fleet.json wraps baseline+optimized result sets) unless
     // explicitly forced; raw runs should land elsewhere (e.g. rust/, which
@@ -661,10 +721,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
             }
         }
     }
-    let results = run_bench_suite(target)?;
+    let (suite, results) = if traffic {
+        ("traffic", run_traffic_bench_suite(target)?)
+    } else {
+        ("fleet", run_bench_suite(target)?)
+    };
     let refs: Vec<(&str, BenchStats)> =
         results.iter().map(|(n, s)| (n.as_str(), *s)).collect();
-    write_json(out, "fleet", &refs)?;
+    write_json(out, suite, &refs)?;
     Ok(())
 }
 
@@ -739,6 +803,38 @@ mod tests {
         let a = args(&["fleet", "--rounds", "4294967297"]);
         let err = cmd_fleet(&a).unwrap_err().to_string();
         assert!(err.contains("out of range"), "got: {err}");
+    }
+
+    #[test]
+    fn degenerate_diurnal_profile_is_a_hard_cli_error() {
+        // A zero-peak profile would make the arrival thinning envelope
+        // degenerate; the CLI must reject it, never clamp it runnable.
+        let zeros = vec!["0"; 24].join(",");
+        let a = args(&["traffic", "--diurnal", &zeros]);
+        let err = format!("{:#}", cmd_traffic(&a).unwrap_err());
+        assert!(err.contains("--diurnal"), "got: {err}");
+        assert!(err.contains("positive and finite"), "got: {err}");
+        // Non-finite and malformed weights error too.
+        let mut weights: Vec<String> = (1..=24).map(|i| i.to_string()).collect();
+        weights[5] = "inf".into();
+        let a = args(&["traffic", "--diurnal", &weights.join(",")]);
+        assert!(cmd_traffic(&a).is_err());
+        weights[5] = "six".into();
+        let a = args(&["traffic", "--diurnal", &weights.join(",")]);
+        let err = cmd_traffic(&a).unwrap_err().to_string();
+        assert!(err.contains("'six'"), "got: {err}");
+        // Wrong arity is called out with the count.
+        let a = args(&["traffic", "--diurnal", "1,2,3"]);
+        let err = cmd_traffic(&a).unwrap_err().to_string();
+        assert!(err.contains("24"), "got: {err}");
+        assert!(err.contains("got 3"), "got: {err}");
+        // And the named presets plus unknown names behave.
+        let a = args(&["traffic", "--path", "sideways"]);
+        let err = cmd_traffic(&a).unwrap_err().to_string();
+        assert!(err.contains("--path"), "got: {err}");
+        let a = args(&["traffic", "--exact-threshold", "0"]);
+        let err = cmd_traffic(&a).unwrap_err().to_string();
+        assert!(err.contains("--exact-threshold"), "got: {err}");
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Fixed-bin log-scale latency histogram (DESIGN.md §10).
+//!
+//! The traffic SLO roll-up used to keep every per-request latency of the
+//! day in a `Vec<f64>` and sort it per round — O(users) memory and
+//! O(n log n) time, which a 10⁶-users/site day cannot afford.  This
+//! histogram is the O(1) replacement: a fixed array of log-spaced bins,
+//! `record` is a handful of integer ops (no `ln`, no allocation), and
+//! p50/p95/p99 come from a nearest-rank walk over at most [`BINS`] bins.
+//!
+//! Bin layout (HDR-style, derived from the f64 bit pattern, so it is
+//! bit-deterministic on every platform):
+//!
+//! * the range [`MIN_S`] = 1 µs .. [`MAX_S`] ≈ 4.7 h is split into
+//!   power-of-two octaves;
+//! * each octave is split into [`SUB_BINS`] = 32 linear sub-bins (the top
+//!   5 mantissa bits), so the relative bin width is at most 1/32 ≈ 3.1%;
+//! * values at or below `MIN_S` land in bin 0; values at or above `MAX_S`,
+//!   and non-finite values (NaN, ±inf — a defensive route, serving never
+//!   produces them), land in the top bin.  Nothing panics, nothing is
+//!   dropped: `count` always equals the number of recorded samples.
+//!
+//! Percentiles use the same nearest-rank convention as
+//! [`crate::metrics::percentile_index`] (rank `ceil(q·n)`, clamped to
+//! [1, n]) and return the **lower edge** of the selected bin.  For
+//! samples inside the resolved range `[MIN_S, MAX_S)` — every latency
+//! the serving model can produce; batch service times are ≥ the host
+//! launch overhead, orders of magnitude above 1 µs — a histogram
+//! percentile therefore never exceeds the exact order statistic and
+//! sits within one bin (≤ 3.2% relative) below it; `tests` pin both
+//! bounds.  Saturated samples are clamped to the range edges, so for a
+//! (hypothetical) sub-µs order statistic the reported `MIN_S` would sit
+//! *above* the exact value by less than 1 µs absolute.
+//!
+//! Histograms merge by bin-wise addition; fleet roll-ups merge per-site
+//! histograms in site-index order (the §6 determinism contract's merge
+//! rule — addition commutes, but keeping one canonical order means the
+//! aggregation code path is identical for every worker-thread count).
+
+/// Lower bound of the resolved range (1 µs).
+pub const MIN_S: f64 = 1e-6;
+/// Linear sub-bins per power-of-two octave.
+pub const SUB_BINS: usize = 32;
+const SUB_BITS: u32 = 5;
+/// Octaves covered: 2^34 µs ≈ 1.7e4 s above `MIN_S`.
+const OCTAVES: usize = 34;
+/// Total bin count (34 octaves × 32 sub-bins).
+pub const BINS: usize = OCTAVES * SUB_BINS;
+
+/// Upper bound of the resolved range (everything above saturates into the
+/// top bin).
+pub const MAX_S: f64 = MIN_S * (1u64 << OCTAVES) as f64;
+
+/// Fixed-memory log-scale histogram of latency samples (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    bins: Box<[u64; BINS]>,
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { bins: Box::new([0u64; BINS]), count: 0 }
+    }
+
+    /// Bin index of a latency value.  Pure bit arithmetic on the f64
+    /// representation: exponent selects the octave, the top 5 mantissa
+    /// bits the sub-bin.  Total order, no branches on NaN payloads.
+    pub fn bin_index(x: f64) -> usize {
+        if !x.is_finite() || x >= MAX_S {
+            return BINS - 1;
+        }
+        if x <= MIN_S {
+            return 0;
+        }
+        // y ∈ (1, 2^OCTAVES): exponent field is the octave, the mantissa's
+        // top SUB_BITS bits the linear sub-bin within it.
+        let y = x / MIN_S;
+        let bits = y.to_bits();
+        let octave = ((bits >> 52) as usize).saturating_sub(1023);
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUB_BINS as u64 - 1)) as usize;
+        (octave * SUB_BINS + sub).min(BINS - 1)
+    }
+
+    /// Lower edge of bin `i` (seconds).  `bin_index(lower_edge(i)) == i`
+    /// for every in-range bin.
+    pub fn lower_edge(i: usize) -> f64 {
+        let octave = i / SUB_BINS;
+        let sub = (i % SUB_BINS) as f64;
+        MIN_S * (1u64 << octave) as f64 * (1.0 + sub / SUB_BINS as f64)
+    }
+
+    /// Upper edge of bin `i` (seconds): the next bin's lower edge.
+    pub fn upper_edge(i: usize) -> f64 {
+        if i + 1 >= BINS {
+            MAX_S
+        } else {
+            LatencyHistogram::lower_edge(i + 1)
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.record_n(x, 1);
+    }
+
+    /// Record `n` samples of the same value — the aggregated serving path
+    /// retires whole request groups with one call (O(1) per group).
+    pub fn record_n(&mut self, x: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.bins[LatencyHistogram::bin_index(x)] += n;
+        self.count += n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Forget everything (day rollover); keeps the allocation.
+    pub fn clear(&mut self) {
+        self.bins.fill(0);
+        self.count = 0;
+    }
+
+    /// Bin-wise merge.  Callers merge in site-index order (§6).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.bins.iter_mut().zip(other.bins.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Nearest-rank percentile by bin walk: the lower edge of the bin
+    /// holding the `ceil(q·n)`-th smallest sample (rank clamped to
+    /// [1, n]; same convention as [`crate::metrics::percentile_index`]).
+    /// Lower-edge reporting means the result never exceeds the exact
+    /// order statistic for in-range samples (see the module docs for the
+    /// saturation caveat).  Empty histogram yields 0.0, matching
+    /// `metrics::percentile`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return LatencyHistogram::lower_edge(i);
+            }
+        }
+        LatencyHistogram::lower_edge(BINS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::percentile;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn bin_edges_round_trip_and_order() {
+        for i in 0..BINS {
+            let lo = LatencyHistogram::lower_edge(i);
+            assert_eq!(LatencyHistogram::bin_index(lo), i, "bin {i} lower edge");
+            assert!(LatencyHistogram::upper_edge(i) > lo, "bin {i} width");
+        }
+        // Monotone: larger values never land in smaller bins.
+        let mut last = 0;
+        let mut x = MIN_S;
+        while x < MAX_S {
+            let b = LatencyHistogram::bin_index(x);
+            assert!(b >= last, "{x}: bin {b} < {last}");
+            last = b;
+            x *= 1.01;
+        }
+    }
+
+    #[test]
+    fn out_of_range_and_non_finite_saturate_without_panicking() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(-5.0);
+        h.record(1e-12);
+        assert_eq!(h.percentile(0.5), LatencyHistogram::lower_edge(0));
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(1e9);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.percentile(1.0), LatencyHistogram::lower_edge(BINS - 1));
+    }
+
+    #[test]
+    fn percentiles_sit_within_one_bin_below_the_exact_order_statistic() {
+        let mut rng = Pcg32::seeded(42);
+        let mut h = LatencyHistogram::new();
+        let mut xs: Vec<f64> = (0..5_000)
+            .map(|_| {
+                // Log-uniform latencies spanning µs to tens of seconds.
+                let e = rng.uniform(-6.0, 1.5);
+                10f64.powf(e)
+            })
+            .collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            let exact = percentile(&xs, q);
+            let approx = h.percentile(q);
+            assert!(approx <= exact + 1e-15, "q={q}: {approx} > exact {exact}");
+            // Upper edge of the chosen bin bounds the exact value:
+            // relative error ≤ one sub-bin (≤ 1/32 of the octave base).
+            let i = LatencyHistogram::bin_index(exact);
+            assert!(
+                exact < LatencyHistogram::upper_edge(i) && approx >= LatencyHistogram::lower_edge(i),
+                "q={q}: exact {exact} not bracketed by bin {i}"
+            );
+            assert!(
+                (exact - approx) / exact <= 1.0 / SUB_BINS as f64 + 1e-12,
+                "q={q}: gap {} past one bin",
+                (exact - approx) / exact
+            );
+        }
+    }
+
+    #[test]
+    fn nearest_rank_convention_matches_percentile_index() {
+        // The bin walk must land in the bin holding exactly the order
+        // statistic the shared nearest-rank helper selects.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let mut h = LatencyHistogram::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let exact = percentile(&xs, q);
+            let i = LatencyHistogram::bin_index(exact);
+            assert_eq!(h.percentile(q), LatencyHistogram::lower_edge(i), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_concatenation_and_clear_resets() {
+        let mut rng = Pcg32::seeded(7);
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for k in 0..2_000 {
+            let x = rng.uniform(1e-4, 2.0);
+            if k % 3 == 0 {
+                a.record(x);
+            } else {
+                b.record_n(x, 2);
+            }
+            all.record_n(x, if k % 3 == 0 { 1 } else { 2 });
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, all);
+        assert_eq!(merged.count(), a.count() + b.count());
+        merged.clear();
+        assert!(merged.is_empty());
+        assert_eq!(merged.percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..17 {
+            a.record(0.042);
+        }
+        b.record_n(0.042, 17);
+        assert_eq!(a, b);
+    }
+}

@@ -1,7 +1,9 @@
 //! Statistics and derived metrics used across the evaluation.
 
+pub mod hist;
 pub mod stats;
 
+pub use hist::LatencyHistogram;
 pub use stats::{
     linear_fit, mean, pearson, percentile, percentile_index, std_dev, StreamingSummary, Summary,
 };

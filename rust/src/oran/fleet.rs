@@ -55,13 +55,14 @@ use crate::config::{setup_no1, setup_no2, HardwareConfig};
 use crate::frost::{
     ContinuousMonitor, EnergyPolicy, MonitorAction, MonitorConfig, Observation, QosClass,
 };
+use crate::metrics::LatencyHistogram;
 use crate::power::{allocate_budget, HostProfile};
 use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
 use crate::telemetry::hub::{PowerReading, TelemetryHub};
 use crate::telemetry::sampler::PowerSampler;
 use crate::traffic::{
-    ArrivalGen, ArrivalKind, BatchFormer, Request, SlotReport, SlotWindow, TrafficConfig,
-    TrafficServer,
+    ArrivalBuffers, ArrivalGen, ArrivalKind, BatchFormer, SlotLatencies, SlotReport,
+    SlotWindow, TrafficConfig, TrafficServer,
 };
 use crate::util::bench::{bench, group, BenchStats};
 use crate::util::Seconds;
@@ -150,9 +151,28 @@ pub struct SiteTraffic {
     monitor: ContinuousMonitor,
     /// This site's QoS deadline (seconds of traffic time).
     pub deadline_s: f64,
+    /// True when this site serves via the aggregated count path
+    /// (DESIGN.md §10): decided once per scenario from the expected
+    /// requests per slot vs `TrafficConfig::exact_request_threshold`
+    /// (or forced by `TrafficConfig::path`), never mid-day.
+    pub aggregated: bool,
+    /// Arrival-count resolution of the aggregated path (sub-windows per
+    /// slot, sized to a small fraction of this site's deadline).
+    agg_windows: u32,
+    /// Reusable per-slot arrival buffers (exact times / aggregated
+    /// windows): steady-state slots allocate nothing, and generation +
+    /// enqueueing share one definition with the traffic bench
+    /// (`traffic::ArrivalBuffers`).
+    bufs: ArrivalBuffers,
     /// Per-request latencies of the current day (cleared at day rollover
-    /// so multi-day runs stay bounded in memory).
+    /// so multi-day runs stay bounded in memory).  **Exact path only** —
+    /// the aggregated path accounts latencies solely in [`Self::hist`],
+    /// which is what makes a 10⁶-users/site day O(1) in memory.
     pub latencies: Vec<f64>,
+    /// O(1) log-bin latency histogram of the current day (both paths;
+    /// cleared at day rollover).  Fleet roll-ups merge these in
+    /// site-index order (§6).
+    pub hist: LatencyHistogram,
     /// Per-slot records of the current day.
     pub slot_log: Vec<SlotReport>,
     /// Total slots served over the site's lifetime (day index derives
@@ -187,9 +207,14 @@ impl SiteTraffic {
                 cfg.site_base_rate(site_index),
                 cfg.day_s,
                 seed,
-            ),
+            )
+            .expect("validated traffic config"),
             server: TrafficServer::new(),
             former: BatchFormer::new(cfg.max_batch, deadline_s),
+            aggregated: cfg.aggregate_for_site(site_index),
+            agg_windows: cfg.agg_windows(deadline_s),
+            bufs: ArrivalBuffers::new(),
+            hist: LatencyHistogram::new(),
             // Slot-cadence monitoring: settle after a few slots, then
             // re-profile on demand shifts with a cooldown of roughly a
             // sixth of a day so one diurnal ramp triggers once.
@@ -342,10 +367,12 @@ impl FleetSite {
         }
     }
 
-    /// Serve the site's next traffic slot (DESIGN.md §9): generate the
-    /// slot's seeded arrivals, push them through the host's batch former
-    /// under the current cap, and feed the demand monitor, which may ask
-    /// FROST to re-profile (routed through the scheduler stagger via the
+    /// Serve the site's next traffic slot (DESIGN.md §9/§10): generate
+    /// the slot's seeded arrivals — individually below the aggregation
+    /// threshold, as per-window counts above it, both into reusable
+    /// buffers — push them through the host's batch former under the
+    /// current cap, and feed the demand monitor, which may ask FROST to
+    /// re-profile (routed through the scheduler stagger via the
     /// coordinator — see `reprofile_pending`).
     fn serve_traffic_slot(&mut self, tr: &TrafficConfig, frost_enabled: bool) {
         let slot_s = tr.slot_s();
@@ -356,34 +383,35 @@ impl FleetSite {
             // last slot; reset the per-day ledgers so multi-day runs
             // stay bounded in memory.
             t.latencies.clear();
+            t.hist.clear();
             t.slot_log.clear();
             t.offered_today = 0;
             t.day_energy_j = 0.0;
         }
         let t0 = t.slots_served as f64 * slot_s;
         let deadline_s = t.deadline_s;
-        let arrivals: Vec<Request> = t
-            .gen
-            .slot(t0, slot_s)
-            .into_iter()
-            .map(|a| Request { arrival: a, deadline: a + deadline_s })
-            .collect();
+        let offered = t.bufs.generate_and_enqueue(
+            &mut t.gen,
+            &mut t.server,
+            t.aggregated,
+            t.agg_windows,
+            t0,
+            slot_s,
+            deadline_s,
+        );
         let window = SlotWindow {
             t0,
             dur: slot_s,
             slot_in_day,
             flush: slot_in_day + 1 == tr.slots_per_day,
         };
+        let mut lat = SlotLatencies {
+            exact: if t.aggregated { None } else { Some(&mut t.latencies) },
+            hist: &mut t.hist,
+        };
         let report = self
             .host
-            .serve_slot(
-                &self.model_id,
-                &mut t.server,
-                &t.former,
-                arrivals,
-                window,
-                &mut t.latencies,
-            )
+            .serve_slot(&self.model_id, &mut t.server, &t.former, offered, window, &mut lat)
             .expect("deployed model serves traffic");
         t.slots_served += 1;
         t.offered_today += report.offered;
@@ -447,6 +475,11 @@ pub struct FleetReport {
     /// Per-host KPM aggregation from the SMO: (host, energy J, samples,
     /// latest reported GPU power W), sorted by host.
     pub kpm_by_host: Vec<(String, f64, u64, f64)>,
+    /// Latest KPM-reported day p99 request latency per host, in host
+    /// order (traffic-driven fleets; empty otherwise).  The SMO-side
+    /// view of the serving tail — what a latency-aware rApp would act
+    /// on (DESIGN.md §10).
+    pub kpm_p99_by_host: Vec<(String, f64)>,
     pub mean_cap_frac: f64,
     /// Mean of FROST's per-site estimated savings (profiled sites only).
     pub mean_est_saving: f64,
@@ -973,6 +1006,12 @@ impl Fleet {
             fleet_samples: samples,
             kpm_reports: self.smo.kpms.len(),
             kpm_by_host: self.smo.kpm_rollup(),
+            kpm_p99_by_host: self
+                .smo
+                .latency_p99_by_host()
+                .iter()
+                .map(|(h, p)| (h.clone(), *p))
+                .collect(),
             mean_cap_frac: cap_sum / n,
             mean_est_saving: if est_savings.is_empty() {
                 0.0

@@ -10,7 +10,9 @@ use std::sync::Arc;
 use crate::config::{HardwareConfig, ProfilerConfig};
 use crate::frost::{EnergyPolicy, PowerProfiler, ProfileOutcome};
 use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
-use crate::traffic::{BatchCost, BatchFormer, Request, SlotReport, SlotWindow, TrafficServer};
+use crate::traffic::{
+    BatchCost, BatchFormer, SlotLatencies, SlotReport, SlotWindow, TrafficServer,
+};
 use crate::util::Seconds;
 
 use super::bus::{Bus, Endpoint, EndpointId};
@@ -172,35 +174,38 @@ impl InferenceHost {
                 samples_processed: n,
                 energy_j: energy,
                 offered_load_per_s: 0.0,
+                p99_latency_s: 0.0,
             }),
         );
         Some((wall, energy))
     }
 
     /// Serve one traffic slot of user requests against a deployed model
-    /// (DESIGN.md §9): the batch former cuts the FIFO into dynamic
-    /// batches, each priced by the memoized roofline estimate under the
-    /// current cap; the idle remainder of the slot draws idle power.
-    /// Appends per-request latencies, charges the slot's energy to the
-    /// host totals, advances the virtual clock by the slot, and reports
-    /// one KPM carrying the offered load.  None if `model` is unknown.
+    /// (DESIGN.md §9/§10): the caller has already enqueued the slot's
+    /// arrivals into `server` (per request on the exact path, per arrival
+    /// window on the aggregated path — `offered` is their count); the
+    /// batch former cuts the FIFO into dynamic batches, each priced by
+    /// the memoized roofline estimate under the current cap; the idle
+    /// remainder of the slot draws idle power.  Latencies land in `lat`
+    /// (histogram always, per-request samples on the exact path), the
+    /// slot's energy is charged to the host totals, the virtual clock
+    /// advances by the slot, and one KPM goes up carrying the offered
+    /// load and the day-so-far p99.  None if `model` is unknown.
     pub fn serve_slot(
         &mut self,
         model: &str,
         server: &mut TrafficServer,
         former: &BatchFormer,
-        arrivals: Vec<Request>,
+        offered: u64,
         window: SlotWindow,
-        latencies: &mut Vec<f64>,
+        lat: &mut SlotLatencies<'_>,
     ) -> Option<SlotReport> {
         let w = self.store.get(model)?.clone();
-        let offered = arrivals.len() as u64;
         // A batch from the previous slot may still occupy the GPU at the
         // window start; that spill was busy-charged when the batch
         // started, so it is deducted from this slot's idle time here.
         let spill_in = (server.t_free - window.t0).clamp(0.0, window.dur);
         let usage = server.run_slot(
-            arrivals,
             window,
             former,
             |b| {
@@ -212,7 +217,7 @@ impl InferenceHost {
                     dram_power_w: est.dram_power.0,
                 }
             },
-            latencies,
+            |latency, n| lat.record(latency, n),
         );
         let idle_power_w = self.testbed.exec.idle_power().0;
         let idle_s = (window.dur - spill_in - usage.busy_in_window_s).max(0.0);
@@ -246,6 +251,7 @@ impl InferenceHost {
                 samples_processed: usage.served,
                 energy_j,
                 offered_load_per_s: offered_rate_per_s,
+                p99_latency_s: lat.hist.percentile(0.99),
             }),
         );
         Some(SlotReport {
@@ -426,30 +432,32 @@ mod tests {
 
     #[test]
     fn serve_slot_accounts_energy_and_reports_offered_load() {
+        use crate::metrics::LatencyHistogram;
         let (bus, mut h) = host_with_model("ResNet");
         bus.deliver_all();
         bus.endpoint("smo").drain();
         let mut server = TrafficServer::new();
         let former = BatchFormer::new(32, 0.5);
-        let arrivals: Vec<Request> = (0..40)
-            .map(|i| {
-                let a = i as f64 * 0.1;
-                Request { arrival: a, deadline: a + 0.5 }
-            })
-            .collect();
+        for i in 0..40 {
+            let a = i as f64 * 0.1;
+            server.enqueue(a, a + 0.5);
+        }
         let window = SlotWindow { t0: 0.0, dur: 10.0, slot_in_day: 0, flush: true };
-        let mut lat = Vec::new();
+        let mut vec = Vec::new();
+        let mut hist = LatencyHistogram::new();
+        let mut lat = SlotLatencies { exact: Some(&mut vec), hist: &mut hist };
         let before = h.total_energy_j;
         let report =
-            h.serve_slot("ResNet", &mut server, &former, arrivals, window, &mut lat).unwrap();
+            h.serve_slot("ResNet", &mut server, &former, 40, window, &mut lat).unwrap();
         assert_eq!(report.offered, 40);
         assert_eq!(report.served + report.dropped, 40, "day flush resolves everything");
-        assert_eq!(lat.len(), report.served as usize);
+        assert_eq!(vec.len(), report.served as usize);
+        assert_eq!(hist.count(), report.served, "histogram tracks every served request");
         assert!(report.energy_j > 0.0);
         assert!((h.total_energy_j - before - report.energy_j).abs() < 1e-9);
         assert!(report.busy_s > 0.0 && report.busy_s < 10.0);
         assert!(report.gpu_busy_power_w > 0.0);
-        // The KPM went out carrying the offered load.
+        // The KPM went out carrying the offered load and the day p99.
         bus.deliver_all();
         let msgs = bus.endpoint("smo").drain();
         let kpm = msgs
@@ -461,10 +469,12 @@ mod tests {
             .expect("KPM sent");
         assert!((kpm.offered_load_per_s - 4.0).abs() < 1e-9);
         assert_eq!(kpm.samples_processed, report.served);
+        assert!(kpm.p99_latency_s > 0.0, "traffic KPM carries the histogram p99");
+        assert!(kpm.p99_latency_s <= hist.percentile(0.99) + 1e-15);
         // Unknown model: no service, no report.
-        assert!(h
-            .serve_slot("ghost", &mut server, &former, Vec::new(), window, &mut lat)
-            .is_none());
+        let mut hist2 = LatencyHistogram::new();
+        let mut lat = SlotLatencies { exact: None, hist: &mut hist2 };
+        assert!(h.serve_slot("ghost", &mut server, &former, 0, window, &mut lat).is_none());
     }
 
     #[test]

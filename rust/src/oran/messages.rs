@@ -25,6 +25,11 @@ pub struct KpmReport {
     /// hosts that are not traffic-driven).  The SMO's budget water-fill
     /// weights per-site shares by it (DESIGN.md §9).
     pub offered_load_per_s: f64,
+    /// p99 request latency of the current traffic day so far (seconds;
+    /// 0.0 for hosts that are not traffic-driven).  Read from the O(1)
+    /// latency histogram, so reporting it costs a bin walk, not a sort
+    /// (DESIGN.md §10).
+    pub p99_latency_s: f64,
 }
 
 /// Events of the AI/ML lifecycle (paper Sec. II-B).
@@ -98,6 +103,7 @@ mod tests {
             samples_processed: 0,
             energy_j: 0.0,
             offered_load_per_s: 0.0,
+            p99_latency_s: 0.0,
         });
         assert_eq!(k.interface(), "O1");
         assert_eq!(

@@ -37,6 +37,12 @@ pub struct Smo {
     /// unbounded KPM log.  Zero is data ("no demand this window"), so an
     /// idle site cannot keep a stale busy-hour weight.
     offered_load: std::collections::BTreeMap<String, f64>,
+    /// Latest KPM-reported day-so-far p99 request latency per host
+    /// (seconds; 0.0 when the host's last report carried no traffic —
+    /// see `KpmReport::p99_latency_s`).  Same incremental-ingest
+    /// discipline as the load map, zeros included: a host that stops
+    /// serving traffic must not keep a stale busy-day p99.
+    latency_p99: std::collections::BTreeMap<String, f64>,
 }
 
 impl Smo {
@@ -52,6 +58,7 @@ impl Smo {
             profile_records: Vec::new(),
             lifecycle_log: Vec::new(),
             offered_load: std::collections::BTreeMap::new(),
+            latency_p99: std::collections::BTreeMap::new(),
         }
     }
 
@@ -88,6 +95,7 @@ impl Smo {
             match msg {
                 OranMessage::Kpm(k) => {
                     self.offered_load.insert(k.host.clone(), k.offered_load_per_s);
+                    self.latency_p99.insert(k.host.clone(), k.p99_latency_s);
                     self.kpms.push(k);
                 }
                 OranMessage::ProfileResult {
@@ -144,6 +152,15 @@ impl Smo {
         &self.offered_load
     }
 
+    /// Latest KPM-reported day p99 latency per host (seconds; 0.0 for a
+    /// host whose last report carried no traffic), keyed and iterated in
+    /// host order.  A reported zero replaces the old value — like the
+    /// load map, an idle host must not keep its busy-day tail.  Hosts
+    /// that never sent a KPM are absent.
+    pub fn latency_p99_by_host(&self) -> &std::collections::BTreeMap<String, f64> {
+        &self.latency_p99
+    }
+
     /// Mean energy saving across the FROST decisions recorded so far.
     pub fn mean_energy_saving(&self) -> f64 {
         if self.profile_records.is_empty() {
@@ -182,6 +199,7 @@ mod tests {
             samples_processed: 1000,
             energy_j: 123.0,
             offered_load_per_s: 0.0,
+            p99_latency_s: 0.0,
         }));
         bus.deliver_all();
         smo.step();
@@ -238,6 +256,7 @@ mod tests {
                 samples_processed: n,
                 energy_j: e,
                 offered_load_per_s: if host == "h2" { 25.0 } else { 0.0 },
+                p99_latency_s: if host == "h2" { 0.035 } else { 0.0 },
             }));
         }
         bus.deliver_all();
@@ -252,6 +271,12 @@ mod tests {
         assert_eq!(loads.len(), 2);
         assert_eq!(loads.get("h1"), Some(&0.0));
         assert_eq!(loads.get("h2"), Some(&25.0));
+        // The latency map tracks every reporting host; zero is data (an
+        // idle host must not keep a stale busy-day p99).
+        let p99s = smo.latency_p99_by_host();
+        assert_eq!(p99s.len(), 2);
+        assert_eq!(p99s.get("h1"), Some(&0.0));
+        assert_eq!(p99s.get("h2"), Some(&0.035));
     }
 
     #[test]

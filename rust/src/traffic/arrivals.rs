@@ -9,13 +9,29 @@
 //!
 //! Time here is *continuous traffic time* in plain `f64` seconds: it grows
 //! monotonically across slots and days, and only the diurnal lookup wraps
-//! it onto the 24 h profile.  Non-homogeneous sampling uses Lewis–Shedler
-//! thinning against the envelope rate.  Note that each `slot()` call
-//! restarts the candidate walk at the window start, so the *same* slot
-//! schedule replays bit-for-bit, but re-slicing a day into a different
-//! number of slots consumes the RNG differently — statistically the same
-//! process, not the same bits (the fleet always derives its schedule from
-//! `TrafficConfig`, so this never threatens the §6 contract).
+//! it onto the 24 h profile.
+//!
+//! Two generation modes (DESIGN.md §10):
+//!
+//! * **Exact** ([`ArrivalGen::slot_into`]): non-homogeneous sampling by
+//!   Lewis–Shedler thinning against the envelope rate, yielding every
+//!   individual arrival time into a caller-owned reusable buffer —
+//!   O(arrivals) time, zero per-slot allocation in steady state.  Note
+//!   that each call restarts the candidate walk at the window start, so
+//!   the *same* slot schedule replays bit-for-bit, but re-slicing a day
+//!   into a different number of slots consumes the RNG differently —
+//!   statistically the same process, not the same bits (the fleet always
+//!   derives its schedule from `TrafficConfig`, so this never threatens
+//!   the §6 contract).
+//! * **Aggregate** ([`ArrivalGen::windowed_counts`]): per-sub-window
+//!   arrival *counts* sampled directly from the analytically integrated
+//!   diurnal (× MMPP state) rate — O(windows) time regardless of user
+//!   count, which is what makes a 10⁶-users/site day tractable.  The two
+//!   modes draw the RNG differently (they are the same point process
+//!   statistically, not bit-wise), so a site picks one mode per scenario
+//!   (`TrafficConfig::exact_request_threshold`), never mid-day.
+
+use anyhow::Result;
 
 use crate::util::Pcg32;
 
@@ -27,15 +43,47 @@ pub struct DiurnalProfile {
 }
 
 impl DiurnalProfile {
-    /// Normalise raw hourly weights to mean 1.0 (all must be positive).
-    pub fn normalised(raw: [f64; 24]) -> DiurnalProfile {
-        assert!(raw.iter().all(|w| *w > 0.0), "hourly weights must be positive");
+    /// Normalise raw hourly weights to mean 1.0, rejecting any weight
+    /// that is not strictly positive and finite — a zero or non-finite
+    /// control point would make the thinning envelope degenerate
+    /// (acceptance ratio 0/0 or a stream that never terminates), so it
+    /// is a hard error, never a silent clamp.
+    pub fn try_normalised(raw: [f64; 24]) -> Result<DiurnalProfile> {
+        for (h, w) in raw.iter().enumerate() {
+            anyhow::ensure!(
+                w.is_finite() && *w > 0.0,
+                "hourly weight [{h}] = {w} must be positive and finite"
+            );
+        }
         let mean = raw.iter().sum::<f64>() / 24.0;
+        anyhow::ensure!(
+            mean.is_finite() && mean > 0.0,
+            "hourly weights sum to a non-finite mean"
+        );
         let mut weights = raw;
         for w in weights.iter_mut() {
             *w /= mean;
         }
-        DiurnalProfile { weights }
+        DiurnalProfile { weights }.validated()
+    }
+
+    fn validated(self) -> Result<DiurnalProfile> {
+        let peak = self.peak();
+        anyhow::ensure!(
+            peak.is_finite() && peak > 0.0,
+            "diurnal peak rate multiplier {peak} must be positive and finite"
+        );
+        Ok(self)
+    }
+
+    /// Panicking convenience for the in-tree presets and tests.
+    pub fn normalised(raw: [f64; 24]) -> DiurnalProfile {
+        DiurnalProfile::try_normalised(raw).expect("hourly weights must be positive")
+    }
+
+    /// Re-check the envelope invariants (used by `TrafficConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        self.clone().validated().map(|_| ())
     }
 
     /// A typical RAN access-network day: a deep night trough, a morning
@@ -94,6 +142,20 @@ impl ArrivalKind {
     }
 }
 
+/// One aggregated arrival window: `count` requests all treated as
+/// arriving at the window start `t0` (the earliest possible arrival in
+/// the window, so deadlines are never optimistic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalWindow {
+    pub t0: f64,
+    pub count: u64,
+}
+
+/// Knuth's product method is O(mean); switch to the (deterministic,
+/// seeded) normal approximation above this mean, where its relative
+/// error is far below the MMPP state variance.
+const POISSON_NORMAL_CUTOFF: f64 = 64.0;
+
 /// A deterministic per-site arrival stream.
 #[derive(Debug, Clone)]
 pub struct ArrivalGen {
@@ -111,15 +173,43 @@ pub struct ArrivalGen {
 }
 
 impl ArrivalGen {
+    /// Build a stream, rejecting (hard error, never a silent clamp) any
+    /// configuration whose thinning envelope rate — base × diurnal peak ×
+    /// max state multiplier — is zero or non-finite: thinning against a
+    /// zero envelope never yields, and a non-finite one never terminates.
     pub fn new(
         kind: ArrivalKind,
         profile: DiurnalProfile,
         base_rate_per_s: f64,
         day_s: f64,
         seed: u64,
-    ) -> ArrivalGen {
-        assert!(base_rate_per_s > 0.0, "base rate must be positive");
-        assert!(day_s > 0.0, "day length must be positive");
+    ) -> Result<ArrivalGen> {
+        anyhow::ensure!(
+            base_rate_per_s.is_finite() && base_rate_per_s > 0.0,
+            "base rate {base_rate_per_s} req/s must be positive and finite"
+        );
+        anyhow::ensure!(
+            day_s.is_finite() && day_s > 0.0,
+            "day length {day_s} s must be positive and finite"
+        );
+        profile.validate()?;
+        if let ArrivalKind::Mmpp { calm_mult, burst_mult, mean_dwell_s } = kind {
+            for (name, v) in [
+                ("calm_mult", calm_mult),
+                ("burst_mult", burst_mult),
+                ("mean_dwell_s", mean_dwell_s),
+            ] {
+                anyhow::ensure!(
+                    v.is_finite() && v > 0.0,
+                    "MMPP {name} {v} must be positive and finite"
+                );
+            }
+        }
+        let envelope = base_rate_per_s * profile.peak() * kind.max_mult();
+        anyhow::ensure!(
+            envelope.is_finite() && envelope > 0.0,
+            "thinning envelope rate {envelope} req/s must be positive and finite"
+        );
         let mut g = ArrivalGen {
             kind,
             profile,
@@ -132,7 +222,7 @@ impl ArrivalGen {
         if let ArrivalKind::Mmpp { mean_dwell_s, .. } = kind {
             g.next_switch = g.exp_sample(1.0 / mean_dwell_s);
         }
-        g
+        Ok(g)
     }
 
     /// Exponential variate with the given rate.
@@ -169,11 +259,14 @@ impl ArrivalGen {
         self.base_rate_per_s * self.profile.multiplier(t / self.day_s)
     }
 
-    /// Generate the sorted arrival times in `[t0, t0 + dur)` by thinning.
-    /// Successive calls must pass contiguous, increasing windows.
-    pub fn slot(&mut self, t0: f64, dur: f64) -> Vec<f64> {
+    /// Generate the sorted arrival times in `[t0, t0 + dur)` by thinning
+    /// into the caller-owned `out` buffer (cleared first, capacity kept —
+    /// the fleet hot path reuses one buffer per site, so steady-state
+    /// slots allocate nothing).  Successive calls must pass contiguous,
+    /// increasing windows.
+    pub fn slot_into(&mut self, t0: f64, dur: f64, out: &mut Vec<f64>) {
+        out.clear();
         let lambda_max = self.base_rate_per_s * self.profile.peak() * self.kind.max_mult();
-        let mut out = Vec::new();
         let mut t = t0;
         loop {
             t += self.exp_sample(lambda_max);
@@ -187,7 +280,104 @@ impl ArrivalGen {
                 out.push(t);
             }
         }
+    }
+
+    /// [`Self::slot_into`] into a fresh `Vec` (tests and one-shot callers;
+    /// bit-identical RNG consumption to the buffered form).
+    pub fn slot(&mut self, t0: f64, dur: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.slot_into(t0, dur, &mut out);
         out
+    }
+
+    /// Aggregate mode: split `[t0, t0 + dur)` into `windows` equal
+    /// sub-windows and sample each window's arrival *count* from the
+    /// analytically integrated rate (diurnal profile × MMPP state, both
+    /// piecewise over the window) — O(windows), independent of the user
+    /// count.  Empty windows are skipped; `out` is cleared and reused.
+    pub fn windowed_counts(
+        &mut self,
+        t0: f64,
+        dur: f64,
+        windows: u32,
+        out: &mut Vec<ArrivalWindow>,
+    ) {
+        out.clear();
+        let windows = windows.max(1);
+        let w = dur / windows as f64;
+        for k in 0..windows {
+            let a = t0 + k as f64 * w;
+            let mean = self.integrated_rate(a, a + w);
+            let count = self.poisson(mean);
+            if count > 0 {
+                out.push(ArrivalWindow { t0: a, count });
+            }
+        }
+    }
+
+    /// ∫ rate dt over `[t0, t1]`, exact piecewise: the diurnal profile is
+    /// linear within each hour cell (trapezoid is exact there) and the
+    /// MMPP multiplier is constant between switches, so the walk advances
+    /// segment by segment over hour boundaries and switch times.
+    fn integrated_rate(&mut self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let hour = self.day_s / 24.0;
+        let mut acc = 0.0;
+        let mut t = t0;
+        while t < t1 {
+            let cell = (t / hour).floor();
+            let mut next = (cell + 1.0) * hour;
+            if next <= t {
+                // Floating-point landed exactly on (or just past) the
+                // boundary: step to the following cell.
+                next = (cell + 2.0) * hour;
+            }
+            // Advance the state machine first: a switch landing exactly
+            // on `t` is consumed here, so the *updated* next switch can
+            // still split this segment.
+            let m = self.state_mult_at(t);
+            let mut seg_end = t1.min(next);
+            if self.next_switch > t && self.next_switch < seg_end {
+                seg_end = self.next_switch;
+            }
+            let pa = self.profile.multiplier(t / self.day_s);
+            let pb = self.profile.multiplier(seg_end / self.day_s);
+            acc += self.base_rate_per_s * m * 0.5 * (pa + pb) * (seg_end - t);
+            if seg_end <= t {
+                break; // defensive: cannot make progress
+            }
+            t = seg_end;
+        }
+        acc
+    }
+
+    /// Seeded Poisson variate: Knuth's product method below
+    /// [`POISSON_NORMAL_CUTOFF`], the normal approximation above it
+    /// (deterministic for a given RNG state either way).
+    fn poisson(&mut self, mean: f64) -> u64 {
+        if mean.is_nan() || mean <= 0.0 {
+            return 0;
+        }
+        if mean < POISSON_NORMAL_CUTOFF {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.rng.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        let x = mean + mean.sqrt() * self.rng.normal();
+        if x < 0.0 {
+            0
+        } else {
+            x.round() as u64
+        }
     }
 }
 
@@ -221,10 +411,43 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_profiles_and_rates_are_hard_errors() {
+        // A zero, negative, or non-finite hourly weight is rejected —
+        // never silently clamped into a runnable profile.
+        let mut raw = [1.0; 24];
+        raw[7] = 0.0;
+        assert!(DiurnalProfile::try_normalised(raw).is_err());
+        raw[7] = -0.5;
+        assert!(DiurnalProfile::try_normalised(raw).is_err());
+        raw[7] = f64::NAN;
+        assert!(DiurnalProfile::try_normalised(raw).is_err());
+        raw[7] = f64::INFINITY;
+        assert!(DiurnalProfile::try_normalised(raw).is_err());
+        raw[7] = 1.0;
+        assert!(DiurnalProfile::try_normalised(raw).is_ok());
+
+        // And a stream whose envelope rate degenerates is rejected too.
+        let p = DiurnalProfile::typical();
+        assert!(ArrivalGen::new(ArrivalKind::Poisson, p.clone(), 0.0, 600.0, 1).is_err());
+        assert!(ArrivalGen::new(ArrivalKind::Poisson, p.clone(), f64::NAN, 600.0, 1).is_err());
+        assert!(
+            ArrivalGen::new(ArrivalKind::Poisson, p.clone(), f64::MAX, 600.0, 1).is_err(),
+            "envelope overflows to +inf — must be rejected"
+        );
+        assert!(ArrivalGen::new(ArrivalKind::Poisson, p.clone(), 5.0, 0.0, 1).is_err());
+        let bad_mmpp =
+            ArrivalKind::Mmpp { calm_mult: 0.6, burst_mult: 1.4, mean_dwell_s: 0.0 };
+        assert!(ArrivalGen::new(bad_mmpp, p.clone(), 5.0, 600.0, 1).is_err());
+        assert!(ArrivalGen::new(ArrivalKind::Poisson, p, 5.0, 600.0, 1).is_ok());
+    }
+
+    #[test]
     fn same_seed_same_stream_bitwise() {
         for kind in [ArrivalKind::Poisson, ArrivalKind::bursty()] {
-            let mut a = ArrivalGen::new(kind, DiurnalProfile::typical(), 5.0, 600.0, 42);
-            let mut b = ArrivalGen::new(kind, DiurnalProfile::typical(), 5.0, 600.0, 42);
+            let mut a =
+                ArrivalGen::new(kind, DiurnalProfile::typical(), 5.0, 600.0, 42).unwrap();
+            let mut b =
+                ArrivalGen::new(kind, DiurnalProfile::typical(), 5.0, 600.0, 42).unwrap();
             let xs = full_day(&mut a, 600.0, 6);
             let ys = full_day(&mut b, 600.0, 6);
             assert_eq!(xs.len(), ys.len());
@@ -232,9 +455,33 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
             // A different seed genuinely changes the stream.
-            let mut c = ArrivalGen::new(kind, DiurnalProfile::typical(), 5.0, 600.0, 43);
+            let mut c =
+                ArrivalGen::new(kind, DiurnalProfile::typical(), 5.0, 600.0, 43).unwrap();
             let zs = full_day(&mut c, 600.0, 6);
             assert_ne!(xs, zs);
+        }
+    }
+
+    #[test]
+    fn slot_into_reuses_the_buffer_bit_identically() {
+        let mut a =
+            ArrivalGen::new(ArrivalKind::bursty(), DiurnalProfile::typical(), 8.0, 600.0, 9)
+                .unwrap();
+        let mut b =
+            ArrivalGen::new(ArrivalKind::bursty(), DiurnalProfile::typical(), 8.0, 600.0, 9)
+                .unwrap();
+        let mut buf = Vec::new();
+        for k in 0..6 {
+            let t0 = k as f64 * 100.0;
+            b.slot_into(t0, 100.0, &mut buf);
+            let fresh = a.slot(t0, 100.0);
+            assert_eq!(fresh.len(), buf.len(), "slot {k}");
+            for (x, y) in fresh.iter().zip(&buf) {
+                assert_eq!(x.to_bits(), y.to_bits(), "slot {k}");
+            }
+            // The buffer's capacity is retained across slots (no per-slot
+            // allocation once it has grown to the high-water mark).
+            assert!(buf.capacity() >= buf.len());
         }
     }
 
@@ -246,7 +493,8 @@ mod tests {
         // occupancy alone contributes ~4–5% volume variance.
         for (kind, tol) in [(ArrivalKind::Poisson, 0.03), (ArrivalKind::bursty(), 0.15)] {
             let day = 20_000.0;
-            let mut g = ArrivalGen::new(kind, DiurnalProfile::typical(), 4.0, day, 7);
+            let mut g =
+                ArrivalGen::new(kind, DiurnalProfile::typical(), 4.0, day, 7).unwrap();
             let n = full_day(&mut g, day, 24).len() as f64;
             let expected = 4.0 * day;
             assert!(
@@ -257,9 +505,68 @@ mod tests {
     }
 
     #[test]
+    fn windowed_counts_match_daily_volume_and_diurnal_shape() {
+        // The aggregate mode is the same point process in the mean: a
+        // day's summed counts land on base_rate · day_s, and the per-hour
+        // counts track the diurnal shape.
+        let day = 20_000.0;
+        for (kind, tol) in [(ArrivalKind::Poisson, 0.03), (ArrivalKind::bursty(), 0.15)] {
+            let mut g =
+                ArrivalGen::new(kind, DiurnalProfile::typical(), 40.0, day, 5).unwrap();
+            let mut buf = Vec::new();
+            let slot = day / 24.0;
+            let mut hourly = [0u64; 24];
+            for k in 0..24 {
+                g.windowed_counts(k as f64 * slot, slot, 64, &mut buf);
+                for w in &buf {
+                    assert!(w.count > 0, "empty windows are skipped");
+                    assert!(w.t0 >= k as f64 * slot && w.t0 < (k + 1) as f64 * slot);
+                }
+                hourly[k] = buf.iter().map(|w| w.count).sum();
+            }
+            let n = hourly.iter().sum::<u64>() as f64;
+            let expected = 40.0 * day;
+            assert!(
+                (n - expected).abs() / expected < tol,
+                "{kind:?}: {n} counted vs expected {expected}"
+            );
+            assert!(
+                hourly[19] > hourly[3] * 2,
+                "{kind:?}: peak {} vs trough {}",
+                hourly[19],
+                hourly[3]
+            );
+        }
+    }
+
+    #[test]
+    fn windowed_counts_scale_sublinearly_with_users() {
+        // The point of the aggregate mode: the work is O(windows), so a
+        // 1000× larger user base draws (asymptotically) the same number
+        // of RNG values — pinned here by the count of emitted windows.
+        let mut small =
+            ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::flat(), 1e3, 3_600.0, 3)
+                .unwrap();
+        let mut large =
+            ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::flat(), 1e6, 3_600.0, 3)
+                .unwrap();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        small.windowed_counts(0.0, 150.0, 512, &mut a);
+        large.windowed_counts(0.0, 150.0, 512, &mut b);
+        assert!(a.len() <= 512 && b.len() <= 512);
+        let na: u64 = a.iter().map(|w| w.count).sum();
+        let nb: u64 = b.iter().map(|w| w.count).sum();
+        assert!((na as f64 - 1e3 * 150.0).abs() / (1e3 * 150.0) < 0.05, "small {na}");
+        assert!((nb as f64 - 1e6 * 150.0).abs() / (1e6 * 150.0) < 0.05, "large {nb}");
+    }
+
+    #[test]
     fn arrivals_sorted_within_window_and_follow_diurnal_shape() {
         let day = 8_640.0;
-        let mut g = ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::typical(), 10.0, day, 3);
+        let mut g =
+            ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::typical(), 10.0, day, 3)
+                .unwrap();
         let slot = day / 24.0;
         let mut counts = Vec::new();
         for k in 0..24 {
@@ -298,8 +605,9 @@ mod tests {
         // state-occupancy variance (~4% at ~200 dwells/day).
         let day = 50_000.0;
         let kind = ArrivalKind::bursty();
-        let mut coarse = ArrivalGen::new(kind, DiurnalProfile::flat(), 2.0, day, 11);
-        let mut fine = ArrivalGen::new(kind, DiurnalProfile::flat(), 2.0, day, 11);
+        let mut coarse =
+            ArrivalGen::new(kind, DiurnalProfile::flat(), 2.0, day, 11).unwrap();
+        let mut fine = ArrivalGen::new(kind, DiurnalProfile::flat(), 2.0, day, 11).unwrap();
         let a = full_day(&mut coarse, day, 5).len() as f64;
         let b = full_day(&mut fine, day, 50).len() as f64;
         assert!((a - b).abs() / a < 0.15, "coarse {a} vs fine {b}");

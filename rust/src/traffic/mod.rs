@@ -10,6 +10,17 @@
 //! checks every request's latency (queue wait + batched service) against
 //! its QoS class's deadline ([`slo`]).
 //!
+//! **Scale (DESIGN.md §10).**  The serving hot path runs in one of two
+//! modes per site.  Below [`TrafficConfig::exact_request_threshold`]
+//! expected requests per slot, arrivals are thinned individually into a
+//! reusable buffer and served per request — bit-identical to PR 3.  Above
+//! it, arrivals become per-window *counts* sampled from the integrated
+//! diurnal rate ([`arrivals::ArrivalWindow`]) and the queue serves
+//! request *groups* — O(windows + batches) per slot instead of
+//! O(requests), with latencies accounted in an O(1) log-bin histogram
+//! ([`crate::metrics::LatencyHistogram`]).  [`TrafficPath`] can force
+//! either mode for differential testing and benches.
+//!
 //! Closed loop: offered load rides on KPM reports and
 //! [`crate::frost::Observation`], so the `ContinuousMonitor` re-profiles
 //! on demand shifts and the SMO's water-filling weights per-site budget
@@ -18,18 +29,34 @@
 //!
 //! Determinism (§6 contract): arrival streams derive from
 //! `oran::fleet::site_seed`, serving draws no randomness, and all fleet
-//! merges stay in site-index order — same seed ⇒ bit-identical days for
-//! any worker-thread count.
+//! merges (including histogram merges) stay in site-index order — same
+//! seed ⇒ bit-identical days for any worker-thread count.
 
 pub mod arrivals;
+pub mod bench;
 pub mod queue;
 pub mod slo;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-pub use arrivals::{ArrivalGen, ArrivalKind, DiurnalProfile};
-pub use queue::{BatchCost, BatchFormer, Request, SlotUsage, TrafficServer};
+pub use arrivals::{ArrivalGen, ArrivalKind, ArrivalWindow, DiurnalProfile};
+pub use bench::run_traffic_bench_suite;
+pub use queue::{BatchCost, BatchFormer, SlotUsage, TrafficServer};
 pub use slo::{SloSpec, SloSummary};
+
+use crate::metrics::LatencyHistogram;
+
+/// Which serving path a site uses (DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficPath {
+    /// Per-site decision by expected requests per slot vs
+    /// [`TrafficConfig::exact_request_threshold`].
+    Auto,
+    /// Always the per-request exact path (PR 3 behaviour, bit-identical).
+    ForceExact,
+    /// Always the aggregated count path.
+    ForceAggregate,
+}
 
 /// Scenario knobs of a traffic-driven fleet day.
 #[derive(Debug, Clone)]
@@ -57,6 +84,14 @@ pub struct TrafficConfig {
     pub diurnal: DiurnalProfile,
     /// Per-QoS-class completion deadlines.
     pub slo: SloSpec,
+    /// A site whose expected requests per slot exceed this serve via the
+    /// aggregated count path; at or below it, the exact per-request path
+    /// (bit-identical to PR 3) runs.  The default keeps every historical
+    /// scenario — thousands of users per site — on the exact path.
+    pub exact_request_threshold: u64,
+    /// Force one serving path regardless of the threshold (differential
+    /// tests, benches).
+    pub path: TrafficPath,
 }
 
 impl Default for TrafficConfig {
@@ -73,9 +108,25 @@ impl Default for TrafficConfig {
             kind: ArrivalKind::Poisson,
             diurnal: DiurnalProfile::typical(),
             slo: SloSpec::default(),
+            exact_request_threshold: 100_000,
+            path: TrafficPath::Auto,
         }
     }
 }
+
+/// Per-site user-count heterogeneity cycle (mean 1.0): offered load
+/// differs per site so the SMO's load-weighted budget shares have
+/// something to weight.  Shared by [`TrafficConfig::site_users`] and the
+/// envelope check in [`TrafficConfig::validate`], so the two cannot
+/// drift.
+const SITE_USER_MULT: [f64; 4] = [1.0, 0.6, 1.4, 1.0];
+
+/// Sub-windows per deadline in the aggregated path: arrival times are
+/// quantised to at most `deadline / 16` (≈ 6% of the latency budget), so
+/// batching and drop decisions stay faithful to the exact path.
+const AGG_WINDOWS_PER_DEADLINE: f64 = 16.0;
+/// Ceiling on aggregation windows per slot (bounds the O(windows) walk).
+const AGG_MAX_WINDOWS_PER_SLOT: u32 = 65_536;
 
 impl TrafficConfig {
     /// A tiny preset for CI smoke runs (`frost traffic --smoke`).
@@ -105,7 +156,24 @@ impl TrafficConfig {
         anyhow::ensure!(self.slots_per_day >= 2, "need at least two slots per day");
         anyhow::ensure!(self.warmup_rounds >= 1, "need at least the training warm-up round");
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be at least 1");
-        self.slo.validate()
+        anyhow::ensure!(
+            self.exact_request_threshold >= 1,
+            "exact_request_threshold must be at least 1"
+        );
+        self.slo.validate()?;
+        // Everything `ArrivalGen::new` would reject must fail here too:
+        // `SiteTraffic` relies on a validated config never panicking at
+        // stream construction.  Rather than mirror its checks (and risk
+        // drift), probe-construct a stream at the worst-case site rate —
+        // the largest heterogeneity multiplier covers every site, and the
+        // probe also exercises the diurnal and MMPP invariants.
+        let max_site_mult = SITE_USER_MULT.iter().copied().fold(f64::MIN, f64::max);
+        let worst_rate = self.users_per_site as f64 * max_site_mult
+            * self.requests_per_user_per_day
+            / self.day_s;
+        ArrivalGen::new(self.kind, self.diurnal.clone(), worst_rate, self.day_s, 0)
+            .map(|_| ())
+            .context("invalid arrival configuration")
     }
 
     /// Virtual seconds one traffic slot covers.
@@ -119,8 +187,7 @@ impl TrafficConfig {
     /// cycle has mean 1.0, so `users_per_site` stays the fleet-wide mean
     /// (exactly so for fleets whose size is a multiple of the cycle).
     pub fn site_users(&self, site_index: usize) -> f64 {
-        const MULT: [f64; 4] = [1.0, 0.6, 1.4, 1.0];
-        self.users_per_site as f64 * MULT[site_index % MULT.len()]
+        self.users_per_site as f64 * SITE_USER_MULT[site_index % SITE_USER_MULT.len()]
     }
 
     /// Daily-mean request rate of site `i` (requests/s).
@@ -128,9 +195,112 @@ impl TrafficConfig {
         self.site_users(site_index) * self.requests_per_user_per_day / self.day_s
     }
 
+    /// Whether site `i` serves via the aggregated count path: forced by
+    /// [`TrafficConfig::path`], else decided once per scenario by its
+    /// expected (daily-mean) requests per slot vs the threshold — a site
+    /// never switches paths mid-day, so each day is one bit-deterministic
+    /// regime.
+    pub fn aggregate_for_site(&self, site_index: usize) -> bool {
+        match self.path {
+            TrafficPath::ForceExact => false,
+            TrafficPath::ForceAggregate => true,
+            TrafficPath::Auto => {
+                self.site_base_rate(site_index) * self.slot_s()
+                    > self.exact_request_threshold as f64
+            }
+        }
+    }
+
+    /// Aggregation windows per slot for a QoS deadline: fine enough that
+    /// the arrival-time quantisation is a small fraction of the latency
+    /// budget, capped so the per-slot walk stays bounded.
+    pub fn agg_windows(&self, deadline_s: f64) -> u32 {
+        let window_s = deadline_s / AGG_WINDOWS_PER_DEADLINE;
+        let n = (self.slot_s() / window_s).ceil();
+        if n < 1.0 {
+            1
+        } else if n >= AGG_MAX_WINDOWS_PER_SLOT as f64 {
+            AGG_MAX_WINDOWS_PER_SLOT
+        } else {
+            n as u32
+        }
+    }
+
     /// Fleet rounds that cover warm-up plus exactly one traffic day.
     pub fn rounds_for_one_day(&self) -> u32 {
         self.warmup_rounds + self.slots_per_day
+    }
+}
+
+/// Reusable per-slot arrival buffers plus the one shared recipe for
+/// turning a generator into queued work: pick the serving mode, generate
+/// into the right buffer (capacity retained — steady-state slots allocate
+/// nothing), and enqueue with the class deadline.  One definition used by
+/// both `oran::fleet::SiteTraffic` and the traffic bench harness, so the
+/// bench can never measure a different path than the fleet runs.
+#[derive(Debug, Default)]
+pub struct ArrivalBuffers {
+    /// Exact-path arrival times of the current slot.
+    pub times: Vec<f64>,
+    /// Aggregated-path count windows of the current slot.
+    pub windows: Vec<ArrivalWindow>,
+}
+
+impl ArrivalBuffers {
+    pub fn new() -> ArrivalBuffers {
+        ArrivalBuffers::default()
+    }
+
+    /// Generate the slot `[t0, t0 + dur)` in the chosen mode and enqueue
+    /// every arrival (deadline = arrival + `deadline_s`); returns the
+    /// offered request count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_and_enqueue(
+        &mut self,
+        gen: &mut ArrivalGen,
+        server: &mut TrafficServer,
+        aggregated: bool,
+        agg_windows: u32,
+        t0: f64,
+        dur: f64,
+        deadline_s: f64,
+    ) -> u64 {
+        if aggregated {
+            gen.windowed_counts(t0, dur, agg_windows, &mut self.windows);
+            let mut offered = 0u64;
+            for w in &self.windows {
+                server.enqueue_group(w.t0, w.t0 + deadline_s, w.count);
+                offered += w.count;
+            }
+            offered
+        } else {
+            gen.slot_into(t0, dur, &mut self.times);
+            for &a in &self.times {
+                server.enqueue(a, a + deadline_s);
+            }
+            self.times.len() as u64
+        }
+    }
+}
+
+/// Latency sink of one serving call: always feeds the O(1) histogram;
+/// the exact path additionally appends per-request samples (the
+/// determinism and conservation pins in `tests/traffic.rs` read them —
+/// the aggregated path skips the `Vec`, which is the whole point at 10⁶
+/// users; reports and tables read the histogram on both paths).
+pub struct SlotLatencies<'a> {
+    pub exact: Option<&'a mut Vec<f64>>,
+    pub hist: &'a mut LatencyHistogram,
+}
+
+impl SlotLatencies<'_> {
+    pub fn record(&mut self, latency: f64, n: u64) {
+        self.hist.record_n(latency, n);
+        if let Some(v) = self.exact.as_mut() {
+            for _ in 0..n {
+                v.push(latency);
+            }
+        }
     }
 }
 
@@ -194,5 +364,82 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = TrafficConfig { max_batch: 0, ..TrafficConfig::default() };
         assert!(bad.validate().is_err());
+        let bad = TrafficConfig { exact_request_threshold: 0, ..TrafficConfig::default() };
+        assert!(bad.validate().is_err());
+        // Everything ArrivalGen::new rejects must fail validate() too —
+        // SiteTraffic construction relies on it (no panic paths).
+        let bad = TrafficConfig {
+            kind: ArrivalKind::Mmpp { calm_mult: 0.0, burst_mult: 1.4, mean_dwell_s: 40.0 },
+            ..TrafficConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = TrafficConfig {
+            kind: ArrivalKind::Mmpp { calm_mult: 0.6, burst_mult: 1.4, mean_dwell_s: 0.0 },
+            ..TrafficConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = TrafficConfig {
+            users_per_site: u64::MAX,
+            requests_per_user_per_day: 1e300,
+            ..TrafficConfig::default()
+        };
+        assert!(bad.validate().is_err(), "overflowing envelope must be rejected");
+    }
+
+    #[test]
+    fn path_selection_follows_threshold_and_forcing() {
+        // Default scenario: 5k users ⇒ ~8.3k requests/slot ⇒ exact.
+        let c = TrafficConfig::default();
+        for i in 0..4 {
+            assert!(!c.aggregate_for_site(i), "site {i}");
+        }
+        // A million users per site crosses the default threshold.
+        let big = TrafficConfig { users_per_site: 1_000_000, ..TrafficConfig::default() };
+        for i in 0..4 {
+            assert!(big.aggregate_for_site(i), "site {i}");
+        }
+        // A lowered threshold flips the small scenario per site: the 0.6×
+        // heterogeneity site can stay exact while the 1.4× one aggregates.
+        let mid = TrafficConfig {
+            exact_request_threshold: 8_000,
+            ..TrafficConfig::default()
+        };
+        assert!(mid.aggregate_for_site(0), "8333 > 8000");
+        assert!(!mid.aggregate_for_site(1), "5000 < 8000");
+        assert!(mid.aggregate_for_site(2), "11667 > 8000");
+        // Forcing overrides the threshold both ways.
+        let forced = TrafficConfig { path: TrafficPath::ForceAggregate, ..mid.clone() };
+        assert!(forced.aggregate_for_site(1));
+        let forced = TrafficConfig { path: TrafficPath::ForceExact, ..mid };
+        assert!(!forced.aggregate_for_site(2));
+    }
+
+    #[test]
+    fn agg_windows_track_deadline_and_stay_bounded() {
+        let c = TrafficConfig::default(); // slot 150 s
+        // 80 ms deadline: 5 ms quantisation → 30k windows, within cap.
+        assert_eq!(c.agg_windows(0.08), 30_000);
+        // 2 s deadline: 125 ms quantisation → 1200 windows.
+        assert_eq!(c.agg_windows(2.0), 1_200);
+        // A microscopic deadline saturates at the ceiling, not beyond.
+        assert_eq!(c.agg_windows(1e-6), 65_536);
+        // A deadline longer than the slot still yields one window.
+        assert_eq!(c.agg_windows(1e9), 1);
+    }
+
+    #[test]
+    fn slot_latencies_feed_hist_and_optionally_vec() {
+        let mut hist = LatencyHistogram::new();
+        let mut vec = Vec::new();
+        let mut lat = SlotLatencies { exact: Some(&mut vec), hist: &mut hist };
+        lat.record(0.05, 3);
+        lat.record(0.1, 1);
+        assert_eq!(vec, vec![0.05, 0.05, 0.05, 0.1]);
+        assert_eq!(hist.count(), 4);
+        let mut hist2 = LatencyHistogram::new();
+        let mut lat = SlotLatencies { exact: None, hist: &mut hist2 };
+        lat.record(0.05, 3);
+        lat.record(0.1, 1);
+        assert_eq!(hist2, hist, "histogram identical with or without the vec");
     }
 }

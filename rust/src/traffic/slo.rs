@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use crate::frost::QosClass;
-use crate::metrics::percentile;
+use crate::metrics::{percentile, LatencyHistogram};
 
 /// Completion deadlines per QoS class (seconds of traffic time).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,7 +79,12 @@ pub struct SloSummary {
 
 impl SloSummary {
     /// Roll a class's counters and latency sample up into a summary.
-    /// Sorts `latencies` in place (nearest-rank percentiles need order).
+    /// Sorts `latencies` in place (nearest-rank percentiles need order)
+    /// with `f64::total_cmp`, so a NaN sample — which serving never
+    /// produces, but a mid-round panic is never the right failure mode —
+    /// sorts to the top instead of aborting, and the rank convention is
+    /// exactly the shared `metrics::percentile` one the bench harness
+    /// uses.
     pub fn from_latencies(
         qos: QosClass,
         deadline_s: f64,
@@ -89,7 +94,7 @@ impl SloSummary {
         late: u64,
         latencies: &mut [f64],
     ) -> SloSummary {
-        latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        latencies.sort_by(|a, b| a.total_cmp(b));
         let on_time = served.saturating_sub(late);
         SloSummary {
             qos,
@@ -105,8 +110,42 @@ impl SloSummary {
         }
     }
 
+    /// [`Self::from_latencies`] from the O(1) log-bin histogram
+    /// (DESIGN.md §10): p50/p95/p99 come from a nearest-rank bin walk, so
+    /// the roll-up costs O(bins) per round instead of O(n log n) — the
+    /// path every fleet-scale report takes.  Histogram percentiles read
+    /// the lower edge of the selected bin (≤ 3.2% below the exact order
+    /// statistic; see `metrics::hist`).
+    pub fn from_histogram(
+        qos: QosClass,
+        deadline_s: f64,
+        offered: u64,
+        served: u64,
+        dropped: u64,
+        late: u64,
+        hist: &LatencyHistogram,
+    ) -> SloSummary {
+        let on_time = served.saturating_sub(late);
+        SloSummary {
+            qos,
+            deadline_s,
+            offered,
+            served,
+            dropped,
+            late,
+            p50_s: hist.percentile(0.50),
+            p95_s: hist.percentile(0.95),
+            p99_s: hist.percentile(0.99),
+            attainment: if offered > 0 { on_time as f64 / offered as f64 } else { 1.0 },
+        }
+    }
+
     /// True when the class met its SLO outright: no drops and p99 within
-    /// the deadline.
+    /// the deadline.  When the summary comes from the histogram
+    /// ([`Self::from_histogram`]), p99 is the selected bin's lower edge,
+    /// so the gate is optimistic by at most one bin (≤ 3.2% — the
+    /// sketch's measurement resolution, same as production HDR-histogram
+    /// SLO monitors).
     pub fn met(&self) -> bool {
         self.dropped == 0 && self.p99_s <= self.deadline_s
     }
@@ -149,5 +188,38 @@ mod tests {
         assert!(s.met());
         assert_eq!(s.attainment, 1.0);
         assert_eq!(s.p99_s, 0.0);
+    }
+
+    #[test]
+    fn nan_latency_cannot_panic_the_rollup() {
+        // Regression: the old partial_cmp().expect() aborted the round on
+        // the first NaN.  total_cmp sorts NaN last; counters and the
+        // finite percentiles stay usable.
+        let mut lat = vec![0.02, f64::NAN, 0.01, 0.03];
+        let s = SloSummary::from_latencies(QosClass::Balanced, 0.4, 4, 4, 0, 0, &mut lat);
+        assert_eq!(s.served, 4);
+        assert!((s.p50_s - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_rollup_matches_vector_rollup_within_one_bin() {
+        let mut lat: Vec<f64> = (1..=200).map(|i| i as f64 * 1e-3).collect();
+        let mut hist = LatencyHistogram::new();
+        for &x in &lat {
+            hist.record(x);
+        }
+        let h = SloSummary::from_histogram(QosClass::Balanced, 0.19, 210, 200, 10, 12, &hist);
+        let v = SloSummary::from_latencies(QosClass::Balanced, 0.19, 210, 200, 10, 12, &mut lat);
+        assert_eq!(h.attainment, v.attainment);
+        assert_eq!((h.offered, h.served, h.dropped, h.late), (210, 200, 10, 12));
+        for (a, b) in [(h.p50_s, v.p50_s), (h.p95_s, v.p95_s), (h.p99_s, v.p99_s)] {
+            assert!(a <= b && (b - a) / b < 1.0 / 32.0 + 1e-12, "hist {a} vs exact {b}");
+        }
+        // Empty histogram mirrors the empty-vector convention.
+        let empty = LatencyHistogram::new();
+        let s = SloSummary::from_histogram(QosClass::EnergySaver, 2.0, 0, 0, 0, 0, &empty);
+        assert!(s.met());
+        assert_eq!(s.p99_s, 0.0);
+        assert_eq!(s.attainment, 1.0);
     }
 }

@@ -8,10 +8,12 @@
 use frost::config::{setup_no1, setup_no2, GpuSpec};
 use frost::frost::fit::fit_response;
 use frost::frost::{nelder_mead, EdpCriterion, NelderMeadOptions};
+use frost::metrics::{percentile, LatencyHistogram};
 use frost::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
 use frost::simulator::{ExecutionModel, WorkloadDescriptor};
 use frost::telemetry::hub::{PowerReading, TelemetryHub};
 use frost::telemetry::rapl::{RaplDomain, RaplMsr};
+use frost::traffic::{BatchCost, BatchFormer, SlotWindow, TrafficServer};
 use frost::util::{Json, Pcg32, Seconds, Watts};
 
 const CASES: usize = 256;
@@ -309,6 +311,96 @@ fn prop_rapl_counter_tracks_energy_through_wraparound() {
             rel < 0.05,
             "case {case}: measured {measured_j} vs true {true_j} (rel {rel})"
         );
+    }
+}
+
+#[test]
+fn prop_aggregated_queue_matches_exact_per_request_path() {
+    // DESIGN.md §10 differential: given the same arrival multiset —
+    // random window times with random counts — the aggregated queue path
+    // (one group per window) and the exact per-request path (count-1
+    // groups) must produce IDENTICAL served/dropped/late totals, batch
+    // counts and sizes, busy energy, and queue state, across random
+    // seeds, deadlines, batch ceilings, and slot splits.  Latency
+    // percentiles agree within one histogram bin of the exact sorted
+    // order statistic.
+    let mut rng = Pcg32::seeded(11);
+    for case in 0..96 {
+        let n_windows = 1 + rng.below(30) as usize;
+        let window_s = rng.uniform(0.005, 0.4);
+        let deadline_s = rng.uniform(0.05, 2.0);
+        let max_batch = 1 + rng.below(64);
+        let max_wait_s = rng.uniform(0.01, 0.4);
+        let service_base = rng.uniform(1e-3, 2e-2);
+        let service_per = rng.uniform(1e-5, 5e-4);
+        let former = BatchFormer { max_batch, slack_mult: 1.5, max_wait_s };
+        let service = |b: u32| BatchCost {
+            service_s: service_base + b as f64 * service_per,
+            gpu_power_w: 200.0,
+            cpu_power_w: 40.0,
+            dram_power_w: 10.0,
+        };
+        // Random (sorted) windows, some empty, counts up to ~3 batches.
+        let mut windows: Vec<(f64, u64)> = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..n_windows {
+            t += rng.uniform(0.0, 2.0 * window_s);
+            windows.push((t, rng.below(3 * max_batch) as u64));
+        }
+        let horizon = t + deadline_s + 1.0;
+        // Serve in two slots (exercises carry-over), then flush.
+        let split = rng.uniform(0.2, 0.8) * horizon;
+
+        let mut exact = TrafficServer::new();
+        let mut agg = TrafficServer::new();
+        for &(w, n) in &windows {
+            for _ in 0..n {
+                exact.enqueue(w, w + deadline_s);
+            }
+            agg.enqueue_group(w, w + deadline_s, n);
+        }
+        let mut exact_lat: Vec<f64> = Vec::new();
+        let mut exact_hist = LatencyHistogram::new();
+        let mut agg_hist = LatencyHistogram::new();
+        let windows2 = [
+            SlotWindow { t0: 0.0, dur: split, slot_in_day: 0, flush: false },
+            SlotWindow { t0: split, dur: horizon - split, slot_in_day: 1, flush: true },
+        ];
+        for w in windows2 {
+            let ue = exact.run_slot(w, &former, service, |l, n| {
+                for _ in 0..n {
+                    exact_lat.push(l);
+                }
+                exact_hist.record_n(l, n);
+            });
+            let ua = agg.run_slot(w, &former, service, |l, n| agg_hist.record_n(l, n));
+            assert_eq!(ue, ua, "case {case}: slot usage diverged");
+        }
+        assert_eq!(
+            (exact.served, exact.dropped, exact.late, exact.batches, exact.batch_samples),
+            (agg.served, agg.dropped, agg.late, agg.batches, agg.batch_samples),
+            "case {case}"
+        );
+        assert_eq!(exact.queue_len(), 0, "case {case}: flush must drain");
+        assert_eq!(agg.queue_len(), 0, "case {case}");
+        assert_eq!(exact.t_free.to_bits(), agg.t_free.to_bits(), "case {case}");
+        // Same latencies → bit-identical histograms; and the histogram
+        // percentile sits within one bin below the exact order statistic.
+        assert_eq!(exact_hist, agg_hist, "case {case}");
+        exact_lat.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.95, 0.99] {
+            let e = percentile(&exact_lat, q);
+            let h = agg_hist.percentile(q);
+            if exact_lat.is_empty() {
+                assert_eq!(h, 0.0, "case {case}");
+                continue;
+            }
+            assert!(h <= e + 1e-15, "case {case} q={q}: hist {h} > exact {e}");
+            assert!(
+                (e - h) / e <= 1.0 / 32.0 + 1e-12,
+                "case {case} q={q}: hist {h} more than one bin below exact {e}"
+            );
+        }
     }
 }
 
