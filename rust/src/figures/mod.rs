@@ -18,6 +18,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fleet;
+pub mod scenario;
 pub mod traffic;
 
 pub use fig2::{fig2_investigation, Fig2Output};
@@ -27,4 +28,5 @@ pub use fig4::fig4_power_capping;
 pub use fig5::{fig5_fine_grained, Fig5Output};
 pub use fig6::{fig6_tradeoff, Fig6Output};
 pub use fleet::{fleet_comparison, FleetFigOutput};
+pub use scenario::{scenario_comparison, PhaseSummary, ScenarioFigOutput};
 pub use traffic::{traffic_comparison, TrafficFigOutput, QOS_CLASSES};

@@ -1,0 +1,338 @@
+//! Scenario roll-up: FROST vs stock caps over the same scripted
+//! operational day (DESIGN.md §11).
+//!
+//! Both fleets run the identical seed, hardware mix, arrival streams
+//! *and event script* — outages, flash crowds and derates hit the
+//! baseline too (they are physical/world events); only budget steps are
+//! FROST-side, since a stock-cap fleet enforces no budget.  The report
+//! slices the day by the scenario's **phases** (per-phase energy, SLO
+//! attainment and the latency_critical p99 from the per-phase
+//! histograms) and carries the per-event ledger plus the budget
+//! conservation audit: the maximum, over every round with the water-fill
+//! in force, of Σ applied-cap watts minus the scripted budget — ≤ 0
+//! means the fleet never exceeded the budget in any round, including
+//! budget-step, churn and recovery rounds.
+
+use anyhow::{Context, Result};
+
+use crate::frost::QosClass;
+use crate::metrics::LatencyHistogram;
+use crate::oran::{FiredEvent, Fleet, FleetConfig, FleetReport};
+use crate::scenario::Scenario;
+use crate::traffic::{SloSummary, TrafficConfig};
+use crate::util::Series;
+
+use super::traffic::class_day_rollup;
+
+/// One phase of the scripted day, compared across the two fleets.
+#[derive(Debug, Clone)]
+pub struct PhaseSummary {
+    pub name: String,
+    pub from_slot: u32,
+    pub to_slot: u32,
+    /// True when a scripted outage overlaps this phase (the latency
+    /// acceptance gate exempts outage windows).
+    pub outage: bool,
+    /// FROST-run request counters over the phase's slots.
+    pub offered: u64,
+    pub served: u64,
+    pub dropped: u64,
+    pub late: u64,
+    pub frost_energy_j: f64,
+    pub base_energy_j: f64,
+    /// 1 − FROST/baseline over this phase.
+    pub saving_frac: f64,
+    /// latency_critical p99 within the phase (per-phase histograms).
+    pub frost_lc_p99_s: f64,
+    pub base_lc_p99_s: f64,
+    pub frost_attainment: f64,
+    pub base_attainment: f64,
+}
+
+/// Output of [`scenario_comparison`].
+#[derive(Debug, Clone)]
+pub struct ScenarioFigOutput {
+    /// One row per scenario phase (energy both ways, LC p99, attainment).
+    pub phase_table: Series,
+    /// One row per QoS class over the whole day (same shape as the
+    /// traffic harness's class table).
+    pub class_table: Series,
+    pub phases: Vec<PhaseSummary>,
+    pub frost_slo: Vec<SloSummary>,
+    pub base_slo: Vec<SloSummary>,
+    pub frost_day_energy_j: f64,
+    pub base_day_energy_j: f64,
+    pub day_saving_frac: f64,
+    /// Every fired event of the FROST run, in dispatch order (the
+    /// baseline fires the identical script).
+    pub event_log: Vec<FiredEvent>,
+    /// max over audited rounds of (Σ applied-cap watts − budget watts);
+    /// ≤ 0 ⇔ the budget was conserved in every round it was in force.
+    pub max_cap_excess_w: f64,
+    /// Rounds the conservation audit covered (water-fill in force).
+    pub budget_audited_rounds: usize,
+    pub frost: FleetReport,
+    pub baseline: FleetReport,
+}
+
+/// Per-class and per-phase aggregates of one fleet's scripted day.
+struct DayCollect {
+    day_energy_j: f64,
+    slo: Vec<SloSummary>,
+    phase_energy_j: Vec<f64>,
+    /// offered/served/dropped/late per phase.
+    phase_counts: Vec<(u64, u64, u64, u64)>,
+    /// latency_critical per-phase histograms, merged in site order.
+    lc_phase: Vec<LatencyHistogram>,
+}
+
+fn collect(fleet: &Fleet, scen: &Scenario, tr: &TrafficConfig) -> DayCollect {
+    let n_phases = scen.phases.len();
+    let mut phase_energy_j = vec![0.0; n_phases];
+    let mut phase_counts = vec![(0u64, 0u64, 0u64, 0u64); n_phases];
+    let mut lc_phase: Vec<LatencyHistogram> =
+        (0..n_phases).map(|_| LatencyHistogram::new()).collect();
+    let mut day_energy_j = 0.0;
+    // Phase-sliced aggregates, in site-index order (§6); the per-class
+    // day roll-up is the shared `class_day_rollup` the traffic harness
+    // uses, so the two reports cannot drift.
+    for site in &fleet.sites {
+        let t = site.traffic.as_ref().expect("scenario fleets are traffic-driven");
+        if site.qos == QosClass::LatencyCritical {
+            for (p, h) in t.phase_hists.iter().enumerate() {
+                lc_phase[p].merge(h);
+            }
+        }
+        for s in &t.slot_log {
+            let p = scen.phase_of_slot(s.slot_in_day);
+            phase_energy_j[p] += s.energy_j;
+            let pc = &mut phase_counts[p];
+            pc.0 += s.offered;
+            pc.1 += s.served;
+            pc.2 += s.dropped;
+            pc.3 += s.late;
+        }
+        day_energy_j += t.day_energy_j;
+    }
+    let slo = class_day_rollup(fleet, &tr.slo);
+    DayCollect { day_energy_j, slo, phase_energy_j, phase_counts, lc_phase }
+}
+
+fn saving(frost_j: f64, base_j: f64) -> f64 {
+    if base_j > 0.0 {
+        1.0 - frost_j / base_j
+    } else {
+        0.0
+    }
+}
+
+fn attainment((offered, served, _dropped, late): (u64, u64, u64, u64)) -> f64 {
+    if offered > 0 {
+        served.saturating_sub(late) as f64 / offered as f64
+    } else {
+        1.0
+    }
+}
+
+/// Run the same scripted day twice — FROST on, then stock caps — and
+/// compare per-phase energy, latency and attainment.  `config.traffic`
+/// and `config.scenario` must both be set; `frost_enabled` is overridden
+/// per run (the baseline also drops budget enforcement, but experiences
+/// the identical outage/surge/derate script).
+pub fn scenario_comparison(config: &FleetConfig) -> Result<ScenarioFigOutput> {
+    let tr = config
+        .traffic
+        .clone()
+        .context("scenario_comparison needs FleetConfig::traffic set")?;
+    let scen = config
+        .scenario
+        .clone()
+        .context("scenario_comparison needs FleetConfig::scenario set")?;
+    let mut frost_cfg = config.clone();
+    frost_cfg.frost_enabled = true;
+    let mut base_cfg = config.clone();
+    base_cfg.frost_enabled = false;
+    base_cfg.budget_frac = 1.0;
+
+    // Drive the FROST run round by round so the budget conservation
+    // invariant can be audited *every* round the water-fill is in force
+    // (budget steps, outage/recovery and churn rounds included).
+    let mut frost_fleet = Fleet::new(frost_cfg)?;
+    let mut max_cap_excess_w = f64::NEG_INFINITY;
+    let mut audited = 0usize;
+    for _ in 0..config.rounds {
+        frost_fleet.run_round()?;
+        let rep = frost_fleet.report();
+        if rep.budget_enforced {
+            if let Some(budget_w) = rep.budget_w {
+                audited += 1;
+                max_cap_excess_w = max_cap_excess_w.max(rep.cap_power_w - budget_w);
+            }
+        }
+    }
+    let frost_report = frost_fleet.report();
+    let mut base_fleet = Fleet::new(base_cfg)?;
+    let base_report = base_fleet.run()?;
+
+    let f = collect(&frost_fleet, &scen, &tr);
+    let b = collect(&base_fleet, &scen, &tr);
+
+    let mut phases = Vec::with_capacity(scen.phases.len());
+    let mut phase_table = Series::new(
+        format!("Scenario '{}': {} sites, seed {}", scen.name, config.sites, config.seed),
+        &[
+            "slots",
+            "offered",
+            "base_kj",
+            "frost_kj",
+            "saving_pct",
+            "frost_lc_p99_ms",
+            "base_lc_p99_ms",
+            "frost_attain_pct",
+            "base_attain_pct",
+            "frost_dropped",
+        ],
+    );
+    for (p, phase) in scen.phases.iter().enumerate() {
+        let (offered, served, dropped, late) = f.phase_counts[p];
+        let summary = PhaseSummary {
+            name: phase.name.clone(),
+            from_slot: phase.from_slot,
+            to_slot: phase.to_slot,
+            outage: scen.phase_has_outage(p, &tr),
+            offered,
+            served,
+            dropped,
+            late,
+            frost_energy_j: f.phase_energy_j[p],
+            base_energy_j: b.phase_energy_j[p],
+            saving_frac: saving(f.phase_energy_j[p], b.phase_energy_j[p]),
+            frost_lc_p99_s: f.lc_phase[p].percentile(0.99),
+            base_lc_p99_s: b.lc_phase[p].percentile(0.99),
+            frost_attainment: attainment(f.phase_counts[p]),
+            base_attainment: attainment(b.phase_counts[p]),
+        };
+        phase_table.push(phase.name.clone(), vec![
+            (phase.to_slot - phase.from_slot) as f64,
+            summary.offered as f64,
+            summary.base_energy_j / 1e3,
+            summary.frost_energy_j / 1e3,
+            summary.saving_frac * 100.0,
+            summary.frost_lc_p99_s * 1e3,
+            summary.base_lc_p99_s * 1e3,
+            summary.frost_attainment * 100.0,
+            summary.base_attainment * 100.0,
+            summary.dropped as f64,
+        ]);
+        phases.push(summary);
+    }
+
+    let mut class_table = Series::new(
+        "Scripted-day SLO per QoS class",
+        &[
+            "deadline_ms",
+            "frost_p50_ms",
+            "frost_p95_ms",
+            "frost_p99_ms",
+            "base_p99_ms",
+            "frost_attain_pct",
+            "base_attain_pct",
+            "frost_dropped",
+            "frost_late",
+        ],
+    );
+    for (fs, bs) in f.slo.iter().zip(&b.slo) {
+        class_table.push(fs.qos.as_str(), vec![
+            fs.deadline_s * 1e3,
+            fs.p50_s * 1e3,
+            fs.p95_s * 1e3,
+            fs.p99_s * 1e3,
+            bs.p99_s * 1e3,
+            fs.attainment * 100.0,
+            bs.attainment * 100.0,
+            fs.dropped as f64,
+            fs.late as f64,
+        ]);
+    }
+
+    Ok(ScenarioFigOutput {
+        phase_table,
+        class_table,
+        phases,
+        frost_slo: f.slo,
+        base_slo: b.slo,
+        frost_day_energy_j: f.day_energy_j,
+        base_day_energy_j: b.day_energy_j,
+        day_saving_frac: saving(f.day_energy_j, b.day_energy_j),
+        event_log: frost_fleet.event_log.clone(),
+        max_cap_excess_w: if audited > 0 { max_cap_excess_w } else { 0.0 },
+        budget_audited_rounds: audited,
+        frost: frost_report,
+        baseline: base_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    fn smoke_config(preset: &str) -> FleetConfig {
+        let tr = TrafficConfig {
+            users_per_site: 300,
+            requests_per_user_per_day: 30.0,
+            day_s: 900.0,
+            slots_per_day: 6,
+            warmup_rounds: 3,
+            max_batch: 32,
+            ..TrafficConfig::default()
+        };
+        let scen = Scenario::preset(preset, 4, &tr).expect("preset builds");
+        FleetConfig {
+            sites: 4,
+            seed: 9,
+            rounds: tr.rounds_for_one_day(),
+            train_epochs: 40,
+            samples_per_epoch: 5_000,
+            max_concurrent_profiles: 4,
+            budget_frac: if preset == "grid-step" { 0.9 } else { 1.0 },
+            traffic: Some(tr),
+            scenario: Some(scen),
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn scenario_comparison_reports_phases_events_and_saving() {
+        let out = scenario_comparison(&smoke_config("outage-day")).unwrap();
+        assert_eq!(out.phases.len(), 3);
+        assert_eq!(out.phase_table.len(), 3);
+        assert_eq!(out.class_table.len(), 3);
+        assert_eq!(out.event_log.len(), 2, "outage + recovery fired");
+        assert!(out.phases[1].outage && !out.phases[0].outage && !out.phases[2].outage);
+        assert!(out.base_day_energy_j > 0.0 && out.frost_day_energy_j > 0.0);
+        assert!(
+            out.frost_day_energy_j < out.base_day_energy_j,
+            "FROST day {} must undercut baseline {}",
+            out.frost_day_energy_j,
+            out.base_day_energy_j
+        );
+        // Conservation: offered = served + dropped per class (the day
+        // flushes; outage sheds count as drops).
+        for s in &out.frost_slo {
+            assert_eq!(s.offered, s.served + s.dropped, "{:?}", s.qos);
+            assert_eq!(s.non_finite, 0, "{:?}", s.qos);
+        }
+        // The baseline never profiles.
+        assert_eq!(out.baseline.fleet_profiling_energy_j, 0.0);
+    }
+
+    #[test]
+    fn scenario_comparison_requires_traffic_and_scenario() {
+        let config = FleetConfig { sites: 2, ..FleetConfig::default() };
+        assert!(scenario_comparison(&config).is_err());
+        let mut config = smoke_config("outage-day");
+        config.scenario = None;
+        assert!(scenario_comparison(&config).is_err());
+    }
+}

@@ -64,38 +64,29 @@ struct DayCollect {
     load_shifts: u64,
 }
 
-fn collect_day(fleet: &Fleet, slots_per_day: u32, slo: &SloSpec) -> DayCollect {
-    let n_slots = slots_per_day as usize;
-    let mut slot_energy_j = vec![0.0; n_slots];
-    let mut slot_offered = vec![0u64; n_slots];
-    let mut day_energy_j = 0.0;
-    let mut reprofiles = 0;
-    let mut load_shifts = 0;
+/// Per-QoS-class day roll-up shared by the traffic and scenario
+/// harnesses (DESIGN.md §9/§11): merge every site's day histogram and
+/// slot counters in site-index order (the §6 determinism contract) into
+/// one [`SloSummary`] per [`QOS_CLASSES`] entry.  Latencies merge as
+/// O(1) histograms (DESIGN.md §10) — no per-request vector is ever
+/// concatenated or sorted, so the roll-up cost is independent of the
+/// user count.
+pub(crate) fn class_day_rollup(fleet: &Fleet, slo: &SloSpec) -> Vec<SloSummary> {
     let mut hists: Vec<LatencyHistogram> =
         (0..QOS_CLASSES.len()).map(|_| LatencyHistogram::new()).collect();
     let mut counts = [(0u64, 0u64, 0u64, 0u64); 3]; // offered/served/dropped/late
-    // Site-index order everywhere: the aggregation itself is part of the
-    // §6 determinism contract.  Latencies merge as O(1) histograms
-    // (DESIGN.md §10) — no per-request vector is ever concatenated or
-    // sorted, so the roll-up cost is independent of the user count.
     for site in &fleet.sites {
         let t = site.traffic.as_ref().expect("traffic-driven fleet");
         let class = QOS_CLASSES.iter().position(|c| *c == site.qos).expect("known class");
         hists[class].merge(&t.hist);
         for s in &t.slot_log {
-            let k = (s.slot_in_day as usize).min(n_slots - 1);
-            slot_energy_j[k] += s.energy_j;
-            slot_offered[k] += s.offered;
             counts[class].0 += s.offered;
             counts[class].1 += s.served;
             counts[class].2 += s.dropped;
             counts[class].3 += s.late;
         }
-        day_energy_j += t.day_energy_j;
-        reprofiles += t.reprofile_requests;
-        load_shifts += t.load_shift_reprofiles();
     }
-    let slo = QOS_CLASSES
+    QOS_CLASSES
         .iter()
         .zip(hists.iter())
         .zip(counts.iter())
@@ -110,7 +101,30 @@ fn collect_day(fleet: &Fleet, slots_per_day: u32, slo: &SloSpec) -> DayCollect {
                 hist,
             )
         })
-        .collect();
+        .collect()
+}
+
+fn collect_day(fleet: &Fleet, slots_per_day: u32, slo: &SloSpec) -> DayCollect {
+    let n_slots = slots_per_day as usize;
+    let mut slot_energy_j = vec![0.0; n_slots];
+    let mut slot_offered = vec![0u64; n_slots];
+    let mut day_energy_j = 0.0;
+    let mut reprofiles = 0;
+    let mut load_shifts = 0;
+    // Site-index order everywhere: the aggregation itself is part of the
+    // §6 determinism contract.
+    for site in &fleet.sites {
+        let t = site.traffic.as_ref().expect("traffic-driven fleet");
+        for s in &t.slot_log {
+            let k = (s.slot_in_day as usize).min(n_slots - 1);
+            slot_energy_j[k] += s.energy_j;
+            slot_offered[k] += s.offered;
+        }
+        day_energy_j += t.day_energy_j;
+        reprofiles += t.reprofile_requests;
+        load_shifts += t.load_shift_reprofiles();
+    }
+    let slo = class_day_rollup(fleet, slo);
     DayCollect { day_energy_j, slot_energy_j, slot_offered, slo, reprofiles, load_shifts }
 }
 

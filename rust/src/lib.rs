@@ -33,6 +33,7 @@ pub mod pipeline;
 pub mod power;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod simulator;
 pub mod telemetry;
 pub mod traffic;

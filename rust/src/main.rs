@@ -23,10 +23,12 @@ use frost::oran::MlLifecycle;
 use frost::simulator::Testbed;
 use frost::zoo::{all_models, model_by_name};
 
-/// Minimal flag parser: `--key value` pairs + positional subcommand.
+/// Minimal flag parser: `--key value` pairs + positional subcommand
+/// (plus trailing positionals, e.g. `frost scenario outage-day`).
 struct Args {
     cmd: String,
     flags: HashMap<String, String>,
+    positional: Vec<String>,
 }
 
 impl Args {
@@ -37,6 +39,7 @@ impl Args {
     fn parse_from(mut it: impl Iterator<Item = String>) -> Args {
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = HashMap::new();
+        let mut positional = Vec::new();
         let mut key: Option<String> = None;
         for arg in it {
             if let Some(k) = arg.strip_prefix("--") {
@@ -46,16 +49,22 @@ impl Args {
                 key = Some(k.to_string());
             } else if let Some(k) = key.take() {
                 flags.insert(k, arg);
+            } else {
+                positional.push(arg);
             }
         }
         if let Some(prev) = key.take() {
             flags.insert(prev, "true".to_string());
         }
-        Args { cmd, flags }
+        Args { cmd, flags, positional }
     }
 
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
     }
 
     fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -129,6 +138,7 @@ fn main() {
         "oran-demo" => cmd_oran_demo(&args),
         "fleet" => cmd_fleet(&args),
         "traffic" => cmd_traffic(&args),
+        "scenario" => cmd_scenario(&args),
         "bench" => cmd_bench(&args),
         "shift" => cmd_shift(&args),
         "dvfs-ablation" => cmd_dvfs_ablation(&args),
@@ -170,6 +180,11 @@ COMMANDS:
             [--exact-threshold N] [--path auto|exact|aggregate]
             [--budget-frac F] [--smoke] [--out DIR]
             seeded diurnal day, FROST vs stock caps + SLOs
+  scenario  PRESET [--sites N] [--seed S] [--threads T] [--users N]
+            [--slots N] [--budget-frac F] [--smoke] [--out DIR]
+            scripted operational day (PRESET: outage-day, grid-step,
+            flash-crowd, heatwave) — deterministic event engine, FROST
+            vs stock caps with per-phase energy/latency/attainment
   bench     [--traffic] [--target-s S] [--out FILE] [--force]
             hot-path benches -> BENCH_fleet.json / BENCH_traffic.json
   shift     [--budget-frac F]               site-level power shifting
@@ -693,6 +708,136 @@ fn cmd_traffic(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The scripted operational day of DESIGN.md §11: run a deterministic
+/// event preset (site outage, grid budget step, flash crowd, thermal
+/// derating) over the same seeded diurnal day with FROST on and off, and
+/// report per-phase energy/latency/attainment plus the per-event ledger
+/// and the budget conservation audit.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use frost::oran::FleetConfig;
+    use frost::scenario::{Scenario, PRESETS};
+    use frost::traffic::TrafficConfig;
+    let smoke = args.get("smoke").is_some();
+    // The preset is required (positionally or via --preset): defaulting
+    // would silently run the wrong scenario when a boolean flag eats the
+    // positional (`frost scenario --smoke flash-crowd` parses the name as
+    // the flag's value).
+    let Some(preset) = args.get("preset").or_else(|| args.pos(0)) else {
+        anyhow::bail!(
+            "missing scenario preset: frost scenario PRESET (one of: {})",
+            PRESETS.join(", ")
+        );
+    };
+    anyhow::ensure!(
+        PRESETS.contains(&preset),
+        "unknown scenario preset '{preset}' (expected one of: {})",
+        PRESETS.join(", ")
+    );
+    let base = if smoke { TrafficConfig::smoke() } else { TrafficConfig::default() };
+    let tr = TrafficConfig {
+        users_per_site: args.require_u64("users", base.users_per_site, 1)?,
+        slots_per_day: args.require_u32("slots", base.slots_per_day, 3)?,
+        max_batch: args.require_u32("max-batch", base.max_batch, 1)?,
+        ..base
+    };
+    // 4+ sites so every QoS class is present and an outage has regional
+    // survivors to absorb its users.
+    let sites = args.require_u64("sites", if smoke { 4 } else { 8 }, 1)? as usize;
+    let scen = Scenario::preset(preset, sites, &tr).context("building scenario preset")?;
+    // grid-step scripts budget steps, so its runs enforce a budget by
+    // default; the other presets run unbudgeted unless asked.
+    let default_budget = if preset == "grid-step" { 0.9 } else { 1.0 };
+    let config = FleetConfig {
+        sites,
+        seed: args.require_u64("seed", 7, 0)?,
+        threads: args.require_u64("threads", 0, 0)? as usize,
+        rounds: tr.rounds_for_one_day(),
+        train_epochs: args.require_u32("epochs", if smoke { 30 } else { 60 }, 1)?,
+        samples_per_epoch: if smoke { 5_000 } else { 20_000 },
+        budget_frac: args.require_f64("budget-frac", default_budget, 1e-6, 10.0)?,
+        // Wide stagger: every site is profiled before the day starts.
+        max_concurrent_profiles: sites,
+        traffic: Some(tr.clone()),
+        scenario: Some(scen.clone()),
+        ..FleetConfig::default()
+    };
+    let out = figures::scenario_comparison(&config)?;
+
+    println!("=== scenario '{}' event ledger ===", scen.name);
+    for ev in &out.event_log {
+        println!(
+            "  round {:>3} (slot {:>2}): {}",
+            ev.round,
+            ev.round.saturating_sub(tr.warmup_rounds + 1),
+            ev.detail
+        );
+    }
+    println!();
+    print!("{}", out.phase_table.to_table());
+    println!();
+    print!("{}", out.class_table.to_table());
+    println!();
+    println!("=== scripted-day roll-up ===");
+    println!(
+        "sites                : {sites}; {} slots of {:.0} s; {} users/site mean",
+        tr.slots_per_day,
+        tr.slot_s(),
+        tr.users_per_site
+    );
+    println!(
+        "fleet day energy     : {:.1} kJ under FROST vs {:.1} kJ stock caps \
+         ({:.1}% saving)",
+        out.frost_day_energy_j / 1e3,
+        out.base_day_energy_j / 1e3,
+        out.day_saving_frac * 100.0
+    );
+    for p in &out.phases {
+        println!(
+            "phase {:<14} : saving {:>5.1}%  lc p99 {:>7.1} ms  attainment {:>6.2}%{}",
+            p.name,
+            p.saving_frac * 100.0,
+            p.frost_lc_p99_s * 1e3,
+            p.frost_attainment * 100.0,
+            if p.outage { "  [outage window]" } else { "" }
+        );
+    }
+    if out.budget_audited_rounds > 0 {
+        println!(
+            "budget conservation  : {} rounds audited, max cap excess {:+.1} W — {}",
+            out.budget_audited_rounds,
+            out.max_cap_excess_w,
+            if out.max_cap_excess_w <= 1e-6 {
+                "never exceeded the scripted budget"
+            } else {
+                "EXCEEDED (unexpected)"
+            }
+        );
+    }
+    let lc_deadline = tr.slo.deadline_for(frost::frost::QosClass::LatencyCritical);
+    let lc_ok = out
+        .phases
+        .iter()
+        .filter(|p| !p.outage && p.offered > 0)
+        .all(|p| p.frost_lc_p99_s <= lc_deadline);
+    println!(
+        "latency_critical gate: p99 {} {:.0} ms deadline in every non-outage phase",
+        if lc_ok { "within" } else { "PAST" },
+        lc_deadline * 1e3
+    );
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        for (name, csv) in [
+            ("scenario_phases.csv", out.phase_table.to_csv()),
+            ("scenario_slo.csv", out.class_table.to_csv()),
+        ] {
+            let path = std::path::Path::new(dir).join(name);
+            std::fs::write(&path, csv)?;
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
 /// Hot-path benches from the CLI: the fleet suite by default, the
 /// traffic suite with `--traffic` (the same definitions as
 /// `cargo bench --bench fleet` / `--bench traffic` — one definition
@@ -835,6 +980,32 @@ mod tests {
         let a = args(&["traffic", "--exact-threshold", "0"]);
         let err = cmd_traffic(&a).unwrap_err().to_string();
         assert!(err.contains("--exact-threshold"), "got: {err}");
+    }
+
+    #[test]
+    fn scenario_cli_parses_positional_preset_and_rejects_unknown() {
+        // Positional preset: `frost scenario outage-day --smoke`.
+        let a = args(&["scenario", "outage-day", "--smoke"]);
+        assert_eq!(a.pos(0), Some("outage-day"));
+        assert!(a.get("smoke").is_some());
+        // Unknown preset is a hard error naming the choices.
+        let a = args(&["scenario", "solar-flare"]);
+        let err = cmd_scenario(&a).unwrap_err().to_string();
+        assert!(err.contains("solar-flare"), "got: {err}");
+        assert!(err.contains("outage-day"), "got: {err}");
+        // A missing preset errors instead of silently defaulting — a
+        // boolean flag can otherwise eat the positional name
+        // (`scenario --smoke flash-crowd` parses the preset as the
+        // flag's value).
+        let a = args(&["scenario", "--smoke", "flash-crowd"]);
+        let err = cmd_scenario(&a).unwrap_err().to_string();
+        assert!(err.contains("missing scenario preset"), "got: {err}");
+        // Malformed numeric flags error like every other subcommand.
+        let a = args(&["scenario", "outage-day", "--slots", "2"]);
+        let err = cmd_scenario(&a).unwrap_err().to_string();
+        assert!(err.contains("--slots"), "got: {err}");
+        let a = args(&["scenario", "outage-day", "--sites", "none"]);
+        assert!(cmd_scenario(&a).is_err());
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //!   power-of-two octaves;
 //! * each octave is split into [`SUB_BINS`] = 32 linear sub-bins (the top
 //!   5 mantissa bits), so the relative bin width is at most 1/32 ≈ 3.1%;
-//! * values at or below `MIN_S` land in bin 0; values at or above `MAX_S`,
-//!   and non-finite values (NaN, ±inf — a defensive route, serving never
-//!   produces them), land in the top bin.  Nothing panics, nothing is
-//!   dropped: `count` always equals the number of recorded samples.
+//! * values at or below `MIN_S` land in bin 0; values at or above `MAX_S`
+//!   land in the top bin; **non-finite** values (NaN, ±inf — serving never
+//!   produces them, but a poisoned sample must not poison the day) are
+//!   *skipped and counted* in a separate [`LatencyHistogram::non_finite`]
+//!   tally instead of being filed anywhere: one NaN in a million samples
+//!   used to saturate the top bin and drag p99 to ~4.7 h.  Nothing
+//!   panics; `count` equals the number of *finite* recorded samples and
+//!   `non_finite` accounts for the rest, so totals still conserve.
 //!
 //! Percentiles use the same nearest-rank convention as
 //! [`crate::metrics::percentile_index`] (rank `ceil(q·n)`, clamped to
@@ -55,6 +59,9 @@ pub const MAX_S: f64 = MIN_S * (1u64 << OCTAVES) as f64;
 pub struct LatencyHistogram {
     bins: Box<[u64; BINS]>,
     count: u64,
+    /// Non-finite samples skipped by `record_n` (never binned — see the
+    /// module docs).  Surfaced in `SloSummary::non_finite`.
+    non_finite: u64,
 }
 
 impl Default for LatencyHistogram {
@@ -65,12 +72,14 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn new() -> LatencyHistogram {
-        LatencyHistogram { bins: Box::new([0u64; BINS]), count: 0 }
+        LatencyHistogram { bins: Box::new([0u64; BINS]), count: 0, non_finite: 0 }
     }
 
     /// Bin index of a latency value.  Pure bit arithmetic on the f64
     /// representation: exponent selects the octave, the top 5 mantissa
-    /// bits the sub-bin.  Total order, no branches on NaN payloads.
+    /// bits the sub-bin.  Total (non-finite maps to the top bin so the
+    /// function stays total, but `record_n` never routes non-finite
+    /// samples here — they are skipped and counted instead).
     pub fn bin_index(x: f64) -> usize {
         if !x.is_finite() || x >= MAX_S {
             return BINS - 1;
@@ -110,16 +119,29 @@ impl LatencyHistogram {
 
     /// Record `n` samples of the same value — the aggregated serving path
     /// retires whole request groups with one call (O(1) per group).
+    /// Non-finite values are skipped and tallied in [`Self::non_finite`]:
+    /// filing a NaN into the top bin would report a ~4.7 h p99 for an
+    /// otherwise-healthy day.
     pub fn record_n(&mut self, x: f64, n: u64) {
         if n == 0 {
+            return;
+        }
+        if !x.is_finite() {
+            self.non_finite += n;
             return;
         }
         self.bins[LatencyHistogram::bin_index(x)] += n;
         self.count += n;
     }
 
+    /// Finite samples recorded (what the percentiles rank over).
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Non-finite samples skipped by [`Self::record_n`].
+    pub fn non_finite(&self) -> u64 {
+        self.non_finite
     }
 
     pub fn is_empty(&self) -> bool {
@@ -130,6 +152,7 @@ impl LatencyHistogram {
     pub fn clear(&mut self) {
         self.bins.fill(0);
         self.count = 0;
+        self.non_finite = 0;
     }
 
     /// Bin-wise merge.  Callers merge in site-index order (§6).
@@ -138,6 +161,7 @@ impl LatencyHistogram {
             *a += b;
         }
         self.count += other.count;
+        self.non_finite += other.non_finite;
     }
 
     /// Nearest-rank percentile by bin walk: the lower edge of the bin
@@ -189,7 +213,7 @@ mod tests {
     }
 
     #[test]
-    fn out_of_range_and_non_finite_saturate_without_panicking() {
+    fn out_of_range_saturates_and_non_finite_is_skipped_and_counted() {
         let mut h = LatencyHistogram::new();
         h.record(0.0);
         h.record(-5.0);
@@ -197,9 +221,35 @@ mod tests {
         assert_eq!(h.percentile(0.5), LatencyHistogram::lower_edge(0));
         h.record(f64::NAN);
         h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
         h.record(1e9);
-        assert_eq!(h.count(), 6);
+        // Finite out-of-range samples saturate into the edge bins; the
+        // non-finite ones are skipped and tallied separately.
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.non_finite(), 3);
         assert_eq!(h.percentile(1.0), LatencyHistogram::lower_edge(BINS - 1));
+        h.clear();
+        assert_eq!(h.non_finite(), 0);
+    }
+
+    #[test]
+    fn a_single_nan_no_longer_poisons_the_day_p99() {
+        // Regression: record_n used to file NaN/inf into the top bin, so
+        // one poisoned sample among a day of ~50 ms requests reported a
+        // p99 of MAX_S ≈ 4.7 h.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..10_000 {
+            h.record(0.05);
+        }
+        h.record_n(f64::NAN, 1);
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.non_finite(), 1);
+        let p99 = h.percentile(0.99);
+        assert!(p99 < 0.06, "p99 {p99} poisoned by the NaN");
+        // And a poisoned group on the aggregated path is fully tallied.
+        h.record_n(f64::INFINITY, 500);
+        assert_eq!(h.non_finite(), 501);
+        assert!(h.percentile(1.0) < 0.06);
     }
 
     #[test]

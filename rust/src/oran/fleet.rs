@@ -23,6 +23,11 @@
 //!
 //! Round structure (one `run_round`):
 //!
+//! 0. scenario event dispatch (DESIGN.md §11, when a script is set):
+//!    budget steps, site outages/recoveries, flash-crowd surge windows
+//!    and thermal derates fire on the coordinator at the round boundary,
+//!    so the round is one consistent world state for every worker-thread
+//!    count (the per-event ledger is [`Fleet::event_log`]);
 //! 1. non-RT RIC step: validation/publishing of finished training, then
 //!    the scheduler rApp issues staggered `ProfileRequest`s;
 //! 2. gateway **down**: site-addressed global traffic enters each site's
@@ -57,6 +62,7 @@ use crate::frost::{
 };
 use crate::metrics::LatencyHistogram;
 use crate::power::{allocate_budget, HostProfile};
+use crate::scenario::{Scenario, ScenarioEvent};
 use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
 use crate::telemetry::hub::{PowerReading, TelemetryHub};
 use crate::telemetry::sampler::PowerSampler;
@@ -111,6 +117,11 @@ pub struct FleetConfig {
     /// `infer_steps_per_round` loop once `TrafficConfig::warmup_rounds`
     /// have passed; None keeps the legacy fixed workload bit-identical.
     pub traffic: Option<TrafficConfig>,
+    /// Scripted operational events (DESIGN.md §11): budget steps, site
+    /// outages/recoveries, flash-crowd surges, thermal derating.  Events
+    /// fire at round boundaries on the coordinator, so a scripted day is
+    /// bit-identical for any worker-thread count.  Requires `traffic`.
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for FleetConfig {
@@ -130,6 +141,7 @@ impl Default for FleetConfig {
             min_accuracy: 0.68,
             sample_retention: 512,
             traffic: None,
+            scenario: None,
         }
     }
 }
@@ -173,6 +185,15 @@ pub struct SiteTraffic {
     /// cleared at day rollover).  Fleet roll-ups merge these in
     /// site-index order (§6).
     pub hist: LatencyHistogram,
+    /// Per-scenario-phase latency histograms (DESIGN.md §11): one per
+    /// `Scenario::phases` entry, fed by the same recording pass as
+    /// [`Self::hist`]; empty when the fleet runs no scenario.  Cleared at
+    /// day rollover with the rest of the day ledgers.
+    pub phase_hists: Vec<LatencyHistogram>,
+    /// Requests shed when this site went down (queue failed at the outage
+    /// event); charged as `dropped` to the first outage slot's report so
+    /// slot-level accounting still conserves.
+    pending_shed: u64,
     /// Per-slot records of the current day.
     pub slot_log: Vec<SlotReport>,
     /// Total slots served over the site's lifetime (day index derives
@@ -198,7 +219,34 @@ impl SiteTraffic {
         self.monitor.load_shifts
     }
 
-    fn new(cfg: &TrafficConfig, site_index: usize, qos: QosClass, seed: u64) -> SiteTraffic {
+    /// Roll the day ledgers over when this slot starts a new day and
+    /// return `(slot_in_day, t0)` — shared by the serving path and the
+    /// outage idle path, so a down slot keeps the day clock honest.
+    fn begin_slot(&mut self, tr: &TrafficConfig) -> (u32, f64) {
+        let slot_in_day = self.slots_served % tr.slots_per_day;
+        if slot_in_day == 0 && self.slots_served > 0 {
+            // Day rollover: the previous day flushed its queue at the
+            // last slot; reset the per-day ledgers so multi-day runs
+            // stay bounded in memory.
+            self.latencies.clear();
+            self.hist.clear();
+            for h in self.phase_hists.iter_mut() {
+                h.clear();
+            }
+            self.slot_log.clear();
+            self.offered_today = 0;
+            self.day_energy_j = 0.0;
+        }
+        (slot_in_day, self.slots_served as f64 * tr.slot_s())
+    }
+
+    fn new(
+        cfg: &TrafficConfig,
+        site_index: usize,
+        qos: QosClass,
+        seed: u64,
+        phases: usize,
+    ) -> SiteTraffic {
         let deadline_s = cfg.slo.deadline_for(qos);
         SiteTraffic {
             gen: ArrivalGen::new(
@@ -215,6 +263,8 @@ impl SiteTraffic {
             agg_windows: cfg.agg_windows(deadline_s),
             bufs: ArrivalBuffers::new(),
             hist: LatencyHistogram::new(),
+            phase_hists: (0..phases).map(|_| LatencyHistogram::new()).collect(),
+            pending_shed: 0,
             // Slot-cadence monitoring: settle after a few slots, then
             // re-profile on demand shifts with a cooldown of roughly a
             // sixth of a day so one diurnal ramp triggers once.
@@ -281,6 +331,10 @@ pub struct FleetSite {
     pub last_gpu_power_w: f64,
     /// Rounds this site has run (drives the warm-up → traffic handover).
     rounds_run: u32,
+    /// Scripted outage (DESIGN.md §11): set by the coordinator at event
+    /// dispatch.  A down site serves nothing, processes no fabric
+    /// traffic, and draws idle power for the slot.
+    pub down: bool,
     /// Traffic state when the scenario is traffic-driven.
     pub traffic: Option<SiteTraffic>,
 }
@@ -289,6 +343,10 @@ impl FleetSite {
     /// One site round, run on a worker thread. Touches only site-local
     /// state; cross-site traffic is deferred to `outbox`.
     fn run_round(&mut self, cfg: &FleetConfig) {
+        if self.down {
+            self.run_down_round(cfg);
+            return;
+        }
         self.rounds_run += 1;
         // Apply coordinator-injected traffic (A1 policies, profile
         // requests). Profiling runs here, on the worker thread.
@@ -324,7 +382,7 @@ impl FleetSite {
             && cfg.traffic.as_ref().map_or(false, |t| self.rounds_run > t.warmup_rounds);
         if traffic_now {
             let tr = cfg.traffic.as_ref().expect("checked above");
-            self.serve_traffic_slot(tr, cfg.frost_enabled);
+            self.serve_traffic_slot(cfg, tr, cfg.frost_enabled);
         } else if self.trained {
             let _ = self.host.run_inference(&self.model_id, cfg.infer_steps_per_round);
             self.samples += cfg.infer_steps_per_round * self.host.batch as u64;
@@ -367,6 +425,66 @@ impl FleetSite {
         }
     }
 
+    /// A scripted-outage round (DESIGN.md §11): the site is dark.  It
+    /// processes no fabric messages (pending policies and profile
+    /// requests wait in the queues for recovery), serves nothing, and
+    /// draws idle power for one traffic slot — the slot counter keeps
+    /// advancing so the diurnal clock is intact when it comes back, and
+    /// the slot ledger records a zero-offered, idle-energy slot (plus any
+    /// requests the outage shed from the queue, as drops).
+    fn run_down_round(&mut self, cfg: &FleetConfig) {
+        self.rounds_run += 1;
+        let tr = cfg.traffic.as_ref().expect("scenario outages require traffic");
+        let slot_s = tr.slot_s();
+        let t0c = self.host.testbed.clock.now();
+        let (gi, ci, di) = self.host.testbed.instantaneous(None);
+        self.hub.publish(PowerReading {
+            at: t0c,
+            gpu: gi,
+            cpu: ci,
+            dram: di,
+            gpu_util: 0.0,
+            freq_mhz: 0.0,
+        });
+        self.sampler.poll(t0c);
+        self.last_gpu_power_w = gi.0;
+
+        let agg = self.host.testbed.idle_window(Seconds(slot_s));
+        self.host.total_energy_j += agg.energy.0;
+        self.round_energy_j = agg.energy.0;
+        self.workload_energy_j += agg.energy.0;
+
+        let t1 = self.host.testbed.clock.now();
+        self.sampler.poll(t1);
+        self.wall_s = t1.0;
+
+        let cap_frac = self.host.testbed.cap_frac();
+        let serving = self.trained && self.rounds_run > tr.warmup_rounds;
+        if let Some(t) = self.traffic.as_mut() {
+            if serving {
+                let (slot_in_day, t0) = t.begin_slot(tr);
+                let dropped = std::mem::take(&mut t.pending_shed);
+                t.slot_log.push(SlotReport {
+                    slot_in_day,
+                    t0,
+                    offered: 0,
+                    served: 0,
+                    dropped,
+                    late: 0,
+                    batches: 0,
+                    batch_samples: 0,
+                    busy_s: 0.0,
+                    energy_j: agg.energy.0,
+                    gpu_busy_power_w: 0.0,
+                    offered_rate_per_s: 0.0,
+                    cap_frac,
+                });
+                t.slots_served += 1;
+                t.day_energy_j += agg.energy.0;
+            }
+        }
+    }
+
     /// Serve the site's next traffic slot (DESIGN.md §9/§10): generate
     /// the slot's seeded arrivals — individually below the aggregation
     /// threshold, as per-window counts above it, both into reusable
@@ -374,21 +492,10 @@ impl FleetSite {
     /// current cap, and feed the demand monitor, which may ask FROST to
     /// re-profile (routed through the scheduler stagger via the
     /// coordinator — see `reprofile_pending`).
-    fn serve_traffic_slot(&mut self, tr: &TrafficConfig, frost_enabled: bool) {
+    fn serve_traffic_slot(&mut self, cfg: &FleetConfig, tr: &TrafficConfig, frost_enabled: bool) {
         let slot_s = tr.slot_s();
         let t = self.traffic.as_mut().expect("traffic state initialised");
-        let slot_in_day = t.slots_served % tr.slots_per_day;
-        if slot_in_day == 0 && t.slots_served > 0 {
-            // Day rollover: the previous day flushed its queue at the
-            // last slot; reset the per-day ledgers so multi-day runs
-            // stay bounded in memory.
-            t.latencies.clear();
-            t.hist.clear();
-            t.slot_log.clear();
-            t.offered_today = 0;
-            t.day_energy_j = 0.0;
-        }
-        let t0 = t.slots_served as f64 * slot_s;
+        let (slot_in_day, t0) = t.begin_slot(tr);
         let deadline_s = t.deadline_s;
         let offered = t.bufs.generate_and_enqueue(
             &mut t.gen,
@@ -405,14 +512,26 @@ impl FleetSite {
             slot_in_day,
             flush: slot_in_day + 1 == tr.slots_per_day,
         };
+        // Scenario-driven fleets route this slot's samples into its phase
+        // histogram as well (same recording pass; DESIGN.md §11).
+        let phase_idx = cfg.scenario.as_ref().map(|s| s.phase_of_slot(slot_in_day));
         let mut lat = SlotLatencies {
             exact: if t.aggregated { None } else { Some(&mut t.latencies) },
             hist: &mut t.hist,
+            phase: match phase_idx {
+                Some(p) => t.phase_hists.get_mut(p),
+                None => None,
+            },
         };
-        let report = self
+        let mut report = self
             .host
             .serve_slot(&self.model_id, &mut t.server, &t.former, offered, window, &mut lat)
             .expect("deployed model serves traffic");
+        // Shed drops that were never ledgered while the site was dark
+        // (e.g. it was retraining through the outage, so no down-slot
+        // report was pushed) land on the first served slot instead — the
+        // slot ledger must account every drop the server counted.
+        report.dropped += std::mem::take(&mut t.pending_shed);
         t.slots_served += 1;
         t.offered_today += report.offered;
         t.day_energy_j += report.energy_j;
@@ -602,6 +721,37 @@ impl Drop for SitePool {
     }
 }
 
+/// Mutable state of a running scenario script (the script itself is
+/// frozen inside the shared `FleetConfig`).  All transitions happen on
+/// the coordinator thread at round boundaries, so the §6 determinism
+/// contract is untouched.
+struct ScenarioRt {
+    /// Index of the next unfired event in `Scenario::events`.
+    next: usize,
+    /// Per-site flash-crowd multiplier (1.0 outside surge windows).
+    /// (Outage state is NOT duplicated here — `FleetSite::down` is the
+    /// single source of truth every reader consults.)
+    surge: Vec<f64>,
+    /// Per-site thermal cap ceiling (1.0 = no derate in force).
+    derate: Vec<f64>,
+    /// (policy max_cap_frac, enforced cap) captured at derate time, so
+    /// `DerateEnd` can restore the ceiling (and, on stock-cap fleets, the
+    /// cap itself).
+    pre_derate: Vec<Option<(f64, f64)>>,
+    /// The budget fraction currently in force (starts at
+    /// `FleetConfig::budget_frac`, moved by `BudgetStep` events).
+    budget_frac: f64,
+}
+
+/// One fired scenario event, for the per-event ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FiredEvent {
+    pub round: u32,
+    pub event: ScenarioEvent,
+    /// Human-readable description (the CLI ledger line).
+    pub detail: String,
+}
+
 /// The fleet simulator (see module docs for the round structure).
 pub struct Fleet {
     /// The scenario, frozen at construction: the worker pool and the
@@ -621,6 +771,13 @@ pub struct Fleet {
     profiles_ingested: usize,
     lifecycle_ingested: usize,
     budget_applied: bool,
+    /// True once at least one full water-fill has been pushed (gates the
+    /// reservation path in `enforce_budget`).
+    ever_enforced: bool,
+    /// Mutable scenario state (None when the fleet runs no scenario).
+    scenario_rt: Option<ScenarioRt>,
+    /// Per-event ledger: every fired event, in dispatch order.
+    pub event_log: Vec<FiredEvent>,
 }
 
 /// How often a traffic-driven fleet re-runs the load-weighted budget
@@ -637,6 +794,13 @@ impl Fleet {
         anyhow::ensure!(config.budget_frac > 0.0, "budget_frac must be positive");
         if let Some(tr) = &config.traffic {
             tr.validate().context("invalid traffic config")?;
+        }
+        if let Some(scen) = &config.scenario {
+            let tr = config
+                .traffic
+                .as_ref()
+                .context("a scenario script requires FleetConfig::traffic")?;
+            scen.validate(config.sites, tr).context("invalid scenario script")?;
         }
         let bus = Bus::new();
         let mut smo = Smo::new(bus.clone());
@@ -679,10 +843,11 @@ impl Fleet {
                 [i % 3];
             // Traffic state is seeded per site so arrival streams replay
             // bit-for-bit regardless of worker-thread count (§6).
+            let phases = config.scenario.as_ref().map_or(0, |s| s.phases.len());
             let traffic = config
                 .traffic
                 .as_ref()
-                .map(|tr| SiteTraffic::new(tr, i, qos, site_seed(config.seed, i)));
+                .map(|tr| SiteTraffic::new(tr, i, qos, site_seed(config.seed, i), phases));
             let policy = EnergyPolicy {
                 id: format!("{name}-qos"),
                 qos,
@@ -718,8 +883,27 @@ impl Fleet {
                 accuracy: 0.0,
                 last_gpu_power_w: 0.0,
                 rounds_run: 0,
+                down: false,
                 traffic,
             });
+        }
+        if let Some(scen) = &config.scenario {
+            // Derate ceilings must stay above each target site's driver
+            // floor, or the clamp could not be enforced.  Checked against
+            // the *constructed* sites so the hardware-mix rule lives in
+            // exactly one place (the loop above).
+            for te in &scen.events {
+                if let ScenarioEvent::Derate { site, max_cap_frac } = te.event {
+                    let gpu = &sites[site].host.testbed.hw.gpu;
+                    anyhow::ensure!(
+                        max_cap_frac >= gpu.min_cap_frac,
+                        "derate cap {max_cap_frac} at site {site} is below the {} driver \
+                         floor {}",
+                        gpu.name,
+                        gpu.min_cap_frac
+                    );
+                }
+            }
         }
         if config.frost_enabled {
             nonrt.add_rapp(Box::new(FleetProfileScheduler::new(
@@ -733,6 +917,13 @@ impl Fleet {
             config.threads
         };
         let workers = requested.clamp(1, config.sites);
+        let scenario_rt = config.scenario.as_ref().map(|_| ScenarioRt {
+            next: 0,
+            surge: vec![1.0; config.sites],
+            derate: vec![1.0; config.sites],
+            pre_derate: vec![None; config.sites],
+            budget_frac: config.budget_frac,
+        });
         let config = Arc::new(config);
         let pool = SitePool::spawn(workers, config.clone());
         Ok(Fleet {
@@ -749,6 +940,9 @@ impl Fleet {
             profiles_ingested: 0,
             lifecycle_ingested: 0,
             budget_applied: false,
+            ever_enforced: false,
+            scenario_rt,
+            event_log: Vec::new(),
         })
     }
 
@@ -756,13 +950,26 @@ impl Fleet {
     pub fn run_round(&mut self) -> Result<()> {
         self.round += 1;
 
+        // 0. Scenario events due this round fire first, on the
+        //    coordinator (DESIGN.md §11): outage/recovery topology,
+        //    surge multipliers, budget steps and derates are all settled
+        //    before the scheduler or any site acts, so the round is one
+        //    consistent world state for every worker-thread count.
+        self.apply_due_events()?;
+
         // 1. Non-RT RIC: ingest lifecycle events, stagger ProfileRequests.
         self.nonrt.step()?;
         self.bus.deliver_all();
 
         // 2. Gateway down: global → site-local, moving each message (the
-        //    sender rides along as a shared intern-table handle).
+        //    sender rides along as a shared intern-table handle).  A down
+        //    site receives nothing — its global endpoint queues traffic
+        //    until recovery, so a pre-outage profile request is processed
+        //    exactly once, after the site returns.
         for site in &self.sites {
+            if site.down {
+                continue;
+            }
             for (from, msg) in site.global_ep.drain() {
                 site.local_bus.send(&from, &site.name, msg);
             }
@@ -824,11 +1031,15 @@ impl Fleet {
             }
         }
 
-        // 6. Global power budget, once the stagger has profiled every
-        //    site.  Traffic-driven fleets re-balance periodically: the
-        //    water-fill weights sites by offered load, and the diurnal
-        //    day keeps moving that load around.
-        if self.config.frost_enabled && self.config.budget_frac < 1.0 {
+        // 6. Global power budget, as soon as enough of the stagger has
+        //    profiled (unprofiled or down sites have their current cap
+        //    wattage *reserved*, so partial allocations still conserve
+        //    the budget).  Traffic-driven fleets re-balance periodically:
+        //    the water-fill weights sites by offered load, and the
+        //    diurnal day keeps moving that load around.  Scenario events
+        //    (budget steps, outages, recoveries, derates) force an
+        //    immediate re-water-fill by clearing `budget_applied`.
+        if self.config.frost_enabled && self.current_budget_frac() < 1.0 {
             let refresh = self.config.traffic.is_some()
                 && self.budget_applied
                 && self.round % BUDGET_REFRESH_ROUNDS == 0;
@@ -844,13 +1055,198 @@ impl Fleet {
         Ok(())
     }
 
+    /// The budget fraction currently in force: the configured one, unless
+    /// a scenario `BudgetStep` has moved it.
+    pub fn current_budget_frac(&self) -> f64 {
+        self.scenario_rt.as_ref().map_or(self.config.budget_frac, |rt| rt.budget_frac)
+    }
+
+    /// Fire every scripted event due at the current round (coordinator
+    /// thread, before anything else in the round — see `run_round` step 0).
+    fn apply_due_events(&mut self) -> Result<()> {
+        loop {
+            let due = {
+                let Some(rt) = self.scenario_rt.as_ref() else { return Ok(()) };
+                let scen = self.config.scenario.as_ref().expect("rt implies scenario");
+                match scen.events.get(rt.next) {
+                    Some(te) if te.round <= self.round => *te,
+                    _ => return Ok(()),
+                }
+            };
+            if let Some(rt) = self.scenario_rt.as_mut() {
+                rt.next += 1;
+            }
+            self.apply_event(due.event)?;
+            self.event_log.push(FiredEvent {
+                round: self.round,
+                event: due.event,
+                detail: due.event.to_string(),
+            });
+        }
+    }
+
+    fn apply_event(&mut self, event: ScenarioEvent) -> Result<()> {
+        // Take the runtime state out of `self` for the duration of the
+        // transition so sites, SMO and catalogue can be borrowed freely.
+        let mut rt = self.scenario_rt.take().expect("events only fire with a scenario");
+        let mut topology_changed = false;
+        match event {
+            ScenarioEvent::BudgetStep { budget_frac } => {
+                // Re-water-fill immediately at the new level (step 6 of
+                // this same round).
+                rt.budget_frac = budget_frac;
+                self.budget_applied = false;
+            }
+            ScenarioEvent::SiteDown { site } => {
+                let s = &mut self.sites[site];
+                s.down = true;
+                // Requests waiting at the failed site are lost, not
+                // teleported: shed them now, charge them to the first
+                // outage slot's ledger.
+                if let Some(t) = s.traffic.as_mut() {
+                    t.pending_shed += t.server.shed_all();
+                }
+                // Blank the scheduler assignment so the stagger skips the
+                // dark site instead of queueing duplicate profile
+                // requests against it every round (it would double-charge
+                // profiling energy at recovery).
+                self.assignments.lock().unwrap()[site].1 = String::new();
+                // And drop its stale demand weight at the SMO.
+                let name = self.sites[site].name.clone();
+                self.smo.clear_host_load(&name);
+                self.budget_applied = false;
+                topology_changed = true;
+            }
+            ScenarioEvent::SiteUp { site } => {
+                let s = &mut self.sites[site];
+                s.down = false;
+                let pair = (s.name.clone(), s.model_id.clone());
+                self.assignments.lock().unwrap()[site] = pair;
+                // Its profile is still fresh (same model), so the forced
+                // refresh folds it straight back into the water-fill.
+                self.budget_applied = false;
+                topology_changed = true;
+            }
+            ScenarioEvent::SurgeStart { mult, site } => {
+                match site {
+                    Some(i) => rt.surge[i] = mult,
+                    None => rt.surge.fill(mult),
+                }
+                topology_changed = true;
+            }
+            ScenarioEvent::SurgeEnd { site } => {
+                match site {
+                    Some(i) => rt.surge[i] = 1.0,
+                    None => rt.surge.fill(1.0),
+                }
+                topology_changed = true;
+            }
+            ScenarioEvent::Derate { site, max_cap_frac } => {
+                rt.derate[site] = max_cap_frac;
+                let s = &mut self.sites[site];
+                rt.pre_derate[site] =
+                    Some((s.host.policy.max_cap_frac, s.host.testbed.cap_frac()));
+                // Clamp the A1 ceiling (the profiler obeys policy bounds)
+                // and the enforced cap itself; the cap change invalidates
+                // the site's step-estimate cache (`Testbed::set_cap_frac`).
+                s.host.policy.max_cap_frac = s.host.policy.max_cap_frac.min(max_cap_frac);
+                if s.host.testbed.cap_frac() > max_cap_frac {
+                    s.host.testbed.set_cap_frac(max_cap_frac);
+                }
+                if self.config.frost_enabled {
+                    // Online system tuning: forget the recorded optimum so
+                    // the scheduler re-profiles under the new ceiling.
+                    let _ = self.nonrt.catalogue.clear_optimal_cap(&s.model_id);
+                }
+                self.budget_applied = false;
+            }
+            ScenarioEvent::DerateEnd { site } => {
+                rt.derate[site] = 1.0;
+                if let Some((policy_max, pre_cap)) = rt.pre_derate[site].take() {
+                    let s = &mut self.sites[site];
+                    s.host.policy.max_cap_frac = policy_max;
+                    if self.config.frost_enabled {
+                        // Re-profile to exploit the restored headroom (or
+                        // let the budget refresh re-allocate it).
+                        let _ = self.nonrt.catalogue.clear_optimal_cap(&s.model_id);
+                    } else {
+                        // Stock caps: return to the pre-derate setting.
+                        s.host.testbed.set_cap_frac(pre_cap);
+                    }
+                }
+                self.budget_applied = false;
+            }
+        }
+        self.scenario_rt = Some(rt);
+        if topology_changed {
+            self.recompute_rate_mults();
+        }
+        Ok(())
+    }
+
+    /// Push the effective arrival-rate multiplier to every site's
+    /// generator: the surge factor layered with outage redistribution —
+    /// a down site's users re-attach to the *up* sites of its region
+    /// (contiguous `Scenario::region_size` blocks), weighted by user
+    /// counts, so regional demand is conserved while a site is dark.
+    /// With no sites down and no surge the product is exactly 1.0 and the
+    /// arrival streams stay bit-identical to a scenario-free run.
+    fn recompute_rate_mults(&mut self) {
+        let Some(rt) = self.scenario_rt.as_ref() else { return };
+        let scen = self.config.scenario.as_ref().expect("rt implies scenario");
+        let Some(tr) = self.config.traffic.as_ref() else { return };
+        let n = self.sites.len();
+        let region = scen.region_size.max(1);
+        let mut mults = vec![1.0f64; n];
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + region).min(n);
+            let total: f64 = (start..end).map(|i| tr.site_users(i)).sum();
+            let up: f64 = (start..end)
+                .filter(|&i| !self.sites[i].down)
+                .map(|i| tr.site_users(i))
+                .sum();
+            for i in start..end {
+                let redistribute = if self.sites[i].down || up <= 0.0 {
+                    // A dark site generates nothing; the multiplier is
+                    // moot but kept sane for its recovery round.
+                    1.0
+                } else if up < total {
+                    total / up
+                } else {
+                    1.0
+                };
+                mults[i] = rt.surge[i] * redistribute;
+            }
+            start = end;
+        }
+        for (site, m) in self.sites.iter_mut().zip(&mults) {
+            if let Some(t) = site.traffic.as_mut() {
+                t.gen.set_rate_mult(*m);
+            }
+        }
+    }
+
     /// Water-fill the global GPU budget across the profiled throughput
     /// curves and push the allocation down as per-site A1 policies.
+    ///
+    /// **Budget conservation invariant (DESIGN.md §11).**  Sites that
+    /// cannot join the water-fill — a stale profile right after churn, a
+    /// scripted outage — do *not* silently vanish from the ledger (the
+    /// old behaviour would have spread the full budget over the rest
+    /// while the dropped site kept drawing under its old cap, busting the
+    /// global budget).  Instead each such site's **current cap wattage is
+    /// reserved** off the top, and only the remainder is allocated.  When
+    /// the remainder cannot cover the participating sites' driver floors
+    /// yet (early stagger), the allocation waits — caps are left as they
+    /// are, which is exactly the pre-enforcement state.
+    ///
     /// Traffic-driven sites report their offered load on KPM; the
     /// water-fill scales each site's throughput curve by its load share,
     /// so budget watts flow to the sites with the most demand behind
     /// them.  Without load reports every weight is exactly 1.0 and the
-    /// allocation is bit-identical to the unweighted one.
+    /// allocation is bit-identical to the unweighted one.  Derated sites
+    /// only offer operating points under their thermal ceiling.
     fn enforce_budget(&mut self) -> Result<()> {
         let loads = self.smo.offered_load_by_host();
         let mean_load = if loads.is_empty() {
@@ -859,59 +1255,122 @@ impl Fleet {
             loads.values().sum::<f64>() / loads.len() as f64
         };
         let mut profiles = Vec::new();
-        for site in &self.sites {
-            match site.host.profile_log.last() {
-                // Only water-fill on *fresh* curves: the latest profile must
-                // be of the model the site currently runs, otherwise (e.g.
-                // right after churn) wait for the stagger to re-profile.
-                Some(out) if out.model == site.model_id => {
-                    // Points below the site's policy minimum are not legal
-                    // operating points; including them would let the
-                    // allocator "spend" less than the later `.max(min)`
-                    // raise actually enforces, silently busting the budget.
-                    let min_frac = site.host.policy.min_cap_frac;
-                    let legal: Vec<_> = out
-                        .points
-                        .iter()
-                        .filter(|p| p.cap_frac >= min_frac - 1e-9)
-                        .cloned()
-                        .collect();
-                    let pts = if legal.is_empty() { out.points.clone() } else { legal };
-                    let mut profile = HostProfile::from_profile(
-                        &site.name,
-                        site.host.testbed.hw.gpu.tdp_w,
-                        &pts,
-                    );
-                    // Floored: a site that reported zero demand for one
-                    // slot must shrink, not vanish — weight 0 would zero
-                    // its whole curve and pin it at min_cap until the
-                    // next refresh, which a latency_critical site cannot
-                    // afford at the next morning ramp.
-                    let weight = match loads.get(&site.name) {
-                        Some(&l) if mean_load > 0.0 => {
-                            (l / mean_load).max(MIN_BUDGET_WEIGHT)
-                        }
-                        _ => 1.0,
-                    };
-                    for p in profile.points.iter_mut() {
-                        p.1 *= weight;
-                    }
-                    profiles.push(profile);
+        let mut alloc_sites: Vec<usize> = Vec::new();
+        let mut reserved_w = 0.0;
+        let mut waiting = 0usize; // stale-profile sites (stagger/churn)
+        for (i, site) in self.sites.iter().enumerate() {
+            let down = site.down;
+            let derate_max =
+                self.scenario_rt.as_ref().map_or(1.0, |rt| rt.derate[i]);
+            let fresh = matches!(
+                site.host.profile_log.last(),
+                Some(out) if out.model == site.model_id
+            );
+            if down || !fresh {
+                // Reserve the site's worst-case draw under its current
+                // cap: a dark site still holds its cap for the recovery
+                // round, and an unprofiled site keeps running under its
+                // old cap until the stagger reaches it.
+                if !down {
+                    waiting += 1;
                 }
-                _ => return Ok(()), // stagger not done yet; retry next round
+                reserved_w += site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+                continue;
             }
+            let out = site.host.profile_log.last().expect("checked fresh");
+            // Points below the site's policy minimum are not legal
+            // operating points; including them would let the allocator
+            // "spend" less than the later `.max(min)` raise actually
+            // enforces, silently busting the budget.  Points above a
+            // thermal derate ceiling are equally illegal — the hardware
+            // cannot run there.
+            let min_frac = site.host.policy.min_cap_frac;
+            let legal: Vec<_> = out
+                .points
+                .iter()
+                .filter(|p| {
+                    p.cap_frac >= min_frac - 1e-9 && p.cap_frac <= derate_max + 1e-9
+                })
+                .cloned()
+                .collect();
+            let pts = if legal.is_empty() {
+                if derate_max < 1.0 {
+                    // The profile has no point under the ceiling (a very
+                    // deep derate): hold the site at its clamped cap and
+                    // reserve those watts instead of allocating.
+                    reserved_w +=
+                        site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+                    continue;
+                }
+                out.points.clone()
+            } else {
+                legal
+            };
+            let mut profile =
+                HostProfile::from_profile(&site.name, site.host.testbed.hw.gpu.tdp_w, &pts);
+            // Floored: a site that reported zero demand for one slot must
+            // shrink, not vanish — weight 0 would zero its whole curve
+            // and pin it at min_cap until the next refresh, which a
+            // latency_critical site cannot afford at the next morning
+            // ramp.
+            let weight = match loads.get(&site.name) {
+                Some(&l) if mean_load > 0.0 => (l / mean_load).max(MIN_BUDGET_WEIGHT),
+                _ => 1.0,
+            };
+            for p in profile.points.iter_mut() {
+                p.1 *= weight;
+            }
+            profiles.push(profile);
+            alloc_sites.push(i);
         }
-        let total_tdp: f64 = profiles.iter().map(|p| p.tdp_w).sum();
-        let budget_w = total_tdp * self.config.budget_frac;
-        let allocs = allocate_budget(&profiles, budget_w, 5.0)
-            .context("fleet power budget below the driver floors")?;
-        for (site, alloc) in self.sites.iter().zip(&allocs) {
+        if profiles.is_empty() {
+            return Ok(()); // nothing profiled yet; retry next round
+        }
+        // The *first* allocation is always full-fleet: mid-stagger the
+        // waiting sites still sit at stock caps, and allocating the thin
+        // remainder would clamp the profiled sites far below their final
+        // share (caps ratchet down, not up, between profiles).  Once a
+        // full water-fill has run, later rounds use the reservation path
+        // so churn, outages and derates re-balance immediately without
+        // ever busting the budget.
+        if waiting > 0 && !self.ever_enforced {
+            return Ok(());
+        }
+        // The budget is defined over the whole fleet's TDP — including
+        // reserved sites, whose watts come off the top.
+        let total_tdp: f64 =
+            self.sites.iter().map(|s| s.host.testbed.hw.gpu.tdp_w).sum();
+        let budget_w = total_tdp * self.current_budget_frac();
+        let remainder = budget_w - reserved_w;
+        let Some(allocs) = allocate_budget(&profiles, remainder, 5.0) else {
+            if reserved_w > 0.0 {
+                // The remainder cannot cover the participants' floors
+                // while reservations hold the rest: wait for the stagger
+                // or the recovery to free watts.
+                return Ok(());
+            }
+            anyhow::bail!("fleet power budget below the driver floors");
+        };
+        for (i, alloc) in alloc_sites.iter().zip(&allocs) {
+            let site = &mut self.sites[*i];
             let mut policy = site.host.policy.clone();
             policy.id = format!("{}-budget", site.name);
             policy.max_cap_frac = alloc.cap_frac.max(policy.min_cap_frac);
+            // Enact the ceiling immediately on the coordinator: budget
+            // conservation is a per-round invariant (a scripted budget
+            // step must bite in its own round), so the clamp cannot wait
+            // for the A1 message to land at the site next round.  The
+            // delivered policy then re-applies the same bound, a no-op.
+            if site.host.testbed.cap_frac() > policy.max_cap_frac {
+                site.host.testbed.set_cap_frac(policy.max_cap_frac);
+            }
             self.smo.push_policy_to(&site.name, policy)?;
         }
-        self.budget_applied = true;
+        // Enforced-in-full only once no site is waiting on a fresh
+        // profile; until then, retry every round (down sites are excluded
+        // deliberately — their reservation *is* their allocation).
+        self.ever_enforced = true;
+        self.budget_applied = waiting == 0;
         Ok(())
     }
 
@@ -933,7 +1392,10 @@ impl Fleet {
             site.model_id = model_id.clone();
             site.trained = false;
             site.epochs_trained = 0;
-            self.assignments.lock().unwrap()[site.index] = (site.name.clone(), model_id);
+            // A down site stays blanked for the scheduler; its new
+            // assignment lands when the recovery event restores it.
+            let assigned = if site.down { String::new() } else { model_id };
+            self.assignments.lock().unwrap()[site.index] = (site.name.clone(), assigned);
         }
         // New models re-profile; refresh the budget allocation afterwards.
         self.budget_applied = false;
@@ -1018,8 +1480,8 @@ impl Fleet {
             } else {
                 est_savings.iter().sum::<f64>() / est_savings.len() as f64
             },
-            budget_w: if self.config.budget_frac < 1.0 {
-                Some(total_tdp * self.config.budget_frac)
+            budget_w: if self.current_budget_frac() < 1.0 {
+                Some(total_tdp * self.current_budget_frac())
             } else {
                 None
             },

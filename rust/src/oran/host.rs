@@ -445,7 +445,7 @@ mod tests {
         let window = SlotWindow { t0: 0.0, dur: 10.0, slot_in_day: 0, flush: true };
         let mut vec = Vec::new();
         let mut hist = LatencyHistogram::new();
-        let mut lat = SlotLatencies { exact: Some(&mut vec), hist: &mut hist };
+        let mut lat = SlotLatencies { exact: Some(&mut vec), hist: &mut hist, phase: None };
         let before = h.total_energy_j;
         let report =
             h.serve_slot("ResNet", &mut server, &former, 40, window, &mut lat).unwrap();
@@ -473,7 +473,7 @@ mod tests {
         assert!(kpm.p99_latency_s <= hist.percentile(0.99) + 1e-15);
         // Unknown model: no service, no report.
         let mut hist2 = LatencyHistogram::new();
-        let mut lat = SlotLatencies { exact: None, hist: &mut hist2 };
+        let mut lat = SlotLatencies { exact: None, hist: &mut hist2, phase: None };
         assert!(h.serve_slot("ghost", &mut server, &former, 0, window, &mut lat).is_none());
     }
 

@@ -33,8 +33,8 @@ pub use a1::A1PolicyService;
 pub use bus::{Bus, Endpoint, EndpointId};
 pub use catalogue::{CatalogueEntry, ModelCatalogue, ModelState};
 pub use fleet::{
-    bench_config, run_bench_suite, site_seed, Fleet, FleetConfig, FleetReport, FleetSite,
-    SiteReport, SiteTraffic,
+    bench_config, run_bench_suite, site_seed, FiredEvent, Fleet, FleetConfig, FleetReport,
+    FleetSite, SiteReport, SiteTraffic,
 };
 pub use host::InferenceHost;
 pub use lifecycle::{LifecycleStage, MlLifecycle};

@@ -144,6 +144,16 @@ impl Smo {
             .collect()
     }
 
+    /// Forget a host's latest load and latency reports (site outage,
+    /// DESIGN.md §11): a down host reports nothing, and its stale
+    /// busy-hour weight or busy-day p99 must not survive into the next
+    /// budget refresh — or worse, into the recovery round, where it would
+    /// skew the water-fill toward a site that just came back empty.
+    pub fn clear_host_load(&mut self, host: &str) {
+        self.offered_load.remove(host);
+        self.latency_p99.remove(host);
+    }
+
     /// Latest KPM-reported offered load per host (requests/s), keyed and
     /// iterated in host order.  A reported zero stays zero (an idle site
     /// must not keep its busy-hour weight); hosts that never sent a KPM
@@ -277,6 +287,34 @@ mod tests {
         assert_eq!(p99s.len(), 2);
         assert_eq!(p99s.get("h1"), Some(&0.0));
         assert_eq!(p99s.get("h2"), Some(&0.035));
+    }
+
+    #[test]
+    fn clear_host_load_forgets_stale_weights() {
+        let bus = Bus::new();
+        let mut smo = Smo::new(bus.clone());
+        bus.send("h1", "smo", OranMessage::Kpm(KpmReport {
+            host: "h1".into(),
+            at: crate::util::Seconds(1.0),
+            model: None,
+            gpu_power_w: 200.0,
+            cpu_power_w: 0.0,
+            dram_power_w: 0.0,
+            gpu_util: 0.5,
+            cap_frac: 1.0,
+            samples_processed: 10,
+            energy_j: 5.0,
+            offered_load_per_s: 40.0,
+            p99_latency_s: 0.05,
+        }));
+        bus.deliver_all();
+        smo.step();
+        assert_eq!(smo.offered_load_by_host().get("h1"), Some(&40.0));
+        smo.clear_host_load("h1");
+        assert!(smo.offered_load_by_host().get("h1").is_none());
+        assert!(smo.latency_p99_by_host().get("h1").is_none());
+        // Clearing an unknown host is a no-op, not a panic.
+        smo.clear_host_load("ghost");
     }
 
     #[test]

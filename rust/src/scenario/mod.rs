@@ -1,0 +1,529 @@
+//! Deterministic scenario engine: scripted operational events for the
+//! fleet simulator (DESIGN.md §11).
+//!
+//! FROST's contribution is *Online System Tuning* — re-profiling and
+//! re-capping as conditions change — yet a static fleet run never changes
+//! conditions: the budget, the site set, and the max caps are frozen and
+//! demand only follows the diurnal curve.  This module scripts the
+//! transients that dominate RAN energy in practice (BeGREEN's operational
+//! events; Tariq et al.'s load- and availability-driven dynamics, see
+//! PAPERS.md):
+//!
+//! * **budget steps** ([`ScenarioEvent::BudgetStep`]) — grid-price or
+//!   renewable-supply changes rescale the global GPU budget fraction and
+//!   force an immediate re-water-fill;
+//! * **site outages + recovery** ([`ScenarioEvent::SiteDown`] /
+//!   [`ScenarioEvent::SiteUp`]) — a down site serves nothing and draws
+//!   idle power; the SMO drops it from the water-fill *without leaking its
+//!   watts* (its current cap wattage stays reserved), and its arrivals
+//!   redistribute to the surviving sites of the same region;
+//! * **flash crowds** ([`ScenarioEvent::SurgeStart`] /
+//!   [`ScenarioEvent::SurgeEnd`]) — a multiplicative window layered on the
+//!   diurnal rate through `ArrivalGen::set_rate_mult`, exact and
+//!   aggregated serving paths alike;
+//! * **thermal derating** ([`ScenarioEvent::Derate`] /
+//!   [`ScenarioEvent::DerateEnd`]) — a site's max cap steps down: the A1
+//!   policy ceiling clamps, the enforced cap drops with it (invalidating
+//!   the site's step-estimate cache), and FROST re-profiles under the
+//!   constraint.
+//!
+//! **Determinism contract (§6).**  A scenario is a frozen script: events
+//! fire at *round* boundaries, dispatched by the fleet coordinator before
+//! the parallel site phase, so every run of the same seed + script is
+//! bit-identical for any worker-thread count.  Events never draw
+//! randomness; arrival perturbations flow through the per-site seeded
+//! generators (`ArrivalGen`), and a rate multiplier of exactly 1.0 leaves
+//! the stream bit-identical to a scenario-free run.
+//!
+//! A scenario also names **phases** — contiguous slot ranges of the
+//! traffic day ("before", "outage", "recovered", …) — which the fleet
+//! uses to keep per-phase latency histograms and
+//! [`crate::figures::scenario_comparison`] uses to report per-phase
+//! energy/latency/attainment for FROST vs stock caps.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::traffic::TrafficConfig;
+
+/// One scripted operational event (all variants are `Copy`: site indices
+/// and scalars only, so scripts can be compared and logged cheaply).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioEvent {
+    /// Rescale the global GPU power budget fraction (grid price /
+    /// renewable supply step) and force an immediate re-water-fill.
+    BudgetStep { budget_frac: f64 },
+    /// Site `site` goes dark: it serves nothing, sheds its queue, draws
+    /// idle power, and its arrivals redistribute within its region.
+    SiteDown { site: usize },
+    /// Site `site` comes back: arrivals return, its (still-fresh) profile
+    /// rejoins the water-fill on the forced refresh.
+    SiteUp { site: usize },
+    /// Flash-crowd surge: multiply the arrival rate by `mult` (layered on
+    /// the diurnal shape) for one site, or fleet-wide when `site` is None.
+    SurgeStart { mult: f64, site: Option<usize> },
+    /// End of the surge window (resets the multiplier to exactly 1.0).
+    SurgeEnd { site: Option<usize> },
+    /// Thermal derating: site `site`'s max cap steps down to
+    /// `max_cap_frac` (policy ceiling clamps, enforced cap drops with it,
+    /// step-estimate cache invalidates, FROST re-profiles under the
+    /// constraint).
+    Derate { site: usize, max_cap_frac: f64 },
+    /// Thermal headroom restored: the pre-derate policy ceiling returns
+    /// (FROST re-profiles to exploit it; a stock-cap fleet returns to its
+    /// pre-derate cap).
+    DerateEnd { site: usize },
+}
+
+impl fmt::Display for ScenarioEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioEvent::BudgetStep { budget_frac } => {
+                write!(f, "budget step -> {:.0}% of fleet TDP", budget_frac * 100.0)
+            }
+            ScenarioEvent::SiteDown { site } => write!(f, "site {site} outage"),
+            ScenarioEvent::SiteUp { site } => write!(f, "site {site} recovery"),
+            ScenarioEvent::SurgeStart { mult, site: Some(i) } => {
+                write!(f, "flash crowd x{mult:.2} at site {i}")
+            }
+            ScenarioEvent::SurgeStart { mult, site: None } => {
+                write!(f, "flash crowd x{mult:.2} fleet-wide")
+            }
+            ScenarioEvent::SurgeEnd { site: Some(i) } => {
+                write!(f, "flash crowd ends at site {i}")
+            }
+            ScenarioEvent::SurgeEnd { site: None } => write!(f, "flash crowd ends"),
+            ScenarioEvent::Derate { site, max_cap_frac } => {
+                write!(f, "site {site} derates to {:.0}% cap", max_cap_frac * 100.0)
+            }
+            ScenarioEvent::DerateEnd { site } => write!(f, "site {site} derate lifted"),
+        }
+    }
+}
+
+/// An event pinned to an orchestration round (rounds are 1-based; the
+/// traffic day's slot `k` is served in round `warmup_rounds + 1 + k`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedEvent {
+    pub round: u32,
+    pub event: ScenarioEvent,
+}
+
+/// A named contiguous slot range `[from_slot, to_slot)` of the traffic
+/// day, used for per-phase reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub name: String,
+    pub from_slot: u32,
+    pub to_slot: u32,
+}
+
+/// A frozen event script over one traffic day.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Events sorted ascending by round, all within the traffic day.
+    pub events: Vec<TimedEvent>,
+    /// Contiguous phases covering every slot of the day exactly once.
+    pub phases: Vec<Phase>,
+    /// Arrival-redistribution domain: sites are grouped into contiguous
+    /// index blocks of this size, and a down site's demand redistributes
+    /// to the *up* sites of its block.
+    pub region_size: usize,
+}
+
+/// Names of the built-in presets, in `frost scenario` help order.
+pub const PRESETS: [&str; 4] = ["outage-day", "grid-step", "flash-crowd", "heatwave"];
+
+impl Scenario {
+    /// The round in which the traffic day's slot `k` is served.
+    pub fn round_for_slot(tr: &TrafficConfig, slot: u32) -> u32 {
+        tr.warmup_rounds + 1 + slot
+    }
+
+    /// Phase index of a slot of the day (phases cover the whole day, so
+    /// this is total for validated scenarios; out-of-range slots clamp to
+    /// the last phase).
+    pub fn phase_of_slot(&self, slot_in_day: u32) -> usize {
+        for (i, p) in self.phases.iter().enumerate() {
+            if slot_in_day >= p.from_slot && slot_in_day < p.to_slot {
+                return i;
+            }
+        }
+        self.phases.len().saturating_sub(1)
+    }
+
+    /// True when any site is scripted to be down during phase `p` (used
+    /// to exempt outage windows from the latency acceptance gate).
+    pub fn phase_has_outage(&self, p: usize, tr: &TrafficConfig) -> bool {
+        let Some(phase) = self.phases.get(p) else { return false };
+        let from = Scenario::round_for_slot(tr, phase.from_slot);
+        let to = Scenario::round_for_slot(tr, phase.to_slot);
+        // Walk the script, tracking which sites are down as each phase
+        // round begins or while an outage spans into it.
+        let mut down: Vec<usize> = Vec::new();
+        for te in &self.events {
+            match te.event {
+                ScenarioEvent::SiteDown { site } => {
+                    if te.round < to {
+                        down.push(site);
+                    }
+                }
+                ScenarioEvent::SiteUp { site } => {
+                    // An outage interval [down, up) misses the phase
+                    // entirely when it ends at or before the phase start.
+                    if te.round <= from {
+                        down.retain(|&s| s != site);
+                    }
+                }
+                _ => {}
+            }
+        }
+        !down.is_empty()
+    }
+
+    /// Reject malformed scripts: out-of-range sites or slots, unordered
+    /// events, non-finite multipliers, unpaired down/up transitions, or
+    /// phases that do not tile the day.  Hard errors, never clamps — a
+    /// silently corrected script would still claim determinism it cannot
+    /// deliver.
+    pub fn validate(&self, sites: usize, tr: &TrafficConfig) -> Result<()> {
+        anyhow::ensure!(self.region_size >= 1, "region_size must be at least 1");
+        anyhow::ensure!(!self.phases.is_empty(), "scenario needs at least one phase");
+        let mut cursor = 0u32;
+        for p in &self.phases {
+            anyhow::ensure!(
+                p.from_slot == cursor && p.to_slot > p.from_slot,
+                "phase '{}' [{}, {}) must start at slot {cursor} and be non-empty",
+                p.name,
+                p.from_slot,
+                p.to_slot
+            );
+            cursor = p.to_slot;
+        }
+        anyhow::ensure!(
+            cursor == tr.slots_per_day,
+            "phases cover {cursor} slots but the day has {}",
+            tr.slots_per_day
+        );
+        let first = tr.warmup_rounds + 1;
+        let last = tr.warmup_rounds + tr.slots_per_day;
+        let mut prev_round = 0u32;
+        let mut down = vec![false; sites];
+        let mut surged = vec![false; sites];
+        let mut derated = vec![false; sites];
+        for te in &self.events {
+            anyhow::ensure!(
+                te.round >= prev_round,
+                "events must be sorted by round ({} after {prev_round})",
+                te.round
+            );
+            prev_round = te.round;
+            anyhow::ensure!(
+                te.round >= first && te.round <= last,
+                "event '{}' at round {} lands outside the traffic day \
+                 (rounds {first}..={last})",
+                te.event,
+                te.round
+            );
+            let check_site = |site: usize| -> Result<()> {
+                anyhow::ensure!(site < sites, "event site {site} out of range ({sites} sites)");
+                Ok(())
+            };
+            match te.event {
+                ScenarioEvent::BudgetStep { budget_frac } => {
+                    // The fleet's enforcement gate is `budget_frac < 1.0`;
+                    // a step to >= 1.0 would switch the water-fill off
+                    // while the previously allocated tight caps stay in
+                    // force — a silent freeze, not a relaxation.  Scripts
+                    // must keep steps inside (0, 1).
+                    anyhow::ensure!(
+                        budget_frac.is_finite() && budget_frac > 0.0 && budget_frac < 1.0,
+                        "budget step to {budget_frac} must be in (0, 1): stepping to >= 1.0 \
+                         disables enforcement with the old caps frozen in place"
+                    );
+                }
+                ScenarioEvent::SiteDown { site } => {
+                    check_site(site)?;
+                    anyhow::ensure!(!down[site], "site {site} is already down");
+                    down[site] = true;
+                }
+                ScenarioEvent::SiteUp { site } => {
+                    check_site(site)?;
+                    anyhow::ensure!(down[site], "site {site} recovery without an outage");
+                    down[site] = false;
+                }
+                ScenarioEvent::SurgeStart { mult, site } => {
+                    anyhow::ensure!(
+                        mult.is_finite() && mult > 0.0,
+                        "surge multiplier {mult} must be positive and finite"
+                    );
+                    match site {
+                        Some(i) => {
+                            check_site(i)?;
+                            anyhow::ensure!(!surged[i], "site {i} is already surging");
+                            surged[i] = true;
+                        }
+                        None => {
+                            anyhow::ensure!(
+                                surged.iter().all(|s| !s),
+                                "fleet-wide surge over an active surge"
+                            );
+                            surged.fill(true);
+                        }
+                    }
+                }
+                ScenarioEvent::SurgeEnd { site } => match site {
+                    Some(i) => {
+                        check_site(i)?;
+                        anyhow::ensure!(surged[i], "surge end at site {i} without a surge");
+                        surged[i] = false;
+                    }
+                    None => {
+                        anyhow::ensure!(
+                            surged.iter().any(|s| *s),
+                            "fleet-wide surge end without a surge"
+                        );
+                        surged.fill(false);
+                    }
+                },
+                ScenarioEvent::Derate { site, max_cap_frac } => {
+                    check_site(site)?;
+                    anyhow::ensure!(
+                        max_cap_frac.is_finite() && max_cap_frac > 0.0 && max_cap_frac <= 1.0,
+                        "derate cap {max_cap_frac} must be in (0, 1]"
+                    );
+                    anyhow::ensure!(!derated[site], "site {site} is already derated");
+                    derated[site] = true;
+                }
+                ScenarioEvent::DerateEnd { site } => {
+                    check_site(site)?;
+                    anyhow::ensure!(derated[site], "derate end at site {site} without a derate");
+                    derated[site] = false;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a named preset sized to the fleet and its traffic day.
+    /// Slot anchors are fractions of the day, so the same script shape
+    /// works for a 6-slot smoke day and a 24-slot full day.
+    pub fn preset(name: &str, sites: usize, tr: &TrafficConfig) -> Result<Scenario> {
+        anyhow::ensure!(sites >= 1, "preset needs at least one site");
+        let s = tr.slots_per_day;
+        anyhow::ensure!(s >= 3, "presets need at least 3 slots per day");
+        // Fractions of the day as a pair of slot anchors, clamped so all
+        // three phases are at least one slot wide even on tiny days
+        // (slots_per_day 3 would otherwise collapse close fractions like
+        // 5/12 and 7/12 onto the same slot and fail validation).
+        let anchors = |n1: u32, d1: u32, n2: u32, d2: u32| -> (u32, u32) {
+            let a = ((s * n1) / d1).clamp(1, s - 2);
+            let b = ((s * n2) / d2).clamp(a + 1, s - 1);
+            (a, b)
+        };
+        let r = |slot: u32| Scenario::round_for_slot(tr, slot);
+        let phases = |names: [&str; 3], a: u32, b: u32| -> Vec<Phase> {
+            vec![
+                Phase { name: names[0].into(), from_slot: 0, to_slot: a },
+                Phase { name: names[1].into(), from_slot: a, to_slot: b },
+                Phase { name: names[2].into(), from_slot: b, to_slot: s },
+            ]
+        };
+        let scenario = match name {
+            "outage-day" => {
+                // One site dies in the morning ramp and recovers for the
+                // evening peak; its region absorbs the demand.
+                let site = 2 % sites;
+                let (a, b) = anchors(1, 4, 2, 3);
+                Scenario {
+                    name: name.into(),
+                    events: vec![
+                        TimedEvent { round: r(a), event: ScenarioEvent::SiteDown { site } },
+                        TimedEvent { round: r(b), event: ScenarioEvent::SiteUp { site } },
+                    ],
+                    phases: phases(["before", "outage", "recovered"], a, b),
+                    region_size: 4,
+                }
+            }
+            "grid-step" => {
+                // A grid-price spike tightens the budget mid-day, then a
+                // renewable surplus relaxes it past the starting point.
+                let (a, b) = anchors(1, 3, 3, 4);
+                Scenario {
+                    name: name.into(),
+                    events: vec![
+                        TimedEvent {
+                            round: r(a),
+                            event: ScenarioEvent::BudgetStep { budget_frac: 0.6 },
+                        },
+                        TimedEvent {
+                            round: r(b),
+                            event: ScenarioEvent::BudgetStep { budget_frac: 0.9 },
+                        },
+                    ],
+                    phases: phases(["normal", "low-budget", "restored"], a, b),
+                    region_size: 4,
+                }
+            }
+            "flash-crowd" => {
+                // A fleet-wide ×2.5 demand surge layered on the midday
+                // plateau.
+                let (a, b) = anchors(5, 12, 7, 12);
+                Scenario {
+                    name: name.into(),
+                    events: vec![
+                        TimedEvent {
+                            round: r(a),
+                            event: ScenarioEvent::SurgeStart { mult: 2.5, site: None },
+                        },
+                        TimedEvent { round: r(b), event: ScenarioEvent::SurgeEnd { site: None } },
+                    ],
+                    phases: phases(["before", "surge", "after"], a, b),
+                    region_size: 4,
+                }
+            }
+            "heatwave" => {
+                // Afternoon heat derates every odd site (the setup no.2
+                // half of the fleet) to 75% cap until the evening.
+                let (a, b) = anchors(1, 3, 3, 4);
+                let mut events = Vec::new();
+                for site in (1..sites).step_by(2) {
+                    events.push(TimedEvent {
+                        round: r(a),
+                        event: ScenarioEvent::Derate { site, max_cap_frac: 0.75 },
+                    });
+                }
+                for site in (1..sites).step_by(2) {
+                    events
+                        .push(TimedEvent { round: r(b), event: ScenarioEvent::DerateEnd { site } });
+                }
+                // A one-site fleet has no odd sites; derate site 0 so the
+                // preset still scripts something.
+                if events.is_empty() {
+                    events = vec![
+                        TimedEvent {
+                            round: r(a),
+                            event: ScenarioEvent::Derate { site: 0, max_cap_frac: 0.75 },
+                        },
+                        TimedEvent { round: r(b), event: ScenarioEvent::DerateEnd { site: 0 } },
+                    ];
+                }
+                Scenario {
+                    name: name.into(),
+                    events,
+                    phases: phases(["before", "derated", "restored"], a, b),
+                    region_size: 4,
+                }
+            }
+            other => anyhow::bail!(
+                "unknown scenario preset '{other}' (expected one of: {})",
+                PRESETS.join(", ")
+            ),
+        };
+        scenario.validate(sites, tr)?;
+        Ok(scenario)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(slots: u32) -> TrafficConfig {
+        TrafficConfig { slots_per_day: slots, ..TrafficConfig::smoke() }
+    }
+
+    #[test]
+    fn presets_validate_for_smoke_and_full_days() {
+        for name in PRESETS {
+            for slots in [3u32, 4, 5, 6, 8, 24] {
+                for sites in [1usize, 3, 4, 8, 16] {
+                    let s = Scenario::preset(name, sites, &tr(slots))
+                        .unwrap_or_else(|e| panic!("{name}/{slots}/{sites}: {e:#}"));
+                    assert!(!s.events.is_empty(), "{name} must script something");
+                    // Phases tile the day.
+                    assert_eq!(s.phases.first().unwrap().from_slot, 0);
+                    assert_eq!(s.phases.last().unwrap().to_slot, slots);
+                    for k in 0..slots {
+                        let p = s.phase_of_slot(k);
+                        assert!(k >= s.phases[p].from_slot && k < s.phases[p].to_slot);
+                    }
+                }
+            }
+        }
+        assert!(Scenario::preset("nope", 4, &tr(6)).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_scripts() {
+        let t = tr(6);
+        let base = Scenario::preset("outage-day", 4, &t).unwrap();
+
+        // Out-of-range site.
+        let mut s = base.clone();
+        s.events[0].event = ScenarioEvent::SiteDown { site: 9 };
+        assert!(s.validate(4, &t).is_err());
+
+        // Recovery without an outage.
+        let mut s = base.clone();
+        s.events.remove(0);
+        assert!(s.validate(4, &t).is_err());
+
+        // Event outside the traffic day.
+        let mut s = base.clone();
+        s.events[0].round = 1;
+        assert!(s.validate(4, &t).is_err());
+
+        // Unsorted events.
+        let mut s = base.clone();
+        s.events.swap(0, 1);
+        assert!(s.validate(4, &t).is_err());
+
+        // Degenerate multiplier / budget / derate values.
+        let mut s = base.clone();
+        s.events[0].event = ScenarioEvent::SurgeStart { mult: f64::NAN, site: None };
+        assert!(s.validate(4, &t).is_err());
+        let mut s = base.clone();
+        s.events[0].event = ScenarioEvent::BudgetStep { budget_frac: 0.0 };
+        assert!(s.validate(4, &t).is_err());
+        // A step to >= 1.0 would freeze the old caps with enforcement
+        // off — rejected, not silently accepted.
+        let mut s = base.clone();
+        s.events[0].event = ScenarioEvent::BudgetStep { budget_frac: 1.0 };
+        assert!(s.validate(4, &t).is_err());
+        let mut s = base.clone();
+        s.events[0].event = ScenarioEvent::Derate { site: 0, max_cap_frac: 1.5 };
+        assert!(s.validate(4, &t).is_err());
+
+        // Phases that do not tile the day.
+        let mut s = base.clone();
+        s.phases[1].to_slot = s.phases[1].from_slot + 1;
+        assert!(s.validate(4, &t).is_err());
+
+        // The untouched preset still validates.
+        assert!(base.validate(4, &t).is_ok());
+    }
+
+    #[test]
+    fn outage_phase_detection_matches_the_script() {
+        let t = tr(8);
+        let s = Scenario::preset("outage-day", 4, &t).unwrap();
+        let outage_phase = s
+            .phases
+            .iter()
+            .position(|p| p.name == "outage")
+            .expect("outage-day has an outage phase");
+        assert!(s.phase_has_outage(outage_phase, &t));
+        assert!(!s.phase_has_outage(0, &t), "pre-outage phase is clean");
+        assert!(
+            !s.phase_has_outage(s.phases.len() - 1, &t),
+            "recovered phase is clean"
+        );
+        let g = Scenario::preset("grid-step", 4, &t).unwrap();
+        for p in 0..g.phases.len() {
+            assert!(!g.phase_has_outage(p, &t), "grid-step has no outage");
+        }
+    }
+}

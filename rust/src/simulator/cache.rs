@@ -87,6 +87,7 @@ pub struct StepEstimateCache {
     entries: HashMap<StepKey, StepEstimate>,
     hits: u64,
     misses: u64,
+    invalidations: u64,
 }
 
 impl StepEstimateCache {
@@ -129,10 +130,19 @@ impl StepEstimateCache {
     }
 
     /// Drop every memoized estimate (interned ids survive).  Called when
-    /// the enforced cap changes; with the cap also in the key this is a
-    /// memory bound, not a correctness requirement.
+    /// the enforced cap changes — including a scenario thermal derate
+    /// stepping the cap down (DESIGN.md §11); with the cap also in the
+    /// key this is a memory bound, not a correctness requirement.
     pub fn invalidate(&mut self) {
         self.entries.clear();
+        self.invalidations += 1;
+    }
+
+    /// How many times the memo table has been invalidated (cap changes:
+    /// profiling sweeps, budget pushes, thermal derates).  Scenario tests
+    /// pin that a derate event actually flushed the cache.
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations
     }
 
     pub fn len(&self) -> usize {
@@ -247,9 +257,13 @@ mod tests {
         let w = wl("w", 1.6e9);
         cache.estimate(&e, &w, 128, StepKind::Train);
         assert_eq!(cache.len(), 1);
+        assert_eq!(cache.invalidations(), 0);
         cache.invalidate();
         assert!(cache.is_empty());
+        assert_eq!(cache.invalidations(), 1);
         cache.estimate(&e, &w, 128, StepKind::Train);
         assert_eq!(cache.stats(), (0, 2), "re-solve after invalidation");
+        cache.invalidate();
+        assert_eq!(cache.invalidations(), 2);
     }
 }

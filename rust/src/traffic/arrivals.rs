@@ -166,6 +166,12 @@ pub struct ArrivalGen {
     base_rate_per_s: f64,
     /// Length of the (possibly accelerated) simulated day.
     day_s: f64,
+    /// Scenario-driven rate multiplier (flash-crowd surges, outage
+    /// redistribution; DESIGN.md §11), layered multiplicatively on the
+    /// diurnal × MMPP rate.  Exactly 1.0 outside event windows, which
+    /// leaves the stream bit-identical to a scenario-free run (x·1.0 is
+    /// exact in IEEE 754).
+    rate_mult: f64,
     rng: Pcg32,
     /// MMPP state: currently in the burst phase, and when it next flips.
     burst: bool,
@@ -215,6 +221,7 @@ impl ArrivalGen {
             profile,
             base_rate_per_s,
             day_s,
+            rate_mult: 1.0,
             rng: Pcg32::new(seed, 0x7_AF1C),
             burst: false,
             next_switch: f64::INFINITY,
@@ -223,6 +230,24 @@ impl ArrivalGen {
             g.next_switch = g.exp_sample(1.0 / mean_dwell_s);
         }
         Ok(g)
+    }
+
+    /// Set the scenario rate multiplier (flash crowd / redistribution)
+    /// taking effect from the next generated window.  The caller passes a
+    /// validated value — the fleet computes it from validated scenario
+    /// scripts — so a degenerate multiplier is a programming error, not a
+    /// recoverable condition.
+    pub fn set_rate_mult(&mut self, mult: f64) {
+        assert!(
+            mult.is_finite() && mult > 0.0,
+            "rate multiplier {mult} must be positive and finite"
+        );
+        self.rate_mult = mult;
+    }
+
+    /// Current scenario rate multiplier (1.0 outside event windows).
+    pub fn rate_mult(&self) -> f64 {
+        self.rate_mult
     }
 
     /// Exponential variate with the given rate.
@@ -256,7 +281,7 @@ impl ArrivalGen {
     /// `offered_load_per_s`); this is the reference curve for tests and
     /// ablations.
     pub fn expected_rate(&self, t: f64) -> f64 {
-        self.base_rate_per_s * self.profile.multiplier(t / self.day_s)
+        self.base_rate_per_s * self.rate_mult * self.profile.multiplier(t / self.day_s)
     }
 
     /// Generate the sorted arrival times in `[t0, t0 + dur)` by thinning
@@ -266,7 +291,11 @@ impl ArrivalGen {
     /// increasing windows.
     pub fn slot_into(&mut self, t0: f64, dur: f64, out: &mut Vec<f64>) {
         out.clear();
-        let lambda_max = self.base_rate_per_s * self.profile.peak() * self.kind.max_mult();
+        // The scenario multiplier scales candidate rate and accepted rate
+        // alike (the thinning ratio is unchanged), so the envelope stays
+        // valid for any surge level.
+        let lambda_max =
+            self.base_rate_per_s * self.rate_mult * self.profile.peak() * self.kind.max_mult();
         let mut t = t0;
         loop {
             t += self.exp_sample(lambda_max);
@@ -274,6 +303,7 @@ impl ArrivalGen {
                 break;
             }
             let lam = self.base_rate_per_s
+                * self.rate_mult
                 * self.profile.multiplier(t / self.day_s)
                 * self.state_mult_at(t);
             if self.rng.next_f64() < lam / lambda_max {
@@ -344,7 +374,7 @@ impl ArrivalGen {
             }
             let pa = self.profile.multiplier(t / self.day_s);
             let pb = self.profile.multiplier(seg_end / self.day_s);
-            acc += self.base_rate_per_s * m * 0.5 * (pa + pb) * (seg_end - t);
+            acc += self.base_rate_per_s * self.rate_mult * m * 0.5 * (pa + pb) * (seg_end - t);
             if seg_end <= t {
                 break; // defensive: cannot make progress
             }
@@ -372,12 +402,13 @@ impl ArrivalGen {
                 k += 1;
             }
         }
-        let x = mean + mean.sqrt() * self.rng.normal();
-        if x < 0.0 {
-            0
-        } else {
-            x.round() as u64
-        }
+        // Clamp the negative normal tail explicitly: a draw below zero is
+        // zero arrivals by construction, never a value whose fate rests on
+        // the float→int cast's saturation rules.  (At the cutoff mean of
+        // 64 a negative draw is an 8σ event, so the clamp's bias on the
+        // mean is negligible — pinned by `tests`.)
+        let x = (mean + mean.sqrt() * self.rng.normal()).max(0.0);
+        x.round() as u64
     }
 }
 
@@ -593,6 +624,95 @@ mod tests {
             "peak count {} vs expected {expected_peak:.0}",
             counts[19]
         );
+    }
+
+    #[test]
+    fn poisson_sampler_mean_and_variance_pinned_across_the_normal_cutoff() {
+        // The aggregated path's count sampler switches from Knuth's exact
+        // product method to the (explicitly clamped) normal approximation
+        // at mean 64.  Pin mean and variance on both sides of the cutoff
+        // so the low-mean bias of the approximation stays bounded: both
+        // regimes must deliver mean ≈ λ and variance ≈ λ (Poisson).
+        for &lambda in &[48.0, 60.0, 70.0, 96.0] {
+            // Flat profile + Poisson process: each 1 s window's integrated
+            // mean is exactly the base rate, i.e. λ.
+            let mut g = ArrivalGen::new(
+                ArrivalKind::Poisson,
+                DiurnalProfile::flat(),
+                lambda,
+                1e9, // huge day: the flat profile never wraps mid-test
+                99,
+            )
+            .unwrap();
+            let n = 3_000usize;
+            let mut buf = Vec::new();
+            let mut sum = 0.0f64;
+            let mut sum_sq = 0.0f64;
+            for k in 0..n {
+                g.windowed_counts(k as f64, 1.0, 1, &mut buf);
+                let c = buf.iter().map(|w| w.count).sum::<u64>() as f64;
+                sum += c;
+                sum_sq += c * c;
+            }
+            let mean = sum / n as f64;
+            let var = sum_sq / n as f64 - mean * mean;
+            // Sample-mean σ ≈ sqrt(λ/n) < 0.2; 2.5% of λ is > 6σ.
+            assert!(
+                (mean - lambda).abs() / lambda < 0.025,
+                "λ={lambda}: sample mean {mean}"
+            );
+            // Sample-variance σ ≈ λ·sqrt(2/n) ≈ 2.6% of λ.
+            assert!(
+                (var - lambda).abs() / lambda < 0.12,
+                "λ={lambda}: sample variance {var}"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_mult_scales_both_generation_modes_and_unity_is_bit_exact() {
+        // A ×2 surge must double the volume of the exact and aggregated
+        // modes alike, and setting the multiplier to exactly 1.0 must
+        // leave the stream bit-identical to a generator that never heard
+        // of surges (the scenario engine's §6 obligation).
+        let day = 40_000.0;
+        let mut plain =
+            ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::flat(), 3.0, day, 17).unwrap();
+        let mut touched =
+            ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::flat(), 3.0, day, 17).unwrap();
+        touched.set_rate_mult(1.0);
+        let a = plain.slot(0.0, 2_000.0);
+        let b = touched.slot(0.0, 2_000.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+
+        // Exact mode: ×2 surge doubles the count (±5%).
+        let mut surged =
+            ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::flat(), 3.0, day, 18).unwrap();
+        surged.set_rate_mult(2.0);
+        let n = surged.slot(0.0, 4_000.0).len() as f64;
+        assert!((n - 2.0 * 3.0 * 4_000.0).abs() / (2.0 * 3.0 * 4_000.0) < 0.05, "exact {n}");
+        assert!((surged.expected_rate(0.0) - 6.0).abs() < 1e-12);
+
+        // Aggregated mode: same doubling through the integrated rate.
+        let mut agg =
+            ArrivalGen::new(ArrivalKind::Poisson, DiurnalProfile::flat(), 40.0, day, 19).unwrap();
+        agg.set_rate_mult(2.0);
+        let mut buf = Vec::new();
+        agg.windowed_counts(0.0, 500.0, 64, &mut buf);
+        let total: u64 = buf.iter().map(|w| w.count).sum();
+        let expect = 2.0 * 40.0 * 500.0;
+        assert!((total as f64 - expect).abs() / expect < 0.05, "aggregated {total}");
+
+        // Resetting to 1.0 restores the base volume.
+        agg.set_rate_mult(1.0);
+        agg.windowed_counts(500.0, 500.0, 64, &mut buf);
+        let total: u64 = buf.iter().map(|w| w.count).sum();
+        let expect = 40.0 * 500.0;
+        assert!((total as f64 - expect).abs() / expect < 0.05, "restored {total}");
+        assert_eq!(agg.rate_mult(), 1.0);
     }
 
     #[test]

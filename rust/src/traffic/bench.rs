@@ -122,6 +122,7 @@ impl SlotHarness {
         let mut lat = SlotLatencies {
             exact: if self.aggregated { None } else { Some(&mut self.latencies) },
             hist: &mut self.hist,
+            phase: None,
         };
         let usage =
             self.server.run_slot(window, &self.former, flat_service, |l, n| lat.record(l, n));

@@ -283,19 +283,27 @@ impl ArrivalBuffers {
     }
 }
 
-/// Latency sink of one serving call: always feeds the O(1) histogram;
-/// the exact path additionally appends per-request samples (the
-/// determinism and conservation pins in `tests/traffic.rs` read them —
-/// the aggregated path skips the `Vec`, which is the whole point at 10⁶
-/// users; reports and tables read the histogram on both paths).
+/// Latency sink of one serving call: always feeds the O(1) day
+/// histogram; the exact path additionally appends per-request samples
+/// (the determinism and conservation pins in `tests/traffic.rs` read
+/// them — the aggregated path skips the `Vec`, which is the whole point
+/// at 10⁶ users; reports and tables read the histogram on both paths).
+/// Scenario-driven fleets (DESIGN.md §11) also feed the slot's *phase*
+/// histogram, so per-phase p99s come from the same single recording
+/// pass.
 pub struct SlotLatencies<'a> {
     pub exact: Option<&'a mut Vec<f64>>,
     pub hist: &'a mut LatencyHistogram,
+    /// The scenario phase this slot belongs to (None outside scenarios).
+    pub phase: Option<&'a mut LatencyHistogram>,
 }
 
 impl SlotLatencies<'_> {
     pub fn record(&mut self, latency: f64, n: u64) {
         self.hist.record_n(latency, n);
+        if let Some(p) = self.phase.as_mut() {
+            p.record_n(latency, n);
+        }
         if let Some(v) = self.exact.as_mut() {
             for _ in 0..n {
                 v.push(latency);
@@ -428,18 +436,21 @@ mod tests {
     }
 
     #[test]
-    fn slot_latencies_feed_hist_and_optionally_vec() {
+    fn slot_latencies_feed_hist_phase_and_optionally_vec() {
         let mut hist = LatencyHistogram::new();
         let mut vec = Vec::new();
-        let mut lat = SlotLatencies { exact: Some(&mut vec), hist: &mut hist };
+        let mut lat = SlotLatencies { exact: Some(&mut vec), hist: &mut hist, phase: None };
         lat.record(0.05, 3);
         lat.record(0.1, 1);
         assert_eq!(vec, vec![0.05, 0.05, 0.05, 0.1]);
         assert_eq!(hist.count(), 4);
         let mut hist2 = LatencyHistogram::new();
-        let mut lat = SlotLatencies { exact: None, hist: &mut hist2 };
+        let mut phase = LatencyHistogram::new();
+        let mut lat =
+            SlotLatencies { exact: None, hist: &mut hist2, phase: Some(&mut phase) };
         lat.record(0.05, 3);
         lat.record(0.1, 1);
         assert_eq!(hist2, hist, "histogram identical with or without the vec");
+        assert_eq!(phase, hist, "the phase histogram sees the same samples");
     }
 }

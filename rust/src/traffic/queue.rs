@@ -140,6 +140,19 @@ impl TrafficServer {
         self.enqueue_group(arrival, deadline, 1);
     }
 
+    /// Fail every queued request (site outage, DESIGN.md §11): the queue
+    /// drains, each request counts as dropped, and the shed total is
+    /// returned so the caller can charge it to the outage slot's ledger.
+    /// `t_free` is untouched — a batch already on the GPU at failure time
+    /// was busy-charged when it started.
+    pub fn shed_all(&mut self) -> u64 {
+        let shed = self.queued;
+        self.queue.clear();
+        self.queued = 0;
+        self.dropped += shed;
+        shed
+    }
+
     /// Enqueue `count` requests all arriving at `arrival` (the aggregated
     /// path: one call per arrival window).  Same ordering contract as
     /// [`Self::enqueue`].
@@ -520,6 +533,28 @@ mod tests {
         assert_eq!(expand(&e2), expand(&a2));
         assert_eq!(exact.queue_len(), 0);
         assert_eq!(agg.queue_len(), 0);
+    }
+
+    #[test]
+    fn shed_all_drops_the_whole_queue_and_conserves_counters() {
+        let mut srv = TrafficServer::new();
+        srv.enqueue(0.0, 1.0);
+        srv.enqueue_group(0.1, 1.1, 41);
+        assert_eq!(srv.queue_len(), 42);
+        let shed = srv.shed_all();
+        assert_eq!(shed, 42);
+        assert_eq!(srv.queue_len(), 0);
+        assert_eq!(srv.dropped, 42);
+        // Serving after the shed starts from a clean queue.
+        let former = BatchFormer { max_batch: 4, slack_mult: 1.5, max_wait_s: 0.25 };
+        let mut lat = Vec::new();
+        srv.enqueue(5.0, 6.0);
+        let u =
+            srv.run_slot(win(5.0, 10.0, true), &former, flat_service(0.1), into_vec(&mut lat));
+        assert_eq!(u.served, 1);
+        assert_eq!(srv.served, 1);
+        assert_eq!(srv.dropped, 42);
+        assert_eq!(srv.shed_all(), 0, "empty queue sheds nothing");
     }
 
     #[test]

@@ -70,6 +70,10 @@ pub struct SloSummary {
     pub dropped: u64,
     /// Served, but past the deadline.
     pub late: u64,
+    /// Non-finite latency samples excluded from the percentiles (a NaN or
+    /// ±inf — serving never produces them, but a single poisoned sample
+    /// must degrade to a counter, not a ~4.7 h p99; see `metrics::hist`).
+    pub non_finite: u64,
     pub p50_s: f64,
     pub p95_s: f64,
     pub p99_s: f64,
@@ -82,9 +86,12 @@ impl SloSummary {
     /// Sorts `latencies` in place (nearest-rank percentiles need order)
     /// with `f64::total_cmp`, so a NaN sample — which serving never
     /// produces, but a mid-round panic is never the right failure mode —
-    /// sorts to the top instead of aborting, and the rank convention is
-    /// exactly the shared `metrics::percentile` one the bench harness
-    /// uses.
+    /// sorts to the top instead of aborting.  Non-finite samples are then
+    /// *excluded* from the percentile ranks and surfaced in
+    /// [`SloSummary::non_finite`] (matching the histogram path): one
+    /// poisoned sample must not drag p99 to infinity.  The rank
+    /// convention over the finite prefix is exactly the shared
+    /// `metrics::percentile` one the bench harness uses.
     pub fn from_latencies(
         qos: QosClass,
         deadline_s: f64,
@@ -95,6 +102,17 @@ impl SloSummary {
         latencies: &mut [f64],
     ) -> SloSummary {
         latencies.sort_by(|a, b| a.total_cmp(b));
+        let non_finite = latencies.iter().filter(|x| !x.is_finite()).count() as u64;
+        let finite_only: Vec<f64>;
+        let ranked: &[f64] = if non_finite == 0 {
+            latencies
+        } else {
+            // Rare (poisoned-sample) path: rank over the finite subset
+            // only.  total_cmp puts -inf/-NaN first and +inf/NaN last, so
+            // filtering preserves the sort.
+            finite_only = latencies.iter().copied().filter(|x| x.is_finite()).collect();
+            &finite_only
+        };
         let on_time = served.saturating_sub(late);
         SloSummary {
             qos,
@@ -103,9 +121,10 @@ impl SloSummary {
             served,
             dropped,
             late,
-            p50_s: percentile(latencies, 0.50),
-            p95_s: percentile(latencies, 0.95),
-            p99_s: percentile(latencies, 0.99),
+            non_finite,
+            p50_s: percentile(ranked, 0.50),
+            p95_s: percentile(ranked, 0.95),
+            p99_s: percentile(ranked, 0.99),
             attainment: if offered > 0 { on_time as f64 / offered as f64 } else { 1.0 },
         }
     }
@@ -115,7 +134,8 @@ impl SloSummary {
     /// the roll-up costs O(bins) per round instead of O(n log n) — the
     /// path every fleet-scale report takes.  Histogram percentiles read
     /// the lower edge of the selected bin (≤ 3.2% below the exact order
-    /// statistic; see `metrics::hist`).
+    /// statistic; see `metrics::hist`).  The histogram's skipped
+    /// non-finite tally rides along as [`SloSummary::non_finite`].
     pub fn from_histogram(
         qos: QosClass,
         deadline_s: f64,
@@ -133,6 +153,7 @@ impl SloSummary {
             served,
             dropped,
             late,
+            non_finite: hist.non_finite(),
             p50_s: hist.percentile(0.50),
             p95_s: hist.percentile(0.95),
             p99_s: hist.percentile(0.99),
@@ -191,14 +212,21 @@ mod tests {
     }
 
     #[test]
-    fn nan_latency_cannot_panic_the_rollup() {
-        // Regression: the old partial_cmp().expect() aborted the round on
-        // the first NaN.  total_cmp sorts NaN last; counters and the
-        // finite percentiles stay usable.
-        let mut lat = vec![0.02, f64::NAN, 0.01, 0.03];
-        let s = SloSummary::from_latencies(QosClass::Balanced, 0.4, 4, 4, 0, 0, &mut lat);
-        assert_eq!(s.served, 4);
+    fn nan_latency_cannot_panic_or_poison_the_rollup() {
+        // Regression 1: the old partial_cmp().expect() aborted the round
+        // on the first NaN.  Regression 2: a NaN/±inf used to rank into
+        // the top of the order statistics, poisoning p99; now it is
+        // excluded and surfaced as `non_finite`.
+        let mut lat = vec![0.02, f64::NAN, 0.01, 0.03, f64::INFINITY];
+        let s = SloSummary::from_latencies(QosClass::Balanced, 0.4, 5, 5, 0, 0, &mut lat);
+        assert_eq!(s.served, 5);
+        assert_eq!(s.non_finite, 2);
         assert!((s.p50_s - 0.02).abs() < 1e-12);
+        assert!((s.p99_s - 0.03).abs() < 1e-12, "p99 {} poisoned", s.p99_s);
+        // Clean samples report zero.
+        let mut ok = vec![0.01, 0.02];
+        let s = SloSummary::from_latencies(QosClass::Balanced, 0.4, 2, 2, 0, 0, &mut ok);
+        assert_eq!(s.non_finite, 0);
     }
 
     #[test]
