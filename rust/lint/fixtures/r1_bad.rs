@@ -1,0 +1,5 @@
+//! R1 violation: float ordering through `partial_cmp`.
+
+pub fn pick(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,8 @@
+//! R1 clean: `total_cmp` is total over NaN and panic-free.
+//! The word partial_cmp in this comment must not fire the rule.
+
+pub fn pick(xs: &mut [f64]) {
+    let prose = "partial_cmp inside a string must not fire either";
+    let _ = prose;
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

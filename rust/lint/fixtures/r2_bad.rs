@@ -1,0 +1,13 @@
+//! R2 violation: hash-ordered collection in a simulation path.
+
+use std::collections::HashMap;
+
+pub fn report() -> String {
+    let mut m: HashMap<String, f64> = HashMap::new();
+    m.insert("site-0".into(), 1.0);
+    let mut out = String::new();
+    for (k, v) in &m {
+        out.push_str(&format!("{k}={v};"));
+    }
+    out
+}

@@ -1,0 +1,15 @@
+//! R2 clean: ordered collection; the bare `use` of HashMap is exempt
+//! (declarations do not iterate — usage sites are what matter).
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+pub fn report() -> String {
+    let mut m: BTreeMap<String, f64> = BTreeMap::new();
+    m.insert("site-0".into(), 1.0);
+    let mut out = String::new();
+    for (k, v) in &m {
+        out.push_str(&format!("{k}={v};"));
+    }
+    out
+}

@@ -1,0 +1,13 @@
+//! R3 violations: wall clock and unseeded randomness in simulation logic.
+
+use std::time::Instant;
+
+pub fn step_elapsed() -> u128 {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos()
+}
+
+pub fn roll() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

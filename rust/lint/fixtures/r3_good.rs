@@ -1,0 +1,9 @@
+//! R3 clean: time and randomness both derive from injected state.
+
+pub fn step_elapsed(clock_ns: u64, last_ns: u64) -> u64 {
+    clock_ns.saturating_sub(last_ns)
+}
+
+pub fn roll(seed: u64) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}

@@ -1,0 +1,6 @@
+//! R4 violation: unclamped float→int `as` cast. Saturation silently maps
+//! NaN to 0 and infinity to MAX.
+
+pub fn bucket(x: f64) -> usize {
+    (x * 10.0).floor() as usize
+}

@@ -1,0 +1,13 @@
+//! R4 clean: the value is bounded before (or immediately after) the cast.
+
+pub fn bucket(x: f64) -> usize {
+    (x * 10.0).floor().clamp(0.0, 100.0) as usize
+}
+
+pub fn bucket_after(x: f64) -> u64 {
+    ((x * 10.0).floor() as u64).min(100)
+}
+
+pub fn int_cast_untouched(n: u64) -> u32 {
+    (n / 2) as u32
+}

@@ -1,0 +1,17 @@
+//! R5 violations: float accumulation in functions that collect thread
+//! results — the reduction order follows nondeterministic completion
+//! order, and float addition is not associative.
+
+use std::sync::mpsc::Receiver;
+
+pub fn merge(rx: &Receiver<f64>, n: usize) -> f64 {
+    let mut total = 0.0f64;
+    for _ in 0..n {
+        total += rx.recv().unwrap();
+    }
+    total
+}
+
+pub fn drain(rx: &Receiver<f64>) -> f64 {
+    rx.try_iter().sum::<f64>()
+}

@@ -1,0 +1,13 @@
+//! R5 clean: results land in site-index slots first, so the final
+//! reduction runs in a fixed order regardless of completion order.
+
+use std::sync::mpsc::Receiver;
+
+pub fn merge(rx: &Receiver<(usize, f64)>, n: usize) -> f64 {
+    let mut slots = vec![0.0f64; n];
+    for _ in 0..n {
+        let (site, value) = rx.recv().unwrap();
+        slots[site] = value;
+    }
+    slots.iter().sum()
+}

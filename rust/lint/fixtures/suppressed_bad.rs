@@ -1,0 +1,10 @@
+//! A reason-less allow is itself an error (SUP) and suppresses nothing:
+//! the R3 finding below stays unsuppressed.
+
+use std::time::Instant;
+
+pub fn broken() -> u128 {
+    // frost-lint: allow(R3)
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,16 @@
+//! Valid suppressions: standalone form covers the next code line,
+//! trailing form covers its own line. Reasons are mandatory and surface
+//! in the report.
+
+use std::time::Instant;
+
+pub fn wall_elapsed() -> u128 {
+    // frost-lint: allow(R3, reason = "benchmark harness measures real wall time")
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos()
+}
+
+pub fn wall_elapsed_trailing() -> u128 {
+    let t0 = Instant::now(); // frost-lint: allow(R3, reason = "real time is the point here")
+    t0.elapsed().as_nanos()
+}

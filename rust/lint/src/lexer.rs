@@ -1,0 +1,355 @@
+//! A hand-rolled Rust lexer, just deep enough for lint rules.
+//!
+//! Produces a flat token stream with line numbers plus the comment list
+//! (suppression directives live in comments).  String/char/lifetime
+//! disambiguation and nested block comments are handled; the token
+//! *content* of string literals is deliberately dropped so that a rule
+//! like "no `partial_cmp`" can never fire on prose or test data.
+//!
+//! Not handled (documented misses, all conservative): raw identifiers
+//! (`r#fn`) lex as `r # fn`, and float evidence does not flow through
+//! turbofish walls (`to_vec::<f32>()`).  Neither occurs in this tree.
+
+/// One lexed token.  Literal payloads are dropped — rules only ever need
+/// the *kind* (and, for identifiers, the spelling).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    /// Integer literal (including hex/octal/binary).
+    Int,
+    /// Float literal: has a fractional part, an exponent, or an `f32`/
+    /// `f64` suffix.
+    Float,
+    /// String literal (normal, raw, or byte; content dropped).
+    Str,
+    /// Character or byte literal.
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Life,
+    /// Any other single character (operators, delimiters, …).
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment *starts* on.
+    pub line: u32,
+    /// Full comment text including the `//` / `/*` introducer.
+    pub text: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Scan a quoted literal. `b[start]` must be the opening quote; returns
+/// the index just past the closing quote (or the end of input), counting
+/// newlines into `line`.
+fn scan_quoted(b: &[char], start: usize, quote: char, line: &mut u32) -> usize {
+    let mut j = start + 1;
+    while j < b.len() {
+        match b[j] {
+            '\\' => j += 2,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            c if c == quote => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Lex `src` into tokens + comments.  Never fails: unrecognised bytes
+/// become `Punct`s and unterminated literals run to end-of-input.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // ----------------------------------------------------- comments
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment { line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            let start = i;
+            i += 2;
+            let mut depth = 1u32;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment {
+                line: start_line,
+                text: b[start..i.min(n)].iter().collect(),
+            });
+            continue;
+        }
+
+        // ------------------------------------- string / char literals
+        if c == '"' {
+            let tok_line = line;
+            i = scan_quoted(&b, i, '"', &mut line);
+            out.tokens.push(Token { tok: Tok::Str, line: tok_line });
+            continue;
+        }
+        if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+            let tok_line = line;
+            i = scan_quoted(&b, i + 1, '"', &mut line);
+            out.tokens.push(Token { tok: Tok::Str, line: tok_line });
+            continue;
+        }
+        if c == 'b' && i + 1 < n && b[i + 1] == '\'' {
+            let tok_line = line;
+            i = scan_quoted(&b, i + 1, '\'', &mut line);
+            out.tokens.push(Token { tok: Tok::Char, line: tok_line });
+            continue;
+        }
+        // Raw strings: r"…", r#"…"#, br"…", br##"…"##.
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let tok_line = line;
+                j += 1;
+                'raw: while j < n {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if b[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                out.tokens.push(Token { tok: Tok::Str, line: tok_line });
+                continue;
+            }
+            // Not a raw string after all — fall through to the identifier
+            // path below (`r` / `b` are ordinary ident starts).
+        }
+        if c == '\'' {
+            let tok_line = line;
+            let is_char = match b.get(i + 1) {
+                Some('\\') => true,
+                Some(_) => b.get(i + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char {
+                i = scan_quoted(&b, i, '\'', &mut line);
+                out.tokens.push(Token { tok: Tok::Char, line: tok_line });
+            } else {
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.tokens.push(Token { tok: Tok::Life, line: tok_line });
+            }
+            continue;
+        }
+
+        // ------------------------------------------------------ numbers
+        if c.is_ascii_digit() {
+            let tok_line = line;
+            let mut j = i + 1;
+            let mut float = false;
+            if c == '0' && j < n && matches!(b[j], 'x' | 'o' | 'b') {
+                j += 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+            } else {
+                while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+                    j += 1;
+                }
+                if j + 1 < n && b[j] == '.' && b[j + 1].is_ascii_digit() {
+                    float = true;
+                    j += 1;
+                    while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+                        j += 1;
+                    }
+                }
+                if j < n && matches!(b[j], 'e' | 'E') {
+                    let k = if j + 1 < n && matches!(b[j + 1], '+' | '-') { j + 2 } else { j + 1 };
+                    if k < n && b[k].is_ascii_digit() {
+                        float = true;
+                        j = k + 1;
+                        while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+                            j += 1;
+                        }
+                    }
+                }
+                let sfx_start = j;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                let sfx: String = b[sfx_start..j].iter().collect();
+                if sfx.contains("f32") || sfx.contains("f64") {
+                    float = true;
+                }
+            }
+            out.tokens.push(Token {
+                tok: if float { Tok::Float } else { Tok::Int },
+                line: tok_line,
+            });
+            i = j;
+            continue;
+        }
+
+        // --------------------------------------------------- identifiers
+        if c.is_alphabetic() || c == '_' {
+            let tok_line = line;
+            let mut j = i + 1;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                tok: Tok::Ident(b[i..j].iter().collect()),
+                line: tok_line,
+            });
+            i = j;
+            continue;
+        }
+
+        // -------------------------------------------------- punctuation
+        out.tokens.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_content() {
+        let src = r##"
+            // partial_cmp in a line comment
+            /* HashMap in a /* nested */ block comment */
+            let s = "Instant::now() inside a string";
+            let r = r#"thread_rng "quoted" raw"#;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|s| s == "partial_cmp"));
+        assert!(!ids.iter().any(|s| s == "HashMap"));
+        assert!(!ids.iter().any(|s| s == "Instant"));
+        assert!(!ids.iter().any(|s| s == "thread_rng"));
+        assert_eq!(lex(src).comments.len(), 2);
+    }
+
+    #[test]
+    fn float_vs_int_literals() {
+        let kinds: Vec<Tok> = lex("1 1.5 1e3 0x1F 1_000 2.0f64 7f32 3u64")
+            .tokens
+            .into_iter()
+            .map(|t| t.tok)
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                Tok::Int,
+                Tok::Float,
+                Tok::Float,
+                Tok::Int,
+                Tok::Int,
+                Tok::Float,
+                Tok::Float,
+                Tok::Int
+            ]
+        );
+    }
+
+    #[test]
+    fn range_dots_do_not_make_floats() {
+        let kinds: Vec<Tok> = lex("0..24").tokens.into_iter().map(|t| t.tok).collect();
+        assert_eq!(kinds, vec![Tok::Int, Tok::Punct('.'), Tok::Punct('.'), Tok::Int]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let kinds: Vec<Tok> = lex("'a 'x' '\\n' 'static b'z'")
+            .tokens
+            .into_iter()
+            .map(|t| t.tok)
+            .collect();
+        assert_eq!(kinds, vec![Tok::Life, Tok::Char, Tok::Char, Tok::Life, Tok::Char]);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "let a = 1;\nlet b = \"two\nlines\";\nlet c = 3;";
+        let lx = lex(src);
+        let c_tok = lx
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("c".into()))
+            .unwrap();
+        assert_eq!(c_tok.line, 4, "the two-line string literal spans lines 2-3");
+    }
+}

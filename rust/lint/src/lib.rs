@@ -1,0 +1,164 @@
+//! frost-lint — determinism & NaN-safety static analysis for the FROST
+//! tree (DESIGN.md §12).
+//!
+//! The library walks a set of roots, lexes every `.rs` file with the
+//! in-crate lexer, and applies the R1–R5 invariant rules.  Everything is
+//! deterministic: the directory walk is sorted, findings are sorted, and
+//! the JSON summary is emitted with stable key order.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{lint_source, FileLint, Finding, RULE_IDS};
+
+/// The tree slices the invariants govern, relative to the repo root.
+pub const DEFAULT_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// `(file, line, rules)` for well-formed allows that matched nothing.
+    pub unused_allows: Vec<(String, u32, String)>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    pub fn suppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_some())
+    }
+
+    /// Machine-readable summary (hand-rolled JSON; the crate is std-only).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!("  \"unsuppressed\": {},\n", self.unsuppressed().count()));
+        s.push_str(&format!("  \"suppressed\": {},\n", self.suppressed().count()));
+
+        s.push_str("  \"by_rule\": {");
+        let mut first = true;
+        for rule in RULE_IDS.iter().chain(std::iter::once(&"SUP")) {
+            let n = self.unsuppressed().filter(|f| f.rule == *rule).count();
+            if !first {
+                s.push_str(", ");
+            }
+            first = false;
+            s.push_str(&format!("\"{rule}\": {n}"));
+        }
+        s.push_str("},\n");
+
+        s.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str("\n    {");
+            s.push_str(&format!("\"rule\": \"{}\", ", json_escape(&f.rule)));
+            s.push_str(&format!("\"file\": \"{}\", ", json_escape(&f.file)));
+            s.push_str(&format!("\"line\": {}, ", f.line));
+            s.push_str(&format!("\"message\": \"{}\", ", json_escape(&f.message)));
+            match &f.suppressed {
+                Some(r) => s.push_str(&format!(
+                    "\"suppressed\": true, \"reason\": \"{}\"",
+                    json_escape(r)
+                )),
+                None => s.push_str("\"suppressed\": false"),
+            }
+            s.push('}');
+        }
+        if !self.findings.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("],\n");
+
+        s.push_str("  \"unused_allows\": [");
+        for (i, (file, line, rules)) in self.unused_allows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rules\": \"{}\"}}",
+                json_escape(file),
+                line,
+                json_escape(rules)
+            ));
+        }
+        if !self.unused_allows.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Sorted recursive collection of `.rs` files under `dir`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan `roots` (relative to `repo_root`; missing roots are skipped so the
+/// binary works from partial checkouts) and return the merged report.
+pub fn scan_roots(repo_root: &Path, roots: &[&str]) -> io::Result<Report> {
+    let mut report = Report::default();
+    for root in roots {
+        let dir = repo_root.join(root);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&dir, &mut files)?;
+        for path in files {
+            let src = fs::read_to_string(&path)?;
+            let rel = path
+                .strip_prefix(repo_root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let fl = lint_source(&rel, &src);
+            report.findings.extend(fl.findings);
+            report
+                .unused_allows
+                .extend(fl.unused_allows.into_iter().map(|(l, r)| (rel.clone(), l, r)));
+            report.files_scanned += 1;
+        }
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    report.unused_allows.sort();
+    Ok(report)
+}

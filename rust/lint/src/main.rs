@@ -1,0 +1,100 @@
+//! frost-lint CLI.
+//!
+//! ```text
+//! frost-lint [--deny-all] [--json PATH|-] [--root DIR] [ROOTS...]
+//! ```
+//!
+//! * `--deny-all`  exit non-zero if any unsuppressed finding remains
+//!   (including broken suppression directives).  This is the CI mode.
+//! * `--json P`    write the machine-readable summary to `P` (`-` for
+//!   stdout).
+//! * `--root DIR`  repo root; defaults to two levels above this crate's
+//!   manifest (`rust/lint` → repo).
+//! * `ROOTS...`    scan roots relative to the repo root; default
+//!   `rust/src rust/tests rust/benches examples`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use frost_lint::{scan_roots, DEFAULT_ROOTS};
+
+fn usage() -> ! {
+    eprintln!("usage: frost-lint [--deny-all] [--json PATH|-] [--root DIR] [ROOTS...]");
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let mut deny_all = false;
+    let mut json_to: Option<String> = None;
+    let mut repo_root: Option<PathBuf> = None;
+    let mut roots: Vec<String> = Vec::new();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--deny-all" => deny_all = true,
+            "--json" => json_to = Some(args.next().unwrap_or_else(|| usage())),
+            "--root" => repo_root = Some(PathBuf::from(args.next().unwrap_or_else(|| usage()))),
+            "--help" | "-h" => usage(),
+            flag if flag.starts_with('-') => usage(),
+            root => roots.push(root.to_string()),
+        }
+    }
+
+    let repo_root = repo_root.unwrap_or_else(|| {
+        // rust/lint/Cargo.toml → repo root is ../.. from the manifest.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+    });
+    let roots: Vec<&str> = if roots.is_empty() {
+        DEFAULT_ROOTS.to_vec()
+    } else {
+        roots.iter().map(|s| s.as_str()).collect()
+    };
+
+    let report = match scan_roots(&repo_root, &roots) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("frost-lint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let unsuppressed: Vec<_> = report.unsuppressed().collect();
+    for f in &unsuppressed {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+    }
+    for f in report.suppressed() {
+        println!(
+            "{}:{}: [{}] suppressed — {}",
+            f.file,
+            f.line,
+            f.rule,
+            f.suppressed.as_deref().unwrap_or("")
+        );
+    }
+    for (file, line, rules) in &report.unused_allows {
+        println!("{file}:{line}: warning: unused allow({rules})");
+    }
+    println!(
+        "frost-lint: {} files scanned, {} unsuppressed finding(s), {} suppressed",
+        report.files_scanned,
+        unsuppressed.len(),
+        report.suppressed().count()
+    );
+
+    if let Some(dest) = json_to {
+        let json = report.to_json();
+        if dest == "-" {
+            print!("{json}");
+        } else if let Err(e) = std::fs::write(&dest, json) {
+            eprintln!("frost-lint: cannot write {dest}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+
+    if deny_all && !unsuppressed.is_empty() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,582 @@
+//! The invariant catalogue (DESIGN.md §12) as token-tree rules.
+//!
+//! Every FROST result rests on bit-identical simulation output across
+//! seeds and worker-thread counts.  These rules mechanically enforce the
+//! hazards that have actually bitten this tree:
+//!
+//! * **R1** — float ordering via `partial_cmp` (NaN panics / `None`
+//!   surprises in sort-or-min-max); require `total_cmp`.
+//! * **R2** — `HashMap`/`HashSet` in simulation/merge/report paths
+//!   (`src/`): hash iteration order is nondeterministic across runs;
+//!   require `BTreeMap`/`BTreeSet` or an explicit sort.  `use`
+//!   declarations are exempt (the *usage* sites are what matter).
+//! * **R3** — wall-clock (`Instant::now` / `SystemTime::now`) or
+//!   unseeded randomness (`thread_rng`, `OsRng`, …) inside simulation
+//!   logic; real-hardware paths carry reasoned suppressions.
+//! * **R4** — `as` casts from float expressions to integer widths with
+//!   no clamp in sight: the cast saturates (NaN → 0) and silently
+//!   launders non-finite values into plausible integers.
+//! * **R5** — float accumulation inside a function that collects
+//!   thread results (`recv`/`try_iter`/zero-arg `join`): completion
+//!   order is nondeterministic and float addition is not associative;
+//!   merge through the site-index-ordered helpers instead.
+//!
+//! Each rule supports a scoped suppression:
+//! `// frost-lint: allow(R3, reason = "...")` — the reason is mandatory
+//! and surfaced in the report.  A trailing comment covers its own line;
+//! a standalone comment covers the next line holding code.
+
+use crate::lexer::{lex, Lexed, Tok, Token};
+
+pub const RULE_IDS: [&str; 5] = ["R1", "R2", "R3", "R4", "R5"];
+
+/// Integer target widths for R4.
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+/// Method names that mark an expression as float-valued (R4/R5 evidence).
+const FLOAT_METHODS: [&str; 16] = [
+    "ceil",
+    "floor",
+    "round",
+    "trunc",
+    "fract",
+    "sqrt",
+    "cbrt",
+    "powf",
+    "powi",
+    "exp",
+    "exp2",
+    "ln",
+    "log2",
+    "log10",
+    "to_radians",
+    "to_degrees",
+];
+
+/// Identifiers that count as bounding the value before/after a cast.
+const CLAMP_METHODS: [&str; 3] = ["clamp", "min", "max"];
+
+/// Unseeded randomness identifiers (R3).
+const RANDOM_IDENTS: [&str; 5] =
+    ["thread_rng", "from_entropy", "OsRng", "getrandom", "RandomState"];
+
+/// Channel/thread collection markers (R5).
+const THREAD_MARKERS: [&str; 3] = ["recv", "try_recv", "try_iter"];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// `"R1"`…`"R5"`, or `"SUP"` for a broken suppression directive
+    /// (which can itself never be suppressed).
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// `Some(reason)` when covered by a `frost-lint: allow(...)`.
+    pub suppressed: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct FileLint {
+    pub findings: Vec<Finding>,
+    /// `(line, rule-list)` of well-formed allows that matched nothing.
+    pub unused_allows: Vec<(u32, String)>,
+}
+
+fn ident_at<'a>(t: &'a [Token], i: usize) -> Option<&'a str> {
+    match t.get(i).map(|x| &x.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct_at(t: &[Token], i: usize, c: char) -> bool {
+    matches!(t.get(i).map(|x| &x.tok), Some(Tok::Punct(p)) if *p == c)
+}
+
+fn finding(rule: &str, file: &str, line: u32, message: impl Into<String>) -> Finding {
+    Finding {
+        rule: rule.to_string(),
+        file: file.to_string(),
+        line,
+        message: message.into(),
+        suppressed: None,
+    }
+}
+
+/// R2 applies to simulation/merge/report paths: everything under a
+/// `src/` directory.  Tests, benches and examples may use hash
+/// collections freely (they never feed merged simulation output).
+fn in_sim_scope(path: &str) -> bool {
+    path.contains("src/")
+}
+
+fn rule_r1(lx: &Lexed, path: &str, out: &mut Vec<Finding>) {
+    let t = &lx.tokens;
+    for i in 1..t.len() {
+        if ident_at(t, i) == Some("partial_cmp")
+            && (punct_at(t, i - 1, '.') || punct_at(t, i - 1, ':'))
+        {
+            out.push(finding(
+                "R1",
+                path,
+                t[i].line,
+                "float ordering via `partial_cmp` — use `total_cmp` (total over NaN, panic-free)",
+            ));
+        }
+    }
+}
+
+fn rule_r2(lx: &Lexed, path: &str, out: &mut Vec<Finding>) {
+    let t = &lx.tokens;
+    let mut in_use = false;
+    for i in 0..t.len() {
+        match &t[i].tok {
+            Tok::Punct(';') => in_use = false,
+            Tok::Ident(s) if s == "use" => in_use = true,
+            Tok::Ident(s) if !in_use && (s == "HashMap" || s == "HashSet") => {
+                out.push(finding(
+                    "R2",
+                    path,
+                    t[i].line,
+                    format!(
+                        "`{s}` in a simulation/merge/report path — hash iteration order is \
+                         nondeterministic; use `BTreeMap`/`BTreeSet` or sort before iterating"
+                    ),
+                ));
+            }
+            _ => {}
+        }
+    }
+}
+
+fn rule_r3(lx: &Lexed, path: &str, out: &mut Vec<Finding>) {
+    let t = &lx.tokens;
+    for i in 0..t.len() {
+        let Some(s) = ident_at(t, i) else { continue };
+        if (s == "Instant" || s == "SystemTime")
+            && punct_at(t, i + 1, ':')
+            && punct_at(t, i + 2, ':')
+            && ident_at(t, i + 3) == Some("now")
+        {
+            out.push(finding(
+                "R3",
+                path,
+                t[i].line,
+                format!(
+                    "wall-clock `{s}::now` in simulation logic — inject a seeded `Clock`, or \
+                     suppress with a reason where real time is the point"
+                ),
+            ));
+        }
+        if RANDOM_IDENTS.contains(&s) {
+            out.push(finding(
+                "R3",
+                path,
+                t[i].line,
+                format!("unseeded randomness (`{s}`) — derive all randomness from the run seed"),
+            ));
+        }
+    }
+}
+
+/// Walk backwards from the `as` token over one postfix expression
+/// (identifiers, literals, `.`/`?`/`::` chains, balanced `()`/`[]`
+/// groups).  Returns the window start index.
+fn cast_head_start(t: &[Token], as_idx: usize) -> usize {
+    let mut j = as_idx;
+    while j > 0 {
+        let k = j - 1;
+        match &t[k].tok {
+            Tok::Punct(')') => j = match_open(t, k, '(', ')'),
+            Tok::Punct(']') => j = match_open(t, k, '[', ']'),
+            Tok::Ident(_)
+            | Tok::Int
+            | Tok::Float
+            | Tok::Str
+            | Tok::Punct('.')
+            | Tok::Punct('?')
+            | Tok::Punct(':') => j = k,
+            _ => break,
+        }
+    }
+    j
+}
+
+/// Index of the `open` delimiter matching the `close` delimiter at
+/// `close_idx` (0 if unbalanced).
+fn match_open(t: &[Token], close_idx: usize, open: char, close: char) -> usize {
+    let mut depth = 0i32;
+    let mut m = close_idx;
+    loop {
+        match &t[m].tok {
+            Tok::Punct(c) if *c == close => depth += 1,
+            Tok::Punct(c) if *c == open => {
+                depth -= 1;
+                if depth == 0 {
+                    return m;
+                }
+            }
+            _ => {}
+        }
+        if m == 0 {
+            return 0;
+        }
+        m -= 1;
+    }
+}
+
+/// Float evidence in a token window: a float literal, an `f64`/`f32`
+/// spelling, or a `.float_method(` chain.
+fn float_evidence(w: &[Token]) -> bool {
+    for (k, tok) in w.iter().enumerate() {
+        match &tok.tok {
+            Tok::Float => return true,
+            Tok::Ident(s) if s == "f64" || s == "f32" => return true,
+            Tok::Ident(s) if FLOAT_METHODS.contains(&s.as_str()) => {
+                if k > 0 && matches!(w[k - 1].tok, Tok::Punct('.')) {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+fn clamp_evidence(w: &[Token]) -> bool {
+    w.iter().any(|tok| matches!(&tok.tok, Tok::Ident(s) if CLAMP_METHODS.contains(&s.as_str())))
+}
+
+fn rule_r4(lx: &Lexed, path: &str, out: &mut Vec<Finding>) {
+    let t = &lx.tokens;
+    for i in 0..t.len() {
+        if ident_at(t, i) != Some("as") {
+            continue;
+        }
+        let Some(ty) = ident_at(t, i + 1) else { continue };
+        if !INT_TYPES.contains(&ty) {
+            continue;
+        }
+        let start = cast_head_start(t, i);
+        let window = &t[start..i];
+        if !float_evidence(window) {
+            continue;
+        }
+        let mut clamped = clamp_evidence(window);
+        // `(… as u64).clamp(…)` — a bound chained onto the cast counts.
+        if !clamped {
+            let mut k = i + 2;
+            while punct_at(t, k, ')') {
+                k += 1;
+            }
+            if punct_at(t, k, '.') {
+                if let Some(m) = ident_at(t, k + 1) {
+                    clamped = CLAMP_METHODS.contains(&m);
+                }
+            }
+        }
+        if !clamped {
+            out.push(finding(
+                "R4",
+                path,
+                t[i].line,
+                format!(
+                    "float→`{ty}` `as` cast without a clamp — saturation maps NaN to 0 and ∞ to \
+                     MAX silently; bound the value first (`.clamp(lo, hi)` / `.max(0.0)`)"
+                ),
+            ));
+        }
+    }
+}
+
+/// Token span of one `fn` body (indices of `{` … `}`).
+struct FnSpan {
+    start: usize,
+    end: usize,
+}
+
+fn fn_spans(t: &[Token]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for i in 0..t.len() {
+        if ident_at(t, i) != Some("fn") {
+            continue;
+        }
+        // Named functions only: `fn(f64) -> f64` pointer types have `(`
+        // right after the keyword and carry no body.
+        if !matches!(t.get(i + 1).map(|x| &x.tok), Some(Tok::Ident(_))) {
+            continue;
+        }
+        // Find the body's `{` (or `;` for a bodiless trait method).
+        let mut depth = 0i32;
+        let mut j = i + 2;
+        let mut open = None;
+        while j < t.len() {
+            match &t[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct('{') if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                Tok::Punct(';') if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(o) = open else { continue };
+        let mut braces = 0i32;
+        let mut e = o;
+        while e < t.len() {
+            match &t[e].tok {
+                Tok::Punct('{') => braces += 1,
+                Tok::Punct('}') => {
+                    braces -= 1;
+                    if braces == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            e += 1;
+        }
+        spans.push(FnSpan { start: o, end: e.min(t.len().saturating_sub(1)) });
+    }
+    spans
+}
+
+/// The innermost function span containing token `idx`.
+fn enclosing_fn(spans: &[FnSpan], idx: usize) -> Option<usize> {
+    spans
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.start <= idx && idx <= s.end)
+        .min_by_key(|(_, s)| s.end - s.start)
+        .map(|(k, _)| k)
+}
+
+fn rule_r5(lx: &Lexed, path: &str, out: &mut Vec<Finding>) {
+    let t = &lx.tokens;
+    let spans = fn_spans(t);
+    if spans.is_empty() {
+        return;
+    }
+
+    // Which functions collect thread results?
+    let mut has_marker = vec![false; spans.len()];
+    for i in 1..t.len() {
+        let Some(s) = ident_at(t, i) else { continue };
+        if !(punct_at(t, i - 1, '.') && punct_at(t, i + 1, '(')) {
+            continue;
+        }
+        let marked = THREAD_MARKERS.contains(&s) || (s == "join" && punct_at(t, i + 2, ')'));
+        if marked {
+            if let Some(f) = enclosing_fn(&spans, i) {
+                has_marker[f] = true;
+            }
+        }
+    }
+    if !has_marker.iter().any(|&m| m) {
+        return;
+    }
+
+    let report = |out: &mut Vec<Finding>, line: u32| {
+        out.push(finding(
+            "R5",
+            path,
+            line,
+            "float accumulation in a function that collects thread results — completion order \
+             is nondeterministic and float addition is not associative; merge in site-index \
+             order via the ordered merge helpers",
+        ));
+    };
+
+    for i in 0..t.len() {
+        let Some(f) = enclosing_fn(&spans, i) else { continue };
+        if !has_marker[f] {
+            continue;
+        }
+        // `.sum::<f64>()` / `.product::<f32>()`.
+        if let Some(s) = ident_at(t, i) {
+            if (s == "sum" || s == "product")
+                && punct_at(t, i + 1, ':')
+                && punct_at(t, i + 2, ':')
+                && punct_at(t, i + 3, '<')
+                && matches!(ident_at(t, i + 4), Some("f64") | Some("f32"))
+            {
+                report(out, t[i].line);
+                continue;
+            }
+        }
+        // `lhs += rhs` with float evidence in the statement or a
+        // float-typed declaration of the accumulator root.
+        if punct_at(t, i, '+') && punct_at(t, i + 1, '=') {
+            let mut s = i;
+            while s > 0 {
+                if matches!(t[s - 1].tok, Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}')) {
+                    break;
+                }
+                s -= 1;
+            }
+            let mut e = i;
+            while e < t.len() && !matches!(t[e].tok, Tok::Punct(';')) {
+                e += 1;
+            }
+            let mut is_float = float_evidence(&t[s..e]);
+            if !is_float {
+                // Does the accumulator's root identifier have a float
+                // declaration in this function (`x: f64` / `x = 0.0`)?
+                let root = cast_head_start(t, i);
+                if let Some(name) = ident_at(t, root) {
+                    let span = &spans[f];
+                    for k in span.start..span.end.min(t.len().saturating_sub(2)) {
+                        if ident_at(t, k) == Some(name)
+                            && ((punct_at(t, k + 1, ':')
+                                && matches!(ident_at(t, k + 2), Some("f64") | Some("f32")))
+                                || (punct_at(t, k + 1, '=')
+                                    && matches!(t.get(k + 2).map(|x| &x.tok), Some(Tok::Float))))
+                        {
+                            is_float = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if is_float {
+                report(out, t[i].line);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ allows
+
+struct Allow {
+    line: u32,
+    rules: Vec<String>,
+    reason: String,
+    /// The single source line this allow covers.
+    target: u32,
+    used: bool,
+}
+
+/// Parse one comment for a `frost-lint:` directive.
+///
+/// Returns `None` for ordinary comments, `Some(Err(msg))` for a directive
+/// that is malformed (unknown rule, missing reason, bad syntax — all of
+/// which become unsuppressible `SUP` findings), and
+/// `Some(Ok((rules, reason)))` for a valid allow.
+fn parse_directive(text: &str) -> Option<Result<(Vec<String>, String), String>> {
+    let at = text.find("frost-lint:")?;
+    let rest = text[at + "frost-lint:".len()..].trim();
+    let Some(args) = rest.strip_prefix("allow") else {
+        return Some(Err(
+            "unknown frost-lint directive (expected `allow(R…, reason = \"…\")`)".to_string(),
+        ));
+    };
+    let args = args.trim_start();
+    let inner = match args.strip_prefix('(') {
+        Some(a) => match a.rfind(')') {
+            Some(p) => &a[..p],
+            None => return Some(Err("unclosed `allow(`".to_string())),
+        },
+        None => return Some(Err("expected `(` after `allow`".to_string())),
+    };
+    let (rules_part, reason) = match inner.find("reason") {
+        Some(rp) => {
+            let tail = inner[rp + "reason".len()..].trim_start();
+            let Some(tail) = tail.strip_prefix('=') else {
+                return Some(Err("expected `=` after `reason`".to_string()));
+            };
+            let tail = tail.trim_start();
+            let Some(tail) = tail.strip_prefix('"') else {
+                return Some(Err("expected a quoted string after `reason =`".to_string()));
+            };
+            let Some(endq) = tail.find('"') else {
+                return Some(Err("unclosed reason string".to_string()));
+            };
+            (&inner[..rp], tail[..endq].trim().to_string())
+        }
+        None => return Some(Err("missing mandatory `reason = \"…\"` in allow".to_string())),
+    };
+    if reason.is_empty() {
+        return Some(Err("suppression reason must not be empty".to_string()));
+    }
+    let mut rules = Vec::new();
+    for item in rules_part.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        if !RULE_IDS.contains(&item) {
+            return Some(Err(format!("unknown rule id `{item}` in allow")));
+        }
+        rules.push(item.to_string());
+    }
+    if rules.is_empty() {
+        return Some(Err("allow lists no rules".to_string()));
+    }
+    Some(Ok((rules, reason)))
+}
+
+/// Lint one source file.  `rel_path` is repo-relative and only used for
+/// reporting and for R2's path scoping.
+pub fn lint_source(rel_path: &str, src: &str) -> FileLint {
+    let lx = lex(src);
+    let path = rel_path.replace('\\', "/");
+    let mut findings = Vec::new();
+
+    rule_r1(&lx, &path, &mut findings);
+    if in_sim_scope(&path) {
+        rule_r2(&lx, &path, &mut findings);
+    }
+    rule_r3(&lx, &path, &mut findings);
+    rule_r4(&lx, &path, &mut findings);
+    rule_r5(&lx, &path, &mut findings);
+
+    // Collect directives; broken ones are findings themselves.
+    let mut allows: Vec<Allow> = Vec::new();
+    for c in &lx.comments {
+        match parse_directive(&c.text) {
+            None => {}
+            Some(Err(msg)) => findings.push(finding("SUP", &path, c.line, msg)),
+            Some(Ok((rules, reason))) => {
+                let trailing = lx.tokens.iter().any(|t| t.line == c.line);
+                let target = if trailing {
+                    c.line
+                } else {
+                    lx.tokens
+                        .iter()
+                        .map(|t| t.line)
+                        .filter(|&l| l > c.line)
+                        .min()
+                        .unwrap_or(c.line)
+                };
+                allows.push(Allow { line: c.line, rules, reason, target, used: false });
+            }
+        }
+    }
+
+    for f in &mut findings {
+        if f.rule == "SUP" {
+            continue;
+        }
+        for a in allows.iter_mut() {
+            if f.line == a.target && a.rules.iter().any(|r| r == &f.rule) {
+                f.suppressed = Some(a.reason.clone());
+                a.used = true;
+                break;
+            }
+        }
+    }
+
+    let unused_allows = allows
+        .iter()
+        .filter(|a| !a.used)
+        .map(|a| (a.line, a.rules.join(",")))
+        .collect();
+
+    findings.sort_by(|a, b| (a.line, a.rule.as_str()).cmp(&(b.line, b.rule.as_str())));
+    FileLint { findings, unused_allows }
+}

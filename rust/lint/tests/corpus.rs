@@ -1,0 +1,197 @@
+//! Fixture corpus for the R1–R5 rules plus the meta-test pinning the
+//! real tree to zero unsuppressed findings.
+//!
+//! Fixtures are compiled into the test binary with `include_str!` and
+//! linted under synthetic repo-relative paths so each case exercises the
+//! intended scope (`rust/src/...` for simulation paths).
+
+use frost_lint::{lint_source, scan_roots, Finding, DEFAULT_ROOTS};
+use std::path::PathBuf;
+
+fn unsuppressed(src: &str, rel_path: &str) -> Vec<Finding> {
+    lint_source(rel_path, src)
+        .findings
+        .into_iter()
+        .filter(|f| f.suppressed.is_none())
+        .collect()
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+const SIM_PATH: &str = "rust/src/simulator/fixture.rs";
+
+// ------------------------------------------------------------------- R1
+
+#[test]
+fn r1_bad_partial_cmp_is_caught() {
+    let f = unsuppressed(include_str!("../fixtures/r1_bad.rs"), SIM_PATH);
+    assert_eq!(rules_of(&f), vec!["R1"], "{f:?}");
+}
+
+#[test]
+fn r1_good_total_cmp_is_clean() {
+    let f = unsuppressed(include_str!("../fixtures/r1_good.rs"), SIM_PATH);
+    assert!(f.is_empty(), "comment/string prose must not fire R1: {f:?}");
+}
+
+// ------------------------------------------------------------------- R2
+
+#[test]
+fn r2_bad_hashmap_in_sim_path_is_caught() {
+    let f = unsuppressed(include_str!("../fixtures/r2_bad.rs"), SIM_PATH);
+    assert_eq!(rules_of(&f), vec!["R2", "R2"], "{f:?}");
+}
+
+#[test]
+fn r2_scope_is_limited_to_src() {
+    // The same source under tests/ is allowed: test-local hash maps never
+    // feed merged simulation output.
+    let f = unsuppressed(include_str!("../fixtures/r2_bad.rs"), "rust/tests/fixture.rs");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn r2_good_btreemap_and_bare_use_are_clean() {
+    let f = unsuppressed(include_str!("../fixtures/r2_good.rs"), SIM_PATH);
+    assert!(f.is_empty(), "use-declarations must be exempt: {f:?}");
+}
+
+// ------------------------------------------------------------------- R3
+
+#[test]
+fn r3_bad_wall_clock_and_entropy_are_caught() {
+    let f = unsuppressed(include_str!("../fixtures/r3_bad.rs"), SIM_PATH);
+    assert_eq!(rules_of(&f), vec!["R3", "R3"], "{f:?}");
+    assert!(f[0].message.contains("Instant::now"), "{f:?}");
+    assert!(f[1].message.contains("thread_rng"), "{f:?}");
+}
+
+#[test]
+fn r3_good_injected_time_and_seed_are_clean() {
+    let f = unsuppressed(include_str!("../fixtures/r3_good.rs"), SIM_PATH);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ------------------------------------------------------------------- R4
+
+#[test]
+fn r4_bad_unclamped_float_cast_is_caught() {
+    let f = unsuppressed(include_str!("../fixtures/r4_bad.rs"), SIM_PATH);
+    assert_eq!(rules_of(&f), vec!["R4"], "{f:?}");
+}
+
+#[test]
+fn r4_good_clamped_casts_are_clean() {
+    // Clamp before the cast, bound chained after it, and a pure integer
+    // cast — none may fire.
+    let f = unsuppressed(include_str!("../fixtures/r4_good.rs"), SIM_PATH);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ------------------------------------------------------------------- R5
+
+#[test]
+fn r5_bad_thread_merge_accumulation_is_caught() {
+    let f = unsuppressed(include_str!("../fixtures/r5_bad.rs"), SIM_PATH);
+    assert_eq!(rules_of(&f), vec!["R5", "R5"], "{f:?}");
+}
+
+#[test]
+fn r5_good_index_slot_merge_is_clean() {
+    let f = unsuppressed(include_str!("../fixtures/r5_good.rs"), SIM_PATH);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ----------------------------------------------------------- suppressions
+
+#[test]
+fn suppression_standalone_and_trailing_forms_work() {
+    let fl = lint_source(SIM_PATH, include_str!("../fixtures/suppressed_ok.rs"));
+    let unsup: Vec<_> = fl.findings.iter().filter(|f| f.suppressed.is_none()).collect();
+    assert!(unsup.is_empty(), "{unsup:?}");
+    let sup: Vec<_> = fl.findings.iter().filter(|f| f.suppressed.is_some()).collect();
+    assert_eq!(sup.len(), 2, "{:?}", fl.findings);
+    assert_eq!(sup[0].suppressed.as_deref(), Some("benchmark harness measures real wall time"));
+    assert_eq!(sup[1].suppressed.as_deref(), Some("real time is the point here"));
+    assert!(fl.unused_allows.is_empty(), "{:?}", fl.unused_allows);
+}
+
+#[test]
+fn reasonless_allow_is_an_error_and_suppresses_nothing() {
+    let f = unsuppressed(include_str!("../fixtures/suppressed_bad.rs"), SIM_PATH);
+    assert_eq!(rules_of(&f), vec!["SUP", "R3"], "{f:?}");
+    assert!(f[0].message.contains("reason"), "{f:?}");
+}
+
+#[test]
+fn unknown_rule_id_in_allow_is_an_error() {
+    let src = "// frost-lint: allow(R9, reason = \"no such rule\")\nfn nothing() {}\n";
+    let f = unsuppressed(src, SIM_PATH);
+    assert_eq!(rules_of(&f), vec!["SUP"], "{f:?}");
+    assert!(f[0].message.contains("R9"), "{f:?}");
+}
+
+#[test]
+fn unused_allow_is_reported_as_warning_not_failure() {
+    let src = "// frost-lint: allow(R1, reason = \"covers nothing\")\nfn clean() {}\n";
+    let fl = lint_source(SIM_PATH, src);
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+    assert_eq!(fl.unused_allows.len(), 1, "{:?}", fl.unused_allows);
+    assert_eq!(fl.unused_allows[0].1, "R1");
+}
+
+#[test]
+fn suppression_covers_only_its_own_line() {
+    let src = "\
+// frost-lint: allow(R3, reason = \"first use only\")
+let a = Instant::now();
+let b = Instant::now();
+";
+    let fl = lint_source(SIM_PATH, src);
+    let unsup: Vec<_> = fl.findings.iter().filter(|f| f.suppressed.is_none()).collect();
+    assert_eq!(unsup.len(), 1, "second site must stay flagged: {:?}", fl.findings);
+    assert_eq!(unsup[0].line, 3);
+}
+
+// -------------------------------------------------------------- meta-test
+
+/// The whole point: the real tree, scanned with the shipped defaults,
+/// reports zero unsuppressed findings, every remaining suppression is
+/// well-formed and load-bearing, and at least one reasoned suppression
+/// exists (the rules actually see the tree).
+#[test]
+fn real_tree_passes_deny_all() {
+    let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let report = scan_roots(&repo_root, &DEFAULT_ROOTS).expect("scan repo");
+    assert!(report.files_scanned > 50, "walk found too few files — wrong root?");
+
+    let unsup: Vec<_> = report.unsuppressed().collect();
+    assert!(
+        unsup.is_empty(),
+        "unsuppressed findings in the tree:\n{}",
+        unsup
+            .iter()
+            .map(|f| format!("  {}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.suppressed().count() > 0, "expected at least one reasoned allow in the tree");
+    assert!(report.unused_allows.is_empty(), "stale allows: {:?}", report.unused_allows);
+}
+
+#[test]
+fn json_summary_is_well_formed_enough() {
+    let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let report = scan_roots(&repo_root, &DEFAULT_ROOTS).expect("scan repo");
+    let json = report.to_json();
+    assert!(json.contains("\"files_scanned\""));
+    assert!(json.contains("\"by_rule\""));
+    assert!(json.contains("\"unsuppressed\": 0"));
+    assert_eq!(
+        json.matches('{').count(),
+        json.matches('}').count(),
+        "unbalanced braces in JSON output"
+    );
+}

@@ -97,7 +97,7 @@ impl FitResult {
         candidates
             .into_iter()
             .map(|x| (x, self.interp_measured(x)))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap_or((hi, f64::NAN))
     }
 }
@@ -148,7 +148,7 @@ fn solve3(a: &[[f64; 3]; 3], b: &[f64; 3]) -> Option<[f64; 3]> {
     }
     for col in 0..3 {
         let piv = (col..3)
-            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())?;
+            .max_by(|&i, &j| m[i][col].abs().total_cmp(&m[j][col].abs()))?;
         if m[piv][col].abs() < 1e-14 {
             return None;
         }
@@ -314,5 +314,25 @@ mod tests {
     #[should_panic(expected = "at least 4")]
     fn too_few_points_rejected() {
         let _ = fit_response(&[(0.3, 1.0), (0.5, 2.0)], 0.05);
+    }
+
+    /// A NaN measurement (a poisoned profile sample) must flow through the
+    /// whole fit → minimize path without panicking — the old
+    /// `partial_cmp().unwrap()` sorts aborted here — and the argmin must
+    /// still land on a real (finite) measured point.
+    #[test]
+    fn nan_sample_does_not_panic_and_fallback_stays_finite() {
+        let mut pts = profile_points();
+        pts[2].1 = f64::NAN;
+        let fit = fit_response(&pts, 0.05);
+        let (x_min, y_min) = fit.minimize(0.3, 1.0);
+        assert!(x_min.is_finite(), "argmin x must be finite, got {x_min}");
+        assert!((0.3..=1.0).contains(&x_min), "argmin {x_min} outside [0.3, 1]");
+        assert!(
+            y_min.is_finite(),
+            "total_cmp orders NaN above every finite value, so the \
+             minimum must be a real measurement, got {y_min}"
+        );
+        assert!((x_min - pts[2].0).abs() > 1e-12, "argmin must not be the NaN point");
     }
 }

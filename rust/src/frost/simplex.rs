@@ -80,7 +80,7 @@ pub fn nelder_mead(
     }
 
     while evals < opts.max_evals {
-        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
         let (best_f, worst_f) = (simplex[0].1, simplex[n].1);
 
         // Convergence checks.
@@ -153,7 +153,7 @@ pub fn nelder_mead(
         }
     }
 
-    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
     SimplexResult { x: simplex[0].0.clone(), fx: simplex[0].1, evals, converged: false }
 }
 

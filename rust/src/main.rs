@@ -12,7 +12,7 @@
 //!
 //! Argument parsing is in-tree (offline build — DESIGN.md §2).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
@@ -27,7 +27,7 @@ use frost::zoo::{all_models, model_by_name};
 /// (plus trailing positionals, e.g. `frost scenario outage-day`).
 struct Args {
     cmd: String,
-    flags: HashMap<String, String>,
+    flags: BTreeMap<String, String>,
     positional: Vec<String>,
 }
 
@@ -38,7 +38,7 @@ impl Args {
 
     fn parse_from(mut it: impl Iterator<Item = String>) -> Args {
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
-        let mut flags = HashMap::new();
+        let mut flags = BTreeMap::new();
         let mut positional = Vec::new();
         let mut key: Option<String> = None;
         for arg in it {
@@ -253,7 +253,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     let hw = args.setup();
     let which = args.get_or("fig", "all");
-    let epochs = args.num("epochs", 100.0) as u32;
+    let epochs = args.require_u32("epochs", 100, 1)?;
     let out_dir = args.get("out");
     let mut emitted: Vec<(String, String)> = Vec::new();
 
@@ -268,7 +268,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if which == "all" || which == "3" {
         #[cfg(feature = "pjrt")]
         {
-            let samples = args.num("samples", 2560.0) as u64;
+            let samples = args.require_u64("samples", 2560, 1)?;
             match figures::fig3_overhead(&hw, &["lenet", "mobilenet_mini"], samples, 1) {
                 Ok(s) => {
                     print!("{}", s.to_table());
@@ -338,7 +338,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     use frost::zoo::Manifest;
 
     let model = args.get_or("model", "lenet");
-    let steps = args.num("steps", 50.0) as u64;
+    let steps = args.require_u64("steps", 50, 1)?;
     let cap = args.num("cap", 1.0);
     let hw = args.setup();
     let manifest = Manifest::load_default()?;
@@ -364,7 +364,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     acct.set_cap_frac(cap);
 
-    let mut ds = SyntheticCifar::new(args.num("batch-seed", 0.0) as u64);
+    let mut ds = SyntheticCifar::new(args.require_u64("batch-seed", 0, 0)?);
     for i in 0..steps {
         let batch = ds.next_batch(session.batch as usize);
         let metrics = session.step(&batch)?;
@@ -399,8 +399,8 @@ fn cmd_overhead(_args: &Args) -> Result<()> {
 #[cfg(feature = "pjrt")]
 fn cmd_overhead(args: &Args) -> Result<()> {
     let hw = args.setup();
-    let samples = args.num("samples", 2560.0) as u64;
-    let reps = args.num("reps", 1.0) as u32;
+    let samples = args.require_u64("samples", 2560, 1)?;
+    let reps = args.require_u32("reps", 1, 1)?;
     let s = figures::fig3_overhead(&hw, &["lenet", "mobilenet_mini"], samples, reps)?;
     print!("{}", s.to_table());
     Ok(())
@@ -879,7 +879,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
 fn cmd_oran_demo(args: &Args) -> Result<()> {
     let model = args.get_or("model", "ResNet");
-    let epochs = args.num("epochs", 60.0) as u32;
+    let epochs = args.require_u32("epochs", 60, 1)?;
     let entry = model_by_name(model).with_context(|| format!("unknown model '{model}'"))?;
     let w = entry.workload(&setup_no1().gpu);
     let mut lc = MlLifecycle::new(vec![setup_no1(), setup_no2()], 0.80, 42);

@@ -73,8 +73,8 @@ pub fn percentile_index(n: usize, q: f64) -> usize {
         return 0;
     }
     let q = q.clamp(0.0, 1.0);
-    let rank = (n as f64 * q).ceil() as usize;
-    rank.max(1).min(n) - 1
+    let rank = (n as f64 * q).ceil().clamp(1.0, n as f64) as usize;
+    rank - 1
 }
 
 /// Nearest-rank percentile of an ascending-sorted slice.  Empty input

@@ -5,7 +5,7 @@
 //! distributes create/update/delete over the fabric to subscribed
 //! endpoints.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -21,7 +21,9 @@ pub struct A1PolicyService {
     bus: Arc<Bus>,
     /// This service's endpoint name on the fabric.
     pub name: String,
-    policies: HashMap<String, EnergyPolicy>,
+    /// Keyed by policy id; BTreeMap so late-subscriber replay (and any
+    /// future iteration) runs in a deterministic order.
+    policies: BTreeMap<String, EnergyPolicy>,
     subscribers: Vec<String>,
 }
 
@@ -31,7 +33,7 @@ impl A1PolicyService {
         A1PolicyService {
             bus,
             name: name.to_string(),
-            policies: HashMap::new(),
+            policies: BTreeMap::new(),
             subscribers: Vec::new(),
         }
     }
@@ -134,6 +136,38 @@ mod tests {
         bad.min_cap_frac = 2.0;
         assert!(a1.put_policy(bad).is_err());
         assert!(a1.is_empty());
+    }
+
+    /// A late subscriber's replay must arrive in policy-id order no matter
+    /// what order the policies were created in (the old HashMap replayed
+    /// in hash order, which varied across processes).
+    #[test]
+    fn late_replay_order_independent_of_creation_order() {
+        let orders: [[&str; 3]; 2] = [["zeta", "alpha", "mid"], ["mid", "zeta", "alpha"]];
+        let mut replays: Vec<Vec<String>> = Vec::new();
+        for order in orders {
+            let bus = Bus::new();
+            let mut a1 = A1PolicyService::new(bus.clone(), "a1");
+            for id in order {
+                let mut p = EnergyPolicy::default_policy();
+                p.id = id.to_string();
+                a1.put_policy(p).unwrap();
+            }
+            let host = bus.endpoint("late");
+            a1.subscribe("late");
+            bus.deliver_all();
+            let ids: Vec<String> = host
+                .drain()
+                .into_iter()
+                .map(|(_, msg)| match msg {
+                    OranMessage::PolicyUpdate(p) => p.id,
+                    other => panic!("unexpected replay message: {other:?}"),
+                })
+                .collect();
+            replays.push(ids);
+        }
+        assert_eq!(replays[0], vec!["alpha", "mid", "zeta"]);
+        assert_eq!(replays[0], replays[1]);
     }
 
     #[test]

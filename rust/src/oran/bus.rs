@@ -13,7 +13,7 @@
 //! convenience path (two intern-table lookups); fleet-scale callers resolve
 //! ids once and use [`Bus::send_ids`].
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use super::messages::OranMessage;
@@ -59,6 +59,7 @@ impl Endpoint {
 /// Intern table + registered endpoints, behind one lock.
 #[derive(Debug, Default)]
 struct Directory {
+    // frost-lint: allow(R2, reason = "hot-path name-interning table; lookup-only, never iterated")
     ids: HashMap<Arc<str>, EndpointId>,
     /// Reverse table: id → display name.
     names: Vec<Arc<str>>,
@@ -98,8 +99,9 @@ enum Recipient {
 #[derive(Debug, Default)]
 pub struct Bus {
     dir: Mutex<Directory>,
-    /// (interface name → messages carried), for fabric statistics.
-    stats: Mutex<HashMap<&'static str, u64>>,
+    /// (interface name → messages carried), for fabric statistics;
+    /// BTreeMap so reports iterate in interface-name order.
+    stats: Mutex<BTreeMap<&'static str, u64>>,
     /// In-flight messages not yet pumped into inboxes.
     queue: Mutex<VecDeque<(EndpointId, Recipient, OranMessage)>>,
 }
@@ -230,8 +232,8 @@ impl Bus {
         delivered
     }
 
-    /// Per-interface traffic counters.
-    pub fn stats(&self) -> HashMap<&'static str, u64> {
+    /// Per-interface traffic counters, interface-name ordered.
+    pub fn stats(&self) -> BTreeMap<&'static str, u64> {
         self.stats.lock().unwrap().clone()
     }
 }

@@ -4,7 +4,7 @@
 //! published here; inference hosts deploy from the catalogue; the SMO can
 //! flag entries for replacement, pulling a new version.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
@@ -53,14 +53,16 @@ pub struct CatalogueEntry {
 /// The catalogue itself.
 #[derive(Debug, Default)]
 pub struct ModelCatalogue {
-    entries: HashMap<String, CatalogueEntry>,
+    /// Keyed by model name; BTreeMap so listings iterate name-ordered
+    /// regardless of registration order.
+    entries: BTreeMap<String, CatalogueEntry>,
     /// Validation threshold: models below it are rejected for publishing.
     pub min_accuracy: f64,
 }
 
 impl ModelCatalogue {
     pub fn new(min_accuracy: f64) -> Self {
-        ModelCatalogue { entries: HashMap::new(), min_accuracy }
+        ModelCatalogue { entries: BTreeMap::new(), min_accuracy }
     }
 
     /// Register a freshly trained model (state = Trained, version 1 or bump).
@@ -131,15 +133,10 @@ impl ModelCatalogue {
         self.entries.get(name)
     }
 
-    /// All entries deployable right now (Published).
+    /// All entries deployable right now (Published), in name order
+    /// (BTreeMap keys are the names).
     pub fn published(&self) -> Vec<&CatalogueEntry> {
-        let mut v: Vec<_> = self
-            .entries
-            .values()
-            .filter(|e| e.state == ModelState::Published)
-            .collect();
-        v.sort_by(|a, b| a.name.cmp(&b.name));
-        v
+        self.entries.values().filter(|e| e.state == ModelState::Published).collect()
     }
 
     pub fn len(&self) -> usize {
@@ -221,5 +218,31 @@ mod tests {
         cat.mark_deployed("m").unwrap(); // replaced in place
         cat.set_optimal_cap("m", 0.6).unwrap();
         assert_eq!(cat.get("m").unwrap().optimal_cap, Some(0.6));
+    }
+
+    /// Listing order must depend only on the entry names, never on the
+    /// order models were registered in (the old HashMap leaked insertion/
+    /// hash order into `published()` before its explicit sort was added;
+    /// the BTreeMap makes the whole structure order-stable).
+    #[test]
+    fn listing_order_independent_of_registration_order() {
+        let orders: [[&str; 4]; 3] = [
+            ["resnet", "lenet", "mobilenet", "bert"],
+            ["bert", "mobilenet", "lenet", "resnet"],
+            ["lenet", "bert", "resnet", "mobilenet"],
+        ];
+        let mut listings: Vec<Vec<String>> = Vec::new();
+        for order in orders {
+            let mut cat = ModelCatalogue::new(0.5);
+            for name in order {
+                cat.register_trained(name, 0.9, None);
+                cat.validate(name).unwrap();
+                cat.publish(name).unwrap();
+            }
+            listings.push(cat.published().iter().map(|e| e.name.clone()).collect());
+        }
+        assert_eq!(listings[0], vec!["bert", "lenet", "mobilenet", "resnet"]);
+        assert_eq!(listings[0], listings[1]);
+        assert_eq!(listings[0], listings[2]);
     }
 }

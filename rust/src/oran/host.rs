@@ -4,7 +4,7 @@
 //! power physics), the FROST microservice running beside the ML pipeline
 //! (paper Fig. 1), a local model store, and the KPM reporting upward.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::{HardwareConfig, ProfilerConfig};
@@ -31,8 +31,9 @@ pub struct InferenceHost {
     profiler_config: ProfilerConfig,
     /// Active A1 policy (default until the SMO pushes one).
     pub policy: EnergyPolicy,
-    /// Models deployed on this host (model → workload descriptor).
-    store: HashMap<String, WorkloadDescriptor>,
+    /// Models deployed on this host (model → workload descriptor);
+    /// BTreeMap so listings iterate name-ordered.
+    store: BTreeMap<String, WorkloadDescriptor>,
     /// Batch size used for profiling/inference on this host.
     pub batch: u32,
     /// Running totals for KPM reporting.
@@ -58,7 +59,7 @@ impl InferenceHost {
             testbed: Testbed::new(hw, seed),
             profiler_config: ProfilerConfig::default(),
             policy: EnergyPolicy::default_policy(),
-            store: HashMap::new(),
+            store: BTreeMap::new(),
             batch: 128,
             total_energy_j: 0.0,
             total_samples: 0,
@@ -82,9 +83,8 @@ impl InferenceHost {
     }
 
     pub fn deployed_models(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.store.keys().map(|s| s.as_str()).collect();
-        v.sort();
-        v
+        // BTreeMap keys already iterate in name order.
+        self.store.keys().map(|s| s.as_str()).collect()
     }
 
     /// Handle everything in the inbox (policies, profile requests).

@@ -79,6 +79,7 @@ pub fn run_overhead_experiment(
                 }
                 _ => Box::new(Eco2AiLike::new(hub.clone(), hw.gpu.tdp_w, rep as u64)),
             };
+            // frost-lint: allow(R3, reason = "Fig. 3 overhead study measures real wall-clock cost")
             let t0 = Instant::now();
             let mut now = 0.0;
             for _ in 0..steps {

@@ -34,6 +34,7 @@ impl Runtime {
     /// Load an HLO-text artifact and compile it.
     pub fn load(&self, path: impl AsRef<Path>) -> Result<LoadedComputation> {
         let path = path.as_ref();
+        // frost-lint: allow(R3, reason = "real-hardware PJRT path: reports actual compile latency")
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("artifact path not UTF-8")?,

@@ -83,7 +83,9 @@ struct StepKey {
 /// Memo table for [`StepEstimate`]s; owned by a `Testbed`.
 #[derive(Debug, Clone, Default)]
 pub struct StepEstimateCache {
+    // frost-lint: allow(R2, reason = "hot-path memo table; lookup/insert only, never iterated")
     interner: HashMap<WorkloadFingerprint, WorkloadId>,
+    // frost-lint: allow(R2, reason = "hot-path memo table; lookup/insert only, never iterated")
     entries: HashMap<StepKey, StepEstimate>,
     hits: u64,
     misses: u64,

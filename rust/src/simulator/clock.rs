@@ -52,6 +52,7 @@ pub struct WallClock {
 
 impl WallClock {
     pub fn new() -> Arc<Self> {
+        // frost-lint: allow(R3, reason = "WallClock is the explicit real-time Clock impl; sims use SimClock")
         Arc::new(WallClock { start: Instant::now() })
     }
 }

@@ -201,7 +201,7 @@ mod tests {
         let min_idx = values
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         assert!(min_idx > 0 && min_idx < values.len() - 1, "dip not interior");

@@ -32,14 +32,14 @@ impl NvmlDevice {
     pub fn new(hub: Arc<TelemetryHub>, tdp_w: f64, min_cap_frac: f64, seed: u64) -> Self {
         let mut rng = Pcg32::new(seed, 0x4E564D);
         let bias_w = rng.uniform(-4.0, 4.0);
-        let tdp_mw = (tdp_w * 1e3) as u64;
+        let tdp_mw = (tdp_w * 1e3).max(0.0) as u64;
         NvmlDevice {
             hub,
             rng: std::sync::Mutex::new(rng),
             bias_w,
             tdp_mw,
             limit_mw: std::sync::atomic::AtomicU64::new(tdp_mw),
-            min_limit_mw: (tdp_w * min_cap_frac * 1e3) as u64,
+            min_limit_mw: (tdp_w * min_cap_frac * 1e3).max(0.0) as u64,
         }
     }
 
@@ -58,7 +58,7 @@ impl NvmlDevice {
 
     /// `nvmlDeviceGetClockInfo(NVML_CLOCK_GRAPHICS)`: MHz.
     pub fn graphics_clock_mhz(&self) -> u32 {
-        self.hub.read().freq_mhz.round() as u32
+        self.hub.read().freq_mhz.round().max(0.0) as u32
     }
 
     /// `nvmlDeviceGetEnforcedPowerLimit`: mW.

@@ -399,6 +399,7 @@ mod tests {
         let time_tool = |tool: &mut dyn MeasurementTool| {
             // Arm, then measure exactly one due tick.
             tool.on_tick(Seconds(0.0));
+            // frost-lint: allow(R3, reason = "test asserts tool-overhead bound in real time")
             let t0 = Instant::now();
             tool.on_tick(Seconds(5.0));
             t0.elapsed().as_secs_f64()

@@ -104,7 +104,7 @@ impl DiurnalProfile {
     /// outside the range wraps).
     pub fn multiplier(&self, day_frac: f64) -> f64 {
         let x = day_frac.rem_euclid(1.0) * 24.0;
-        let h = (x.floor() as usize) % 24;
+        let h = (x.floor().clamp(0.0, 23.0) as usize) % 24;
         let t = x - x.floor();
         self.weights[h] * (1.0 - t) + self.weights[(h + 1) % 24] * t
     }
@@ -407,8 +407,8 @@ impl ArrivalGen {
         // the float→int cast's saturation rules.  (At the cutoff mean of
         // 64 a negative draw is an 8σ event, so the clamp's bias on the
         // mean is negligible — pinned by `tests`.)
-        let x = (mean + mean.sqrt() * self.rng.normal()).max(0.0);
-        x.round() as u64
+        let x = mean + mean.sqrt() * self.rng.normal();
+        x.max(0.0).round() as u64
     }
 }
 

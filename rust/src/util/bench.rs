@@ -64,6 +64,7 @@ fn effective_target_s(target_s: f64) -> f64 {
 pub fn bench<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T) -> BenchStats {
     let target_s = effective_target_s(target_s);
     // Calibration: run once to estimate cost — not sampled.
+    // frost-lint: allow(R3, reason = "benchmark harness: measuring real wall time is the point")
     let t0 = Instant::now();
     black_box(f());
     let once = t0.elapsed().as_secs_f64().max(1e-9);
@@ -71,11 +72,12 @@ pub fn bench<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T) -> BenchSta
 
     let mut samples_ns: Vec<f64> = Vec::with_capacity(iters as usize);
     for _ in 0..iters {
+        // frost-lint: allow(R3, reason = "benchmark harness: per-iteration wall-time sample")
         let t = Instant::now();
         black_box(f());
         samples_ns.push((t.elapsed().as_nanos() as f64).max(1.0));
     }
-    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples_ns.sort_by(|a, b| a.total_cmp(b));
     let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
     let stats = BenchStats {
         iters,

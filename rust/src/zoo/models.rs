@@ -327,7 +327,7 @@ mod tests {
                 (m.name.to_string(), agg.gpu_energy.0 / agg.wall.0)
             })
             .collect();
-        draws.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        draws.sort_by(|a, b| b.1.total_cmp(&a.1));
         let top2: Vec<&str> = draws[..2].iter().map(|(n, _)| n.as_str()).collect();
         assert!(
             top2.contains(&"ResNeXt") && top2.contains(&"PNASNet"),
