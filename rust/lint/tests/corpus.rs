@@ -181,6 +181,21 @@ fn real_tree_passes_deny_all() {
     assert!(report.unused_allows.is_empty(), "stale allows: {:?}", report.unused_allows);
 }
 
+/// The §13 chaos surfaces are deterministic-by-construction and must stay
+/// that way: the fault plan (per-message seeded RNG, no wall clock) and
+/// the chaos integration tests are linted here *by name*, under their
+/// real tree paths so the R2 scope applies exactly as in the full scan —
+/// a regression that moves them out of `DEFAULT_ROOTS` is caught too.
+#[test]
+fn chaos_surfaces_are_covered_and_clean() {
+    assert!(DEFAULT_ROOTS.contains(&"rust/src"), "fault plan must stay in a scanned root");
+    assert!(DEFAULT_ROOTS.contains(&"rust/tests"), "chaos tests must stay in a scanned root");
+    let f = unsuppressed(include_str!("../../src/oran/faults.rs"), "rust/src/oran/faults.rs");
+    assert!(f.is_empty(), "oran/faults.rs must be R1–R5 clean: {f:?}");
+    let f = unsuppressed(include_str!("../../tests/chaos.rs"), "rust/tests/chaos.rs");
+    assert!(f.is_empty(), "tests/chaos.rs must be R1–R5 clean: {f:?}");
+}
+
 #[test]
 fn json_summary_is_well_formed_enough() {
     let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");

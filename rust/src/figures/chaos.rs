@@ -1,0 +1,219 @@
+//! Chaos roll-up: one FROST fleet run under a seeded fault-injection
+//! preset (DESIGN.md §13), audited round by round.
+//!
+//! Unlike the scenario harness there is no baseline leg — the question a
+//! chaos run answers is not "how much energy does FROST save" but "does
+//! the control plane stay safe and heal itself while the fabric
+//! misbehaves".  Concretely, every round the harness checks the budget
+//! conservation invariant (Σ applied-cap watts ≤ the budget in force
+//! whenever the water-fill is engaged) and tracks which sites sit in a
+//! lease fallback or a profile quarantine; after the fault window closes
+//! the run keeps going over a quiet tail long enough for every healing
+//! path — lease renewal, retry, quarantine release, re-profile, budget
+//! re-fill — to finish, and reports whether it did.
+//!
+//! The fault window is placed so it covers the initial profile stagger
+//! (`start_round` 2): the `profile-flaps` preset is pointless if the O2
+//! plane has nothing in flight while it flaps.
+
+use anyhow::{Context, Result};
+
+use crate::oran::{FaultConfig, FaultLedger, Fleet, FleetConfig, FleetReport};
+use crate::traffic::TrafficConfig;
+use crate::util::Series;
+
+/// A1 lease TTL used by chaos runs (rounds).
+pub const CHAOS_LEASE_ROUNDS: u32 = 3;
+/// Scheduler patience before a profile retry (rounds).
+pub const CHAOS_PROFILE_TIMEOUT_ROUNDS: u32 = 2;
+/// Profile issues (first + retries) before quarantine.
+pub const CHAOS_PROFILE_MAX_ATTEMPTS: u32 = 2;
+/// Rounds a quarantined site sits out.
+pub const CHAOS_QUARANTINE_ROUNDS: u32 = 4;
+
+/// Fault-free rounds after the window closes.  Sized for the longest
+/// healing chain: a final in-window profile issue retries after at most
+/// 2·timeout+1 rounds, may then quarantine for `CHAOS_QUARANTINE_ROUNDS`,
+/// re-profiles on release and waits one more round for the result and the
+/// budget re-fill — plus the lease TTL for any fallback still draining.
+/// 2·2+1 + 4 + 2 + 3 = 12.
+pub const CHAOS_QUIET_TAIL_ROUNDS: u32 = 12;
+
+/// Build the fleet configuration for one chaos preset.  The run is
+/// traffic-driven (a site under fire still has users to serve), enforces
+/// a real power budget so conservation is auditable, and enables every
+/// §13 resilience knob: leases, profile retry/quarantine, hold-back
+/// bounds.
+pub fn chaos_config(preset: &str, sites: usize, seed: u64, smoke: bool) -> Result<FleetConfig> {
+    let tr = if smoke {
+        TrafficConfig {
+            users_per_site: 300,
+            requests_per_user_per_day: 30.0,
+            day_s: 2_400.0,
+            slots_per_day: 16,
+            warmup_rounds: 3,
+            max_batch: 32,
+            ..TrafficConfig::default()
+        }
+    } else {
+        TrafficConfig {
+            users_per_site: 800,
+            requests_per_user_per_day: 40.0,
+            day_s: 3_600.0,
+            slots_per_day: 24,
+            warmup_rounds: 3,
+            max_batch: 32,
+            ..TrafficConfig::default()
+        }
+    };
+    let rounds = tr.rounds_for_one_day();
+    anyhow::ensure!(
+        rounds > CHAOS_QUIET_TAIL_ROUNDS + 2,
+        "chaos runs need a fault window before the {CHAOS_QUIET_TAIL_ROUNDS}-round quiet tail"
+    );
+    let mut faults = FaultConfig::preset(preset, seed ^ 0xFA57)?;
+    faults.start_round = 2;
+    faults.end_round = rounds - CHAOS_QUIET_TAIL_ROUNDS;
+    Ok(FleetConfig {
+        sites,
+        seed,
+        rounds,
+        train_epochs: if smoke { 30 } else { 60 },
+        samples_per_epoch: if smoke { 5_000 } else { 20_000 },
+        budget_frac: 0.85,
+        max_concurrent_profiles: sites,
+        traffic: Some(tr),
+        faults: Some(faults),
+        policy_lease_rounds: CHAOS_LEASE_ROUNDS,
+        profile_timeout_rounds: CHAOS_PROFILE_TIMEOUT_ROUNDS,
+        profile_max_attempts: CHAOS_PROFILE_MAX_ATTEMPTS,
+        quarantine_rounds: CHAOS_QUARANTINE_ROUNDS,
+        holdback_cap: 256,
+        ..FleetConfig::default()
+    })
+}
+
+/// Output of [`chaos_run`].
+#[derive(Debug, Clone)]
+pub struct ChaosFigOutput {
+    /// One row per round: sites in lease fallback / quarantine, budget
+    /// and applied-cap watts, the round's cap excess, and the cumulative
+    /// rejected-KPM / injected-fault counters.
+    pub round_table: Series,
+    /// Everything the fault plan injected over the run.
+    pub ledger: FaultLedger,
+    /// max over audited rounds of (Σ applied-cap watts − budget watts);
+    /// ≤ 0 ⇔ the budget was conserved in every round it was in force.
+    pub max_cap_excess_w: f64,
+    /// Rounds the conservation audit covered (water-fill in force).
+    pub budget_audited_rounds: usize,
+    /// Last round any site sat in a lease fallback or quarantine
+    /// (0 = the control plane never degraded).
+    pub last_unhealthy_round: u32,
+    /// True when the final round ended with no site in fallback or
+    /// quarantine and the budget water-fill back in force.
+    pub healed: bool,
+    pub report: FleetReport,
+}
+
+/// Run one fault-injected fleet day round by round, auditing the budget
+/// conservation invariant and the §13 self-healing machinery.
+pub fn chaos_run(config: &FleetConfig) -> Result<ChaosFigOutput> {
+    let faults = config.faults.clone().context("chaos_run needs FleetConfig::faults set")?;
+    let mut fleet = Fleet::new(config.clone())?;
+    let mut round_table = Series::new(
+        format!(
+            "Chaos run: {} sites, seed {}, faults in rounds {}..={}",
+            config.sites, config.seed, faults.start_round, faults.end_round
+        ),
+        &["fallbacks", "quarantined", "budget_w", "cap_w", "excess_w", "kpm_rej", "faults"],
+    );
+    let mut max_cap_excess_w = f64::NEG_INFINITY;
+    let mut audited = 0usize;
+    let mut last_unhealthy_round = 0u32;
+    for round in 1..=config.rounds {
+        fleet.run_round()?;
+        let rep = fleet.report();
+        let fallbacks = fleet.sites.iter().filter(|s| s.host.in_lease_fallback()).count();
+        let quarantined = (0..config.sites).filter(|&i| fleet.is_quarantined(i)).count();
+        if fallbacks + quarantined > 0 {
+            last_unhealthy_round = round;
+        }
+        let mut budget_w = 0.0;
+        let mut excess_w = 0.0;
+        if rep.budget_enforced {
+            if let Some(b) = rep.budget_w {
+                audited += 1;
+                budget_w = b;
+                excess_w = rep.cap_power_w - b;
+                max_cap_excess_w = max_cap_excess_w.max(excess_w);
+            }
+        }
+        round_table.push(format!("r{round:02}"), vec![
+            fallbacks as f64,
+            quarantined as f64,
+            budget_w,
+            rep.cap_power_w,
+            excess_w,
+            rep.kpm_rejected as f64,
+            rep.fault_ledger.as_ref().map_or(0.0, |l| l.total() as f64),
+        ]);
+    }
+    let report = fleet.report();
+    let ledger = report.fault_ledger.clone().unwrap_or_default();
+    let healed = report.budget_enforced
+        && fleet.sites.iter().all(|s| !s.host.in_lease_fallback())
+        && (0..config.sites).all(|i| !fleet.is_quarantined(i));
+    Ok(ChaosFigOutput {
+        round_table,
+        ledger,
+        max_cap_excess_w: if audited > 0 { max_cap_excess_w } else { 0.0 },
+        budget_audited_rounds: audited,
+        last_unhealthy_round,
+        healed,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oran::CHAOS_PRESETS;
+
+    #[test]
+    fn chaos_config_builds_every_preset_with_a_quiet_tail() {
+        for preset in CHAOS_PRESETS {
+            let cfg = chaos_config(preset, 4, 11, true).unwrap();
+            let faults = cfg.faults.as_ref().unwrap();
+            assert!(!faults.is_inert(), "{preset} must inject something");
+            assert_eq!(faults.end_round + CHAOS_QUIET_TAIL_ROUNDS, cfg.rounds);
+            assert!(cfg.policy_lease_rounds >= 2);
+            assert!(cfg.profile_timeout_rounds >= 1);
+            assert!(cfg.budget_frac < 1.0, "conservation must be auditable");
+        }
+        assert!(chaos_config("perfect-fabric", 4, 11, true).is_err());
+    }
+
+    #[test]
+    fn chaos_run_requires_a_fault_plan() {
+        let mut cfg = chaos_config("lossy-fabric", 2, 11, true).unwrap();
+        cfg.faults = None;
+        assert!(chaos_run(&cfg).is_err());
+    }
+
+    #[test]
+    fn smoke_lossy_fabric_conserves_budget_and_heals() {
+        let cfg = chaos_config("lossy-fabric", 4, 11, true).unwrap();
+        let out = chaos_run(&cfg).unwrap();
+        assert_eq!(out.round_table.len(), cfg.rounds as usize);
+        assert!(out.ledger.total() > 0, "a lossy fabric must injure something");
+        assert!(out.budget_audited_rounds > 0, "the water-fill must engage");
+        assert!(
+            out.max_cap_excess_w <= 1e-6,
+            "budget exceeded by {} W",
+            out.max_cap_excess_w
+        );
+        assert!(out.healed, "the fleet must heal over the quiet tail");
+        assert!(out.report.lease_renewals > 0);
+    }
+}

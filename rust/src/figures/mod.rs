@@ -11,6 +11,7 @@
 //! * [`fig6`]  — energy-saving vs delay tradeoff across all 16 models,
 //!   including the paper's headline means.
 
+pub mod chaos;
 pub mod fig2;
 #[cfg(feature = "pjrt")]
 pub mod fig3;
@@ -21,6 +22,7 @@ pub mod fleet;
 pub mod scenario;
 pub mod traffic;
 
+pub use chaos::{chaos_config, chaos_run, ChaosFigOutput, CHAOS_QUIET_TAIL_ROUNDS};
 pub use fig2::{fig2_investigation, Fig2Output};
 #[cfg(feature = "pjrt")]
 pub use fig3::fig3_overhead;

@@ -79,10 +79,16 @@ pub struct ContinuousMonitor {
     load_ewma: Option<f64>,
     seen: usize,
     last_reprofile: Option<Seconds>,
+    /// Timestamp of the last *accepted* observation (None until the first).
+    last_at: Option<Seconds>,
     /// Count of re-profiles triggered (for reporting).
     pub reprofiles: u64,
     /// How many of those carried an offered-load shift past the threshold.
     pub load_shifts: u64,
+    /// Observations rejected before they touched any tracker: out-of-order
+    /// or duplicate timestamps (a faulty fabric replaying/reordering O1
+    /// telemetry, §13) and non-finite timestamps.
+    pub rejected: u64,
 }
 
 impl ContinuousMonitor {
@@ -95,8 +101,10 @@ impl ContinuousMonitor {
             load_ewma: None,
             seen: 0,
             last_reprofile: None,
+            last_at: None,
             reprofiles: 0,
             load_shifts: 0,
+            rejected: 0,
         }
     }
 
@@ -122,7 +130,17 @@ impl ContinuousMonitor {
     }
 
     /// Feed one observation; returns the requested action.
+    ///
+    /// Observations must arrive in strictly increasing timestamp order: a
+    /// duplicate or out-of-order `at` (a fabric replaying or reordering
+    /// telemetry) is rejected wholesale — it moves neither the signature
+    /// EWMA nor the load tracker — and counted in [`Self::rejected`].
     pub fn observe(&mut self, obs: Observation) -> MonitorAction {
+        if !obs.at.0.is_finite() || self.last_at.is_some_and(|t| obs.at.0 <= t.0) {
+            self.rejected += 1;
+            return MonitorAction::None;
+        }
+        self.last_at = Some(obs.at);
         self.track_load(obs.offered_load_per_s);
         let sig = Self::signature(&obs);
         if !sig.is_finite() {
@@ -354,16 +372,53 @@ mod tests {
     #[test]
     fn backwards_timestamps_do_not_bypass_cooldown() {
         // A KPM stream with a replayed/out-of-order timestamp must not be
-        // able to sneak past the cooldown: the elapsed time since the last
-        // re-profile is negative, which can never reach the cooldown.
+        // able to sneak past the cooldown.  The ordering gate rejects such
+        // observations outright before any tracker moves.
         let cfg = MonitorConfig { cooldown: Seconds(100.0), warmup: 1, ..Default::default() };
         let mut m = ContinuousMonitor::new(cfg);
         assert_eq!(m.observe(obs(0.0, 280.0, 4000.0)), MonitorAction::None); // baseline
         assert_eq!(m.observe(obs(1.0, 2800.0, 4000.0)), MonitorAction::Reprofile);
-        // Massive drift, but stamped *before* the re-profile: suppressed.
+        // Massive drift, but stamped *before* the re-profile: rejected.
         assert_eq!(m.observe(obs(-50.0, 28_000.0, 4000.0)), MonitorAction::None);
         assert_eq!(m.observe(obs(0.5, 28_000.0, 4000.0)), MonitorAction::None);
         assert_eq!(m.reprofiles, 1);
+        assert_eq!(m.rejected, 2);
+    }
+
+    #[test]
+    fn out_of_order_observations_are_rejected_and_counted() {
+        // A reordering fabric delivers a stale window after newer ones.
+        // The stale observation must not move the signature EWMA: feed a
+        // wildly drifted stale sample and confirm no re-profile ever fires
+        // and the baseline stays where the in-order stream put it.
+        let cfg = MonitorConfig { warmup: 1, ..Default::default() };
+        let mut m = ContinuousMonitor::new(cfg);
+        feed_steady(&mut m, 0.0, 50, 280.0, 4000.0);
+        let base = m.baseline().unwrap();
+        // at=10.0 is long past: huge signature, but it must be discarded.
+        assert_eq!(m.observe(obs(10.0, 28_000.0, 4000.0)), MonitorAction::None);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.baseline().unwrap().to_bits(), base.to_bits());
+        assert_eq!(m.reprofiles, 0);
+    }
+
+    #[test]
+    fn duplicate_observations_are_rejected_and_counted() {
+        // A duplicating fabric delivers the same window twice.  The copy
+        // (same timestamp) must be dropped: the load tracker would
+        // otherwise double-weight that window's demand.
+        let cfg = MonitorConfig { warmup: 1, ..Default::default() };
+        let mut m = ContinuousMonitor::new(cfg);
+        for i in 0..50 {
+            m.observe(obs_loaded(i as f64, 280.0, 4000.0, 10.0));
+        }
+        let before = m.rejected;
+        assert_eq!(m.observe(obs_loaded(49.0, 280.0, 4000.0, 10.0)), MonitorAction::None);
+        assert_eq!(m.rejected, before + 1);
+        // Non-finite timestamps are malformed, not merely late: rejected.
+        assert_eq!(m.observe(obs(f64::NAN, 280.0, 4000.0)), MonitorAction::None);
+        assert_eq!(m.rejected, before + 2);
+        assert_eq!(m.reprofiles, 0);
     }
 
     #[test]

@@ -63,6 +63,11 @@ pub struct EnergyPolicy {
     /// Maximum tolerated slowdown vs uncapped (1.10 = +10% time), enforced
     /// as a constraint on the chosen configuration.
     pub max_slowdown: f64,
+    /// TTL in fleet rounds: a host that has not seen this policy renewed
+    /// within `lease_rounds` rounds falls back to its conservative safe
+    /// cap instead of running an indefinitely stale ceiling (§13).
+    /// 0 = no lease (the policy never expires — the historical default).
+    pub lease_rounds: u32,
 }
 
 impl EnergyPolicy {
@@ -76,6 +81,7 @@ impl EnergyPolicy {
             max_cap_frac: 1.0,
             enabled: true,
             max_slowdown: 1.25,
+            lease_rounds: 0,
         }
     }
 
@@ -100,6 +106,7 @@ impl EnergyPolicy {
             ("max_cap_frac", Json::Num(self.max_cap_frac)),
             ("enabled", Json::Bool(self.enabled)),
             ("max_slowdown", Json::Num(self.max_slowdown)),
+            ("lease_rounds", Json::Num(self.lease_rounds as f64)),
         ])
     }
 
@@ -111,6 +118,11 @@ impl EnergyPolicy {
             max_cap_frac: j.req("max_cap_frac")?.as_f64().context("max_cap_frac")?,
             enabled: j.req("enabled")?.as_bool().context("enabled")?,
             max_slowdown: j.req("max_slowdown")?.as_f64().context("max_slowdown")?,
+            // Optional for pre-lease JSON: absent means "never expires".
+            lease_rounds: match j.req("lease_rounds") {
+                Ok(v) => v.as_f64().context("lease_rounds")?.clamp(0.0, u32::MAX as f64) as u32,
+                Err(_) => 0,
+            },
         };
         policy.validate()?;
         Ok(policy)
@@ -138,9 +150,23 @@ mod tests {
 
     #[test]
     fn policy_json_roundtrip() {
-        let p = EnergyPolicy::default_policy();
+        let mut p = EnergyPolicy::default_policy();
         let back = EnergyPolicy::from_json(&p.to_json()).unwrap();
         assert_eq!(p, back);
+        p.lease_rounds = 6;
+        let back = EnergyPolicy::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.lease_rounds, 6, "lease survives the JSON round trip");
+    }
+
+    #[test]
+    fn pre_lease_json_defaults_to_no_expiry() {
+        let j = Json::parse(
+            r#"{"id": "x", "qos": "balanced", "min_cap_frac": 0.3,
+            "max_cap_frac": 1.0, "enabled": true, "max_slowdown": 1.1}"#,
+        )
+        .unwrap();
+        let p = EnergyPolicy::from_json(&j).unwrap();
+        assert_eq!(p.lease_rounds, 0);
     }
 
     #[test]

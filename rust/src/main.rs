@@ -139,6 +139,7 @@ fn main() {
         "fleet" => cmd_fleet(&args),
         "traffic" => cmd_traffic(&args),
         "scenario" => cmd_scenario(&args),
+        "chaos" => cmd_chaos(&args),
         "bench" => cmd_bench(&args),
         "shift" => cmd_shift(&args),
         "dvfs-ablation" => cmd_dvfs_ablation(&args),
@@ -185,6 +186,11 @@ COMMANDS:
             scripted operational day (PRESET: outage-day, grid-step,
             flash-crowd, heatwave) — deterministic event engine, FROST
             vs stock caps with per-phase energy/latency/attainment
+  chaos     PRESET [--sites N] [--seed S] [--threads T] [--smoke] [--out DIR]
+            fault-injected fleet day (PRESET: lossy-fabric, slow-fabric,
+            liar-telemetry, profile-flaps) — seeded fabric/telemetry
+            faults vs the §13 self-healing control plane; hard-fails if
+            the budget is busted or the fleet does not heal
   bench     [--traffic] [--target-s S] [--out FILE] [--force]
             hot-path benches -> BENCH_fleet.json / BENCH_traffic.json
   shift     [--budget-frac F]               site-level power shifting
@@ -838,6 +844,91 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// A fault-injected fleet day (DESIGN.md §13): run one chaos preset over
+/// a seeded, traffic-driven fleet with every resilience knob on —
+/// policy leases, profile retry/quarantine, bounded hold-back — and
+/// audit the budget conservation invariant round by round.  Exits
+/// non-zero if any audited round busted the budget or the fleet did not
+/// heal over the quiet tail, so a CI smoke run is a real gate.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use frost::oran::CHAOS_PRESETS;
+    let smoke = args.get("smoke").is_some();
+    // Required positionally (or via --preset) for the same reason as
+    // `frost scenario`: defaulting would silently run the wrong preset
+    // when a boolean flag eats the positional name.
+    let Some(preset) = args.get("preset").or_else(|| args.pos(0)) else {
+        anyhow::bail!(
+            "missing chaos preset: frost chaos PRESET (one of: {})",
+            CHAOS_PRESETS.join(", ")
+        );
+    };
+    anyhow::ensure!(
+        CHAOS_PRESETS.contains(&preset),
+        "unknown chaos preset '{preset}' (expected one of: {})",
+        CHAOS_PRESETS.join(", ")
+    );
+    let sites = args.require_u64("sites", if smoke { 4 } else { 6 }, 1)? as usize;
+    let seed = args.require_u64("seed", 11, 0)?;
+    let mut config = figures::chaos_config(preset, sites, seed, smoke)?;
+    config.threads = args.require_u64("threads", 0, 0)? as usize;
+    let faults = config.faults.clone().expect("chaos_config always sets a plan");
+    let out = figures::chaos_run(&config)?;
+
+    println!(
+        "=== chaos '{preset}': {sites} sites, seed {seed}, faults in rounds {}..={} of {} ===",
+        faults.start_round, faults.end_round, config.rounds
+    );
+    print!("{}", out.round_table.to_table());
+    println!();
+    let l = &out.ledger;
+    println!(
+        "fault ledger         : {} dropped, {} delayed (+{} overflowed, {} released), \
+         {} duplicated, {} reordered",
+        l.dropped, l.delayed, l.delay_dropped, l.released, l.duplicated, l.reordered
+    );
+    println!(
+        "telemetry corruption : {} NaN, {} stale, {} NVML-fail; SMO rejected {} KPMs",
+        l.corrupted_nan, l.corrupted_stale, l.corrupted_nvml, out.report.kpm_rejected
+    );
+    println!(
+        "control plane        : {} lease renewals, {} lease expiries, {} quarantines, \
+         {} hold-back drops",
+        out.report.lease_renewals,
+        out.report.lease_expiries,
+        out.report.quarantine_events,
+        out.report.holdback_dropped
+    );
+    println!(
+        "budget conservation  : {} rounds audited, max cap excess {:+.1} W — {}",
+        out.budget_audited_rounds,
+        out.max_cap_excess_w,
+        if out.max_cap_excess_w <= 1e-6 {
+            "never exceeded the in-force budget"
+        } else {
+            "EXCEEDED (unexpected)"
+        }
+    );
+    println!(
+        "self-healing         : last degraded round {}, fault window closed at {} — {}",
+        out.last_unhealthy_round,
+        faults.end_round,
+        if out.healed { "fully healed" } else { "NOT HEALED" }
+    );
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join("chaos_rounds.csv");
+        std::fs::write(&path, out.round_table.to_csv())?;
+        println!("wrote {}", path.display());
+    }
+    anyhow::ensure!(
+        out.max_cap_excess_w <= 1e-6,
+        "budget conservation violated: max cap excess {:+.3} W",
+        out.max_cap_excess_w
+    );
+    anyhow::ensure!(out.healed, "fleet did not heal over the quiet tail");
+    Ok(())
+}
+
 /// Hot-path benches from the CLI: the fleet suite by default, the
 /// traffic suite with `--traffic` (the same definitions as
 /// `cargo bench --bench fleet` / `--bench traffic` — one definition
@@ -1006,6 +1097,29 @@ mod tests {
         assert!(err.contains("--slots"), "got: {err}");
         let a = args(&["scenario", "outage-day", "--sites", "none"]);
         assert!(cmd_scenario(&a).is_err());
+    }
+
+    #[test]
+    fn chaos_cli_parses_positional_preset_and_rejects_unknown() {
+        // Positional preset: `frost chaos lossy-fabric --smoke`.
+        let a = args(&["chaos", "lossy-fabric", "--smoke"]);
+        assert_eq!(a.pos(0), Some("lossy-fabric"));
+        assert!(a.get("smoke").is_some());
+        // Unknown preset is a hard error naming the choices.
+        let a = args(&["chaos", "perfect-fabric"]);
+        let err = cmd_chaos(&a).unwrap_err().to_string();
+        assert!(err.contains("perfect-fabric"), "got: {err}");
+        assert!(err.contains("lossy-fabric"), "got: {err}");
+        // A missing preset errors instead of silently defaulting (a
+        // boolean flag can eat the positional name).
+        let a = args(&["chaos", "--smoke", "liar-telemetry"]);
+        let err = cmd_chaos(&a).unwrap_err().to_string();
+        assert!(err.contains("missing chaos preset"), "got: {err}");
+        // Malformed numeric flags error like every other subcommand.
+        let a = args(&["chaos", "slow-fabric", "--sites", "none"]);
+        assert!(cmd_chaos(&a).is_err());
+        let a = args(&["chaos", "slow-fabric", "--seed", "-1"]);
+        assert!(cmd_chaos(&a).is_err());
     }
 
     #[test]

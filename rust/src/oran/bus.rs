@@ -16,6 +16,7 @@
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
+use super::faults::{FabricFate, FaultLedger, FaultPlan};
 use super::messages::OranMessage;
 
 /// Interned endpoint identity: an index into the fabric's reverse table.
@@ -53,6 +54,16 @@ impl Endpoint {
 
     pub fn pending(&self) -> usize {
         self.inbox.lock().unwrap().len()
+    }
+
+    /// Bound the inbox to `cap` queued messages by dropping the *oldest*
+    /// beyond it; returns how many were dropped.  The fleet gateway uses
+    /// this so a long site outage cannot grow the hold-back queue without
+    /// bound (DESIGN.md §13).
+    pub fn truncate_oldest(&self, cap: usize) -> usize {
+        let mut inbox = self.inbox.lock().unwrap();
+        let excess = inbox.len().saturating_sub(cap);
+        inbox.drain(..excess).count()
     }
 }
 
@@ -95,6 +106,14 @@ enum Recipient {
     Pending(Arc<str>),
 }
 
+/// Fault-injection state: the installed plan plus the bounded buffer of
+/// delayed messages awaiting their due round.
+#[derive(Debug, Default)]
+struct FaultState {
+    plan: Option<FaultPlan>,
+    held: Vec<(u32, EndpointId, Recipient, OranMessage)>,
+}
+
 /// The fabric: interned endpoints + an undelivered queue + statistics.
 #[derive(Debug, Default)]
 pub struct Bus {
@@ -104,6 +123,10 @@ pub struct Bus {
     stats: Mutex<BTreeMap<&'static str, u64>>,
     /// In-flight messages not yet pumped into inboxes.
     queue: Mutex<VecDeque<(EndpointId, Recipient, OranMessage)>>,
+    /// Optional deterministic fault injection (DESIGN.md §13); only the
+    /// fleet's *global* bus ever installs a plan, so every fault decision
+    /// is made on the coordinator thread.
+    fault: Mutex<FaultState>,
 }
 
 impl Bus {
@@ -199,35 +222,133 @@ impl Bus {
         }
     }
 
-    /// Pump queued messages into inboxes; returns how many were delivered.
-    /// Unknown recipients are dropped (counted as routing failures).
-    pub fn deliver_all(&self) -> usize {
-        let mut delivered = 0;
-        loop {
-            let next = self.queue.lock().unwrap().pop_front();
-            let Some((from, to, msg)) = next else { break };
-            let (sender, ep) = {
-                let dir = self.dir.lock().unwrap();
-                let ep = match &to {
-                    Recipient::Id(id) => dir.slots[id.index()].clone(),
-                    // Delivery-time lookup: the endpoint may have been
-                    // registered after the send.
-                    Recipient::Pending(name) => dir
-                        .ids
-                        .get(&**name)
-                        .and_then(|id| dir.slots[id.index()].clone()),
-                };
-                (dir.names[from.index()].clone(), ep)
-            };
-            match ep {
-                Some(ep) => {
-                    ep.inbox.lock().unwrap().push_back((sender, msg));
-                    delivered += 1;
-                }
-                None => {
-                    *self.stats.lock().unwrap().entry("dropped").or_insert(0) += 1;
+    /// Install (or clear) a deterministic fault plan.  Replacing a plan
+    /// discards any still-held delayed messages.
+    pub fn set_fault_plan(&self, plan: Option<FaultPlan>) {
+        let mut fault = self.fault.lock().unwrap();
+        fault.plan = plan;
+        fault.held.clear();
+    }
+
+    /// Advance the installed fault plan to the next fleet round and
+    /// re-enqueue every held-back message whose delay has elapsed (in
+    /// hold order, ahead of traffic queued later this round).  A no-op
+    /// without a plan.
+    pub fn advance_fault_round(&self) {
+        let mut fault = self.fault.lock().unwrap();
+        let FaultState { plan, held } = &mut *fault;
+        let Some(plan) = plan.as_mut() else { return };
+        plan.begin_round();
+        let round = plan.round();
+        let mut released = 0u64;
+        let mut still = Vec::with_capacity(held.len());
+        {
+            let mut queue = self.queue.lock().unwrap();
+            for (due, from, to, msg) in held.drain(..) {
+                if due <= round {
+                    queue.push_back((from, to, msg));
+                    released += 1;
+                } else {
+                    still.push((due, from, to, msg));
                 }
             }
+        }
+        *held = still;
+        plan.note_released(released);
+    }
+
+    /// Snapshot of the installed plan's fault ledger (None without one).
+    pub fn fault_ledger(&self) -> Option<FaultLedger> {
+        self.fault.lock().unwrap().plan.as_ref().map(|p| p.ledger().clone())
+    }
+
+    /// The per-message fault key: sender id mixed with the recipient
+    /// (interned index, or a stable hash for not-yet-interned names).
+    fn edge_of(from: EndpointId, to: &Recipient) -> u64 {
+        let to64 = match to {
+            Recipient::Id(id) => id.index() as u64,
+            Recipient::Pending(name) => fnv1a64(name.as_bytes()) | (1 << 63),
+        };
+        ((from.index() as u64) << 32) ^ to64
+    }
+
+    /// Route one message to its (possibly late-registered) endpoint;
+    /// returns 1 on delivery, 0 on a routing failure.
+    fn deliver_one(&self, from: EndpointId, to: &Recipient, msg: OranMessage) -> usize {
+        let (sender, ep) = {
+            let dir = self.dir.lock().unwrap();
+            let ep = match to {
+                Recipient::Id(id) => dir.slots[id.index()].clone(),
+                // Delivery-time lookup: the endpoint may have been
+                // registered after the send.
+                Recipient::Pending(name) => dir
+                    .ids
+                    .get(&**name)
+                    .and_then(|id| dir.slots[id.index()].clone()),
+            };
+            (dir.names[from.index()].clone(), ep)
+        };
+        match ep {
+            Some(ep) => {
+                ep.inbox.lock().unwrap().push_back((sender, msg));
+                1
+            }
+            None => {
+                *self.stats.lock().unwrap().entry("dropped").or_insert(0) += 1;
+                0
+            }
+        }
+    }
+
+    /// Pump queued messages into inboxes; returns how many were delivered.
+    /// Unknown recipients are dropped (counted as routing failures).
+    ///
+    /// With a fault plan installed and armed, every popped message is
+    /// examined once: it may be corrupted in place, dropped, held back
+    /// for future rounds, duplicated, or deferred behind everything else
+    /// pumped this pass.  Deferred (reordered) messages deliver
+    /// unconditionally once the main queue drains, so the pump always
+    /// terminates.
+    pub fn deliver_all(&self) -> usize {
+        let mut delivered = 0;
+        let mut reorder_tail: Vec<(EndpointId, Recipient, OranMessage)> = Vec::new();
+        loop {
+            let next = self.queue.lock().unwrap().pop_front();
+            let Some((from, to, mut msg)) = next else { break };
+            let mut duplicate = false;
+            {
+                let mut fault = self.fault.lock().unwrap();
+                let FaultState { plan, held } = &mut *fault;
+                if let Some(plan) = plan.as_mut() {
+                    if plan.armed() {
+                        match plan.apply(Bus::edge_of(from, &to), &mut msg) {
+                            FabricFate::Deliver => {}
+                            FabricFate::Drop => continue,
+                            FabricFate::DelayRounds(rounds) => {
+                                if held.len() >= plan.max_held() {
+                                    plan.note_delay_dropped();
+                                } else {
+                                    plan.note_delayed();
+                                    held.push((plan.round() + rounds, from, to, msg));
+                                }
+                                continue;
+                            }
+                            FabricFate::Duplicate => duplicate = true,
+                            FabricFate::Reorder => {
+                                reorder_tail.push((from, to, msg));
+                                continue;
+                            }
+                        }
+                    }
+                }
+            }
+            if duplicate {
+                delivered += self.deliver_one(from, &to, msg.clone());
+            }
+            delivered += self.deliver_one(from, &to, msg);
+        }
+        for (from, to, msg) in reorder_tail {
+            delivered += self.deliver_one(from, &to, msg);
         }
         delivered
     }
@@ -236,6 +357,17 @@ impl Bus {
     pub fn stats(&self) -> BTreeMap<&'static str, u64> {
         self.stats.lock().unwrap().clone()
     }
+}
+
+/// FNV-1a 64-bit: a stable, dependency-free hash for fault-edge keys of
+/// recipients nobody has interned yet.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -346,5 +478,141 @@ mod tests {
         let stats = bus.stats();
         assert_eq!(stats.get("A1"), Some(&1));
         assert_eq!(stats.get("O2"), Some(&1));
+    }
+
+    // ------------------------------------------------- fault injection
+
+    use crate::oran::faults::{FaultConfig, FaultPlan};
+
+    fn plan(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn drop_all_plan_loses_every_message() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        bus.set_fault_plan(Some(plan(FaultConfig {
+            drop_p: 1.0,
+            ..FaultConfig::default()
+        })));
+        bus.advance_fault_round();
+        bus.send("x", "a", OranMessage::PolicyDelete { id: "1".into() });
+        bus.send("x", "a", OranMessage::PolicyDelete { id: "2".into() });
+        assert_eq!(bus.deliver_all(), 0);
+        assert_eq!(a.pending(), 0);
+        assert_eq!(bus.fault_ledger().unwrap().dropped, 2);
+    }
+
+    #[test]
+    fn delayed_messages_release_after_their_rounds_elapse() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        bus.set_fault_plan(Some(plan(FaultConfig {
+            delay_p: 1.0,
+            max_delay_rounds: 1,
+            ..FaultConfig::default()
+        })));
+        bus.advance_fault_round(); // round 1
+        bus.send("x", "a", OranMessage::PolicyDelete { id: "1".into() });
+        assert_eq!(bus.deliver_all(), 0, "held back");
+        assert_eq!(bus.fault_ledger().unwrap().delayed, 1);
+        bus.advance_fault_round(); // round 2: due
+        assert_eq!(bus.deliver_all(), 1);
+        assert_eq!(a.drain().len(), 1);
+        assert_eq!(bus.fault_ledger().unwrap().released, 1);
+    }
+
+    #[test]
+    fn delay_buffer_is_bounded_and_overflow_is_ledgered() {
+        let bus = Bus::new();
+        let _a = bus.endpoint("a");
+        bus.set_fault_plan(Some(plan(FaultConfig {
+            delay_p: 1.0,
+            max_delay_rounds: 5,
+            max_held: 2,
+            ..FaultConfig::default()
+        })));
+        bus.advance_fault_round();
+        for i in 0..5 {
+            bus.send("x", "a", OranMessage::PolicyDelete { id: format!("{i}") });
+        }
+        assert_eq!(bus.deliver_all(), 0);
+        let ledger = bus.fault_ledger().unwrap();
+        assert_eq!(ledger.delayed, 2, "buffer holds only max_held");
+        assert_eq!(ledger.delay_dropped, 3, "overflow dropped, not stored");
+    }
+
+    #[test]
+    fn duplicated_messages_arrive_twice() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        bus.set_fault_plan(Some(plan(FaultConfig {
+            dup_p: 1.0,
+            ..FaultConfig::default()
+        })));
+        bus.advance_fault_round();
+        bus.send("x", "a", OranMessage::PolicyDelete { id: "1".into() });
+        assert_eq!(bus.deliver_all(), 2);
+        assert_eq!(a.drain().len(), 2);
+        assert_eq!(bus.fault_ledger().unwrap().duplicated, 1);
+    }
+
+    #[test]
+    fn reordered_messages_defer_behind_the_rest_of_the_pump() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        // Reorder everything examined in rounds >= 1; the tail preserves
+        // its own relative order, so with reorder_p = 1.0 the pump
+        // delivers the full queue in original order via the tail — prove
+        // deferral with a mixed plan instead: only the A1 interface is
+        // scoped, so the O2 message overtakes the reordered A1 one.
+        bus.set_fault_plan(Some(plan(FaultConfig {
+            reorder_p: 1.0,
+            fault_o2: false,
+            ..FaultConfig::default()
+        })));
+        bus.advance_fault_round();
+        bus.send("x", "a", OranMessage::PolicyDelete { id: "first".into() });
+        bus.send("x", "a", OranMessage::ProfileRequest { model: "m".into(), host: "a".into() });
+        assert_eq!(bus.deliver_all(), 2);
+        let msgs = a.drain();
+        assert!(matches!(msgs[0].1, OranMessage::ProfileRequest { .. }), "{msgs:?}");
+        assert!(matches!(msgs[1].1, OranMessage::PolicyDelete { .. }), "{msgs:?}");
+        assert_eq!(bus.fault_ledger().unwrap().reordered, 1);
+    }
+
+    #[test]
+    fn inert_plan_leaves_delivery_identical() {
+        let run = |with_plan: bool| -> Vec<(String, OranMessage)> {
+            let bus = Bus::new();
+            let a = bus.endpoint("a");
+            if with_plan {
+                bus.set_fault_plan(Some(plan(FaultConfig::default())));
+            }
+            bus.advance_fault_round();
+            for i in 0..4 {
+                bus.send("x", "a", OranMessage::PolicyDelete { id: format!("{i}") });
+            }
+            bus.deliver_all();
+            a.drain().into_iter().map(|(s, m)| (s.to_string(), m)).collect()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn truncate_oldest_bounds_an_inbox_from_the_front() {
+        let bus = Bus::new();
+        let a = bus.endpoint("a");
+        for i in 0..5 {
+            bus.send("x", "a", OranMessage::PolicyDelete { id: format!("{i}") });
+        }
+        bus.deliver_all();
+        assert_eq!(a.truncate_oldest(2), 3);
+        let msgs = a.drain();
+        assert_eq!(msgs.len(), 2);
+        assert_eq!(msgs[0].1, OranMessage::PolicyDelete { id: "3".into() });
+        assert_eq!(msgs[1].1, OranMessage::PolicyDelete { id: "4".into() });
+        assert_eq!(a.truncate_oldest(2), 0, "under the cap is a no-op");
     }
 }

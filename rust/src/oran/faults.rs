@@ -1,0 +1,560 @@
+//! Deterministic fault injection for the O-RAN fabric (DESIGN.md §13).
+//!
+//! A [`FaultPlan`] is installed on the **global** bus only (the
+//! coordinator-pumped fabric between the SMO/RICs and the site gateways).
+//! Site-local buses carry no plan, so every fault decision is made on the
+//! coordinator thread while the global queue's contents are already
+//! settled in site-index order — thread-count determinism (§6) falls out
+//! for free, exactly as it does for the scenario engine.
+//!
+//! Decisions are **stateless per message**: each examined message derives
+//! a fresh [`Pcg32`] from `(seed, edge, round, seq)`, where `edge` mixes
+//! the sender/recipient ids and `seq` counts messages examined this
+//! round.  A disabled or all-zero plan constructs *no* generator and
+//! mutates nothing, so a zero-fault plan is bit-identical to running with
+//! no plan at all — the same guarantee the scenario engine makes for a
+//! rate multiplier of exactly 1.0.
+//!
+//! Fabric faults (drop / delay-by-rounds / duplicate / reorder) apply per
+//! interface (A1/O1/O2); telemetry corruption (NaN KPMs, stale
+//! timestamps, NVML read failures) mutates `Kpm` payloads in place.  The
+//! mechanics of delaying and reordering live in the bus; the plan only
+//! decides fates and keeps the [`FaultLedger`].
+
+use anyhow::Result;
+
+use crate::util::rng::Pcg32;
+use crate::util::Seconds;
+
+use super::messages::OranMessage;
+
+/// Names of the built-in chaos presets, in `frost chaos` help order.
+pub const CHAOS_PRESETS: [&str; 4] =
+    ["lossy-fabric", "slow-fabric", "liar-telemetry", "profile-flaps"];
+
+/// Golden-ratio mix constant (same family the fleet's `site_seed` uses).
+const MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// How far a stale-timestamp corruption shifts a KPM backwards (seconds).
+/// Large enough that any previously accepted report outranks it.
+const STALE_SHIFT_S: f64 = 1.0e7;
+
+/// A seeded description of how unreliable the fabric is.
+///
+/// Probabilities are per message.  The four fabric fates are branches of
+/// one uniform draw, so their sum must stay ≤ 1.  Corruption applies to
+/// `Kpm` payloads only and is drawn independently of the fabric fate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for every per-message generator (mixed with edge/round/seq).
+    pub seed: u64,
+    /// P(message silently dropped).
+    pub drop_p: f64,
+    /// P(message held back for 1..=`max_delay_rounds` rounds).
+    pub delay_p: f64,
+    /// Upper bound on the per-message delay, in fleet rounds.
+    pub max_delay_rounds: u32,
+    /// P(message delivered twice).
+    pub dup_p: f64,
+    /// P(message deferred behind everything else pumped this pass).
+    pub reorder_p: f64,
+    /// P(KPM fields blanked to NaN).
+    pub kpm_nan_p: f64,
+    /// P(KPM timestamp shifted far into the past).
+    pub kpm_stale_p: f64,
+    /// P(KPM power reads like a failed NVML call: negative sentinel).
+    pub nvml_fail_p: f64,
+    /// First fleet round (1-based, inclusive) the plan is active.
+    pub start_round: u32,
+    /// Last fleet round (inclusive) the plan is active.
+    pub end_round: u32,
+    /// Bound on the delayed-message buffer; overflow drops the message
+    /// (ledgered as `delay_dropped`) instead of growing without bound.
+    pub max_held: usize,
+    /// Which interfaces the fabric fates apply to.
+    pub fault_a1: bool,
+    pub fault_o1: bool,
+    pub fault_o2: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            drop_p: 0.0,
+            delay_p: 0.0,
+            max_delay_rounds: 1,
+            dup_p: 0.0,
+            reorder_p: 0.0,
+            kpm_nan_p: 0.0,
+            kpm_stale_p: 0.0,
+            nvml_fail_p: 0.0,
+            start_round: 1,
+            end_round: u32::MAX,
+            max_held: 1024,
+            fault_a1: true,
+            fault_o1: true,
+            fault_o2: true,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Build a named chaos preset.  The window defaults to the whole run;
+    /// harnesses narrow it so invariants can be checked over a quiet tail.
+    pub fn preset(name: &str, seed: u64) -> Result<FaultConfig> {
+        let base = FaultConfig { seed, ..FaultConfig::default() };
+        let cfg = match name {
+            // Every interface loses a quarter of its messages, some
+            // arrive twice, some arrive late within the same pump.
+            "lossy-fabric" => FaultConfig {
+                drop_p: 0.25,
+                dup_p: 0.05,
+                reorder_p: 0.10,
+                ..base
+            },
+            // Nothing is lost but a third of the fabric runs rounds
+            // behind, with in-pump reordering on top.
+            "slow-fabric" => FaultConfig {
+                delay_p: 0.35,
+                max_delay_rounds: 3,
+                reorder_p: 0.10,
+                ..base
+            },
+            // The fabric is perfect; the telemetry lies.
+            "liar-telemetry" => FaultConfig {
+                kpm_nan_p: 0.15,
+                kpm_stale_p: 0.15,
+                nvml_fail_p: 0.10,
+                ..base
+            },
+            // Only the O2 profiling plane flaps: requests and results
+            // vanish until the retry/quarantine machinery gives up.
+            "profile-flaps" => FaultConfig {
+                drop_p: 0.45,
+                fault_a1: false,
+                fault_o1: false,
+                ..base
+            },
+            other => anyhow::bail!(
+                "unknown chaos preset '{other}' (expected one of: {})",
+                CHAOS_PRESETS.join(", ")
+            ),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject malformed plans: non-finite or out-of-range probabilities,
+    /// fabric fates that sum past 1, empty windows, or a delay with no
+    /// room to hold anything.  Hard errors, never clamps (§6).
+    pub fn validate(&self) -> Result<()> {
+        let probs = [
+            ("drop_p", self.drop_p),
+            ("delay_p", self.delay_p),
+            ("dup_p", self.dup_p),
+            ("reorder_p", self.reorder_p),
+            ("kpm_nan_p", self.kpm_nan_p),
+            ("kpm_stale_p", self.kpm_stale_p),
+            ("nvml_fail_p", self.nvml_fail_p),
+        ];
+        for (name, p) in probs {
+            anyhow::ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "{name} = {p} must be a probability in [0, 1]"
+            );
+        }
+        let fabric = self.drop_p + self.delay_p + self.dup_p + self.reorder_p;
+        anyhow::ensure!(
+            fabric <= 1.0 + 1e-12,
+            "fabric fate probabilities sum to {fabric}, must be <= 1"
+        );
+        let corrupt = self.kpm_nan_p + self.kpm_stale_p + self.nvml_fail_p;
+        anyhow::ensure!(
+            corrupt <= 1.0 + 1e-12,
+            "KPM corruption probabilities sum to {corrupt}, must be <= 1"
+        );
+        anyhow::ensure!(
+            self.start_round >= 1 && self.start_round <= self.end_round,
+            "fault window [{}, {}] must be non-empty and 1-based",
+            self.start_round,
+            self.end_round
+        );
+        if self.delay_p > 0.0 {
+            anyhow::ensure!(
+                self.max_delay_rounds >= 1,
+                "delay_p > 0 needs max_delay_rounds >= 1"
+            );
+            anyhow::ensure!(self.max_held >= 1, "delay_p > 0 needs max_held >= 1");
+        }
+        Ok(())
+    }
+
+    /// True when no probability can ever fire — the plan is a no-op.
+    pub fn is_inert(&self) -> bool {
+        self.drop_p == 0.0
+            && self.delay_p == 0.0
+            && self.dup_p == 0.0
+            && self.reorder_p == 0.0
+            && self.kpm_nan_p == 0.0
+            && self.kpm_stale_p == 0.0
+            && self.nvml_fail_p == 0.0
+    }
+
+    fn active_in(&self, round: u32) -> bool {
+        round >= self.start_round && round <= self.end_round
+    }
+
+    fn interface_scoped(&self, interface: &str) -> bool {
+        match interface {
+            "A1" => self.fault_a1,
+            "O1" => self.fault_o1,
+            "O2" => self.fault_o2,
+            _ => false,
+        }
+    }
+}
+
+/// What the fabric does with one examined message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricFate {
+    /// Deliver normally.
+    Deliver,
+    /// Silently drop.
+    Drop,
+    /// Hold back for this many fleet rounds (≥ 1).
+    DelayRounds(u32),
+    /// Deliver twice.
+    Duplicate,
+    /// Defer behind everything else pumped this pass.
+    Reorder,
+}
+
+/// Counters of every fault the plan actually injected.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FaultLedger {
+    pub dropped: u64,
+    pub delayed: u64,
+    /// Delayed messages that overflowed the bounded hold buffer.
+    pub delay_dropped: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+    pub corrupted_nan: u64,
+    pub corrupted_stale: u64,
+    pub corrupted_nvml: u64,
+    /// Held-back messages released after their delay elapsed.
+    pub released: u64,
+}
+
+impl FaultLedger {
+    /// Total injected faults (releases are the tail of a delay, not a
+    /// separate fault, so they are excluded).
+    pub fn total(&self) -> u64 {
+        self.dropped
+            + self.delayed
+            + self.delay_dropped
+            + self.duplicated
+            + self.reordered
+            + self.corrupted_nan
+            + self.corrupted_stale
+            + self.corrupted_nvml
+    }
+}
+
+/// A live plan: config + round/seq cursors + the ledger.  Owned by the
+/// bus it is installed on; all mutation happens on the coordinator
+/// thread inside `deliver_all`.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    round: u32,
+    seq: u64,
+    ledger: FaultLedger,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(FaultPlan { cfg, round: 0, seq: 0, ledger: FaultLedger::default() })
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn ledger(&self) -> &FaultLedger {
+        &self.ledger
+    }
+
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    /// Advance to the next fleet round: resets the per-round message
+    /// counter that keys the stateless generators.
+    pub fn begin_round(&mut self) {
+        self.round += 1;
+        self.seq = 0;
+    }
+
+    /// True when any fault can fire this round (fast path: an inert or
+    /// out-of-window plan examines nothing and draws nothing).
+    pub fn armed(&self) -> bool {
+        !self.cfg.is_inert() && self.cfg.active_in(self.round)
+    }
+
+    /// Bound on the delayed-message hold buffer.
+    pub fn max_held(&self) -> usize {
+        self.cfg.max_held
+    }
+
+    pub fn note_delayed(&mut self) {
+        self.ledger.delayed += 1;
+    }
+
+    pub fn note_delay_dropped(&mut self) {
+        self.ledger.delay_dropped += 1;
+    }
+
+    pub fn note_released(&mut self, n: u64) {
+        self.ledger.released += n;
+    }
+
+    /// Fresh per-message generator keyed by (seed, edge, round, seq).
+    fn message_rng(&self, edge: u64, seq: u64) -> Pcg32 {
+        let seed = self.cfg.seed ^ edge.wrapping_mul(MIX);
+        let stream = ((self.round as u64) << 32) | (seq & 0xFFFF_FFFF);
+        Pcg32::new(seed, stream)
+    }
+
+    /// Examine one message: corrupt `Kpm` payloads in place, then decide
+    /// its fabric fate.  Draw order is fixed (corruption draws first)
+    /// so every decision depends only on (seed, edge, round, seq).
+    pub fn apply(&mut self, edge: u64, msg: &mut OranMessage) -> FabricFate {
+        if !self.armed() {
+            return FabricFate::Deliver;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+
+        let cfg = &self.cfg;
+        let corrupt_total = cfg.kpm_nan_p + cfg.kpm_stale_p + cfg.nvml_fail_p;
+        let corruptible = corrupt_total > 0.0 && matches!(msg, OranMessage::Kpm(_));
+        let fabric_total = cfg.drop_p + cfg.delay_p + cfg.dup_p + cfg.reorder_p;
+        let fabric_scoped = fabric_total > 0.0 && cfg.interface_scoped(msg.interface());
+        if !corruptible && !fabric_scoped {
+            return FabricFate::Deliver;
+        }
+
+        let mut rng = self.message_rng(edge, seq);
+        if corruptible {
+            if let OranMessage::Kpm(kpm) = msg {
+                let u = rng.next_f64();
+                let cfg = &self.cfg;
+                if u < cfg.kpm_nan_p {
+                    kpm.gpu_power_w = f64::NAN;
+                    kpm.gpu_util = f64::NAN;
+                    self.ledger.corrupted_nan += 1;
+                } else if u < cfg.kpm_nan_p + cfg.kpm_stale_p {
+                    kpm.at = Seconds(kpm.at.0 - STALE_SHIFT_S);
+                    self.ledger.corrupted_stale += 1;
+                } else if u < cfg.kpm_nan_p + cfg.kpm_stale_p + cfg.nvml_fail_p {
+                    // A failed NVML read surfaces as a negative sentinel
+                    // rather than a plausible wattage.
+                    kpm.gpu_power_w = -1.0;
+                    self.ledger.corrupted_nvml += 1;
+                }
+            }
+        }
+        if !fabric_scoped {
+            return FabricFate::Deliver;
+        }
+        let cfg = &self.cfg;
+        let u = rng.next_f64();
+        if u < cfg.drop_p {
+            self.ledger.dropped += 1;
+            FabricFate::Drop
+        } else if u < cfg.drop_p + cfg.delay_p {
+            let rounds = rng.below(cfg.max_delay_rounds) + 1;
+            // The bus ledgers delayed vs delay_dropped once it knows
+            // whether the hold buffer has room.
+            FabricFate::DelayRounds(rounds)
+        } else if u < cfg.drop_p + cfg.delay_p + cfg.dup_p {
+            self.ledger.duplicated += 1;
+            FabricFate::Duplicate
+        } else if u < cfg.drop_p + cfg.delay_p + cfg.dup_p + cfg.reorder_p {
+            self.ledger.reordered += 1;
+            FabricFate::Reorder
+        } else {
+            FabricFate::Deliver
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oran::messages::KpmReport;
+
+    fn kpm(at: f64) -> OranMessage {
+        OranMessage::Kpm(KpmReport {
+            host: "h".into(),
+            at: Seconds(at),
+            model: None,
+            gpu_power_w: 100.0,
+            cpu_power_w: 10.0,
+            dram_power_w: 5.0,
+            gpu_util: 0.5,
+            cap_frac: 1.0,
+            samples_processed: 1,
+            energy_j: 1.0,
+            offered_load_per_s: 0.0,
+            p99_latency_s: 0.0,
+            seq: 1,
+        })
+    }
+
+    #[test]
+    fn presets_validate_and_unknown_is_rejected() {
+        for name in CHAOS_PRESETS {
+            let cfg = FaultConfig::preset(name, 7).unwrap();
+            assert!(!cfg.is_inert(), "{name} must inject something");
+        }
+        assert!(FaultConfig::preset("perfect-fabric", 7).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_configs() {
+        let bad = FaultConfig { drop_p: 1.5, ..FaultConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = FaultConfig { drop_p: f64::NAN, ..FaultConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = FaultConfig { drop_p: 0.6, delay_p: 0.6, ..FaultConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = FaultConfig { start_round: 5, end_round: 4, ..FaultConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = FaultConfig { delay_p: 0.1, max_delay_rounds: 0, ..FaultConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = FaultConfig { delay_p: 0.1, max_held: 0, ..FaultConfig::default() };
+        assert!(bad.validate().is_err());
+        assert!(FaultConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn inert_plan_touches_nothing() {
+        let mut plan = FaultPlan::new(FaultConfig::default()).unwrap();
+        plan.begin_round();
+        assert!(!plan.armed());
+        let mut msg = kpm(3.0);
+        let before = msg.clone();
+        assert_eq!(plan.apply(1, &mut msg), FabricFate::Deliver);
+        assert_eq!(msg, before, "inert plans must not mutate payloads");
+        assert_eq!(plan.ledger().total(), 0);
+    }
+
+    #[test]
+    fn out_of_window_rounds_are_untouched() {
+        let cfg = FaultConfig {
+            drop_p: 1.0,
+            start_round: 3,
+            end_round: 3,
+            ..FaultConfig::default()
+        };
+        let mut plan = FaultPlan::new(cfg).unwrap();
+        let mut msg = kpm(0.0);
+        plan.begin_round(); // round 1
+        assert_eq!(plan.apply(0, &mut msg), FabricFate::Deliver);
+        plan.begin_round();
+        plan.begin_round(); // round 3: armed
+        assert_eq!(plan.apply(0, &mut msg), FabricFate::Drop);
+        plan.begin_round(); // round 4: quiet again
+        assert_eq!(plan.apply(0, &mut msg), FabricFate::Deliver);
+        assert_eq!(plan.ledger().dropped, 1);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed_edge_round_seq() {
+        let cfg = FaultConfig {
+            drop_p: 0.3,
+            delay_p: 0.2,
+            max_delay_rounds: 3,
+            dup_p: 0.1,
+            reorder_p: 0.1,
+            kpm_nan_p: 0.2,
+            ..FaultConfig::default()
+        };
+        let run = |cfg: &FaultConfig| -> Vec<FabricFate> {
+            let mut plan = FaultPlan::new(cfg.clone()).unwrap();
+            let mut fates = Vec::new();
+            for _ in 0..4 {
+                plan.begin_round();
+                for edge in 0..8u64 {
+                    let mut msg = kpm(1.0);
+                    fates.push(plan.apply(edge, &mut msg));
+                }
+            }
+            fates
+        };
+        assert_eq!(run(&cfg), run(&cfg), "same plan, same fates");
+        let reseeded = FaultConfig { seed: 99, ..cfg.clone() };
+        assert_ne!(run(&cfg), run(&reseeded), "different seed, different fates");
+    }
+
+    #[test]
+    fn interface_scoping_limits_fabric_fates() {
+        let cfg = FaultConfig {
+            drop_p: 1.0,
+            fault_a1: false,
+            fault_o1: false,
+            fault_o2: true,
+            ..FaultConfig::default()
+        };
+        let mut plan = FaultPlan::new(cfg).unwrap();
+        plan.begin_round();
+        let mut k = kpm(0.0);
+        assert_eq!(plan.apply(0, &mut k), FabricFate::Deliver, "O1 unscoped");
+        let mut req = OranMessage::ProfileRequest { model: "m".into(), host: "h".into() };
+        assert_eq!(plan.apply(0, &mut req), FabricFate::Drop, "O2 scoped");
+    }
+
+    #[test]
+    fn corruption_mutates_kpms_in_the_advertised_ways() {
+        // One corruption kind at a time so the mutation is unambiguous.
+        let check = |cfg: FaultConfig, verify: fn(&KpmReport)| {
+            let mut plan = FaultPlan::new(cfg).unwrap();
+            plan.begin_round();
+            let mut msg = kpm(50.0);
+            plan.apply(4, &mut msg);
+            match &msg {
+                OranMessage::Kpm(k) => verify(k),
+                other => panic!("unexpected message {other:?}"),
+            }
+        };
+        check(
+            FaultConfig { kpm_nan_p: 1.0, ..FaultConfig::default() },
+            |k| assert!(k.gpu_power_w.is_nan() && k.gpu_util.is_nan()),
+        );
+        check(
+            FaultConfig { kpm_stale_p: 1.0, ..FaultConfig::default() },
+            |k| assert!(k.at.0 < -1.0e6, "timestamp shifted far backwards: {}", k.at.0),
+        );
+        check(
+            FaultConfig { nvml_fail_p: 1.0, ..FaultConfig::default() },
+            |k| assert_eq!(k.gpu_power_w, -1.0),
+        );
+    }
+
+    #[test]
+    fn delay_fate_is_bounded_by_max_delay_rounds() {
+        let cfg = FaultConfig { delay_p: 1.0, max_delay_rounds: 3, ..FaultConfig::default() };
+        let mut plan = FaultPlan::new(cfg).unwrap();
+        plan.begin_round();
+        for edge in 0..64u64 {
+            let mut msg = kpm(0.0);
+            match plan.apply(edge, &mut msg) {
+                FabricFate::DelayRounds(r) => assert!((1..=3).contains(&r), "delay {r}"),
+                other => panic!("expected a delay, got {other:?}"),
+            }
+        }
+    }
+}

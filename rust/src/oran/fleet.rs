@@ -75,9 +75,13 @@ use crate::util::Seconds;
 use crate::zoo::{all_models, model_by_name};
 
 use super::bus::{Bus, Endpoint, EndpointId};
+use super::faults::{FaultConfig, FaultLedger, FaultPlan};
 use super::host::InferenceHost;
 use super::messages::{LifecycleEvent, OranMessage};
-use super::nonrt_ric::{FleetAssignments, FleetProfileScheduler, NonRtRic};
+use super::nonrt_ric::{
+    lock_recovering, FleetAssignments, FleetProfileScheduler, NonRtRic, ProfileHealth,
+    ProfileHealthState,
+};
 use super::smo::Smo;
 
 /// Knobs of a fleet scenario.
@@ -122,6 +126,32 @@ pub struct FleetConfig {
     /// fire at round boundaries on the coordinator, so a scripted day is
     /// bit-identical for any worker-thread count.  Requires `traffic`.
     pub scenario: Option<Scenario>,
+    /// Seeded fabric fault injection on the *global* bus (§13): drops,
+    /// delays, duplicates, reorders and telemetry corruption, all decided
+    /// per message on the coordinator thread so runs stay bit-identical
+    /// for any worker-thread count.  None = a perfect fabric, exactly as
+    /// before this knob existed.
+    pub faults: Option<FaultConfig>,
+    /// A1 policy lease TTL in rounds (§13): every pushed policy carries
+    /// it, the SMO renews each round, and a host that misses this many
+    /// consecutive renewals falls back to its conservative safe cap.
+    /// 0 = no leases (the historical behavior).
+    pub policy_lease_rounds: u32,
+    /// Profile-request patience in scheduler rounds before a retry (§13);
+    /// 0 disables timeout/retry/quarantine entirely (historical behavior:
+    /// the scheduler re-requests every round a model stays cap-less).
+    pub profile_timeout_rounds: u32,
+    /// Issues per site (first + retries) before the scheduler quarantines
+    /// it; only read when `profile_timeout_rounds > 0`.
+    pub profile_max_attempts: u32,
+    /// Rounds a quarantined site sits out before the coordinator restores
+    /// its assignment and the scheduler re-staggers it.
+    pub quarantine_rounds: u32,
+    /// Bound on a down site's held-back global inbox: the oldest messages
+    /// beyond the cap are dropped (and ledgered in
+    /// [`Fleet::holdback_dropped`]) so a long outage cannot grow the
+    /// gateway queue without limit.  0 = unbounded (not recommended).
+    pub holdback_cap: usize,
 }
 
 impl Default for FleetConfig {
@@ -142,6 +172,12 @@ impl Default for FleetConfig {
             sample_retention: 512,
             traffic: None,
             scenario: None,
+            faults: None,
+            policy_lease_rounds: 0,
+            profile_timeout_rounds: 0,
+            profile_max_attempts: 3,
+            quarantine_rounds: 8,
+            holdback_cap: 1024,
         }
     }
 }
@@ -354,6 +390,10 @@ impl FleetSite {
         let before = self.host.total_energy_j;
         self.host.step();
         self.profiling_energy_j += self.host.total_energy_j - before;
+        // The A1 lease clock ticks after this round's policies applied:
+        // a renewal that landed above re-armed it; a missed one brings
+        // the host a round closer to its safe-cap fallback (§13).
+        self.host.tick_lease();
 
         // Workload phase under the (possibly just-updated) cap. The
         // estimate is memoized: in steady state this is a cache hit, not a
@@ -609,6 +649,20 @@ pub struct FleetReport {
     pub budget_enforced: bool,
     /// Σ cap_frac·TDP — the fleet's enforced worst-case GPU power.
     pub cap_power_w: f64,
+    /// Fault-injection ledger of the global fabric (None = no plan
+    /// installed; §13).
+    pub fault_ledger: Option<FaultLedger>,
+    /// KPM reports the SMO rejected as corrupt/stale/duplicate (§13).
+    pub kpm_rejected: u64,
+    /// A1 lease expiries across the fleet (hosts that fell back to their
+    /// safe cap at least once; §13).
+    pub lease_expiries: u64,
+    /// Profile-path quarantine entries over the run (§13).
+    pub quarantine_events: u64,
+    /// Messages dropped from down sites' bounded hold-back queues (§13).
+    pub holdback_dropped: u64,
+    /// A1 lease renewals the SMO pushed over the run (§13).
+    pub lease_renewals: u64,
 }
 
 /// Sites in flight between the coordinator and a worker: the original
@@ -661,10 +715,15 @@ impl SitePool {
     }
 
     /// Run one parallel site phase over `sites`, in place.
-    fn run_phase(&self, sites: &mut Vec<FleetSite>) {
+    ///
+    /// A dead worker (its channel hung up without a panic payload —
+    /// satellite of §13) surfaces as a proper `Err` instead of a
+    /// coordinator panic, so the caller can report the fleet as failed.
+    /// A *panicking* site is a site bug and is still re-raised verbatim.
+    fn run_phase(&self, sites: &mut Vec<FleetSite>) -> Result<()> {
         let n = sites.len();
         if n == 0 {
-            return;
+            return Ok(());
         }
         let chunk = n.div_ceil(self.workers());
         let mut slots: Vec<Option<FleetSite>> = Vec::with_capacity(n);
@@ -677,26 +736,31 @@ impl SitePool {
             if batch.len() == chunk {
                 self.injectors[batches]
                     .send(std::mem::replace(&mut batch, Vec::with_capacity(chunk)))
-                    .expect("site worker alive");
+                    .map_err(|_| {
+                        anyhow::anyhow!("site worker {batches} died: injector hung up")
+                    })?;
                 batches += 1;
             }
         }
         if !batch.is_empty() {
-            self.injectors[batches].send(batch).expect("site worker alive");
+            self.injectors[batches]
+                .send(batch)
+                .map_err(|_| anyhow::anyhow!("site worker {batches} died: injector hung up"))?;
             batches += 1;
         }
 
         let mut panicked: Option<Box<dyn std::any::Any + Send>> = None;
         for _ in 0..batches {
-            match self.results.recv().expect("site worker pool alive") {
-                Ok(done) => {
+            match self.results.recv() {
+                Err(_) => anyhow::bail!("site worker pool died mid-phase: results hung up"),
+                Ok(Ok(done)) => {
                     for (i, site) in done {
                         slots[i] = Some(site);
                     }
                 }
                 // Keep draining the remaining batches so the pool is not
                 // left with stale results, then re-raise.
-                Err(payload) => {
+                Ok(Err(payload)) => {
                     panicked.get_or_insert(payload);
                 }
             }
@@ -704,10 +768,20 @@ impl SitePool {
         if let Some(payload) = panicked {
             resume_unwind(payload);
         }
-        *sites = slots
-            .into_iter()
-            .map(|slot| slot.expect("every site returned by the pool"))
-            .collect();
+        let mut rebuilt = Vec::with_capacity(n);
+        for slot in slots {
+            rebuilt.push(slot.context("site lost by the worker pool")?);
+        }
+        *sites = rebuilt;
+        Ok(())
+    }
+
+    /// Test hook: replace a worker's injector with a dead channel so the
+    /// next phase observes a hung-up worker.
+    #[cfg(test)]
+    fn kill_worker_for_test(&mut self) {
+        let (tx, _) = channel::<SiteBatch>();
+        self.injectors[0] = tx;
     }
 }
 
@@ -778,6 +852,17 @@ pub struct Fleet {
     scenario_rt: Option<ScenarioRt>,
     /// Per-event ledger: every fired event, in dispatch order.
     pub event_log: Vec<FiredEvent>,
+    /// Profile-path health shared with the scheduler rApp (§13): the
+    /// scheduler writes quarantine decisions, the coordinator acts on
+    /// them (blank assignment + budget reservation) and lifts them.
+    profile_health: ProfileHealth,
+    /// Per-site quarantine release round (None = not quarantined).
+    quarantine_release: Vec<Option<u32>>,
+    /// Lifetime count of messages dropped from down sites' bounded
+    /// hold-back queues (`FleetConfig::holdback_cap`).
+    pub holdback_dropped: u64,
+    /// Lifetime count of A1 lease renewals the SMO pushed.
+    pub lease_renewals: u64,
 }
 
 /// How often a traffic-driven fleet re-runs the load-weighted budget
@@ -792,6 +877,11 @@ impl Fleet {
     pub fn new(config: FleetConfig) -> Result<Fleet> {
         anyhow::ensure!(config.sites > 0, "fleet needs at least one site");
         anyhow::ensure!(config.budget_frac > 0.0, "budget_frac must be positive");
+        anyhow::ensure!(
+            config.policy_lease_rounds != 1,
+            "policy_lease_rounds of 1 expires before any renewal can land; \
+             use 0 (no leases) or >= 2"
+        );
         if let Some(tr) = &config.traffic {
             tr.validate().context("invalid traffic config")?;
         }
@@ -803,6 +893,11 @@ impl Fleet {
             scen.validate(config.sites, tr).context("invalid scenario script")?;
         }
         let bus = Bus::new();
+        if let Some(fc) = &config.faults {
+            bus.set_fault_plan(Some(
+                FaultPlan::new(fc.clone()).context("invalid fault config")?,
+            ));
+        }
         let mut smo = Smo::new(bus.clone());
         let mut nonrt = NonRtRic::new(bus.clone(), config.min_accuracy);
         let smo_id = bus.resolve("smo");
@@ -852,12 +947,15 @@ impl Fleet {
                 id: format!("{name}-qos"),
                 qos,
                 enabled: config.frost_enabled,
+                lease_rounds: config.policy_lease_rounds,
                 ..EnergyPolicy::default_policy()
             };
             // Per-site A1 policy, waiting in the local fabric for round 1.
+            // Recorded as the SMO's intent so lease renewals re-assert it.
+            smo.record_policy(&name, policy.clone());
             local_bus.send("smo", &name, OranMessage::PolicyUpdate(policy));
             smo.enrol_host(&name);
-            assignments.lock().unwrap().push((name.clone(), model_id.clone()));
+            lock_recovering(&assignments).push((name.clone(), model_id.clone()));
             sites.push(FleetSite {
                 index: i,
                 name,
@@ -905,11 +1003,19 @@ impl Fleet {
                 }
             }
         }
+        let profile_health: ProfileHealth = Arc::new(Mutex::new(ProfileHealthState::default()));
         if config.frost_enabled {
-            nonrt.add_rapp(Box::new(FleetProfileScheduler::new(
-                assignments.clone(),
-                config.max_concurrent_profiles,
-            )));
+            let mut scheduler =
+                FleetProfileScheduler::new(assignments.clone(), config.max_concurrent_profiles);
+            if config.profile_timeout_rounds > 0 {
+                scheduler = scheduler.with_resilience(
+                    config.profile_timeout_rounds,
+                    config.profile_max_attempts,
+                    config.seed ^ 0x0F0F_5CED,
+                    profile_health.clone(),
+                );
+            }
+            nonrt.add_rapp(Box::new(scheduler));
         }
         let requested = if config.threads == 0 {
             thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -924,6 +1030,7 @@ impl Fleet {
             pre_derate: vec![None; config.sites],
             budget_frac: config.budget_frac,
         });
+        let quarantine_release = vec![None; config.sites];
         let config = Arc::new(config);
         let pool = SitePool::spawn(workers, config.clone());
         Ok(Fleet {
@@ -943,12 +1050,19 @@ impl Fleet {
             ever_enforced: false,
             scenario_rt,
             event_log: Vec::new(),
+            profile_health,
+            quarantine_release,
+            holdback_dropped: 0,
+            lease_renewals: 0,
         })
     }
 
     /// Execute one orchestration round (module docs, steps 1–7).
     pub fn run_round(&mut self) -> Result<()> {
         self.round += 1;
+        // Fault clock (§13): the installed plan (if any) advances to this
+        // round and releases held-back messages whose delay elapsed.
+        self.bus.advance_fault_round();
 
         // 0. Scenario events due this round fire first, on the
         //    coordinator (DESIGN.md §11): outage/recovery topology,
@@ -956,18 +1070,30 @@ impl Fleet {
         //    before the scheduler or any site acts, so the round is one
         //    consistent world state for every worker-thread count.
         self.apply_due_events()?;
+        //    Quarantines due for release re-enter the fleet before the
+        //    scheduler steps, so the re-stagger can start this round.
+        self.release_due_quarantines();
 
         // 1. Non-RT RIC: ingest lifecycle events, stagger ProfileRequests.
         self.nonrt.step()?;
+        //    Act on fresh quarantine decisions and renew A1 leases before
+        //    the fabric pumps, so both ride this round's delivery (§13).
+        self.absorb_quarantines();
+        self.renew_leases()?;
         self.bus.deliver_all();
 
         // 2. Gateway down: global → site-local, moving each message (the
         //    sender rides along as a shared intern-table handle).  A down
         //    site receives nothing — its global endpoint queues traffic
-        //    until recovery, so a pre-outage profile request is processed
-        //    exactly once, after the site returns.
+        //    until recovery (bounded by `holdback_cap`, oldest dropped
+        //    first), so a pre-outage profile request is processed at most
+        //    once, after the site returns.
         for site in &self.sites {
             if site.down {
+                if self.config.holdback_cap > 0 {
+                    self.holdback_dropped +=
+                        site.global_ep.truncate_oldest(self.config.holdback_cap) as u64;
+                }
                 continue;
             }
             for (from, msg) in site.global_ep.drain() {
@@ -976,7 +1102,7 @@ impl Fleet {
         }
 
         // 3. Parallel site phase on the persistent pool.
-        self.pool.run_phase(&mut self.sites);
+        self.pool.run_phase(&mut self.sites).context("parallel site phase")?;
 
         // 4. Gateway up, in site order (thread-count independent), with
         //    training/deployment lifecycle fanned out to the non-RT RIC.
@@ -1061,6 +1187,88 @@ impl Fleet {
         self.scenario_rt.as_ref().map_or(self.config.budget_frac, |rt| rt.budget_frac)
     }
 
+    /// True while `site` sits in profile quarantine (§13).
+    pub fn is_quarantined(&self, site: usize) -> bool {
+        self.quarantine_release.get(site).map_or(false, |q| q.is_some())
+    }
+
+    /// Adopt fresh scheduler quarantine decisions (§13): blank the
+    /// site's assignment (like a scripted outage does), forget its stale
+    /// demand weight, and schedule its release.  The site keeps serving —
+    /// only the profile/budget control path treats it as untrusted.
+    fn absorb_quarantines(&mut self) {
+        if self.config.profile_timeout_rounds == 0 {
+            return;
+        }
+        let quarantined = lock_recovering(&self.profile_health).quarantined.clone();
+        if quarantined.is_empty() {
+            return;
+        }
+        for i in 0..self.sites.len() {
+            if self.quarantine_release[i].is_some()
+                || !quarantined.contains(self.sites[i].name.as_str())
+            {
+                continue;
+            }
+            self.quarantine_release[i] = Some(self.round + self.config.quarantine_rounds);
+            lock_recovering(&self.assignments)[i].1 = String::new();
+            let name = self.sites[i].name.clone();
+            self.smo.clear_host_load(&name);
+            // Its cap wattage is reserved in the water-fill until release.
+            self.budget_applied = false;
+        }
+    }
+
+    /// Lift quarantines whose sit-out elapsed: restore the assignment so
+    /// the scheduler's rolling cursor re-staggers the site into a fresh
+    /// attempt cycle, and force a budget re-fill.
+    fn release_due_quarantines(&mut self) {
+        for i in 0..self.sites.len() {
+            let due = matches!(self.quarantine_release[i], Some(r) if r <= self.round);
+            if !due {
+                continue;
+            }
+            self.quarantine_release[i] = None;
+            let site = &self.sites[i];
+            lock_recovering(&self.profile_health).quarantined.remove(site.name.as_str());
+            // A down site stays blanked; its recovery event restores it.
+            if !site.down {
+                let pair = (site.name.clone(), site.model_id.clone());
+                lock_recovering(&self.assignments)[i] = pair;
+            }
+            self.budget_applied = false;
+        }
+    }
+
+    /// Renew every up site's A1 lease (§13) by re-pushing the policy the
+    /// SMO *intends* for it (its policy book): on a healthy fabric no
+    /// lease ever lapses, while a droppy one starves the host into its
+    /// safe-cap fallback within `policy_lease_rounds` missed renewals.
+    /// A host in fallback heals the moment one renewal lands (it
+    /// restores the pre-fallback cap, clamped to the renewed bounds), and
+    /// a dropped budget push is re-asserted by the very next renewal —
+    /// the host's own view is never trusted, so a stale ceiling cannot
+    /// outlive one delivered A1 message.
+    fn renew_leases(&mut self) -> Result<()> {
+        if self.config.policy_lease_rounds == 0 {
+            return Ok(());
+        }
+        for site in &self.sites {
+            // Skip sites that have not applied their construction-time
+            // policy yet (round 1): it is still queued on the site-local
+            // fabric and a renewal would only duplicate it.
+            if site.down || site.rounds_run == 0 {
+                continue;
+            }
+            let Some(intended) = self.smo.intended_policy(&site.name) else { continue };
+            let mut policy = intended.clone();
+            policy.lease_rounds = self.config.policy_lease_rounds;
+            self.smo.push_policy_to(&site.name, policy)?;
+            self.lease_renewals += 1;
+        }
+        Ok(())
+    }
+
     /// Fire every scripted event due at the current round (coordinator
     /// thread, before anything else in the round — see `run_round` step 0).
     fn apply_due_events(&mut self) -> Result<()> {
@@ -1110,7 +1318,7 @@ impl Fleet {
                 // dark site instead of queueing duplicate profile
                 // requests against it every round (it would double-charge
                 // profiling energy at recovery).
-                self.assignments.lock().unwrap()[site].1 = String::new();
+                lock_recovering(&self.assignments)[site].1 = String::new();
                 // And drop its stale demand weight at the SMO.
                 let name = self.sites[site].name.clone();
                 self.smo.clear_host_load(&name);
@@ -1121,7 +1329,7 @@ impl Fleet {
                 let s = &mut self.sites[site];
                 s.down = false;
                 let pair = (s.name.clone(), s.model_id.clone());
-                self.assignments.lock().unwrap()[site] = pair;
+                lock_recovering(&self.assignments)[site] = pair;
                 // Its profile is still fresh (same model), so the forced
                 // refresh folds it straight back into the water-fill.
                 self.budget_applied = false;
@@ -1260,18 +1468,22 @@ impl Fleet {
         let mut waiting = 0usize; // stale-profile sites (stagger/churn)
         for (i, site) in self.sites.iter().enumerate() {
             let down = site.down;
+            let quarantined = self.quarantine_release[i].is_some();
             let derate_max =
                 self.scenario_rt.as_ref().map_or(1.0, |rt| rt.derate[i]);
             let fresh = matches!(
                 site.host.profile_log.last(),
                 Some(out) if out.model == site.model_id
             );
-            if down || !fresh {
+            if down || quarantined || !fresh {
                 // Reserve the site's worst-case draw under its current
                 // cap: a dark site still holds its cap for the recovery
-                // round, and an unprofiled site keeps running under its
-                // old cap until the stagger reaches it.
-                if !down {
+                // round, an unprofiled site keeps running under its old
+                // cap until the stagger reaches it, and a quarantined
+                // site's profile path is untrusted until release (§13).
+                // Neither dark nor quarantined sites count as "waiting" —
+                // their reservation *is* their allocation.
+                if !down && !quarantined {
                     waiting += 1;
                 }
                 reserved_w += site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
@@ -1395,7 +1607,7 @@ impl Fleet {
             // A down site stays blanked for the scheduler; its new
             // assignment lands when the recovery event restores it.
             let assigned = if site.down { String::new() } else { model_id };
-            self.assignments.lock().unwrap()[site.index] = (site.name.clone(), assigned);
+            lock_recovering(&self.assignments)[site.index] = (site.name.clone(), assigned);
         }
         // New models re-profile; refresh the budget allocation afterwards.
         self.budget_applied = false;
@@ -1487,6 +1699,12 @@ impl Fleet {
             },
             budget_enforced: self.budget_applied,
             cap_power_w,
+            fault_ledger: self.bus.fault_ledger(),
+            kpm_rejected: self.smo.kpm_rejected_total(),
+            lease_expiries: self.sites.iter().map(|s| s.host.lease_expiries).sum(),
+            quarantine_events: lock_recovering(&self.profile_health).quarantine_events,
+            holdback_dropped: self.holdback_dropped,
+            lease_renewals: self.lease_renewals,
         }
     }
 }
@@ -1659,6 +1877,45 @@ mod tests {
             report.fleet_workload_energy_j.to_bits(),
             baseline.fleet_workload_energy_j.to_bits()
         );
+    }
+
+    #[test]
+    fn dead_worker_surfaces_as_error_not_panic() {
+        let mut cfg = small_cfg();
+        cfg.threads = 1;
+        let mut fleet = Fleet::new(cfg).unwrap();
+        fleet.run_round().unwrap();
+        fleet.pool.kill_worker_for_test();
+        let err = fleet.run_round().expect_err("dead worker must be an Err");
+        assert!(format!("{err:#}").contains("died"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn lease_of_one_round_is_rejected_at_construction() {
+        let mut cfg = small_cfg();
+        cfg.policy_lease_rounds = 1;
+        assert!(Fleet::new(cfg).is_err());
+    }
+
+    #[test]
+    fn lease_renewals_on_a_healthy_fabric_never_expire() {
+        let mut cfg = small_cfg();
+        cfg.policy_lease_rounds = 3;
+        let mut fleet = Fleet::new(cfg).unwrap();
+        let report = fleet.run().unwrap();
+        assert!(report.lease_renewals > 0, "renewals must have been pushed");
+        assert_eq!(report.lease_expiries, 0, "no expiry without fabric faults");
+        assert!(report.fault_ledger.is_none(), "no plan installed");
+        // The run is bit-identical to a lease-less one: renewals re-apply
+        // the in-force policy, which is a no-op on a healthy fabric.
+        let base = Fleet::new(small_cfg()).unwrap().run().unwrap();
+        assert_eq!(
+            report.fleet_workload_energy_j.to_bits(),
+            base.fleet_workload_energy_j.to_bits()
+        );
+        for (x, y) in report.sites.iter().zip(&base.sites) {
+            assert_eq!(x.cap_frac.to_bits(), y.cap_frac.to_bits());
+        }
     }
 
     #[test]

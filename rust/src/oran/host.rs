@@ -43,6 +43,15 @@ pub struct InferenceHost {
     pub errors: u64,
     /// Profile outcomes kept for inspection.
     pub profile_log: Vec<ProfileOutcome>,
+    /// Monotone sequence number stamped on every KPM this host emits.
+    kpm_seq: u64,
+    /// Rounds left on the active policy's lease (None = no lease).
+    lease_left: Option<u32>,
+    /// Cap in force before a lease-expiry fallback, restored when the
+    /// next renewal arrives.
+    pre_fallback_cap: Option<f64>,
+    /// How many times a policy lease expired without renewal (§13).
+    pub lease_expiries: u64,
 }
 
 impl InferenceHost {
@@ -65,6 +74,10 @@ impl InferenceHost {
             total_samples: 0,
             errors: 0,
             profile_log: Vec::new(),
+            kpm_seq: 0,
+            lease_left: None,
+            pre_fallback_cap: None,
+            lease_expiries: 0,
         }
     }
 
@@ -93,6 +106,14 @@ impl InferenceHost {
             match msg {
                 OranMessage::PolicyUpdate(p) => {
                     self.policy = p;
+                    // A policy arrival doubles as a lease renewal: restore
+                    // the pre-fallback cap (if a lease expired) before the
+                    // normal clamp so healing lands in one step.
+                    if let Some(cap) = self.pre_fallback_cap.take() {
+                        self.testbed.set_cap_frac(cap);
+                    }
+                    self.lease_left = (self.policy.enabled && self.policy.lease_rounds > 0)
+                        .then_some(self.policy.lease_rounds);
                     if !self.policy.enabled {
                         self.testbed.set_cap_frac(1.0);
                     } else {
@@ -110,6 +131,8 @@ impl InferenceHost {
                 }
                 OranMessage::PolicyDelete { .. } => {
                     self.policy = EnergyPolicy::default_policy();
+                    self.lease_left = None;
+                    self.pre_fallback_cap = None;
                     self.testbed.set_cap_frac(1.0);
                 }
                 OranMessage::ProfileRequest { model, host } if host == self.name => {
@@ -138,6 +161,39 @@ impl InferenceHost {
         }
     }
 
+    /// Tick the active A1 policy's lease by one fleet round (§13).  When
+    /// the lease runs out without a renewal the host falls back to the
+    /// policy's conservative safe cap — its *floor*, which is ≤ any
+    /// assigned cap, so the fleet budget stays conserved — remembering
+    /// the pre-fallback cap for restoration on the next renewal.
+    pub fn tick_lease(&mut self) {
+        let Some(left) = self.lease_left else { return };
+        if left > 1 {
+            self.lease_left = Some(left - 1);
+            return;
+        }
+        self.lease_left = None;
+        self.lease_expiries += 1;
+        if self.policy.enabled {
+            let safe = self.policy.min_cap_frac.clamp(0.05, 1.0);
+            let cap = self.testbed.cap_frac();
+            if cap > safe + 1e-12 {
+                self.pre_fallback_cap = Some(cap);
+                self.testbed.set_cap_frac(safe);
+            }
+        }
+    }
+
+    /// Rounds left on the active policy lease (None = no lease running).
+    pub fn lease_remaining(&self) -> Option<u32> {
+        self.lease_left
+    }
+
+    /// True while a lease expiry holds the host at its safe cap.
+    pub fn in_lease_fallback(&self) -> bool {
+        self.pre_fallback_cap.is_some()
+    }
+
     fn run_profiler(&mut self, w: &WorkloadDescriptor) -> ProfileOutcome {
         let profiler =
             PowerProfiler::with_policy(self.profiler_config.clone(), self.policy.clone());
@@ -159,6 +215,7 @@ impl InferenceHost {
         self.total_energy_j += energy;
         self.total_samples += n;
         let last = samples.last()?;
+        self.kpm_seq += 1;
         self.bus.send_ids(
             self.self_id,
             self.smo_id,
@@ -175,6 +232,7 @@ impl InferenceHost {
                 energy_j: energy,
                 offered_load_per_s: 0.0,
                 p99_latency_s: 0.0,
+                seq: self.kpm_seq,
             }),
         );
         Some((wall, energy))
@@ -228,6 +286,7 @@ impl InferenceHost {
         let gpu_busy_power_w =
             if usage.busy_s > 0.0 { usage.gpu_busy_energy_j / usage.busy_s } else { 0.0 };
         let offered_rate_per_s = offered as f64 / window.dur;
+        self.kpm_seq += 1;
         self.bus.send_ids(
             self.self_id,
             self.smo_id,
@@ -252,6 +311,7 @@ impl InferenceHost {
                 energy_j,
                 offered_load_per_s: offered_rate_per_s,
                 p99_latency_s: lat.hist.percentile(0.99),
+                seq: self.kpm_seq,
             }),
         );
         Some(SlotReport {
@@ -410,6 +470,75 @@ mod tests {
         bus.deliver_all();
         h.step();
         assert!((h.testbed.cap_frac() - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lease_expiry_falls_back_to_safe_cap_and_renewal_restores() {
+        let (bus, mut h) = host_with_model("ResNet");
+        h.testbed.set_cap_frac(0.8);
+        let mut p = EnergyPolicy::default_policy();
+        p.lease_rounds = 2;
+        bus.send("smo", "host1", OranMessage::PolicyUpdate(p.clone()));
+        bus.deliver_all();
+        h.step();
+        assert_eq!(h.lease_remaining(), Some(2));
+        h.tick_lease();
+        assert_eq!(h.lease_remaining(), Some(1));
+        assert!((h.testbed.cap_frac() - 0.8).abs() < 1e-9, "lease still live");
+        h.tick_lease();
+        assert_eq!(h.lease_remaining(), None);
+        assert_eq!(h.lease_expiries, 1);
+        assert!(h.in_lease_fallback());
+        assert!(
+            (h.testbed.cap_frac() - 0.3).abs() < 1e-9,
+            "expired lease drops to the policy floor, got {}",
+            h.testbed.cap_frac()
+        );
+        // Further ticks without a lease are no-ops.
+        h.tick_lease();
+        assert_eq!(h.lease_expiries, 1);
+        // A renewal restores the pre-fallback cap and re-arms the lease.
+        bus.send("smo", "host1", OranMessage::PolicyUpdate(p));
+        bus.deliver_all();
+        h.step();
+        assert!(!h.in_lease_fallback());
+        assert!((h.testbed.cap_frac() - 0.8).abs() < 1e-9, "healed in one renewal");
+        assert_eq!(h.lease_remaining(), Some(2));
+    }
+
+    #[test]
+    fn leaseless_policies_never_expire() {
+        let (bus, mut h) = host_with_model("ResNet");
+        h.testbed.set_cap_frac(0.7);
+        bus.send("smo", "host1", OranMessage::PolicyUpdate(EnergyPolicy::default_policy()));
+        bus.deliver_all();
+        h.step();
+        assert_eq!(h.lease_remaining(), None);
+        for _ in 0..10 {
+            h.tick_lease();
+        }
+        assert_eq!(h.lease_expiries, 0);
+        assert!((h.testbed.cap_frac() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kpm_sequence_numbers_are_monotone() {
+        let (bus, mut h) = host_with_model("ResNet");
+        bus.deliver_all();
+        bus.endpoint("smo").drain();
+        h.run_inference("ResNet", 5).unwrap();
+        h.run_inference("ResNet", 5).unwrap();
+        bus.deliver_all();
+        let seqs: Vec<u64> = bus
+            .endpoint("smo")
+            .drain()
+            .into_iter()
+            .filter_map(|(_, m)| match m {
+                OranMessage::Kpm(k) => Some(k.seq),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(seqs, vec![1, 2]);
     }
 
     #[test]

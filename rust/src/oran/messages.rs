@@ -30,6 +30,10 @@ pub struct KpmReport {
     /// latency histogram, so reporting it costs a bin walk, not a sort
     /// (DESIGN.md §10).
     pub p99_latency_s: f64,
+    /// Per-host monotone sequence number (starts at 1).  The SMO rejects
+    /// duplicate or out-of-order sequences, so a fabric that duplicates
+    /// or reorders O1 traffic cannot double-count telemetry (§13).
+    pub seq: u64,
 }
 
 /// Events of the AI/ML lifecycle (paper Sec. II-B).
@@ -104,6 +108,7 @@ mod tests {
             energy_j: 0.0,
             offered_load_per_s: 0.0,
             p99_latency_s: 0.0,
+            seq: 1,
         });
         assert_eq!(k.interface(), "O1");
         assert_eq!(

@@ -21,6 +21,7 @@
 pub mod a1;
 pub mod bus;
 pub mod catalogue;
+pub mod faults;
 pub mod fleet;
 pub mod host;
 pub mod lifecycle;
@@ -32,6 +33,7 @@ pub mod smo;
 pub use a1::A1PolicyService;
 pub use bus::{Bus, Endpoint, EndpointId};
 pub use catalogue::{CatalogueEntry, ModelCatalogue, ModelState};
+pub use faults::{FabricFate, FaultConfig, FaultLedger, FaultPlan, CHAOS_PRESETS};
 pub use fleet::{
     bench_config, run_bench_suite, site_seed, FiredEvent, Fleet, FleetConfig, FleetReport,
     FleetSite, SiteReport, SiteTraffic,
@@ -40,5 +42,8 @@ pub use host::InferenceHost;
 pub use lifecycle::{LifecycleStage, MlLifecycle};
 pub use messages::OranMessage;
 pub use nearrt_ric::{NearRtRic, XApp};
-pub use nonrt_ric::{FleetAssignments, FleetProfileScheduler, NonRtRic, RApp};
+pub use nonrt_ric::{
+    lock_recovering, FleetAssignments, FleetProfileScheduler, NonRtRic, ProfileHealth,
+    ProfileHealthState, RApp,
+};
 pub use smo::Smo;

@@ -27,7 +27,11 @@ pub struct XApp {
 
 impl XApp {
     /// Create an xApp; the period is clamped into the near-RT envelope.
+    /// A non-finite period (NaN would survive `clamp` and make the xApp
+    /// due on *every* step — a tight control loop out of bad telemetry,
+    /// §13) falls back to the slowest legal loop instead.
     pub fn new(name: &str, model: &str, host: &str, period_s: f64) -> Self {
+        let period_s = if period_s.is_finite() { period_s } else { MAX_PERIOD_S };
         XApp {
             name: name.to_string(),
             model: model.to_string(),
@@ -121,6 +125,21 @@ mod tests {
         assert_eq!(ric.step(Seconds(0.11), &mut [&mut h]), 1);
         assert_eq!(ric.xapps()[0].invocations, 2);
         assert!(h.total_samples > 0);
+    }
+
+    #[test]
+    fn non_finite_period_falls_back_to_slowest_loop() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let x = XApp::new("x", "m", "h", bad);
+            assert_eq!(x.period, Seconds(MAX_PERIOD_S), "period {bad}");
+        }
+        // And the schedule stays sane: one invocation, then not due.
+        let bus = Bus::new();
+        let mut h = host(&bus);
+        let mut ric = NearRtRic::new();
+        ric.deploy_xapp(XApp::new("x", "MobileNet", "h1", f64::NAN));
+        assert_eq!(ric.step(Seconds(0.0), &mut [&mut h]), 1);
+        assert_eq!(ric.step(Seconds(0.5), &mut [&mut h]), 0);
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! catalogue: training results arrive as lifecycle events, validation runs
 //! against the held-out set, passing models are published (Sec. II-B).
 
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::Result;
+
+use crate::util::rng::Pcg32;
 
 use super::bus::{Bus, Endpoint};
 use super::catalogue::{ModelCatalogue, ModelState};
@@ -15,6 +18,39 @@ use super::messages::{LifecycleEvent, OranMessage};
 /// Shared (site → deployed model) table the fleet coordinator keeps up to
 /// date under workload churn and the scheduler rApp reads each round.
 pub type FleetAssignments = Arc<Mutex<Vec<(String, String)>>>;
+
+/// Lock a shared fleet table, recovering the data if some site worker
+/// panicked while holding the guard.  The tables behind these locks are
+/// plain snapshots (assignment pairs, health sets): a poisoned lock still
+/// holds a consistent value, and the control plane healing itself is worth
+/// strictly more than a cascading coordinator panic (§13).
+pub fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Profile-path health the scheduler writes and the fleet reads (§13).
+#[derive(Debug, Default)]
+pub struct ProfileHealthState {
+    /// Sites the scheduler has given up on after bounded retries.  The
+    /// fleet blanks their assignment, reserves their in-force cap in the
+    /// budget water-fill, and removes them here when the quarantine ends —
+    /// at which point the scheduler starts a fresh attempt cycle.
+    pub quarantined: BTreeSet<String>,
+    /// Lifetime count of quarantine entries (monotone).
+    pub quarantine_events: u64,
+}
+
+/// Shared handle to [`ProfileHealthState`].
+pub type ProfileHealth = Arc<Mutex<ProfileHealthState>>;
+
+/// An issued profile request the scheduler is still waiting on.
+#[derive(Debug, Clone)]
+struct PendingProfile {
+    /// Issues so far for this site in the current attempt cycle.
+    attempts: u32,
+    /// Scheduler round at which the request times out and may be retried.
+    next_retry: u64,
+}
 
 /// rApp that schedules FROST profiling across a fleet of inference hosts.
 ///
@@ -30,6 +66,25 @@ pub struct FleetProfileScheduler {
     cursor: usize,
     /// Total profile requests issued over the scheduler's lifetime.
     pub requested: u64,
+    /// Rounds an issued request may stay unanswered before it is retried.
+    /// 0 disables timeout tracking entirely — the historical behavior of
+    /// re-requesting every round a model remains cap-less.
+    timeout_rounds: u32,
+    /// Issues per site (first + retries) before it is quarantined.
+    max_attempts: u32,
+    /// Seeded jitter source for retry spacing, so a fleet of sites whose
+    /// requests all vanished in the same fabric outage does not retry in
+    /// lock-step.  The scheduler steps on the coordinator thread only, so
+    /// draws are deterministic regardless of worker-thread count (§6).
+    rng: Pcg32,
+    /// Scheduler rounds elapsed (one per `step`).
+    round: u64,
+    /// site → in-flight request state, present only when `timeout_rounds > 0`.
+    pending: BTreeMap<String, PendingProfile>,
+    /// Where quarantine decisions are published for the fleet to act on.
+    health: Option<ProfileHealth>,
+    /// Total timed-out requests re-issued over the scheduler's lifetime.
+    pub retries: u64,
 }
 
 impl FleetProfileScheduler {
@@ -39,7 +94,33 @@ impl FleetProfileScheduler {
             max_per_round: max_per_round.max(1),
             cursor: 0,
             requested: 0,
+            timeout_rounds: 0,
+            max_attempts: 1,
+            rng: Pcg32::new(0, 0),
+            round: 0,
+            pending: BTreeMap::new(),
+            health: None,
+            retries: 0,
         }
+    }
+
+    /// Arm timeout/retry/quarantine handling (§13): each issued request is
+    /// given `timeout_rounds` rounds of patience plus seeded jitter before
+    /// a retry, a site gets at most `max_attempts` issues per cycle, and a
+    /// site that exhausts them is quarantined in `health` until whoever
+    /// owns the fleet lifts it.
+    pub fn with_resilience(
+        mut self,
+        timeout_rounds: u32,
+        max_attempts: u32,
+        seed: u64,
+        health: ProfileHealth,
+    ) -> Self {
+        self.timeout_rounds = timeout_rounds;
+        self.max_attempts = max_attempts.max(1);
+        self.rng = Pcg32::new(seed, 0x5eed);
+        self.health = Some(health);
+        self
     }
 }
 
@@ -49,11 +130,31 @@ impl RApp for FleetProfileScheduler {
     }
 
     fn step(&mut self, ric: &mut RicContext) {
-        let assignments = self.assignments.lock().unwrap().clone();
+        self.round += 1;
+        let assignments = lock_recovering(&self.assignments).clone();
         let n = assignments.len();
         if n == 0 {
             return;
         }
+        if self.timeout_rounds > 0 {
+            // Requests that were answered (the catalogue recorded a cap)
+            // and hosts that left the table stop being pending; the next
+            // re-profile of that site starts a fresh attempt cycle.
+            self.pending.retain(|host, _| {
+                assignments.iter().any(|(h, m)| {
+                    h == host
+                        && ric
+                            .catalogue
+                            .get(m)
+                            .map(|e| e.optimal_cap.is_none())
+                            .unwrap_or(false)
+                })
+            });
+        }
+        let quarantined: BTreeSet<String> = match &self.health {
+            Some(h) => lock_recovering(h).quarantined.clone(),
+            None => BTreeSet::new(),
+        };
         let mut issued = 0;
         for k in 0..n {
             if issued >= self.max_per_round {
@@ -68,13 +169,60 @@ impl RApp for FleetProfileScheduler {
                         && e.optimal_cap.is_none()
                 })
                 .unwrap_or(false);
-            if due {
+            if !due || quarantined.contains(host) {
+                continue;
+            }
+            if self.timeout_rounds == 0 {
                 ric.outbox.push((
                     host.clone(),
                     OranMessage::ProfileRequest { model: model.clone(), host: host.clone() },
                 ));
                 issued += 1;
                 self.requested += 1;
+                continue;
+            }
+            let horizon = self.timeout_rounds;
+            match self.pending.get_mut(host) {
+                None => {
+                    ric.outbox.push((
+                        host.clone(),
+                        OranMessage::ProfileRequest { model: model.clone(), host: host.clone() },
+                    ));
+                    issued += 1;
+                    self.requested += 1;
+                    let due_at = self.round + horizon as u64 + self.rng.below(horizon) as u64;
+                    self.pending
+                        .insert(host.clone(), PendingProfile { attempts: 1, next_retry: due_at });
+                }
+                Some(p) if self.round >= p.next_retry => {
+                    if p.attempts >= self.max_attempts {
+                        // Patience exhausted: hand the site to quarantine
+                        // and stop spending O2 bandwidth on it.
+                        self.pending.remove(host);
+                        if let Some(h) = &self.health {
+                            let mut st = lock_recovering(h);
+                            if st.quarantined.insert(host.clone()) {
+                                st.quarantine_events += 1;
+                            }
+                        }
+                    } else {
+                        ric.outbox.push((
+                            host.clone(),
+                            OranMessage::ProfileRequest {
+                                model: model.clone(),
+                                host: host.clone(),
+                            },
+                        ));
+                        issued += 1;
+                        self.requested += 1;
+                        self.retries += 1;
+                        p.attempts += 1;
+                        p.next_retry =
+                            self.round + horizon as u64 + self.rng.below(horizon) as u64;
+                    }
+                }
+                // Still inside the current request's patience window.
+                Some(_) => {}
             }
         }
         self.cursor = (self.cursor + 1) % n;
@@ -302,6 +450,107 @@ mod tests {
         for s in ["siteA", "siteB", "siteC"] {
             assert_eq!(bus.endpoint(s).drain().len(), 0);
         }
+    }
+
+    fn published_catalogue(models: &[&str]) -> ModelCatalogue {
+        let mut cat = ModelCatalogue::new(0.5);
+        for m in models {
+            cat.register_trained(m, 0.9, None);
+            cat.validate(m).unwrap();
+            cat.publish(m).unwrap();
+        }
+        cat
+    }
+
+    fn step_collect(
+        sched: &mut FleetProfileScheduler,
+        cat: &mut ModelCatalogue,
+    ) -> Vec<(String, OranMessage)> {
+        let mut ctx = RicContext { catalogue: cat, outbox: Vec::new() };
+        sched.step(&mut ctx);
+        ctx.outbox
+    }
+
+    #[test]
+    fn scheduler_retries_then_quarantines_unresponsive_site() {
+        // No ProfileResult ever lands (a profile-flaps fabric eats O2):
+        // the site gets one initial issue plus bounded retries, then is
+        // quarantined and the scheduler goes quiet on it.
+        let assignments: FleetAssignments =
+            Arc::new(Mutex::new(vec![("siteA".to_string(), "m1".to_string())]));
+        let health: ProfileHealth = Arc::new(Mutex::new(ProfileHealthState::default()));
+        let mut sched =
+            FleetProfileScheduler::new(assignments, 1).with_resilience(2, 2, 7, health.clone());
+        let mut cat = published_catalogue(&["m1"]);
+        let mut sent = Vec::new();
+        for _ in 0..16 {
+            sent.extend(step_collect(&mut sched, &mut cat));
+        }
+        assert_eq!(sent.len(), 2, "one initial issue + one bounded retry");
+        assert!(sent
+            .iter()
+            .all(|(to, m)| to == "siteA" && matches!(m, OranMessage::ProfileRequest { .. })));
+        assert_eq!(sched.retries, 1);
+        let st = health.lock().unwrap();
+        assert!(st.quarantined.contains("siteA"));
+        assert_eq!(st.quarantine_events, 1);
+    }
+
+    #[test]
+    fn quarantine_release_starts_a_fresh_attempt_cycle() {
+        let assignments: FleetAssignments =
+            Arc::new(Mutex::new(vec![("siteA".to_string(), "m1".to_string())]));
+        let health: ProfileHealth = Arc::new(Mutex::new(ProfileHealthState::default()));
+        let mut sched =
+            FleetProfileScheduler::new(assignments, 1).with_resilience(2, 2, 7, health.clone());
+        let mut cat = published_catalogue(&["m1"]);
+        for _ in 0..16 {
+            step_collect(&mut sched, &mut cat);
+        }
+        assert!(health.lock().unwrap().quarantined.contains("siteA"));
+        // While quarantined: nothing is issued.
+        assert!(step_collect(&mut sched, &mut cat).is_empty());
+        // The fleet lifts the quarantine → the very next round re-issues.
+        health.lock().unwrap().quarantined.clear();
+        assert_eq!(step_collect(&mut sched, &mut cat).len(), 1);
+        // And an answer ends the cycle: cap recorded → scheduler quiet.
+        cat.set_optimal_cap("m1", 0.6).unwrap();
+        assert!(step_collect(&mut sched, &mut cat).is_empty());
+        assert_eq!(health.lock().unwrap().quarantine_events, 1, "no re-quarantine");
+    }
+
+    #[test]
+    fn resilience_waits_out_the_patience_window() {
+        // With a 3-round timeout the scheduler must NOT re-issue every
+        // round the way the timeout-less path does.
+        let assignments: FleetAssignments =
+            Arc::new(Mutex::new(vec![("siteA".to_string(), "m1".to_string())]));
+        let health: ProfileHealth = Arc::new(Mutex::new(ProfileHealthState::default()));
+        let mut sched =
+            FleetProfileScheduler::new(assignments, 1).with_resilience(3, 99, 11, health);
+        let mut cat = published_catalogue(&["m1"]);
+        assert_eq!(step_collect(&mut sched, &mut cat).len(), 1, "first issue");
+        assert!(step_collect(&mut sched, &mut cat).is_empty(), "round 2: waiting");
+        assert!(step_collect(&mut sched, &mut cat).is_empty(), "round 3: waiting");
+    }
+
+    #[test]
+    fn poisoned_assignments_lock_recovers_the_table() {
+        let assignments: FleetAssignments =
+            Arc::new(Mutex::new(vec![("siteA".to_string(), "m1".to_string())]));
+        let poisoner = assignments.clone();
+        std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("site worker dies while holding the assignment table");
+        })
+        .join()
+        .unwrap_err();
+        assert!(assignments.lock().is_err(), "lock really is poisoned");
+        assert_eq!(lock_recovering(&assignments).len(), 1);
+        // The scheduler keeps stepping off the recovered snapshot.
+        let mut sched = FleetProfileScheduler::new(assignments, 1);
+        let mut cat = published_catalogue(&["m1"]);
+        assert_eq!(step_collect(&mut sched, &mut cat).len(), 1);
     }
 
     #[test]

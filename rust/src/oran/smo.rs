@@ -43,6 +43,18 @@ pub struct Smo {
     /// discipline as the load map, zeros included: a host that stops
     /// serving traffic must not keep a stale busy-day p99.
     latency_p99: std::collections::BTreeMap<String, f64>,
+    /// Per-host ingest watermarks (latest accepted timestamp, highest
+    /// accepted sequence number) backing the KPM validation gate (§13).
+    kpm_watermarks: std::collections::BTreeMap<String, (f64, u64)>,
+    /// Rejected-KPM ledger, keyed by rejection reason.  A lying or
+    /// misbehaving fabric shows up here instead of in the telemetry.
+    kpm_rejects: std::collections::BTreeMap<&'static str, u64>,
+    /// The last policy the SMO *intended* for each host.  Lease renewals
+    /// re-push from this book rather than from the host's (possibly
+    /// stale) view, so a dropped A1 push is re-asserted by the very next
+    /// renewal and a lease-fallback restore can never resurrect a cap
+    /// the water-fill has since revoked (§13).
+    policy_book: std::collections::BTreeMap<String, EnergyPolicy>,
 }
 
 impl Smo {
@@ -59,7 +71,55 @@ impl Smo {
             lifecycle_log: Vec::new(),
             offered_load: std::collections::BTreeMap::new(),
             latency_p99: std::collections::BTreeMap::new(),
+            kpm_watermarks: std::collections::BTreeMap::new(),
+            kpm_rejects: std::collections::BTreeMap::new(),
+            policy_book: std::collections::BTreeMap::new(),
         }
+    }
+
+    /// Why a KPM must not be ingested, or Ok.  Rejections: non-finite
+    /// fields (NaN-corrupted telemetry), negative power (failed NVML
+    /// reads), timestamps behind the host's accepted watermark (stale or
+    /// reordered), and non-increasing sequence numbers (duplicates).
+    /// `seq == 0` marks unsequenced legacy reports and skips the
+    /// duplicate gate.
+    fn validate_kpm(&self, k: &KpmReport) -> Result<(), &'static str> {
+        let fields = [
+            k.at.0,
+            k.gpu_power_w,
+            k.cpu_power_w,
+            k.dram_power_w,
+            k.gpu_util,
+            k.cap_frac,
+            k.energy_j,
+            k.offered_load_per_s,
+            k.p99_latency_s,
+        ];
+        if fields.iter().any(|v| !v.is_finite()) {
+            return Err("non_finite");
+        }
+        if k.gpu_power_w < 0.0 || k.cpu_power_w < 0.0 || k.dram_power_w < 0.0 {
+            return Err("negative_power");
+        }
+        if let Some((last_at, last_seq)) = self.kpm_watermarks.get(&k.host) {
+            if k.at.0 < *last_at {
+                return Err("stale_timestamp");
+            }
+            if k.seq > 0 && k.seq <= *last_seq {
+                return Err("duplicate_seq");
+            }
+        }
+        Ok(())
+    }
+
+    /// Rejected-KPM counters by reason, reason-ordered (§13).
+    pub fn kpm_reject_ledger(&self) -> &std::collections::BTreeMap<&'static str, u64> {
+        &self.kpm_rejects
+    }
+
+    /// Total KPMs the validation gate refused to ingest.
+    pub fn kpm_rejected_total(&self) -> u64 {
+        self.kpm_rejects.values().sum()
     }
 
     /// Push an energy policy to all subscribed hosts via A1.
@@ -68,11 +128,26 @@ impl Smo {
     }
 
     /// Push a per-site A1 policy instance to one specific host — how the
-    /// fleet's global power budget is enforced site by site.
-    pub fn push_policy_to(&self, host: &str, policy: EnergyPolicy) -> anyhow::Result<()> {
+    /// fleet's global power budget is enforced site by site.  The policy
+    /// is recorded as the host's intended one before the (droppable)
+    /// fabric ever sees it.
+    pub fn push_policy_to(&mut self, host: &str, policy: EnergyPolicy) -> anyhow::Result<()> {
         policy.validate()?;
+        self.policy_book.insert(host.to_string(), policy.clone());
         self.bus.send(&self.name, host, OranMessage::PolicyUpdate(policy));
         Ok(())
+    }
+
+    /// Record a policy delivered to `host` outside [`Smo::push_policy_to`]
+    /// (the fleet queues each site's construction-time QoS policy on the
+    /// site-local fabric directly), so lease renewals know about it.
+    pub fn record_policy(&mut self, host: &str, policy: EnergyPolicy) {
+        self.policy_book.insert(host.to_string(), policy);
+    }
+
+    /// The last policy the SMO pushed (or recorded) for `host`.
+    pub fn intended_policy(&self, host: &str) -> Option<&EnergyPolicy> {
+        self.policy_book.get(host)
     }
 
     /// Enrol a host: subscribe it to A1 policies.
@@ -94,6 +169,16 @@ impl Smo {
         for (_from, msg) in self.endpoint.drain() {
             match msg {
                 OranMessage::Kpm(k) => {
+                    if let Err(reason) = self.validate_kpm(&k) {
+                        *self.kpm_rejects.entry(reason).or_insert(0) += 1;
+                        continue;
+                    }
+                    let wm = self
+                        .kpm_watermarks
+                        .entry(k.host.clone())
+                        .or_insert((f64::NEG_INFINITY, 0));
+                    wm.0 = wm.0.max(k.at.0);
+                    wm.1 = wm.1.max(k.seq);
                     self.offered_load.insert(k.host.clone(), k.offered_load_per_s);
                     self.latency_p99.insert(k.host.clone(), k.p99_latency_s);
                     self.kpms.push(k);
@@ -210,6 +295,7 @@ mod tests {
             energy_j: 123.0,
             offered_load_per_s: 0.0,
             p99_latency_s: 0.0,
+            seq: 1,
         }));
         bus.deliver_all();
         smo.step();
@@ -235,28 +321,33 @@ mod tests {
         let bus = Bus::new();
         let h1 = bus.endpoint("h1");
         let h2 = bus.endpoint("h2");
-        let smo = Smo::new(bus.clone());
+        let mut smo = Smo::new(bus.clone());
         let mut p = EnergyPolicy::default_policy();
         p.max_cap_frac = 0.55;
         smo.push_policy_to("h1", p).unwrap();
         bus.deliver_all();
         assert_eq!(h1.pending(), 1);
         assert_eq!(h2.pending(), 0);
+        assert_eq!(smo.intended_policy("h1").unwrap().max_cap_frac, 0.55);
         let mut bad = EnergyPolicy::default_policy();
         bad.min_cap_frac = 2.0;
         assert!(smo.push_policy_to("h1", bad).is_err());
+        // An invalid push never reaches the book either.
+        assert_eq!(smo.intended_policy("h1").unwrap().max_cap_frac, 0.55);
     }
 
     #[test]
     fn kpm_rollup_aggregates_per_host() {
         let bus = Bus::new();
         let mut smo = Smo::new(bus.clone());
-        for (host, e, n, p) in
-            [("h2", 10.0, 100u64, 200.0), ("h1", 5.0, 50, 150.0), ("h2", 20.0, 200, 220.0)]
-        {
+        for (host, e, n, p, seq) in [
+            ("h2", 10.0, 100u64, 200.0, 1u64),
+            ("h1", 5.0, 50, 150.0, 1),
+            ("h2", 20.0, 200, 220.0, 2),
+        ] {
             bus.send(host, "smo", OranMessage::Kpm(KpmReport {
                 host: host.into(),
-                at: crate::util::Seconds(1.0),
+                at: crate::util::Seconds(seq as f64),
                 model: None,
                 gpu_power_w: p,
                 cpu_power_w: 0.0,
@@ -267,6 +358,7 @@ mod tests {
                 energy_j: e,
                 offered_load_per_s: if host == "h2" { 25.0 } else { 0.0 },
                 p99_latency_s: if host == "h2" { 0.035 } else { 0.0 },
+                seq,
             }));
         }
         bus.deliver_all();
@@ -306,6 +398,7 @@ mod tests {
             energy_j: 5.0,
             offered_load_per_s: 40.0,
             p99_latency_s: 0.05,
+            seq: 1,
         }));
         bus.deliver_all();
         smo.step();
@@ -315,6 +408,74 @@ mod tests {
         assert!(smo.latency_p99_by_host().get("h1").is_none());
         // Clearing an unknown host is a no-op, not a panic.
         smo.clear_host_load("ghost");
+    }
+
+    #[test]
+    fn kpm_validation_rejects_corrupt_stale_and_duplicate_reports() {
+        let bus = Bus::new();
+        let mut smo = Smo::new(bus.clone());
+        let kpm = |at: f64, seq: u64, gpu_power_w: f64, util: f64| {
+            OranMessage::Kpm(KpmReport {
+                host: "h1".into(),
+                at: crate::util::Seconds(at),
+                model: None,
+                gpu_power_w,
+                cpu_power_w: 10.0,
+                dram_power_w: 5.0,
+                gpu_util: util,
+                cap_frac: 1.0,
+                samples_processed: 10,
+                energy_j: 5.0,
+                offered_load_per_s: 1.0,
+                p99_latency_s: 0.01,
+                seq,
+            })
+        };
+        bus.send("h1", "smo", kpm(10.0, 1, 200.0, 0.5)); // accepted
+        bus.send("h1", "smo", kpm(11.0, 2, f64::NAN, f64::NAN)); // non-finite
+        bus.send("h1", "smo", kpm(12.0, 3, -1.0, 0.5)); // NVML sentinel
+        bus.send("h1", "smo", kpm(13.0, 4, 210.0, 0.6)); // accepted
+        bus.send("h1", "smo", kpm(13.0, 4, 210.0, 0.6)); // duplicate seq
+        bus.send("h1", "smo", kpm(2.0, 5, 220.0, 0.7)); // stale timestamp
+        bus.send("h1", "smo", kpm(14.0, 6, 230.0, 0.8)); // accepted
+        bus.deliver_all();
+        smo.step();
+        assert_eq!(smo.kpms.len(), 3, "only the clean reports ingest");
+        let ledger = smo.kpm_reject_ledger();
+        assert_eq!(ledger.get("non_finite"), Some(&1));
+        assert_eq!(ledger.get("negative_power"), Some(&1));
+        assert_eq!(ledger.get("duplicate_seq"), Some(&1));
+        assert_eq!(ledger.get("stale_timestamp"), Some(&1));
+        assert_eq!(smo.kpm_rejected_total(), 4);
+        // The load map only ever saw accepted reports.
+        assert_eq!(smo.offered_load_by_host().get("h1"), Some(&1.0));
+    }
+
+    #[test]
+    fn unsequenced_legacy_kpms_skip_the_duplicate_gate() {
+        let bus = Bus::new();
+        let mut smo = Smo::new(bus.clone());
+        for _ in 0..2 {
+            bus.send("h1", "smo", OranMessage::Kpm(KpmReport {
+                host: "h1".into(),
+                at: crate::util::Seconds(1.0),
+                model: None,
+                gpu_power_w: 100.0,
+                cpu_power_w: 0.0,
+                dram_power_w: 0.0,
+                gpu_util: 0.5,
+                cap_frac: 1.0,
+                samples_processed: 1,
+                energy_j: 1.0,
+                offered_load_per_s: 0.0,
+                p99_latency_s: 0.0,
+                seq: 0,
+            }));
+        }
+        bus.deliver_all();
+        smo.step();
+        assert_eq!(smo.kpms.len(), 2, "seq 0 reports bypass the duplicate gate");
+        assert_eq!(smo.kpm_rejected_total(), 0);
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Chaos integration tests (DESIGN.md §13): the four pinned invariants
+//! of the fault-injected fabric and the self-healing control plane.
+//!
+//! 1. Budget conservation — Σ applied-cap watts ≤ the budget in force in
+//!    every round the water-fill is engaged, under every chaos preset.
+//! 2. Self-healing — after the fault window closes, a quiet tail of
+//!    `CHAOS_QUIET_TAIL_ROUNDS` is enough for every site to leave lease
+//!    fallback and quarantine and for the budget to be back in force.
+//! 3. Determinism — a faulty run is bit-identical for any worker-thread
+//!    count, because every fault decision happens on the coordinator.
+//! 4. Zero-fault transparency — an installed-but-inert `FaultPlan` is
+//!    bit-identical to no plan at all (it draws no randomness).
+//!
+//! The tests use a light non-traffic fleet (the figure harness covers the
+//! traffic-driven path): 20 rounds with the fault window on rounds 2..=8,
+//! leaving exactly the `CHAOS_QUIET_TAIL_ROUNDS` quiet tail the healing
+//! chain is sized for.
+
+use frost::figures::CHAOS_QUIET_TAIL_ROUNDS;
+use frost::oran::{FaultConfig, FaultLedger, Fleet, FleetConfig, FleetReport, CHAOS_PRESETS};
+
+const ROUNDS: u32 = 20;
+const FAULT_END: u32 = 8;
+
+/// Light chaos fleet: every §13 resilience knob on, budget enforced so
+/// conservation is auditable, fault window followed by the sized tail.
+fn chaos_cfg(preset: &str, seed: u64) -> FleetConfig {
+    assert_eq!(FAULT_END + CHAOS_QUIET_TAIL_ROUNDS, ROUNDS);
+    let mut faults = FaultConfig::preset(preset, seed ^ 0xC0C0).unwrap();
+    faults.start_round = 2;
+    faults.end_round = FAULT_END;
+    FleetConfig {
+        sites: 4,
+        seed,
+        rounds: ROUNDS,
+        train_epochs: 30,
+        samples_per_epoch: 5_000,
+        infer_steps_per_round: 20,
+        budget_frac: 0.85,
+        max_concurrent_profiles: 4,
+        faults: Some(faults),
+        policy_lease_rounds: 3,
+        profile_timeout_rounds: 2,
+        profile_max_attempts: 2,
+        quarantine_rounds: 4,
+        holdback_cap: 256,
+        ..FleetConfig::default()
+    }
+}
+
+/// Every bit of state a run is judged on, as raw bits so comparisons are
+/// exact: per-site caps and energies, fleet totals, the §13 counters and
+/// the fault ledger (all-zero when no plan is installed).
+fn fingerprint(r: &FleetReport) -> Vec<u64> {
+    let mut fp = vec![
+        r.fleet_workload_energy_j.to_bits(),
+        r.fleet_round_energy_j.to_bits(),
+        r.fleet_profiling_energy_j.to_bits(),
+        r.fleet_samples,
+        r.kpm_reports as u64,
+        r.mean_cap_frac.to_bits(),
+        r.cap_power_w.to_bits(),
+        r.kpm_rejected,
+        r.lease_expiries,
+        r.lease_renewals,
+        r.quarantine_events,
+        r.holdback_dropped,
+    ];
+    for s in &r.sites {
+        fp.push(s.cap_frac.to_bits());
+        fp.push(s.workload_energy_j.to_bits());
+        fp.push(s.hub_energy_j.to_bits());
+        fp.push(s.samples);
+    }
+    let ledger = r.fault_ledger.clone().unwrap_or_default();
+    fp.extend([
+        ledger.dropped,
+        ledger.delayed,
+        ledger.delay_dropped,
+        ledger.duplicated,
+        ledger.reordered,
+        ledger.corrupted_nan,
+        ledger.corrupted_stale,
+        ledger.corrupted_nvml,
+        ledger.released,
+    ]);
+    fp
+}
+
+#[test]
+fn every_preset_conserves_the_budget_and_heals() {
+    // Invariants 1 + 2, round by round, under all four presets.
+    for preset in CHAOS_PRESETS {
+        let cfg = chaos_cfg(preset, 11);
+        let mut fleet = Fleet::new(cfg.clone()).unwrap();
+        for round in 1..=cfg.rounds {
+            fleet.run_round().unwrap();
+            let rep = fleet.report();
+            if rep.budget_enforced {
+                let b = rep.budget_w.expect("enforced budget reports its watts");
+                assert!(
+                    rep.cap_power_w <= b + 1e-6,
+                    "{preset}: round {round} busts the budget: {} W > {} W",
+                    rep.cap_power_w,
+                    b
+                );
+            }
+        }
+        let rep = fleet.report();
+        let ledger = rep.fault_ledger.clone().unwrap_or_default();
+        assert!(ledger.total() > 0, "{preset}: the plan must inject something");
+        assert!(rep.budget_enforced, "{preset}: water-fill must be back in force");
+        for (i, site) in fleet.sites.iter().enumerate() {
+            assert!(
+                !site.host.in_lease_fallback(),
+                "{preset}: {} still in lease fallback after the quiet tail",
+                site.name
+            );
+            assert!(
+                !fleet.is_quarantined(i),
+                "{preset}: {} still quarantined after the quiet tail",
+                site.name
+            );
+        }
+        assert!(rep.lease_renewals > 0, "{preset}: leases must have been renewed");
+    }
+}
+
+#[test]
+fn faulty_run_is_bit_identical_across_thread_counts() {
+    // Invariant 3: fault decisions live on the coordinator, so the worker
+    // pool width cannot change a single bit of a chaotic run.
+    let mut fps = Vec::new();
+    for threads in [1usize, 2, 0] {
+        let mut cfg = chaos_cfg("lossy-fabric", 23);
+        cfg.threads = threads;
+        let rep = Fleet::new(cfg).unwrap().run().unwrap();
+        fps.push(fingerprint(&rep));
+    }
+    assert_eq!(fps[0], fps[1], "threads=1 vs threads=2 diverged");
+    assert_eq!(fps[0], fps[2], "threads=1 vs threads=0 diverged");
+    // And the faults genuinely bit: a different fault seed moves energy.
+    let mut cfg = chaos_cfg("lossy-fabric", 23);
+    cfg.faults.as_mut().unwrap().seed ^= 0xDEAD;
+    let other = Fleet::new(cfg).unwrap().run().unwrap();
+    assert_ne!(fps[0], fingerprint(&other), "fault seed must matter");
+}
+
+#[test]
+fn inert_fault_plan_is_transparent() {
+    // Invariant 4: a plan with every probability at zero draws nothing
+    // and is bit-identical to running with no plan installed at all.
+    let mut with_plan = chaos_cfg("lossy-fabric", 31);
+    with_plan.faults = Some(FaultConfig { seed: 42, ..FaultConfig::default() });
+    let mut without = with_plan.clone();
+    without.faults = None;
+    let rep_plan = Fleet::new(with_plan).unwrap().run().unwrap();
+    let rep_none = Fleet::new(without).unwrap().run().unwrap();
+    let ledger = rep_plan.fault_ledger.clone().expect("installed plan reports a ledger");
+    assert_eq!(ledger, FaultLedger::default(), "inert plan must inject nothing");
+    assert!(rep_none.fault_ledger.is_none(), "no plan, no ledger");
+    assert_eq!(fingerprint(&rep_plan), fingerprint(&rep_none));
+}
