@@ -196,6 +196,23 @@ fn chaos_surfaces_are_covered_and_clean() {
     assert!(f.is_empty(), "tests/chaos.rs must be R1–R5 clean: {f:?}");
 }
 
+/// The §14 observability spine must itself obey the determinism rules it
+/// exists to audit: the trace sink/metrics registry, the two streaming
+/// serialisers and the query engine are linted *by name* under their real
+/// tree paths (same rationale as the chaos surfaces above).
+#[test]
+fn obs_surfaces_are_covered_and_clean() {
+    for (src, path) in [
+        (include_str!("../../src/obs/mod.rs"), "rust/src/obs/mod.rs"),
+        (include_str!("../../src/obs/export.rs"), "rust/src/obs/export.rs"),
+        (include_str!("../../src/obs/query.rs"), "rust/src/obs/query.rs"),
+        (include_str!("../../tests/trace.rs"), "rust/tests/trace.rs"),
+    ] {
+        let f = unsuppressed(src, path);
+        assert!(f.is_empty(), "{path} must be R1–R5 clean: {f:?}");
+    }
+}
+
 #[test]
 fn json_summary_is_well_formed_enough() {
     let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");

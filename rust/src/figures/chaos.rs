@@ -18,6 +18,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::obs::TraceSink;
 use crate::oran::{FaultConfig, FaultLedger, Fleet, FleetConfig, FleetReport};
 use crate::traffic::TrafficConfig;
 use crate::util::Series;
@@ -114,6 +115,8 @@ pub struct ChaosFigOutput {
     /// quarantine and the budget water-fill back in force.
     pub healed: bool,
     pub report: FleetReport,
+    /// The run's trace spine (empty unless `FleetConfig::trace`).
+    pub trace: TraceSink,
 }
 
 /// Run one fault-injected fleet day round by round, auditing the budget
@@ -172,6 +175,7 @@ pub fn chaos_run(config: &FleetConfig) -> Result<ChaosFigOutput> {
         last_unhealthy_round,
         healed,
         report,
+        trace: fleet.trace,
     })
 }
 

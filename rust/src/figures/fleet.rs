@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use crate::obs::TraceSink;
 use crate::oran::{Fleet, FleetConfig, FleetReport};
 use crate::util::Series;
 
@@ -36,6 +37,9 @@ pub struct FleetFigOutput {
     pub frost: FleetReport,
     /// The baseline roll-up.
     pub baseline: FleetReport,
+    /// The FROST run's trace spine (empty unless `FleetConfig::trace`;
+    /// the baseline run is not traced).
+    pub trace: TraceSink,
 }
 
 /// Run the fleet twice — FROST on, then the stock-cap baseline — and
@@ -46,8 +50,12 @@ pub fn fleet_comparison(config: &FleetConfig) -> Result<FleetFigOutput> {
     let mut base_cfg = config.clone();
     base_cfg.frost_enabled = false;
     base_cfg.budget_frac = 1.0;
+    // Only the FROST run is traced (it is the leg making cap decisions).
+    base_cfg.trace = false;
 
-    let frost = Fleet::new(frost_cfg)?.run()?;
+    let mut frost_fleet = Fleet::new(frost_cfg)?;
+    let frost = frost_fleet.run()?;
+    let trace = frost_fleet.trace;
     let baseline = Fleet::new(base_cfg)?.run()?;
 
     let mut table = Series::new(
@@ -103,6 +111,7 @@ pub fn fleet_comparison(config: &FleetConfig) -> Result<FleetFigOutput> {
         table,
         frost,
         baseline,
+        trace,
     })
 }
 

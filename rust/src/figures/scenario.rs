@@ -17,6 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::frost::QosClass;
 use crate::metrics::LatencyHistogram;
+use crate::obs::TraceSink;
 use crate::oran::{FiredEvent, Fleet, FleetConfig, FleetReport};
 use crate::scenario::Scenario;
 use crate::traffic::{SloSummary, TrafficConfig};
@@ -73,6 +74,9 @@ pub struct ScenarioFigOutput {
     pub budget_audited_rounds: usize,
     pub frost: FleetReport,
     pub baseline: FleetReport,
+    /// The FROST run's trace spine (empty unless `FleetConfig::trace`;
+    /// the baseline run is not traced — it enforces no caps).
+    pub trace: TraceSink,
 }
 
 /// Per-class and per-phase aggregates of one fleet's scripted day.
@@ -153,6 +157,9 @@ pub fn scenario_comparison(config: &FleetConfig) -> Result<ScenarioFigOutput> {
     let mut base_cfg = config.clone();
     base_cfg.frost_enabled = false;
     base_cfg.budget_frac = 1.0;
+    // Only the FROST run is traced: the baseline enforces no caps, so a
+    // second spine would double the export for no attribution value.
+    base_cfg.trace = false;
 
     // Drive the FROST run round by round so the budget conservation
     // invariant can be audited *every* round the water-fill is in force
@@ -264,11 +271,12 @@ pub fn scenario_comparison(config: &FleetConfig) -> Result<ScenarioFigOutput> {
         frost_day_energy_j: f.day_energy_j,
         base_day_energy_j: b.day_energy_j,
         day_saving_frac: saving(f.day_energy_j, b.day_energy_j),
-        event_log: frost_fleet.event_log.clone(),
+        event_log: frost_fleet.fired_events(),
         max_cap_excess_w: if audited > 0 { max_cap_excess_w } else { 0.0 },
         budget_audited_rounds: audited,
         frost: frost_report,
         baseline: base_report,
+        trace: frost_fleet.trace,
     })
 }
 

@@ -212,6 +212,13 @@ impl ContinuousMonitor {
     pub fn baseline(&self) -> Option<f64> {
         self.baseline
     }
+
+    /// The monitor's counter triple `(reprofiles, load_shifts, rejected)`
+    /// — read whole by the fleet metrics registry (§14) so the fields
+    /// cannot be picked up piecemeal and drift apart.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.reprofiles, self.load_shifts, self.rejected)
+    }
 }
 
 #[cfg(test)]

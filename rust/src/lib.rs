@@ -28,6 +28,7 @@ pub mod data;
 pub mod figures;
 pub mod frost;
 pub mod metrics;
+pub mod obs;
 pub mod oran;
 pub mod pipeline;
 pub mod power;

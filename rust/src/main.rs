@@ -140,6 +140,7 @@ fn main() {
         "traffic" => cmd_traffic(&args),
         "scenario" => cmd_scenario(&args),
         "chaos" => cmd_chaos(&args),
+        "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "shift" => cmd_shift(&args),
         "dvfs-ablation" => cmd_dvfs_ablation(&args),
@@ -174,7 +175,8 @@ COMMANDS:
   fleet     [--sites N] [--seed S] [--rounds R] [--threads T]
             [--epochs N] [--samples N] [--infer-steps N]
             [--budget-frac F] [--max-profiles K] [--churn-every C]
-            [--sample-retention N] [--out DIR] multi-host fleet simulation
+            [--sample-retention N] [--out DIR] [--trace FILE] [--json FILE]
+            multi-host fleet simulation
   traffic   [--sites N] [--seed S] [--threads T] [--users N]
             [--req-per-user R] [--day-s S] [--slots N] [--max-batch B]
             [--arrivals poisson|bursty] [--diurnal typical|flat|W0,..,W23]
@@ -183,14 +185,20 @@ COMMANDS:
             seeded diurnal day, FROST vs stock caps + SLOs
   scenario  PRESET [--sites N] [--seed S] [--threads T] [--users N]
             [--slots N] [--budget-frac F] [--smoke] [--out DIR]
+            [--trace FILE] [--json FILE]
             scripted operational day (PRESET: outage-day, grid-step,
             flash-crowd, heatwave) — deterministic event engine, FROST
             vs stock caps with per-phase energy/latency/attainment
   chaos     PRESET [--sites N] [--seed S] [--threads T] [--smoke] [--out DIR]
+            [--trace FILE]
             fault-injected fleet day (PRESET: lossy-fabric, slow-fabric,
             liar-telemetry, profile-flaps) — seeded fabric/telemetry
             faults vs the §13 self-healing control plane; hard-fails if
             the budget is busted or the fleet does not heal
+  trace     FILE.jsonl [--site N] [--round A..B] [--kind K]
+            [--explain SITE] [--summary]
+            query a recorded TRACE_*.jsonl: stream matching lines, roll
+            up counts, or reconstruct a site's cap-change causal chain
   bench     [--traffic] [--target-s S] [--out FILE] [--force]
             hot-path benches -> BENCH_fleet.json / BENCH_traffic.json
   shift     [--budget-frac F]               site-level power shifting
@@ -478,6 +486,7 @@ fn cmd_dvfs_ablation(args: &Args) -> Result<()> {
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     use frost::oran::FleetConfig;
+    let trace_path = args.get("trace");
     let config = FleetConfig {
         sites: args.require_u64("sites", 16, 1)? as usize,
         seed: args.require_u64("seed", 7, 0)?,
@@ -490,6 +499,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         max_concurrent_profiles: args.require_u64("max-profiles", 4, 1)? as usize,
         churn_every: args.require_u32("churn-every", 0, 0)?,
         sample_retention: args.require_u64("sample-retention", 512, 0)? as usize,
+        trace: trace_path.is_some(),
         ..FleetConfig::default()
     };
     let sites = config.sites;
@@ -540,13 +550,101 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "per-site accuracy    : {}",
         if out.accuracy_unchanged { "unchanged vs baseline on every site" } else { "CHANGED (unexpected)" }
     );
+    println!();
+    println!("=== fleet metrics (name-ordered, §14 registry) ===");
+    for (name, v) in out.frost.metrics.counters() {
+        println!("  {name:<22} {v}");
+    }
+    for (name, v) in out.frost.metrics.gauges() {
+        println!("  {name:<22} {v}");
+    }
+    for (name, s) in out.frost.metrics.summaries() {
+        let st = s.finish();
+        println!(
+            "  {name:<22} mean {:.1} (min {:.1}, max {:.1}, n {})",
+            st.mean, st.min, st.max, st.n
+        );
+    }
     if let Some(dir) = args.get("out") {
         std::fs::create_dir_all(dir)?;
         let path = std::path::Path::new(dir).join("fleet.csv");
         std::fs::write(&path, out.table.to_csv())?;
         println!("wrote {}", path.display());
     }
+    if let Some(p) = trace_path {
+        frost::obs::export::write_trace(std::path::Path::new(p), &out.trace)?;
+        println!("wrote {p} ({} trace events)", out.trace.len());
+    }
+    if let Some(p) = args.get("json") {
+        write_fleet_json(p, &out)?;
+        println!("wrote {p}");
+    }
     Ok(())
+}
+
+/// Streamed `--json` report for `frost fleet` (no intermediate tree —
+/// DESIGN.md §14).
+fn write_fleet_json(path: &str, out: &figures::FleetFigOutput) -> Result<()> {
+    use frost::obs::export::JsonStream;
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut s = JsonStream::new(std::io::BufWriter::new(file));
+    s.begin_obj(None);
+    s.str_field(Some("report"), "fleet");
+    s.num_field(Some("steady_saving_frac"), out.steady_saving_frac);
+    s.num_field(Some("mean_est_saving_frac"), out.mean_est_saving_frac);
+    s.num_field(Some("baseline_round_j"), out.baseline_round_j);
+    s.num_field(Some("frost_round_j"), out.frost_round_j);
+    s.num_field(Some("profiling_j"), out.profiling_j);
+    s.num_field(Some("mean_cap_frac"), out.mean_cap_frac);
+    s.bool_field(Some("accuracy_unchanged"), out.accuracy_unchanged);
+    s.u64_field(Some("kpm_reports"), out.kpm_reports as u64);
+    s.begin_arr(Some("sites"));
+    for site in &out.frost.sites {
+        s.begin_obj(None);
+        s.str_field(Some("name"), &site.name);
+        s.str_field(Some("model"), &site.model);
+        s.num_field(Some("cap_frac"), site.cap_frac);
+        s.num_field(Some("round_energy_j"), site.round_energy_j);
+        s.num_field(Some("est_saving"), site.est_saving);
+        s.num_field(Some("accuracy"), site.accuracy);
+        s.end_obj();
+    }
+    s.end_arr();
+    write_metrics_json(&mut s, &out.frost.metrics);
+    s.end_obj();
+    s.finish().context("writing json report")?;
+    Ok(())
+}
+
+/// Shared `"metrics": {...}` section of the `--json` reports.
+fn write_metrics_json<W: std::io::Write>(
+    s: &mut frost::obs::export::JsonStream<W>,
+    m: &frost::obs::MetricsRegistry,
+) {
+    s.begin_obj(Some("metrics"));
+    s.begin_obj(Some("counters"));
+    for (name, v) in m.counters() {
+        s.u64_field(Some(name), v);
+    }
+    s.end_obj();
+    s.begin_obj(Some("gauges"));
+    for (name, v) in m.gauges() {
+        s.num_field(Some(name), v);
+    }
+    s.end_obj();
+    s.begin_obj(Some("summaries"));
+    for (name, sum) in m.summaries() {
+        let st = sum.finish();
+        s.begin_obj(Some(name));
+        s.u64_field(Some("n"), st.n as u64);
+        s.num_field(Some("mean"), st.mean);
+        s.num_field(Some("std"), st.std);
+        s.num_field(Some("min"), st.min);
+        s.num_field(Some("max"), st.max);
+        s.end_obj();
+    }
+    s.end_obj();
+    s.end_obj();
 }
 
 /// The acceptance scenario of DESIGN.md §9: run the same seeded diurnal
@@ -753,6 +851,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // grid-step scripts budget steps, so its runs enforce a budget by
     // default; the other presets run unbudgeted unless asked.
     let default_budget = if preset == "grid-step" { 0.9 } else { 1.0 };
+    let trace_path = args.get("trace");
     let config = FleetConfig {
         sites,
         seed: args.require_u64("seed", 7, 0)?,
@@ -765,6 +864,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         max_concurrent_profiles: sites,
         traffic: Some(tr.clone()),
         scenario: Some(scen.clone()),
+        trace: trace_path.is_some(),
         ..FleetConfig::default()
     };
     let out = figures::scenario_comparison(&config)?;
@@ -841,6 +941,57 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             println!("wrote {}", path.display());
         }
     }
+    if let Some(p) = trace_path {
+        frost::obs::export::write_trace(std::path::Path::new(p), &out.trace)?;
+        println!("wrote {p} ({} trace events)", out.trace.len());
+    }
+    if let Some(p) = args.get("json") {
+        write_scenario_json(p, &out)?;
+        println!("wrote {p}");
+    }
+    Ok(())
+}
+
+/// Streamed `--json` report for `frost scenario` (DESIGN.md §14).
+fn write_scenario_json(path: &str, out: &figures::ScenarioFigOutput) -> Result<()> {
+    use frost::obs::export::JsonStream;
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut s = JsonStream::new(std::io::BufWriter::new(file));
+    s.begin_obj(None);
+    s.str_field(Some("report"), "scenario");
+    s.num_field(Some("frost_day_energy_j"), out.frost_day_energy_j);
+    s.num_field(Some("base_day_energy_j"), out.base_day_energy_j);
+    s.num_field(Some("day_saving_frac"), out.day_saving_frac);
+    s.num_field(Some("max_cap_excess_w"), out.max_cap_excess_w);
+    s.u64_field(Some("budget_audited_rounds"), out.budget_audited_rounds as u64);
+    s.begin_arr(Some("events"));
+    for ev in &out.event_log {
+        s.begin_obj(None);
+        s.u64_field(Some("round"), u64::from(ev.round));
+        s.str_field(Some("detail"), &ev.detail);
+        s.end_obj();
+    }
+    s.end_arr();
+    s.begin_arr(Some("phases"));
+    for p in &out.phases {
+        s.begin_obj(None);
+        s.str_field(Some("name"), &p.name);
+        s.bool_field(Some("outage"), p.outage);
+        s.u64_field(Some("offered"), p.offered);
+        s.u64_field(Some("served"), p.served);
+        s.u64_field(Some("dropped"), p.dropped);
+        s.u64_field(Some("late"), p.late);
+        s.num_field(Some("frost_energy_j"), p.frost_energy_j);
+        s.num_field(Some("base_energy_j"), p.base_energy_j);
+        s.num_field(Some("saving_frac"), p.saving_frac);
+        s.num_field(Some("frost_lc_p99_s"), p.frost_lc_p99_s);
+        s.num_field(Some("frost_attainment"), p.frost_attainment);
+        s.end_obj();
+    }
+    s.end_arr();
+    write_metrics_json(&mut s, &out.frost.metrics);
+    s.end_obj();
+    s.finish().context("writing json report")?;
     Ok(())
 }
 
@@ -869,8 +1020,10 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     );
     let sites = args.require_u64("sites", if smoke { 4 } else { 6 }, 1)? as usize;
     let seed = args.require_u64("seed", 11, 0)?;
+    let trace_path = args.get("trace");
     let mut config = figures::chaos_config(preset, sites, seed, smoke)?;
     config.threads = args.require_u64("threads", 0, 0)? as usize;
+    config.trace = trace_path.is_some();
     let faults = config.faults.clone().expect("chaos_config always sets a plan");
     let out = figures::chaos_run(&config)?;
 
@@ -920,12 +1073,58 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         std::fs::write(&path, out.round_table.to_csv())?;
         println!("wrote {}", path.display());
     }
+    if let Some(p) = trace_path {
+        frost::obs::export::write_trace(std::path::Path::new(p), &out.trace)?;
+        println!("wrote {p} ({} trace events)", out.trace.len());
+    }
     anyhow::ensure!(
         out.max_cap_excess_w <= 1e-6,
         "budget conservation violated: max cap excess {:+.3} W",
         out.max_cap_excess_w
     );
     anyhow::ensure!(out.healed, "fleet did not heal over the quiet tail");
+    Ok(())
+}
+
+/// Query a recorded `TRACE_*.jsonl` (DESIGN.md §14): stream matching
+/// lines (`--site`, `--round A..B`, `--kind`), roll up event counts
+/// (`--summary`), or reconstruct the causal chain behind every cap
+/// change at one site (`--explain SITE`).  Scanning is lazy — a cheap
+/// substring prefilter decides which lines are parsed at all.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use frost::obs::query::{self, TraceFilter};
+    let Some(path) = args.get("file").or_else(|| args.pos(0)) else {
+        anyhow::bail!(
+            "missing trace file: frost trace FILE.jsonl \
+             [--site N] [--round A..B] [--kind K] [--explain SITE] [--summary]"
+        );
+    };
+    let path = std::path::Path::new(path);
+    if args.get("summary").is_some() {
+        print!("{}", query::summarise(path)?);
+        return Ok(());
+    }
+    if let Some(raw) = args.get("explain") {
+        let site: i64 = raw.parse().map_err(|_| {
+            anyhow::anyhow!("invalid value for --explain: '{raw}' is not a site index")
+        })?;
+        print!("{}", query::explain_report(path, site)?);
+        return Ok(());
+    }
+    let mut filter = TraceFilter::default();
+    if let Some(raw) = args.get("site") {
+        filter.site = Some(raw.parse().map_err(|_| {
+            anyhow::anyhow!("invalid value for --site: '{raw}' is not a site index")
+        })?);
+    }
+    if let Some(raw) = args.get("round") {
+        filter.round = Some(query::parse_round_range(raw)?);
+    }
+    if let Some(kind) = args.get("kind") {
+        filter.kind = Some(kind.to_string());
+    }
+    let (scanned, matched) = query::scan(path, &filter, |line, _| println!("{line}"))?;
+    eprintln!("{matched} of {scanned} events matched");
     Ok(())
 }
 

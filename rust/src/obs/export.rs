@@ -1,0 +1,330 @@
+//! Streaming JSON writers (DESIGN.md §14; the first slice of ROADMAP
+//! item 4 — zero-alloc streaming reports).
+//!
+//! Two surfaces, neither of which builds an intermediate [`Json`] tree:
+//!
+//! * [`write_trace`] — one `TRACE_*.jsonl` line per [`TraceEvent`],
+//!   written incrementally through a reused line buffer.  Schema:
+//!   every line carries `id`, `round`, `t_s`, `kind`, plus `site` for
+//!   site-scoped events and kind-specific payload fields (see
+//!   [`trace_line`]).
+//! * [`JsonStream`] — a push-style object/array writer for structured
+//!   CLI reports (`frost fleet --json`, `frost scenario --json`).
+//!
+//! Escaping and number formatting are the *same functions* the [`Json`]
+//! tree serialiser uses ([`crate::util::json::write_escaped`] /
+//! [`crate::util::json::write_num`]), so the two serialisers cannot
+//! drift — a round-trip test against `Json::parse` pins this.
+//!
+//! [`Json`]: crate::util::Json
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{write_escaped, write_num};
+
+use super::{TraceData, TraceEvent, TraceSink};
+
+/// Append `"key":` (with a leading comma unless first) to `buf`.
+fn key(buf: &mut String, first: &mut bool, name: &str) {
+    if !*first {
+        buf.push(',');
+    }
+    *first = false;
+    write_escaped(buf, name);
+    buf.push(':');
+}
+
+fn field_num(buf: &mut String, first: &mut bool, name: &str, v: f64) {
+    key(buf, first, name);
+    if v.is_finite() {
+        write_num(buf, v);
+    } else {
+        // A NaN/inf would poison the whole line (not valid JSON); the
+        // simulator never emits one here, but a poisoned sample must not
+        // make the trace unparseable.
+        buf.push_str("null");
+    }
+}
+
+fn field_u64(buf: &mut String, first: &mut bool, name: &str, v: u64) {
+    key(buf, first, name);
+    buf.push_str(&format!("{v}"));
+}
+
+fn field_str(buf: &mut String, first: &mut bool, name: &str, v: &str) {
+    key(buf, first, name);
+    write_escaped(buf, v);
+}
+
+fn field_bool(buf: &mut String, first: &mut bool, name: &str, v: bool) {
+    key(buf, first, name);
+    buf.push_str(if v { "true" } else { "false" });
+}
+
+/// Serialise one trace event as a single JSONL line (no trailing
+/// newline) into `buf`, which is cleared first.
+pub fn trace_line(sink: &TraceSink, ev: &TraceEvent, buf: &mut String) {
+    buf.clear();
+    buf.push('{');
+    let mut first = true;
+    field_u64(buf, &mut first, "id", ev.id);
+    field_u64(buf, &mut first, "round", u64::from(ev.round));
+    field_num(buf, &mut first, "t_s", sink.time_of(ev.round));
+    field_str(buf, &mut first, "kind", ev.data.kind());
+    if let Some(site) = ev.site {
+        field_u64(buf, &mut first, "site", u64::from(site));
+    }
+    match &ev.data {
+        TraceData::RoundStart | TraceData::Reprofile => {}
+        TraceData::RoundEnd { cap_power_w } => {
+            field_num(buf, &mut first, "cap_w", *cap_power_w);
+        }
+        TraceData::SiteRound { cap_frac, down } => {
+            field_num(buf, &mut first, "cap", *cap_frac);
+            field_bool(buf, &mut first, "down", *down);
+        }
+        TraceData::Scenario { detail, .. } => {
+            field_str(buf, &mut first, "detail", detail);
+        }
+        TraceData::Fault { fate, interface, count } => {
+            field_str(buf, &mut first, "fate", fate);
+            field_str(buf, &mut first, "iface", interface);
+            field_u64(buf, &mut first, "count", *count);
+        }
+        TraceData::KpmReject { host, reason } => {
+            field_str(buf, &mut first, "host", host);
+            field_str(buf, &mut first, "reason", reason);
+        }
+        TraceData::Lifecycle { detail } => {
+            field_str(buf, &mut first, "detail", detail);
+        }
+        TraceData::CapChange { cause, from, to, trigger } => {
+            field_str(buf, &mut first, "cause", cause.as_str());
+            field_num(buf, &mut first, "from", *from);
+            field_num(buf, &mut first, "to", *to);
+            match trigger {
+                Some(t) => field_u64(buf, &mut first, "trigger", *t),
+                None => {
+                    key(buf, &mut first, "trigger");
+                    buf.push_str("null");
+                }
+            }
+        }
+        TraceData::Quarantine { host, entered } => {
+            field_str(buf, &mut first, "host", host);
+            field_bool(buf, &mut first, "entered", *entered);
+        }
+    }
+    buf.push('}');
+}
+
+/// Stream every recorded event into `w`, one JSONL line each, through a
+/// single reused buffer.
+pub fn write_trace_to<W: Write>(mut w: W, sink: &TraceSink) -> io::Result<()> {
+    let mut buf = String::new();
+    for ev in sink.events() {
+        trace_line(sink, ev, &mut buf);
+        buf.push('\n');
+        w.write_all(buf.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Write the trace to `path` (`TRACE_*.jsonl` convention).
+pub fn write_trace(path: &Path, sink: &TraceSink) -> Result<()> {
+    let file = File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    let mut out = BufWriter::new(file);
+    write_trace_to(&mut out, sink).with_context(|| format!("writing {}", path.display()))?;
+    out.flush().context("flushing trace file")?;
+    Ok(())
+}
+
+/// The full trace as one JSONL string (tests; bit-identity comparisons).
+pub fn trace_to_string(sink: &TraceSink) -> String {
+    let mut out = Vec::new();
+    write_trace_to(&mut out, sink).expect("Vec<u8> writes are infallible");
+    String::from_utf8(out).expect("trace lines are UTF-8")
+}
+
+/// A push-style streaming JSON writer: begin/end nesting calls plus
+/// typed fields, comma placement handled internally.  Inside an object
+/// pass `Some(key)`; inside an array pass `None`.  IO errors are
+/// deferred to [`JsonStream::finish`] so call sites stay linear.
+pub struct JsonStream<W: Write> {
+    out: W,
+    buf: String,
+    /// One "wrote an element yet" flag per open scope.
+    stack: Vec<bool>,
+    err: Option<io::Error>,
+}
+
+impl<W: Write> JsonStream<W> {
+    pub fn new(out: W) -> JsonStream<W> {
+        JsonStream { out, buf: String::new(), stack: Vec::new(), err: None }
+    }
+
+    fn flush_buf(&mut self) {
+        if self.err.is_none() {
+            if let Err(e) = self.out.write_all(self.buf.as_bytes()) {
+                self.err = Some(e);
+            }
+        }
+        self.buf.clear();
+    }
+
+    fn pre(&mut self, name: Option<&str>) {
+        if let Some(last) = self.stack.last_mut() {
+            if *last {
+                self.buf.push(',');
+            }
+            *last = true;
+        }
+        if let Some(name) = name {
+            write_escaped(&mut self.buf, name);
+            self.buf.push(':');
+        }
+    }
+
+    pub fn begin_obj(&mut self, name: Option<&str>) {
+        self.pre(name);
+        self.buf.push('{');
+        self.stack.push(false);
+        self.flush_buf();
+    }
+
+    pub fn end_obj(&mut self) {
+        self.stack.pop();
+        self.buf.push('}');
+        self.flush_buf();
+    }
+
+    pub fn begin_arr(&mut self, name: Option<&str>) {
+        self.pre(name);
+        self.buf.push('[');
+        self.stack.push(false);
+        self.flush_buf();
+    }
+
+    pub fn end_arr(&mut self) {
+        self.stack.pop();
+        self.buf.push(']');
+        self.flush_buf();
+    }
+
+    pub fn str_field(&mut self, name: Option<&str>, v: &str) {
+        self.pre(name);
+        write_escaped(&mut self.buf, v);
+        self.flush_buf();
+    }
+
+    pub fn num_field(&mut self, name: Option<&str>, v: f64) {
+        self.pre(name);
+        if v.is_finite() {
+            write_num(&mut self.buf, v);
+        } else {
+            self.buf.push_str("null");
+        }
+        self.flush_buf();
+    }
+
+    pub fn u64_field(&mut self, name: Option<&str>, v: u64) {
+        self.pre(name);
+        self.buf.push_str(&format!("{v}"));
+        self.flush_buf();
+    }
+
+    pub fn bool_field(&mut self, name: Option<&str>, v: bool) {
+        self.pre(name);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self.flush_buf();
+    }
+
+    /// Close the writer: a trailing newline, then the first deferred IO
+    /// error if any write failed.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.buf.push('\n');
+        self.flush_buf();
+        match self.err {
+            Some(e) => Err(e),
+            None => Ok(self.out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::CapCause;
+    use crate::util::Json;
+
+    fn sink_with(data: Vec<(Option<u32>, TraceData)>) -> TraceSink {
+        let mut sink = TraceSink::new(true, 150.0);
+        sink.begin_round(1);
+        for (site, d) in data {
+            sink.record(site, d);
+        }
+        sink
+    }
+
+    #[test]
+    fn every_line_is_parseable_json_with_the_common_fields() {
+        let sink = sink_with(vec![
+            (None, TraceData::RoundEnd { cap_power_w: 123.5 }),
+            (Some(0), TraceData::SiteRound { cap_frac: 0.8, down: false }),
+            (Some(1), TraceData::KpmReject { host: "site01".into(), reason: "non_finite" }),
+            (None, TraceData::Fault { fate: "dropped", interface: "A1", count: 1 }),
+            (
+                Some(2),
+                TraceData::CapChange {
+                    cause: CapCause::LeaseFallback,
+                    from: 0.9,
+                    to: 0.4,
+                    trigger: None,
+                },
+            ),
+        ]);
+        let text = trace_to_string(&sink);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), sink.len());
+        for (line, ev) in lines.iter().zip(sink.events()) {
+            let v = Json::parse(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(v.get("id").unwrap().as_i64(), Some(ev.id as i64));
+            assert_eq!(v.get("kind").unwrap().as_str(), Some(ev.data.kind()));
+            assert!(v.get("round").is_some() && v.get("t_s").is_some());
+        }
+        // The null trigger serialises as JSON null, not a missing key.
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert!(last.get("trigger").unwrap().is_null());
+        assert_eq!(last.get("cause").unwrap().as_str(), Some("lease-fallback"));
+    }
+
+    #[test]
+    fn json_stream_nests_and_places_commas() {
+        let mut s = JsonStream::new(Vec::new());
+        s.begin_obj(None);
+        s.str_field(Some("name"), "fleet");
+        s.num_field(Some("sites"), 4.0);
+        s.begin_arr(Some("rows"));
+        s.num_field(None, 1.5);
+        s.num_field(None, f64::NAN);
+        s.begin_obj(None);
+        s.bool_field(Some("ok"), true);
+        s.end_obj();
+        s.end_arr();
+        s.u64_field(Some("count"), 7);
+        s.end_obj();
+        let out = String::from_utf8(s.finish().unwrap()).unwrap();
+        let v = Json::parse(out.trim()).unwrap();
+        assert_eq!(v.get("sites").unwrap().as_i64(), Some(4));
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[1].is_null(), "non-finite numbers become null");
+        assert_eq!(rows[2].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("count").unwrap().as_i64(), Some(7));
+    }
+}

@@ -1,0 +1,368 @@
+//! Deterministic flight recorder (DESIGN.md §14).
+//!
+//! The control plane grew four disjoint ledgers (scenario events, fault
+//! injections, KPM rejects, lifecycle events) plus ad-hoc counters, and
+//! none of them could answer "why did site 12's cap move in round 840?".
+//! This module is the unified observability spine:
+//!
+//! * [`TraceSink`] — structured, sim-time-stamped events with stable ids,
+//!   recorded **only on the coordinator thread in site-index order**, so a
+//!   trace is bit-identical for any worker-thread count (§6).  Worker-side
+//!   actions (lease fallbacks, policy clamps) are recorded site-locally
+//!   and ingested by the coordinator after the parallel phase, in site
+//!   order — the same pattern the fleet gateway uses for outboxes.
+//! * [`CapCause`] — the closed taxonomy of reasons an A1 cap can move.
+//!   Every recorded cap change carries its cause plus the id of the trace
+//!   event that triggered it, so `frost trace --explain SITE` can print
+//!   the full causal chain for each cap move.
+//! * [`MetricsRegistry`] — named counters/gauges/summaries replacing the
+//!   scattered per-struct counters, surfaced in `FleetReport`.
+//!
+//! Recording is gated: with tracing disabled (the default, and always the
+//! case for benches) every record call is an early-return no-op, so the
+//! hot path stays bit-identical and within noise of the untraced build.
+//! Scenario events are the one exception — they are recorded
+//! unconditionally (a handful per run) because the scenario harness's
+//! event ledger is derived from the sink.
+
+pub mod export;
+pub mod query;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::metrics::StreamingSummary;
+use crate::scenario::ScenarioEvent;
+
+/// Why an A1 cap moved (DESIGN.md §14 taxonomy).  Closed set: every cap
+/// mutation in the fleet maps to exactly one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapCause {
+    /// A scripted budget step rescaled the global budget fraction.
+    BudgetStep,
+    /// The budget water-fill re-weighted the fleet's caps.
+    WaterFill,
+    /// A thermal derate clamped the site's policy ceiling.
+    DerateClamp,
+    /// An expired A1 lease dropped the site to its safe cap.
+    LeaseFallback,
+    /// A profile quarantine froze/reserved the site's allocation.
+    Quarantine,
+    /// A healing path restored headroom (lease renewal, derate end,
+    /// site recovery, quarantine release).
+    Recovery,
+}
+
+impl CapCause {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CapCause::BudgetStep => "budget-step",
+            CapCause::WaterFill => "water-fill",
+            CapCause::DerateClamp => "derate-clamp",
+            CapCause::LeaseFallback => "lease-fallback",
+            CapCause::Quarantine => "quarantine",
+            CapCause::Recovery => "recovery",
+        }
+    }
+}
+
+impl fmt::Display for CapCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Payload of one trace event.  Variants mirror the JSONL `kind` field
+/// (see `obs::export` for the serialised schema).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceData {
+    /// Span open: the coordinator began an orchestration round.
+    RoundStart,
+    /// Span close: Σ applied-cap watts over all sites, in site order.
+    RoundEnd { cap_power_w: f64 },
+    /// Per-site per-round span: applied cap and availability.
+    SiteRound { cap_frac: f64, down: bool },
+    /// A scripted scenario event fired (recorded even when tracing is
+    /// disabled — the scenario ledger is derived from the sink).
+    Scenario { event: ScenarioEvent, detail: String },
+    /// The fault plan injured a message (`fate` is the ledger name).
+    Fault { fate: &'static str, interface: &'static str, count: u64 },
+    /// The SMO rejected a KPM report at validation.
+    KpmReject { host: String, reason: &'static str },
+    /// An AI/ML lifecycle event crossed the O1 plane.
+    Lifecycle { detail: String },
+    /// An A1 cap moved: `from`/`to` are exact cap fractions, `trigger`
+    /// is the id of the trace event that caused the move.
+    CapChange { cause: CapCause, from: f64, to: f64, trigger: Option<u64> },
+    /// The continuous monitor requested a re-profile for this site.
+    Reprofile,
+    /// A site entered (`entered`) or left a profile quarantine.
+    Quarantine { host: String, entered: bool },
+}
+
+impl TraceData {
+    /// The JSONL `kind` discriminant.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceData::RoundStart => "round_start",
+            TraceData::RoundEnd { .. } => "round_end",
+            TraceData::SiteRound { .. } => "site_round",
+            TraceData::Scenario { .. } => "scenario",
+            TraceData::Fault { .. } => "fault",
+            TraceData::KpmReject { .. } => "kpm_reject",
+            TraceData::Lifecycle { .. } => "lifecycle",
+            TraceData::CapChange { .. } => "cap_change",
+            TraceData::Reprofile => "reprofile",
+            TraceData::Quarantine { .. } => "quarantine",
+        }
+    }
+}
+
+/// One recorded event.  Ids are 1-based and strictly increasing in
+/// record order; `site` is the site index for site-scoped events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub id: u64,
+    pub round: u32,
+    pub site: Option<u32>,
+    pub data: TraceData,
+}
+
+/// The coordinator-owned event sink.  All recording happens on the
+/// coordinator thread; worker-side events are ingested in site order.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    enabled: bool,
+    round: u32,
+    /// Sim seconds per orchestration round (0.0 when the run is not
+    /// traffic-driven; events then carry `t_s` 0).
+    round_s: f64,
+    events: Vec<TraceEvent>,
+    /// Id of the current round's `round_start` event — the default
+    /// trigger for cap changes with no more specific cause.
+    round_anchor: Option<u64>,
+}
+
+impl TraceSink {
+    pub fn new(enabled: bool, round_s: f64) -> TraceSink {
+        TraceSink { enabled, round: 0, round_s, events: Vec::new(), round_anchor: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Sim seconds per round (see [`TraceSink::time_of`]).
+    pub fn round_s(&self) -> f64 {
+        self.round_s
+    }
+
+    /// Sim-time stamp of a round's start: rounds are back-to-back slots
+    /// of `round_s` seconds; round 1 starts at t = 0.
+    pub fn time_of(&self, round: u32) -> f64 {
+        f64::from(round.saturating_sub(1)) * self.round_s
+    }
+
+    /// Open a round span.  Returns the `round_start` event id (None when
+    /// tracing is disabled).
+    pub fn begin_round(&mut self, round: u32) -> Option<u64> {
+        self.round = round;
+        self.round_anchor = self.push(None, TraceData::RoundStart, true);
+        self.round_anchor
+    }
+
+    /// Id of the current round's `round_start` event.
+    pub fn round_anchor(&self) -> Option<u64> {
+        self.round_anchor
+    }
+
+    /// Record one event (no-op unless tracing is enabled).  Returns the
+    /// assigned id.
+    pub fn record(&mut self, site: Option<u32>, data: TraceData) -> Option<u64> {
+        self.push(site, data, true)
+    }
+
+    /// Record a scenario event unconditionally (the fired-event ledger is
+    /// derived from the sink even in untraced runs).
+    pub fn record_scenario(&mut self, site: Option<u32>, event: ScenarioEvent) -> Option<u64> {
+        let detail = event.to_string();
+        self.push(site, TraceData::Scenario { event, detail }, false)
+    }
+
+    fn push(&mut self, site: Option<u32>, data: TraceData, gated: bool) -> Option<u64> {
+        if gated && !self.enabled {
+            return None;
+        }
+        let id = self.events.len() as u64 + 1;
+        self.events.push(TraceEvent { id, round: self.round, site, data });
+        Some(id)
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The fired scenario events, in record order — the typed replacement
+    /// of the fleet's old `event_log` Vec.
+    pub fn scenario_events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter().filter(|e| matches!(e.data, TraceData::Scenario { .. }))
+    }
+}
+
+/// Named counters, gauges and streaming summaries (DESIGN.md §14).
+/// Keys are `&'static str` so registering a metric costs nothing on the
+/// hot path; `BTreeMap` keeps every iteration name-ordered (§6's merge
+/// rule: one canonical order regardless of insertion history).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    summaries: BTreeMap<&'static str, StreamingSummary>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to a named counter (creating it at zero).
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    /// Read a counter (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a named gauge to its latest value.
+    pub fn set_gauge(&mut self, name: &'static str, value: f64) {
+        self.gauges.insert(name, value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Push one sample into a named streaming summary.
+    pub fn observe(&mut self, name: &'static str, value: f64) {
+        self.summaries.entry(name).or_default().push(value);
+    }
+
+    pub fn summary(&self, name: &str) -> Option<&StreamingSummary> {
+        self.summaries.get(name)
+    }
+
+    /// Name-ordered counter view.
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.counters.iter().map(|(&k, &v)| (k, v))
+    }
+
+    /// Name-ordered gauge view.
+    pub fn gauges(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.gauges.iter().map(|(&k, &v)| (k, v))
+    }
+
+    /// Name-ordered summary view.
+    pub fn summaries(&self) -> impl Iterator<Item = (&'static str, &StreamingSummary)> + '_ {
+        self.summaries.iter().map(|(&k, v)| (k, v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.summaries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing_but_scenario_events() {
+        let mut sink = TraceSink::new(false, 150.0);
+        assert_eq!(sink.begin_round(1), None);
+        assert_eq!(sink.record(Some(0), TraceData::Reprofile), None);
+        let id = sink.record_scenario(Some(2), ScenarioEvent::SiteDown { site: 2 });
+        assert_eq!(id, Some(1), "scenario events bypass the gate");
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink.scenario_events().count(), 1);
+    }
+
+    #[test]
+    fn ids_are_stable_and_round_anchor_tracks_round_start() {
+        let mut sink = TraceSink::new(true, 100.0);
+        let a1 = sink.begin_round(1).unwrap();
+        assert_eq!(a1, 1);
+        assert_eq!(sink.round_anchor(), Some(1));
+        let id = sink
+            .record(
+                Some(3),
+                TraceData::CapChange {
+                    cause: CapCause::WaterFill,
+                    from: 1.0,
+                    to: 0.6,
+                    trigger: sink.round_anchor(),
+                },
+            )
+            .unwrap();
+        assert_eq!(id, 2);
+        let a2 = sink.begin_round(2).unwrap();
+        assert_eq!(a2, 3);
+        assert_eq!(sink.events()[1].round, 1);
+        assert_eq!(sink.events()[2].round, 2);
+        assert_eq!(sink.time_of(1), 0.0);
+        assert_eq!(sink.time_of(3), 200.0);
+    }
+
+    #[test]
+    fn registry_counts_gauges_and_summarises() {
+        let mut m = MetricsRegistry::new();
+        m.inc("cache.hits", 3);
+        m.inc("cache.hits", 2);
+        m.set_gauge("pool.workers", 4.0);
+        m.observe("round.cap_w", 100.0);
+        m.observe("round.cap_w", 200.0);
+        assert_eq!(m.counter("cache.hits"), 5);
+        assert_eq!(m.counter("cache.misses"), 0);
+        assert_eq!(m.gauge("pool.workers"), Some(4.0));
+        let s = m.summary("round.cap_w").unwrap().finish();
+        assert_eq!(s.n, 2);
+        assert_eq!(s.mean, 150.0);
+        // Iteration is name-ordered regardless of insertion order.
+        m.inc("a.first", 1);
+        let names: Vec<&str> = m.counters().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["a.first", "cache.hits"]);
+    }
+
+    #[test]
+    fn cap_causes_have_stable_names() {
+        let all = [
+            CapCause::BudgetStep,
+            CapCause::WaterFill,
+            CapCause::DerateClamp,
+            CapCause::LeaseFallback,
+            CapCause::Quarantine,
+            CapCause::Recovery,
+        ];
+        let names: Vec<&str> = all.iter().map(|c| c.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "budget-step",
+                "water-fill",
+                "derate-clamp",
+                "lease-fallback",
+                "quarantine",
+                "recovery"
+            ]
+        );
+    }
+}

@@ -1,0 +1,340 @@
+//! Query engine for `TRACE_*.jsonl` files (the `frost trace` CLI).
+//!
+//! Scanning is lazy: every pass walks the file line by line through a
+//! `BufReader`, applies a cheap substring prefilter (`"kind":"…"`,
+//! `"site":N`) and only then parses the line with [`Json::parse`] for
+//! the exact predicate — a filtered query over a large trace parses only
+//! the candidate lines.  `--explain` resolves the causal chain of every
+//! cap change: pass one collects the site's `cap_change` events and
+//! their `trigger` ids, pass two resolves those ids to the triggering
+//! events.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Exact-match filters for a trace scan.  `round` is an inclusive range.
+#[derive(Debug, Clone, Default)]
+pub struct TraceFilter {
+    pub site: Option<i64>,
+    pub round: Option<(i64, i64)>,
+    pub kind: Option<String>,
+}
+
+/// Parse a `--round` argument: `A..B` (inclusive), `A..`, `..B`, or a
+/// single round `N`.
+pub fn parse_round_range(s: &str) -> Result<(i64, i64)> {
+    let parse = |p: &str, what: &str| -> Result<i64> {
+        p.parse::<i64>().with_context(|| format!("invalid {what} round '{p}' in '{s}'"))
+    };
+    let range = match s.split_once("..") {
+        Some(("", "")) => anyhow::bail!("empty round range '..'"),
+        Some((a, "")) => (parse(a, "start")?, i64::MAX),
+        Some(("", b)) => (0, parse(b, "end")?),
+        Some((a, b)) => (parse(a, "start")?, parse(b, "end")?),
+        None => {
+            let n = parse(s, "single")?;
+            (n, n)
+        }
+    };
+    anyhow::ensure!(range.0 <= range.1, "round range '{s}' is empty");
+    Ok(range)
+}
+
+/// Cheap substring prefilter: does the line even mention `"name":value`?
+/// False positives are fine (the parse confirms); false negatives are
+/// not, so the pattern matches the exporter's exact field syntax.
+fn mentions_u64(line: &str, name: &str, value: i64) -> bool {
+    let pat = format!("\"{name}\":{value}");
+    line.match_indices(&pat).any(|(at, _)| {
+        matches!(line.as_bytes().get(at + pat.len()), Some(b',') | Some(b'}') | None)
+    })
+}
+
+fn field_i64(v: &Json, name: &str) -> Option<i64> {
+    v.get(name).and_then(Json::as_i64)
+}
+
+impl TraceFilter {
+    /// Prefilter on the raw line (never rejects a true match).
+    fn line_may_match(&self, line: &str) -> bool {
+        if let Some(kind) = &self.kind {
+            if !line.contains(&format!("\"kind\":\"{kind}\"")) {
+                return false;
+            }
+        }
+        if let Some(site) = self.site {
+            if !mentions_u64(line, "site", site) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Exact predicate on the parsed line.
+    fn matches(&self, v: &Json) -> bool {
+        if let Some(kind) = &self.kind {
+            if v.get("kind").and_then(Json::as_str) != Some(kind) {
+                return false;
+            }
+        }
+        if let Some(site) = self.site {
+            if field_i64(v, "site") != Some(site) {
+                return false;
+            }
+        }
+        if let Some((a, b)) = self.round {
+            match field_i64(v, "round") {
+                Some(r) if r >= a && r <= b => {}
+                _ => return false,
+            }
+        }
+        true
+    }
+}
+
+/// Walk the trace, calling `visit(raw_line, parsed)` for every matching
+/// event.  Returns (lines scanned, lines matched).  Unparseable lines
+/// are hard errors — a trace that fails to parse is a bug, not noise.
+pub fn scan(
+    path: &Path,
+    filter: &TraceFilter,
+    mut visit: impl FnMut(&str, &Json),
+) -> Result<(usize, usize)> {
+    let file =
+        File::open(path).with_context(|| format!("opening trace {}", path.display()))?;
+    let mut scanned = 0usize;
+    let mut matched = 0usize;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line.with_context(|| format!("reading {}", path.display()))?;
+        if line.is_empty() {
+            continue;
+        }
+        scanned += 1;
+        if !filter.line_may_match(&line) {
+            continue;
+        }
+        let v = Json::parse(&line).map_err(|e| {
+            anyhow::anyhow!("{}:{}: bad trace line: {e}", path.display(), lineno + 1)
+        })?;
+        if filter.matches(&v) {
+            matched += 1;
+            visit(&line, &v);
+        }
+    }
+    Ok((scanned, matched))
+}
+
+/// One-pass roll-up of a trace: event counts by kind, cap changes by
+/// cause, round span, distinct sites.
+pub fn summarise(path: &Path) -> Result<String> {
+    let mut by_kind: BTreeMap<String, u64> = BTreeMap::new();
+    let mut by_cause: BTreeMap<String, u64> = BTreeMap::new();
+    let mut rounds: Option<(i64, i64)> = None;
+    let mut sites: BTreeSet<i64> = BTreeSet::new();
+    let (scanned, _) = scan(path, &TraceFilter::default(), |_, v| {
+        if let Some(kind) = v.get("kind").and_then(Json::as_str) {
+            *by_kind.entry(kind.to_string()).or_insert(0) += 1;
+            if kind == "cap_change" {
+                if let Some(cause) = v.get("cause").and_then(Json::as_str) {
+                    *by_cause.entry(cause.to_string()).or_insert(0) += 1;
+                }
+            }
+        }
+        if let Some(r) = field_i64(v, "round") {
+            rounds = Some(match rounds {
+                Some((a, b)) => (a.min(r), b.max(r)),
+                None => (r, r),
+            });
+        }
+        if let Some(s) = field_i64(v, "site") {
+            sites.insert(s);
+        }
+    })?;
+    let mut out = String::new();
+    out.push_str(&format!("trace: {} events", scanned));
+    if let Some((a, b)) = rounds {
+        out.push_str(&format!(", rounds {a}..={b}"));
+    }
+    out.push_str(&format!(", {} sites\n", sites.len()));
+    out.push_str("events by kind:\n");
+    for (kind, n) in &by_kind {
+        out.push_str(&format!("  {kind:<12} {n}\n"));
+    }
+    if !by_cause.is_empty() {
+        out.push_str("cap changes by cause:\n");
+        for (cause, n) in &by_cause {
+            out.push_str(&format!("  {cause:<15} {n}\n"));
+        }
+    }
+    Ok(out)
+}
+
+/// A resolved cap move for `--explain`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapMove {
+    pub id: i64,
+    pub round: i64,
+    pub cause: String,
+    pub from: f64,
+    pub to: f64,
+    pub trigger: Option<i64>,
+    /// `round kind detail` summary of the triggering event, when the
+    /// trigger id resolved to a recorded event.
+    pub trigger_summary: Option<String>,
+}
+
+/// Short human summary of one parsed trace event (for trigger lines).
+fn event_summary(v: &Json) -> String {
+    let kind = v.get("kind").and_then(Json::as_str).unwrap_or("?");
+    let round = field_i64(v, "round").unwrap_or(0);
+    let mut s = format!("r{round:02} {kind}");
+    for key in ["detail", "host", "reason", "fate", "cause"] {
+        if let Some(val) = v.get(key).and_then(Json::as_str) {
+            s.push_str(&format!(" {val}"));
+            break;
+        }
+    }
+    s
+}
+
+/// Two-pass causal-chain reconstruction for one site's cap moves.
+pub fn explain_site(path: &Path, site: i64) -> Result<Vec<CapMove>> {
+    let filter = TraceFilter { site: Some(site), kind: Some("cap_change".into()), round: None };
+    let mut moves: Vec<CapMove> = Vec::new();
+    scan(path, &filter, |_, v| {
+        moves.push(CapMove {
+            id: field_i64(v, "id").unwrap_or(0),
+            round: field_i64(v, "round").unwrap_or(0),
+            cause: v.get("cause").and_then(Json::as_str).unwrap_or("?").to_string(),
+            from: v.get("from").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            to: v.get("to").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            trigger: field_i64(v, "trigger"),
+            trigger_summary: None,
+        });
+    })?;
+    let needed: BTreeSet<i64> = moves.iter().filter_map(|m| m.trigger).collect();
+    if !needed.is_empty() {
+        let mut resolved: BTreeMap<i64, String> = BTreeMap::new();
+        scan(path, &TraceFilter::default(), |_, v| {
+            if let Some(id) = field_i64(v, "id") {
+                if needed.contains(&id) {
+                    resolved.insert(id, event_summary(v));
+                }
+            }
+        })?;
+        for m in &mut moves {
+            m.trigger_summary = m.trigger.and_then(|t| resolved.get(&t).cloned());
+        }
+    }
+    Ok(moves)
+}
+
+/// Render `--explain SITE` output: one line per cap move with its cause
+/// and the resolved triggering event.
+pub fn explain_report(path: &Path, site: i64) -> Result<String> {
+    let moves = explain_site(path, site)?;
+    let mut out = format!("site {site}: {} cap changes\n", moves.len());
+    for m in &moves {
+        out.push_str(&format!(
+            "  #{:<5} r{:02}  cap {:>6.3} -> {:>6.3}  {:<15}",
+            m.id, m.round, m.from, m.to, m.cause
+        ));
+        match (&m.trigger, &m.trigger_summary) {
+            (Some(t), Some(s)) => out.push_str(&format!("  <= #{t} {s}\n")),
+            (Some(t), None) => out.push_str(&format!("  <= #{t} (not in trace)\n")),
+            (None, _) => out.push_str("  <= (no recorded trigger)\n"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_temp(name: &str, text: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        path
+    }
+
+    const TRACE: &str = "\
+{\"id\":1,\"round\":1,\"t_s\":0,\"kind\":\"round_start\"}
+{\"id\":2,\"round\":1,\"t_s\":0,\"kind\":\"scenario\",\"site\":2,\"detail\":\"site 2 outage\"}
+{\"id\":3,\"round\":1,\"t_s\":0,\"kind\":\"cap_change\",\"site\":2,\"cause\":\"water-fill\",\"from\":1,\"to\":0.5,\"trigger\":2}
+{\"id\":4,\"round\":2,\"t_s\":150,\"kind\":\"round_start\"}
+{\"id\":5,\"round\":2,\"t_s\":150,\"kind\":\"cap_change\",\"site\":12,\"cause\":\"lease-fallback\",\"from\":0.5,\"to\":0.2,\"trigger\":4}
+";
+
+    #[test]
+    fn round_range_parsing() {
+        assert_eq!(parse_round_range("3..7").unwrap(), (3, 7));
+        assert_eq!(parse_round_range("5").unwrap(), (5, 5));
+        assert_eq!(parse_round_range("4..").unwrap(), (4, i64::MAX));
+        assert_eq!(parse_round_range("..9").unwrap(), (0, 9));
+        assert!(parse_round_range("7..3").is_err());
+        assert!(parse_round_range("a..b").is_err());
+        assert!(parse_round_range("..").is_err());
+    }
+
+    #[test]
+    fn filters_compose_and_prefilter_never_drops_a_match() {
+        let path = write_temp("frost_trace_query_filters.jsonl", TRACE);
+        let f = TraceFilter { site: Some(2), kind: None, round: None };
+        let mut seen = Vec::new();
+        let (scanned, matched) =
+            scan(&path, &f, |_, v| seen.push(field_i64(v, "id").unwrap())).unwrap();
+        assert_eq!(scanned, 5);
+        assert_eq!(matched, 2);
+        assert_eq!(seen, vec![2, 3]);
+        // site 2 must not substring-match site 12's line; site 12 works.
+        let f12 = TraceFilter { site: Some(12), ..Default::default() };
+        let (_, matched12) = scan(&path, &f12, |_, _| {}).unwrap();
+        assert_eq!(matched12, 1);
+        let fr = TraceFilter { round: Some((2, 2)), ..Default::default() };
+        let (_, mr) = scan(&path, &fr, |_, _| {}).unwrap();
+        assert_eq!(mr, 2);
+        let fk = TraceFilter { kind: Some("cap_change".into()), ..Default::default() };
+        let (_, mk) = scan(&path, &fk, |_, _| {}).unwrap();
+        assert_eq!(mk, 2);
+    }
+
+    #[test]
+    fn summary_counts_kinds_and_causes() {
+        let path = write_temp("frost_trace_query_summary.jsonl", TRACE);
+        let s = summarise(&path).unwrap();
+        assert!(s.contains("5 events"), "{s}");
+        assert!(s.contains("rounds 1..=2"), "{s}");
+        assert!(s.contains("cap_change"), "{s}");
+        assert!(s.contains("water-fill"), "{s}");
+        assert!(s.contains("lease-fallback"), "{s}");
+    }
+
+    #[test]
+    fn explain_resolves_trigger_chains() {
+        let path = write_temp("frost_trace_query_explain.jsonl", TRACE);
+        let moves = explain_site(&path, 2).unwrap();
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].cause, "water-fill");
+        assert_eq!(moves[0].trigger, Some(2));
+        assert_eq!(moves[0].trigger_summary.as_deref(), Some("r01 scenario site 2 outage"));
+        let report = explain_report(&path, 2).unwrap();
+        assert!(report.contains("<= #2 r01 scenario site 2 outage"), "{report}");
+        let fallback = explain_site(&path, 12).unwrap();
+        assert_eq!(fallback[0].trigger_summary.as_deref(), Some("r02 round_start"));
+    }
+
+    #[test]
+    fn bad_lines_are_hard_errors() {
+        let path = write_temp("frost_trace_query_bad.jsonl", "{\"id\":1\nnot json\n");
+        assert!(scan(&path, &TraceFilter::default(), |_, _| {}).is_err());
+    }
+}

@@ -262,6 +262,20 @@ impl Bus {
         self.fault.lock().unwrap().plan.as_ref().map(|p| p.ledger().clone())
     }
 
+    /// Drain the installed plan's buffered fault-trace records (§14):
+    /// `(fate, interface, count)` in injection order.  Empty without a
+    /// plan or with tracing off.  Called once per round by the fleet
+    /// coordinator, which owns the only armed (global) bus.
+    pub fn drain_fault_trace(&self) -> Vec<(&'static str, &'static str, u64)> {
+        self.fault
+            .lock()
+            .unwrap()
+            .plan
+            .as_mut()
+            .map(FaultPlan::drain_trace)
+            .unwrap_or_default()
+    }
+
     /// The per-message fault key: sender id mixed with the recipient
     /// (interned index, or a stable hash for not-yet-interned names).
     fn edge_of(from: EndpointId, to: &Recipient) -> u64 {
@@ -326,9 +340,9 @@ impl Bus {
                             FabricFate::Drop => continue,
                             FabricFate::DelayRounds(rounds) => {
                                 if held.len() >= plan.max_held() {
-                                    plan.note_delay_dropped();
+                                    plan.note_delay_dropped(msg.interface());
                                 } else {
-                                    plan.note_delayed();
+                                    plan.note_delayed(msg.interface());
                                     held.push((plan.round() + rounds, from, to, msg));
                                 }
                                 continue;

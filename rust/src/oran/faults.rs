@@ -270,12 +270,42 @@ pub struct FaultPlan {
     round: u32,
     seq: u64,
     ledger: FaultLedger,
+    /// Flight-recorder gate (§14): when set, every injected fault also
+    /// lands in `trace_events` for the coordinator to drain once per
+    /// round.  Off by default — the buffer then stays empty and the
+    /// ledger-only path is untouched.
+    trace: bool,
+    /// Buffered `(fate, interface, count)` records since the last drain.
+    trace_events: Vec<(&'static str, &'static str, u64)>,
 }
 
 impl FaultPlan {
     pub fn new(cfg: FaultConfig) -> Result<Self> {
         cfg.validate()?;
-        Ok(FaultPlan { cfg, round: 0, seq: 0, ledger: FaultLedger::default() })
+        Ok(FaultPlan {
+            cfg,
+            round: 0,
+            seq: 0,
+            ledger: FaultLedger::default(),
+            trace: false,
+            trace_events: Vec::new(),
+        })
+    }
+
+    /// Enable/disable the fault-trace buffer (§14).
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = on;
+    }
+
+    /// Drain the buffered fault-trace records (empty unless tracing on).
+    pub fn drain_trace(&mut self) -> Vec<(&'static str, &'static str, u64)> {
+        std::mem::take(&mut self.trace_events)
+    }
+
+    fn note_trace(&mut self, fate: &'static str, iface: &'static str, count: u64) {
+        if self.trace {
+            self.trace_events.push((fate, iface, count));
+        }
     }
 
     pub fn config(&self) -> &FaultConfig {
@@ -308,16 +338,21 @@ impl FaultPlan {
         self.cfg.max_held
     }
 
-    pub fn note_delayed(&mut self) {
+    pub fn note_delayed(&mut self, iface: &'static str) {
         self.ledger.delayed += 1;
+        self.note_trace("delayed", iface, 1);
     }
 
-    pub fn note_delay_dropped(&mut self) {
+    pub fn note_delay_dropped(&mut self, iface: &'static str) {
         self.ledger.delay_dropped += 1;
+        self.note_trace("delay_dropped", iface, 1);
     }
 
     pub fn note_released(&mut self, n: u64) {
         self.ledger.released += n;
+        if n > 0 {
+            self.note_trace("released", "-", n);
+        }
     }
 
     /// Fresh per-message generator keyed by (seed, edge, round, seq).
@@ -336,6 +371,7 @@ impl FaultPlan {
         }
         let seq = self.seq;
         self.seq += 1;
+        let iface = msg.interface();
 
         let cfg = &self.cfg;
         let corrupt_total = cfg.kpm_nan_p + cfg.kpm_stale_p + cfg.nvml_fail_p;
@@ -355,14 +391,23 @@ impl FaultPlan {
                     kpm.gpu_power_w = f64::NAN;
                     kpm.gpu_util = f64::NAN;
                     self.ledger.corrupted_nan += 1;
+                    if self.trace {
+                        self.trace_events.push(("corrupted_nan", iface, 1));
+                    }
                 } else if u < cfg.kpm_nan_p + cfg.kpm_stale_p {
                     kpm.at = Seconds(kpm.at.0 - STALE_SHIFT_S);
                     self.ledger.corrupted_stale += 1;
+                    if self.trace {
+                        self.trace_events.push(("corrupted_stale", iface, 1));
+                    }
                 } else if u < cfg.kpm_nan_p + cfg.kpm_stale_p + cfg.nvml_fail_p {
                     // A failed NVML read surfaces as a negative sentinel
                     // rather than a plausible wattage.
                     kpm.gpu_power_w = -1.0;
                     self.ledger.corrupted_nvml += 1;
+                    if self.trace {
+                        self.trace_events.push(("corrupted_nvml", iface, 1));
+                    }
                 }
             }
         }
@@ -373,6 +418,9 @@ impl FaultPlan {
         let u = rng.next_f64();
         if u < cfg.drop_p {
             self.ledger.dropped += 1;
+            if self.trace {
+                self.trace_events.push(("dropped", iface, 1));
+            }
             FabricFate::Drop
         } else if u < cfg.drop_p + cfg.delay_p {
             let rounds = rng.below(cfg.max_delay_rounds) + 1;
@@ -381,9 +429,15 @@ impl FaultPlan {
             FabricFate::DelayRounds(rounds)
         } else if u < cfg.drop_p + cfg.delay_p + cfg.dup_p {
             self.ledger.duplicated += 1;
+            if self.trace {
+                self.trace_events.push(("duplicated", iface, 1));
+            }
             FabricFate::Duplicate
         } else if u < cfg.drop_p + cfg.delay_p + cfg.dup_p + cfg.reorder_p {
             self.ledger.reordered += 1;
+            if self.trace {
+                self.trace_events.push(("reordered", iface, 1));
+            }
             FabricFate::Reorder
         } else {
             FabricFate::Deliver

@@ -61,6 +61,7 @@ use crate::frost::{
     ContinuousMonitor, EnergyPolicy, MonitorAction, MonitorConfig, Observation, QosClass,
 };
 use crate::metrics::LatencyHistogram;
+use crate::obs::{CapCause, MetricsRegistry, TraceData, TraceSink};
 use crate::power::{allocate_budget, HostProfile};
 use crate::scenario::{Scenario, ScenarioEvent};
 use crate::simulator::{Clock, Testbed, WorkloadDescriptor};
@@ -76,7 +77,7 @@ use crate::zoo::{all_models, model_by_name};
 
 use super::bus::{Bus, Endpoint, EndpointId};
 use super::faults::{FaultConfig, FaultLedger, FaultPlan};
-use super::host::InferenceHost;
+use super::host::{HostCapKind, InferenceHost};
 use super::messages::{LifecycleEvent, OranMessage};
 use super::nonrt_ric::{
     lock_recovering, FleetAssignments, FleetProfileScheduler, NonRtRic, ProfileHealth,
@@ -148,10 +149,16 @@ pub struct FleetConfig {
     /// its assignment and the scheduler re-staggers it.
     pub quarantine_rounds: u32,
     /// Bound on a down site's held-back global inbox: the oldest messages
-    /// beyond the cap are dropped (and ledgered in
-    /// [`Fleet::holdback_dropped`]) so a long outage cannot grow the
-    /// gateway queue without limit.  0 = unbounded (not recommended).
+    /// beyond the cap are dropped (counted in the `holdback.dropped`
+    /// metric) so a long outage cannot grow the gateway queue without
+    /// limit.  0 = unbounded (not recommended).
     pub holdback_cap: usize,
+    /// Record the deterministic flight-recorder trace (DESIGN.md §14).
+    /// Off by default: every `TraceSink::record` call is then a no-op,
+    /// so the hot path stays bit-identical to an untraced build.
+    /// Scenario events are still ledgered either way — the fired-event
+    /// ledger ([`Fleet::fired_events`]) derives from the sink.
+    pub trace: bool,
 }
 
 impl Default for FleetConfig {
@@ -178,6 +185,7 @@ impl Default for FleetConfig {
             profile_max_attempts: 3,
             quarantine_rounds: 8,
             holdback_cap: 1024,
+            trace: false,
         }
     }
 }
@@ -253,6 +261,12 @@ impl SiteTraffic {
     /// pure signature drift).
     pub fn load_shift_reprofiles(&self) -> u64 {
         self.monitor.load_shifts
+    }
+
+    /// The demand monitor's counter triple `(reprofiles, load_shifts,
+    /// rejected)` — read whole by the fleet metrics registry (§14).
+    pub fn monitor_counters(&self) -> (u64, u64, u64) {
+        self.monitor.counters()
     }
 
     /// Roll the day ledgers over when this slot starts a new day and
@@ -663,6 +677,11 @@ pub struct FleetReport {
     pub holdback_dropped: u64,
     /// A1 lease renewals the SMO pushed over the run (§13).
     pub lease_renewals: u64,
+    /// Named counters/gauges/summaries aggregated fleet-wide (§14):
+    /// estimate-cache hits/misses/invalidations, monitor triggers, bus
+    /// message counts per interface, lease/holdback ledgers, and the
+    /// per-round cap-wattage summary.
+    pub metrics: MetricsRegistry,
 }
 
 /// Sites in flight between the coordinator and a worker: the original
@@ -850,19 +869,24 @@ pub struct Fleet {
     ever_enforced: bool,
     /// Mutable scenario state (None when the fleet runs no scenario).
     scenario_rt: Option<ScenarioRt>,
-    /// Per-event ledger: every fired event, in dispatch order.
-    pub event_log: Vec<FiredEvent>,
+    /// The flight recorder (§14): the coordinator-recorded trace spine.
+    /// Scenario events land here even with tracing off — the per-event
+    /// ledger ([`Fleet::fired_events`]) is derived from the sink.
+    pub trace: TraceSink,
+    /// Fleet-level named counters/gauges/summaries (§14); [`Fleet::report`]
+    /// merges the per-site, SMO and bus counters on top of a clone.
+    metrics: MetricsRegistry,
+    /// The first cap-affecting trigger awaiting the next water-fill push:
+    /// `(cause, trigger event id)`.  First setter per pending fill wins;
+    /// consumed only when `enforce_budget` actually pushes allocations,
+    /// so a trigger survives waiting rounds until the fill lands (§14).
+    pending_cause: Option<(CapCause, Option<u64>)>,
     /// Profile-path health shared with the scheduler rApp (§13): the
     /// scheduler writes quarantine decisions, the coordinator acts on
     /// them (blank assignment + budget reservation) and lifts them.
     profile_health: ProfileHealth,
     /// Per-site quarantine release round (None = not quarantined).
     quarantine_release: Vec<Option<u32>>,
-    /// Lifetime count of messages dropped from down sites' bounded
-    /// hold-back queues (`FleetConfig::holdback_cap`).
-    pub holdback_dropped: u64,
-    /// Lifetime count of A1 lease renewals the SMO pushed.
-    pub lease_renewals: u64,
 }
 
 /// How often a traffic-driven fleet re-runs the load-weighted budget
@@ -894,11 +918,12 @@ impl Fleet {
         }
         let bus = Bus::new();
         if let Some(fc) = &config.faults {
-            bus.set_fault_plan(Some(
-                FaultPlan::new(fc.clone()).context("invalid fault config")?,
-            ));
+            let mut plan = FaultPlan::new(fc.clone()).context("invalid fault config")?;
+            plan.set_trace(config.trace);
+            bus.set_fault_plan(Some(plan));
         }
         let mut smo = Smo::new(bus.clone());
+        smo.set_trace(config.trace);
         let mut nonrt = NonRtRic::new(bus.clone(), config.min_accuracy);
         let smo_id = bus.resolve("smo");
         let nonrt_id = bus.resolve("nonrt-ric");
@@ -925,6 +950,7 @@ impl Fleet {
             let mut host =
                 InferenceHost::new(local_bus.clone(), &name, hw, site_seed(config.seed, i));
             host.deploy(&model_id, workload.clone(), true);
+            host.set_trace_caps(config.trace);
             let hub = Arc::new(TelemetryHub::new());
             let sampler = PowerSampler::with_retention(
                 hub.clone(),
@@ -1031,6 +1057,10 @@ impl Fleet {
             budget_frac: config.budget_frac,
         });
         let quarantine_release = vec![None; config.sites];
+        // One trace round = one traffic slot of sim time (0 s/round for
+        // fixed-workload fleets, which have no wall-synchronised clock).
+        let round_s = config.traffic.as_ref().map_or(0.0, |t| t.slot_s());
+        let trace = TraceSink::new(config.trace, round_s);
         let config = Arc::new(config);
         let pool = SitePool::spawn(workers, config.clone());
         Ok(Fleet {
@@ -1049,17 +1079,20 @@ impl Fleet {
             budget_applied: false,
             ever_enforced: false,
             scenario_rt,
-            event_log: Vec::new(),
+            trace,
+            metrics: MetricsRegistry::new(),
+            pending_cause: None,
             profile_health,
             quarantine_release,
-            holdback_dropped: 0,
-            lease_renewals: 0,
         })
     }
 
     /// Execute one orchestration round (module docs, steps 1–7).
     pub fn run_round(&mut self) -> Result<()> {
         self.round += 1;
+        // Flight recorder (§14): open the round span; its id anchors any
+        // cap change this round cannot attribute to a sharper trigger.
+        self.trace.begin_round(self.round);
         // Fault clock (§13): the installed plan (if any) advances to this
         // round and releases held-back messages whose delay elapsed.
         self.bus.advance_fault_round();
@@ -1091,8 +1124,9 @@ impl Fleet {
         for site in &self.sites {
             if site.down {
                 if self.config.holdback_cap > 0 {
-                    self.holdback_dropped +=
+                    let dropped =
                         site.global_ep.truncate_oldest(self.config.holdback_cap) as u64;
+                    self.metrics.inc("holdback.dropped", dropped);
                 }
                 continue;
             }
@@ -1103,6 +1137,31 @@ impl Fleet {
 
         // 3. Parallel site phase on the persistent pool.
         self.pool.run_phase(&mut self.sites).context("parallel site phase")?;
+        //    Ingest worker-side cap moves (lease fallbacks/restores,
+        //    policy clamps) in site-index order on the coordinator —
+        //    same §6 discipline as the gateway merge — so the trace is
+        //    bit-identical for any worker-thread count.
+        if self.trace.enabled() {
+            let anchor = self.trace.round_anchor();
+            for i in 0..self.sites.len() {
+                for ev in self.sites[i].host.drain_cap_events() {
+                    let cause = match ev.kind {
+                        HostCapKind::LeaseFallback => CapCause::LeaseFallback,
+                        HostCapKind::LeaseRestore => CapCause::Recovery,
+                        HostCapKind::PolicyClamp => CapCause::WaterFill,
+                    };
+                    self.trace.record(
+                        Some(i as u32),
+                        TraceData::CapChange {
+                            cause,
+                            from: ev.from,
+                            to: ev.to,
+                            trigger: anchor,
+                        },
+                    );
+                }
+            }
+        }
 
         // 4. Gateway up, in site order (thread-count independent), with
         //    training/deployment lifecycle fanned out to the non-RT RIC.
@@ -1125,6 +1184,13 @@ impl Fleet {
         }
         self.bus.deliver_all();
         self.smo.step();
+        if self.trace.enabled() {
+            for (host, reason) in self.smo.drain_trace_rejects() {
+                let site =
+                    self.sites.iter().position(|s| s.name == host).map(|i| i as u32);
+                self.trace.record(site, TraceData::KpmReject { host, reason });
+            }
+        }
 
         // 5. Record fresh FROST decisions in the catalogue so the
         //    scheduler stops re-requesting them, and react to validation
@@ -1137,6 +1203,11 @@ impl Fleet {
             self.profiles_ingested += 1;
         }
         while self.lifecycle_ingested < self.smo.lifecycle_log.len() {
+            if self.trace.enabled() {
+                let detail =
+                    format!("{:?}", self.smo.lifecycle_log[self.lifecycle_ingested]);
+                self.trace.record(None, TraceData::Lifecycle { detail });
+            }
             if let LifecycleEvent::FlaggedForRetraining { model, .. } =
                 &self.smo.lifecycle_log[self.lifecycle_ingested]
             {
@@ -1153,6 +1224,7 @@ impl Fleet {
             if let Some(t) = site.traffic.as_mut() {
                 if std::mem::take(&mut t.reprofile_pending) {
                     let _ = self.nonrt.catalogue.clear_optimal_cap(&site.model_id);
+                    self.trace.record(Some(site.index as u32), TraceData::Reprofile);
                 }
             }
         }
@@ -1178,7 +1250,75 @@ impl Fleet {
         if self.config.churn_every > 0 && self.round % self.config.churn_every == 0 {
             self.churn();
         }
+
+        // Round close.  The cap-wattage sum is a cheap O(sites)
+        // coordinator pass fed to the metrics summary on every run —
+        // traced or not, so reports are identical either way; the trace
+        // additionally records the fabric's fault fates, one line per
+        // site, and the round_end span.
+        let mut cap_w = 0.0;
+        for site in &self.sites {
+            cap_w += site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+        }
+        self.metrics.observe("round.cap_w", cap_w);
+        if self.trace.enabled() {
+            for (fate, interface, count) in self.bus.drain_fault_trace() {
+                self.trace.record(None, TraceData::Fault { fate, interface, count });
+            }
+            for site in &self.sites {
+                self.trace.record(
+                    Some(site.index as u32),
+                    TraceData::SiteRound {
+                        cap_frac: site.host.testbed.cap_frac(),
+                        down: site.down,
+                    },
+                );
+            }
+            self.trace.record(None, TraceData::RoundEnd { cap_power_w: cap_w });
+        }
         Ok(())
+    }
+
+    /// Remember the round's first cap-affecting trigger (§14): the next
+    /// water-fill push attributes its cap changes to `(cause, trigger)`.
+    /// No-op with tracing off; first setter wins until the pending fill
+    /// consumes it.
+    fn note_cause(&mut self, cause: CapCause, trigger: Option<u64>) {
+        if self.trace.enabled() && self.pending_cause.is_none() {
+            self.pending_cause = Some((cause, trigger));
+        }
+    }
+
+    /// The site index a scenario event targets (None = fleet-wide).
+    fn event_site(event: &ScenarioEvent) -> Option<u32> {
+        match event {
+            ScenarioEvent::SiteDown { site }
+            | ScenarioEvent::SiteUp { site }
+            | ScenarioEvent::Derate { site, .. }
+            | ScenarioEvent::DerateEnd { site } => Some(*site as u32),
+            ScenarioEvent::SurgeStart { site, .. } | ScenarioEvent::SurgeEnd { site } => {
+                site.map(|s| s as u32)
+            }
+            ScenarioEvent::BudgetStep { .. } => None,
+        }
+    }
+
+    /// The per-event scenario ledger, reconstructed from the trace spine
+    /// (scenario events are recorded even with tracing off), in dispatch
+    /// order — the typed successor of the old `event_log` field.
+    pub fn fired_events(&self) -> Vec<FiredEvent> {
+        self.trace
+            .events()
+            .iter()
+            .filter_map(|e| match &e.data {
+                TraceData::Scenario { event, detail } => Some(FiredEvent {
+                    round: e.round,
+                    event: *event,
+                    detail: detail.clone(),
+                }),
+                _ => None,
+            })
+            .collect()
     }
 
     /// The budget fraction currently in force: the configured one, unless
@@ -1214,6 +1354,12 @@ impl Fleet {
             lock_recovering(&self.assignments)[i].1 = String::new();
             let name = self.sites[i].name.clone();
             self.smo.clear_host_load(&name);
+            let tid =
+                self.trace.record(Some(i as u32), TraceData::Quarantine {
+                    host: name,
+                    entered: true,
+                });
+            self.note_cause(CapCause::Quarantine, tid);
             // Its cap wattage is reserved in the water-fill until release.
             self.budget_applied = false;
         }
@@ -1229,13 +1375,20 @@ impl Fleet {
                 continue;
             }
             self.quarantine_release[i] = None;
-            let site = &self.sites[i];
-            lock_recovering(&self.profile_health).quarantined.remove(site.name.as_str());
+            let (name, down) = {
+                let site = &self.sites[i];
+                (site.name.clone(), site.down)
+            };
+            lock_recovering(&self.profile_health).quarantined.remove(name.as_str());
             // A down site stays blanked; its recovery event restores it.
-            if !site.down {
-                let pair = (site.name.clone(), site.model_id.clone());
+            if !down {
+                let pair = (name.clone(), self.sites[i].model_id.clone());
                 lock_recovering(&self.assignments)[i] = pair;
             }
+            let tid = self
+                .trace
+                .record(Some(i as u32), TraceData::Quarantine { host: name, entered: false });
+            self.note_cause(CapCause::Recovery, tid);
             self.budget_applied = false;
         }
     }
@@ -1264,7 +1417,7 @@ impl Fleet {
             let mut policy = intended.clone();
             policy.lease_rounds = self.config.policy_lease_rounds;
             self.smo.push_policy_to(&site.name, policy)?;
-            self.lease_renewals += 1;
+            self.metrics.inc("lease.renewals", 1);
         }
         Ok(())
     }
@@ -1284,16 +1437,25 @@ impl Fleet {
             if let Some(rt) = self.scenario_rt.as_mut() {
                 rt.next += 1;
             }
-            self.apply_event(due.event)?;
-            self.event_log.push(FiredEvent {
-                round: self.round,
-                event: due.event,
-                detail: due.event.to_string(),
-            });
+            // Ledger first (unconditionally — the fired-event log derives
+            // from the sink), so the transition below can cite the event
+            // id as the trigger of any cap change it records.
+            let tid = self.trace.record_scenario(Self::event_site(&due.event), due.event);
+            self.apply_event(due.event, tid)?;
+            match due.event {
+                ScenarioEvent::BudgetStep { .. } => {
+                    self.note_cause(CapCause::BudgetStep, tid)
+                }
+                ScenarioEvent::SiteDown { .. } => self.note_cause(CapCause::WaterFill, tid),
+                ScenarioEvent::SiteUp { .. } => self.note_cause(CapCause::Recovery, tid),
+                ScenarioEvent::Derate { .. } => self.note_cause(CapCause::DerateClamp, tid),
+                ScenarioEvent::DerateEnd { .. } => self.note_cause(CapCause::Recovery, tid),
+                ScenarioEvent::SurgeStart { .. } | ScenarioEvent::SurgeEnd { .. } => {}
+            }
         }
     }
 
-    fn apply_event(&mut self, event: ScenarioEvent) -> Result<()> {
+    fn apply_event(&mut self, event: ScenarioEvent, tid: Option<u64>) -> Result<()> {
         // Take the runtime state out of `self` for the duration of the
         // transition so sites, SMO and catalogue can be borrowed freely.
         let mut rt = self.scenario_rt.take().expect("events only fire with a scenario");
@@ -1358,8 +1520,18 @@ impl Fleet {
                 // and the enforced cap itself; the cap change invalidates
                 // the site's step-estimate cache (`Testbed::set_cap_frac`).
                 s.host.policy.max_cap_frac = s.host.policy.max_cap_frac.min(max_cap_frac);
-                if s.host.testbed.cap_frac() > max_cap_frac {
+                let pre_cap = s.host.testbed.cap_frac();
+                if pre_cap > max_cap_frac {
                     s.host.testbed.set_cap_frac(max_cap_frac);
+                    self.trace.record(
+                        Some(site as u32),
+                        TraceData::CapChange {
+                            cause: CapCause::DerateClamp,
+                            from: pre_cap,
+                            to: max_cap_frac,
+                            trigger: tid,
+                        },
+                    );
                 }
                 if self.config.frost_enabled {
                     // Online system tuning: forget the recorded optimum so
@@ -1379,7 +1551,19 @@ impl Fleet {
                         let _ = self.nonrt.catalogue.clear_optimal_cap(&s.model_id);
                     } else {
                         // Stock caps: return to the pre-derate setting.
+                        let cur = s.host.testbed.cap_frac();
                         s.host.testbed.set_cap_frac(pre_cap);
+                        if (cur - pre_cap).abs() > 1e-12 {
+                            self.trace.record(
+                                Some(site as u32),
+                                TraceData::CapChange {
+                                    cause: CapCause::Recovery,
+                                    from: cur,
+                                    to: pre_cap,
+                                    trigger: tid,
+                                },
+                            );
+                        }
                     }
                 }
                 self.budget_applied = false;
@@ -1563,11 +1747,26 @@ impl Fleet {
             }
             anyhow::bail!("fleet power budget below the driver floors");
         };
+        // Attribution (§14): consume the round's pending trigger — set by
+        // whatever forced this fill (budget step, outage, derate,
+        // quarantine) even if the fill had to wait a round — or fall back
+        // to a plain water-fill anchored at the round span.
+        let (cause, trigger) = self
+            .pending_cause
+            .take()
+            .unwrap_or((CapCause::WaterFill, self.trace.round_anchor()));
         for (i, alloc) in alloc_sites.iter().zip(&allocs) {
             let site = &mut self.sites[*i];
             let mut policy = site.host.policy.clone();
             policy.id = format!("{}-budget", site.name);
             policy.max_cap_frac = alloc.cap_frac.max(policy.min_cap_frac);
+            let from = site.host.policy.max_cap_frac;
+            if (from - policy.max_cap_frac).abs() > 1e-12 {
+                self.trace.record(
+                    Some(*i as u32),
+                    TraceData::CapChange { cause, from, to: policy.max_cap_frac, trigger },
+                );
+            }
             // Enact the ceiling immediately on the coordinator: budget
             // conservation is a per-round invariant (a scripted budget
             // step must bite in its own round), so the clamp cannot wait
@@ -1623,6 +1822,41 @@ impl Fleet {
 
     /// Fleet KPM/energy roll-up (deterministic: site order everywhere).
     pub fn report(&self) -> FleetReport {
+        // Metrics (§14): clone the live registry (lease renewals,
+        // holdback drops, round cap-wattage summary), then fold in the
+        // per-site counters in site-index order and the SMO/bus totals —
+        // one name-ordered surface replacing the scattered counters.
+        let mut metrics = self.metrics.clone();
+        for site in &self.sites {
+            let (hits, misses) = site.host.testbed.cache.stats();
+            metrics.inc("cache.hits", hits);
+            metrics.inc("cache.misses", misses);
+            metrics.inc("cache.invalidations", site.host.testbed.cache.invalidations());
+            metrics.inc("lease.expiries", site.host.lease_expiries);
+            if let Some(t) = &site.traffic {
+                let (reprofiles, load_shifts, rejected) = t.monitor_counters();
+                metrics.inc("monitor.reprofiles", reprofiles);
+                metrics.inc("monitor.load_shifts", load_shifts);
+                metrics.inc("monitor.rejected", rejected);
+            }
+        }
+        metrics.inc("kpm.rejected", self.smo.kpm_rejected_total());
+        metrics
+            .inc("quarantine.events", lock_recovering(&self.profile_health).quarantine_events);
+        for (key, count) in self.bus.stats() {
+            let name = match key {
+                "A1" => "bus.A1",
+                "O1" => "bus.O1",
+                "O2" => "bus.O2",
+                "dropped" => "bus.dropped",
+                _ => continue,
+            };
+            metrics.inc(name, count);
+        }
+        // Deliberately no worker-count gauge: the report must stay
+        // bit-identical for any `threads` setting (§6).
+        metrics.set_gauge("fleet.sites", self.sites.len() as f64);
+
         let mut sites = Vec::new();
         let mut workload_j = 0.0;
         let mut round_j = 0.0;
@@ -1701,10 +1935,11 @@ impl Fleet {
             cap_power_w,
             fault_ledger: self.bus.fault_ledger(),
             kpm_rejected: self.smo.kpm_rejected_total(),
-            lease_expiries: self.sites.iter().map(|s| s.host.lease_expiries).sum(),
-            quarantine_events: lock_recovering(&self.profile_health).quarantine_events,
-            holdback_dropped: self.holdback_dropped,
-            lease_renewals: self.lease_renewals,
+            lease_expiries: metrics.counter("lease.expiries"),
+            quarantine_events: metrics.counter("quarantine.events"),
+            holdback_dropped: metrics.counter("holdback.dropped"),
+            lease_renewals: metrics.counter("lease.renewals"),
+            metrics,
         }
     }
 }
@@ -1790,8 +2025,16 @@ pub fn run_bench_suite(target_s: f64) -> Result<Vec<(String, BenchStats)>> {
     let name = "train_estimate memoized (cap 60%)";
     let memo = bench(name, target_s / 2.0, || cached.train_estimate(&w, 128));
     results.push((name.to_string(), memo));
+    // Cache behaviour goes through the same metrics surface the fleet
+    // report uses (§14) instead of a hand-rolled stats line.
+    let mut cache_metrics = MetricsRegistry::new();
     let (hits, misses) = cached.cache.stats();
-    println!("cache stats: {hits} hits / {misses} misses (solver ran {misses}×)");
+    cache_metrics.inc("cache.hits", hits);
+    cache_metrics.inc("cache.misses", misses);
+    cache_metrics.inc("cache.invalidations", cached.cache.invalidations());
+    for (name, count) in cache_metrics.counters() {
+        println!("  {name}: {count}");
+    }
 
     Ok(results)
 }

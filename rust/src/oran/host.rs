@@ -18,6 +18,27 @@ use crate::util::Seconds;
 use super::bus::{Bus, Endpoint, EndpointId};
 use super::messages::{KpmReport, LifecycleEvent, OranMessage};
 
+/// What moved a host's cap outside the fleet water-fill (§14): the
+/// worker-side half of cap-decision attribution.  Each variant maps to a
+/// [`crate::obs::CapCause`] when the coordinator drains the buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostCapKind {
+    /// A policy lease expired without renewal; fell back to the safe cap.
+    LeaseFallback,
+    /// A renewal restored the pre-fallback cap.
+    LeaseRestore,
+    /// A freshly pushed policy's bounds clamped the running cap.
+    PolicyClamp,
+}
+
+/// One host-local cap move, buffered for the coordinator (§14).
+#[derive(Debug, Clone, Copy)]
+pub struct HostCapEvent {
+    pub kind: HostCapKind,
+    pub from: f64,
+    pub to: f64,
+}
+
 /// The host node.
 pub struct InferenceHost {
     pub name: String,
@@ -52,6 +73,12 @@ pub struct InferenceHost {
     pre_fallback_cap: Option<f64>,
     /// How many times a policy lease expired without renewal (§13).
     pub lease_expiries: u64,
+    /// Record cap moves into `cap_events` for the flight recorder (§14).
+    trace_caps: bool,
+    /// Buffered host-local cap moves; the fleet coordinator drains this
+    /// after each worker phase, in site-index order, so the trace stays
+    /// identical for any worker-thread count.
+    cap_events: Vec<HostCapEvent>,
 }
 
 impl InferenceHost {
@@ -78,6 +105,24 @@ impl InferenceHost {
             lease_left: None,
             pre_fallback_cap: None,
             lease_expiries: 0,
+            trace_caps: false,
+            cap_events: Vec::new(),
+        }
+    }
+
+    /// Enable/disable cap-move buffering for the flight recorder (§14).
+    pub fn set_trace_caps(&mut self, on: bool) {
+        self.trace_caps = on;
+    }
+
+    /// Take the buffered cap moves (empty with tracing off).
+    pub fn drain_cap_events(&mut self) -> Vec<HostCapEvent> {
+        std::mem::take(&mut self.cap_events)
+    }
+
+    fn note_cap(&mut self, kind: HostCapKind, from: f64, to: f64) {
+        if self.trace_caps {
+            self.cap_events.push(HostCapEvent { kind, from, to });
         }
     }
 
@@ -110,7 +155,9 @@ impl InferenceHost {
                     // the pre-fallback cap (if a lease expired) before the
                     // normal clamp so healing lands in one step.
                     if let Some(cap) = self.pre_fallback_cap.take() {
+                        let old = self.testbed.cap_frac();
                         self.testbed.set_cap_frac(cap);
+                        self.note_cap(HostCapKind::LeaseRestore, old, cap);
                     }
                     self.lease_left = (self.policy.enabled && self.policy.lease_rounds > 0)
                         .then_some(self.policy.lease_rounds);
@@ -126,6 +173,7 @@ impl InferenceHost {
                             cap.clamp(self.policy.min_cap_frac, self.policy.max_cap_frac);
                         if (clamped - cap).abs() > 1e-12 {
                             self.testbed.set_cap_frac(clamped);
+                            self.note_cap(HostCapKind::PolicyClamp, cap, clamped);
                         }
                     }
                 }
@@ -180,6 +228,7 @@ impl InferenceHost {
             if cap > safe + 1e-12 {
                 self.pre_fallback_cap = Some(cap);
                 self.testbed.set_cap_frac(safe);
+                self.note_cap(HostCapKind::LeaseFallback, cap, safe);
             }
         }
     }

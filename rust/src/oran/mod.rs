@@ -38,7 +38,7 @@ pub use fleet::{
     bench_config, run_bench_suite, site_seed, FiredEvent, Fleet, FleetConfig, FleetReport,
     FleetSite, SiteReport, SiteTraffic,
 };
-pub use host::InferenceHost;
+pub use host::{HostCapEvent, HostCapKind, InferenceHost};
 pub use lifecycle::{LifecycleStage, MlLifecycle};
 pub use messages::OranMessage;
 pub use nearrt_ric::{NearRtRic, XApp};

@@ -55,6 +55,10 @@ pub struct Smo {
     /// renewal and a lease-fallback restore can never resurrect a cap
     /// the water-fill has since revoked (§13).
     policy_book: std::collections::BTreeMap<String, EnergyPolicy>,
+    /// Buffer each rejection as `(host, reason)` for the flight
+    /// recorder (§14) — the ledger above only keeps totals.
+    trace: bool,
+    trace_rejects: Vec<(String, &'static str)>,
 }
 
 impl Smo {
@@ -74,7 +78,20 @@ impl Smo {
             kpm_watermarks: std::collections::BTreeMap::new(),
             kpm_rejects: std::collections::BTreeMap::new(),
             policy_book: std::collections::BTreeMap::new(),
+            trace: false,
+            trace_rejects: Vec::new(),
         }
+    }
+
+    /// Enable/disable per-rejection buffering for the flight recorder.
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = on;
+    }
+
+    /// Take the buffered `(host, reason)` rejections, ingest-ordered
+    /// (empty with tracing off).
+    pub fn drain_trace_rejects(&mut self) -> Vec<(String, &'static str)> {
+        std::mem::take(&mut self.trace_rejects)
     }
 
     /// Why a KPM must not be ingested, or Ok.  Rejections: non-finite
@@ -171,6 +188,9 @@ impl Smo {
                 OranMessage::Kpm(k) => {
                     if let Err(reason) = self.validate_kpm(&k) {
                         *self.kpm_rejects.entry(reason).or_insert(0) += 1;
+                        if self.trace {
+                            self.trace_rejects.push((k.host.clone(), reason));
+                        }
                         continue;
                     }
                     let wm = self

@@ -164,13 +164,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
+            Json::Num(n) => write_num(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -212,7 +206,22 @@ impl Json {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Emit a JSON number exactly as [`Json`] serialisation does: integral
+/// values below 2^53 print as integers, everything else via `{n}`.
+/// Shared with the streaming exporter (`obs::export`) so the two
+/// serialisers cannot drift.
+pub fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+/// Emit a quoted, escaped JSON string.  The single escaping routine for
+/// both the [`Json`] tree serialiser and the streaming JSONL exporter
+/// (`obs::export`); round-tripped against [`Json::parse`] in tests.
+pub fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -65,7 +65,8 @@ fn scripted_days_are_bit_identical_across_thread_counts() {
                 "{preset} threads={threads}"
             );
             assert_eq!(
-                first_fleet.event_log, fleet.event_log,
+                first_fleet.fired_events(),
+                fleet.fired_events(),
                 "{preset} threads={threads}: event ledgers must match"
             );
             for (a, b) in first_fleet.sites.iter().zip(&fleet.sites) {
@@ -114,9 +115,10 @@ fn outage_redistributes_demand_and_recovers() {
     without.run().unwrap();
 
     // The script fired exactly twice, in order.
-    assert_eq!(with.event_log.len(), 2);
-    assert!(matches!(with.event_log[0].event, ScenarioEvent::SiteDown { site: 2 }));
-    assert!(matches!(with.event_log[1].event, ScenarioEvent::SiteUp { site: 2 }));
+    let fired = with.fired_events();
+    assert_eq!(fired.len(), 2);
+    assert!(matches!(fired[0].event, ScenarioEvent::SiteDown { site: 2 }));
+    assert!(matches!(fired[1].event, ScenarioEvent::SiteUp { site: 2 }));
 
     let down = with.sites[2].traffic.as_ref().unwrap();
     let outage_slots = 2u32..5;
@@ -212,7 +214,7 @@ fn budget_is_conserved_every_round_through_grid_steps() {
         }
     }
     assert!(audited >= 5, "water-fill must have been in force most of the day");
-    assert_eq!(fleet.event_log.len(), 2, "both budget steps fired");
+    assert_eq!(fleet.fired_events().len(), 2, "both budget steps fired");
     assert!((fleet.current_budget_frac() - 0.9).abs() < 1e-12, "budget restored");
 }
 

@@ -1,0 +1,235 @@
+//! Flight-recorder integration tests (DESIGN.md §14).
+//!
+//! 1. Exporter escaping round-trips through `Json::parse` — the JSONL
+//!    writer shares its escaping with the tree serialiser, and this pins
+//!    that they cannot drift (control chars, `\u` escapes, non-ASCII).
+//! 2. Trace bit-identity — a traced chaos run produces a byte-identical
+//!    `TRACE_*.jsonl` for any worker-thread count (§6 extended to the
+//!    observability spine: recording happens only on the coordinator in
+//!    site-index order).
+//! 3. Tracing is free when off — a run with `trace: false` produces a
+//!    bit-identical `FleetReport` (fingerprint and metrics registry) to
+//!    the same run with `trace: true`.
+//! 4. Attribution completeness — every cap change in an outage-day run
+//!    carries a cause and a trigger id that resolves to a recorded
+//!    event, so `frost trace --explain SITE` reconstructs the full
+//!    causal chain.
+
+use frost::obs::export::{trace_to_string, write_trace};
+use frost::obs::query::{explain_site, summarise};
+use frost::obs::{TraceData, TraceSink};
+use frost::oran::{FaultConfig, Fleet, FleetConfig, FleetReport};
+use frost::scenario::Scenario;
+use frost::traffic::TrafficConfig;
+use frost::util::Json;
+
+/// Light chaos fleet (the tests/chaos.rs shape) with tracing on.
+fn traced_chaos_cfg(seed: u64) -> FleetConfig {
+    let mut faults = FaultConfig::preset("lossy-fabric", seed ^ 0xC0C0).unwrap();
+    faults.start_round = 2;
+    faults.end_round = 8;
+    FleetConfig {
+        sites: 4,
+        seed,
+        rounds: 20,
+        train_epochs: 30,
+        samples_per_epoch: 5_000,
+        infer_steps_per_round: 20,
+        budget_frac: 0.85,
+        max_concurrent_profiles: 4,
+        faults: Some(faults),
+        policy_lease_rounds: 3,
+        profile_timeout_rounds: 2,
+        profile_max_attempts: 2,
+        quarantine_rounds: 4,
+        holdback_cap: 256,
+        trace: true,
+        ..FleetConfig::default()
+    }
+}
+
+/// Scripted outage day with a real budget so the water-fill, the outage
+/// reservation and the recovery re-fill all move caps.
+fn traced_outage_cfg(seed: u64) -> FleetConfig {
+    let tr = TrafficConfig {
+        users_per_site: 400,
+        requests_per_user_per_day: 30.0,
+        day_s: 1_200.0,
+        slots_per_day: 8,
+        warmup_rounds: 3,
+        max_batch: 32,
+        ..TrafficConfig::default()
+    };
+    let scen = Scenario::preset("outage-day", 4, &tr).expect("preset builds");
+    FleetConfig {
+        sites: 4,
+        seed,
+        rounds: tr.rounds_for_one_day(),
+        train_epochs: 60,
+        samples_per_epoch: 10_000,
+        infer_steps_per_round: 10,
+        max_concurrent_profiles: 4,
+        budget_frac: 0.9,
+        traffic: Some(tr),
+        scenario: Some(scen),
+        trace: true,
+        ..FleetConfig::default()
+    }
+}
+
+/// The report state a run is judged on, as raw bits (tests/chaos.rs
+/// fingerprint plus the §14 metrics registry).
+fn fingerprint(r: &FleetReport) -> Vec<u64> {
+    let mut fp = vec![
+        r.fleet_workload_energy_j.to_bits(),
+        r.fleet_round_energy_j.to_bits(),
+        r.fleet_profiling_energy_j.to_bits(),
+        r.fleet_samples,
+        r.kpm_reports as u64,
+        r.mean_cap_frac.to_bits(),
+        r.cap_power_w.to_bits(),
+        r.kpm_rejected,
+        r.lease_expiries,
+        r.lease_renewals,
+        r.quarantine_events,
+        r.holdback_dropped,
+    ];
+    for s in &r.sites {
+        fp.push(s.cap_frac.to_bits());
+        fp.push(s.workload_energy_j.to_bits());
+        fp.push(s.hub_energy_j.to_bits());
+        fp.push(s.samples);
+    }
+    for (_, v) in r.metrics.counters() {
+        fp.push(v);
+    }
+    for (_, v) in r.metrics.gauges() {
+        fp.push(v.to_bits());
+    }
+    for (_, s) in r.metrics.summaries() {
+        let st = s.finish();
+        fp.push(st.n as u64);
+        fp.push(st.mean.to_bits());
+        fp.push(st.min.to_bits());
+        fp.push(st.max.to_bits());
+    }
+    fp
+}
+
+#[test]
+fn exporter_escaping_round_trips_through_json_parse() {
+    // Strings chosen to hit every escaping path: two-char escapes,
+    // `\u00XX` control escapes, multi-byte UTF-8, DEL, and a mix.
+    let nasty = [
+        "plain",
+        "quote\" back\\slash / solidus",
+        "ctrl\u{0}\u{1}\u{8}\u{c}\n\r\t\u{1f}end",
+        "ünïcødé — サイト 12 ⚡",
+        "high\u{7f}del and \u{2028} line sep",
+    ];
+    let mut sink = TraceSink::new(true, 150.0);
+    sink.begin_round(1);
+    for s in &nasty {
+        sink.record(Some(0), TraceData::Lifecycle { detail: (*s).to_string() });
+        sink.record(Some(1), TraceData::KpmReject {
+            host: (*s).to_string(),
+            reason: "non_finite",
+        });
+    }
+    let text = trace_to_string(&sink);
+    let mut details = Vec::new();
+    let mut hosts = Vec::new();
+    for line in text.lines() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("unparseable line {line:?}: {e}"));
+        if let Some(d) = v.get("detail").and_then(Json::as_str) {
+            details.push(d.to_string());
+        }
+        if let Some(h) = v.get("host").and_then(Json::as_str) {
+            hosts.push(h.to_string());
+        }
+    }
+    assert_eq!(details, nasty, "lifecycle details must round-trip exactly");
+    assert_eq!(hosts, nasty, "host names must round-trip exactly");
+}
+
+#[test]
+fn traced_chaos_run_is_byte_identical_across_thread_counts() {
+    let mut traces = Vec::new();
+    for threads in [1usize, 2, 0] {
+        let mut cfg = traced_chaos_cfg(23);
+        cfg.threads = threads;
+        let mut fleet = Fleet::new(cfg).unwrap();
+        fleet.run().unwrap();
+        assert!(!fleet.trace.is_empty(), "threads={threads}: tracing was on");
+        traces.push((threads, trace_to_string(&fleet.trace)));
+    }
+    let (_, first) = &traces[0];
+    for (threads, trace) in &traces[1..] {
+        assert!(
+            first == trace,
+            "threads=1 vs threads={threads}: traces diverged (lens {} vs {})",
+            first.len(),
+            trace.len()
+        );
+    }
+}
+
+#[test]
+fn disabled_tracing_leaves_the_report_bit_identical() {
+    let traced_cfg = traced_chaos_cfg(31);
+    let mut untraced_cfg = traced_cfg.clone();
+    untraced_cfg.trace = false;
+    let mut traced = Fleet::new(traced_cfg).unwrap();
+    let rep_on = traced.run().unwrap();
+    let mut untraced = Fleet::new(untraced_cfg).unwrap();
+    let rep_off = untraced.run().unwrap();
+    assert!(!traced.trace.is_empty());
+    assert!(untraced.trace.is_empty(), "no scenario script, so nothing is recorded");
+    assert_eq!(fingerprint(&rep_on), fingerprint(&rep_off));
+    // Metric *names* match too, not just the folded values.
+    let names_on: Vec<&str> = rep_on.metrics.counters().map(|(k, _)| k).collect();
+    let names_off: Vec<&str> = rep_off.metrics.counters().map(|(k, _)| k).collect();
+    assert_eq!(names_on, names_off);
+}
+
+#[test]
+fn outage_day_cap_changes_all_explain_their_cause() {
+    let mut fleet = Fleet::new(traced_outage_cfg(11)).unwrap();
+    fleet.run().unwrap();
+    let path = std::env::temp_dir().join("frost_trace_outage_day.jsonl");
+    write_trace(&path, &fleet.trace).unwrap();
+
+    let sites = fleet.sites.len();
+    let mut cap_changes = 0usize;
+    let mut causes = std::collections::BTreeSet::new();
+    for site in 0..sites {
+        for m in explain_site(&path, site as i64).unwrap() {
+            cap_changes += 1;
+            causes.insert(m.cause.clone());
+            assert!(
+                m.trigger.is_some(),
+                "site {site} r{} {}: cap change without a trigger id",
+                m.round,
+                m.cause
+            );
+            assert!(
+                m.trigger_summary.is_some(),
+                "site {site} r{} {}: trigger #{:?} not in the trace",
+                m.round,
+                m.cause,
+                m.trigger
+            );
+        }
+    }
+    assert!(cap_changes > 0, "a budgeted outage day must move caps");
+    assert!(causes.contains("water-fill"), "causes seen: {causes:?}");
+    // The scripted outage and recovery are in the spine with sim-time
+    // stamps, and the roll-up sees every kind.
+    let summary = summarise(&path).unwrap();
+    assert!(summary.contains("scenario"), "{summary}");
+    assert!(summary.contains("cap_change"), "{summary}");
+    assert!(summary.contains("site_round"), "{summary}");
+    let fired = fleet.fired_events();
+    assert_eq!(fired.len(), 2, "outage + recovery fired");
+    std::fs::remove_file(&path).ok();
+}
