@@ -213,6 +213,25 @@ fn obs_surfaces_are_covered_and_clean() {
     }
 }
 
+/// The §15 checkpoint subsystem is the layer that makes crashes
+/// recoverable bit-exactly, so it must itself be deterministic: the
+/// container reader/writer, the state codec, the whole-fleet snapshot
+/// assembly, and the crash/resume battery are linted *by name* under
+/// their real tree paths (same rationale as the chaos surfaces above).
+#[test]
+fn ckpt_surfaces_are_covered_and_clean() {
+    for (src, path) in [
+        (include_str!("../../src/ckpt/mod.rs"), "rust/src/ckpt/mod.rs"),
+        (include_str!("../../src/ckpt/io.rs"), "rust/src/ckpt/io.rs"),
+        (include_str!("../../src/ckpt/codec.rs"), "rust/src/ckpt/codec.rs"),
+        (include_str!("../../src/ckpt/snapshot.rs"), "rust/src/ckpt/snapshot.rs"),
+        (include_str!("../../tests/ckpt.rs"), "rust/tests/ckpt.rs"),
+    ] {
+        let f = unsuppressed(src, path);
+        assert!(f.is_empty(), "{path} must be R1–R5 clean: {f:?}");
+    }
+}
+
 #[test]
 fn json_summary_is_well_formed_enough() {
     let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");

@@ -1,0 +1,1809 @@
+//! Bit-exact value codecs for snapshot sections (DESIGN.md §15).
+//!
+//! Writers take an open [`JsonStream`] (the incremental path — no
+//! intermediate [`Json`] trees); readers take the lazily parsed [`Json`]
+//! node of the value.  Conventions:
+//!
+//! * `u64` and `f64` cross the boundary as 16-char lowercase hex strings
+//!   ([`hex_u64`] / [`hex_f64`] of the IEEE-754 bits).  JSON numbers are
+//!   f64: they lose `u64` precision above 2⁵³, print `-0.0` as `0`, and
+//!   the streaming writer nulls non-finite values — all three corrupt a
+//!   bit-identity contract ([`f64::NEG_INFINITY`] legitimately occurs in
+//!   the SMO's KPM watermarks).
+//! * Structurally small integers (indices, rounds, versions, lengths)
+//!   use exact decimal fields (`u64_field` / [`Json::as_i64`]).
+//! * `Option<f64>` is hex-or-empty-string (`""` = `None`), so a `None`
+//!   never collides with a serialised NaN.
+//! * Optional strings/ids are present-or-absent fields.
+//! * `&'static str` values restore through [`intern_static`]: a closed
+//!   known-name table first, a leaked owned string as the fallback for
+//!   forward compatibility.
+//!
+//! Every reader is total over corrupt input: malformed nodes produce an
+//! error, never a panic or a half-decoded value.
+
+use std::io::Write;
+
+use anyhow::{Context, Result};
+
+use crate::frost::edp::EdpCriterion;
+use crate::frost::fit::{FitResult, ResponseModel};
+use crate::frost::policy::{EnergyPolicy, QosClass};
+use crate::frost::profiler::{ProfileOutcome, ProfilePoint};
+use crate::metrics::{LatencyHistogram, StreamingSummary};
+use crate::obs::export::JsonStream;
+use crate::obs::{CapCause, TraceData, TraceEvent};
+use crate::oran::catalogue::{CatalogueEntry, ModelState};
+use crate::oran::faults::{FaultConfig, FaultLedger};
+use crate::oran::messages::{KpmReport, LifecycleEvent, OranMessage};
+use crate::oran::smo::ProfileRecord;
+use crate::scenario::{Phase, Scenario, ScenarioEvent, TimedEvent};
+use crate::simulator::WorkloadDescriptor;
+use crate::telemetry::hub::PowerReading;
+use crate::telemetry::sampler::{PowerSample, SamplerCkpt};
+use crate::traffic::{
+    ArrivalKind, DiurnalProfile, SloSpec, SlotReport, TrafficConfig, TrafficPath,
+};
+use crate::util::{Joules, Json, Pcg32, Seconds, Series, Watts};
+
+// ------------------------------------------------------------ primitives
+
+/// `u64` as 16 lowercase hex chars — exact for the full range.
+pub fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// `f64` as the hex of its IEEE-754 bits — exact for every value
+/// including `-0.0`, infinities and NaN payloads.
+pub fn hex_f64(v: f64) -> String {
+    hex_u64(v.to_bits())
+}
+
+pub fn parse_hex_u64(s: &str) -> Result<u64> {
+    anyhow::ensure!(s.len() == 16, "bad hex64 literal '{s}' (length {})", s.len());
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex64 literal '{s}'"))
+}
+
+pub fn parse_hex_f64(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_hex_u64(s)?))
+}
+
+/// Resolve a decoded string against a closed table of known
+/// `&'static str` values; unknown names leak a boxed copy (bounded by
+/// snapshot content, only reachable on forward-version data).
+pub fn intern_static(s: &str, known: &[&'static str]) -> &'static str {
+    for k in known {
+        if *k == s {
+            return *k;
+        }
+    }
+    Box::leak(s.to_string().into_boxed_str())
+}
+
+// -------------------------------------------------------- field writers
+
+pub fn w_u64<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, v: u64) {
+    js.str_field(name, &hex_u64(v));
+}
+
+pub fn w_f64<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, v: f64) {
+    js.str_field(name, &hex_f64(v));
+}
+
+/// `Option<f64>` as hex-or-empty-string.
+pub fn w_opt_f64<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, v: Option<f64>) {
+    match v {
+        Some(x) => js.str_field(name, &hex_f64(x)),
+        None => js.str_field(name, ""),
+    }
+}
+
+/// `Option<u64>` as hex-or-empty-string.
+pub fn w_opt_u64<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, v: Option<u64>) {
+    match v {
+        Some(x) => js.str_field(name, &hex_u64(x)),
+        None => js.str_field(name, ""),
+    }
+}
+
+// -------------------------------------------------------- field readers
+
+fn field<'a>(j: &'a Json, name: &str) -> Result<&'a Json> {
+    j.req(name)
+}
+
+/// Hex-encoded `u64` field.
+pub fn ju64(j: &Json, name: &str) -> Result<u64> {
+    vu64(field(j, name)?).with_context(|| format!("field '{name}'"))
+}
+
+/// Hex-encoded `f64` field.
+pub fn jf64(j: &Json, name: &str) -> Result<f64> {
+    vf64(field(j, name)?).with_context(|| format!("field '{name}'"))
+}
+
+/// Hex-or-empty `Option<f64>` field.
+pub fn jopt_f64(j: &Json, name: &str) -> Result<Option<f64>> {
+    let s = jstr(j, name)?;
+    if s.is_empty() {
+        Ok(None)
+    } else {
+        Ok(Some(parse_hex_f64(s).with_context(|| format!("field '{name}'"))?))
+    }
+}
+
+/// Hex-or-empty `Option<u64>` field.
+pub fn jopt_u64(j: &Json, name: &str) -> Result<Option<u64>> {
+    let s = jstr(j, name)?;
+    if s.is_empty() {
+        Ok(None)
+    } else {
+        Ok(Some(parse_hex_u64(s).with_context(|| format!("field '{name}'"))?))
+    }
+}
+
+/// Exact decimal integer field (bounded values only).
+pub fn ji64(j: &Json, name: &str) -> Result<i64> {
+    field(j, name)?
+        .as_i64()
+        .with_context(|| format!("field '{name}' is not an exact integer"))
+}
+
+pub fn ju32(j: &Json, name: &str) -> Result<u32> {
+    u32::try_from(ji64(j, name)?)
+        .ok()
+        .with_context(|| format!("field '{name}' out of u32 range"))
+}
+
+pub fn jusize(j: &Json, name: &str) -> Result<usize> {
+    field(j, name)?
+        .as_usize()
+        .with_context(|| format!("field '{name}' is not a usize"))
+}
+
+pub fn jstr<'a>(j: &'a Json, name: &str) -> Result<&'a str> {
+    field(j, name)?
+        .as_str()
+        .with_context(|| format!("field '{name}' is not a string"))
+}
+
+pub fn jbool(j: &Json, name: &str) -> Result<bool> {
+    field(j, name)?
+        .as_bool()
+        .with_context(|| format!("field '{name}' is not a bool"))
+}
+
+pub fn jarr<'a>(j: &'a Json, name: &str) -> Result<&'a [Json]> {
+    field(j, name)?
+        .as_arr()
+        .with_context(|| format!("field '{name}' is not an array"))
+}
+
+/// Optional string field (present-or-absent encoding).
+pub fn jopt_string(j: &Json, name: &str) -> Result<Option<String>> {
+    match j.get(name) {
+        Some(v) => Ok(Some(
+            v.as_str()
+                .with_context(|| format!("field '{name}' is not a string"))?
+                .to_string(),
+        )),
+        None => Ok(None),
+    }
+}
+
+/// Hex `u64` array element.
+pub fn vu64(j: &Json) -> Result<u64> {
+    parse_hex_u64(j.as_str().context("expected a hex64 string")?)
+}
+
+/// Hex `f64` array element.
+pub fn vf64(j: &Json) -> Result<f64> {
+    parse_hex_f64(j.as_str().context("expected a hex64 string")?)
+}
+
+// ------------------------------------------------------- leaf-type codecs
+
+pub fn w_pcg32<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, rng: &Pcg32) {
+    let (state, inc) = rng.state_parts();
+    js.begin_obj(name);
+    w_u64(js, Some("state"), state);
+    w_u64(js, Some("inc"), inc);
+    js.end_obj();
+}
+
+pub fn r_pcg32(j: &Json) -> Result<Pcg32> {
+    Ok(Pcg32::from_parts(ju64(j, "state")?, ju64(j, "inc")?))
+}
+
+pub fn w_summary<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, s: &StreamingSummary) {
+    let (n, mean, m2, min, max) = s.state_parts();
+    js.begin_obj(name);
+    w_u64(js, Some("n"), n);
+    w_f64(js, Some("mean"), mean);
+    w_f64(js, Some("m2"), m2);
+    w_f64(js, Some("min"), min);
+    w_f64(js, Some("max"), max);
+    js.end_obj();
+}
+
+pub fn r_summary(j: &Json) -> Result<StreamingSummary> {
+    Ok(StreamingSummary::from_parts(
+        ju64(j, "n")?,
+        jf64(j, "mean")?,
+        jf64(j, "m2")?,
+        jf64(j, "min")?,
+        jf64(j, "max")?,
+    ))
+}
+
+pub fn w_hist<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, h: &LatencyHistogram) {
+    js.begin_obj(name);
+    js.begin_arr(Some("bins"));
+    for (i, n) in h.occupied_bins() {
+        js.begin_arr(None);
+        js.u64_field(None, i as u64);
+        w_u64(js, None, n);
+        js.end_arr();
+    }
+    js.end_arr();
+    w_u64(js, Some("nf"), h.non_finite());
+    js.end_obj();
+}
+
+pub fn r_hist(j: &Json) -> Result<LatencyHistogram> {
+    let mut bins = Vec::new();
+    for pair in jarr(j, "bins")? {
+        let p = pair.as_arr().context("histogram bin pair is not an array")?;
+        anyhow::ensure!(p.len() == 2, "histogram bin pair has {} elements", p.len());
+        let i = p[0].as_usize().context("histogram bin index")?;
+        let n = vu64(&p[1]).context("histogram bin count")?;
+        bins.push((i, n));
+    }
+    LatencyHistogram::from_sparse_bins(bins, ju64(j, "nf")?)
+        .context("histogram bin index out of range")
+}
+
+pub fn w_power_reading<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, r: &PowerReading) {
+    js.begin_obj(name);
+    w_f64(js, Some("at"), r.at.0);
+    w_f64(js, Some("gpu"), r.gpu.0);
+    w_f64(js, Some("cpu"), r.cpu.0);
+    w_f64(js, Some("dram"), r.dram.0);
+    w_f64(js, Some("gpu_util"), r.gpu_util);
+    w_f64(js, Some("freq_mhz"), r.freq_mhz);
+    js.end_obj();
+}
+
+pub fn r_power_reading(j: &Json) -> Result<PowerReading> {
+    Ok(PowerReading {
+        at: Seconds(jf64(j, "at")?),
+        gpu: Watts(jf64(j, "gpu")?),
+        cpu: Watts(jf64(j, "cpu")?),
+        dram: Watts(jf64(j, "dram")?),
+        gpu_util: jf64(j, "gpu_util")?,
+        freq_mhz: jf64(j, "freq_mhz")?,
+    })
+}
+
+pub fn w_power_sample<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, p: &PowerSample) {
+    js.begin_obj(name);
+    w_f64(js, Some("at"), p.at.0);
+    w_f64(js, Some("gpu"), p.gpu.0);
+    w_f64(js, Some("cpu"), p.cpu.0);
+    w_f64(js, Some("dram"), p.dram.0);
+    w_f64(js, Some("gpu_util"), p.gpu_util);
+    js.end_obj();
+}
+
+pub fn r_power_sample(j: &Json) -> Result<PowerSample> {
+    Ok(PowerSample {
+        at: Seconds(jf64(j, "at")?),
+        gpu: Watts(jf64(j, "gpu")?),
+        cpu: Watts(jf64(j, "cpu")?),
+        dram: Watts(jf64(j, "dram")?),
+        gpu_util: jf64(j, "gpu_util")?,
+    })
+}
+
+/// The whole [`crate::telemetry::sampler::PowerSampler`] mutable state,
+/// nested NVML/RAPL counters included.
+pub fn w_sampler<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, s: &SamplerCkpt) {
+    js.begin_obj(name);
+    let ((state, inc), limit_mw) = s.nvml;
+    js.begin_obj(Some("nvml"));
+    w_u64(js, Some("state"), state);
+    w_u64(js, Some("inc"), inc);
+    w_u64(js, Some("limit_mw"), limit_mw);
+    js.end_obj();
+    let (last_true_j, counter) = s.rapl_pkg;
+    js.begin_obj(Some("rapl"));
+    w_f64(js, Some("last_true_j"), last_true_j);
+    js.u64_field(Some("counter"), u64::from(counter));
+    js.end_obj();
+    w_opt_f64(js, Some("next_due"), s.next_due.map(|t| t.0));
+    if let Some((t, c)) = s.last_pkg {
+        js.begin_obj(Some("last_pkg"));
+        w_f64(js, Some("t"), t.0);
+        js.u64_field(Some("c"), u64::from(c));
+        js.end_obj();
+    }
+    js.begin_arr(Some("samples"));
+    for p in &s.samples {
+        w_power_sample(js, None, p);
+    }
+    js.end_arr();
+    w_u64(js, Some("evicted"), s.evicted);
+    w_summary(js, Some("gpu_w"), &s.gpu_w);
+    w_summary(js, Some("total_w"), &s.total_w);
+    js.end_obj();
+}
+
+pub fn r_sampler(j: &Json) -> Result<SamplerCkpt> {
+    let nv = field(j, "nvml")?;
+    let rapl = field(j, "rapl")?;
+    let last_pkg = match j.get("last_pkg") {
+        Some(lp) => Some((Seconds(jf64(lp, "t")?), ju32(lp, "c")?)),
+        None => None,
+    };
+    let mut samples = Vec::new();
+    for p in jarr(j, "samples")? {
+        samples.push(r_power_sample(p)?);
+    }
+    Ok(SamplerCkpt {
+        nvml: ((ju64(nv, "state")?, ju64(nv, "inc")?), ju64(nv, "limit_mw")?),
+        rapl_pkg: (jf64(rapl, "last_true_j")?, ju32(rapl, "counter")?),
+        next_due: jopt_f64(j, "next_due")?.map(Seconds),
+        last_pkg,
+        samples,
+        evicted: ju64(j, "evicted")?,
+        gpu_w: r_summary(field(j, "gpu_w")?)?,
+        total_w: r_summary(field(j, "total_w")?)?,
+    })
+}
+
+pub fn w_policy<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, p: &EnergyPolicy) {
+    js.begin_obj(name);
+    js.str_field(Some("id"), &p.id);
+    js.str_field(Some("qos"), p.qos.as_str());
+    w_f64(js, Some("min_cap_frac"), p.min_cap_frac);
+    w_f64(js, Some("max_cap_frac"), p.max_cap_frac);
+    js.bool_field(Some("enabled"), p.enabled);
+    w_f64(js, Some("max_slowdown"), p.max_slowdown);
+    js.u64_field(Some("lease_rounds"), u64::from(p.lease_rounds));
+    js.end_obj();
+}
+
+pub fn r_policy(j: &Json) -> Result<EnergyPolicy> {
+    let p = EnergyPolicy {
+        id: jstr(j, "id")?.to_string(),
+        qos: QosClass::parse(jstr(j, "qos")?)?,
+        min_cap_frac: jf64(j, "min_cap_frac")?,
+        max_cap_frac: jf64(j, "max_cap_frac")?,
+        enabled: jbool(j, "enabled")?,
+        max_slowdown: jf64(j, "max_slowdown")?,
+        lease_rounds: ju32(j, "lease_rounds")?,
+    };
+    // Any live policy passed `put_policy` validation; re-validating here
+    // rejects corrupt snapshots before they reach the fleet.
+    p.validate()?;
+    Ok(p)
+}
+
+pub fn w_workload<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, w: &WorkloadDescriptor) {
+    js.begin_obj(name);
+    js.str_field(Some("name"), &w.name);
+    w_f64(js, Some("train_flops_per_sample"), w.train_flops_per_sample);
+    w_f64(js, Some("infer_flops_per_sample"), w.infer_flops_per_sample);
+    w_f64(js, Some("train_bytes_per_sample"), w.train_bytes_per_sample);
+    w_f64(js, Some("infer_bytes_per_sample"), w.infer_bytes_per_sample);
+    w_f64(js, Some("host_s_per_batch"), w.host_s_per_batch);
+    w_f64(js, Some("kernel_efficiency"), w.kernel_efficiency);
+    w_f64(js, Some("cpu_util"), w.cpu_util);
+    w_u64(js, Some("params"), w.params);
+    w_f64(js, Some("reference_accuracy"), w.reference_accuracy);
+    js.end_obj();
+}
+
+pub fn r_workload(j: &Json) -> Result<WorkloadDescriptor> {
+    Ok(WorkloadDescriptor {
+        name: jstr(j, "name")?.to_string(),
+        train_flops_per_sample: jf64(j, "train_flops_per_sample")?,
+        infer_flops_per_sample: jf64(j, "infer_flops_per_sample")?,
+        train_bytes_per_sample: jf64(j, "train_bytes_per_sample")?,
+        infer_bytes_per_sample: jf64(j, "infer_bytes_per_sample")?,
+        host_s_per_batch: jf64(j, "host_s_per_batch")?,
+        kernel_efficiency: jf64(j, "kernel_efficiency")?,
+        cpu_util: jf64(j, "cpu_util")?,
+        params: ju64(j, "params")?,
+        reference_accuracy: jf64(j, "reference_accuracy")?,
+    })
+}
+
+pub fn w_kpm<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, k: &KpmReport) {
+    js.begin_obj(name);
+    js.str_field(Some("host"), &k.host);
+    w_f64(js, Some("at"), k.at.0);
+    if let Some(m) = &k.model {
+        js.str_field(Some("model"), m);
+    }
+    w_f64(js, Some("gpu_power_w"), k.gpu_power_w);
+    w_f64(js, Some("cpu_power_w"), k.cpu_power_w);
+    w_f64(js, Some("dram_power_w"), k.dram_power_w);
+    w_f64(js, Some("gpu_util"), k.gpu_util);
+    w_f64(js, Some("cap_frac"), k.cap_frac);
+    w_u64(js, Some("samples_processed"), k.samples_processed);
+    w_f64(js, Some("energy_j"), k.energy_j);
+    w_f64(js, Some("offered_load_per_s"), k.offered_load_per_s);
+    w_f64(js, Some("p99_latency_s"), k.p99_latency_s);
+    w_u64(js, Some("seq"), k.seq);
+    js.end_obj();
+}
+
+pub fn r_kpm(j: &Json) -> Result<KpmReport> {
+    Ok(KpmReport {
+        host: jstr(j, "host")?.to_string(),
+        at: Seconds(jf64(j, "at")?),
+        model: jopt_string(j, "model")?,
+        gpu_power_w: jf64(j, "gpu_power_w")?,
+        cpu_power_w: jf64(j, "cpu_power_w")?,
+        dram_power_w: jf64(j, "dram_power_w")?,
+        gpu_util: jf64(j, "gpu_util")?,
+        cap_frac: jf64(j, "cap_frac")?,
+        samples_processed: ju64(j, "samples_processed")?,
+        energy_j: jf64(j, "energy_j")?,
+        offered_load_per_s: jf64(j, "offered_load_per_s")?,
+        p99_latency_s: jf64(j, "p99_latency_s")?,
+        seq: ju64(j, "seq")?,
+    })
+}
+
+pub fn w_lifecycle<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, e: &LifecycleEvent) {
+    js.begin_obj(name);
+    match e {
+        LifecycleEvent::DataCollected { dataset, samples } => {
+            js.str_field(Some("t"), "data_collected");
+            js.str_field(Some("dataset"), dataset);
+            w_u64(js, Some("samples"), *samples);
+        }
+        LifecycleEvent::TrainingStarted { model, host } => {
+            js.str_field(Some("t"), "training_started");
+            js.str_field(Some("model"), model);
+            js.str_field(Some("host"), host);
+        }
+        LifecycleEvent::TrainingFinished { model, host, accuracy, energy_j } => {
+            js.str_field(Some("t"), "training_finished");
+            js.str_field(Some("model"), model);
+            js.str_field(Some("host"), host);
+            w_f64(js, Some("accuracy"), *accuracy);
+            w_f64(js, Some("energy_j"), *energy_j);
+        }
+        LifecycleEvent::Validated { model, accuracy, passed } => {
+            js.str_field(Some("t"), "validated");
+            js.str_field(Some("model"), model);
+            w_f64(js, Some("accuracy"), *accuracy);
+            js.bool_field(Some("passed"), *passed);
+        }
+        LifecycleEvent::Published { model, version } => {
+            js.str_field(Some("t"), "published");
+            js.str_field(Some("model"), model);
+            js.u64_field(Some("version"), u64::from(*version));
+        }
+        LifecycleEvent::Deployed { model, host, as_xapp } => {
+            js.str_field(Some("t"), "deployed");
+            js.str_field(Some("model"), model);
+            js.str_field(Some("host"), host);
+            js.bool_field(Some("as_xapp"), *as_xapp);
+        }
+        LifecycleEvent::InferenceReport { model, host, samples, latency_s } => {
+            js.str_field(Some("t"), "inference_report");
+            js.str_field(Some("model"), model);
+            js.str_field(Some("host"), host);
+            w_u64(js, Some("samples"), *samples);
+            w_f64(js, Some("latency_s"), *latency_s);
+        }
+        LifecycleEvent::FlaggedForRetraining { model, reason } => {
+            js.str_field(Some("t"), "flagged_for_retraining");
+            js.str_field(Some("model"), model);
+            js.str_field(Some("reason"), reason);
+        }
+        LifecycleEvent::Retired { model } => {
+            js.str_field(Some("t"), "retired");
+            js.str_field(Some("model"), model);
+        }
+    }
+    js.end_obj();
+}
+
+pub fn r_lifecycle(j: &Json) -> Result<LifecycleEvent> {
+    let model = || jstr(j, "model").map(str::to_string);
+    let host = || jstr(j, "host").map(str::to_string);
+    Ok(match jstr(j, "t")? {
+        "data_collected" => LifecycleEvent::DataCollected {
+            dataset: jstr(j, "dataset")?.to_string(),
+            samples: ju64(j, "samples")?,
+        },
+        "training_started" => {
+            LifecycleEvent::TrainingStarted { model: model()?, host: host()? }
+        }
+        "training_finished" => LifecycleEvent::TrainingFinished {
+            model: model()?,
+            host: host()?,
+            accuracy: jf64(j, "accuracy")?,
+            energy_j: jf64(j, "energy_j")?,
+        },
+        "validated" => LifecycleEvent::Validated {
+            model: model()?,
+            accuracy: jf64(j, "accuracy")?,
+            passed: jbool(j, "passed")?,
+        },
+        "published" => LifecycleEvent::Published { model: model()?, version: ju32(j, "version")? },
+        "deployed" => LifecycleEvent::Deployed {
+            model: model()?,
+            host: host()?,
+            as_xapp: jbool(j, "as_xapp")?,
+        },
+        "inference_report" => LifecycleEvent::InferenceReport {
+            model: model()?,
+            host: host()?,
+            samples: ju64(j, "samples")?,
+            latency_s: jf64(j, "latency_s")?,
+        },
+        "flagged_for_retraining" => LifecycleEvent::FlaggedForRetraining {
+            model: model()?,
+            reason: jstr(j, "reason")?.to_string(),
+        },
+        "retired" => LifecycleEvent::Retired { model: model()? },
+        other => anyhow::bail!("unknown lifecycle event tag '{other}'"),
+    })
+}
+
+pub fn w_oran_msg<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, m: &OranMessage) {
+    js.begin_obj(name);
+    match m {
+        OranMessage::PolicyUpdate(p) => {
+            js.str_field(Some("t"), "policy_update");
+            w_policy(js, Some("policy"), p);
+        }
+        OranMessage::PolicyDelete { id } => {
+            js.str_field(Some("t"), "policy_delete");
+            js.str_field(Some("id"), id);
+        }
+        OranMessage::Kpm(k) => {
+            js.str_field(Some("t"), "kpm");
+            w_kpm(js, Some("kpm"), k);
+        }
+        OranMessage::Lifecycle(e) => {
+            js.str_field(Some("t"), "lifecycle");
+            w_lifecycle(js, Some("event"), e);
+        }
+        OranMessage::ProfileRequest { model, host } => {
+            js.str_field(Some("t"), "profile_request");
+            js.str_field(Some("model"), model);
+            js.str_field(Some("host"), host);
+        }
+        OranMessage::ProfileResult {
+            model,
+            host,
+            optimal_cap,
+            est_energy_saving,
+            est_slowdown,
+            profiling_energy_j,
+        } => {
+            js.str_field(Some("t"), "profile_result");
+            js.str_field(Some("model"), model);
+            js.str_field(Some("host"), host);
+            w_f64(js, Some("optimal_cap"), *optimal_cap);
+            w_f64(js, Some("est_energy_saving"), *est_energy_saving);
+            w_f64(js, Some("est_slowdown"), *est_slowdown);
+            w_f64(js, Some("profiling_energy_j"), *profiling_energy_j);
+        }
+    }
+    js.end_obj();
+}
+
+pub fn r_oran_msg(j: &Json) -> Result<OranMessage> {
+    Ok(match jstr(j, "t")? {
+        "policy_update" => OranMessage::PolicyUpdate(r_policy(field(j, "policy")?)?),
+        "policy_delete" => OranMessage::PolicyDelete { id: jstr(j, "id")?.to_string() },
+        "kpm" => OranMessage::Kpm(r_kpm(field(j, "kpm")?)?),
+        "lifecycle" => OranMessage::Lifecycle(r_lifecycle(field(j, "event")?)?),
+        "profile_request" => OranMessage::ProfileRequest {
+            model: jstr(j, "model")?.to_string(),
+            host: jstr(j, "host")?.to_string(),
+        },
+        "profile_result" => OranMessage::ProfileResult {
+            model: jstr(j, "model")?.to_string(),
+            host: jstr(j, "host")?.to_string(),
+            optimal_cap: jf64(j, "optimal_cap")?,
+            est_energy_saving: jf64(j, "est_energy_saving")?,
+            est_slowdown: jf64(j, "est_slowdown")?,
+            profiling_energy_j: jf64(j, "profiling_energy_j")?,
+        },
+        other => anyhow::bail!("unknown O-RAN message tag '{other}'"),
+    })
+}
+
+pub fn w_profile_record<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, r: &ProfileRecord) {
+    js.begin_obj(name);
+    js.str_field(Some("model"), &r.model);
+    js.str_field(Some("host"), &r.host);
+    w_f64(js, Some("optimal_cap"), r.optimal_cap);
+    w_f64(js, Some("est_energy_saving"), r.est_energy_saving);
+    w_f64(js, Some("est_slowdown"), r.est_slowdown);
+    w_f64(js, Some("profiling_energy_j"), r.profiling_energy_j);
+    js.end_obj();
+}
+
+pub fn r_profile_record(j: &Json) -> Result<ProfileRecord> {
+    Ok(ProfileRecord {
+        model: jstr(j, "model")?.to_string(),
+        host: jstr(j, "host")?.to_string(),
+        optimal_cap: jf64(j, "optimal_cap")?,
+        est_energy_saving: jf64(j, "est_energy_saving")?,
+        est_slowdown: jf64(j, "est_slowdown")?,
+        profiling_energy_j: jf64(j, "profiling_energy_j")?,
+    })
+}
+
+fn w_profile_point<W: Write>(js: &mut JsonStream<W>, p: &ProfilePoint) {
+    js.begin_obj(None);
+    w_f64(js, Some("cap_frac"), p.cap_frac);
+    w_f64(js, Some("window"), p.window.0);
+    w_u64(js, Some("steps"), p.steps);
+    w_u64(js, Some("samples"), p.samples);
+    w_f64(js, Some("energy"), p.energy.0);
+    w_f64(js, Some("mean_power"), p.mean_power.0);
+    w_f64(js, Some("energy_per_sample_j"), p.energy_per_sample_j);
+    w_f64(js, Some("time_per_sample_s"), p.time_per_sample_s);
+    w_f64(js, Some("score"), p.score);
+    js.end_obj();
+}
+
+fn r_profile_point(j: &Json) -> Result<ProfilePoint> {
+    Ok(ProfilePoint {
+        cap_frac: jf64(j, "cap_frac")?,
+        window: Seconds(jf64(j, "window")?),
+        steps: ju64(j, "steps")?,
+        samples: ju64(j, "samples")?,
+        energy: Joules(jf64(j, "energy")?),
+        mean_power: Watts(jf64(j, "mean_power")?),
+        energy_per_sample_j: jf64(j, "energy_per_sample_j")?,
+        time_per_sample_s: jf64(j, "time_per_sample_s")?,
+        score: jf64(j, "score")?,
+    })
+}
+
+fn w_fit<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, f: &FitResult) {
+    js.begin_obj(name);
+    js.begin_arr(Some("model"));
+    for v in [f.model.a, f.model.b, f.model.c, f.model.d, f.model.e, f.model.f, f.model.g] {
+        w_f64(js, None, v);
+    }
+    js.end_arr();
+    w_f64(js, Some("rel_error"), f.rel_error);
+    js.bool_field(Some("good_fit"), f.good_fit);
+    js.begin_arr(Some("points"));
+    for (x, y) in &f.points {
+        js.begin_arr(None);
+        w_f64(js, None, *x);
+        w_f64(js, None, *y);
+        js.end_arr();
+    }
+    js.end_arr();
+    js.end_obj();
+}
+
+fn r_fit(j: &Json) -> Result<FitResult> {
+    let m = jarr(j, "model")?;
+    anyhow::ensure!(m.len() == 7, "response model has {} coefficients, expected 7", m.len());
+    let c: Vec<f64> = m.iter().map(vf64).collect::<Result<_>>()?;
+    let mut points = Vec::new();
+    for p in jarr(j, "points")? {
+        let xy = p.as_arr().context("fit point is not an array")?;
+        anyhow::ensure!(xy.len() == 2, "fit point has {} elements", xy.len());
+        points.push((vf64(&xy[0])?, vf64(&xy[1])?));
+    }
+    Ok(FitResult {
+        model: ResponseModel { a: c[0], b: c[1], c: c[2], d: c[3], e: c[4], f: c[5], g: c[6] },
+        rel_error: jf64(j, "rel_error")?,
+        good_fit: jbool(j, "good_fit")?,
+        points,
+    })
+}
+
+pub fn w_profile_outcome<W: Write>(
+    js: &mut JsonStream<W>,
+    name: Option<&str>,
+    o: &ProfileOutcome,
+) {
+    js.begin_obj(name);
+    js.str_field(Some("model"), &o.model);
+    w_f64(js, Some("exponent"), o.criterion.exponent);
+    js.begin_arr(Some("points"));
+    for p in &o.points {
+        w_profile_point(js, p);
+    }
+    js.end_arr();
+    w_fit(js, Some("fit"), &o.fit);
+    w_f64(js, Some("optimal_cap"), o.optimal_cap);
+    w_f64(js, Some("profiling_energy"), o.profiling_energy.0);
+    w_f64(js, Some("idle_power"), o.idle_power.0);
+    w_f64(js, Some("est_energy_saving"), o.est_energy_saving);
+    w_f64(js, Some("est_slowdown"), o.est_slowdown);
+    js.end_obj();
+}
+
+pub fn r_profile_outcome(j: &Json) -> Result<ProfileOutcome> {
+    let mut points = Vec::new();
+    for p in jarr(j, "points")? {
+        points.push(r_profile_point(p)?);
+    }
+    Ok(ProfileOutcome {
+        model: jstr(j, "model")?.to_string(),
+        criterion: EdpCriterion { exponent: jf64(j, "exponent")? },
+        points,
+        fit: r_fit(field(j, "fit")?)?,
+        optimal_cap: jf64(j, "optimal_cap")?,
+        profiling_energy: Joules(jf64(j, "profiling_energy")?),
+        idle_power: Watts(jf64(j, "idle_power")?),
+        est_energy_saving: jf64(j, "est_energy_saving")?,
+        est_slowdown: jf64(j, "est_slowdown")?,
+    })
+}
+
+pub fn w_slot_report<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, r: &SlotReport) {
+    js.begin_obj(name);
+    js.u64_field(Some("slot_in_day"), u64::from(r.slot_in_day));
+    w_f64(js, Some("t0"), r.t0);
+    w_u64(js, Some("offered"), r.offered);
+    w_u64(js, Some("served"), r.served);
+    w_u64(js, Some("dropped"), r.dropped);
+    w_u64(js, Some("late"), r.late);
+    w_u64(js, Some("batches"), r.batches);
+    w_u64(js, Some("batch_samples"), r.batch_samples);
+    w_f64(js, Some("busy_s"), r.busy_s);
+    w_f64(js, Some("energy_j"), r.energy_j);
+    w_f64(js, Some("gpu_busy_power_w"), r.gpu_busy_power_w);
+    w_f64(js, Some("offered_rate_per_s"), r.offered_rate_per_s);
+    w_f64(js, Some("cap_frac"), r.cap_frac);
+    js.end_obj();
+}
+
+pub fn r_slot_report(j: &Json) -> Result<SlotReport> {
+    Ok(SlotReport {
+        slot_in_day: ju32(j, "slot_in_day")?,
+        t0: jf64(j, "t0")?,
+        offered: ju64(j, "offered")?,
+        served: ju64(j, "served")?,
+        dropped: ju64(j, "dropped")?,
+        late: ju64(j, "late")?,
+        batches: ju64(j, "batches")?,
+        batch_samples: ju64(j, "batch_samples")?,
+        busy_s: jf64(j, "busy_s")?,
+        energy_j: jf64(j, "energy_j")?,
+        gpu_busy_power_w: jf64(j, "gpu_busy_power_w")?,
+        offered_rate_per_s: jf64(j, "offered_rate_per_s")?,
+        cap_frac: jf64(j, "cap_frac")?,
+    })
+}
+
+pub fn w_series<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, s: &Series) {
+    js.begin_obj(name);
+    js.str_field(Some("name"), &s.name);
+    js.begin_arr(Some("columns"));
+    for c in &s.columns {
+        js.str_field(None, c);
+    }
+    js.end_arr();
+    js.begin_arr(Some("labels"));
+    for l in &s.labels {
+        js.str_field(None, l);
+    }
+    js.end_arr();
+    js.begin_arr(Some("rows"));
+    for row in &s.rows {
+        js.begin_arr(None);
+        for v in row {
+            w_f64(js, None, *v);
+        }
+        js.end_arr();
+    }
+    js.end_arr();
+    js.end_obj();
+}
+
+pub fn r_series(j: &Json) -> Result<Series> {
+    let strs = |name: &str| -> Result<Vec<String>> {
+        jarr(j, name)?
+            .iter()
+            .map(|v| {
+                v.as_str().map(str::to_string).with_context(|| format!("{name} element"))
+            })
+            .collect()
+    };
+    let mut rows = Vec::new();
+    for row in jarr(j, "rows")? {
+        let cells = row.as_arr().context("series row is not an array")?;
+        rows.push(cells.iter().map(vf64).collect::<Result<Vec<f64>>>()?);
+    }
+    Ok(Series {
+        name: jstr(j, "name")?.to_string(),
+        columns: strs("columns")?,
+        labels: strs("labels")?,
+        rows,
+    })
+}
+
+// ---------------------------------------------------- scenario / faults
+
+pub fn w_scenario_event<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, e: &ScenarioEvent) {
+    js.begin_obj(name);
+    let opt_site = |js: &mut JsonStream<W>, site: &Option<usize>| {
+        if let Some(s) = site {
+            js.u64_field(Some("site"), *s as u64);
+        }
+    };
+    match e {
+        ScenarioEvent::BudgetStep { budget_frac } => {
+            js.str_field(Some("t"), "budget_step");
+            w_f64(js, Some("budget_frac"), *budget_frac);
+        }
+        ScenarioEvent::SiteDown { site } => {
+            js.str_field(Some("t"), "site_down");
+            js.u64_field(Some("site"), *site as u64);
+        }
+        ScenarioEvent::SiteUp { site } => {
+            js.str_field(Some("t"), "site_up");
+            js.u64_field(Some("site"), *site as u64);
+        }
+        ScenarioEvent::SurgeStart { mult, site } => {
+            js.str_field(Some("t"), "surge_start");
+            w_f64(js, Some("mult"), *mult);
+            opt_site(js, site);
+        }
+        ScenarioEvent::SurgeEnd { site } => {
+            js.str_field(Some("t"), "surge_end");
+            opt_site(js, site);
+        }
+        ScenarioEvent::Derate { site, max_cap_frac } => {
+            js.str_field(Some("t"), "derate");
+            js.u64_field(Some("site"), *site as u64);
+            w_f64(js, Some("max_cap_frac"), *max_cap_frac);
+        }
+        ScenarioEvent::DerateEnd { site } => {
+            js.str_field(Some("t"), "derate_end");
+            js.u64_field(Some("site"), *site as u64);
+        }
+    }
+    js.end_obj();
+}
+
+pub fn r_scenario_event(j: &Json) -> Result<ScenarioEvent> {
+    let site = || jusize(j, "site");
+    let opt_site = || -> Result<Option<usize>> {
+        match j.get("site") {
+            Some(v) => Ok(Some(v.as_usize().context("field 'site' is not a usize")?)),
+            None => Ok(None),
+        }
+    };
+    Ok(match jstr(j, "t")? {
+        "budget_step" => ScenarioEvent::BudgetStep { budget_frac: jf64(j, "budget_frac")? },
+        "site_down" => ScenarioEvent::SiteDown { site: site()? },
+        "site_up" => ScenarioEvent::SiteUp { site: site()? },
+        "surge_start" => {
+            ScenarioEvent::SurgeStart { mult: jf64(j, "mult")?, site: opt_site()? }
+        }
+        "surge_end" => ScenarioEvent::SurgeEnd { site: opt_site()? },
+        "derate" => ScenarioEvent::Derate {
+            site: site()?,
+            max_cap_frac: jf64(j, "max_cap_frac")?,
+        },
+        "derate_end" => ScenarioEvent::DerateEnd { site: site()? },
+        other => anyhow::bail!("unknown scenario event tag '{other}'"),
+    })
+}
+
+pub fn w_scenario<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, sc: &Scenario) {
+    js.begin_obj(name);
+    js.str_field(Some("name"), &sc.name);
+    js.u64_field(Some("region_size"), sc.region_size as u64);
+    js.begin_arr(Some("events"));
+    for te in &sc.events {
+        js.begin_obj(None);
+        js.u64_field(Some("round"), u64::from(te.round));
+        w_scenario_event(js, Some("event"), &te.event);
+        js.end_obj();
+    }
+    js.end_arr();
+    js.begin_arr(Some("phases"));
+    for p in &sc.phases {
+        js.begin_obj(None);
+        js.str_field(Some("name"), &p.name);
+        js.u64_field(Some("from_slot"), u64::from(p.from_slot));
+        js.u64_field(Some("to_slot"), u64::from(p.to_slot));
+        js.end_obj();
+    }
+    js.end_arr();
+    js.end_obj();
+}
+
+pub fn r_scenario(j: &Json) -> Result<Scenario> {
+    let mut events = Vec::new();
+    for te in jarr(j, "events")? {
+        events.push(TimedEvent {
+            round: ju32(te, "round")?,
+            event: r_scenario_event(field(te, "event")?)?,
+        });
+    }
+    let mut phases = Vec::new();
+    for p in jarr(j, "phases")? {
+        phases.push(Phase {
+            name: jstr(p, "name")?.to_string(),
+            from_slot: ju32(p, "from_slot")?,
+            to_slot: ju32(p, "to_slot")?,
+        });
+    }
+    Ok(Scenario {
+        name: jstr(j, "name")?.to_string(),
+        events,
+        phases,
+        region_size: jusize(j, "region_size")?,
+    })
+}
+
+pub fn w_fault_ledger<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, l: &FaultLedger) {
+    js.begin_obj(name);
+    w_u64(js, Some("dropped"), l.dropped);
+    w_u64(js, Some("delayed"), l.delayed);
+    w_u64(js, Some("delay_dropped"), l.delay_dropped);
+    w_u64(js, Some("duplicated"), l.duplicated);
+    w_u64(js, Some("reordered"), l.reordered);
+    w_u64(js, Some("corrupted_nan"), l.corrupted_nan);
+    w_u64(js, Some("corrupted_stale"), l.corrupted_stale);
+    w_u64(js, Some("corrupted_nvml"), l.corrupted_nvml);
+    w_u64(js, Some("released"), l.released);
+    js.end_obj();
+}
+
+pub fn r_fault_ledger(j: &Json) -> Result<FaultLedger> {
+    Ok(FaultLedger {
+        dropped: ju64(j, "dropped")?,
+        delayed: ju64(j, "delayed")?,
+        delay_dropped: ju64(j, "delay_dropped")?,
+        duplicated: ju64(j, "duplicated")?,
+        reordered: ju64(j, "reordered")?,
+        corrupted_nan: ju64(j, "corrupted_nan")?,
+        corrupted_stale: ju64(j, "corrupted_stale")?,
+        corrupted_nvml: ju64(j, "corrupted_nvml")?,
+        released: ju64(j, "released")?,
+    })
+}
+
+pub fn w_fault_config<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, c: &FaultConfig) {
+    js.begin_obj(name);
+    w_u64(js, Some("seed"), c.seed);
+    w_f64(js, Some("drop_p"), c.drop_p);
+    w_f64(js, Some("delay_p"), c.delay_p);
+    js.u64_field(Some("max_delay_rounds"), u64::from(c.max_delay_rounds));
+    w_f64(js, Some("dup_p"), c.dup_p);
+    w_f64(js, Some("reorder_p"), c.reorder_p);
+    w_f64(js, Some("kpm_nan_p"), c.kpm_nan_p);
+    w_f64(js, Some("kpm_stale_p"), c.kpm_stale_p);
+    w_f64(js, Some("nvml_fail_p"), c.nvml_fail_p);
+    js.u64_field(Some("start_round"), u64::from(c.start_round));
+    js.u64_field(Some("end_round"), u64::from(c.end_round));
+    js.u64_field(Some("max_held"), c.max_held as u64);
+    js.bool_field(Some("fault_a1"), c.fault_a1);
+    js.bool_field(Some("fault_o1"), c.fault_o1);
+    js.bool_field(Some("fault_o2"), c.fault_o2);
+    js.end_obj();
+}
+
+pub fn r_fault_config(j: &Json) -> Result<FaultConfig> {
+    Ok(FaultConfig {
+        seed: ju64(j, "seed")?,
+        drop_p: jf64(j, "drop_p")?,
+        delay_p: jf64(j, "delay_p")?,
+        max_delay_rounds: ju32(j, "max_delay_rounds")?,
+        dup_p: jf64(j, "dup_p")?,
+        reorder_p: jf64(j, "reorder_p")?,
+        kpm_nan_p: jf64(j, "kpm_nan_p")?,
+        kpm_stale_p: jf64(j, "kpm_stale_p")?,
+        nvml_fail_p: jf64(j, "nvml_fail_p")?,
+        start_round: ju32(j, "start_round")?,
+        end_round: ju32(j, "end_round")?,
+        max_held: jusize(j, "max_held")?,
+        fault_a1: jbool(j, "fault_a1")?,
+        fault_o1: jbool(j, "fault_o1")?,
+        fault_o2: jbool(j, "fault_o2")?,
+    })
+}
+
+// ---------------------------------------------------------- trace events
+
+/// Ledger fate names a fault trace event can carry (see
+/// `FaultPlan::apply`); the checkpoint decoder interns against this set.
+pub const KNOWN_FATES: &[&'static str] = &[
+    "dropped",
+    "delayed",
+    "delay_dropped",
+    "duplicated",
+    "reordered",
+    "corrupted_nan",
+    "corrupted_stale",
+    "corrupted_nvml",
+    "released",
+];
+
+/// O-RAN interface names carried on fault trace events ("-" marks a
+/// release, which has no single interface).
+pub const KNOWN_INTERFACES: &[&'static str] = &["A1", "O1", "O2", "-"];
+
+/// SMO KPM-validation reject reasons (see `Smo::step`).
+pub const KNOWN_KPM_REASONS: &[&'static str] =
+    &["non_finite", "negative_power", "stale_timestamp", "duplicate_seq"];
+
+pub fn w_trace_event<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, e: &TraceEvent) {
+    js.begin_obj(name);
+    w_u64(js, Some("id"), e.id);
+    js.u64_field(Some("round"), u64::from(e.round));
+    if let Some(site) = e.site {
+        js.u64_field(Some("site"), u64::from(site));
+    }
+    js.str_field(Some("kind"), e.data.kind());
+    match &e.data {
+        TraceData::RoundStart | TraceData::Reprofile => {}
+        TraceData::RoundEnd { cap_power_w } => {
+            w_f64(js, Some("cap_power_w"), *cap_power_w);
+        }
+        TraceData::SiteRound { cap_frac, down } => {
+            w_f64(js, Some("cap_frac"), *cap_frac);
+            js.bool_field(Some("down"), *down);
+        }
+        TraceData::Scenario { event, detail } => {
+            w_scenario_event(js, Some("event"), event);
+            js.str_field(Some("detail"), detail);
+        }
+        TraceData::Fault { fate, interface, count } => {
+            js.str_field(Some("fate"), fate);
+            js.str_field(Some("interface"), interface);
+            w_u64(js, Some("count"), *count);
+        }
+        TraceData::KpmReject { host, reason } => {
+            js.str_field(Some("host"), host);
+            js.str_field(Some("reason"), reason);
+        }
+        TraceData::Lifecycle { detail } => {
+            js.str_field(Some("detail"), detail);
+        }
+        TraceData::CapChange { cause, from, to, trigger } => {
+            js.str_field(Some("cause"), cause.as_str());
+            w_f64(js, Some("from"), *from);
+            w_f64(js, Some("to"), *to);
+            w_opt_u64(js, Some("trigger"), *trigger);
+        }
+        TraceData::Quarantine { host, entered } => {
+            js.str_field(Some("host"), host);
+            js.bool_field(Some("entered"), *entered);
+        }
+    }
+    js.end_obj();
+}
+
+pub fn r_trace_event(j: &Json) -> Result<TraceEvent> {
+    let data = match jstr(j, "kind")? {
+        "round_start" => TraceData::RoundStart,
+        "round_end" => TraceData::RoundEnd { cap_power_w: jf64(j, "cap_power_w")? },
+        "site_round" => TraceData::SiteRound {
+            cap_frac: jf64(j, "cap_frac")?,
+            down: jbool(j, "down")?,
+        },
+        "scenario" => TraceData::Scenario {
+            event: r_scenario_event(field(j, "event")?)?,
+            detail: jstr(j, "detail")?.to_string(),
+        },
+        "fault" => TraceData::Fault {
+            fate: intern_static(jstr(j, "fate")?, KNOWN_FATES),
+            interface: intern_static(jstr(j, "interface")?, KNOWN_INTERFACES),
+            count: ju64(j, "count")?,
+        },
+        "kpm_reject" => TraceData::KpmReject {
+            host: jstr(j, "host")?.to_string(),
+            reason: intern_static(jstr(j, "reason")?, KNOWN_KPM_REASONS),
+        },
+        "lifecycle" => TraceData::Lifecycle { detail: jstr(j, "detail")?.to_string() },
+        "cap_change" => {
+            let cause_s = jstr(j, "cause")?;
+            TraceData::CapChange {
+                cause: CapCause::from_str_name(cause_s)
+                    .with_context(|| format!("unknown cap cause '{cause_s}'"))?,
+                from: jf64(j, "from")?,
+                to: jf64(j, "to")?,
+                trigger: jopt_u64(j, "trigger")?,
+            }
+        }
+        "reprofile" => TraceData::Reprofile,
+        "quarantine" => TraceData::Quarantine {
+            host: jstr(j, "host")?.to_string(),
+            entered: jbool(j, "entered")?,
+        },
+        other => anyhow::bail!("unknown trace event kind '{other}'"),
+    };
+    let site = match j.get("site") {
+        Some(v) => Some(
+            u32::try_from(v.as_i64().context("trace site")?)
+                .ok()
+                .context("trace site out of range")?,
+        ),
+        None => None,
+    };
+    Ok(TraceEvent { id: ju64(j, "id")?, round: ju32(j, "round")?, site, data })
+}
+
+// ------------------------------------------------------- catalogue types
+
+fn model_state_str(s: ModelState) -> &'static str {
+    match s {
+        ModelState::Trained => "trained",
+        ModelState::Validated => "validated",
+        ModelState::Published => "published",
+        ModelState::Deployed => "deployed",
+        ModelState::FlaggedForUpdate => "flagged_for_update",
+        ModelState::Retired => "retired",
+    }
+}
+
+fn parse_model_state(s: &str) -> Result<ModelState> {
+    Ok(match s {
+        "trained" => ModelState::Trained,
+        "validated" => ModelState::Validated,
+        "published" => ModelState::Published,
+        "deployed" => ModelState::Deployed,
+        "flagged_for_update" => ModelState::FlaggedForUpdate,
+        "retired" => ModelState::Retired,
+        other => anyhow::bail!("unknown model state '{other}'"),
+    })
+}
+
+pub fn w_catalogue_entry<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, e: &CatalogueEntry) {
+    js.begin_obj(name);
+    js.str_field(Some("name"), &e.name);
+    js.u64_field(Some("version"), u64::from(e.version));
+    js.str_field(Some("state"), model_state_str(e.state));
+    w_f64(js, Some("validation_accuracy"), e.validation_accuracy);
+    w_opt_f64(js, Some("optimal_cap"), e.optimal_cap);
+    if let Some(a) = &e.artifact {
+        js.str_field(Some("artifact"), a);
+    }
+    js.end_obj();
+}
+
+pub fn r_catalogue_entry(j: &Json) -> Result<CatalogueEntry> {
+    Ok(CatalogueEntry {
+        name: jstr(j, "name")?.to_string(),
+        version: ju32(j, "version")?,
+        state: parse_model_state(jstr(j, "state")?)?,
+        validation_accuracy: jf64(j, "validation_accuracy")?,
+        optimal_cap: jopt_f64(j, "optimal_cap")?,
+        artifact: jopt_string(j, "artifact")?,
+    })
+}
+
+// -------------------------------------------------------- traffic config
+
+fn arrival_kind_tag(k: &ArrivalKind) -> &'static str {
+    match k {
+        ArrivalKind::Poisson => "poisson",
+        ArrivalKind::Mmpp { .. } => "mmpp",
+    }
+}
+
+pub fn w_traffic_config<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, t: &TrafficConfig) {
+    js.begin_obj(name);
+    w_u64(js, Some("users_per_site"), t.users_per_site);
+    w_f64(js, Some("requests_per_user_per_day"), t.requests_per_user_per_day);
+    w_f64(js, Some("day_s"), t.day_s);
+    js.u64_field(Some("slots_per_day"), u64::from(t.slots_per_day));
+    js.u64_field(Some("warmup_rounds"), u64::from(t.warmup_rounds));
+    js.u64_field(Some("max_batch"), u64::from(t.max_batch));
+    js.begin_obj(Some("kind"));
+    js.str_field(Some("t"), arrival_kind_tag(&t.kind));
+    if let ArrivalKind::Mmpp { calm_mult, burst_mult, mean_dwell_s } = t.kind {
+        w_f64(js, Some("calm_mult"), calm_mult);
+        w_f64(js, Some("burst_mult"), burst_mult);
+        w_f64(js, Some("mean_dwell_s"), mean_dwell_s);
+    }
+    js.end_obj();
+    js.begin_arr(Some("diurnal"));
+    for w in t.diurnal.normalised_weights() {
+        w_f64(js, None, *w);
+    }
+    js.end_arr();
+    js.begin_obj(Some("slo"));
+    w_f64(js, Some("latency_critical_s"), t.slo.latency_critical_s);
+    w_f64(js, Some("balanced_s"), t.slo.balanced_s);
+    w_f64(js, Some("energy_saver_s"), t.slo.energy_saver_s);
+    js.end_obj();
+    w_u64(js, Some("exact_request_threshold"), t.exact_request_threshold);
+    let path = match t.path {
+        TrafficPath::Auto => "auto",
+        TrafficPath::ForceExact => "force_exact",
+        TrafficPath::ForceAggregate => "force_aggregate",
+    };
+    js.str_field(Some("path"), path);
+    js.end_obj();
+}
+
+pub fn r_traffic_config(j: &Json) -> Result<TrafficConfig> {
+    let k = field(j, "kind")?;
+    let kind = match jstr(k, "t")? {
+        "poisson" => ArrivalKind::Poisson,
+        "mmpp" => ArrivalKind::Mmpp {
+            calm_mult: jf64(k, "calm_mult")?,
+            burst_mult: jf64(k, "burst_mult")?,
+            mean_dwell_s: jf64(k, "mean_dwell_s")?,
+        },
+        other => anyhow::bail!("unknown arrival kind '{other}'"),
+    };
+    let dw = jarr(j, "diurnal")?;
+    anyhow::ensure!(dw.len() == 24, "diurnal profile has {} weights, expected 24", dw.len());
+    let mut weights = [0.0f64; 24];
+    for (i, v) in dw.iter().enumerate() {
+        weights[i] = vf64(v).context("diurnal weight")?;
+    }
+    let slo = field(j, "slo")?;
+    let path = match jstr(j, "path")? {
+        "auto" => TrafficPath::Auto,
+        "force_exact" => TrafficPath::ForceExact,
+        "force_aggregate" => TrafficPath::ForceAggregate,
+        other => anyhow::bail!("unknown traffic path '{other}'"),
+    };
+    Ok(TrafficConfig {
+        users_per_site: ju64(j, "users_per_site")?,
+        requests_per_user_per_day: jf64(j, "requests_per_user_per_day")?,
+        day_s: jf64(j, "day_s")?,
+        slots_per_day: ju32(j, "slots_per_day")?,
+        warmup_rounds: ju32(j, "warmup_rounds")?,
+        max_batch: ju32(j, "max_batch")?,
+        kind,
+        diurnal: DiurnalProfile::from_normalised(weights)?,
+        slo: SloSpec {
+            latency_critical_s: jf64(slo, "latency_critical_s")?,
+            balanced_s: jf64(slo, "balanced_s")?,
+            energy_saver_s: jf64(slo, "energy_saver_s")?,
+        },
+        exact_request_threshold: ju64(j, "exact_request_threshold")?,
+        path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::JsonStream;
+
+    /// Write one object through the streaming writer, parse it back.
+    fn line<F: FnOnce(&mut JsonStream<&mut Vec<u8>>)>(f: F) -> Json {
+        let mut out = Vec::new();
+        let mut js = JsonStream::new(&mut out);
+        js.begin_obj(None);
+        f(&mut js);
+        js.end_obj();
+        js.finish().unwrap();
+        let text = std::str::from_utf8(&out).unwrap();
+        Json::parse(text.trim_end()).unwrap()
+    }
+
+    #[test]
+    fn hex_f64_round_trips_hostile_values() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            -271.25,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::NAN,
+            1.0e-308,
+        ] {
+            let j = line(|js| w_f64(js, Some("x"), v));
+            let back = jf64(&j, "x").unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "value {v}");
+        }
+    }
+
+    #[test]
+    fn hex_u64_round_trips_the_full_range() {
+        for v in [0u64, 1, (1 << 53) + 1, u64::MAX, 0xdead_beef_f00d_cafe] {
+            let j = line(|js| w_u64(js, Some("x"), v));
+            assert_eq!(ju64(&j, "x").unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn bad_hex_is_rejected_not_guessed() {
+        assert!(parse_hex_u64("").is_err());
+        assert!(parse_hex_u64("0123").is_err(), "short literal");
+        assert!(parse_hex_u64("00000000000000zz").is_err(), "non-hex digits");
+        assert!(parse_hex_u64("00000000000000001").is_err(), "too long");
+    }
+
+    #[test]
+    fn options_distinguish_none_from_nan() {
+        let j = line(|js| {
+            w_opt_f64(js, Some("none"), None);
+            w_opt_f64(js, Some("nan"), Some(f64::NAN));
+            w_opt_u64(js, Some("unone"), None);
+            w_opt_u64(js, Some("usome"), Some(7));
+        });
+        assert_eq!(jopt_f64(&j, "none").unwrap(), None);
+        assert!(jopt_f64(&j, "nan").unwrap().unwrap().is_nan());
+        assert_eq!(jopt_u64(&j, "unone").unwrap(), None);
+        assert_eq!(jopt_u64(&j, "usome").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn intern_static_prefers_the_known_table() {
+        let known: &[&'static str] = &["alpha", "beta"];
+        let a = intern_static("alpha", known);
+        assert!(std::ptr::eq(a, known[0]));
+        assert_eq!(intern_static("novel", known), "novel");
+    }
+
+    #[test]
+    fn pcg32_round_trips_mid_stream() {
+        let mut rng = Pcg32::new(42, 7);
+        for _ in 0..13 {
+            rng.next_u32();
+        }
+        let j = line(|js| w_pcg32(js, Some("rng"), &rng));
+        let mut back = r_pcg32(j.req("rng").unwrap()).unwrap();
+        assert_eq!(back.state_parts(), rng.state_parts());
+        assert_eq!(back.next_u32(), rng.next_u32(), "streams continue identically");
+    }
+
+    #[test]
+    fn summary_round_trips_including_empty() {
+        let mut s = StreamingSummary::new();
+        for x in [1.0, -3.5, 2.25] {
+            s.push(x);
+        }
+        for orig in [s, StreamingSummary::new()] {
+            let j = line(|js| w_summary(js, Some("s"), &orig));
+            let back = r_summary(j.req("s").unwrap()).unwrap();
+            assert_eq!(back.state_parts(), orig.state_parts());
+        }
+    }
+
+    #[test]
+    fn histogram_round_trips_sparsely() {
+        let mut h = LatencyHistogram::new();
+        for v in [0.001, 0.25, 4.0, f64::NAN, 1.0e9] {
+            h.record(v);
+        }
+        let j = line(|js| w_hist(js, Some("h"), &h));
+        let back = r_hist(j.req("h").unwrap()).unwrap();
+        let orig_bins: Vec<(usize, u64)> = h.occupied_bins().collect();
+        let back_bins: Vec<(usize, u64)> = back.occupied_bins().collect();
+        assert_eq!(back_bins, orig_bins);
+        assert_eq!(back.non_finite(), h.non_finite());
+    }
+
+    #[test]
+    fn policy_round_trips() {
+        let p = EnergyPolicy {
+            id: "p-9".into(),
+            qos: QosClass::LatencyCritical,
+            min_cap_frac: 0.35,
+            max_cap_frac: 0.9,
+            enabled: true,
+            max_slowdown: 1.07,
+            lease_rounds: 6,
+        };
+        let j = line(|js| w_policy(js, Some("p"), &p));
+        assert_eq!(r_policy(j.req("p").unwrap()).unwrap(), p);
+    }
+
+    #[test]
+    fn kpm_round_trips_with_and_without_model() {
+        for model in [Some("ResNet".to_string()), None] {
+            let k = KpmReport {
+                host: "site03".into(),
+                at: Seconds(1234.5),
+                model,
+                gpu_power_w: 151.25,
+                cpu_power_w: f64::NAN,
+                dram_power_w: 24.0,
+                gpu_util: 0.83,
+                cap_frac: 0.7,
+                samples_processed: (1 << 54) + 3,
+                energy_j: -0.0,
+                offered_load_per_s: 12.5,
+                p99_latency_s: 0.04,
+                seq: u64::MAX,
+            };
+            let j = line(|js| w_kpm(js, Some("k"), &k));
+            let back = r_kpm(j.req("k").unwrap()).unwrap();
+            // NaN breaks derived PartialEq; compare the exact bits via Debug
+            // of bit-faithful fields plus the NaN field separately.
+            assert!(back.cpu_power_w.is_nan());
+            assert_eq!(back.energy_j.to_bits(), k.energy_j.to_bits(), "-0.0 preserved");
+            assert_eq!(back.samples_processed, k.samples_processed);
+            assert_eq!(back.seq, k.seq);
+            assert_eq!(back.host, k.host);
+            assert_eq!(back.model, k.model);
+        }
+    }
+
+    #[test]
+    fn lifecycle_events_round_trip() {
+        let events = vec![
+            LifecycleEvent::DataCollected { dataset: "cifar10".into(), samples: 50_000 },
+            LifecycleEvent::TrainingStarted { model: "m".into(), host: "h".into() },
+            LifecycleEvent::TrainingFinished {
+                model: "m".into(),
+                host: "h".into(),
+                accuracy: 0.97,
+                energy_j: 1.5e6,
+            },
+            LifecycleEvent::Validated { model: "m".into(), accuracy: 0.97, passed: true },
+            LifecycleEvent::Published { model: "m".into(), version: 3 },
+            LifecycleEvent::Deployed { model: "m".into(), host: "h".into(), as_xapp: false },
+            LifecycleEvent::InferenceReport {
+                model: "m".into(),
+                host: "h".into(),
+                samples: 10,
+                latency_s: 0.01,
+            },
+            LifecycleEvent::FlaggedForRetraining { model: "m".into(), reason: "drift".into() },
+            LifecycleEvent::Retired { model: "m".into() },
+        ];
+        for e in events {
+            let j = line(|js| w_lifecycle(js, Some("e"), &e));
+            assert_eq!(r_lifecycle(j.req("e").unwrap()).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn oran_messages_round_trip() {
+        let msgs = vec![
+            OranMessage::PolicyUpdate(EnergyPolicy::default_policy()),
+            OranMessage::PolicyDelete { id: "frost-default".into() },
+            OranMessage::Lifecycle(LifecycleEvent::Retired { model: "m".into() }),
+            OranMessage::ProfileRequest { model: "m".into(), host: "h".into() },
+            OranMessage::ProfileResult {
+                model: "m".into(),
+                host: "h".into(),
+                optimal_cap: 0.65,
+                est_energy_saving: 0.2,
+                est_slowdown: 1.04,
+                profiling_energy_j: 4.2e4,
+            },
+        ];
+        for m in msgs {
+            let j = line(|js| w_oran_msg(js, Some("m"), &m));
+            assert_eq!(r_oran_msg(j.req("m").unwrap()).unwrap(), m);
+        }
+        // Kpm separately (NaN-free payload → PartialEq works).
+        let k = KpmReport {
+            host: "s".into(),
+            at: Seconds(1.0),
+            model: None,
+            gpu_power_w: 100.0,
+            cpu_power_w: 50.0,
+            dram_power_w: 24.0,
+            gpu_util: 0.5,
+            cap_frac: 1.0,
+            samples_processed: 5,
+            energy_j: 10.0,
+            offered_load_per_s: 0.0,
+            p99_latency_s: 0.0,
+            seq: 1,
+        };
+        let m = OranMessage::Kpm(k);
+        let j = line(|js| w_oran_msg(js, Some("m"), &m));
+        assert_eq!(r_oran_msg(j.req("m").unwrap()).unwrap(), m);
+    }
+
+    #[test]
+    fn profile_outcome_round_trips_via_debug_identity() {
+        let o = ProfileOutcome {
+            model: "ResNet".into(),
+            criterion: EdpCriterion { exponent: 2.0 },
+            points: vec![ProfilePoint {
+                cap_frac: 0.6,
+                window: Seconds(30.0),
+                steps: 123,
+                samples: 15_744,
+                energy: Joules(5_000.5),
+                mean_power: Watts(166.7),
+                energy_per_sample_j: 0.317,
+                time_per_sample_s: 0.0019,
+                score: 1.15e-3,
+            }],
+            fit: FitResult {
+                model: ResponseModel {
+                    a: 1.0,
+                    b: -2.0,
+                    c: 3.0,
+                    d: -0.0,
+                    e: 5.5,
+                    f: 6.25,
+                    g: -7.0,
+                },
+                rel_error: 0.012,
+                good_fit: true,
+                points: vec![(0.3, 1.2), (1.0, 1.0)],
+            },
+            optimal_cap: 0.62,
+            profiling_energy: Joules(4.0e4),
+            idle_power: Watts(38.0),
+            est_energy_saving: 0.21,
+            est_slowdown: 1.05,
+        };
+        let j = line(|js| w_profile_outcome(js, Some("o"), &o));
+        let back = r_profile_outcome(j.req("o").unwrap()).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{o:?}"));
+    }
+
+    #[test]
+    fn slot_report_and_series_round_trip() {
+        let r = SlotReport {
+            slot_in_day: 17,
+            t0: 2_550.0,
+            offered: 120_345,
+            served: 120_000,
+            dropped: 300,
+            late: 45,
+            batches: 1_900,
+            batch_samples: 120_000,
+            busy_s: 88.25,
+            energy_j: 1.3e4,
+            gpu_busy_power_w: 147.0,
+            offered_rate_per_s: 802.3,
+            cap_frac: 0.75,
+        };
+        let j = line(|js| w_slot_report(js, Some("r"), &r));
+        assert_eq!(r_slot_report(j.req("r").unwrap()).unwrap(), r);
+
+        let s = Series {
+            name: "chaos".into(),
+            columns: vec!["round".into(), "cap_w".into()],
+            rows: vec![vec![1.0, 600.0], vec![2.0, 580.5]],
+            labels: vec!["a".into(), "b".into()],
+        };
+        let j = line(|js| w_series(js, Some("s"), &s));
+        assert_eq!(r_series(j.req("s").unwrap()).unwrap(), s);
+    }
+
+    #[test]
+    fn scenario_events_round_trip() {
+        let events = vec![
+            ScenarioEvent::BudgetStep { budget_frac: 0.6 },
+            ScenarioEvent::SiteDown { site: 3 },
+            ScenarioEvent::SiteUp { site: 3 },
+            ScenarioEvent::SurgeStart { mult: 2.5, site: Some(1) },
+            ScenarioEvent::SurgeStart { mult: 1.8, site: None },
+            ScenarioEvent::SurgeEnd { site: None },
+            ScenarioEvent::SurgeEnd { site: Some(2) },
+            ScenarioEvent::Derate { site: 0, max_cap_frac: 0.55 },
+            ScenarioEvent::DerateEnd { site: 0 },
+        ];
+        for e in &events {
+            let j = line(|js| w_scenario_event(js, Some("e"), e));
+            assert_eq!(r_scenario_event(j.req("e").unwrap()).unwrap(), *e);
+        }
+        let sc = Scenario {
+            name: "grid-step".into(),
+            events: vec![TimedEvent { round: 9, event: events[0] }],
+            phases: vec![Phase { name: "pre".into(), from_slot: 0, to_slot: 7 }],
+            region_size: 4,
+        };
+        let j = line(|js| w_scenario(js, Some("sc"), &sc));
+        assert_eq!(r_scenario(j.req("sc").unwrap()).unwrap(), sc);
+    }
+
+    #[test]
+    fn fault_config_and_ledger_round_trip() {
+        let c = FaultConfig {
+            seed: 0xFA57,
+            drop_p: 0.05,
+            delay_p: 0.1,
+            max_delay_rounds: 2,
+            dup_p: 0.02,
+            reorder_p: 0.08,
+            kpm_nan_p: 0.04,
+            kpm_stale_p: 0.04,
+            nvml_fail_p: 0.03,
+            start_round: 2,
+            end_round: 40,
+            max_held: 256,
+            fault_a1: true,
+            fault_o1: true,
+            fault_o2: false,
+        };
+        let j = line(|js| w_fault_config(js, Some("c"), &c));
+        assert_eq!(r_fault_config(j.req("c").unwrap()).unwrap(), c);
+
+        let l = FaultLedger {
+            dropped: 3,
+            delayed: 5,
+            delay_dropped: 1,
+            duplicated: 2,
+            reordered: 4,
+            corrupted_nan: 1,
+            corrupted_stale: 2,
+            corrupted_nvml: 1,
+            released: 5,
+        };
+        let j = line(|js| w_fault_ledger(js, Some("l"), &l));
+        assert_eq!(r_fault_ledger(j.req("l").unwrap()).unwrap(), l);
+    }
+
+    #[test]
+    fn trace_events_round_trip_across_every_kind() {
+        let events = vec![
+            TraceEvent { id: 1, round: 1, site: None, data: TraceData::RoundStart },
+            TraceEvent {
+                id: 2,
+                round: 1,
+                site: Some(0),
+                data: TraceData::SiteRound { cap_frac: 0.8, down: false },
+            },
+            TraceEvent {
+                id: 3,
+                round: 1,
+                site: Some(2),
+                data: TraceData::CapChange {
+                    cause: CapCause::WaterFill,
+                    from: 1.0,
+                    to: 0.6,
+                    trigger: Some(1),
+                },
+            },
+            TraceEvent {
+                id: 4,
+                round: 1,
+                site: None,
+                data: TraceData::CapChange {
+                    cause: CapCause::Recovery,
+                    from: 0.6,
+                    to: 1.0,
+                    trigger: None,
+                },
+            },
+            TraceEvent {
+                id: 5,
+                round: 2,
+                site: Some(1),
+                data: TraceData::Scenario {
+                    event: ScenarioEvent::SiteDown { site: 1 },
+                    detail: "site 1 down".into(),
+                },
+            },
+            TraceEvent {
+                id: 6,
+                round: 2,
+                site: None,
+                data: TraceData::Fault { fate: "delayed", interface: "O1", count: 2 },
+            },
+            TraceEvent {
+                id: 7,
+                round: 2,
+                site: Some(3),
+                data: TraceData::KpmReject { host: "site03".into(), reason: "duplicate_seq" },
+            },
+            TraceEvent {
+                id: 8,
+                round: 2,
+                site: None,
+                data: TraceData::Lifecycle { detail: "published m v2".into() },
+            },
+            TraceEvent { id: 9, round: 3, site: Some(0), data: TraceData::Reprofile },
+            TraceEvent {
+                id: 10,
+                round: 3,
+                site: Some(0),
+                data: TraceData::Quarantine { host: "site00".into(), entered: true },
+            },
+            TraceEvent {
+                id: 11,
+                round: 3,
+                site: None,
+                data: TraceData::RoundEnd { cap_power_w: 612.5 },
+            },
+        ];
+        for e in &events {
+            let j = line(|js| w_trace_event(js, Some("e"), e));
+            assert_eq!(r_trace_event(j.req("e").unwrap()).unwrap(), *e);
+        }
+    }
+
+    #[test]
+    fn catalogue_entries_round_trip() {
+        let entries = vec![
+            CatalogueEntry {
+                name: "ResNet".into(),
+                version: 2,
+                state: ModelState::Deployed,
+                validation_accuracy: 0.955,
+                optimal_cap: Some(0.62),
+                artifact: Some("resnet_mini".into()),
+            },
+            CatalogueEntry {
+                name: "LeNet".into(),
+                version: 1,
+                state: ModelState::Trained,
+                validation_accuracy: 0.754,
+                optimal_cap: None,
+                artifact: None,
+            },
+        ];
+        for e in &entries {
+            let j = line(|js| w_catalogue_entry(js, Some("e"), e));
+            assert_eq!(r_catalogue_entry(j.req("e").unwrap()).unwrap(), *e);
+        }
+        assert!(parse_model_state("warp").is_err());
+    }
+
+    #[test]
+    fn traffic_config_round_trips_both_kinds() {
+        let mut t = TrafficConfig::default();
+        t.kind = ArrivalKind::bursty();
+        t.path = crate::traffic::TrafficPath::ForceAggregate;
+        for cfg in [TrafficConfig::default(), t] {
+            let j = line(|js| w_traffic_config(js, Some("t"), &cfg));
+            let back = r_traffic_config(j.req("t").unwrap()).unwrap();
+            assert_eq!(back.users_per_site, cfg.users_per_site);
+            assert_eq!(back.kind, cfg.kind);
+            assert_eq!(back.path, cfg.path);
+            assert_eq!(
+                back.diurnal.normalised_weights(),
+                cfg.diurnal.normalised_weights(),
+                "weights survive bit-exactly without renormalisation"
+            );
+            assert_eq!(back.slo, cfg.slo);
+            assert_eq!(back.exact_request_threshold, cfg.exact_request_threshold);
+        }
+    }
+
+    #[test]
+    fn sampler_ckpt_round_trips() {
+        let mut gpu_w = StreamingSummary::new();
+        gpu_w.push(100.0);
+        let s = SamplerCkpt {
+            nvml: ((0x1234, 0x5678), 150_000),
+            rapl_pkg: (1234.5, 0xDEAD_BEEF),
+            next_due: Some(Seconds(17.3)),
+            last_pkg: Some((Seconds(17.2), 42)),
+            samples: vec![PowerSample {
+                at: Seconds(17.2),
+                gpu: Watts(140.0),
+                cpu: Watts(60.0),
+                dram: Watts(24.0),
+                gpu_util: 0.9,
+            }],
+            evicted: 3,
+            gpu_w,
+            total_w: StreamingSummary::new(),
+        };
+        let j = line(|js| w_sampler(js, Some("s"), &s));
+        let back = r_sampler(j.req("s").unwrap()).unwrap();
+        assert_eq!(back.nvml, s.nvml);
+        assert_eq!(back.rapl_pkg, s.rapl_pkg);
+        assert_eq!(back.next_due, s.next_due);
+        assert_eq!(back.last_pkg, s.last_pkg);
+        assert_eq!(back.samples, s.samples);
+        assert_eq!(back.evicted, s.evicted);
+        assert_eq!(back.gpu_w.state_parts(), s.gpu_w.state_parts());
+
+        // And the None/absent cases.
+        let none = SamplerCkpt { next_due: None, last_pkg: None, ..s };
+        let j = line(|js| w_sampler(js, Some("s"), &none));
+        let back = r_sampler(j.req("s").unwrap()).unwrap();
+        assert_eq!(back.next_due, None);
+        assert_eq!(back.last_pkg, None);
+    }
+}

@@ -1,0 +1,586 @@
+//! Snapshot container IO (DESIGN.md §15): the hashing writer, atomic
+//! file handling, keep-last-K retention, and the validating lazy reader.
+//!
+//! The write path streams every section line through a [`HashingWriter`]
+//! so the footer checksum costs no second pass; the read path validates
+//! the whole container up front (UTF-8, trailing newline, footer
+//! checksum, header version) and then parses individual sections lazily
+//! — a resume only pays for the sections it touches, and a corrupt file
+//! can never be *half*-restored.
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::obs::export::JsonStream;
+use crate::util::Json;
+
+use super::codec::{hex_u64, parse_hex_u64};
+use super::FORMAT_VERSION;
+
+/// Snapshot file extension (`snap-r<round:06>.frostsnap`).
+pub const SNAP_EXT: &str = "frostsnap";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over a byte slice — the same constants the bus's edge hash
+/// uses, kept dependency-free and byte-order independent.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A [`Write`] adapter folding every written byte into a running
+/// FNV-1a 64 digest.  The snapshot writer threads all section lines
+/// through it; the footer itself is written to the inner writer after
+/// [`HashingWriter::into_parts`], so the digest covers exactly the bytes
+/// that precede the footer line.
+pub struct HashingWriter<W: Write> {
+    inner: W,
+    hash: u64,
+}
+
+impl<W: Write> HashingWriter<W> {
+    pub fn new(inner: W) -> HashingWriter<W> {
+        HashingWriter { inner, hash: FNV_OFFSET }
+    }
+
+    /// Digest of everything written so far.
+    pub fn digest(&self) -> u64 {
+        self.hash
+    }
+
+    pub fn into_parts(self) -> (W, u64) {
+        (self.inner, self.hash)
+    }
+}
+
+impl<W: Write> Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        for &b in &buf[..n] {
+            self.hash ^= u64::from(b);
+            self.hash = self.hash.wrapping_mul(FNV_PRIME);
+        }
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Identity of a snapshot: what kind of run it belongs to and where in
+/// the run it was taken.  Serialised as the first line of the container
+/// and validated (version first) before any section parses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotHeader {
+    /// Driver kind: `"fleet"`, `"scenario"` or `"chaos"` — `frost resume`
+    /// dispatches on it.
+    pub kind: String,
+    /// Round the snapshot was taken at (state is *after* this round).
+    pub round: u32,
+    /// The run's fleet seed.
+    pub seed: u64,
+    /// Number of sites (cross-checked against the restored config).
+    pub sites: usize,
+    /// Scenario or chaos preset name ("" for a plain fleet run).
+    pub preset: String,
+}
+
+/// Streaming snapshot writer: one JSONL section per [`SnapshotWriter::section`]
+/// call, each line hashed as it is written, the checksum footer appended
+/// by [`SnapshotWriter::finish`].
+pub struct SnapshotWriter<W: Write> {
+    out: HashingWriter<W>,
+}
+
+impl<W: Write> SnapshotWriter<W> {
+    /// Open a writer and emit the header line.
+    pub fn new(out: W, header: &SnapshotHeader) -> io::Result<SnapshotWriter<W>> {
+        let mut sw = SnapshotWriter { out: HashingWriter::new(out) };
+        sw.section("header", |js| {
+            js.u64_field(Some("version"), u64::from(FORMAT_VERSION));
+            js.str_field(Some("kind"), &header.kind);
+            js.u64_field(Some("round"), u64::from(header.round));
+            js.str_field(Some("seed"), &hex_u64(header.seed));
+            js.u64_field(Some("sites"), header.sites as u64);
+            js.str_field(Some("preset"), &header.preset);
+        })?;
+        Ok(sw)
+    }
+
+    /// Write one section line: `{"s":"<name>", …body fields…}`.  The
+    /// closure receives the open [`JsonStream`] positioned inside the
+    /// object, after the `"s"` tag.
+    pub fn section<F>(&mut self, name: &str, body: F) -> io::Result<()>
+    where
+        F: FnOnce(&mut JsonStream<&mut HashingWriter<W>>),
+    {
+        let mut js = JsonStream::new(&mut self.out);
+        js.begin_obj(None);
+        js.str_field(Some("s"), name);
+        body(&mut js);
+        js.end_obj();
+        js.finish().map(|_| ())
+    }
+
+    /// Append the checksum footer (written past the hasher, so the
+    /// stored digest covers every byte before the footer line) and
+    /// return the inner writer.
+    pub fn finish(self) -> io::Result<W> {
+        let (mut out, digest) = self.out.into_parts();
+        let mut js = JsonStream::new(&mut out);
+        js.begin_obj(None);
+        js.str_field(Some("s"), "footer");
+        js.str_field(Some("fnv64"), &hex_u64(digest));
+        js.end_obj();
+        js.finish()?;
+        Ok(out)
+    }
+}
+
+/// Canonical snapshot path for a round: zero-padded so lexicographic
+/// directory order is round order.
+pub fn snapshot_path(dir: &Path, round: u32) -> PathBuf {
+    dir.join(format!("snap-r{round:06}.{SNAP_EXT}"))
+}
+
+/// Write one snapshot atomically: temp file in `dir`, fsync, rename over
+/// the final name, fsync the directory.  A crash at any point leaves the
+/// directory with either the old snapshot set or the completed new file
+/// — never a torn `.frostsnap`.
+pub fn write_snapshot_file<F>(dir: &Path, header: &SnapshotHeader, body: F) -> Result<PathBuf>
+where
+    F: FnOnce(&mut SnapshotWriter<BufWriter<File>>) -> Result<()>,
+{
+    fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let path = snapshot_path(dir, header.round);
+    let tmp = dir.join(format!("snap-r{:06}.tmp", header.round));
+    let file =
+        File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+    let mut sw = SnapshotWriter::new(BufWriter::new(file), header)
+        .with_context(|| format!("write snapshot header to {}", tmp.display()))?;
+    body(&mut sw)?;
+    let buf = sw
+        .finish()
+        .with_context(|| format!("write snapshot footer to {}", tmp.display()))?;
+    let file = buf.into_inner().map_err(|e| e.into_error()).context("flush snapshot")?;
+    file.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    drop(file);
+    fs::rename(&tmp, &path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    // Make the rename itself durable.  Directory fsync is best-effort:
+    // some filesystems refuse to sync a directory handle, and the rename
+    // above already guarantees no torn file exists either way.
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(path)
+}
+
+/// All snapshot files in `dir`, oldest → newest (a missing directory is
+/// an empty set, not an error).  `.tmp` leftovers from a crashed write
+/// are excluded by the extension filter.
+pub fn list_snapshots(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut snaps = Vec::new();
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(snaps),
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("read checkpoint dir {}", dir.display()))
+        }
+    };
+    for entry in rd {
+        let p = entry
+            .with_context(|| format!("read checkpoint dir {}", dir.display()))?
+            .path();
+        let named_like_snapshot = p.extension().and_then(|e| e.to_str()) == Some(SNAP_EXT)
+            && p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("snap-r"))
+                .unwrap_or(false);
+        if named_like_snapshot && p.is_file() {
+            snaps.push(p);
+        }
+    }
+    snaps.sort();
+    Ok(snaps)
+}
+
+/// Keep-last-K retention: delete all but the newest `keep` snapshots.
+/// Returns the removed paths (for logging/CI artifact bookkeeping).
+pub fn prune_snapshots(dir: &Path, keep: usize) -> Result<Vec<PathBuf>> {
+    let keep = keep.max(1);
+    let mut snaps = list_snapshots(dir)?;
+    let mut removed = Vec::new();
+    while snaps.len() > keep {
+        let p = snaps.remove(0);
+        fs::remove_file(&p)
+            .with_context(|| format!("remove old snapshot {}", p.display()))?;
+        removed.push(p);
+    }
+    Ok(removed)
+}
+
+/// Cheap section-name extraction.  Every line the writer emits starts
+/// `{"s":"<name>"` with an escape-free name; anything else falls back to
+/// a full parse in the caller.
+fn section_name(line: &str) -> Option<&str> {
+    let rest = line.strip_prefix("{\"s\":\"")?;
+    let end = rest.find('"')?;
+    let name = &rest[..end];
+    if name.ends_with('\\') {
+        return None; // escaped quote — not one of ours; full-parse instead
+    }
+    Some(name)
+}
+
+/// A loaded, validated snapshot.  Loading verifies the container as a
+/// whole (checksum, footer, header version); section payloads stay as
+/// raw lines and parse lazily on access, so a resume pays only for what
+/// it reads.
+#[derive(Debug)]
+pub struct Snapshot {
+    pub path: PathBuf,
+    pub header: SnapshotHeader,
+    /// Raw body lines (header included, footer excluded), file order.
+    lines: Vec<String>,
+    /// `(section name, index into lines)`, file order.
+    index: Vec<(String, usize)>,
+}
+
+impl Snapshot {
+    /// Load and validate one snapshot file.  Truncated, corrupt, or
+    /// version-mismatched files are rejected *in full* — there is no
+    /// partial restore path.
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let bytes =
+            fs::read(path).with_context(|| format!("read snapshot {}", path.display()))?;
+        Snapshot::from_bytes(path.to_path_buf(), bytes)
+    }
+
+    fn from_bytes(path: PathBuf, bytes: Vec<u8>) -> Result<Snapshot> {
+        let text = String::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("snapshot {} is not UTF-8", path.display()))?;
+        anyhow::ensure!(
+            text.ends_with('\n'),
+            "snapshot {} is truncated (no trailing newline)",
+            path.display()
+        );
+        let mut lines: Vec<&str> = text[..text.len() - 1].split('\n').collect();
+        anyhow::ensure!(lines.len() >= 2, "snapshot {} is too short", path.display());
+        let footer_line = lines.pop().expect("length checked above");
+
+        // 1. Footer + checksum over every byte before the footer line.
+        let footer = Json::parse(footer_line).map_err(|e| {
+            anyhow::anyhow!("snapshot {} footer unreadable: {e}", path.display())
+        })?;
+        anyhow::ensure!(
+            footer.get("s").and_then(|s| s.as_str()) == Some("footer"),
+            "snapshot {} is truncated (last line is not the footer)",
+            path.display()
+        );
+        let want =
+            parse_hex_u64(footer.req("fnv64")?.as_str().context("footer fnv64")?)
+                .context("footer fnv64")?;
+        let hashed = text.len() - footer_line.len() - 1;
+        let got = fnv1a64(&text.as_bytes()[..hashed]);
+        anyhow::ensure!(
+            got == want,
+            "snapshot {} fails its checksum (stored {}, computed {}) — rejecting the file",
+            path.display(),
+            hex_u64(want),
+            hex_u64(got)
+        );
+
+        // 2. Header, version first.
+        let header_json = Json::parse(lines[0]).map_err(|e| {
+            anyhow::anyhow!("snapshot {} header unreadable: {e}", path.display())
+        })?;
+        anyhow::ensure!(
+            header_json.get("s").and_then(|s| s.as_str()) == Some("header"),
+            "snapshot {} does not start with a header line",
+            path.display()
+        );
+        let version = header_json.req("version")?.as_i64().context("header version")?;
+        anyhow::ensure!(
+            version == i64::from(FORMAT_VERSION),
+            "snapshot {} has format version {version}; this build reads version {FORMAT_VERSION}",
+            path.display()
+        );
+        let header = SnapshotHeader {
+            kind: header_json.req("kind")?.as_str().context("header kind")?.to_string(),
+            round: u32::try_from(
+                header_json.req("round")?.as_i64().context("header round")?,
+            )
+            .ok()
+            .context("header round out of range")?,
+            seed: parse_hex_u64(
+                header_json.req("seed")?.as_str().context("header seed")?,
+            )
+            .context("header seed")?,
+            sites: header_json.req("sites")?.as_usize().context("header sites")?,
+            preset: header_json
+                .req("preset")?
+                .as_str()
+                .context("header preset")?
+                .to_string(),
+        };
+
+        // 3. Section index: cheap prefix extraction, full parse fallback.
+        let mut index = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            let name = match section_name(line) {
+                Some(n) => n.to_string(),
+                None => Json::parse(line)
+                    .map_err(|e| {
+                        anyhow::anyhow!(
+                            "snapshot {} line {} unreadable: {e}",
+                            path.display(),
+                            i + 1
+                        )
+                    })?
+                    .req("s")?
+                    .as_str()
+                    .context("section name")?
+                    .to_string(),
+            };
+            index.push((name, i));
+        }
+        let lines = lines.into_iter().map(str::to_string).collect();
+        Ok(Snapshot { path, header, lines, index })
+    }
+
+    /// Parse the unique section `name`; error if absent or duplicated.
+    pub fn section(&self, name: &str) -> Result<Json> {
+        let mut hits = self.index.iter().filter(|(n, _)| n.as_str() == name);
+        let (_, i) = hits.next().with_context(|| {
+            format!("snapshot {} has no '{name}' section", self.path.display())
+        })?;
+        anyhow::ensure!(
+            hits.next().is_none(),
+            "snapshot {} has multiple '{name}' sections",
+            self.path.display()
+        );
+        self.parse_line(*i)
+    }
+
+    /// Parse every section named `name`, in file order (used for
+    /// repeated per-site sections).
+    pub fn sections(&self, name: &str) -> Result<Vec<Json>> {
+        self.index
+            .iter()
+            .filter(|(n, _)| n.as_str() == name)
+            .map(|(_, i)| self.parse_line(*i))
+            .collect()
+    }
+
+    pub fn has_section(&self, name: &str) -> bool {
+        self.index.iter().any(|(n, _)| n.as_str() == name)
+    }
+
+    fn parse_line(&self, i: usize) -> Result<Json> {
+        Json::parse(&self.lines[i]).map_err(|e| {
+            anyhow::anyhow!("snapshot {} line {}: {e}", self.path.display(), i + 1)
+        })
+    }
+}
+
+/// Load the newest loadable snapshot in `dir`, walking newest → oldest
+/// past files that fail validation — the recovery path after a crash
+/// corrupted the most recent write.  Returns the snapshot plus every
+/// rejected `(path, error)` pair so callers can surface the fallback.
+pub fn load_latest(dir: &Path) -> Result<(Snapshot, Vec<(PathBuf, anyhow::Error)>)> {
+    let snaps = list_snapshots(dir)?;
+    anyhow::ensure!(!snaps.is_empty(), "no snapshots in {}", dir.display());
+    let mut rejected = Vec::new();
+    for p in snaps.iter().rev() {
+        match Snapshot::load(p) {
+            Ok(s) => return Ok((s, rejected)),
+            Err(e) => rejected.push((p.clone(), e)),
+        }
+    }
+    let detail = rejected
+        .iter()
+        .map(|(p, e)| format!("  {}: {e:#}", p.display()))
+        .collect::<Vec<_>>()
+        .join("\n");
+    anyhow::bail!("every snapshot in {} failed to load:\n{detail}", dir.display())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header(round: u32) -> SnapshotHeader {
+        SnapshotHeader {
+            kind: "fleet".into(),
+            round,
+            seed: 0x0102_0304_0506_0708,
+            sites: 4,
+            preset: String::new(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("frost-ckpt-io-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_one(dir: &Path, round: u32) -> PathBuf {
+        write_snapshot_file(dir, &header(round), |sw| {
+            sw.section("alpha", |js| {
+                js.str_field(Some("v"), "first");
+            })?;
+            sw.section("site", |js| {
+                js.u64_field(Some("i"), 0);
+            })?;
+            sw.section("site", |js| {
+                js.u64_field(Some("i"), 1);
+            })?;
+            Ok(())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn fnv_matches_the_reference_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn hashing_writer_digest_matches_one_shot_hash() {
+        let mut hw = HashingWriter::new(Vec::new());
+        hw.write_all(b"hello ").unwrap();
+        hw.write_all(b"world").unwrap();
+        let (bytes, digest) = hw.into_parts();
+        assert_eq!(bytes, b"hello world");
+        assert_eq!(digest, fnv1a64(b"hello world"));
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_the_file_format() {
+        let dir = tmpdir("roundtrip");
+        let p = write_one(&dir, 7);
+        assert_eq!(p, snapshot_path(&dir, 7));
+        let s = Snapshot::load(&p).unwrap();
+        assert_eq!(s.header, header(7));
+        let a = s.section("alpha").unwrap();
+        assert_eq!(a.req("v").unwrap().as_str(), Some("first"));
+        let sites = s.sections("site").unwrap();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[1].req("i").unwrap().as_i64(), Some(1));
+        assert!(!s.has_section("gamma"));
+        assert!(s.section("gamma").is_err(), "missing section is an error");
+        assert!(s.section("site").is_err(), "duplicated section is an error for section()");
+    }
+
+    #[test]
+    fn every_possible_truncation_is_rejected() {
+        let dir = tmpdir("truncate");
+        let p = write_one(&dir, 1);
+        let full = fs::read(&p).unwrap();
+        let t = dir.join(format!("cut.{SNAP_EXT}"));
+        for cut in 0..full.len() {
+            fs::write(&t, &full[..cut]).unwrap();
+            assert!(
+                Snapshot::load(&t).is_err(),
+                "a {cut}-byte prefix of a {}-byte snapshot must be rejected",
+                full.len()
+            );
+        }
+    }
+
+    #[test]
+    fn bit_corruption_fails_the_checksum() {
+        let dir = tmpdir("corrupt");
+        let p = write_one(&dir, 1);
+        let mut bytes = fs::read(&p).unwrap();
+        // Flip case of the first 'f' (lands in the header's "fleet",
+        // well before the footer line): still UTF-8, still valid JSON.
+        let i = bytes.iter().position(|&b| b == b'f').unwrap();
+        bytes[i] ^= 0x20;
+        fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", Snapshot::load(&p).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_even_with_a_valid_checksum() {
+        let dir = tmpdir("version");
+        let body = "{\"s\":\"header\",\"version\":2,\"kind\":\"fleet\",\"round\":1,\
+                    \"seed\":\"0000000000000001\",\"sites\":1,\"preset\":\"\"}\n";
+        let digest = fnv1a64(body.as_bytes());
+        let p = snapshot_path(&dir, 1);
+        fs::write(
+            &p,
+            format!("{body}{{\"s\":\"footer\",\"fnv64\":\"{}\"}}\n", hex_u64(digest)),
+        )
+        .unwrap();
+        let err = format!("{:#}", Snapshot::load(&p).unwrap_err());
+        assert!(err.contains("version 2"), "{err}");
+    }
+
+    #[test]
+    fn retention_keeps_the_newest_k() {
+        let dir = tmpdir("retention");
+        for r in 1..=5 {
+            write_one(&dir, r);
+        }
+        let removed = prune_snapshots(&dir, 2).unwrap();
+        assert_eq!(removed.len(), 3);
+        assert_eq!(
+            list_snapshots(&dir).unwrap(),
+            vec![snapshot_path(&dir, 4), snapshot_path(&dir, 5)]
+        );
+        // Pruning an empty/missing dir is a no-op, keep=0 keeps one.
+        assert!(prune_snapshots(&tmpdir("retention-empty"), 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn load_latest_falls_back_past_a_corrupt_newest() {
+        let dir = tmpdir("fallback");
+        write_one(&dir, 1);
+        let newest = write_one(&dir, 2);
+        let mut bytes = fs::read(&newest).unwrap();
+        let cut = bytes.len() - 9;
+        bytes.truncate(cut);
+        fs::write(&newest, &bytes).unwrap();
+        let (snap, rejected) = load_latest(&dir).unwrap();
+        assert_eq!(snap.header.round, 1, "fell back to the previous retained snapshot");
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].0, newest);
+    }
+
+    #[test]
+    fn load_latest_errors_when_no_snapshot_is_loadable() {
+        let dir = tmpdir("allbad");
+        let p = write_one(&dir, 1);
+        fs::write(&p, b"garbage").unwrap();
+        let err = format!("{:#}", load_latest(&dir).unwrap_err());
+        assert!(err.contains("failed to load"), "{err}");
+        assert!(load_latest(&tmpdir("empty")).is_err(), "empty dir is an error");
+    }
+
+    #[test]
+    fn tmp_leftovers_are_invisible_to_listing() {
+        let dir = tmpdir("leftover");
+        write_one(&dir, 3);
+        fs::write(dir.join("snap-r000009.tmp"), b"torn half-write").unwrap();
+        assert_eq!(list_snapshots(&dir).unwrap(), vec![snapshot_path(&dir, 3)]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Crash-safe checkpoint/resume (DESIGN.md §15).
+//!
+//! A **snapshot** is a versioned, checksummed JSONL file capturing the
+//! complete deterministic state of a fleet run at a round boundary:
+//! per-site arrival RNG streams, queued request groups, latency
+//! histograms, SMO policy book and leases, quarantine and profile-retry
+//! state machines, the scenario cursor, fault-plan RNG, monitor state,
+//! metrics registry and trace sink.  Because round-boundary state is
+//! thread-count-independent (§6), a snapshot taken under any worker
+//! count resumes bit-identically under any other.
+//!
+//! Layout (one JSON object per line, written through
+//! [`crate::obs::export::JsonStream`] — no intermediate [`crate::util::Json`]
+//! trees):
+//!
+//! ```text
+//! {"s":"header","version":1,"kind":"fleet","round":12,"seed":"…",…}
+//! {"s":"<section>",…}                  // one line per stateful layer
+//! {"s":"footer","fnv64":"<hex16>"}     // FNV-1a 64 of all prior bytes
+//! ```
+//!
+//! Durability: snapshots are written to a temp file, fsynced, renamed
+//! into place, and the directory is fsynced — a crash mid-write leaves
+//! either the previous snapshot set intact or a `.tmp` file the reader
+//! ignores.  The reader ([`io::Snapshot`]) hard-rejects truncated,
+//! corrupt, or version-mismatched files; [`io::load_latest`] then falls
+//! back to the previous retained snapshot (keep-last-K retention,
+//! [`io::prune_snapshots`]).
+//!
+//! Number encoding: `u64` and `f64` values cross the boundary as 16-char
+//! lowercase hex strings ([`codec::hex_u64`] / [`codec::hex_f64`]) —
+//! JSON numbers are f64, which loses `u64` precision above 2⁵³, prints
+//! `-0.0` as `0`, and nulls non-finite values (`NEG_INFINITY` is
+//! legitimate state in the SMO's KPM watermarks).  Structurally small
+//! integers (indices, rounds, lengths) use exact decimal fields.
+
+pub mod codec;
+pub mod io;
+pub mod snapshot;
+
+use std::path::PathBuf;
+
+pub use io::{
+    fnv1a64, list_snapshots, load_latest, prune_snapshots, snapshot_path, write_snapshot_file,
+    HashingWriter, Snapshot, SnapshotHeader, SnapshotWriter, SNAP_EXT,
+};
+pub use snapshot::{
+    restore_fleet, restore_fleet_with, snapshot_config, write_fleet_snapshot,
+    write_fleet_snapshot_with,
+};
+
+/// Snapshot container format version.  Bump on any incompatible change
+/// to the section layout; the reader rejects mismatches outright rather
+/// than guessing at a half-compatible restore.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Default keep-last-K retention depth.
+pub const DEFAULT_KEEP: usize = 3;
+
+/// Checkpoint/crash-injection options threaded through the fleet,
+/// scenario and chaos drivers (`frost fleet|scenario|chaos --checkpoint`).
+#[derive(Debug, Clone)]
+pub struct CkptOptions {
+    /// Snapshot directory; `None` disables checkpointing entirely.
+    pub dir: Option<PathBuf>,
+    /// Snapshot cadence in rounds (0 is treated as 1).
+    pub every: u32,
+    /// Keep the newest `keep` snapshots (0 is treated as 1).
+    pub keep: usize,
+    /// Crash injection: kill the run immediately after the round-`crash_at`
+    /// snapshot is durable.  The round is snapshotted even off-cadence so
+    /// the crash point is always resumable.
+    pub crash_at: Option<u32>,
+}
+
+impl CkptOptions {
+    /// Checkpointing off — the no-op options plain (non-`_ckpt`) drivers
+    /// delegate with.
+    pub fn disabled() -> CkptOptions {
+        CkptOptions { dir: None, every: 1, keep: DEFAULT_KEEP, crash_at: None }
+    }
+
+    /// Checkpoint into `dir` every round with default retention.
+    pub fn at(dir: PathBuf) -> CkptOptions {
+        CkptOptions { dir: Some(dir), every: 1, keep: DEFAULT_KEEP, crash_at: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    /// Should round `round` be snapshotted?  True on the cadence and,
+    /// regardless of cadence, at the crash-injection round.
+    pub fn due(&self, round: u32) -> bool {
+        self.enabled() && (self.crash_at == Some(round) || round % self.every.max(1) == 0)
+    }
+}
+
+impl Default for CkptOptions {
+    fn default() -> CkptOptions {
+        CkptOptions::disabled()
+    }
+}
+
+/// What a checkpointable driver run produced: either the completed
+/// report, or the injected crash point (round + durable snapshot) the
+/// harness can resume from.
+#[derive(Debug)]
+pub enum DriveOutcome<T> {
+    Done(T),
+    Crashed { round: u32, snapshot: PathBuf },
+}
+
+impl<T> DriveOutcome<T> {
+    /// Unwrap a run that cannot have crash injection armed.
+    pub fn expect_done(self, what: &str) -> T {
+        match self {
+            DriveOutcome::Done(t) => t,
+            DriveOutcome::Crashed { round, .. } => {
+                panic!("{what}: crash injection fired at round {round} without --crash-at-round")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_options_are_never_due() {
+        let o = CkptOptions::disabled();
+        assert!(!o.enabled());
+        for r in 0..20 {
+            assert!(!o.due(r));
+        }
+    }
+
+    #[test]
+    fn cadence_and_crash_round_are_due() {
+        let mut o = CkptOptions::at(PathBuf::from("/tmp/x"));
+        o.every = 4;
+        o.crash_at = Some(6);
+        assert!(o.due(4) && o.due(8), "cadence rounds");
+        assert!(o.due(6), "crash round forces an off-cadence snapshot");
+        assert!(!o.due(5) && !o.due(7));
+    }
+
+    #[test]
+    fn zero_cadence_is_treated_as_every_round() {
+        let mut o = CkptOptions::at(PathBuf::from("/tmp/x"));
+        o.every = 0;
+        assert!(o.due(1) && o.due(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "crash injection fired")]
+    fn expect_done_panics_on_a_crash_outcome() {
+        let out: DriveOutcome<()> =
+            DriveOutcome::Crashed { round: 3, snapshot: PathBuf::from("x") };
+        out.expect_done("test");
+    }
+}

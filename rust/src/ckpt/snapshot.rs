@@ -1,0 +1,1221 @@
+//! Whole-fleet snapshot: capture and bit-exact restore (DESIGN.md §15).
+//!
+//! [`write_fleet_snapshot`] streams every piece of mutable fleet state
+//! through the [`super::codec`] writers into one versioned, checksummed
+//! `.frostsnap` file; [`restore_fleet`] rebuilds a [`Fleet`] from it that
+//! is indistinguishable from the uninterrupted run — same report bits,
+//! same trace, same future random draws.
+//!
+//! Restore ordering contract (violations break bit-identity, so the order
+//! is load-bearing and pinned by the round-trip tests):
+//!
+//! 1. `Fleet::new(config)` reconstructs everything derivable from config
+//!    alone (endpoints, fault *plan*, traffic shapes, zoo wiring) and
+//!    leaves construction chatter (subscriptions, initial pushes) behind.
+//! 2. The global bus restore then *replaces* queue/inboxes/stats wholesale
+//!    and restores held messages **after** the fault state — installing a
+//!    fault plan clears the held buffer, so held must land last.
+//! 3. Per site: host scalars, then the testbed (which installs the cap and
+//!    defensively invalidates the step cache), then the step cache (whose
+//!    counters overwrite that spurious invalidation), then telemetry,
+//!    local bus, and traffic.
+//! 4. SMO / non-RT RIC / coordinator state bypass the message-emitting
+//!    mutators (`deploy`, `put_policy`, …) — replaying those onto the
+//!    fabric would diverge from the run being resumed.
+//! 5. `fleet.round` comes from the header last.
+//!
+//! Snapshot bytes are canonical: every unordered container is sorted (or
+//! already `BTreeMap`-backed) before serialisation, so the same fleet
+//! state always produces the same file — and a restore followed by a
+//! snapshot reproduces the original file byte for byte (pinned below).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::frost::policy::QosClass;
+use crate::obs::export::JsonStream;
+use crate::obs::CapCause;
+use crate::oran::{Bus, Fleet, FleetConfig, FleetSite, NonRtRic, SchedulerCkpt, Smo};
+use crate::simulator::CacheCkpt;
+use crate::util::Json;
+use crate::zoo::all_models;
+
+use super::codec::{
+    hex_u64, intern_static, jarr, jbool, jf64, jopt_f64, jopt_u64, jstr, ju32, ju64, jusize,
+    parse_hex_f64, parse_hex_u64, r_catalogue_entry, r_fault_config, r_fault_ledger,
+    r_hist, r_kpm, r_lifecycle, r_oran_msg, r_pcg32, r_policy, r_power_reading,
+    r_profile_outcome, r_profile_record, r_sampler, r_scenario, r_slot_report, r_summary,
+    r_trace_event, r_traffic_config, r_workload, vf64, vu64, w_catalogue_entry, w_f64,
+    w_fault_config, w_fault_ledger, w_hist, w_kpm, w_lifecycle, w_opt_f64, w_opt_u64,
+    w_oran_msg, w_pcg32, w_policy, w_power_reading, w_profile_outcome, w_profile_record,
+    w_sampler, w_scenario, w_slot_report, w_summary, w_trace_event, w_traffic_config,
+    w_u64, w_workload, KNOWN_KPM_REASONS,
+};
+use super::io::{prune_snapshots, write_snapshot_file, Snapshot, SnapshotHeader, SnapshotWriter};
+
+/// Keys `Bus::stats` can report: one per interface plus the drop counter.
+/// (`codec::KNOWN_INTERFACES` alone misses `"dropped"`.)
+pub const KNOWN_BUS_STATS: &[&'static str] = &["A1", "O1", "O2", "-", "dropped"];
+
+/// Metric names the fleet registry holds at a round boundary.  Report-time
+/// fold-in names are included too so a registry cloned from a report also
+/// restores without leaking new interned strings.
+pub const KNOWN_METRICS: &[&'static str] = &[
+    "bus.A1",
+    "bus.O1",
+    "bus.O2",
+    "bus.dropped",
+    "cache.hits",
+    "cache.invalidations",
+    "cache.misses",
+    "fleet.sites",
+    "holdback.dropped",
+    "kpm.rejected",
+    "lease.expiries",
+    "lease.renewals",
+    "monitor.load_shifts",
+    "monitor.rejected",
+    "monitor.reprofiles",
+    "quarantine.events",
+    "round.cap_w",
+];
+
+// ------------------------------------------------------------ config
+
+fn w_fleet_config<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, c: &FleetConfig) {
+    js.begin_obj(name);
+    js.u64_field(Some("sites"), c.sites as u64);
+    w_u64(js, Some("seed"), c.seed);
+    js.u64_field(Some("threads"), c.threads as u64);
+    js.u64_field(Some("rounds"), u64::from(c.rounds));
+    js.u64_field(Some("train_epochs"), u64::from(c.train_epochs));
+    w_u64(js, Some("samples_per_epoch"), c.samples_per_epoch);
+    w_u64(js, Some("infer_steps_per_round"), c.infer_steps_per_round);
+    w_f64(js, Some("budget_frac"), c.budget_frac);
+    js.u64_field(Some("max_concurrent_profiles"), c.max_concurrent_profiles as u64);
+    js.bool_field(Some("frost_enabled"), c.frost_enabled);
+    js.u64_field(Some("churn_every"), u64::from(c.churn_every));
+    w_f64(js, Some("min_accuracy"), c.min_accuracy);
+    js.u64_field(Some("sample_retention"), c.sample_retention as u64);
+    if let Some(t) = &c.traffic {
+        w_traffic_config(js, Some("traffic"), t);
+    }
+    if let Some(s) = &c.scenario {
+        w_scenario(js, Some("scenario"), s);
+    }
+    if let Some(f) = &c.faults {
+        w_fault_config(js, Some("faults"), f);
+    }
+    js.u64_field(Some("policy_lease_rounds"), u64::from(c.policy_lease_rounds));
+    js.u64_field(Some("profile_timeout_rounds"), u64::from(c.profile_timeout_rounds));
+    js.u64_field(Some("profile_max_attempts"), u64::from(c.profile_max_attempts));
+    js.u64_field(Some("quarantine_rounds"), u64::from(c.quarantine_rounds));
+    js.u64_field(Some("holdback_cap"), c.holdback_cap as u64);
+    js.bool_field(Some("trace"), c.trace);
+    js.end_obj();
+}
+
+fn r_fleet_config(j: &Json) -> Result<FleetConfig> {
+    Ok(FleetConfig {
+        sites: jusize(j, "sites")?,
+        seed: ju64(j, "seed")?,
+        threads: jusize(j, "threads")?,
+        rounds: ju32(j, "rounds")?,
+        train_epochs: ju32(j, "train_epochs")?,
+        samples_per_epoch: ju64(j, "samples_per_epoch")?,
+        infer_steps_per_round: ju64(j, "infer_steps_per_round")?,
+        budget_frac: jf64(j, "budget_frac")?,
+        max_concurrent_profiles: jusize(j, "max_concurrent_profiles")?,
+        frost_enabled: jbool(j, "frost_enabled")?,
+        churn_every: ju32(j, "churn_every")?,
+        min_accuracy: jf64(j, "min_accuracy")?,
+        sample_retention: jusize(j, "sample_retention")?,
+        traffic: match j.get("traffic") {
+            Some(t) => Some(r_traffic_config(t)?),
+            None => None,
+        },
+        scenario: match j.get("scenario") {
+            Some(s) => Some(r_scenario(s)?),
+            None => None,
+        },
+        faults: match j.get("faults") {
+            Some(f) => Some(r_fault_config(f)?),
+            None => None,
+        },
+        policy_lease_rounds: ju32(j, "policy_lease_rounds")?,
+        profile_timeout_rounds: ju32(j, "profile_timeout_rounds")?,
+        profile_max_attempts: ju32(j, "profile_max_attempts")?,
+        quarantine_rounds: ju32(j, "quarantine_rounds")?,
+        holdback_cap: jusize(j, "holdback_cap")?,
+        trace: jbool(j, "trace")?,
+    })
+}
+
+// ------------------------------------------------------------ bus
+
+fn w_bus_fields<W: Write>(js: &mut JsonStream<W>, bus: &Bus, with_fault: bool) {
+    js.begin_arr(Some("queue"));
+    for (from, to, pending, msg) in bus.ckpt_queue() {
+        js.begin_obj(None);
+        js.str_field(Some("from"), &from);
+        js.str_field(Some("to"), &to);
+        js.bool_field(Some("pending"), pending);
+        w_oran_msg(js, Some("m"), &msg);
+        js.end_obj();
+    }
+    js.end_arr();
+    js.begin_arr(Some("held"));
+    for (due, from, to, pending, msg) in bus.ckpt_held() {
+        js.begin_obj(None);
+        js.u64_field(Some("due"), u64::from(due));
+        js.str_field(Some("from"), &from);
+        js.str_field(Some("to"), &to);
+        js.bool_field(Some("pending"), pending);
+        w_oran_msg(js, Some("m"), &msg);
+        js.end_obj();
+    }
+    js.end_arr();
+    js.begin_arr(Some("inboxes"));
+    for (ep, msgs) in bus.ckpt_inboxes() {
+        js.begin_obj(None);
+        js.str_field(Some("ep"), &ep);
+        js.begin_arr(Some("msgs"));
+        for (from, msg) in msgs {
+            js.begin_obj(None);
+            js.str_field(Some("from"), &from);
+            w_oran_msg(js, Some("m"), &msg);
+            js.end_obj();
+        }
+        js.end_arr();
+        js.end_obj();
+    }
+    js.end_arr();
+    js.begin_obj(Some("stats"));
+    for (k, v) in bus.stats() {
+        w_u64(js, Some(k), v);
+    }
+    js.end_obj();
+    if with_fault {
+        if let Some((round, seq, ledger)) = bus.ckpt_fault_state() {
+            js.begin_obj(Some("fault"));
+            js.u64_field(Some("round"), u64::from(round));
+            w_u64(js, Some("seq"), seq);
+            w_fault_ledger(js, Some("ledger"), &ledger);
+            js.end_obj();
+        }
+    }
+}
+
+fn restore_bus_fields(j: &Json, bus: &Bus, with_fault: bool) -> Result<()> {
+    let mut queue = Vec::new();
+    for it in jarr(j, "queue")? {
+        queue.push((
+            Arc::<str>::from(jstr(it, "from")?),
+            Arc::<str>::from(jstr(it, "to")?),
+            jbool(it, "pending")?,
+            r_oran_msg(it.req("m")?)?,
+        ));
+    }
+    bus.restore_ckpt_queue(queue);
+    let mut inboxes = Vec::new();
+    for it in jarr(j, "inboxes")? {
+        let mut msgs = Vec::new();
+        for m in jarr(it, "msgs")? {
+            msgs.push((Arc::<str>::from(jstr(m, "from")?), r_oran_msg(m.req("m")?)?));
+        }
+        inboxes.push((Arc::<str>::from(jstr(it, "ep")?), msgs));
+    }
+    bus.restore_ckpt_inboxes(inboxes);
+    let stats_obj = j.req("stats")?.as_obj().context("bus stats is not an object")?;
+    let mut stats = Vec::new();
+    for (k, v) in stats_obj {
+        let raw =
+            v.as_str().with_context(|| format!("bus stat '{k}' is not a string"))?;
+        stats.push((intern_static(k.as_str(), KNOWN_BUS_STATS), parse_hex_u64(raw)?));
+    }
+    bus.restore_ckpt_stats(stats);
+    if with_fault {
+        if let Some(f) = j.get("fault") {
+            bus.restore_ckpt_fault_state(
+                ju32(f, "round")?,
+                ju64(f, "seq")?,
+                r_fault_ledger(f.req("ledger")?)?,
+            );
+        }
+    }
+    // Held messages land last: installing a fault plan (done by the
+    // fleet reconstruction from config) clears the held buffer.
+    let mut held = Vec::new();
+    for it in jarr(j, "held")? {
+        held.push((
+            ju32(it, "due")?,
+            Arc::<str>::from(jstr(it, "from")?),
+            Arc::<str>::from(jstr(it, "to")?),
+            jbool(it, "pending")?,
+            r_oran_msg(it.req("m")?)?,
+        ));
+    }
+    bus.restore_ckpt_held(held);
+    Ok(())
+}
+
+// ------------------------------------------------------------ step cache
+
+fn w_cache<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, c: &CacheCkpt) {
+    js.begin_obj(name);
+    w_u64(js, Some("hits"), c.hits);
+    w_u64(js, Some("misses"), c.misses);
+    w_u64(js, Some("invalidations"), c.invalidations);
+    js.begin_arr(Some("workloads"));
+    for (bits, id) in &c.workloads {
+        js.begin_obj(None);
+        js.u64_field(Some("id"), u64::from(*id));
+        js.begin_arr(Some("fp"));
+        for b in bits {
+            js.str_field(None, &hex_u64(*b));
+        }
+        js.end_arr();
+        js.end_obj();
+    }
+    js.end_arr();
+    js.begin_arr(Some("keys"));
+    for (w, batch, train, cap) in &c.keys {
+        js.begin_obj(None);
+        js.u64_field(Some("w"), u64::from(*w));
+        js.u64_field(Some("batch"), u64::from(*batch));
+        js.bool_field(Some("train"), *train);
+        w_u64(js, Some("cap"), *cap);
+        js.end_obj();
+    }
+    js.end_arr();
+    js.end_obj();
+}
+
+fn r_cache(j: &Json) -> Result<CacheCkpt> {
+    let mut workloads = Vec::new();
+    for it in jarr(j, "workloads")? {
+        let fp = jarr(it, "fp")?;
+        anyhow::ensure!(fp.len() == 7, "workload fingerprint must have 7 fields");
+        let mut bits = [0u64; 7];
+        for (slot, b) in bits.iter_mut().zip(fp) {
+            *slot = vu64(b)?;
+        }
+        workloads.push((bits, ju32(it, "id")?));
+    }
+    let mut keys = Vec::new();
+    for it in jarr(j, "keys")? {
+        keys.push((ju32(it, "w")?, ju32(it, "batch")?, jbool(it, "train")?, ju64(it, "cap")?));
+    }
+    Ok(CacheCkpt {
+        hits: ju64(j, "hits")?,
+        misses: ju64(j, "misses")?,
+        invalidations: ju64(j, "invalidations")?,
+        workloads,
+        keys,
+    })
+}
+
+// ------------------------------------------------------------ site
+
+fn w_site_fields<W: Write>(js: &mut JsonStream<W>, site: &FleetSite) {
+    js.u64_field(Some("i"), site.index as u64);
+    js.str_field(Some("name"), &site.name);
+    // -- inference host --
+    w_policy(js, Some("policy"), &site.host.policy);
+    js.u64_field(Some("batch"), u64::from(site.host.batch));
+    w_f64(js, Some("total_energy_j"), site.host.total_energy_j);
+    w_u64(js, Some("total_samples"), site.host.total_samples);
+    w_u64(js, Some("errors"), site.host.errors);
+    w_u64(js, Some("lease_expiries"), site.host.lease_expiries);
+    js.begin_arr(Some("profile_log"));
+    for p in &site.host.profile_log {
+        w_profile_outcome(js, None, p);
+    }
+    js.end_arr();
+    let (store, kpm_seq, lease_left, pre_fallback_cap) = site.host.ckpt_state();
+    js.begin_arr(Some("store"));
+    for (k, w) in store {
+        js.begin_obj(None);
+        js.str_field(Some("k"), k.as_str());
+        w_workload(js, Some("w"), w);
+        js.end_obj();
+    }
+    js.end_arr();
+    w_u64(js, Some("kpm_seq"), kpm_seq);
+    w_opt_u64(js, Some("lease_left"), lease_left.map(u64::from));
+    w_opt_f64(js, Some("pre_fallback_cap"), pre_fallback_cap);
+    // -- testbed, then its step cache --
+    let ((tb_state, tb_inc), tb_cap, tb_now) = site.host.testbed.ckpt_state();
+    w_u64(js, Some("tb_rng_state"), tb_state);
+    w_u64(js, Some("tb_rng_inc"), tb_inc);
+    w_f64(js, Some("tb_cap"), tb_cap);
+    w_f64(js, Some("tb_now"), tb_now);
+    w_cache(js, Some("cache"), &site.host.testbed.ckpt_cache());
+    // -- telemetry --
+    let (cur, (gpu_j, cpu_j, dram_j), recent, evicted, total_w, gpu_w) = site.hub.ckpt_state();
+    js.begin_obj(Some("hub"));
+    w_power_reading(js, Some("cur"), &cur);
+    w_f64(js, Some("gpu_j"), gpu_j);
+    w_f64(js, Some("cpu_j"), cpu_j);
+    w_f64(js, Some("dram_j"), dram_j);
+    js.begin_arr(Some("recent"));
+    for r in &recent {
+        w_power_reading(js, None, r);
+    }
+    js.end_arr();
+    w_u64(js, Some("evicted"), evicted);
+    w_summary(js, Some("total_w"), &total_w);
+    w_summary(js, Some("gpu_w"), &gpu_w);
+    js.end_obj();
+    w_sampler(js, Some("sampler"), &site.sampler.ckpt_state());
+    // -- site scalars --
+    let (zoo_index, rounds_run) = site.ckpt_site_state();
+    js.u64_field(Some("zoo_index"), zoo_index as u64);
+    js.u64_field(Some("rounds_run"), u64::from(rounds_run));
+    js.str_field(Some("model_id"), &site.model_id);
+    w_workload(js, Some("workload"), &site.workload);
+    js.str_field(Some("qos"), site.qos.as_str());
+    js.bool_field(Some("trained"), site.trained);
+    js.u64_field(Some("epochs_trained"), u64::from(site.epochs_trained));
+    w_f64(js, Some("workload_energy_j"), site.workload_energy_j);
+    w_f64(js, Some("round_energy_j"), site.round_energy_j);
+    w_f64(js, Some("profiling_energy_j"), site.profiling_energy_j);
+    w_f64(js, Some("wall_s"), site.wall_s);
+    w_u64(js, Some("samples"), site.samples);
+    w_f64(js, Some("accuracy"), site.accuracy);
+    w_f64(js, Some("last_gpu_power_w"), site.last_gpu_power_w);
+    js.bool_field(Some("down"), site.down);
+    // -- site-local fabric (never fault-injected) --
+    js.begin_obj(Some("lbus"));
+    w_bus_fields(js, site.ckpt_local_bus(), false);
+    js.end_obj();
+    // -- traffic --
+    if let Some(tr) = &site.traffic {
+        js.begin_obj(Some("traffic"));
+        let (gen_rng, rate_mult, burst, next_switch) = tr.ckpt_gen().ckpt_state();
+        w_pcg32(js, Some("gen_rng"), &gen_rng);
+        w_f64(js, Some("gen_rate"), rate_mult);
+        js.bool_field(Some("gen_burst"), burst);
+        w_f64(js, Some("gen_next"), next_switch);
+        let m = tr.ckpt_monitor();
+        let (baseline, ewma, load_baseline, load_ewma, seen, last_reprofile, last_at) =
+            m.ckpt_state();
+        w_opt_f64(js, Some("mon_baseline"), baseline);
+        w_opt_f64(js, Some("mon_ewma"), ewma);
+        w_opt_f64(js, Some("mon_load_baseline"), load_baseline);
+        w_opt_f64(js, Some("mon_load_ewma"), load_ewma);
+        js.u64_field(Some("mon_seen"), seen as u64);
+        w_opt_f64(js, Some("mon_last_reprofile"), last_reprofile);
+        w_opt_f64(js, Some("mon_last_at"), last_at);
+        w_u64(js, Some("mon_reprofiles"), m.reprofiles);
+        w_u64(js, Some("mon_load_shifts"), m.load_shifts);
+        w_u64(js, Some("mon_rejected"), m.rejected);
+        w_u64(js, Some("pending_shed"), tr.ckpt_pending_shed());
+        js.begin_arr(Some("srv_queue"));
+        for (at, dl, n) in tr.server.queued_groups() {
+            js.begin_obj(None);
+            w_f64(js, Some("at"), at);
+            w_f64(js, Some("dl"), dl);
+            w_u64(js, Some("n"), n);
+            js.end_obj();
+        }
+        js.end_arr();
+        w_f64(js, Some("srv_t_free"), tr.server.t_free);
+        w_u64(js, Some("srv_served"), tr.server.served);
+        w_u64(js, Some("srv_dropped"), tr.server.dropped);
+        w_u64(js, Some("srv_late"), tr.server.late);
+        w_u64(js, Some("srv_batches"), tr.server.batches);
+        w_u64(js, Some("srv_batch_samples"), tr.server.batch_samples);
+        js.begin_arr(Some("latencies"));
+        for l in &tr.latencies {
+            w_f64(js, None, *l);
+        }
+        js.end_arr();
+        w_hist(js, Some("hist"), &tr.hist);
+        js.begin_arr(Some("phase_hists"));
+        for h in &tr.phase_hists {
+            w_hist(js, None, h);
+        }
+        js.end_arr();
+        js.begin_arr(Some("slot_log"));
+        for s in &tr.slot_log {
+            w_slot_report(js, None, s);
+        }
+        js.end_arr();
+        js.u64_field(Some("slots_served"), u64::from(tr.slots_served));
+        w_u64(js, Some("offered_today"), tr.offered_today);
+        w_f64(js, Some("day_energy_j"), tr.day_energy_j);
+        w_u64(js, Some("reprofile_requests"), tr.reprofile_requests);
+        js.end_obj();
+    }
+}
+
+fn restore_site_fields(j: &Json, site: &mut FleetSite) -> Result<()> {
+    let name = jstr(j, "name")?;
+    anyhow::ensure!(
+        name == site.name,
+        "snapshot site '{name}' does not match reconstructed site '{}'",
+        site.name
+    );
+    // -- inference host --
+    site.host.policy = r_policy(j.req("policy")?)?;
+    site.host.batch = ju32(j, "batch")?;
+    site.host.total_energy_j = jf64(j, "total_energy_j")?;
+    site.host.total_samples = ju64(j, "total_samples")?;
+    site.host.errors = ju64(j, "errors")?;
+    site.host.lease_expiries = ju64(j, "lease_expiries")?;
+    site.host.profile_log =
+        jarr(j, "profile_log")?.iter().map(r_profile_outcome).collect::<Result<Vec<_>>>()?;
+    let mut store = BTreeMap::new();
+    for it in jarr(j, "store")? {
+        store.insert(jstr(it, "k")?.to_string(), r_workload(it.req("w")?)?);
+    }
+    let lease_left = match jopt_u64(j, "lease_left")? {
+        Some(v) => Some(u32::try_from(v).ok().context("lease_left out of range")?),
+        None => None,
+    };
+    site.host.restore_ckpt_state(
+        store,
+        ju64(j, "kpm_seq")?,
+        lease_left,
+        jopt_f64(j, "pre_fallback_cap")?,
+    );
+    // -- testbed first, then the step cache: the testbed hook installs the
+    // cap the retained keys were solved under and bumps the invalidation
+    // counter, which the cache restore overwrites --
+    site.host.testbed.restore_ckpt_state((
+        (ju64(j, "tb_rng_state")?, ju64(j, "tb_rng_inc")?),
+        jf64(j, "tb_cap")?,
+        jf64(j, "tb_now")?,
+    ));
+    site.host.testbed.restore_ckpt_cache(&r_cache(j.req("cache")?)?);
+    // -- telemetry --
+    let hub = j.req("hub")?;
+    let recent =
+        jarr(hub, "recent")?.iter().map(r_power_reading).collect::<Result<Vec<_>>>()?;
+    site.hub.restore_ckpt_state((
+        r_power_reading(hub.req("cur")?)?,
+        (jf64(hub, "gpu_j")?, jf64(hub, "cpu_j")?, jf64(hub, "dram_j")?),
+        recent,
+        ju64(hub, "evicted")?,
+        r_summary(hub.req("total_w")?)?,
+        r_summary(hub.req("gpu_w")?)?,
+    ));
+    site.sampler.restore_ckpt_state(r_sampler(j.req("sampler")?)?);
+    // -- site scalars --
+    let zoo_index = jusize(j, "zoo_index")?;
+    let zoo = all_models();
+    anyhow::ensure!(
+        zoo_index < zoo.len(),
+        "zoo index {zoo_index} out of range ({} models)",
+        zoo.len()
+    );
+    site.zoo_model = zoo[zoo_index].name;
+    site.restore_ckpt_site_state(zoo_index, ju32(j, "rounds_run")?);
+    site.model_id = jstr(j, "model_id")?.to_string();
+    site.workload = r_workload(j.req("workload")?)?;
+    site.qos = QosClass::parse(jstr(j, "qos")?)?;
+    site.trained = jbool(j, "trained")?;
+    site.epochs_trained = ju32(j, "epochs_trained")?;
+    site.workload_energy_j = jf64(j, "workload_energy_j")?;
+    site.round_energy_j = jf64(j, "round_energy_j")?;
+    site.profiling_energy_j = jf64(j, "profiling_energy_j")?;
+    site.wall_s = jf64(j, "wall_s")?;
+    site.samples = ju64(j, "samples")?;
+    site.accuracy = jf64(j, "accuracy")?;
+    site.last_gpu_power_w = jf64(j, "last_gpu_power_w")?;
+    site.down = jbool(j, "down")?;
+    // -- site-local fabric --
+    restore_bus_fields(j.req("lbus")?, site.ckpt_local_bus(), false)?;
+    // -- traffic --
+    match (j.get("traffic"), site.traffic.as_mut()) {
+        (Some(t), Some(tr)) => {
+            tr.ckpt_gen_mut().restore_ckpt_state(
+                r_pcg32(t.req("gen_rng")?)?,
+                jf64(t, "gen_rate")?,
+                jbool(t, "gen_burst")?,
+                jf64(t, "gen_next")?,
+            );
+            tr.ckpt_monitor_mut().restore_ckpt_state((
+                jopt_f64(t, "mon_baseline")?,
+                jopt_f64(t, "mon_ewma")?,
+                jopt_f64(t, "mon_load_baseline")?,
+                jopt_f64(t, "mon_load_ewma")?,
+                jusize(t, "mon_seen")?,
+                jopt_f64(t, "mon_last_reprofile")?,
+                jopt_f64(t, "mon_last_at")?,
+            ));
+            let m = tr.ckpt_monitor_mut();
+            m.reprofiles = ju64(t, "mon_reprofiles")?;
+            m.load_shifts = ju64(t, "mon_load_shifts")?;
+            m.rejected = ju64(t, "mon_rejected")?;
+            tr.restore_ckpt_pending_shed(ju64(t, "pending_shed")?);
+            let mut groups = Vec::new();
+            for g in jarr(t, "srv_queue")? {
+                groups.push((jf64(g, "at")?, jf64(g, "dl")?, ju64(g, "n")?));
+            }
+            tr.server.restore_ckpt_state(
+                groups,
+                jf64(t, "srv_t_free")?,
+                ju64(t, "srv_served")?,
+                ju64(t, "srv_dropped")?,
+                ju64(t, "srv_late")?,
+                ju64(t, "srv_batches")?,
+                ju64(t, "srv_batch_samples")?,
+            );
+            tr.latencies =
+                jarr(t, "latencies")?.iter().map(vf64).collect::<Result<Vec<_>>>()?;
+            tr.hist = r_hist(t.req("hist")?)?;
+            tr.phase_hists =
+                jarr(t, "phase_hists")?.iter().map(r_hist).collect::<Result<Vec<_>>>()?;
+            tr.slot_log =
+                jarr(t, "slot_log")?.iter().map(r_slot_report).collect::<Result<Vec<_>>>()?;
+            tr.slots_served = ju32(t, "slots_served")?;
+            tr.offered_today = ju64(t, "offered_today")?;
+            tr.day_energy_j = jf64(t, "day_energy_j")?;
+            tr.reprofile_requests = ju64(t, "reprofile_requests")?;
+        }
+        (None, None) => {}
+        (snap, live) => anyhow::bail!(
+            "traffic mismatch for site '{name}': snapshot {}, reconstructed fleet {}",
+            if snap.is_some() { "has it" } else { "lacks it" },
+            if live.is_some() { "has it" } else { "lacks it" },
+        ),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ smo
+
+fn w_smo_fields<W: Write>(js: &mut JsonStream<W>, smo: &Smo) {
+    js.str_field(Some("name"), &smo.name);
+    let (offered_load, latency_p99, kpm_watermarks, kpm_rejects, policy_book) = smo.ckpt_state();
+    js.begin_obj(Some("offered_load"));
+    for (k, v) in offered_load {
+        w_f64(js, Some(k.as_str()), *v);
+    }
+    js.end_obj();
+    js.begin_obj(Some("latency_p99"));
+    for (k, v) in latency_p99 {
+        w_f64(js, Some(k.as_str()), *v);
+    }
+    js.end_obj();
+    js.begin_arr(Some("kpm_watermarks"));
+    for (k, (at, seq)) in kpm_watermarks {
+        js.begin_obj(None);
+        js.str_field(Some("k"), k.as_str());
+        w_f64(js, Some("at"), *at);
+        w_u64(js, Some("seq"), *seq);
+        js.end_obj();
+    }
+    js.end_arr();
+    js.begin_obj(Some("kpm_rejects"));
+    for (k, v) in kpm_rejects {
+        w_u64(js, Some(*k), *v);
+    }
+    js.end_obj();
+    js.begin_arr(Some("policy_book"));
+    for (k, p) in policy_book {
+        js.begin_obj(None);
+        js.str_field(Some("k"), k.as_str());
+        w_policy(js, Some("p"), p);
+        js.end_obj();
+    }
+    js.end_arr();
+    js.begin_arr(Some("kpms"));
+    for k in &smo.kpms {
+        w_kpm(js, None, k);
+    }
+    js.end_arr();
+    js.begin_arr(Some("profile_records"));
+    for r in &smo.profile_records {
+        w_profile_record(js, None, r);
+    }
+    js.end_arr();
+    js.begin_arr(Some("lifecycle_log"));
+    for e in &smo.lifecycle_log {
+        w_lifecycle(js, None, e);
+    }
+    js.end_arr();
+    let (a1_policies, a1_subscribers) = smo.a1.ckpt_state();
+    js.begin_arr(Some("a1_policies"));
+    for p in a1_policies {
+        w_policy(js, None, p);
+    }
+    js.end_arr();
+    js.begin_arr(Some("a1_subscribers"));
+    for s in a1_subscribers {
+        js.str_field(None, s.as_str());
+    }
+    js.end_arr();
+}
+
+fn restore_smo_fields(j: &Json, smo: &mut Smo) -> Result<()> {
+    fn hex_map(j: &Json, name: &str) -> Result<BTreeMap<String, f64>> {
+        let obj =
+            j.req(name)?.as_obj().with_context(|| format!("'{name}' is not an object"))?;
+        let mut m = BTreeMap::new();
+        for (k, v) in obj {
+            let raw = v
+                .as_str()
+                .with_context(|| format!("'{name}.{k}' is not a string"))?;
+            m.insert(k.clone(), parse_hex_f64(raw)?);
+        }
+        Ok(m)
+    }
+    let name = jstr(j, "name")?;
+    anyhow::ensure!(
+        name == smo.name,
+        "snapshot SMO '{name}' does not match reconstructed SMO '{}'",
+        smo.name
+    );
+    let offered_load = hex_map(j, "offered_load")?;
+    let latency_p99 = hex_map(j, "latency_p99")?;
+    let mut kpm_watermarks = BTreeMap::new();
+    for it in jarr(j, "kpm_watermarks")? {
+        kpm_watermarks
+            .insert(jstr(it, "k")?.to_string(), (jf64(it, "at")?, ju64(it, "seq")?));
+    }
+    let rejects_obj =
+        j.req("kpm_rejects")?.as_obj().context("kpm_rejects is not an object")?;
+    let mut kpm_rejects: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for (k, v) in rejects_obj {
+        let raw =
+            v.as_str().with_context(|| format!("kpm reject '{k}' is not a string"))?;
+        kpm_rejects.insert(intern_static(k.as_str(), KNOWN_KPM_REASONS), parse_hex_u64(raw)?);
+    }
+    let mut policy_book = BTreeMap::new();
+    for it in jarr(j, "policy_book")? {
+        policy_book.insert(jstr(it, "k")?.to_string(), r_policy(it.req("p")?)?);
+    }
+    smo.restore_ckpt_state(offered_load, latency_p99, kpm_watermarks, kpm_rejects, policy_book);
+    smo.kpms = jarr(j, "kpms")?.iter().map(r_kpm).collect::<Result<Vec<_>>>()?;
+    smo.profile_records =
+        jarr(j, "profile_records")?.iter().map(r_profile_record).collect::<Result<Vec<_>>>()?;
+    smo.lifecycle_log =
+        jarr(j, "lifecycle_log")?.iter().map(r_lifecycle).collect::<Result<Vec<_>>>()?;
+    let policies = jarr(j, "a1_policies")?.iter().map(r_policy).collect::<Result<Vec<_>>>()?;
+    let subscribers = jarr(j, "a1_subscribers")?
+        .iter()
+        .map(|s| {
+            s.as_str().map(str::to_string).context("a1 subscriber is not a string")
+        })
+        .collect::<Result<Vec<_>>>()?;
+    smo.a1.restore_ckpt_state(policies, subscribers);
+    Ok(())
+}
+
+// ------------------------------------------------------------ non-RT RIC
+
+fn w_nonrt_fields<W: Write>(js: &mut JsonStream<W>, nonrt: &NonRtRic) {
+    js.str_field(Some("name"), &nonrt.name);
+    js.begin_arr(Some("catalogue"));
+    for e in nonrt.catalogue.ckpt_entries() {
+        w_catalogue_entry(js, None, e);
+    }
+    js.end_arr();
+    if let Some(s) = nonrt.ckpt_scheduler_state() {
+        js.begin_obj(Some("sched"));
+        js.u64_field(Some("cursor"), s.cursor as u64);
+        w_u64(js, Some("requested"), s.requested);
+        w_u64(js, Some("rng_state"), s.rng.0);
+        w_u64(js, Some("rng_inc"), s.rng.1);
+        w_u64(js, Some("round"), s.round);
+        js.begin_arr(Some("pending"));
+        for (sitename, attempts, next) in &s.pending {
+            js.begin_obj(None);
+            js.str_field(Some("site"), sitename.as_str());
+            js.u64_field(Some("attempts"), u64::from(*attempts));
+            w_u64(js, Some("next"), *next);
+            js.end_obj();
+        }
+        js.end_arr();
+        w_u64(js, Some("retries"), s.retries);
+        js.end_obj();
+    }
+}
+
+fn restore_nonrt_fields(j: &Json, nonrt: &mut NonRtRic) -> Result<()> {
+    let name = jstr(j, "name")?;
+    anyhow::ensure!(
+        name == nonrt.name,
+        "snapshot non-RT RIC '{name}' does not match '{}'",
+        nonrt.name
+    );
+    let entries =
+        jarr(j, "catalogue")?.iter().map(r_catalogue_entry).collect::<Result<Vec<_>>>()?;
+    nonrt.catalogue.restore_ckpt_state(entries);
+    if let Some(s) = j.get("sched") {
+        let mut pending = Vec::new();
+        for it in jarr(s, "pending")? {
+            pending.push((jstr(it, "site")?.to_string(), ju32(it, "attempts")?, ju64(it, "next")?));
+        }
+        nonrt.restore_scheduler_state(&SchedulerCkpt {
+            cursor: jusize(s, "cursor")?,
+            requested: ju64(s, "requested")?,
+            rng: (ju64(s, "rng_state")?, ju64(s, "rng_inc")?),
+            round: ju64(s, "round")?,
+            pending,
+            retries: ju64(s, "retries")?,
+        });
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ coordinator
+
+fn w_coord_fields<W: Write>(js: &mut JsonStream<W>, fleet: &Fleet) {
+    let (profiles_ingested, lifecycle_ingested, budget_applied, ever_enforced, pending) =
+        fleet.ckpt_coord_state();
+    js.u64_field(Some("profiles_ingested"), profiles_ingested as u64);
+    js.u64_field(Some("lifecycle_ingested"), lifecycle_ingested as u64);
+    js.bool_field(Some("budget_applied"), budget_applied);
+    js.bool_field(Some("ever_enforced"), ever_enforced);
+    if let Some((cause, anchor)) = pending {
+        js.begin_obj(Some("pending_cause"));
+        js.str_field(Some("cause"), cause.as_str());
+        w_opt_u64(js, Some("anchor"), anchor);
+        js.end_obj();
+    }
+    js.begin_arr(Some("quarantine_release"));
+    for r in fleet.ckpt_quarantine_release() {
+        w_opt_u64(js, None, (*r).map(u64::from));
+    }
+    js.end_arr();
+    let (quarantined, quarantine_events) = fleet.ckpt_profile_health();
+    js.begin_arr(Some("quarantined"));
+    for q in &quarantined {
+        js.str_field(None, q.as_str());
+    }
+    js.end_arr();
+    w_u64(js, Some("quarantine_events"), quarantine_events);
+    js.begin_arr(Some("assignments"));
+    for (h, m) in fleet.ckpt_assignments() {
+        js.begin_obj(None);
+        js.str_field(Some("h"), &h);
+        js.str_field(Some("m"), &m);
+        js.end_obj();
+    }
+    js.end_arr();
+    if let Some((next, surge, derate, pre_derate, budget_frac)) = fleet.ckpt_scenario_state() {
+        js.begin_obj(Some("scen"));
+        js.u64_field(Some("next"), next as u64);
+        js.begin_arr(Some("surge"));
+        for v in surge {
+            w_f64(js, None, *v);
+        }
+        js.end_arr();
+        js.begin_arr(Some("derate"));
+        for v in derate {
+            w_f64(js, None, *v);
+        }
+        js.end_arr();
+        js.begin_arr(Some("pre_derate"));
+        for p in pre_derate {
+            js.begin_obj(None);
+            if let Some((cap, mult)) = p {
+                w_f64(js, Some("cap"), *cap);
+                w_f64(js, Some("mult"), *mult);
+            }
+            js.end_obj();
+        }
+        js.end_arr();
+        w_f64(js, Some("budget_frac"), budget_frac);
+        js.end_obj();
+    }
+}
+
+fn restore_coord_fields(j: &Json, fleet: &mut Fleet) -> Result<()> {
+    let mut release = Vec::new();
+    for v in jarr(j, "quarantine_release")? {
+        let s = v.as_str().context("quarantine_release element is not a string")?;
+        release.push(if s.is_empty() {
+            None
+        } else {
+            Some(
+                u32::try_from(parse_hex_u64(s)?)
+                    .ok()
+                    .context("quarantine release round out of range")?,
+            )
+        });
+    }
+    fleet.restore_ckpt_quarantine_release(release);
+    let quarantined = jarr(j, "quarantined")?
+        .iter()
+        .map(|v| {
+            v.as_str().map(str::to_string).context("quarantined element is not a string")
+        })
+        .collect::<Result<Vec<_>>>()?;
+    fleet.restore_ckpt_profile_health(quarantined, ju64(j, "quarantine_events")?);
+    let mut assignments = Vec::new();
+    for it in jarr(j, "assignments")? {
+        assignments.push((jstr(it, "h")?.to_string(), jstr(it, "m")?.to_string()));
+    }
+    fleet.restore_ckpt_assignments(assignments);
+    if let Some(s) = j.get("scen") {
+        let surge = jarr(s, "surge")?.iter().map(vf64).collect::<Result<Vec<_>>>()?;
+        let derate = jarr(s, "derate")?.iter().map(vf64).collect::<Result<Vec<_>>>()?;
+        let mut pre = Vec::new();
+        for p in jarr(s, "pre_derate")? {
+            pre.push(match p.get("cap") {
+                Some(_) => Some((jf64(p, "cap")?, jf64(p, "mult")?)),
+                None => None,
+            });
+        }
+        fleet.restore_ckpt_scenario_state(
+            jusize(s, "next")?,
+            surge,
+            derate,
+            pre,
+            jf64(s, "budget_frac")?,
+        );
+    }
+    let pending = match j.get("pending_cause") {
+        Some(p) => {
+            let cs = jstr(p, "cause")?;
+            let cause = CapCause::from_str_name(cs)
+                .with_context(|| format!("unknown cap cause '{cs}'"))?;
+            Some((cause, jopt_u64(p, "anchor")?))
+        }
+        None => None,
+    };
+    fleet.restore_ckpt_coord_state(
+        jusize(j, "profiles_ingested")?,
+        jusize(j, "lifecycle_ingested")?,
+        jbool(j, "budget_applied")?,
+        jbool(j, "ever_enforced")?,
+        pending,
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------ metrics + trace
+
+fn w_metrics_fields<W: Write>(js: &mut JsonStream<W>, fleet: &Fleet) {
+    let m = fleet.ckpt_metrics();
+    js.begin_obj(Some("counters"));
+    for (k, v) in m.counters() {
+        w_u64(js, Some(k), v);
+    }
+    js.end_obj();
+    js.begin_obj(Some("gauges"));
+    for (k, v) in m.gauges() {
+        w_f64(js, Some(k), v);
+    }
+    js.end_obj();
+    js.begin_arr(Some("summaries"));
+    for (k, s) in m.summaries() {
+        js.begin_obj(None);
+        js.str_field(Some("k"), k);
+        w_summary(js, Some("s"), s);
+        js.end_obj();
+    }
+    js.end_arr();
+}
+
+fn restore_metrics_fields(j: &Json, fleet: &mut Fleet) -> Result<()> {
+    let cobj = j.req("counters")?.as_obj().context("counters is not an object")?;
+    let mut counters = Vec::new();
+    for (k, v) in cobj {
+        let raw = v.as_str().with_context(|| format!("counter '{k}' is not a string"))?;
+        counters.push((intern_static(k.as_str(), KNOWN_METRICS), parse_hex_u64(raw)?));
+    }
+    let gobj = j.req("gauges")?.as_obj().context("gauges is not an object")?;
+    let mut gauges = Vec::new();
+    for (k, v) in gobj {
+        let raw = v.as_str().with_context(|| format!("gauge '{k}' is not a string"))?;
+        gauges.push((intern_static(k.as_str(), KNOWN_METRICS), parse_hex_f64(raw)?));
+    }
+    let mut summaries = Vec::new();
+    for it in jarr(j, "summaries")? {
+        summaries.push((intern_static(jstr(it, "k")?, KNOWN_METRICS), r_summary(it.req("s")?)?));
+    }
+    fleet.ckpt_metrics_mut().restore_ckpt_state(counters, gauges, summaries);
+    Ok(())
+}
+
+fn w_trace_fields<W: Write>(js: &mut JsonStream<W>, fleet: &Fleet) {
+    let (round, anchor, events) = fleet.trace.ckpt_state();
+    js.u64_field(Some("round"), u64::from(round));
+    w_opt_u64(js, Some("anchor"), anchor);
+    js.begin_arr(Some("events"));
+    for e in events {
+        w_trace_event(js, None, e);
+    }
+    js.end_arr();
+}
+
+fn restore_trace_fields(j: &Json, fleet: &mut Fleet) -> Result<()> {
+    let events = jarr(j, "events")?.iter().map(r_trace_event).collect::<Result<Vec<_>>>()?;
+    fleet.trace.restore_ckpt_state(ju32(j, "round")?, jopt_u64(j, "anchor")?, events);
+    Ok(())
+}
+
+// ------------------------------------------------------------ entry points
+
+/// Snapshot one fleet to `dir` and prune to the newest `keep` files.
+pub fn write_fleet_snapshot(
+    fleet: &Fleet,
+    kind: &str,
+    preset: &str,
+    dir: &Path,
+    keep: usize,
+) -> Result<PathBuf> {
+    write_fleet_snapshot_with(fleet, kind, preset, dir, keep, |_| Ok(()))
+}
+
+/// Like [`write_fleet_snapshot`], with `extra` appending driver-specific
+/// sections (e.g. a figure driver's audit accumulators) before the footer.
+pub fn write_fleet_snapshot_with<F>(
+    fleet: &Fleet,
+    kind: &str,
+    preset: &str,
+    dir: &Path,
+    keep: usize,
+    extra: F,
+) -> Result<PathBuf>
+where
+    F: FnOnce(&mut SnapshotWriter<BufWriter<File>>) -> Result<()>,
+{
+    let header = SnapshotHeader {
+        kind: kind.to_string(),
+        round: fleet.round,
+        seed: fleet.config.seed,
+        sites: fleet.config.sites,
+        preset: preset.to_string(),
+    };
+    let path = write_snapshot_file(dir, &header, |sw| {
+        sw.section("config", |js| w_fleet_config(js, Some("c"), &fleet.config))?;
+        sw.section("bus", |js| w_bus_fields(js, &fleet.bus, true))?;
+        for site in &fleet.sites {
+            sw.section("site", |js| w_site_fields(js, site))?;
+        }
+        sw.section("smo", |js| w_smo_fields(js, &fleet.smo))?;
+        sw.section("nonrt", |js| w_nonrt_fields(js, &fleet.nonrt))?;
+        sw.section("coord", |js| w_coord_fields(js, fleet))?;
+        sw.section("metrics", |js| w_metrics_fields(js, fleet))?;
+        sw.section("trace", |js| w_trace_fields(js, fleet))?;
+        extra(sw)?;
+        Ok(())
+    })?;
+    prune_snapshots(dir, keep)?;
+    Ok(path)
+}
+
+/// Parse just the config section of a snapshot — e.g. for the CLI to
+/// rebuild output context (traffic shape, scenario name) before a resume.
+pub fn snapshot_config(snap: &Snapshot) -> Result<FleetConfig> {
+    let config_sec = snap.section("config")?;
+    r_fleet_config(config_sec.req("c")?)
+        .with_context(|| format!("snapshot {}: bad config section", snap.path.display()))
+}
+
+/// Rebuild a [`Fleet`] from a loaded snapshot, bit-exactly.
+pub fn restore_fleet(snap: &Snapshot) -> Result<Fleet> {
+    restore_fleet_with(snap, None)
+}
+
+/// [`restore_fleet`] with a worker-thread override.  Round-boundary state
+/// is thread-count independent (DESIGN.md §6), so a snapshot taken under
+/// any worker count resumes bit-identically under any other — `frost
+/// resume --threads T` relies on this.
+pub fn restore_fleet_with(snap: &Snapshot, threads: Option<usize>) -> Result<Fleet> {
+    let mut config = snapshot_config(snap)?;
+    if let Some(t) = threads {
+        config.threads = t;
+    }
+    anyhow::ensure!(
+        config.sites == snap.header.sites && config.seed == snap.header.seed,
+        "snapshot {}: header (sites {}, seed {:#018x}) disagrees with config (sites {}, seed {:#018x})",
+        snap.path.display(),
+        snap.header.sites,
+        snap.header.seed,
+        config.sites,
+        config.seed,
+    );
+    let mut fleet = Fleet::new(config)?;
+    restore_bus_fields(&snap.section("bus")?, &fleet.bus, true)
+        .with_context(|| format!("snapshot {}: bad bus section", snap.path.display()))?;
+    let site_secs = snap.sections("site")?;
+    anyhow::ensure!(
+        site_secs.len() == fleet.sites.len(),
+        "snapshot {} has {} site sections, reconstructed fleet has {} sites",
+        snap.path.display(),
+        site_secs.len(),
+        fleet.sites.len(),
+    );
+    for (idx, sec) in site_secs.iter().enumerate() {
+        let i = jusize(sec, "i")?;
+        anyhow::ensure!(i == idx, "site sections out of order: got {i}, expected {idx}");
+        restore_site_fields(sec, &mut fleet.sites[idx])
+            .with_context(|| format!("snapshot {}: bad site section {idx}", snap.path.display()))?;
+    }
+    restore_smo_fields(&snap.section("smo")?, &mut fleet.smo)
+        .with_context(|| format!("snapshot {}: bad smo section", snap.path.display()))?;
+    restore_nonrt_fields(&snap.section("nonrt")?, &mut fleet.nonrt)
+        .with_context(|| format!("snapshot {}: bad nonrt section", snap.path.display()))?;
+    restore_coord_fields(&snap.section("coord")?, &mut fleet)
+        .with_context(|| format!("snapshot {}: bad coord section", snap.path.display()))?;
+    restore_metrics_fields(&snap.section("metrics")?, &mut fleet)
+        .with_context(|| format!("snapshot {}: bad metrics section", snap.path.display()))?;
+    restore_trace_fields(&snap.section("trace")?, &mut fleet)
+        .with_context(|| format!("snapshot {}: bad trace section", snap.path.display()))?;
+    fleet.round = snap.header.round;
+    Ok(fleet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+    use crate::traffic::TrafficConfig;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("frost-ckpt-snap-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fingerprint(f: &Fleet) -> String {
+        format!("{:?}", f.report())
+    }
+
+    fn small_config() -> FleetConfig {
+        FleetConfig {
+            sites: 2,
+            seed: 11,
+            rounds: 4,
+            train_epochs: 3,
+            samples_per_epoch: 500,
+            infer_steps_per_round: 4,
+            trace: true,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn plain_fleet_resumes_bit_identically_to_the_uninterrupted_run() {
+        let config = small_config();
+        let mut gold = Fleet::new(config.clone()).unwrap();
+        for _ in 0..config.rounds {
+            gold.run_round().unwrap();
+        }
+        let mut half = Fleet::new(config).unwrap();
+        half.run_round().unwrap();
+        half.run_round().unwrap();
+        let dir = tmpdir("plain");
+        let path = write_fleet_snapshot(&half, "fleet", "-", &dir, 3).unwrap();
+        drop(half);
+        let snap = Snapshot::load(&path).unwrap();
+        assert_eq!(snap.header.kind, "fleet");
+        assert_eq!(snap.header.round, 2);
+        let mut resumed = restore_fleet(&snap).unwrap();
+        assert_eq!(resumed.round, 2);
+        resumed.run_round().unwrap();
+        resumed.run_round().unwrap();
+        assert_eq!(fingerprint(&resumed), fingerprint(&gold));
+    }
+
+    #[test]
+    fn snapshot_bytes_are_canonical_and_restore_is_a_fixed_point() {
+        let mut fleet = Fleet::new(small_config()).unwrap();
+        fleet.run_round().unwrap();
+        let d1 = tmpdir("canon1");
+        let d2 = tmpdir("canon2");
+        let d3 = tmpdir("canon3");
+        let p1 = write_fleet_snapshot(&fleet, "fleet", "-", &d1, 3).unwrap();
+        let p2 = write_fleet_snapshot(&fleet, "fleet", "-", &d2, 3).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "same state must produce identical snapshot bytes"
+        );
+        let resumed = restore_fleet(&Snapshot::load(&p1).unwrap()).unwrap();
+        let p3 = write_fleet_snapshot(&resumed, "fleet", "-", &d3, 3).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p3).unwrap(),
+            "restore followed by snapshot must be a byte-level fixed point"
+        );
+    }
+
+    #[test]
+    fn traffic_scenario_fleet_resumes_mid_day_bit_identically() {
+        let tr = TrafficConfig {
+            users_per_site: 40,
+            requests_per_user_per_day: 8.0,
+            day_s: 600.0,
+            slots_per_day: 4,
+            warmup_rounds: 1,
+            max_batch: 16,
+            ..TrafficConfig::default()
+        };
+        let scen = Scenario::preset("grid-step", 2, &tr).unwrap();
+        let config = FleetConfig {
+            sites: 2,
+            seed: 23,
+            rounds: tr.rounds_for_one_day(),
+            train_epochs: 3,
+            samples_per_epoch: 500,
+            max_concurrent_profiles: 2,
+            budget_frac: 0.9,
+            traffic: Some(tr),
+            scenario: Some(scen),
+            trace: true,
+            ..FleetConfig::default()
+        };
+        let rounds = config.rounds;
+        assert!(rounds >= 2, "need at least two rounds to split");
+        let mut gold = Fleet::new(config.clone()).unwrap();
+        for _ in 0..rounds {
+            gold.run_round().unwrap();
+        }
+        let mut half = Fleet::new(config).unwrap();
+        let split = rounds / 2;
+        for _ in 0..split {
+            half.run_round().unwrap();
+        }
+        let dir = tmpdir("scen");
+        let path = write_fleet_snapshot(&half, "scenario", "grid-step", &dir, 2).unwrap();
+        let snap = Snapshot::load(&path).unwrap();
+        assert_eq!(snap.header.preset, "grid-step");
+        let mut resumed = restore_fleet(&snap).unwrap();
+        for _ in split..rounds {
+            resumed.run_round().unwrap();
+        }
+        assert_eq!(fingerprint(&resumed), fingerprint(&gold));
+        let gold_trace = format!("{:?}", gold.trace.ckpt_state());
+        let res_trace = format!("{:?}", resumed.trace.ckpt_state());
+        assert_eq!(res_trace, gold_trace, "trace events must match too");
+    }
+
+    #[test]
+    fn restore_rejects_a_site_count_mismatch() {
+        let mut fleet = Fleet::new(small_config()).unwrap();
+        fleet.run_round().unwrap();
+        let dir = tmpdir("mismatch");
+        let path = write_fleet_snapshot(&fleet, "fleet", "-", &dir, 3).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Drop one site section wholesale and re-checksum: structurally
+        // valid file, semantically inconsistent with its config.
+        let body: String = text
+            .lines()
+            .filter(|l| !(l.contains("\"s\":\"site\"") && l.contains("\"i\":1")))
+            .filter(|l| !l.contains("\"s\":\"footer\""))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let digest = super::super::io::fnv1a64(body.as_bytes());
+        let doctored = format!("{body}{{\"s\":\"footer\",\"fnv64\":\"{}\"}}\n", hex_u64(digest));
+        std::fs::write(&path, doctored).unwrap();
+        let snap = Snapshot::load(&path).unwrap();
+        let err = restore_fleet(&snap).unwrap_err().to_string();
+        assert!(err.contains("site sections"), "unexpected error: {err}");
+    }
+}

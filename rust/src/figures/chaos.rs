@@ -18,6 +18,10 @@
 
 use anyhow::{Context, Result};
 
+use crate::ckpt::codec::{jf64, ju32, jusize, r_series, w_f64, w_series};
+use crate::ckpt::{
+    restore_fleet_with, write_fleet_snapshot_with, CkptOptions, DriveOutcome, Snapshot,
+};
 use crate::obs::TraceSink;
 use crate::oran::{FaultConfig, FaultLedger, Fleet, FleetConfig, FleetReport};
 use crate::traffic::TrafficConfig;
@@ -122,23 +126,83 @@ pub struct ChaosFigOutput {
 /// Run one fault-injected fleet day round by round, auditing the budget
 /// conservation invariant and the §13 self-healing machinery.
 pub fn chaos_run(config: &FleetConfig) -> Result<ChaosFigOutput> {
+    Ok(chaos_run_ckpt(config, "-", &CkptOptions::disabled())?.expect_done("chaos_run"))
+}
+
+/// [`chaos_run`] with checkpoint/crash-injection support.  The per-round
+/// audit table and accumulators travel in the snapshot's `harness`
+/// section, so a resumed run's `round_table` covers the whole day.
+/// `preset` is recorded in the snapshot header for `frost resume`.
+pub fn chaos_run_ckpt(
+    config: &FleetConfig,
+    preset: &str,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<ChaosFigOutput>> {
     let faults = config.faults.clone().context("chaos_run needs FleetConfig::faults set")?;
-    let mut fleet = Fleet::new(config.clone())?;
-    let mut round_table = Series::new(
+    let fleet = Fleet::new(config.clone())?;
+    let round_table = Series::new(
         format!(
             "Chaos run: {} sites, seed {}, faults in rounds {}..={}",
             config.sites, config.seed, faults.start_round, faults.end_round
         ),
         &["fallbacks", "quarantined", "budget_w", "cap_w", "excess_w", "kpm_rej", "faults"],
     );
-    let mut max_cap_excess_w = f64::NEG_INFINITY;
-    let mut audited = 0usize;
-    let mut last_unhealthy_round = 0u32;
-    for round in 1..=config.rounds {
+    drive(fleet, round_table, 0, f64::NEG_INFINITY, 0, preset, opts)
+}
+
+/// Resume a crashed [`chaos_run_ckpt`] from its snapshot, restoring the
+/// audit table and accumulators alongside the fleet.  `threads`
+/// overrides the snapshot's worker count (resume is thread-count
+/// independent).
+pub fn chaos_resume(
+    snap: &Snapshot,
+    threads: Option<usize>,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<ChaosFigOutput>> {
+    anyhow::ensure!(
+        snap.header.kind == "chaos",
+        "snapshot {} is a '{}' run, not a chaos run",
+        snap.path.display(),
+        snap.header.kind
+    );
+    let harness = snap.section("harness")?;
+    let round_table = r_series(harness.req("rounds")?)?;
+    let audited = jusize(&harness, "audited")?;
+    let max_cap_excess_w = jf64(&harness, "max_excess")?;
+    let last_unhealthy_round = ju32(&harness, "last_unhealthy")?;
+    let fleet = restore_fleet_with(snap, threads)?;
+    anyhow::ensure!(
+        fleet.config.faults.is_some(),
+        "chaos snapshot {} carries no fault plan",
+        snap.path.display()
+    );
+    drive(
+        fleet,
+        round_table,
+        audited,
+        max_cap_excess_w,
+        last_unhealthy_round,
+        &snap.header.preset,
+        opts,
+    )
+}
+
+fn drive(
+    mut fleet: Fleet,
+    mut round_table: Series,
+    mut audited: usize,
+    mut max_cap_excess_w: f64,
+    mut last_unhealthy_round: u32,
+    preset: &str,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<ChaosFigOutput>> {
+    let rounds = fleet.config.rounds;
+    let sites = fleet.config.sites;
+    for round in (fleet.round + 1)..=rounds {
         fleet.run_round()?;
         let rep = fleet.report();
         let fallbacks = fleet.sites.iter().filter(|s| s.host.in_lease_fallback()).count();
-        let quarantined = (0..config.sites).filter(|&i| fleet.is_quarantined(i)).count();
+        let quarantined = (0..sites).filter(|&i| fleet.is_quarantined(i)).count();
         if fallbacks + quarantined > 0 {
             last_unhealthy_round = round;
         }
@@ -161,13 +225,28 @@ pub fn chaos_run(config: &FleetConfig) -> Result<ChaosFigOutput> {
             rep.kpm_rejected as f64,
             rep.fault_ledger.as_ref().map_or(0.0, |l| l.total() as f64),
         ]);
+        if opts.due(round) {
+            let dir = opts.dir.as_ref().expect("due() implies a snapshot directory");
+            let snapshot = write_fleet_snapshot_with(&fleet, "chaos", preset, dir, opts.keep, |sw| {
+                sw.section("harness", |js| {
+                    w_series(js, Some("rounds"), &round_table);
+                    js.u64_field(Some("audited"), audited as u64);
+                    w_f64(js, Some("max_excess"), max_cap_excess_w);
+                    js.u64_field(Some("last_unhealthy"), u64::from(last_unhealthy_round));
+                })?;
+                Ok(())
+            })?;
+            if opts.crash_at == Some(round) {
+                return Ok(DriveOutcome::Crashed { round, snapshot });
+            }
+        }
     }
     let report = fleet.report();
     let ledger = report.fault_ledger.clone().unwrap_or_default();
     let healed = report.budget_enforced
         && fleet.sites.iter().all(|s| !s.host.in_lease_fallback())
-        && (0..config.sites).all(|i| !fleet.is_quarantined(i));
-    Ok(ChaosFigOutput {
+        && (0..sites).all(|i| !fleet.is_quarantined(i));
+    Ok(DriveOutcome::Done(ChaosFigOutput {
         round_table,
         ledger,
         max_cap_excess_w: if audited > 0 { max_cap_excess_w } else { 0.0 },
@@ -176,7 +255,7 @@ pub fn chaos_run(config: &FleetConfig) -> Result<ChaosFigOutput> {
         healed,
         report,
         trace: fleet.trace,
-    })
+    }))
 }
 
 #[cfg(test)]

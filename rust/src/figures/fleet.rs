@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use crate::ckpt::{restore_fleet_with, write_fleet_snapshot, CkptOptions, DriveOutcome, Snapshot};
 use crate::obs::TraceSink;
 use crate::oran::{Fleet, FleetConfig, FleetReport};
 use crate::util::Series;
@@ -45,21 +46,69 @@ pub struct FleetFigOutput {
 /// Run the fleet twice — FROST on, then the stock-cap baseline — and
 /// compare site by site. `config.frost_enabled` is overridden per run.
 pub fn fleet_comparison(config: &FleetConfig) -> Result<FleetFigOutput> {
+    Ok(fleet_comparison_ckpt(config, &CkptOptions::disabled())?.expect_done("fleet_comparison"))
+}
+
+/// [`fleet_comparison`] with checkpoint/crash-injection support: the
+/// primary (FROST) leg snapshots on the configured cadence; the baseline
+/// leg re-runs deterministically from config on resume, so it needs no
+/// snapshots of its own.
+pub fn fleet_comparison_ckpt(
+    config: &FleetConfig,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<FleetFigOutput>> {
     let mut frost_cfg = config.clone();
     frost_cfg.frost_enabled = true;
-    let mut base_cfg = config.clone();
+    drive(Fleet::new(frost_cfg)?, opts)
+}
+
+/// Resume a crashed [`fleet_comparison_ckpt`] from its snapshot and run
+/// it to completion, continuing to checkpoint under the same options.
+/// `threads` overrides the snapshot's worker count (resume is
+/// thread-count independent).
+pub fn fleet_resume(
+    snap: &Snapshot,
+    threads: Option<usize>,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<FleetFigOutput>> {
+    anyhow::ensure!(
+        snap.header.kind == "fleet",
+        "snapshot {} is a '{}' run, not a fleet comparison",
+        snap.path.display(),
+        snap.header.kind
+    );
+    drive(restore_fleet_with(snap, threads)?, opts)
+}
+
+fn drive(mut frost_fleet: Fleet, opts: &CkptOptions) -> Result<DriveOutcome<FleetFigOutput>> {
+    let rounds = frost_fleet.config.rounds;
+    for round in (frost_fleet.round + 1)..=rounds {
+        frost_fleet.run_round()?;
+        if opts.due(round) {
+            let dir = opts.dir.as_ref().expect("due() implies a snapshot directory");
+            let snapshot = write_fleet_snapshot(&frost_fleet, "fleet", "-", dir, opts.keep)?;
+            if opts.crash_at == Some(round) {
+                return Ok(DriveOutcome::Crashed { round, snapshot });
+            }
+        }
+    }
+    // The baseline leg is derived from the FROST leg's config, which
+    // preserves the caller's settings except `frost_enabled` — so a
+    // resumed run rebuilds the identical baseline.
+    let mut base_cfg = (*frost_fleet.config).clone();
     base_cfg.frost_enabled = false;
     base_cfg.budget_frac = 1.0;
     // Only the FROST run is traced (it is the leg making cap decisions).
     base_cfg.trace = false;
+    let sites = base_cfg.sites;
+    let seed = base_cfg.seed;
 
-    let mut frost_fleet = Fleet::new(frost_cfg)?;
-    let frost = frost_fleet.run()?;
+    let frost = frost_fleet.report();
     let trace = frost_fleet.trace;
     let baseline = Fleet::new(base_cfg)?.run()?;
 
     let mut table = Series::new(
-        format!("Fleet tradeoff: {} sites, seed {}", config.sites, config.seed),
+        format!("Fleet tradeoff: {sites} sites, seed {seed}"),
         &[
             "cap_pct",
             "edp_m",
@@ -99,7 +148,7 @@ pub fn fleet_comparison(config: &FleetConfig) -> Result<FleetFigOutput> {
     } else {
         0.0
     };
-    Ok(FleetFigOutput {
+    Ok(DriveOutcome::Done(FleetFigOutput {
         steady_saving_frac,
         mean_est_saving_frac: frost.mean_est_saving,
         baseline_round_j: baseline.fleet_round_energy_j,
@@ -112,7 +161,7 @@ pub fn fleet_comparison(config: &FleetConfig) -> Result<FleetFigOutput> {
         frost,
         baseline,
         trace,
-    })
+    }))
 }
 
 #[cfg(test)]
@@ -145,5 +194,37 @@ mod tests {
         let saving_col = out.table.column("steady_saving_pct").unwrap();
         let saved = saving_col.iter().filter(|&&s| s > 0.0).count();
         assert!(saved >= 3, "{saved} of 4 sites saved");
+    }
+
+    #[test]
+    fn fleet_comparison_crash_resume_matches_the_uninterrupted_run() {
+        let cfg = FleetConfig {
+            sites: 2,
+            seed: 21,
+            rounds: 4,
+            train_epochs: 3,
+            samples_per_epoch: 500,
+            infer_steps_per_round: 4,
+            ..FleetConfig::default()
+        };
+        let gold = fleet_comparison(&cfg).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("frost-fleet-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut opts = CkptOptions::at(dir);
+        opts.crash_at = Some(2);
+        let (round, snapshot) = match fleet_comparison_ckpt(&cfg, &opts).unwrap() {
+            DriveOutcome::Crashed { round, snapshot } => (round, snapshot),
+            DriveOutcome::Done(_) => panic!("crash injection must fire"),
+        };
+        assert_eq!(round, 2);
+        opts.crash_at = None;
+        let resumed = fleet_resume(&Snapshot::load(&snapshot).unwrap(), None, &opts)
+            .unwrap()
+            .expect_done("resume");
+        assert_eq!(format!("{:?}", resumed.frost), format!("{:?}", gold.frost));
+        assert_eq!(format!("{:?}", resumed.baseline), format!("{:?}", gold.baseline));
+        assert_eq!(format!("{:?}", resumed.table), format!("{:?}", gold.table));
     }
 }

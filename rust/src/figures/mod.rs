@@ -22,13 +22,19 @@ pub mod fleet;
 pub mod scenario;
 pub mod traffic;
 
-pub use chaos::{chaos_config, chaos_run, ChaosFigOutput, CHAOS_QUIET_TAIL_ROUNDS};
+pub use chaos::{
+    chaos_config, chaos_resume, chaos_run, chaos_run_ckpt, ChaosFigOutput,
+    CHAOS_QUIET_TAIL_ROUNDS,
+};
 pub use fig2::{fig2_investigation, Fig2Output};
 #[cfg(feature = "pjrt")]
 pub use fig3::fig3_overhead;
 pub use fig4::fig4_power_capping;
 pub use fig5::{fig5_fine_grained, Fig5Output};
 pub use fig6::{fig6_tradeoff, Fig6Output};
-pub use fleet::{fleet_comparison, FleetFigOutput};
-pub use scenario::{scenario_comparison, PhaseSummary, ScenarioFigOutput};
+pub use fleet::{fleet_comparison, fleet_comparison_ckpt, fleet_resume, FleetFigOutput};
+pub use scenario::{
+    scenario_comparison, scenario_comparison_ckpt, scenario_resume, PhaseSummary,
+    ScenarioFigOutput,
+};
 pub use traffic::{traffic_comparison, TrafficFigOutput, QOS_CLASSES};

@@ -15,6 +15,10 @@
 
 use anyhow::{Context, Result};
 
+use crate::ckpt::codec::{jf64, jusize, w_f64};
+use crate::ckpt::{
+    restore_fleet_with, write_fleet_snapshot_with, CkptOptions, DriveOutcome, Snapshot,
+};
 use crate::frost::QosClass;
 use crate::metrics::LatencyHistogram;
 use crate::obs::TraceSink;
@@ -144,36 +148,108 @@ fn attainment((offered, served, _dropped, late): (u64, u64, u64, u64)) -> f64 {
 /// per run (the baseline also drops budget enforcement, but experiences
 /// the identical outage/surge/derate script).
 pub fn scenario_comparison(config: &FleetConfig) -> Result<ScenarioFigOutput> {
-    let tr = config
+    Ok(scenario_comparison_ckpt(config, &CkptOptions::disabled())?
+        .expect_done("scenario_comparison"))
+}
+
+/// [`scenario_comparison`] with checkpoint/crash-injection support: the
+/// primary (FROST) leg snapshots on the configured cadence, carrying the
+/// budget-audit accumulators in a `harness` section; the baseline leg
+/// re-runs deterministically from config on resume.
+pub fn scenario_comparison_ckpt(
+    config: &FleetConfig,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<ScenarioFigOutput>> {
+    anyhow::ensure!(
+        config.traffic.is_some(),
+        "scenario_comparison needs FleetConfig::traffic set"
+    );
+    anyhow::ensure!(
+        config.scenario.is_some(),
+        "scenario_comparison needs FleetConfig::scenario set"
+    );
+    let mut frost_cfg = config.clone();
+    frost_cfg.frost_enabled = true;
+    drive(Fleet::new(frost_cfg)?, 0, f64::NEG_INFINITY, opts)
+}
+
+/// Resume a crashed [`scenario_comparison_ckpt`] from its snapshot,
+/// restoring the budget-audit accumulators alongside the fleet.
+/// `threads` overrides the snapshot's worker count (resume is
+/// thread-count independent).
+pub fn scenario_resume(
+    snap: &Snapshot,
+    threads: Option<usize>,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<ScenarioFigOutput>> {
+    anyhow::ensure!(
+        snap.header.kind == "scenario",
+        "snapshot {} is a '{}' run, not a scenario comparison",
+        snap.path.display(),
+        snap.header.kind
+    );
+    let harness = snap.section("harness")?;
+    let audited = jusize(&harness, "audited")?;
+    let max_cap_excess_w = jf64(&harness, "max_excess")?;
+    drive(restore_fleet_with(snap, threads)?, audited, max_cap_excess_w, opts)
+}
+
+fn drive(
+    mut frost_fleet: Fleet,
+    mut audited: usize,
+    mut max_cap_excess_w: f64,
+    opts: &CkptOptions,
+) -> Result<DriveOutcome<ScenarioFigOutput>> {
+    let tr = frost_fleet
+        .config
         .traffic
         .clone()
         .context("scenario_comparison needs FleetConfig::traffic set")?;
-    let scen = config
+    let scen = frost_fleet
+        .config
         .scenario
         .clone()
         .context("scenario_comparison needs FleetConfig::scenario set")?;
-    let mut frost_cfg = config.clone();
-    frost_cfg.frost_enabled = true;
-    let mut base_cfg = config.clone();
+    let mut base_cfg = (*frost_fleet.config).clone();
     base_cfg.frost_enabled = false;
     base_cfg.budget_frac = 1.0;
     // Only the FROST run is traced: the baseline enforces no caps, so a
     // second spine would double the export for no attribution value.
     base_cfg.trace = false;
+    let sites = base_cfg.sites;
+    let seed = base_cfg.seed;
+    let rounds = base_cfg.rounds;
 
     // Drive the FROST run round by round so the budget conservation
     // invariant can be audited *every* round the water-fill is in force
     // (budget steps, outage/recovery and churn rounds included).
-    let mut frost_fleet = Fleet::new(frost_cfg)?;
-    let mut max_cap_excess_w = f64::NEG_INFINITY;
-    let mut audited = 0usize;
-    for _ in 0..config.rounds {
+    for round in (frost_fleet.round + 1)..=rounds {
         frost_fleet.run_round()?;
         let rep = frost_fleet.report();
         if rep.budget_enforced {
             if let Some(budget_w) = rep.budget_w {
                 audited += 1;
                 max_cap_excess_w = max_cap_excess_w.max(rep.cap_power_w - budget_w);
+            }
+        }
+        if opts.due(round) {
+            let dir = opts.dir.as_ref().expect("due() implies a snapshot directory");
+            let snapshot = write_fleet_snapshot_with(
+                &frost_fleet,
+                "scenario",
+                &scen.name,
+                dir,
+                opts.keep,
+                |sw| {
+                    sw.section("harness", |js| {
+                        js.u64_field(Some("audited"), audited as u64);
+                        w_f64(js, Some("max_excess"), max_cap_excess_w);
+                    })?;
+                    Ok(())
+                },
+            )?;
+            if opts.crash_at == Some(round) {
+                return Ok(DriveOutcome::Crashed { round, snapshot });
             }
         }
     }
@@ -186,7 +262,7 @@ pub fn scenario_comparison(config: &FleetConfig) -> Result<ScenarioFigOutput> {
 
     let mut phases = Vec::with_capacity(scen.phases.len());
     let mut phase_table = Series::new(
-        format!("Scenario '{}': {} sites, seed {}", scen.name, config.sites, config.seed),
+        format!("Scenario '{}': {sites} sites, seed {seed}", scen.name),
         &[
             "slots",
             "offered",
@@ -262,7 +338,7 @@ pub fn scenario_comparison(config: &FleetConfig) -> Result<ScenarioFigOutput> {
         ]);
     }
 
-    Ok(ScenarioFigOutput {
+    Ok(DriveOutcome::Done(ScenarioFigOutput {
         phase_table,
         class_table,
         phases,
@@ -277,7 +353,7 @@ pub fn scenario_comparison(config: &FleetConfig) -> Result<ScenarioFigOutput> {
         frost: frost_report,
         baseline: base_report,
         trace: frost_fleet.trace,
-    })
+    }))
 }
 
 #[cfg(test)]

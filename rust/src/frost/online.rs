@@ -108,6 +108,51 @@ impl ContinuousMonitor {
         }
     }
 
+    /// Mutable tracker state for checkpointing (DESIGN.md §15), in field
+    /// order: baseline, ewma, load_baseline, load_ewma, seen,
+    /// last_reprofile, last_at.  The counters are public and carried
+    /// separately by the caller.
+    #[allow(clippy::type_complexity)]
+    pub fn ckpt_state(
+        &self,
+    ) -> (Option<f64>, Option<f64>, Option<f64>, Option<f64>, usize, Option<f64>, Option<f64>)
+    {
+        (
+            self.baseline,
+            self.ewma,
+            self.load_baseline,
+            self.load_ewma,
+            self.seen,
+            self.last_reprofile.map(|s| s.0),
+            self.last_at.map(|s| s.0),
+        )
+    }
+
+    /// Overwrite the tracker state from a checkpoint (the counterpart of
+    /// [`ContinuousMonitor::ckpt_state`]; the config is rebuilt by the
+    /// caller).
+    #[allow(clippy::type_complexity)]
+    pub fn restore_ckpt_state(
+        &mut self,
+        (baseline, ewma, load_baseline, load_ewma, seen, last_reprofile, last_at): (
+            Option<f64>,
+            Option<f64>,
+            Option<f64>,
+            Option<f64>,
+            usize,
+            Option<f64>,
+            Option<f64>,
+        ),
+    ) {
+        self.baseline = baseline;
+        self.ewma = ewma;
+        self.load_baseline = load_baseline;
+        self.load_ewma = load_ewma;
+        self.seen = seen;
+        self.last_reprofile = last_reprofile.map(Seconds);
+        self.last_at = last_at.map(Seconds);
+    }
+
     /// Energy-per-sample signature of one observation.
     fn signature(obs: &Observation) -> f64 {
         if obs.samples_per_s <= 0.0 {

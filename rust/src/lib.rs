@@ -23,6 +23,7 @@
 //! See `DESIGN.md` for the system inventory and the experiment index
 //! mapping every figure of the paper to a regeneration harness.
 
+pub mod ckpt;
 pub mod config;
 pub mod data;
 pub mod figures;

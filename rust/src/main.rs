@@ -140,6 +140,7 @@ fn main() {
         "traffic" => cmd_traffic(&args),
         "scenario" => cmd_scenario(&args),
         "chaos" => cmd_chaos(&args),
+        "resume" => cmd_resume(&args),
         "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "shift" => cmd_shift(&args),
@@ -176,6 +177,7 @@ COMMANDS:
             [--epochs N] [--samples N] [--infer-steps N]
             [--budget-frac F] [--max-profiles K] [--churn-every C]
             [--sample-retention N] [--out DIR] [--trace FILE] [--json FILE]
+            [--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]]
             multi-host fleet simulation
   traffic   [--sites N] [--seed S] [--threads T] [--users N]
             [--req-per-user R] [--day-s S] [--slots N] [--max-batch B]
@@ -186,15 +188,23 @@ COMMANDS:
   scenario  PRESET [--sites N] [--seed S] [--threads T] [--users N]
             [--slots N] [--budget-frac F] [--smoke] [--out DIR]
             [--trace FILE] [--json FILE]
+            [--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]]
             scripted operational day (PRESET: outage-day, grid-step,
             flash-crowd, heatwave) — deterministic event engine, FROST
             vs stock caps with per-phase energy/latency/attainment
   chaos     PRESET [--sites N] [--seed S] [--threads T] [--smoke] [--out DIR]
             [--trace FILE]
+            [--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]]
             fault-injected fleet day (PRESET: lossy-fabric, slow-fabric,
             liar-telemetry, profile-flaps) — seeded fabric/telemetry
             faults vs the §13 self-healing control plane; hard-fails if
             the budget is busted or the fleet does not heal
+  resume    SNAPSHOT.frostsnap [--threads T] [--json FILE] [--trace FILE]
+            [--out DIR] [--checkpoint DIR [--every N] [--crash-at-round R]]
+            resume a crashed --checkpoint run from its snapshot: the
+            fleet is restored bit-exactly and the run finished — report,
+            --json and --trace outputs match the uninterrupted run byte
+            for byte, under any --threads
   trace     FILE.jsonl [--site N] [--round A..B] [--kind K]
             [--explain SITE] [--summary]
             query a recorded TRACE_*.jsonl: stream matching lines, roll
@@ -503,7 +513,21 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         ..FleetConfig::default()
     };
     let sites = config.sites;
-    let out = figures::fleet_comparison(&config)?;
+    let opts = ckpt_options(args)?;
+    match figures::fleet_comparison_ckpt(&config, &opts)? {
+        frost::ckpt::DriveOutcome::Crashed { round, snapshot } => {
+            announce_crash(round, &snapshot);
+            Ok(())
+        }
+        frost::ckpt::DriveOutcome::Done(out) => print_fleet_output(args, &out, sites),
+    }
+}
+
+/// Print/export the `frost fleet` report.  Shared verbatim with
+/// `frost resume`, so a resumed run's stdout, `--out`, `--trace` and
+/// `--json` outputs are byte-identical to the uninterrupted run's.
+fn print_fleet_output(args: &Args, out: &figures::FleetFigOutput, sites: usize) -> Result<()> {
+    let trace_path = args.get("trace");
     print!("{}", out.table.to_table());
     println!();
     println!("=== fleet KPM/energy roll-up ===");
@@ -576,7 +600,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         println!("wrote {p} ({} trace events)", out.trace.len());
     }
     if let Some(p) = args.get("json") {
-        write_fleet_json(p, &out)?;
+        write_fleet_json(p, out)?;
         println!("wrote {p}");
     }
     Ok(())
@@ -867,9 +891,30 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         trace: trace_path.is_some(),
         ..FleetConfig::default()
     };
-    let out = figures::scenario_comparison(&config)?;
+    let opts = ckpt_options(args)?;
+    match figures::scenario_comparison_ckpt(&config, &opts)? {
+        frost::ckpt::DriveOutcome::Crashed { round, snapshot } => {
+            announce_crash(round, &snapshot);
+            Ok(())
+        }
+        frost::ckpt::DriveOutcome::Done(out) => {
+            print_scenario_output(args, &out, &tr, &scen.name, sites)
+        }
+    }
+}
 
-    println!("=== scenario '{}' event ledger ===", scen.name);
+/// Print/export the `frost scenario` report.  Shared verbatim with
+/// `frost resume`, so a resumed run's stdout, `--out`, `--trace` and
+/// `--json` outputs are byte-identical to the uninterrupted run's.
+fn print_scenario_output(
+    args: &Args,
+    out: &figures::ScenarioFigOutput,
+    tr: &frost::traffic::TrafficConfig,
+    scen_name: &str,
+    sites: usize,
+) -> Result<()> {
+    let trace_path = args.get("trace");
+    println!("=== scenario '{scen_name}' event ledger ===");
     for ev in &out.event_log {
         println!(
             "  round {:>3} (slot {:>2}): {}",
@@ -946,7 +991,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         println!("wrote {p} ({} trace events)", out.trace.len());
     }
     if let Some(p) = args.get("json") {
-        write_scenario_json(p, &out)?;
+        write_scenario_json(p, out)?;
         println!("wrote {p}");
     }
     Ok(())
@@ -1025,11 +1070,34 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     config.threads = args.require_u64("threads", 0, 0)? as usize;
     config.trace = trace_path.is_some();
     let faults = config.faults.clone().expect("chaos_config always sets a plan");
-    let out = figures::chaos_run(&config)?;
+    let opts = ckpt_options(args)?;
+    match figures::chaos_run_ckpt(&config, preset, &opts)? {
+        frost::ckpt::DriveOutcome::Crashed { round, snapshot } => {
+            announce_crash(round, &snapshot);
+            Ok(())
+        }
+        frost::ckpt::DriveOutcome::Done(out) => {
+            print_chaos_output(args, &out, preset, &faults, sites, seed, config.rounds)
+        }
+    }
+}
 
+/// Print/export the `frost chaos` report and apply its CI gates (budget
+/// conservation, self-healing).  Shared verbatim with `frost resume`, so
+/// a resumed run's output and exit status match the uninterrupted run's.
+fn print_chaos_output(
+    args: &Args,
+    out: &figures::ChaosFigOutput,
+    preset: &str,
+    faults: &frost::oran::FaultConfig,
+    sites: usize,
+    seed: u64,
+    rounds: u32,
+) -> Result<()> {
+    let trace_path = args.get("trace");
     println!(
         "=== chaos '{preset}': {sites} sites, seed {seed}, faults in rounds {}..={} of {} ===",
-        faults.start_round, faults.end_round, config.rounds
+        faults.start_round, faults.end_round, rounds
     );
     print!("{}", out.round_table.to_table());
     println!();
@@ -1084,6 +1152,123 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     );
     anyhow::ensure!(out.healed, "fleet did not heal over the quiet tail");
     Ok(())
+}
+
+/// Parse `--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]`
+/// into [`frost::ckpt::CkptOptions`].  The cadence/retention/crash flags
+/// are hard errors without `--checkpoint` — silently ignoring them would
+/// turn a typo into a run with no snapshots.  Rounds are 1-based (round
+/// 0 is the pre-run state; re-running from config covers it).
+fn ckpt_options(args: &Args) -> Result<frost::ckpt::CkptOptions> {
+    let mut opts = frost::ckpt::CkptOptions::disabled();
+    if let Some(dir) = args.get("checkpoint") {
+        // A bare `--checkpoint` (the boolean-flag parse) has no directory.
+        anyhow::ensure!(
+            dir != "true",
+            "--checkpoint needs a directory argument \
+             (use ./true for a directory literally named 'true')"
+        );
+        opts.dir = Some(std::path::PathBuf::from(dir));
+    }
+    opts.every = args.require_u32("every", 1, 1)?;
+    opts.keep = args.require_u64("keep", frost::ckpt::DEFAULT_KEEP as u64, 1)? as usize;
+    if args.get("crash-at-round").is_some() {
+        opts.crash_at = Some(args.require_u32("crash-at-round", 1, 1)?);
+    }
+    if !opts.enabled() {
+        anyhow::ensure!(
+            args.get("every").is_none()
+                && args.get("keep").is_none()
+                && args.get("crash-at-round").is_none(),
+            "--every/--keep/--crash-at-round require --checkpoint DIR"
+        );
+    }
+    Ok(opts)
+}
+
+/// Report an injected crash (`--crash-at-round`): the run stopped dead
+/// right after the round's snapshot became durable; nothing after the
+/// crash point (baseline leg, reports, exports) has run.
+fn announce_crash(round: u32, snapshot: &std::path::Path) {
+    println!("crash injected at round {round}; snapshot durable at {}", snapshot.display());
+    println!("resume with: frost resume {}", snapshot.display());
+}
+
+/// Resume a crashed `frost fleet|scenario|chaos --checkpoint` run from a
+/// snapshot file, dispatching on the snapshot's `kind` header.  The
+/// fleet is restored bit-exactly (optionally under a different
+/// `--threads`) and run to completion; output flags behave exactly as on
+/// the original command and produce byte-identical reports.
+fn cmd_resume(args: &Args) -> Result<()> {
+    use frost::ckpt::{DriveOutcome, Snapshot};
+    let Some(path) = args.get("file").or_else(|| args.pos(0)) else {
+        anyhow::bail!(
+            "missing snapshot: frost resume SNAPSHOT.{} [--threads T] \
+             [--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]] \
+             [--out DIR] [--trace FILE] [--json FILE]",
+            frost::ckpt::SNAP_EXT
+        );
+    };
+    let opts = ckpt_options(args)?;
+    let threads = if args.get("threads").is_some() {
+        Some(args.require_u64("threads", 0, 0)? as usize)
+    } else {
+        None
+    };
+    let snap = Snapshot::load(std::path::Path::new(path))?;
+    let config = frost::ckpt::snapshot_config(&snap)?;
+    // Stderr so stdout stays byte-comparable to the uninterrupted run.
+    eprintln!(
+        "resuming {} run from round {} of {} ({} sites, seed {})",
+        snap.header.kind, snap.header.round, config.rounds, config.sites, config.seed
+    );
+    match snap.header.kind.as_str() {
+        "fleet" => match figures::fleet_resume(&snap, threads, &opts)? {
+            DriveOutcome::Crashed { round, snapshot } => {
+                announce_crash(round, &snapshot);
+                Ok(())
+            }
+            DriveOutcome::Done(out) => print_fleet_output(args, &out, config.sites),
+        },
+        "scenario" => {
+            let tr = config.traffic.clone().context("scenario snapshot has no traffic config")?;
+            let scen_name = config
+                .scenario
+                .as_ref()
+                .map(|s| s.name.clone())
+                .context("scenario snapshot has no scenario script")?;
+            match figures::scenario_resume(&snap, threads, &opts)? {
+                DriveOutcome::Crashed { round, snapshot } => {
+                    announce_crash(round, &snapshot);
+                    Ok(())
+                }
+                DriveOutcome::Done(out) => {
+                    print_scenario_output(args, &out, &tr, &scen_name, config.sites)
+                }
+            }
+        }
+        "chaos" => {
+            let faults = config.faults.clone().context("chaos snapshot has no fault plan")?;
+            match figures::chaos_resume(&snap, threads, &opts)? {
+                DriveOutcome::Crashed { round, snapshot } => {
+                    announce_crash(round, &snapshot);
+                    Ok(())
+                }
+                DriveOutcome::Done(out) => print_chaos_output(
+                    args,
+                    &out,
+                    &snap.header.preset,
+                    &faults,
+                    config.sites,
+                    config.seed,
+                    config.rounds,
+                ),
+            }
+        }
+        other => anyhow::bail!(
+            "snapshot kind '{other}' is not resumable (expected fleet, scenario, or chaos)"
+        ),
+    }
 }
 
 /// Query a recorded `TRACE_*.jsonl` (DESIGN.md §14): stream matching
@@ -1319,6 +1504,79 @@ mod tests {
         assert!(cmd_chaos(&a).is_err());
         let a = args(&["chaos", "slow-fabric", "--seed", "-1"]);
         assert!(cmd_chaos(&a).is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_require_the_checkpoint_dir() {
+        // Cadence/retention/crash flags without --checkpoint are hard
+        // errors, not silently ignored knobs.
+        let a = args(&["fleet", "--crash-at-round", "3"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("require --checkpoint"), "got: {err}");
+        let a = args(&["chaos", "lossy-fabric", "--smoke", "--every", "2"]);
+        let err = cmd_chaos(&a).unwrap_err().to_string();
+        assert!(err.contains("require --checkpoint"), "got: {err}");
+        let a = args(&["scenario", "outage-day", "--smoke", "--keep", "5"]);
+        let err = cmd_scenario(&a).unwrap_err().to_string();
+        assert!(err.contains("require --checkpoint"), "got: {err}");
+        // A bare `--checkpoint` parses as a boolean flag — no directory.
+        let a = args(&["fleet", "--checkpoint", "--every", "2"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("needs a directory"), "got: {err}");
+    }
+
+    #[test]
+    fn checkpoint_rounds_and_retention_are_one_based_hard_errors() {
+        // Round 0 is the pre-run state (re-running from config covers
+        // it) and keep 0 would retain nothing — both hard errors.
+        let a = args(&["fleet", "--checkpoint", "ck", "--crash-at-round", "0"]);
+        let err = ckpt_options(&a).unwrap_err().to_string();
+        assert!(err.contains("--crash-at-round 0"), "got: {err}");
+        assert!(err.contains("must be >= 1"), "got: {err}");
+        let a = args(&["fleet", "--checkpoint", "ck", "--every", "0"]);
+        let err = ckpt_options(&a).unwrap_err().to_string();
+        assert!(err.contains("--every 0"), "got: {err}");
+        let a = args(&["fleet", "--checkpoint", "ck", "--keep", "0"]);
+        let err = ckpt_options(&a).unwrap_err().to_string();
+        assert!(err.contains("--keep 0"), "got: {err}");
+        // The happy path parses into enabled options.
+        let a = args(&[
+            "fleet",
+            "--checkpoint",
+            "ck",
+            "--every",
+            "2",
+            "--keep",
+            "5",
+            "--crash-at-round",
+            "3",
+        ]);
+        let o = ckpt_options(&a).unwrap();
+        assert!(o.enabled());
+        assert_eq!((o.every, o.keep, o.crash_at), (2, 5, Some(3)));
+    }
+
+    #[test]
+    fn reversed_trace_round_range_errors_before_the_file_is_opened() {
+        // `--round 7..3` is empty; the parse error must fire before the
+        // (nonexistent) file would be opened — asserting on the range
+        // message, not a file error, pins the ordering.
+        let a = args(&["trace", "nofile.jsonl", "--round", "7..3"]);
+        let err = cmd_trace(&a).unwrap_err().to_string();
+        assert!(err.contains("is empty"), "got: {err}");
+        let a = args(&["trace", "nofile.jsonl", "--round", ".."]);
+        let err = cmd_trace(&a).unwrap_err().to_string();
+        assert!(err.contains("empty round range"), "got: {err}");
+    }
+
+    #[test]
+    fn resume_requires_a_snapshot_path_and_a_readable_file() {
+        let a = args(&["resume"]);
+        let err = cmd_resume(&a).unwrap_err().to_string();
+        assert!(err.contains("missing snapshot"), "got: {err}");
+        let a = args(&["resume", "/nonexistent/x.frostsnap"]);
+        let err = format!("{:#}", cmd_resume(&a).unwrap_err());
+        assert!(err.contains("read snapshot"), "got: {err}");
     }
 
     #[test]

@@ -139,6 +139,33 @@ impl LatencyHistogram {
         self.count
     }
 
+    /// Sparse view of the occupied bins, `(bin index, count)` ascending —
+    /// the checkpoint representation (DESIGN.md §15): a day's histogram
+    /// touches a handful of the 1088 bins.
+    pub fn occupied_bins(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.bins.iter().enumerate().filter(|(_, &n)| n > 0).map(|(i, &n)| (i, n))
+    }
+
+    /// Rebuild from a checkpointed sparse bin list plus the non-finite
+    /// tally.  `count` is re-derived from the bins, so a tampered
+    /// snapshot cannot desynchronise the rank base from the bin mass.
+    /// Out-of-range bin indices are an error, surfaced as `None`.
+    pub fn from_sparse_bins(
+        bins: impl IntoIterator<Item = (usize, u64)>,
+        non_finite: u64,
+    ) -> Option<LatencyHistogram> {
+        let mut h = LatencyHistogram::new();
+        for (i, n) in bins {
+            if i >= BINS {
+                return None;
+            }
+            h.bins[i] += n;
+            h.count += n;
+        }
+        h.non_finite = non_finite;
+        Some(h)
+    }
+
     /// Non-finite samples skipped by [`Self::record_n`].
     pub fn non_finite(&self) -> u64 {
         self.non_finite

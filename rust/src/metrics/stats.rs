@@ -158,6 +158,18 @@ impl StreamingSummary {
         self.n
     }
 
+    /// Raw Welford accumulator state `(n, mean, m2, min, max)` for
+    /// checkpointing (DESIGN.md §15).
+    pub fn state_parts(&self) -> (u64, f64, f64, f64, f64) {
+        (self.n, self.mean, self.m2, self.min, self.max)
+    }
+
+    /// Rebuild the accumulator from checkpointed
+    /// [`StreamingSummary::state_parts`]; the stream continues bit-exactly.
+    pub fn from_parts(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> StreamingSummary {
+        StreamingSummary { n, mean, m2, min, max }
+    }
+
     /// The same five-number summary [`Summary::of`] computes, without the
     /// vector: empty → all zeros, n = 1 → std 0, else population std.
     pub fn finish(&self) -> Summary {

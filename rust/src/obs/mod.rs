@@ -66,6 +66,22 @@ impl CapCause {
     }
 }
 
+impl CapCause {
+    /// Inverse of [`CapCause::as_str`] (used by the checkpoint decoder,
+    /// DESIGN.md §15).
+    pub fn from_str_name(s: &str) -> Option<CapCause> {
+        Some(match s {
+            "budget-step" => CapCause::BudgetStep,
+            "water-fill" => CapCause::WaterFill,
+            "derate-clamp" => CapCause::DerateClamp,
+            "lease-fallback" => CapCause::LeaseFallback,
+            "quarantine" => CapCause::Quarantine,
+            "recovery" => CapCause::Recovery,
+            _ => return None,
+        })
+    }
+}
+
 impl fmt::Display for CapCause {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.as_str())
@@ -215,6 +231,25 @@ impl TraceSink {
     pub fn scenario_events(&self) -> impl Iterator<Item = &TraceEvent> {
         self.events.iter().filter(|e| matches!(e.data, TraceData::Scenario { .. }))
     }
+
+    /// Mutable sink state for checkpointing (DESIGN.md §15).  `enabled`
+    /// and `round_s` are construction parameters.
+    pub fn ckpt_state(&self) -> (u32, Option<u64>, &[TraceEvent]) {
+        (self.round, self.round_anchor, &self.events)
+    }
+
+    /// Overwrite the sink state from a checkpoint; subsequent event ids
+    /// continue from `events.len() + 1`.
+    pub fn restore_ckpt_state(
+        &mut self,
+        round: u32,
+        round_anchor: Option<u64>,
+        events: Vec<TraceEvent>,
+    ) {
+        self.round = round;
+        self.round_anchor = round_anchor;
+        self.events = events;
+    }
 }
 
 /// Named counters, gauges and streaming summaries (DESIGN.md §14).
@@ -278,6 +313,20 @@ impl MetricsRegistry {
 
     pub fn is_empty(&self) -> bool {
         self.counters.is_empty() && self.gauges.is_empty() && self.summaries.is_empty()
+    }
+
+    /// Overwrite the whole registry from a checkpoint (DESIGN.md §15).
+    /// Keys must already be interned to `&'static str` by the caller (the
+    /// checkpoint decoder resolves names against its known-name table).
+    pub fn restore_ckpt_state(
+        &mut self,
+        counters: impl IntoIterator<Item = (&'static str, u64)>,
+        gauges: impl IntoIterator<Item = (&'static str, f64)>,
+        summaries: impl IntoIterator<Item = (&'static str, StreamingSummary)>,
+    ) {
+        self.counters = counters.into_iter().collect();
+        self.gauges = gauges.into_iter().collect();
+        self.summaries = summaries.into_iter().collect();
     }
 }
 

@@ -75,6 +75,25 @@ impl A1PolicyService {
         self.policies.get(id)
     }
 
+    /// Checkpoint hook (§15): id-ordered policy instances plus the
+    /// subscriber list, in subscription order.
+    pub fn ckpt_state(&self) -> (Vec<&EnergyPolicy>, &[String]) {
+        (self.policies.values().collect(), &self.subscribers)
+    }
+
+    /// Restore the state captured by [`Self::ckpt_state`] directly —
+    /// deliberately NOT through [`Self::subscribe`]/[`Self::put_policy`],
+    /// which would replay the whole policy book onto the fabric and
+    /// diverge from the uninterrupted run.
+    pub fn restore_ckpt_state(
+        &mut self,
+        policies: impl IntoIterator<Item = EnergyPolicy>,
+        subscribers: Vec<String>,
+    ) {
+        self.policies = policies.into_iter().map(|p| (p.id.clone(), p)).collect();
+        self.subscribers = subscribers;
+    }
+
     pub fn len(&self) -> usize {
         self.policies.len()
     }

@@ -371,6 +371,155 @@ impl Bus {
     pub fn stats(&self) -> BTreeMap<&'static str, u64> {
         self.stats.lock().unwrap().clone()
     }
+
+    // ---------------------------------------------- checkpoint hooks (§15)
+    //
+    // Messages cross the snapshot boundary **name-keyed**: numeric
+    // `EndpointId`s are intern-order artifacts of one process, but the
+    // fabric is constructed deterministically, so after reconstruction the
+    // same names resolve to the same ids.  The pending-vs-interned
+    // distinction of each recipient is preserved explicitly — it feeds the
+    // fault-edge key ([`Bus::edge_of`]), so collapsing a `Pending` name to
+    // an id would change downstream fault draws.
+
+    /// The undelivered queue: `(from, to, pending, message)` in FIFO order.
+    pub fn ckpt_queue(&self) -> Vec<(Arc<str>, Arc<str>, bool, OranMessage)> {
+        let dir = self.dir.lock().unwrap();
+        self.queue
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(from, to, msg)| {
+                let (to, pending) = match to {
+                    Recipient::Id(id) => (dir.names[id.index()].clone(), false),
+                    Recipient::Pending(name) => (name.clone(), true),
+                };
+                (dir.names[from.index()].clone(), to, pending, msg.clone())
+            })
+            .collect()
+    }
+
+    /// Replace the undelivered queue with checkpointed contents
+    /// (discarding anything construction left queued — the original run
+    /// had already pumped it by the snapshot round).
+    pub fn restore_ckpt_queue(
+        &self,
+        items: impl IntoIterator<Item = (Arc<str>, Arc<str>, bool, OranMessage)>,
+    ) {
+        let mut dir = self.dir.lock().unwrap();
+        let mut queue = self.queue.lock().unwrap();
+        queue.clear();
+        for (from, to, pending, msg) in items {
+            let from = dir.intern(&from);
+            let to = if pending {
+                Recipient::Pending(to)
+            } else {
+                Recipient::Id(dir.intern(&to))
+            };
+            queue.push_back((from, to, msg));
+        }
+    }
+
+    /// Delay-held messages: `(due_round, from, to, pending, message)` in
+    /// hold order.
+    pub fn ckpt_held(&self) -> Vec<(u32, Arc<str>, Arc<str>, bool, OranMessage)> {
+        let dir = self.dir.lock().unwrap();
+        self.fault
+            .lock()
+            .unwrap()
+            .held
+            .iter()
+            .map(|(due, from, to, msg)| {
+                let (to, pending) = match to {
+                    Recipient::Id(id) => (dir.names[id.index()].clone(), false),
+                    Recipient::Pending(name) => (name.clone(), true),
+                };
+                (*due, dir.names[from.index()].clone(), to, pending, msg.clone())
+            })
+            .collect()
+    }
+
+    /// Restore the delay-hold buffer.  Must run AFTER the fault plan is
+    /// installed — [`Bus::set_fault_plan`] clears `held`.
+    pub fn restore_ckpt_held(
+        &self,
+        items: impl IntoIterator<Item = (u32, Arc<str>, Arc<str>, bool, OranMessage)>,
+    ) {
+        let mut dir = self.dir.lock().unwrap();
+        let mut fault = self.fault.lock().unwrap();
+        fault.held.clear();
+        for (due, from, to, pending, msg) in items {
+            let from = dir.intern(&from);
+            let to = if pending {
+                Recipient::Pending(to)
+            } else {
+                Recipient::Id(dir.intern(&to))
+            };
+            fault.held.push((due, from, to, msg));
+        }
+    }
+
+    /// Delivered-but-undrained inbox contents, registration-ordered:
+    /// `(endpoint, [(sender, message)])` for every non-empty inbox.
+    pub fn ckpt_inboxes(&self) -> Vec<(Arc<str>, Vec<(Arc<str>, OranMessage)>)> {
+        let dir = self.dir.lock().unwrap();
+        let mut out = Vec::new();
+        for slot in dir.slots.iter().flatten() {
+            let inbox = slot.inbox.lock().unwrap();
+            if !inbox.is_empty() {
+                out.push((slot.name.clone(), inbox.iter().cloned().collect()));
+            }
+        }
+        out
+    }
+
+    /// Clear every registered inbox, then refill the named ones with
+    /// checkpointed contents.
+    pub fn restore_ckpt_inboxes(
+        &self,
+        items: impl IntoIterator<Item = (Arc<str>, Vec<(Arc<str>, OranMessage)>)>,
+    ) {
+        {
+            let dir = self.dir.lock().unwrap();
+            for slot in dir.slots.iter().flatten() {
+                slot.inbox.lock().unwrap().clear();
+            }
+        }
+        for (name, msgs) in items {
+            let ep = self.endpoint(&name);
+            let mut inbox = ep.inbox.lock().unwrap();
+            for (sender, msg) in msgs {
+                // Senders re-intern so the restored handle shares the
+                // fabric's table like a delivered message would.
+                let sender = {
+                    let mut dir = self.dir.lock().unwrap();
+                    let id = dir.intern(&sender);
+                    dir.names[id.index()].clone()
+                };
+                inbox.push_back((sender, msg));
+            }
+        }
+    }
+
+    /// Replace the per-interface statistics with checkpointed counters.
+    pub fn restore_ckpt_stats(&self, stats: impl IntoIterator<Item = (&'static str, u64)>) {
+        *self.stats.lock().unwrap() = stats.into_iter().collect();
+    }
+
+    /// The installed fault plan's live cursors and ledger (None without a
+    /// plan).
+    pub fn ckpt_fault_state(&self) -> Option<(u32, u64, FaultLedger)> {
+        self.fault.lock().unwrap().plan.as_ref().map(FaultPlan::ckpt_state)
+    }
+
+    /// Restore the installed fault plan's cursors and ledger.  A no-op
+    /// without a plan (the config that reconstructs the bus decides
+    /// whether one is installed).
+    pub fn restore_ckpt_fault_state(&self, round: u32, seq: u64, ledger: FaultLedger) {
+        if let Some(plan) = self.fault.lock().unwrap().plan.as_mut() {
+            plan.restore_ckpt_state(round, seq, ledger);
+        }
+    }
 }
 
 /// FNV-1a 64-bit: a stable, dependency-free hash for fault-edge keys of

@@ -147,6 +147,18 @@ impl ModelCatalogue {
         self.entries.is_empty()
     }
 
+    /// Checkpoint hook (§15): name-ordered entry iteration (BTreeMap
+    /// order, so the snapshot bytes are deterministic).
+    pub fn ckpt_entries(&self) -> impl Iterator<Item = &CatalogueEntry> {
+        self.entries.values()
+    }
+
+    /// Restore the entry map captured by [`Self::ckpt_entries`]
+    /// (`min_accuracy` comes from reconstruction, not the snapshot).
+    pub fn restore_ckpt_state(&mut self, entries: impl IntoIterator<Item = CatalogueEntry>) {
+        self.entries = entries.into_iter().map(|e| (e.name.clone(), e)).collect();
+    }
+
     fn entry_mut(&mut self, name: &str) -> Result<&mut CatalogueEntry> {
         self.entries.get_mut(name).with_context(|| format!("model '{name}' not in catalogue"))
     }

@@ -312,6 +312,22 @@ impl FaultPlan {
         &self.cfg
     }
 
+    /// Checkpoint hook (§15): the live cursors and the ledger.  `cfg` is
+    /// reconstructed from the serialized [`FaultConfig`], the trace gate
+    /// is re-armed by the restorer via [`Self::set_trace`], and
+    /// `trace_events` is empty at every round boundary (the coordinator
+    /// drains it once per round).
+    pub fn ckpt_state(&self) -> (u32, u64, FaultLedger) {
+        (self.round, self.seq, self.ledger.clone())
+    }
+
+    /// Restore the cursors and ledger captured by [`Self::ckpt_state`].
+    pub fn restore_ckpt_state(&mut self, round: u32, seq: u64, ledger: FaultLedger) {
+        self.round = round;
+        self.seq = seq;
+        self.ledger = ledger;
+    }
+
     pub fn ledger(&self) -> &FaultLedger {
         &self.ledger
     }

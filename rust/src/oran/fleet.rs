@@ -269,6 +269,39 @@ impl SiteTraffic {
         self.monitor.counters()
     }
 
+    /// Checkpoint access to the arrival generator (§15).  Together with
+    /// the monitor and the shed ledger these are the only private fields
+    /// with live state at a round boundary: `reprofile_pending` is
+    /// consumed by the coordinator every round, and the batch former /
+    /// arrival buffers carry no state between slots, so all of those
+    /// rebuild from config.
+    pub fn ckpt_gen(&self) -> &ArrivalGen {
+        &self.gen
+    }
+
+    pub fn ckpt_gen_mut(&mut self) -> &mut ArrivalGen {
+        &mut self.gen
+    }
+
+    /// Checkpoint access to the demand monitor (§15).
+    pub fn ckpt_monitor(&self) -> &ContinuousMonitor {
+        &self.monitor
+    }
+
+    pub fn ckpt_monitor_mut(&mut self) -> &mut ContinuousMonitor {
+        &mut self.monitor
+    }
+
+    /// Requests shed during an outage but not yet charged to a slot
+    /// ledger — live across round boundaries while a site is dark (§15).
+    pub fn ckpt_pending_shed(&self) -> u64 {
+        self.pending_shed
+    }
+
+    pub fn restore_ckpt_pending_shed(&mut self, shed: u64) {
+        self.pending_shed = shed;
+    }
+
     /// Roll the day ledgers over when this slot starts a new day and
     /// return `(slot_in_day, t0)` — shared by the serving path and the
     /// outage idle path, so a down slot keeps the day clock honest.
@@ -390,6 +423,27 @@ pub struct FleetSite {
 }
 
 impl FleetSite {
+    /// Checkpoint access to the site-local fabric shard (§15), so the
+    /// snapshot layer can serialise its queue/inboxes/stats by endpoint
+    /// name.
+    pub fn ckpt_local_bus(&self) -> &Arc<Bus> {
+        &self.local_bus
+    }
+
+    /// Private per-site scalars a checkpoint must carry (§15): the zoo
+    /// cursor (churn state) and the round counter (drives the warm-up →
+    /// traffic handover).  The outbox is always empty at a round
+    /// boundary — the upward gateway drains it every round — so it is
+    /// deliberately not part of the snapshot.
+    pub fn ckpt_site_state(&self) -> (usize, u32) {
+        (self.zoo_index, self.rounds_run)
+    }
+
+    pub fn restore_ckpt_site_state(&mut self, zoo_index: usize, rounds_run: u32) {
+        self.zoo_index = zoo_index;
+        self.rounds_run = rounds_run;
+    }
+
     /// One site round, run on a worker thread. Touches only site-local
     /// state; cross-site traffic is deferred to `outbox`.
     fn run_round(&mut self, cfg: &FleetConfig) {
@@ -1941,6 +1995,127 @@ impl Fleet {
             lease_renewals: metrics.counter("lease.renewals"),
             metrics,
         }
+    }
+
+    // ---- checkpoint hooks (DESIGN.md §15) ------------------------------
+    //
+    // Everything below exists so `crate::ckpt::snapshot` can read and
+    // restore the coordinator's *private* state; pub fields (round, smo,
+    // nonrt, sites, bus, trace, config) are reached directly.  None of
+    // these run on the hot path.
+
+    /// Private coordinator scalars `(profiles_ingested,
+    /// lifecycle_ingested, budget_applied, ever_enforced,
+    /// pending_cause)`.  `round` is pub and travels in the snapshot
+    /// header instead.
+    #[allow(clippy::type_complexity)]
+    pub fn ckpt_coord_state(
+        &self,
+    ) -> (usize, usize, bool, bool, Option<(CapCause, Option<u64>)>) {
+        (
+            self.profiles_ingested,
+            self.lifecycle_ingested,
+            self.budget_applied,
+            self.ever_enforced,
+            self.pending_cause,
+        )
+    }
+
+    pub fn restore_ckpt_coord_state(
+        &mut self,
+        profiles_ingested: usize,
+        lifecycle_ingested: usize,
+        budget_applied: bool,
+        ever_enforced: bool,
+        pending_cause: Option<(CapCause, Option<u64>)>,
+    ) {
+        self.profiles_ingested = profiles_ingested;
+        self.lifecycle_ingested = lifecycle_ingested;
+        self.budget_applied = budget_applied;
+        self.ever_enforced = ever_enforced;
+        self.pending_cause = pending_cause;
+    }
+
+    /// Mutable scenario-runtime state `(next, surge, derate, pre_derate,
+    /// budget_frac)`; None when the fleet runs no scenario.
+    #[allow(clippy::type_complexity)]
+    pub fn ckpt_scenario_state(
+        &self,
+    ) -> Option<(usize, &[f64], &[f64], &[Option<(f64, f64)>], f64)> {
+        self.scenario_rt.as_ref().map(|rt| {
+            (
+                rt.next,
+                rt.surge.as_slice(),
+                rt.derate.as_slice(),
+                rt.pre_derate.as_slice(),
+                rt.budget_frac,
+            )
+        })
+    }
+
+    /// Restore the scenario runtime.  No-op on a scenario-free fleet
+    /// (whose snapshots carry no scenario section either).
+    pub fn restore_ckpt_scenario_state(
+        &mut self,
+        next: usize,
+        surge: Vec<f64>,
+        derate: Vec<f64>,
+        pre_derate: Vec<Option<(f64, f64)>>,
+        budget_frac: f64,
+    ) {
+        if let Some(rt) = self.scenario_rt.as_mut() {
+            rt.next = next;
+            rt.surge = surge;
+            rt.derate = derate;
+            rt.pre_derate = pre_derate;
+            rt.budget_frac = budget_frac;
+        }
+    }
+
+    /// Per-site quarantine release rounds (None = not quarantined).
+    pub fn ckpt_quarantine_release(&self) -> &[Option<u32>] {
+        &self.quarantine_release
+    }
+
+    pub fn restore_ckpt_quarantine_release(&mut self, release: Vec<Option<u32>>) {
+        self.quarantine_release = release;
+    }
+
+    /// The shared profile-health ledger `(quarantined sites,
+    /// quarantine_events)`, cloned out of its mutex.
+    pub fn ckpt_profile_health(&self) -> (Vec<String>, u64) {
+        let h = lock_recovering(&self.profile_health);
+        (h.quarantined.iter().cloned().collect(), h.quarantine_events)
+    }
+
+    pub fn restore_ckpt_profile_health(
+        &mut self,
+        quarantined: Vec<String>,
+        quarantine_events: u64,
+    ) {
+        let mut h = lock_recovering(&self.profile_health);
+        h.quarantined = quarantined.into_iter().collect();
+        h.quarantine_events = quarantine_events;
+    }
+
+    /// The scheduler's shared assignment table, cloned out of its mutex.
+    pub fn ckpt_assignments(&self) -> Vec<(String, String)> {
+        lock_recovering(&self.assignments).clone()
+    }
+
+    pub fn restore_ckpt_assignments(&mut self, assignments: Vec<(String, String)>) {
+        *lock_recovering(&self.assignments) = assignments;
+    }
+
+    /// The live coordinator metrics registry (lease renewals, holdback
+    /// drops, per-round cap-wattage summary — NOT the derived counters
+    /// [`Fleet::report`] folds in, which recompute from live state).
+    pub fn ckpt_metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn ckpt_metrics_mut(&mut self) -> &mut MetricsRegistry {
+        &mut self.metrics
     }
 }
 

@@ -243,6 +243,34 @@ impl InferenceHost {
         self.pre_fallback_cap.is_some()
     }
 
+    /// Checkpoint hook (§15): the private host fields the snapshot needs
+    /// — model store, KPM sequence cursor, and the lease state machine.
+    /// Pub fields (`policy`, `batch`, totals, logs, `lease_expiries`) are
+    /// handled by the snapshot layer directly; `trace_caps` is re-armed
+    /// from the config at reconstruction and `cap_events` is empty at
+    /// round boundaries (drained every round).
+    pub fn ckpt_state(
+        &self,
+    ) -> (&BTreeMap<String, WorkloadDescriptor>, u64, Option<u32>, Option<f64>) {
+        (&self.store, self.kpm_seq, self.lease_left, self.pre_fallback_cap)
+    }
+
+    /// Restore the state captured by [`Self::ckpt_state`].  The store is
+    /// set directly — NOT through [`Self::deploy`], which would emit a
+    /// spurious `Deployed` lifecycle event onto the fabric.
+    pub fn restore_ckpt_state(
+        &mut self,
+        store: BTreeMap<String, WorkloadDescriptor>,
+        kpm_seq: u64,
+        lease_left: Option<u32>,
+        pre_fallback_cap: Option<f64>,
+    ) {
+        self.store = store;
+        self.kpm_seq = kpm_seq;
+        self.lease_left = lease_left;
+        self.pre_fallback_cap = pre_fallback_cap;
+    }
+
     fn run_profiler(&mut self, w: &WorkloadDescriptor) -> ProfileOutcome {
         let profiler =
             PowerProfiler::with_policy(self.profiler_config.clone(), self.policy.clone());

@@ -44,6 +44,6 @@ pub use messages::OranMessage;
 pub use nearrt_ric::{NearRtRic, XApp};
 pub use nonrt_ric::{
     lock_recovering, FleetAssignments, FleetProfileScheduler, NonRtRic, ProfileHealth,
-    ProfileHealthState, RApp,
+    ProfileHealthState, RApp, SchedulerCkpt,
 };
 pub use smo::Smo;

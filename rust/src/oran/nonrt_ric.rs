@@ -227,6 +227,58 @@ impl RApp for FleetProfileScheduler {
         }
         self.cursor = (self.cursor + 1) % n;
     }
+
+    fn ckpt_state(&self) -> Option<SchedulerCkpt> {
+        Some(SchedulerCkpt {
+            cursor: self.cursor,
+            requested: self.requested,
+            rng: self.rng.state_parts(),
+            round: self.round,
+            pending: self
+                .pending
+                .iter()
+                .map(|(site, p)| (site.clone(), p.attempts, p.next_retry))
+                .collect(),
+            retries: self.retries,
+        })
+    }
+
+    /// Restore the cursors, jitter stream and in-flight request table.
+    /// `timeout_rounds`/`max_attempts`/`health`/`assignments` come from
+    /// reconstruction ([`FleetProfileScheduler::with_resilience`]), not
+    /// the snapshot.
+    fn restore_ckpt_state(&mut self, s: &SchedulerCkpt) {
+        self.cursor = s.cursor;
+        self.requested = s.requested;
+        self.rng = Pcg32::from_parts(s.rng.0, s.rng.1);
+        self.round = s.round;
+        self.pending = s
+            .pending
+            .iter()
+            .map(|(site, attempts, next_retry)| {
+                (
+                    site.clone(),
+                    PendingProfile { attempts: *attempts, next_retry: *next_retry },
+                )
+            })
+            .collect();
+        self.retries = s.retries;
+    }
+}
+
+/// Checkpointable state of a [`FleetProfileScheduler`] (§15).  A plain
+/// data struct (not a generic writer) because it crosses the [`RApp`]
+/// trait-object boundary: trait objects cannot carry generic methods.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchedulerCkpt {
+    pub cursor: usize,
+    pub requested: u64,
+    /// `(state, inc)` of the retry-jitter generator, mid-stream.
+    pub rng: (u64, u64),
+    pub round: u64,
+    /// `(site, attempts, next_retry)` per in-flight request, site-ordered.
+    pub pending: Vec<(String, u32, u64)>,
+    pub retries: u64,
 }
 
 /// A microservice hosted by the non-RT RIC.
@@ -234,6 +286,12 @@ pub trait RApp: Send {
     fn name(&self) -> &str;
     /// Called once per orchestration round with the RIC context.
     fn step(&mut self, ric: &mut RicContext);
+    /// Checkpoint hook (§15): rApps with live state return it here; the
+    /// default (stateless rApp) returns None and restores nothing.
+    fn ckpt_state(&self) -> Option<SchedulerCkpt> {
+        None
+    }
+    fn restore_ckpt_state(&mut self, _s: &SchedulerCkpt) {}
 }
 
 /// What an rApp may touch during a step.
@@ -265,6 +323,20 @@ impl NonRtRic {
 
     pub fn add_rapp(&mut self, rapp: Box<dyn RApp>) {
         self.rapps.push(rapp);
+    }
+
+    /// Checkpoint hook (§15): the first hosted rApp with live state (the
+    /// fleet hosts exactly one, the profile scheduler).
+    pub fn ckpt_scheduler_state(&self) -> Option<SchedulerCkpt> {
+        self.rapps.iter().find_map(|r| r.ckpt_state())
+    }
+
+    /// Offer checkpointed scheduler state to every hosted rApp (stateless
+    /// ones ignore it).
+    pub fn restore_scheduler_state(&mut self, s: &SchedulerCkpt) {
+        for rapp in &mut self.rapps {
+            rapp.restore_ckpt_state(s);
+        }
     }
 
     /// Process inbox (training events) and run every rApp once.

@@ -276,6 +276,50 @@ impl Smo {
         &self.latency_p99
     }
 
+    /// Checkpoint hook (§15): the five private ingest maps, each iterated
+    /// in its BTreeMap key order.  The pub logs (`kpms`,
+    /// `profile_records`, `lifecycle_log`) are serialized directly by the
+    /// snapshot layer; `trace` is re-armed from the config at
+    /// reconstruction and `trace_rejects` is empty at round boundaries
+    /// (drained every round).
+    #[allow(clippy::type_complexity)]
+    pub fn ckpt_state(
+        &self,
+    ) -> (
+        &std::collections::BTreeMap<String, f64>,
+        &std::collections::BTreeMap<String, f64>,
+        &std::collections::BTreeMap<String, (f64, u64)>,
+        &std::collections::BTreeMap<&'static str, u64>,
+        &std::collections::BTreeMap<String, EnergyPolicy>,
+    ) {
+        (
+            &self.offered_load,
+            &self.latency_p99,
+            &self.kpm_watermarks,
+            &self.kpm_rejects,
+            &self.policy_book,
+        )
+    }
+
+    /// Restore the maps captured by [`Smo::ckpt_state`], replacing
+    /// whatever construction left behind.  Policies land directly in the
+    /// book — NOT through [`Smo::push_policy_to`], which would re-push
+    /// them onto the fabric.
+    pub fn restore_ckpt_state(
+        &mut self,
+        offered_load: std::collections::BTreeMap<String, f64>,
+        latency_p99: std::collections::BTreeMap<String, f64>,
+        kpm_watermarks: std::collections::BTreeMap<String, (f64, u64)>,
+        kpm_rejects: std::collections::BTreeMap<&'static str, u64>,
+        policy_book: std::collections::BTreeMap<String, EnergyPolicy>,
+    ) {
+        self.offered_load = offered_load;
+        self.latency_p99 = latency_p99;
+        self.kpm_watermarks = kpm_watermarks;
+        self.kpm_rejects = kpm_rejects;
+        self.policy_book = policy_book;
+    }
+
     /// Mean energy saving across the FROST decisions recorded so far.
     pub fn mean_energy_saving(&self) -> f64 {
         if self.profile_records.is_empty() {

@@ -65,6 +65,68 @@ impl WorkloadFingerprint {
             cpu_util: w.cpu_util.to_bits(),
         }
     }
+
+    fn to_bits(self) -> [u64; 7] {
+        [
+            self.train_flops,
+            self.train_bytes,
+            self.infer_flops,
+            self.infer_bytes,
+            self.host_s,
+            self.efficiency,
+            self.cpu_util,
+        ]
+    }
+
+    fn from_bits(b: [u64; 7]) -> WorkloadFingerprint {
+        WorkloadFingerprint {
+            train_flops: b[0],
+            train_bytes: b[1],
+            infer_flops: b[2],
+            infer_bytes: b[3],
+            host_s: b[4],
+            efficiency: b[5],
+            cpu_util: b[6],
+        }
+    }
+
+    /// A descriptor carrying exactly the solver-relevant fields.  The
+    /// reporting-only fields (`name`, `params`, `reference_accuracy`) are
+    /// not fingerprinted because the solver never reads them, so any value
+    /// yields the same `StepEstimate` bits.
+    fn descriptor(self) -> WorkloadDescriptor {
+        WorkloadDescriptor {
+            name: String::new(),
+            train_flops_per_sample: f64::from_bits(self.train_flops),
+            infer_flops_per_sample: f64::from_bits(self.infer_flops),
+            train_bytes_per_sample: f64::from_bits(self.train_bytes),
+            infer_bytes_per_sample: f64::from_bits(self.infer_bytes),
+            host_s_per_batch: f64::from_bits(self.host_s),
+            kernel_efficiency: f64::from_bits(self.efficiency),
+            cpu_util: f64::from_bits(self.cpu_util),
+            params: 0,
+            reference_accuracy: 0.0,
+        }
+    }
+}
+
+/// Checkpoint image of the memo table (DESIGN.md §15).
+///
+/// Estimates themselves are *not* captured: each is a pure function of
+/// (fingerprint, batch, kind, cap) and the execution model, so restore
+/// re-runs the solver once per retained key.  What must survive exactly
+/// are the interner (ids are assigned first-seen and future interning
+/// continues from `len()`), the key set (it decides every future
+/// hit/miss split), and the counters (they fold into `FleetReport`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CacheCkpt {
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidations: u64,
+    /// Interned workloads as (7 solver-field bit patterns, id), id-sorted.
+    pub workloads: Vec<([u64; 7], u32)>,
+    /// Memo keys as (workload id, batch, train?, cap bits), sorted.
+    pub keys: Vec<(u32, u32, bool, u64)>,
 }
 
 /// Interned workload identity (index into the cache's intern table).
@@ -83,9 +145,9 @@ struct StepKey {
 /// Memo table for [`StepEstimate`]s; owned by a `Testbed`.
 #[derive(Debug, Clone, Default)]
 pub struct StepEstimateCache {
-    // frost-lint: allow(R2, reason = "hot-path memo table; lookup/insert only, never iterated")
+    // frost-lint: allow(R2, reason = "hot-path memo table; ckpt_state sorts before iterating")
     interner: HashMap<WorkloadFingerprint, WorkloadId>,
-    // frost-lint: allow(R2, reason = "hot-path memo table; lookup/insert only, never iterated")
+    // frost-lint: allow(R2, reason = "hot-path memo table; ckpt_state sorts before iterating")
     entries: HashMap<StepKey, StepEstimate>,
     hits: u64,
     misses: u64,
@@ -158,6 +220,64 @@ impl StepEstimateCache {
     /// (hits, misses) since construction — misses equal solver runs.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
+    }
+
+    /// Capture the cache for a fleet snapshot.  Both `HashMap`s iterate in
+    /// nondeterministic order, so the image is put into canonical sorted
+    /// order here — snapshot bytes must not depend on hasher seeds.
+    pub fn ckpt_state(&self) -> CacheCkpt {
+        let mut workloads: Vec<([u64; 7], u32)> =
+            self.interner.iter().map(|(fp, id)| (fp.to_bits(), id.0)).collect();
+        workloads.sort_by_key(|&(_, id)| id);
+        let mut keys: Vec<(u32, u32, bool, u64)> = self
+            .entries
+            .keys()
+            .map(|k| (k.workload.0, k.batch, k.kind == StepKind::Train, k.cap_bits))
+            .collect();
+        keys.sort_unstable();
+        CacheCkpt {
+            hits: self.hits,
+            misses: self.misses,
+            invalidations: self.invalidations,
+            workloads,
+            keys,
+        }
+    }
+
+    /// Rebuild the memo table from a checkpoint image.  Runs the solver
+    /// once per retained key (estimates are pure, so recomputation is
+    /// bit-exact); keys whose cap no longer matches `exec`'s enforced cap
+    /// are dropped — they could never be hit, and the restore path installs
+    /// the cap before this runs.  Overwrites the counters last, undoing the
+    /// spurious `invalidate()` that `Testbed::restore_ckpt_state` performs.
+    pub fn restore_ckpt_state(&mut self, exec: &ExecutionModel, s: &CacheCkpt) {
+        self.interner.clear();
+        self.interner.reserve(s.workloads.len());
+        for &(bits, id) in &s.workloads {
+            self.interner.insert(WorkloadFingerprint::from_bits(bits), WorkloadId(id));
+        }
+        self.entries.clear();
+        let live_cap = exec.gpu.cap_frac().to_bits();
+        for &(wid, batch, train, cap_bits) in &s.keys {
+            if cap_bits != live_cap {
+                continue;
+            }
+            let fp = match s.workloads.iter().find(|&&(_, id)| id == wid) {
+                Some(&(bits, _)) => WorkloadFingerprint::from_bits(bits),
+                None => continue,
+            };
+            let w = fp.descriptor();
+            let kind = if train { StepKind::Train } else { StepKind::Infer };
+            let est = match kind {
+                StepKind::Train => exec.train_step(&w, batch),
+                StepKind::Infer => exec.infer_step(&w, batch),
+            };
+            self.entries
+                .insert(StepKey { workload: WorkloadId(wid), batch, kind, cap_bits }, est);
+        }
+        self.hits = s.hits;
+        self.misses = s.misses;
+        self.invalidations = s.invalidations;
     }
 }
 
@@ -250,6 +370,64 @@ mod tests {
         cache.estimate(&e, &w, 64, StepKind::Train);
         cache.estimate(&e, &w, 128, StepKind::Infer);
         assert_eq!(cache.stats(), (0, 3));
+    }
+
+    #[test]
+    fn ckpt_round_trip_restores_counters_entries_and_interner_order() {
+        let mut e = exec();
+        e.gpu.set_cap_frac(0.8);
+        let mut cache = StepEstimateCache::new();
+        let a = wl("a", 1.6e9);
+        let b = wl("b", 3.2e9);
+        let ea = cache.estimate(&e, &a, 128, StepKind::Train);
+        cache.estimate(&e, &a, 128, StepKind::Train); // hit
+        cache.estimate(&e, &b, 64, StepKind::Infer);
+        cache.invalidate();
+        let eb = cache.estimate(&e, &b, 64, StepKind::Infer);
+        cache.estimate(&e, &a, 128, StepKind::Train);
+        assert_eq!(cache.stats(), (1, 4));
+        assert_eq!(cache.invalidations(), 1);
+
+        let img = cache.ckpt_state();
+        assert_eq!(img.workloads.len(), 2);
+        assert_eq!(img.keys.len(), 2);
+
+        // A victim that has seen unrelated history: restore must overwrite
+        // everything, including the invalidation its owner's restore added.
+        let mut restored = StepEstimateCache::new();
+        restored.estimate(&e, &wl("noise", 9.9e9), 8, StepKind::Train);
+        restored.invalidate();
+        restored.restore_ckpt_state(&e, &img);
+        assert_eq!(restored.stats(), (1, 4));
+        assert_eq!(restored.invalidations(), 1);
+        assert_eq!(restored.len(), 2);
+        assert_eq!(restored.ckpt_state(), img, "image is a fixed point");
+
+        // Every future lookup behaves exactly as in the original cache:
+        // old keys hit with identical bits, new workloads intern past the
+        // restored table without colliding.
+        let ra = restored.estimate(&e, &a, 128, StepKind::Train);
+        let rb = restored.estimate(&e, &b, 64, StepKind::Infer);
+        assert_bit_identical(&ra, &ea);
+        assert_bit_identical(&rb, &eb);
+        assert_eq!(restored.stats(), (3, 4), "restored keys are hits");
+        restored.estimate(&e, &wl("c", 0.8e9), 32, StepKind::Train);
+        assert_eq!(restored.stats(), (3, 5));
+        assert_eq!(restored.ckpt_state().workloads.len(), 3);
+    }
+
+    #[test]
+    fn ckpt_restore_drops_keys_from_a_different_cap() {
+        let mut e = exec();
+        e.gpu.set_cap_frac(0.8);
+        let mut cache = StepEstimateCache::new();
+        cache.estimate(&e, &wl("w", 1.6e9), 128, StepKind::Train);
+        let img = cache.ckpt_state();
+        e.gpu.set_cap_frac(0.6);
+        let mut restored = StepEstimateCache::new();
+        restored.restore_ckpt_state(&e, &img);
+        assert!(restored.is_empty(), "stale-cap keys are unreachable");
+        assert_eq!(restored.stats(), (0, 1), "counters restored regardless");
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod exec;
 pub mod testbed;
 pub mod workload;
 
-pub use cache::{StepEstimateCache, StepKind};
+pub use cache::{CacheCkpt, StepEstimateCache, StepKind};
 pub use clock::{Clock, SimClock, WallClock};
 pub use dvfs::{capping_vs_dvfs, dvfs_optimal, DvfsChoice};
 pub use exec::{ExecutionModel, StepEstimate};

@@ -11,7 +11,7 @@ use crate::config::HardwareConfig;
 use crate::power::{CpuPowerModel, DramPowerModel, GpuPowerModel};
 use crate::util::{Joules, Pcg32, Seconds, Watts};
 
-use super::cache::{StepEstimateCache, StepKind};
+use super::cache::{CacheCkpt, StepEstimateCache, StepKind};
 use super::clock::{Clock, SimClock};
 use super::exec::{ExecutionModel, StepEstimate};
 use super::workload::WorkloadDescriptor;
@@ -112,6 +112,20 @@ impl Testbed {
 
     pub fn cap_frac(&self) -> f64 {
         self.exec.gpu.cap_frac()
+    }
+
+    /// Capture the step-estimate cache for a fleet snapshot (DESIGN.md §15).
+    pub fn ckpt_cache(&self) -> CacheCkpt {
+        self.cache.ckpt_state()
+    }
+
+    /// Restore the step-estimate cache from a snapshot image.  Must run
+    /// *after* [`Testbed::restore_ckpt_state`]: that hook installs the cap
+    /// the retained keys were solved under, and its defensive `invalidate()`
+    /// bumps a counter this restore then overwrites.
+    pub fn restore_ckpt_cache(&mut self, img: &CacheCkpt) {
+        let Testbed { exec, cache, .. } = self;
+        cache.restore_ckpt_state(exec, img);
     }
 
     /// Simulate `n` training steps, advancing the virtual clock.
@@ -221,6 +235,22 @@ impl Testbed {
                 self.exec.dram.idle_power(),
             ),
         }
+    }
+
+    /// Mutable testbed state for checkpointing (DESIGN.md §15): the jitter
+    /// RNG stream, the enforced cap fraction, and the virtual clock.  The
+    /// step-estimate cache is pure memoization and is rebuilt on demand.
+    pub fn ckpt_state(&self) -> ((u64, u64), f64, f64) {
+        (self.rng.state_parts(), self.cap_frac(), self.clock.now().0)
+    }
+
+    /// Overwrite the testbed state from a checkpoint.  The cache is
+    /// invalidated; re-solving is bit-identical to a memoized hit.
+    pub fn restore_ckpt_state(&mut self, ((state, inc), cap_frac, now): ((u64, u64), f64, f64)) {
+        self.rng = Pcg32::from_parts(state, inc);
+        self.exec.gpu.set_cap_frac(cap_frac);
+        self.cache.invalidate();
+        self.clock.set(Seconds(now));
     }
 
     fn perturb(&mut self, est: &StepEstimate) -> StepSample {

@@ -141,6 +141,50 @@ impl TelemetryHub {
     pub fn gpu_power_summary(&self) -> Summary {
         self.state.lock().unwrap().gpu_w.finish()
     }
+
+    /// Whole hub state for checkpointing (DESIGN.md §15): the current
+    /// reading, cumulative (gpu, cpu, dram) joules, the retained recent
+    /// window (with its eviction count), and the two power accumulators.
+    #[allow(clippy::type_complexity)]
+    pub fn ckpt_state(
+        &self,
+    ) -> (PowerReading, (f64, f64, f64), Vec<PowerReading>, u64, StreamingSummary, StreamingSummary)
+    {
+        let s = self.state.lock().unwrap();
+        (
+            s.current,
+            (s.gpu_j, s.cpu_j, s.dram_j),
+            s.recent.iter().copied().collect(),
+            s.recent.evicted(),
+            s.total_w,
+            s.gpu_w,
+        )
+    }
+
+    /// Overwrite the hub state from a checkpoint (the counterpart of
+    /// [`TelemetryHub::ckpt_state`]; the ring capacity is kept from
+    /// construction).
+    #[allow(clippy::type_complexity)]
+    pub fn restore_ckpt_state(
+        &self,
+        (current, (gpu_j, cpu_j, dram_j), recent, evicted, total_w, gpu_w): (
+            PowerReading,
+            (f64, f64, f64),
+            Vec<PowerReading>,
+            u64,
+            StreamingSummary,
+            StreamingSummary,
+        ),
+    ) {
+        let mut s = self.state.lock().unwrap();
+        s.current = current;
+        s.gpu_j = gpu_j;
+        s.cpu_j = cpu_j;
+        s.dram_j = dram_j;
+        s.recent.restore(recent, evicted);
+        s.total_w = total_w;
+        s.gpu_w = gpu_w;
+    }
 }
 
 #[cfg(test)]

@@ -88,6 +88,22 @@ impl NvmlDevice {
     pub fn bias(&self) -> Watts {
         Watts(self.bias_w)
     }
+
+    /// Mutable device state for checkpointing (DESIGN.md §15): the noise
+    /// RNG stream and the enforced limit.  The calibration bias is
+    /// re-derived at construction from the same seed.
+    pub fn ckpt_state(&self) -> ((u64, u64), u64) {
+        (self.rng.lock().unwrap().state_parts(), self.enforced_power_limit_mw())
+    }
+
+    /// Overwrite the mutable device state from a checkpoint.
+    pub fn restore_ckpt_state(&self, ((state, inc), limit_mw): ((u64, u64), u64)) {
+        *self.rng.lock().unwrap() = Pcg32::from_parts(state, inc);
+        self.limit_mw.store(
+            limit_mw.clamp(self.min_limit_mw, self.tdp_mw),
+            std::sync::atomic::Ordering::Release,
+        );
+    }
 }
 
 #[cfg(test)]

@@ -84,6 +84,20 @@ impl RaplMsr {
     pub fn delta_joules(before: u32, after: u32) -> f64 {
         after.wrapping_sub(before) as f64 * ENERGY_UNIT_J
     }
+
+    /// Mutable counter state for checkpointing (DESIGN.md §15).  The
+    /// calibration `scale` is re-derived at construction from the seed.
+    pub fn ckpt_state(&self) -> (f64, u32) {
+        let s = self.state.lock().unwrap();
+        (s.last_true_j, s.counter)
+    }
+
+    /// Overwrite the counter state from a checkpoint.
+    pub fn restore_ckpt_state(&self, (last_true_j, counter): (f64, u32)) {
+        let mut s = self.state.lock().unwrap();
+        s.last_true_j = last_true_j;
+        s.counter = counter;
+    }
 }
 
 /// Convenience reader: samples a counter over time and reports mean power.

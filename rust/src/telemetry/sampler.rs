@@ -169,6 +169,49 @@ impl PowerSampler {
         self.next_due = None;
         self.last_pkg = None;
     }
+
+    /// Whole mutable sampler state for checkpointing (DESIGN.md §15),
+    /// including the nested NVML device and RAPL counter.  `period` and the
+    /// ring capacity are construction parameters and are not captured.
+    pub fn ckpt_state(&self) -> SamplerCkpt {
+        SamplerCkpt {
+            nvml: self.nvml.ckpt_state(),
+            rapl_pkg: self.rapl_pkg.ckpt_state(),
+            next_due: self.next_due,
+            last_pkg: self.last_pkg,
+            samples: self.samples.iter().copied().collect(),
+            evicted: self.samples.evicted(),
+            gpu_w: self.gpu_w,
+            total_w: self.total_w,
+        }
+    }
+
+    /// Overwrite the sampler state from a checkpoint.
+    pub fn restore_ckpt_state(&mut self, s: SamplerCkpt) {
+        self.nvml.restore_ckpt_state(s.nvml);
+        self.rapl_pkg.restore_ckpt_state(s.rapl_pkg);
+        self.next_due = s.next_due;
+        self.last_pkg = s.last_pkg;
+        self.samples.restore(s.samples, s.evicted);
+        self.gpu_w = s.gpu_w;
+        self.total_w = s.total_w;
+    }
+}
+
+/// Serialisable snapshot of a [`PowerSampler`]'s mutable state
+/// (DESIGN.md §15).
+#[derive(Debug, Clone)]
+pub struct SamplerCkpt {
+    /// (noise RNG parts, enforced limit mW) of the nested NVML device.
+    pub nvml: ((u64, u64), u64),
+    /// (residual true joules, 32-bit counter) of the nested PKG MSR.
+    pub rapl_pkg: (f64, u32),
+    pub next_due: Option<Seconds>,
+    pub last_pkg: Option<(Seconds, u32)>,
+    pub samples: Vec<PowerSample>,
+    pub evicted: u64,
+    pub gpu_w: StreamingSummary,
+    pub total_w: StreamingSummary,
 }
 
 #[cfg(test)]

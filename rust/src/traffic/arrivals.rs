@@ -113,6 +113,26 @@ impl DiurnalProfile {
     pub fn peak(&self) -> f64 {
         self.weights.iter().copied().fold(f64::MIN, f64::max)
     }
+
+    /// The already-normalised hourly weights, for checkpointing: they
+    /// must round-trip bit-exactly, so restore uses
+    /// [`DiurnalProfile::from_normalised`] rather than re-normalising.
+    pub fn normalised_weights(&self) -> &[f64; 24] {
+        &self.weights
+    }
+
+    /// Rebuild a profile from checkpointed *normalised* weights without
+    /// renormalising (which would perturb the bits).  Still validates the
+    /// envelope invariants, so a corrupt snapshot is rejected.
+    pub fn from_normalised(weights: [f64; 24]) -> Result<DiurnalProfile> {
+        for (h, w) in weights.iter().enumerate() {
+            anyhow::ensure!(
+                w.is_finite() && *w > 0.0,
+                "hourly weight [{h}] = {w} must be positive and finite"
+            );
+        }
+        DiurnalProfile { weights }.validated()
+    }
 }
 
 /// Which point process modulates the diurnal rate.
@@ -248,6 +268,23 @@ impl ArrivalGen {
     /// Current scenario rate multiplier (1.0 outside event windows).
     pub fn rate_mult(&self) -> f64 {
         self.rate_mult
+    }
+
+    /// Mutable run state for checkpointing (DESIGN.md §15): the RNG
+    /// stream, the scenario rate multiplier, and the MMPP phase.  The
+    /// static configuration (kind, profile, rates) is rebuilt from the
+    /// fleet config on restore.
+    pub fn ckpt_state(&self) -> (Pcg32, f64, bool, f64) {
+        (self.rng.clone(), self.rate_mult, self.burst, self.next_switch)
+    }
+
+    /// Overwrite the mutable run state from a checkpoint; the stream
+    /// continues bit-exactly from where [`ArrivalGen::ckpt_state`] cut it.
+    pub fn restore_ckpt_state(&mut self, rng: Pcg32, rate_mult: f64, burst: bool, next_switch: f64) {
+        self.rng = rng;
+        self.rate_mult = rate_mult;
+        self.burst = burst;
+        self.next_switch = next_switch;
     }
 
     /// Exponential variate with the given rate.

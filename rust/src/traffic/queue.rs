@@ -153,6 +153,40 @@ impl TrafficServer {
         shed
     }
 
+    /// Queued request groups as `(arrival, deadline, count)` triples in
+    /// FIFO order — the checkpoint representation (DESIGN.md §15).
+    pub fn queued_groups(&self) -> impl Iterator<Item = (f64, f64, u64)> + '_ {
+        self.queue.iter().map(|g| (g.arrival, g.deadline, g.count))
+    }
+
+    /// Rebuild the server from a checkpoint: the FIFO contents plus the
+    /// lifetime counters.  Groups must be supplied in the original FIFO
+    /// order; the derived `queued` total is recomputed from the groups.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore_ckpt_state(
+        &mut self,
+        groups: impl IntoIterator<Item = (f64, f64, u64)>,
+        t_free: f64,
+        served: u64,
+        dropped: u64,
+        late: u64,
+        batches: u64,
+        batch_samples: u64,
+    ) {
+        self.queue.clear();
+        self.queued = 0;
+        for (arrival, deadline, count) in groups {
+            self.queue.push_back(ReqGroup { arrival, deadline, count });
+            self.queued += count;
+        }
+        self.t_free = t_free;
+        self.served = served;
+        self.dropped = dropped;
+        self.late = late;
+        self.batches = batches;
+        self.batch_samples = batch_samples;
+    }
+
     /// Enqueue `count` requests all arriving at `arrival` (the aggregated
     /// path: one call per arrival window).  Same ordering contract as
     /// [`Self::enqueue`].

@@ -8,6 +8,12 @@
 
 use std::fmt;
 
+/// Maximum container nesting depth [`Json::parse`] accepts.  The parser
+/// recurses per nesting level, so without a bound a few KiB of `[[[[…`
+/// overflows the stack; 512 levels is far beyond any legitimate snapshot,
+/// manifest, or trace line.
+pub const MAX_DEPTH: usize = 512;
+
 #[derive(Debug, PartialEq)]
 pub enum JsonError {
     Eof(usize),
@@ -15,6 +21,8 @@ pub enum JsonError {
     BadNumber(usize),
     BadEscape(usize),
     Trailing(usize),
+    /// Container nesting exceeded [`MAX_DEPTH`].
+    TooDeep(usize),
 }
 
 impl fmt::Display for JsonError {
@@ -27,6 +35,9 @@ impl fmt::Display for JsonError {
             JsonError::BadNumber(at) => write!(f, "invalid number at byte {at}"),
             JsonError::BadEscape(at) => write!(f, "invalid \\u escape at byte {at}"),
             JsonError::Trailing(at) => write!(f, "trailing garbage at byte {at}"),
+            JsonError::TooDeep(at) => {
+                write!(f, "nesting deeper than {MAX_DEPTH} levels at byte {at}")
+            }
         }
     }
 }
@@ -127,7 +138,7 @@ impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let b = text.as_bytes();
         let mut pos = 0;
-        let v = parse_value(b, &mut pos)?;
+        let v = parse_value(b, &mut pos, 0)?;
         skip_ws(b, &mut pos);
         if pos != b.len() {
             return Err(JsonError::Trailing(pos));
@@ -243,14 +254,15 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, JsonError> {
     skip_ws(b, pos);
     if *pos >= b.len() {
         return Err(JsonError::Eof(*pos));
     }
     match b[*pos] {
-        b'{' => parse_obj(b, pos),
-        b'[' => parse_arr(b, pos),
+        b'{' | b'[' if depth >= MAX_DEPTH => Err(JsonError::TooDeep(*pos)),
+        b'{' => parse_obj(b, pos, depth),
+        b'[' => parse_arr(b, pos, depth),
         b'"' => Ok(Json::Str(parse_string(b, pos)?)),
         b't' => parse_lit(b, pos, "true", Json::Bool(true)),
         b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
@@ -350,7 +362,7 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
-fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+fn parse_arr(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, JsonError> {
     *pos += 1; // '['
     let mut items = Vec::new();
     skip_ws(b, pos);
@@ -359,7 +371,7 @@ fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
         return Ok(Json::Arr(items));
     }
     loop {
-        items.push(parse_value(b, pos)?);
+        items.push(parse_value(b, pos, depth + 1)?);
         skip_ws(b, pos);
         if *pos >= b.len() {
             return Err(JsonError::Eof(*pos));
@@ -375,7 +387,7 @@ fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
     }
 }
 
-fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+fn parse_obj(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, JsonError> {
     *pos += 1; // '{'
     let mut kv = Vec::new();
     skip_ws(b, pos);
@@ -394,7 +406,7 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
             return Err(JsonError::Unexpected(*pos, b.get(*pos).copied().unwrap_or(0) as char));
         }
         *pos += 1;
-        let val = parse_value(b, pos)?;
+        let val = parse_value(b, pos, depth + 1)?;
         kv.push((key, val));
         skip_ws(b, pos);
         if *pos >= b.len() {
@@ -471,6 +483,40 @@ mod tests {
         let v = Json::parse("4800626688").unwrap();
         assert_eq!(v.as_i64(), Some(4_800_626_688));
         assert_eq!(v.to_string(), "4800626688");
+    }
+
+    #[test]
+    fn accepts_nesting_at_the_depth_limit() {
+        let src = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        let mut v = Json::parse(&src).unwrap();
+        for _ in 0..MAX_DEPTH {
+            v = v.as_arr().unwrap()[0].clone();
+        }
+        assert_eq!(v, Json::Num(1.0));
+        // Mixed containers count the same.
+        let src = format!(
+            "{}{}{}{}",
+            r#"{"a": "#.repeat(MAX_DEPTH / 2),
+            "[".repeat(MAX_DEPTH - MAX_DEPTH / 2),
+            "]".repeat(MAX_DEPTH - MAX_DEPTH / 2),
+            "}".repeat(MAX_DEPTH / 2),
+        );
+        assert!(Json::parse(&src).is_ok());
+    }
+
+    #[test]
+    fn rejects_nesting_over_the_depth_limit() {
+        let over = MAX_DEPTH + 1;
+        let src = format!("{}1{}", "[".repeat(over), "]".repeat(over));
+        match Json::parse(&src) {
+            Err(JsonError::TooDeep(at)) => assert_eq!(at, MAX_DEPTH),
+            other => panic!("expected TooDeep, got {other:?}"),
+        }
+        // A deep bomb with no closers must also die at the limit, not on Eof.
+        let bomb = "[".repeat(100_000);
+        assert_eq!(Json::parse(&bomb), Err(JsonError::TooDeep(MAX_DEPTH)));
+        let obj_bomb = r#"{"k": "#.repeat(100_000);
+        assert!(matches!(Json::parse(&obj_bomb), Err(JsonError::TooDeep(_))));
     }
 
     #[test]

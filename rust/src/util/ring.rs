@@ -93,6 +93,17 @@ impl<T> Ring<T> {
         self.buf.clear();
         self.evicted = 0;
     }
+
+    /// Replace the retained window and the eviction counter wholesale
+    /// (checkpoint restore, DESIGN.md §15).  The capacity bound is kept;
+    /// items beyond it are truncated oldest-first, exactly as if pushed.
+    pub fn restore(&mut self, items: impl IntoIterator<Item = T>, evicted: u64) {
+        self.buf.clear();
+        self.evicted = evicted;
+        for item in items {
+            self.push(item);
+        }
+    }
 }
 
 #[cfg(test)]

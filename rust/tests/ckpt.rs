@@ -1,0 +1,240 @@
+//! Crash-safe checkpoint/resume integration battery (DESIGN.md §15).
+//!
+//! The headline guarantee: a run that crashes at ANY round boundary and
+//! resumes from its snapshot produces a `FleetReport`, figure output,
+//! and trace spine **byte-identical** to the uninterrupted run — across
+//! every scenario preset, every chaos preset, and every worker-thread
+//! count (snapshots are thread-count-independent, so a run snapshotted
+//! under `--threads 1` may resume under 2 or 0).
+//!
+//! The failure half of the contract: corrupt, truncated, or
+//! version-mismatched snapshots are rejected *in full* with a clear
+//! error (never half-restored), and `load_latest` falls back to the
+//! previous retained snapshot.
+
+use std::path::PathBuf;
+
+use frost::ckpt::{
+    codec::hex_u64, fnv1a64, load_latest, restore_fleet_with, write_fleet_snapshot,
+    CkptOptions, DriveOutcome, Snapshot,
+};
+use frost::figures::{
+    chaos_config, chaos_resume, chaos_run, chaos_run_ckpt, fleet_resume,
+    scenario_comparison, scenario_comparison_ckpt, scenario_resume,
+};
+use frost::obs::export::write_trace;
+use frost::oran::{Fleet, FleetConfig};
+use frost::scenario::Scenario;
+use frost::traffic::TrafficConfig;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("frost-ckpt-it-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Light scripted-day config: 4 sites (every QoS class present, outages
+/// have survivors), 6 rounds, traced so the battery can pin trace bytes.
+fn scen_cfg(preset: &str) -> FleetConfig {
+    let tr = TrafficConfig {
+        users_per_site: 100,
+        requests_per_user_per_day: 20.0,
+        day_s: 800.0,
+        slots_per_day: 4,
+        warmup_rounds: 2,
+        max_batch: 24,
+        ..TrafficConfig::default()
+    };
+    let sites = 4;
+    let scen = Scenario::preset(preset, sites, &tr).expect("preset builds");
+    FleetConfig {
+        sites,
+        seed: 17,
+        threads: 1,
+        rounds: tr.rounds_for_one_day(),
+        train_epochs: 25,
+        samples_per_epoch: 4_000,
+        infer_steps_per_round: 6,
+        // Mirror the CLI default: grid-step scripts budget steps, so it
+        // enforces a budget; the other presets run unbudgeted.
+        budget_frac: if preset == "grid-step" { 0.9 } else { 1.0 },
+        max_concurrent_profiles: sites,
+        traffic: Some(tr),
+        scenario: Some(scen),
+        trace: true,
+        ..FleetConfig::default()
+    }
+}
+
+#[test]
+fn scenario_crash_resume_is_bit_identical_for_every_preset_and_thread_count() {
+    for preset in ["outage-day", "grid-step", "flash-crowd", "heatwave"] {
+        let cfg = scen_cfg(preset);
+        let rounds = cfg.rounds;
+        let gold = scenario_comparison(&cfg).unwrap();
+        let gold_fp = format!("{gold:?}");
+        let dir = tmpdir(&format!("scen-{preset}"));
+        let gold_trace = dir.join("gold.jsonl");
+        write_trace(&gold_trace, &gold.trace).unwrap();
+
+        let mut opts = CkptOptions::at(dir.clone());
+        opts.every = 2;
+        opts.crash_at = Some(rounds / 2);
+        let (round, snapshot) = match scenario_comparison_ckpt(&cfg, &opts).unwrap() {
+            DriveOutcome::Crashed { round, snapshot } => (round, snapshot),
+            DriveOutcome::Done(_) => panic!("{preset}: crash injection must fire"),
+        };
+        assert_eq!(round, rounds / 2, "{preset}: crash at the armed round");
+
+        // A scenario snapshot is not resumable as a fleet comparison.
+        let err = fleet_resume(&Snapshot::load(&snapshot).unwrap(), None, &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("not a fleet comparison"), "got: {err:#}");
+
+        // Load once: the file itself may later be pruned by the resumed
+        // runs' own keep-last-K retention; the loaded snapshot is
+        // self-contained.
+        let snap = Snapshot::load(&snapshot).unwrap();
+        opts.crash_at = None;
+        for threads in [1usize, 2, 0] {
+            let out = match scenario_resume(&snap, Some(threads), &opts).unwrap() {
+                DriveOutcome::Done(out) => out,
+                DriveOutcome::Crashed { .. } => unreachable!("crash disarmed"),
+            };
+            assert_eq!(
+                format!("{out:?}"),
+                gold_fp,
+                "{preset} threads={threads}: resumed output diverged"
+            );
+            let rt = dir.join(format!("resume-{threads}.jsonl"));
+            write_trace(&rt, &out.trace).unwrap();
+            assert_eq!(
+                std::fs::read(&rt).unwrap(),
+                std::fs::read(&gold_trace).unwrap(),
+                "{preset} threads={threads}: trace bytes diverged"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn chaos_crash_resume_is_bit_identical_for_every_preset_and_thread_count() {
+    for (i, preset) in ["lossy-fabric", "slow-fabric", "liar-telemetry", "profile-flaps"]
+        .iter()
+        .enumerate()
+    {
+        let mut cfg = chaos_config(preset, 4, 11 + i as u64, true).unwrap();
+        cfg.threads = 1;
+        cfg.trace = true;
+        let rounds = cfg.rounds;
+        let gold = chaos_run(&cfg).unwrap();
+        let gold_fp = format!("{gold:?}");
+        let dir = tmpdir(&format!("chaos-{preset}"));
+        let gold_trace = dir.join("gold.jsonl");
+        write_trace(&gold_trace, &gold.trace).unwrap();
+
+        // Crash mid-fault-window on an off-cadence round: the crash round
+        // forces its own snapshot, so the crash point is always resumable.
+        let mut opts = CkptOptions::at(dir.clone());
+        opts.every = 3;
+        opts.crash_at = Some(rounds / 2);
+        let snapshot = match chaos_run_ckpt(&cfg, preset, &opts).unwrap() {
+            DriveOutcome::Crashed { round, snapshot } => {
+                assert_eq!(round, rounds / 2, "{preset}");
+                snapshot
+            }
+            DriveOutcome::Done(_) => panic!("{preset}: crash injection must fire"),
+        };
+
+        let snap = Snapshot::load(&snapshot).unwrap();
+        assert_eq!(snap.header.preset, *preset, "preset rides in the header");
+        opts.crash_at = None;
+        for threads in [1usize, 2, 0] {
+            let out = match chaos_resume(&snap, Some(threads), &opts).unwrap() {
+                DriveOutcome::Done(out) => out,
+                DriveOutcome::Crashed { .. } => unreachable!("crash disarmed"),
+            };
+            assert_eq!(
+                format!("{out:?}"),
+                gold_fp,
+                "{preset} threads={threads}: resumed output diverged"
+            );
+            let rt = dir.join(format!("resume-{threads}.jsonl"));
+            write_trace(&rt, &out.trace).unwrap();
+            assert_eq!(
+                std::fs::read(&rt).unwrap(),
+                std::fs::read(&gold_trace).unwrap(),
+                "{preset} threads={threads}: trace bytes diverged"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Plain (non-traffic) fleet used by the failure-path tests.
+fn plain_cfg() -> FleetConfig {
+    FleetConfig {
+        sites: 2,
+        seed: 11,
+        rounds: 3,
+        train_epochs: 3,
+        samples_per_epoch: 500,
+        infer_steps_per_round: 4,
+        ..FleetConfig::default()
+    }
+}
+
+#[test]
+fn corrupt_newest_snapshot_is_rejected_and_load_latest_falls_back() {
+    let dir = tmpdir("fallback");
+    let mut fleet = Fleet::new(plain_cfg()).unwrap();
+    let mut last = PathBuf::new();
+    for _ in 0..3 {
+        fleet.run_round().unwrap();
+        last = write_fleet_snapshot(&fleet, "fleet", "-", &dir, 8).unwrap();
+    }
+    // Flip one byte inside the newest file's header line.
+    let mut bytes = std::fs::read(&last).unwrap();
+    bytes[24] ^= 0x01;
+    std::fs::write(&last, &bytes).unwrap();
+
+    let err = Snapshot::load(&last).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "got: {err:#}");
+
+    // load_latest skips the corrupt round-3 file and falls back to the
+    // retained round-2 snapshot, reporting what it skipped and why.
+    let (snap, skipped) = load_latest(&dir).unwrap();
+    assert_eq!(snap.header.round, 2, "fallback must pick the previous snapshot");
+    assert_eq!(skipped.len(), 1, "exactly the corrupt file is skipped");
+    assert_eq!(skipped[0].0, last);
+    assert!(format!("{:#}", skipped[0].1).contains("checksum"));
+    let restored = restore_fleet_with(&snap, None).unwrap();
+    assert_eq!(restored.round, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn version_mismatched_snapshot_is_rejected_with_a_clear_error() {
+    let dir = tmpdir("version");
+    let mut fleet = Fleet::new(plain_cfg()).unwrap();
+    fleet.run_round().unwrap();
+    let path = write_fleet_snapshot(&fleet, "fleet", "-", &dir, 8).unwrap();
+
+    // Doctor the header's version and re-checksum so ONLY the version
+    // check can reject the file.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let footer_start = text[..text.len() - 1].rfind('\n').unwrap() + 1;
+    let body = text[..footer_start].replacen("\"version\":1", "\"version\":99", 1);
+    assert_ne!(body, text[..footer_start], "the header must carry a version");
+    let doctored = format!(
+        "{body}{{\"s\":\"footer\",\"fnv64\":\"{}\"}}\n",
+        hex_u64(fnv1a64(body.as_bytes()))
+    );
+    std::fs::write(&path, doctored).unwrap();
+
+    let err = format!("{:#}", Snapshot::load(&path).unwrap_err());
+    assert!(err.contains("format version"), "got: {err}");
+    assert!(err.contains("99"), "got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

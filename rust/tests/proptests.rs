@@ -405,6 +405,94 @@ fn prop_aggregated_queue_matches_exact_per_request_path() {
 }
 
 #[test]
+fn prop_fleet_snapshot_roundtrip_is_bit_identical_and_truncation_rejected() {
+    // DESIGN.md §15: a snapshot of a random mid-day fleet state restores
+    // bit-identically — restore→write is a byte fixed point, and one
+    // further round on the original and the restored fleet produces the
+    // same bytes again.  Truncating the file at ANY byte is rejected
+    // outright (checksum / footer / newline guard); the reader never
+    // half-restores.
+    use frost::ckpt::{restore_fleet, write_fleet_snapshot, Snapshot};
+    use frost::oran::{Fleet, FleetConfig};
+    use frost::traffic::TrafficConfig;
+    let mut rng = Pcg32::seeded(12);
+    let root = std::env::temp_dir().join(format!("frost-prop-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for case in 0..6u32 {
+        let tr = TrafficConfig {
+            users_per_site: 20 + u64::from(rng.below(30)),
+            requests_per_user_per_day: rng.uniform(4.0, 12.0),
+            day_s: 600.0,
+            slots_per_day: 3 + rng.below(3),
+            warmup_rounds: 1,
+            max_batch: 8 + rng.below(16),
+            ..TrafficConfig::default()
+        };
+        let config = FleetConfig {
+            sites: 1 + rng.below(3) as usize,
+            seed: u64::from(rng.below(1 << 30)),
+            rounds: tr.rounds_for_one_day(),
+            train_epochs: 2 + rng.below(3),
+            samples_per_epoch: 300 + u64::from(rng.below(500)),
+            infer_steps_per_round: 2 + u64::from(rng.below(5)),
+            budget_frac: rng.uniform(0.85, 1.0),
+            max_concurrent_profiles: 2,
+            trace: case % 2 == 0,
+            traffic: Some(tr),
+            ..FleetConfig::default()
+        };
+        let rounds = config.rounds;
+        let mid = 1 + rng.below(rounds - 1);
+        let mut fleet = Fleet::new(config).unwrap();
+        for _ in 0..mid {
+            fleet.run_round().unwrap();
+        }
+        let d1 = root.join(format!("c{case}-a"));
+        let d2 = root.join(format!("c{case}-b"));
+        std::fs::create_dir_all(&d1).unwrap();
+        std::fs::create_dir_all(&d2).unwrap();
+        let p1 = write_fleet_snapshot(&fleet, "fleet", "-", &d1, 64).unwrap();
+        let bytes = std::fs::read(&p1).unwrap();
+
+        let mut restored = restore_fleet(&Snapshot::load(&p1).unwrap())
+            .unwrap_or_else(|e| panic!("case {case}: restore failed: {e:#}"));
+        let p2 = write_fleet_snapshot(&restored, "fleet", "-", &d2, 64).unwrap();
+        assert_eq!(
+            bytes,
+            std::fs::read(&p2).unwrap(),
+            "case {case}: restore→write is not a byte fixed point"
+        );
+
+        if restored.round < rounds {
+            fleet.run_round().unwrap();
+            restored.run_round().unwrap();
+            let q1 = write_fleet_snapshot(&fleet, "fleet", "-", &d1, 64).unwrap();
+            let q2 = write_fleet_snapshot(&restored, "fleet", "-", &d2, 64).unwrap();
+            assert_eq!(
+                std::fs::read(&q1).unwrap(),
+                std::fs::read(&q2).unwrap(),
+                "case {case}: first post-restore round diverged from the original"
+            );
+        }
+
+        for cut_i in 0..8 {
+            let cut = 1 + rng.below(bytes.len() as u32 - 1) as usize;
+            let tp = root.join(format!("c{case}-cut{cut_i}.frostsnap"));
+            std::fs::write(&tp, &bytes[..cut]).unwrap();
+            match Snapshot::load(&tp) {
+                Err(_) => {}
+                Ok(snap) => panic!(
+                    "case {case}: truncation at byte {cut} of {} was accepted: {:?}",
+                    bytes.len(),
+                    snap.header
+                ),
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
 fn prop_workload_beta_roundtrip() {
     let mut rng = Pcg32::seeded(10);
     let gpu = setup_no1().gpu;
