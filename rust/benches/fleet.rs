@@ -1,5 +1,8 @@
-//! Fleet hot-path benches: steady-state round throughput at 4/16/64 sites
-//! plus the cached-vs-uncached execution-model microbench.
+//! Fleet hot-path benches: steady-state round throughput at 4/16/64 sites,
+//! the region-tier sweep (§16) at 64/256/1,000/10,000 sites with ~√N
+//! regions — the 64-site point pairs with the flat 64-site bench for the
+//! flat-vs-hierarchical comparison — plus the cached-vs-uncached
+//! execution-model microbench.
 //!
 //! This is the perf trajectory the ROADMAP's "as fast as the hardware
 //! allows" north star is measured against: the numbers land in

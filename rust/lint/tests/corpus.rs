@@ -232,6 +232,30 @@ fn ckpt_surfaces_are_covered_and_clean() {
     }
 }
 
+/// The §16 region tier multiplies every determinism hazard by the region
+/// count — gateway merge order, two-level water-fill, steady-delta
+/// replay — so the split `fleet/` module, the shared two-level budget
+/// audit, and the region integration battery are linted *by name* under
+/// their real tree paths (same rationale as the chaos surfaces above).
+#[test]
+fn region_surfaces_are_covered_and_clean() {
+    for (src, path) in [
+        (include_str!("../../src/oran/fleet/mod.rs"), "rust/src/oran/fleet/mod.rs"),
+        (include_str!("../../src/oran/fleet/region.rs"), "rust/src/oran/fleet/region.rs"),
+        (
+            include_str!("../../src/oran/fleet/coordinator.rs"),
+            "rust/src/oran/fleet/coordinator.rs",
+        ),
+        (include_str!("../../src/oran/fleet/round.rs"), "rust/src/oran/fleet/round.rs"),
+        (include_str!("../../src/oran/fleet/report.rs"), "rust/src/oran/fleet/report.rs"),
+        (include_str!("../../src/figures/audit.rs"), "rust/src/figures/audit.rs"),
+        (include_str!("../../tests/region.rs"), "rust/tests/region.rs"),
+    ] {
+        let f = unsuppressed(src, path);
+        assert!(f.is_empty(), "{path} must be R1–R5 clean: {f:?}");
+    }
+}
+
 #[test]
 fn json_summary_is_well_formed_enough() {
     let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");

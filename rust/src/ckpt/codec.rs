@@ -1050,6 +1050,9 @@ pub fn w_trace_event<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, e: &T
     if let Some(site) = e.site {
         js.u64_field(Some("site"), u64::from(site));
     }
+    if let Some(region) = e.region {
+        js.u64_field(Some("region"), u64::from(region));
+    }
     js.str_field(Some("kind"), e.data.kind());
     match &e.data {
         TraceData::RoundStart | TraceData::Reprofile => {}
@@ -1137,7 +1140,15 @@ pub fn r_trace_event(j: &Json) -> Result<TraceEvent> {
         ),
         None => None,
     };
-    Ok(TraceEvent { id: ju64(j, "id")?, round: ju32(j, "round")?, site, data })
+    let region = match j.get("region") {
+        Some(v) => Some(
+            u32::try_from(v.as_i64().context("trace region")?)
+                .ok()
+                .context("trace region out of range")?,
+        ),
+        None => None,
+    };
+    Ok(TraceEvent { id: ju64(j, "id")?, round: ju32(j, "round")?, site, region, data })
 }
 
 // ------------------------------------------------------- catalogue types
@@ -1645,17 +1656,19 @@ mod tests {
     #[test]
     fn trace_events_round_trip_across_every_kind() {
         let events = vec![
-            TraceEvent { id: 1, round: 1, site: None, data: TraceData::RoundStart },
+            TraceEvent { id: 1, round: 1, site: None, region: None, data: TraceData::RoundStart },
             TraceEvent {
                 id: 2,
                 round: 1,
                 site: Some(0),
+                region: Some(0),
                 data: TraceData::SiteRound { cap_frac: 0.8, down: false },
             },
             TraceEvent {
                 id: 3,
                 round: 1,
                 site: Some(2),
+                region: Some(1),
                 data: TraceData::CapChange {
                     cause: CapCause::WaterFill,
                     from: 1.0,
@@ -1667,6 +1680,7 @@ mod tests {
                 id: 4,
                 round: 1,
                 site: None,
+                region: None,
                 data: TraceData::CapChange {
                     cause: CapCause::Recovery,
                     from: 0.6,
@@ -1678,6 +1692,7 @@ mod tests {
                 id: 5,
                 round: 2,
                 site: Some(1),
+                region: Some(0),
                 data: TraceData::Scenario {
                     event: ScenarioEvent::SiteDown { site: 1 },
                     detail: "site 1 down".into(),
@@ -1687,31 +1702,36 @@ mod tests {
                 id: 6,
                 round: 2,
                 site: None,
+                region: None,
                 data: TraceData::Fault { fate: "delayed", interface: "O1", count: 2 },
             },
             TraceEvent {
                 id: 7,
                 round: 2,
                 site: Some(3),
+                region: None,
                 data: TraceData::KpmReject { host: "site03".into(), reason: "duplicate_seq" },
             },
             TraceEvent {
                 id: 8,
                 round: 2,
                 site: None,
+                region: None,
                 data: TraceData::Lifecycle { detail: "published m v2".into() },
             },
-            TraceEvent { id: 9, round: 3, site: Some(0), data: TraceData::Reprofile },
+            TraceEvent { id: 9, round: 3, site: Some(0), region: None, data: TraceData::Reprofile },
             TraceEvent {
                 id: 10,
                 round: 3,
                 site: Some(0),
+                region: Some(2),
                 data: TraceData::Quarantine { host: "site00".into(), entered: true },
             },
             TraceEvent {
                 id: 11,
                 round: 3,
                 site: None,
+                region: None,
                 data: TraceData::RoundEnd { cap_power_w: 612.5 },
             },
         ];

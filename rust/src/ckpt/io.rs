@@ -522,7 +522,7 @@ mod tests {
     #[test]
     fn version_mismatch_is_rejected_even_with_a_valid_checksum() {
         let dir = tmpdir("version");
-        let body = "{\"s\":\"header\",\"version\":2,\"kind\":\"fleet\",\"round\":1,\
+        let body = "{\"s\":\"header\",\"version\":99,\"kind\":\"fleet\",\"round\":1,\
                     \"seed\":\"0000000000000001\",\"sites\":1,\"preset\":\"\"}\n";
         let digest = fnv1a64(body.as_bytes());
         let p = snapshot_path(&dir, 1);
@@ -532,7 +532,7 @@ mod tests {
         )
         .unwrap();
         let err = format!("{:#}", Snapshot::load(&p).unwrap_err());
-        assert!(err.contains("version 2"), "{err}");
+        assert!(err.contains("version 99"), "{err}");
     }
 
     #[test]

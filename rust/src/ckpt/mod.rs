@@ -14,7 +14,7 @@
 //! trees):
 //!
 //! ```text
-//! {"s":"header","version":1,"kind":"fleet","round":12,"seed":"…",…}
+//! {"s":"header","version":2,"kind":"fleet","round":12,"seed":"…",…}
 //! {"s":"<section>",…}                  // one line per stateful layer
 //! {"s":"footer","fnv64":"<hex16>"}     // FNV-1a 64 of all prior bytes
 //! ```
@@ -52,7 +52,11 @@ pub use snapshot::{
 /// Snapshot container format version.  Bump on any incompatible change
 /// to the section layout; the reader rejects mismatches outright rather
 /// than guessing at a half-compatible restore.
-pub const FORMAT_VERSION: u32 = 1;
+///
+/// History: 1 = initial layout; 2 = region tier (§16) — trace events
+/// carry a `region` tag, the config section gains a `regions` map, and
+/// hierarchical fleets write a `regions` state section.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Default keep-last-K retention depth.
 pub const DEFAULT_KEEP: usize = 3;

@@ -40,7 +40,10 @@ use anyhow::{Context, Result};
 use crate::frost::policy::QosClass;
 use crate::obs::export::JsonStream;
 use crate::obs::CapCause;
-use crate::oran::{Bus, Fleet, FleetConfig, FleetSite, NonRtRic, SchedulerCkpt, Smo};
+use crate::oran::fleet::{RegionRt, SteadyDelta};
+use crate::oran::{
+    Bus, Fleet, FleetConfig, FleetSite, NonRtRic, RegionMap, RegionSpec, SchedulerCkpt, Smo,
+};
 use crate::simulator::CacheCkpt;
 use crate::util::Json;
 use crate::zoo::all_models;
@@ -73,6 +76,7 @@ pub const KNOWN_METRICS: &[&'static str] = &[
     "cache.hits",
     "cache.invalidations",
     "cache.misses",
+    "fleet.regions",
     "fleet.sites",
     "holdback.dropped",
     "kpm.rejected",
@@ -82,6 +86,9 @@ pub const KNOWN_METRICS: &[&'static str] = &[
     "monitor.rejected",
     "monitor.reprofiles",
     "quarantine.events",
+    "region.disturbances",
+    "region.gateway_kpms",
+    "region.steady_rounds",
     "round.cap_w",
 ];
 
@@ -110,6 +117,23 @@ fn w_fleet_config<W: Write>(js: &mut JsonStream<W>, name: Option<&str>, c: &Flee
     }
     if let Some(f) = &c.faults {
         w_fault_config(js, Some("faults"), f);
+    }
+    if let Some(rm) = &c.regions {
+        js.begin_obj(Some("regions"));
+        js.begin_arr(Some("specs"));
+        for s in &rm.regions {
+            js.begin_obj(None);
+            js.str_field(Some("name"), &s.name);
+            w_f64(js, Some("weight"), s.weight);
+            js.end_obj();
+        }
+        js.end_arr();
+        js.begin_arr(Some("site_region"));
+        for r in &rm.site_region {
+            js.u64_field(None, u64::from(*r));
+        }
+        js.end_arr();
+        js.end_obj();
     }
     js.u64_field(Some("policy_lease_rounds"), u64::from(c.policy_lease_rounds));
     js.u64_field(Some("profile_timeout_rounds"), u64::from(c.profile_timeout_rounds));
@@ -145,6 +169,27 @@ fn r_fleet_config(j: &Json) -> Result<FleetConfig> {
         },
         faults: match j.get("faults") {
             Some(f) => Some(r_fault_config(f)?),
+            None => None,
+        },
+        regions: match j.get("regions") {
+            Some(r) => {
+                let mut specs = Vec::new();
+                for s in jarr(r, "specs")? {
+                    specs.push(RegionSpec {
+                        name: jstr(s, "name")?.to_string(),
+                        weight: jf64(s, "weight")?,
+                    });
+                }
+                let mut site_region = Vec::new();
+                for v in jarr(r, "site_region")? {
+                    site_region.push(
+                        u32::try_from(v.as_i64().context("site_region entry")?)
+                            .ok()
+                            .context("site_region entry out of range")?,
+                    );
+                }
+                Some(RegionMap { regions: specs, site_region })
+            }
             None => None,
         },
         policy_lease_rounds: ju32(j, "policy_lease_rounds")?,
@@ -894,6 +939,124 @@ fn restore_coord_fields(j: &Json, fleet: &mut Fleet) -> Result<()> {
     Ok(())
 }
 
+// ------------------------------------------------------------ regions
+
+/// `Option<SteadyDelta>` as an object: empty = `None` (the `pre_derate`
+/// convention), else the six delta scalars under short keys.
+fn w_opt_delta<W: Write>(js: &mut JsonStream<W>, d: &Option<SteadyDelta>) {
+    js.begin_obj(None);
+    if let Some(d) = d {
+        w_f64(js, Some("dt"), d.d_total_j);
+        w_f64(js, Some("dp"), d.d_profiling_j);
+        w_f64(js, Some("rj"), d.round_j);
+        w_f64(js, Some("dw"), d.d_wall_s);
+        w_u64(js, Some("ds"), d.d_samples);
+        w_f64(js, Some("gw"), d.last_gpu_power_w);
+    }
+    js.end_obj();
+}
+
+fn r_opt_delta(j: &Json) -> Result<Option<SteadyDelta>> {
+    Ok(match j.get("dt") {
+        Some(_) => Some(SteadyDelta {
+            d_total_j: jf64(j, "dt")?,
+            d_profiling_j: jf64(j, "dp")?,
+            round_j: jf64(j, "rj")?,
+            d_wall_s: jf64(j, "dw")?,
+            d_samples: ju64(j, "ds")?,
+            last_gpu_power_w: jf64(j, "gw")?,
+        }),
+        None => None,
+    })
+}
+
+/// Region-tier runtime state (§16).  The map, member lists and gateway
+/// endpoints are derivable from config ([`Fleet::new`] rebuilds them);
+/// only the mutable coordination state crosses the boundary.
+fn w_region_fields<W: Write>(js: &mut JsonStream<W>, rt: &RegionRt) {
+    js.begin_arr(Some("gw_seq"));
+    for s in &rt.gw_seq {
+        w_u64(js, None, *s);
+    }
+    js.end_arr();
+    js.begin_arr(Some("sub_budget_w"));
+    for b in &rt.sub_budget_w {
+        w_opt_f64(js, None, *b);
+    }
+    js.end_arr();
+    js.begin_arr(Some("site_load"));
+    for l in &rt.site_load {
+        w_f64(js, None, *l);
+    }
+    js.end_arr();
+    js.begin_arr(Some("steady"));
+    for d in &rt.steady {
+        w_opt_delta(js, d);
+    }
+    js.end_arr();
+    js.begin_arr(Some("prev_delta"));
+    for d in &rt.prev_delta {
+        w_opt_delta(js, d);
+    }
+    js.end_arr();
+    js.begin_arr(Some("dirty"));
+    for d in &rt.dirty {
+        js.bool_field(None, *d);
+    }
+    js.end_arr();
+    js.begin_arr(Some("steady_rounds"));
+    for s in &rt.steady_rounds {
+        w_u64(js, None, *s);
+    }
+    js.end_arr();
+    w_u64(js, Some("disturbances"), rt.disturbances);
+}
+
+fn restore_region_fields(j: &Json, rt: &mut RegionRt) -> Result<()> {
+    let gw_seq = jarr(j, "gw_seq")?.iter().map(vu64).collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(
+        gw_seq.len() == rt.gw_seq.len(),
+        "regions section has {} regions, reconstructed fleet has {}",
+        gw_seq.len(),
+        rt.gw_seq.len()
+    );
+    let mut sub_budget_w = Vec::new();
+    for v in jarr(j, "sub_budget_w")? {
+        let s = v.as_str().context("sub_budget_w element is not a string")?;
+        sub_budget_w.push(if s.is_empty() { None } else { Some(parse_hex_f64(s)?) });
+    }
+    anyhow::ensure!(sub_budget_w.len() == rt.sub_budget_w.len(), "sub_budget_w length mismatch");
+    let site_load = jarr(j, "site_load")?.iter().map(vf64).collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(
+        site_load.len() == rt.site_load.len(),
+        "regions section covers {} sites, reconstructed fleet has {}",
+        site_load.len(),
+        rt.site_load.len()
+    );
+    let steady = jarr(j, "steady")?.iter().map(r_opt_delta).collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(steady.len() == rt.steady.len(), "steady length mismatch");
+    let prev_delta =
+        jarr(j, "prev_delta")?.iter().map(r_opt_delta).collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(prev_delta.len() == rt.prev_delta.len(), "prev_delta length mismatch");
+    let mut dirty = Vec::new();
+    for v in jarr(j, "dirty")? {
+        dirty.push(v.as_bool().context("dirty element is not a bool")?);
+    }
+    anyhow::ensure!(dirty.len() == rt.dirty.len(), "dirty length mismatch");
+    let steady_rounds =
+        jarr(j, "steady_rounds")?.iter().map(vu64).collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(steady_rounds.len() == rt.steady_rounds.len(), "steady_rounds length mismatch");
+    rt.gw_seq = gw_seq;
+    rt.sub_budget_w = sub_budget_w;
+    rt.site_load = site_load;
+    rt.steady = steady;
+    rt.prev_delta = prev_delta;
+    rt.dirty = dirty;
+    rt.steady_rounds = steady_rounds;
+    rt.disturbances = ju64(j, "disturbances")?;
+    Ok(())
+}
+
 // ------------------------------------------------------------ metrics + trace
 
 fn w_metrics_fields<W: Write>(js: &mut JsonStream<W>, fleet: &Fleet) {
@@ -998,6 +1161,9 @@ where
         sw.section("smo", |js| w_smo_fields(js, &fleet.smo))?;
         sw.section("nonrt", |js| w_nonrt_fields(js, &fleet.nonrt))?;
         sw.section("coord", |js| w_coord_fields(js, fleet))?;
+        if let Some(rt) = fleet.ckpt_region_state() {
+            sw.section("regions", |js| w_region_fields(js, rt))?;
+        }
         sw.section("metrics", |js| w_metrics_fields(js, fleet))?;
         sw.section("trace", |js| w_trace_fields(js, fleet))?;
         extra(sw)?;
@@ -1061,6 +1227,18 @@ pub fn restore_fleet_with(snap: &Snapshot, threads: Option<usize>) -> Result<Fle
         .with_context(|| format!("snapshot {}: bad nonrt section", snap.path.display()))?;
     restore_coord_fields(&snap.section("coord")?, &mut fleet)
         .with_context(|| format!("snapshot {}: bad coord section", snap.path.display()))?;
+    match fleet.ckpt_region_state_mut() {
+        Some(rt) => {
+            restore_region_fields(&snap.section("regions")?, rt).with_context(|| {
+                format!("snapshot {}: bad regions section", snap.path.display())
+            })?;
+        }
+        None => anyhow::ensure!(
+            !snap.has_section("regions"),
+            "snapshot {} has a regions section but its config is not hierarchical",
+            snap.path.display()
+        ),
+    }
     restore_metrics_fields(&snap.section("metrics")?, &mut fleet)
         .with_context(|| format!("snapshot {}: bad metrics section", snap.path.display()))?;
     restore_trace_fields(&snap.section("trace")?, &mut fleet)
@@ -1194,6 +1372,39 @@ mod tests {
         let gold_trace = format!("{:?}", gold.trace.ckpt_state());
         let res_trace = format!("{:?}", resumed.trace.ckpt_state());
         assert_eq!(res_trace, gold_trace, "trace events must match too");
+    }
+
+    #[test]
+    fn region_fleet_resumes_bit_identically_and_writes_a_regions_section() {
+        let config = FleetConfig {
+            sites: 4,
+            seed: 17,
+            rounds: 6,
+            train_epochs: 3,
+            samples_per_epoch: 500,
+            infer_steps_per_round: 4,
+            budget_frac: 0.85,
+            regions: Some(RegionMap::auto(4, 2).unwrap()),
+            trace: true,
+            ..FleetConfig::default()
+        };
+        let mut gold = Fleet::new(config.clone()).unwrap();
+        for _ in 0..config.rounds {
+            gold.run_round().unwrap();
+        }
+        let mut half = Fleet::new(config).unwrap();
+        for _ in 0..3 {
+            half.run_round().unwrap();
+        }
+        let dir = tmpdir("region");
+        let path = write_fleet_snapshot(&half, "fleet", "-", &dir, 3).unwrap();
+        let snap = Snapshot::load(&path).unwrap();
+        assert!(snap.has_section("regions"), "hierarchical snapshot carries region state");
+        let mut resumed = restore_fleet(&snap).unwrap();
+        for _ in 3..6 {
+            resumed.run_round().unwrap();
+        }
+        assert_eq!(fingerprint(&resumed), fingerprint(&gold));
     }
 
     #[test]

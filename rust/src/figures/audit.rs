@@ -1,0 +1,125 @@
+//! Region-tier half of the budget conservation audit (DESIGN.md §16),
+//! shared by the scenario and chaos harnesses.
+//!
+//! The flat audit (Σ applied-cap watts ≤ the budget in force, every
+//! round) lives inline in each harness; this accumulator extends it to
+//! the hierarchy's second level on rounds where regional sub-budgets are
+//! in force: Σ regional sub-budgets must stay within the global budget,
+//! and every region's applied-cap wattage must stay within its
+//! sub-budget — including budget-step, outage, derate and churn rounds.
+
+use crate::oran::RegionReport;
+
+/// Two-level conservation accumulators.  All three travel in the
+/// harnesses' snapshot `harness` sections so a resumed run audits the
+/// whole day.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RegionAudit {
+    /// Audited rounds where at least one regional sub-budget was in
+    /// force (0 on flat fleets).
+    pub audited: usize,
+    /// max over audited rounds of (Σ sub-budget W − global budget W).
+    max_subbudget_excess_w: f64,
+    /// max over audited rounds and regions of (region applied-cap W −
+    /// region sub-budget W).
+    max_region_excess_w: f64,
+}
+
+impl RegionAudit {
+    pub fn new() -> Self {
+        Self::resume(0, f64::NEG_INFINITY, f64::NEG_INFINITY)
+    }
+
+    /// Rebuild from snapshot accumulators.
+    pub fn resume(audited: usize, max_subbudget_excess_w: f64, max_region_excess_w: f64) -> Self {
+        Self { audited, max_subbudget_excess_w, max_region_excess_w }
+    }
+
+    /// Fold in one round's per-region roll-up.  Call only on rounds the
+    /// flat audit covers (water-fill enforced, `budget_w` the budget in
+    /// force).
+    pub fn absorb(&mut self, regions: &[RegionReport], budget_w: f64) {
+        let filled: Vec<(f64, f64)> = regions
+            .iter()
+            .filter_map(|r| r.sub_budget_w.map(|sub| (r.cap_power_w, sub)))
+            .collect();
+        if filled.is_empty() {
+            return;
+        }
+        self.audited += 1;
+        let sub_sum: f64 = filled.iter().map(|&(_, sub)| sub).sum();
+        self.max_subbudget_excess_w = self.max_subbudget_excess_w.max(sub_sum - budget_w);
+        for (cap_w, sub) in filled {
+            self.max_region_excess_w = self.max_region_excess_w.max(cap_w - sub);
+        }
+    }
+
+    /// Reported Σ-sub-budget excess (0 when no round was audited).
+    pub fn max_subbudget_excess(&self) -> f64 {
+        if self.audited > 0 {
+            self.max_subbudget_excess_w
+        } else {
+            0.0
+        }
+    }
+
+    /// Reported per-region cap excess (0 when no round was audited).
+    pub fn max_region_excess(&self) -> f64 {
+        if self.audited > 0 {
+            self.max_region_excess_w
+        } else {
+            0.0
+        }
+    }
+
+    /// Raw accumulators for the snapshot `harness` section.
+    pub fn raw(&self) -> (usize, f64, f64) {
+        (self.audited, self.max_subbudget_excess_w, self.max_region_excess_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(name: &str, cap_power_w: f64, sub_budget_w: Option<f64>) -> RegionReport {
+        RegionReport {
+            name: name.to_string(),
+            sites: 2,
+            up_sites: 2,
+            workload_energy_j: 0.0,
+            round_energy_j: 0.0,
+            samples: 0,
+            cap_power_w,
+            sub_budget_w,
+            offered_load_per_s: 0.0,
+            steady_site_rounds: 0,
+        }
+    }
+
+    #[test]
+    fn flat_reports_never_advance_the_audit() {
+        let mut a = RegionAudit::new();
+        a.absorb(&[], 500.0);
+        a.absorb(&[region("r", 200.0, None)], 500.0);
+        assert_eq!(a.audited, 0);
+        assert_eq!(a.max_subbudget_excess(), 0.0);
+        assert_eq!(a.max_region_excess(), 0.0);
+    }
+
+    #[test]
+    fn excesses_track_the_worst_round_and_region() {
+        let mut a = RegionAudit::new();
+        // Conserved round: sub-budgets sum under budget, caps under subs.
+        a.absorb(&[region("a", 180.0, Some(200.0)), region("b", 290.0, Some(290.0))], 500.0);
+        // Violating round: Σ subs = 520 > 500, and region b busts its sub.
+        a.absorb(&[region("a", 180.0, Some(200.0)), region("b", 330.0, Some(320.0))], 500.0);
+        assert_eq!(a.audited, 2);
+        assert!((a.max_subbudget_excess() - 20.0).abs() < 1e-9);
+        assert!((a.max_region_excess() - 10.0).abs() < 1e-9);
+        let (n, sub, reg) = a.raw();
+        let b = RegionAudit::resume(n, sub, reg);
+        assert_eq!(b.max_subbudget_excess().to_bits(), a.max_subbudget_excess().to_bits());
+        assert_eq!(b.max_region_excess().to_bits(), a.max_region_excess().to_bits());
+    }
+}

@@ -27,6 +27,8 @@ use crate::oran::{FaultConfig, FaultLedger, Fleet, FleetConfig, FleetReport};
 use crate::traffic::TrafficConfig;
 use crate::util::Series;
 
+use super::audit::RegionAudit;
+
 /// A1 lease TTL used by chaos runs (rounds).
 pub const CHAOS_LEASE_ROUNDS: u32 = 3;
 /// Scheduler patience before a profile retry (rounds).
@@ -112,6 +114,16 @@ pub struct ChaosFigOutput {
     pub max_cap_excess_w: f64,
     /// Rounds the conservation audit covered (water-fill in force).
     pub budget_audited_rounds: usize,
+    /// Audited rounds where regional sub-budgets were in force (§16;
+    /// 0 on flat fleets).
+    pub region_audited_rounds: usize,
+    /// max over region-audited rounds of (Σ regional sub-budget watts −
+    /// global budget watts); ≤ 0 ⇔ the top level never over-committed.
+    pub max_subbudget_excess_w: f64,
+    /// max over region-audited rounds and regions of (region applied-cap
+    /// watts − region sub-budget watts); ≤ 0 ⇔ every regional fill
+    /// stayed within its allocation.
+    pub max_region_excess_w: f64,
     /// Last round any site sat in a lease fallback or quarantine
     /// (0 = the control plane never degraded).
     pub last_unhealthy_round: u32,
@@ -147,7 +159,28 @@ pub fn chaos_run_ckpt(
         ),
         &["fallbacks", "quarantined", "budget_w", "cap_w", "excess_w", "kpm_rej", "faults"],
     );
-    drive(fleet, round_table, 0, f64::NEG_INFINITY, 0, preset, opts)
+    drive(fleet, round_table, ChaosAudit::new(), preset, opts)
+}
+
+/// Accumulators threaded through [`drive`] and the snapshot `harness`
+/// section: the flat budget audit, the §16 region audit, and the
+/// healing tracker.
+struct ChaosAudit {
+    audited: usize,
+    max_cap_excess_w: f64,
+    regions: RegionAudit,
+    last_unhealthy_round: u32,
+}
+
+impl ChaosAudit {
+    fn new() -> Self {
+        Self {
+            audited: 0,
+            max_cap_excess_w: f64::NEG_INFINITY,
+            regions: RegionAudit::new(),
+            last_unhealthy_round: 0,
+        }
+    }
 }
 
 /// Resume a crashed [`chaos_run_ckpt`] from its snapshot, restoring the
@@ -167,32 +200,29 @@ pub fn chaos_resume(
     );
     let harness = snap.section("harness")?;
     let round_table = r_series(harness.req("rounds")?)?;
-    let audited = jusize(&harness, "audited")?;
-    let max_cap_excess_w = jf64(&harness, "max_excess")?;
-    let last_unhealthy_round = ju32(&harness, "last_unhealthy")?;
+    let audit = ChaosAudit {
+        audited: jusize(&harness, "audited")?,
+        max_cap_excess_w: jf64(&harness, "max_excess")?,
+        regions: RegionAudit::resume(
+            jusize(&harness, "region_audited")?,
+            jf64(&harness, "max_sub_excess")?,
+            jf64(&harness, "max_region_excess")?,
+        ),
+        last_unhealthy_round: ju32(&harness, "last_unhealthy")?,
+    };
     let fleet = restore_fleet_with(snap, threads)?;
     anyhow::ensure!(
         fleet.config.faults.is_some(),
         "chaos snapshot {} carries no fault plan",
         snap.path.display()
     );
-    drive(
-        fleet,
-        round_table,
-        audited,
-        max_cap_excess_w,
-        last_unhealthy_round,
-        &snap.header.preset,
-        opts,
-    )
+    drive(fleet, round_table, audit, &snap.header.preset, opts)
 }
 
 fn drive(
     mut fleet: Fleet,
     mut round_table: Series,
-    mut audited: usize,
-    mut max_cap_excess_w: f64,
-    mut last_unhealthy_round: u32,
+    mut audit: ChaosAudit,
     preset: &str,
     opts: &CkptOptions,
 ) -> Result<DriveOutcome<ChaosFigOutput>> {
@@ -204,16 +234,17 @@ fn drive(
         let fallbacks = fleet.sites.iter().filter(|s| s.host.in_lease_fallback()).count();
         let quarantined = (0..sites).filter(|&i| fleet.is_quarantined(i)).count();
         if fallbacks + quarantined > 0 {
-            last_unhealthy_round = round;
+            audit.last_unhealthy_round = round;
         }
         let mut budget_w = 0.0;
         let mut excess_w = 0.0;
         if rep.budget_enforced {
             if let Some(b) = rep.budget_w {
-                audited += 1;
+                audit.audited += 1;
                 budget_w = b;
                 excess_w = rep.cap_power_w - b;
-                max_cap_excess_w = max_cap_excess_w.max(excess_w);
+                audit.max_cap_excess_w = audit.max_cap_excess_w.max(excess_w);
+                audit.regions.absorb(&rep.regions, b);
             }
         }
         round_table.push(format!("r{round:02}"), vec![
@@ -230,9 +261,13 @@ fn drive(
             let snapshot = write_fleet_snapshot_with(&fleet, "chaos", preset, dir, opts.keep, |sw| {
                 sw.section("harness", |js| {
                     w_series(js, Some("rounds"), &round_table);
-                    js.u64_field(Some("audited"), audited as u64);
-                    w_f64(js, Some("max_excess"), max_cap_excess_w);
-                    js.u64_field(Some("last_unhealthy"), u64::from(last_unhealthy_round));
+                    js.u64_field(Some("audited"), audit.audited as u64);
+                    w_f64(js, Some("max_excess"), audit.max_cap_excess_w);
+                    let (ra, sub, reg) = audit.regions.raw();
+                    js.u64_field(Some("region_audited"), ra as u64);
+                    w_f64(js, Some("max_sub_excess"), sub);
+                    w_f64(js, Some("max_region_excess"), reg);
+                    js.u64_field(Some("last_unhealthy"), u64::from(audit.last_unhealthy_round));
                 })?;
                 Ok(())
             })?;
@@ -249,9 +284,12 @@ fn drive(
     Ok(DriveOutcome::Done(ChaosFigOutput {
         round_table,
         ledger,
-        max_cap_excess_w: if audited > 0 { max_cap_excess_w } else { 0.0 },
-        budget_audited_rounds: audited,
-        last_unhealthy_round,
+        max_cap_excess_w: if audit.audited > 0 { audit.max_cap_excess_w } else { 0.0 },
+        budget_audited_rounds: audit.audited,
+        region_audited_rounds: audit.regions.audited,
+        max_subbudget_excess_w: audit.regions.max_subbudget_excess(),
+        max_region_excess_w: audit.regions.max_region_excess(),
+        last_unhealthy_round: audit.last_unhealthy_round,
         healed,
         report,
         trace: fleet.trace,

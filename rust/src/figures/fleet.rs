@@ -22,6 +22,10 @@ pub struct FleetFigOutput {
     /// One row per site: cap, ED^mP exponent, baseline/FROST steady-state
     /// energy, savings, accuracy.
     pub table: Series,
+    /// One row per region (§16): membership, steady-state energy, cap
+    /// wattage, sub-budget (−1 when none is in force), offered load and
+    /// steady-replay site-rounds.  Empty on region-free fleets.
+    pub region_table: Series,
     /// 1 − (FROST final-round fleet energy / baseline final-round energy).
     pub steady_saving_frac: f64,
     /// Mean of FROST's own per-site saving estimates (profiled sites).
@@ -143,6 +147,31 @@ fn drive(mut frost_fleet: Fleet, opts: &CkptOptions) -> Result<DriveOutcome<Flee
         ]);
     }
 
+    let mut region_table = Series::new(
+        format!("Region roll-up: {} regions, {sites} sites", frost.regions.len()),
+        &[
+            "sites",
+            "up_sites",
+            "round_kj",
+            "cap_w",
+            "sub_budget_w",
+            "load_per_s",
+            "steady_site_rounds",
+        ],
+    );
+    for r in &frost.regions {
+        region_table.push(r.name.clone(), vec![
+            r.sites as f64,
+            r.up_sites as f64,
+            r.round_energy_j / 1e3,
+            r.cap_power_w,
+            // −1 = no sub-budget in force (flat stepping or fill pending).
+            r.sub_budget_w.unwrap_or(-1.0),
+            r.offered_load_per_s,
+            r.steady_site_rounds as f64,
+        ]);
+    }
+
     let steady_saving_frac = if baseline.fleet_round_energy_j > 0.0 {
         1.0 - frost.fleet_round_energy_j / baseline.fleet_round_energy_j
     } else {
@@ -158,6 +187,7 @@ fn drive(mut frost_fleet: Fleet, opts: &CkptOptions) -> Result<DriveOutcome<Flee
         accuracy_unchanged,
         kpm_reports: frost.kpm_reports,
         table,
+        region_table,
         frost,
         baseline,
         trace,
@@ -194,6 +224,41 @@ mod tests {
         let saving_col = out.table.column("steady_saving_pct").unwrap();
         let saved = saving_col.iter().filter(|&&s| s > 0.0).count();
         assert!(saved >= 3, "{saved} of 4 sites saved");
+    }
+
+    #[test]
+    fn hierarchical_fleet_comparison_rolls_up_regions() {
+        use crate::oran::RegionMap;
+        let cfg = FleetConfig {
+            sites: 6,
+            seed: 21,
+            rounds: 6,
+            train_epochs: 5,
+            samples_per_epoch: 1_000,
+            infer_steps_per_round: 6,
+            budget_frac: 0.85,
+            regions: Some(RegionMap::auto(6, 2).unwrap()),
+            ..FleetConfig::default()
+        };
+        let out = fleet_comparison(&cfg).unwrap();
+        assert_eq!(out.region_table.len(), 2, "one row per region");
+        assert_eq!(out.frost.regions.len(), 2);
+        let total_sites: usize = out.frost.regions.iter().map(|r| r.sites).sum();
+        assert_eq!(total_sites, 6, "regions partition the fleet");
+        for r in &out.frost.regions {
+            assert!(r.round_energy_j > 0.0, "{} energy", r.name);
+            assert!(r.cap_power_w > 0.0, "{} cap wattage", r.name);
+        }
+        // With the budget enforced, the sub-budgets conserve it.
+        if out.frost.budget_enforced {
+            let budget = out.frost.budget_w.expect("budget_frac < 1 sets a budget");
+            let sub_sum: f64 =
+                out.frost.regions.iter().filter_map(|r| r.sub_budget_w).sum();
+            assert!(sub_sum <= budget + 1e-6, "Σ sub-budgets {sub_sum} > {budget}");
+        }
+        // The flat baseline leg carries no region roll-up rows with
+        // sub-budgets in force (the baseline enforces no budget).
+        assert!(out.baseline.regions.iter().all(|r| r.sub_budget_w.is_none()));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! * [`fig6`]  — energy-saving vs delay tradeoff across all 16 models,
 //!   including the paper's headline means.
 
+mod audit;
 pub mod chaos;
 pub mod fig2;
 #[cfg(feature = "pjrt")]

@@ -27,6 +27,7 @@ use crate::scenario::Scenario;
 use crate::traffic::{SloSummary, TrafficConfig};
 use crate::util::Series;
 
+use super::audit::RegionAudit;
 use super::traffic::class_day_rollup;
 
 /// One phase of the scripted day, compared across the two fleets.
@@ -76,6 +77,17 @@ pub struct ScenarioFigOutput {
     pub max_cap_excess_w: f64,
     /// Rounds the conservation audit covered (water-fill in force).
     pub budget_audited_rounds: usize,
+    /// Audited rounds where regional sub-budgets were in force (§16;
+    /// 0 on flat fleets).
+    pub region_audited_rounds: usize,
+    /// max over region-audited rounds of (Σ regional sub-budget watts −
+    /// global budget watts); ≤ 0 ⇔ the top-level allocation never
+    /// over-committed the budget.
+    pub max_subbudget_excess_w: f64,
+    /// max over region-audited rounds and regions of (region applied-cap
+    /// watts − region sub-budget watts); ≤ 0 ⇔ every regional fill
+    /// stayed within its allocation.
+    pub max_region_excess_w: f64,
     pub frost: FleetReport,
     pub baseline: FleetReport,
     /// The FROST run's trace spine (empty unless `FleetConfig::trace`;
@@ -170,7 +182,7 @@ pub fn scenario_comparison_ckpt(
     );
     let mut frost_cfg = config.clone();
     frost_cfg.frost_enabled = true;
-    drive(Fleet::new(frost_cfg)?, 0, f64::NEG_INFINITY, opts)
+    drive(Fleet::new(frost_cfg)?, 0, f64::NEG_INFINITY, RegionAudit::new(), opts)
 }
 
 /// Resume a crashed [`scenario_comparison_ckpt`] from its snapshot,
@@ -191,13 +203,19 @@ pub fn scenario_resume(
     let harness = snap.section("harness")?;
     let audited = jusize(&harness, "audited")?;
     let max_cap_excess_w = jf64(&harness, "max_excess")?;
-    drive(restore_fleet_with(snap, threads)?, audited, max_cap_excess_w, opts)
+    let region_audit = RegionAudit::resume(
+        jusize(&harness, "region_audited")?,
+        jf64(&harness, "max_sub_excess")?,
+        jf64(&harness, "max_region_excess")?,
+    );
+    drive(restore_fleet_with(snap, threads)?, audited, max_cap_excess_w, region_audit, opts)
 }
 
 fn drive(
     mut frost_fleet: Fleet,
     mut audited: usize,
     mut max_cap_excess_w: f64,
+    mut region_audit: RegionAudit,
     opts: &CkptOptions,
 ) -> Result<DriveOutcome<ScenarioFigOutput>> {
     let tr = frost_fleet
@@ -230,6 +248,7 @@ fn drive(
             if let Some(budget_w) = rep.budget_w {
                 audited += 1;
                 max_cap_excess_w = max_cap_excess_w.max(rep.cap_power_w - budget_w);
+                region_audit.absorb(&rep.regions, budget_w);
             }
         }
         if opts.due(round) {
@@ -244,6 +263,10 @@ fn drive(
                     sw.section("harness", |js| {
                         js.u64_field(Some("audited"), audited as u64);
                         w_f64(js, Some("max_excess"), max_cap_excess_w);
+                        let (ra, sub, reg) = region_audit.raw();
+                        js.u64_field(Some("region_audited"), ra as u64);
+                        w_f64(js, Some("max_sub_excess"), sub);
+                        w_f64(js, Some("max_region_excess"), reg);
                     })?;
                     Ok(())
                 },
@@ -350,6 +373,9 @@ fn drive(
         event_log: frost_fleet.fired_events(),
         max_cap_excess_w: if audited > 0 { max_cap_excess_w } else { 0.0 },
         budget_audited_rounds: audited,
+        region_audited_rounds: region_audit.audited,
+        max_subbudget_excess_w: region_audit.max_subbudget_excess(),
+        max_region_excess_w: region_audit.max_region_excess(),
         frost: frost_report,
         baseline: base_report,
         trace: frost_fleet.trace,

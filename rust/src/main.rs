@@ -176,9 +176,12 @@ COMMANDS:
   fleet     [--sites N] [--seed S] [--rounds R] [--threads T]
             [--epochs N] [--samples N] [--infer-steps N]
             [--budget-frac F] [--max-profiles K] [--churn-every C]
-            [--sample-retention N] [--out DIR] [--trace FILE] [--json FILE]
+            [--sample-retention N] [--regions N | --region-map L] [--smoke]
+            [--out DIR] [--trace FILE] [--json FILE]
             [--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]]
-            multi-host fleet simulation
+            multi-host fleet simulation; --regions N auto-partitions the
+            fleet into a hierarchical region tier (§16), --region-map
+            0,0,1,.. assigns sites explicitly, --smoke is a CI-sized run
   traffic   [--sites N] [--seed S] [--threads T] [--users N]
             [--req-per-user R] [--day-s S] [--slots N] [--max-batch B]
             [--arrivals poisson|bursty] [--diurnal typical|flat|W0,..,W23]
@@ -186,13 +189,14 @@ COMMANDS:
             [--budget-frac F] [--smoke] [--out DIR]
             seeded diurnal day, FROST vs stock caps + SLOs
   scenario  PRESET [--sites N] [--seed S] [--threads T] [--users N]
-            [--slots N] [--budget-frac F] [--smoke] [--out DIR]
-            [--trace FILE] [--json FILE]
+            [--slots N] [--budget-frac F] [--regions N | --region-map L]
+            [--smoke] [--out DIR] [--trace FILE] [--json FILE]
             [--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]]
             scripted operational day (PRESET: outage-day, grid-step,
             flash-crowd, heatwave) — deterministic event engine, FROST
             vs stock caps with per-phase energy/latency/attainment
-  chaos     PRESET [--sites N] [--seed S] [--threads T] [--smoke] [--out DIR]
+  chaos     PRESET [--sites N] [--seed S] [--threads T]
+            [--regions N | --region-map L] [--smoke] [--out DIR]
             [--trace FILE]
             [--checkpoint DIR [--every N] [--keep K] [--crash-at-round R]]
             fault-injected fleet day (PRESET: lossy-fabric, slow-fabric,
@@ -205,7 +209,7 @@ COMMANDS:
             fleet is restored bit-exactly and the run finished — report,
             --json and --trace outputs match the uninterrupted run byte
             for byte, under any --threads
-  trace     FILE.jsonl [--site N] [--round A..B] [--kind K]
+  trace     FILE.jsonl [--site N] [--region N] [--round A..B] [--kind K]
             [--explain SITE] [--summary]
             query a recorded TRACE_*.jsonl: stream matching lines, roll
             up counts, or reconstruct a site's cap-change causal chain
@@ -494,25 +498,80 @@ fn cmd_dvfs_ablation(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--regions N` / `--region-map "0,0,1,1"` into a [`RegionMap`]
+/// (DESIGN.md §16), shared by `frost fleet|scenario|chaos`.  `--regions
+/// 0`, more regions than sites, and a site mapped past the region count
+/// are hard errors, never clamps.
+///
+/// [`RegionMap`]: frost::oran::RegionMap
+fn region_map(args: &Args, sites: usize) -> Result<Option<frost::oran::RegionMap>> {
+    use frost::oran::{RegionMap, RegionSpec};
+    let explicit_n = match args.get("regions") {
+        Some(_) => Some(args.require_u64("regions", 1, 0)? as usize),
+        None => None,
+    };
+    let Some(raw) = args.get("region-map") else {
+        return Ok(match explicit_n {
+            Some(n) => Some(RegionMap::auto(sites, n)?),
+            None => None,
+        });
+    };
+    anyhow::ensure!(
+        raw != "true",
+        "--region-map needs a comma-separated site->region list (e.g. 0,0,1,1)"
+    );
+    let mut site_region = Vec::with_capacity(sites);
+    for p in raw.split(',') {
+        let r: u32 = p.trim().parse().map_err(|_| {
+            anyhow::anyhow!("invalid value for --region-map: '{p}' is not a region index")
+        })?;
+        site_region.push(r);
+    }
+    anyhow::ensure!(
+        site_region.len() == sites,
+        "--region-map assigns {} sites but the fleet has {sites}",
+        site_region.len()
+    );
+    // Without --regions the region count is inferred from the map; with
+    // it, out-of-range assignments fail validation below.
+    let n = match explicit_n {
+        Some(n) => n,
+        None => site_region.iter().map(|&r| r as usize + 1).max().unwrap_or(1),
+    };
+    anyhow::ensure!(n >= 1, "a fleet needs at least one region");
+    let regions = (0..n)
+        .map(|r| RegionSpec { name: format!("region{:02}", r + 1), weight: 1.0 })
+        .collect();
+    let rm = RegionMap { regions, site_region };
+    rm.validate(sites)?;
+    Ok(Some(rm))
+}
+
 fn cmd_fleet(args: &Args) -> Result<()> {
     use frost::oran::FleetConfig;
     let trace_path = args.get("trace");
+    // --smoke: a CI-sized run (shorter training, fewer rounds) that still
+    // exercises the full coordination stack, e.g. a 1000-site region tier.
+    let smoke = args.get("smoke").is_some();
+    let sites = args.require_u64("sites", 16, 1)? as usize;
     let config = FleetConfig {
-        sites: args.require_u64("sites", 16, 1)? as usize,
+        sites,
         seed: args.require_u64("seed", 7, 0)?,
         threads: args.require_u64("threads", 0, 0)? as usize,
-        rounds: args.require_u32("rounds", 8, 1)?,
-        train_epochs: args.require_u32("epochs", 60, 1)?,
-        samples_per_epoch: args.require_u64("samples", 20_000, 1)?,
-        infer_steps_per_round: args.require_u64("infer-steps", 40, 1)?,
+        rounds: args.require_u32("rounds", if smoke { 4 } else { 8 }, 1)?,
+        train_epochs: args.require_u32("epochs", if smoke { 8 } else { 60 }, 1)?,
+        samples_per_epoch: args.require_u64("samples", if smoke { 2_000 } else { 20_000 }, 1)?,
+        infer_steps_per_round: args.require_u64("infer-steps", if smoke { 8 } else { 40 }, 1)?,
         budget_frac: args.require_f64("budget-frac", 1.0, 1e-6, 10.0)?,
         max_concurrent_profiles: args.require_u64("max-profiles", 4, 1)? as usize,
         churn_every: args.require_u32("churn-every", 0, 0)?,
-        sample_retention: args.require_u64("sample-retention", 512, 0)? as usize,
+        sample_retention: args
+            .require_u64("sample-retention", if smoke { 64 } else { 512 }, 0)?
+            as usize,
+        regions: region_map(args, sites)?,
         trace: trace_path.is_some(),
         ..FleetConfig::default()
     };
-    let sites = config.sites;
     let opts = ckpt_options(args)?;
     match figures::fleet_comparison_ckpt(&config, &opts)? {
         frost::ckpt::DriveOutcome::Crashed { round, snapshot } => {
@@ -574,6 +633,28 @@ fn print_fleet_output(args: &Args, out: &figures::FleetFigOutput, sites: usize) 
         "per-site accuracy    : {}",
         if out.accuracy_unchanged { "unchanged vs baseline on every site" } else { "CHANGED (unexpected)" }
     );
+    if !out.frost.regions.is_empty() {
+        println!();
+        println!("=== region roll-up (§16) ===");
+        for r in &out.frost.regions {
+            let sub = match r.sub_budget_w {
+                Some(w) => format!("{w:.0} W"),
+                None => "-".into(),
+            };
+            println!(
+                "  {:<10} sites {:>4} (up {:>4})  round {:>9.1} kJ  cap {:>7.0} W  \
+                 sub-budget {:>8}  load {:>9.1}/s  steady {:>6} site-rounds",
+                r.name,
+                r.sites,
+                r.up_sites,
+                r.round_energy_j / 1e3,
+                r.cap_power_w,
+                sub,
+                r.offered_load_per_s,
+                r.steady_site_rounds
+            );
+        }
+    }
     println!();
     println!("=== fleet metrics (name-ordered, §14 registry) ===");
     for (name, v) in out.frost.metrics.counters() {
@@ -594,6 +675,11 @@ fn print_fleet_output(args: &Args, out: &figures::FleetFigOutput, sites: usize) 
         let path = std::path::Path::new(dir).join("fleet.csv");
         std::fs::write(&path, out.table.to_csv())?;
         println!("wrote {}", path.display());
+        if !out.frost.regions.is_empty() {
+            let path = std::path::Path::new(dir).join("fleet_regions.csv");
+            std::fs::write(&path, out.region_table.to_csv())?;
+            println!("wrote {}", path.display());
+        }
     }
     if let Some(p) = trace_path {
         frost::obs::export::write_trace(std::path::Path::new(p), &out.trace)?;
@@ -634,6 +720,24 @@ fn write_fleet_json(path: &str, out: &figures::FleetFigOutput) -> Result<()> {
         s.end_obj();
     }
     s.end_arr();
+    if !out.frost.regions.is_empty() {
+        s.begin_arr(Some("regions"));
+        for r in &out.frost.regions {
+            s.begin_obj(None);
+            s.str_field(Some("name"), &r.name);
+            s.u64_field(Some("sites"), r.sites as u64);
+            s.u64_field(Some("up_sites"), r.up_sites as u64);
+            s.num_field(Some("round_energy_j"), r.round_energy_j);
+            s.num_field(Some("cap_power_w"), r.cap_power_w);
+            if let Some(w) = r.sub_budget_w {
+                s.num_field(Some("sub_budget_w"), w);
+            }
+            s.num_field(Some("offered_load_per_s"), r.offered_load_per_s);
+            s.u64_field(Some("steady_site_rounds"), r.steady_site_rounds);
+            s.end_obj();
+        }
+        s.end_arr();
+    }
     write_metrics_json(&mut s, &out.frost.metrics);
     s.end_obj();
     s.finish().context("writing json report")?;
@@ -888,6 +992,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         max_concurrent_profiles: sites,
         traffic: Some(tr.clone()),
         scenario: Some(scen.clone()),
+        regions: region_map(args, sites)?,
         trace: trace_path.is_some(),
         ..FleetConfig::default()
     };
@@ -964,6 +1069,20 @@ fn print_scenario_output(
             }
         );
     }
+    if out.region_audited_rounds > 0 {
+        println!(
+            "region tier audit    : {} rounds audited, max Σ-sub-budget excess {:+.1} W, \
+             max region cap excess {:+.1} W — {}",
+            out.region_audited_rounds,
+            out.max_subbudget_excess_w,
+            out.max_region_excess_w,
+            if out.max_subbudget_excess_w <= 1e-6 && out.max_region_excess_w <= 1e-6 {
+                "both levels conserved"
+            } else {
+                "EXCEEDED (unexpected)"
+            }
+        );
+    }
     let lc_deadline = tr.slo.deadline_for(frost::frost::QosClass::LatencyCritical);
     let lc_ok = out
         .phases
@@ -1009,6 +1128,9 @@ fn write_scenario_json(path: &str, out: &figures::ScenarioFigOutput) -> Result<(
     s.num_field(Some("day_saving_frac"), out.day_saving_frac);
     s.num_field(Some("max_cap_excess_w"), out.max_cap_excess_w);
     s.u64_field(Some("budget_audited_rounds"), out.budget_audited_rounds as u64);
+    s.u64_field(Some("region_audited_rounds"), out.region_audited_rounds as u64);
+    s.num_field(Some("max_subbudget_excess_w"), out.max_subbudget_excess_w);
+    s.num_field(Some("max_region_excess_w"), out.max_region_excess_w);
     s.begin_arr(Some("events"));
     for ev in &out.event_log {
         s.begin_obj(None);
@@ -1068,6 +1190,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let trace_path = args.get("trace");
     let mut config = figures::chaos_config(preset, sites, seed, smoke)?;
     config.threads = args.require_u64("threads", 0, 0)? as usize;
+    config.regions = region_map(args, sites)?;
     config.trace = trace_path.is_some();
     let faults = config.faults.clone().expect("chaos_config always sets a plan");
     let opts = ckpt_options(args)?;
@@ -1129,6 +1252,20 @@ fn print_chaos_output(
             "EXCEEDED (unexpected)"
         }
     );
+    if out.region_audited_rounds > 0 {
+        println!(
+            "region tier audit    : {} rounds audited, max Σ-sub-budget excess {:+.1} W, \
+             max region cap excess {:+.1} W — {}",
+            out.region_audited_rounds,
+            out.max_subbudget_excess_w,
+            out.max_region_excess_w,
+            if out.max_subbudget_excess_w <= 1e-6 && out.max_region_excess_w <= 1e-6 {
+                "both levels conserved"
+            } else {
+                "EXCEEDED (unexpected)"
+            }
+        );
+    }
     println!(
         "self-healing         : last degraded round {}, fault window closed at {} — {}",
         out.last_unhealthy_round,
@@ -1149,6 +1286,13 @@ fn print_chaos_output(
         out.max_cap_excess_w <= 1e-6,
         "budget conservation violated: max cap excess {:+.3} W",
         out.max_cap_excess_w
+    );
+    anyhow::ensure!(
+        out.max_subbudget_excess_w <= 1e-6 && out.max_region_excess_w <= 1e-6,
+        "region-tier conservation violated: Σ-sub-budget excess {:+.3} W, \
+         region cap excess {:+.3} W",
+        out.max_subbudget_excess_w,
+        out.max_region_excess_w
     );
     anyhow::ensure!(out.healed, "fleet did not heal over the quiet tail");
     Ok(())
@@ -1281,7 +1425,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let Some(path) = args.get("file").or_else(|| args.pos(0)) else {
         anyhow::bail!(
             "missing trace file: frost trace FILE.jsonl \
-             [--site N] [--round A..B] [--kind K] [--explain SITE] [--summary]"
+             [--site N] [--region N] [--round A..B] [--kind K] [--explain SITE] [--summary]"
         );
     };
     let path = std::path::Path::new(path);
@@ -1300,6 +1444,11 @@ fn cmd_trace(args: &Args) -> Result<()> {
     if let Some(raw) = args.get("site") {
         filter.site = Some(raw.parse().map_err(|_| {
             anyhow::anyhow!("invalid value for --site: '{raw}' is not a site index")
+        })?);
+    }
+    if let Some(raw) = args.get("region") {
+        filter.region = Some(raw.parse().map_err(|_| {
+            anyhow::anyhow!("invalid value for --region: '{raw}' is not a region index")
         })?);
     }
     if let Some(raw) = args.get("round") {
@@ -1504,6 +1653,52 @@ mod tests {
         assert!(cmd_chaos(&a).is_err());
         let a = args(&["chaos", "slow-fabric", "--seed", "-1"]);
         assert!(cmd_chaos(&a).is_err());
+    }
+
+    #[test]
+    fn region_flags_are_validated_hard_on_every_fleet_command() {
+        // --regions 0 never clamps to a runnable single region.
+        let a = args(&["fleet", "--sites", "4", "--regions", "0"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("at least one region"), "got: {err}");
+        // More regions than sites is impossible to partition.
+        let a = args(&["fleet", "--sites", "4", "--regions", "5"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("exceeds the fleet's 4 sites"), "got: {err}");
+        // A site mapped past the declared region count is a hard error.
+        let a = args(&["fleet", "--sites", "4", "--regions", "2", "--region-map", "0,0,1,2"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("site 3 mapped to undefined region 2"), "got: {err}");
+        // Wrong-arity maps are called out with both counts.
+        let a = args(&["fleet", "--sites", "4", "--region-map", "0,1"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("assigns 2 sites"), "got: {err}");
+        // A declared region that owns no sites cannot water-fill.
+        let a = args(&["fleet", "--sites", "4", "--regions", "3", "--region-map", "0,0,1,1"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("owns no sites"), "got: {err}");
+        // Malformed map entries and a bare --region-map error clearly.
+        let a = args(&["fleet", "--sites", "4", "--region-map", "0,west,1,1"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("'west'"), "got: {err}");
+        let a = args(&["fleet", "--sites", "4", "--region-map"]);
+        let err = cmd_fleet(&a).unwrap_err().to_string();
+        assert!(err.contains("comma-separated"), "got: {err}");
+        // scenario and chaos validate through the same path.
+        let a = args(&["scenario", "outage-day", "--sites", "4", "--regions", "0"]);
+        let err = cmd_scenario(&a).unwrap_err().to_string();
+        assert!(err.contains("at least one region"), "got: {err}");
+        let a = args(&["chaos", "lossy-fabric", "--sites", "4", "--regions", "9"]);
+        let err = cmd_chaos(&a).unwrap_err().to_string();
+        assert!(err.contains("exceeds the fleet's 4 sites"), "got: {err}");
+        // A valid map alone infers the region count from its indices.
+        let a = args(&["fleet", "--sites", "4", "--region-map", "0,0,1,1"]);
+        let rm = region_map(&a, 4).unwrap().unwrap();
+        assert_eq!(rm.regions.len(), 2);
+        assert!(rm.is_hierarchical());
+        // No region flags at all stays flat.
+        let a = args(&["fleet", "--sites", "4"]);
+        assert!(region_map(&a, 4).unwrap().is_none());
     }
 
     #[test]

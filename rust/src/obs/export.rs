@@ -78,6 +78,9 @@ pub fn trace_line(sink: &TraceSink, ev: &TraceEvent, buf: &mut String) {
     if let Some(site) = ev.site {
         field_u64(buf, &mut first, "site", u64::from(site));
     }
+    if let Some(region) = ev.region {
+        field_u64(buf, &mut first, "region", u64::from(region));
+    }
     match &ev.data {
         TraceData::RoundStart | TraceData::Reprofile => {}
         TraceData::RoundEnd { cap_power_w } => {

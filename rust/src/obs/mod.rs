@@ -135,12 +135,16 @@ impl TraceData {
 }
 
 /// One recorded event.  Ids are 1-based and strictly increasing in
-/// record order; `site` is the site index for site-scoped events.
+/// record order; `site` is the site index for site-scoped events, and
+/// `region` is the site's region index when the fleet has a region map
+/// (DESIGN.md §16) — derived by the sink at record time, so call sites
+/// never pass it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
     pub id: u64,
     pub round: u32,
     pub site: Option<u32>,
+    pub region: Option<u32>,
     pub data: TraceData,
 }
 
@@ -157,11 +161,28 @@ pub struct TraceSink {
     /// Id of the current round's `round_start` event — the default
     /// trigger for cap changes with no more specific cause.
     round_anchor: Option<u64>,
+    /// Site → region assignment (§16): when set, every site-scoped event
+    /// is stamped with its region at record time.  None on region-free
+    /// fleets, whose exported traces are byte-unchanged.
+    site_region: Option<Vec<u32>>,
 }
 
 impl TraceSink {
     pub fn new(enabled: bool, round_s: f64) -> TraceSink {
-        TraceSink { enabled, round: 0, round_s, events: Vec::new(), round_anchor: None }
+        TraceSink {
+            enabled,
+            round: 0,
+            round_s,
+            events: Vec::new(),
+            round_anchor: None,
+            site_region: None,
+        }
+    }
+
+    /// Install the fleet's site → region assignment (§16).  Set once at
+    /// fleet construction, before any event is recorded.
+    pub fn set_region_map(&mut self, site_region: Vec<u32>) {
+        self.site_region = Some(site_region);
     }
 
     pub fn enabled(&self) -> bool {
@@ -210,7 +231,11 @@ impl TraceSink {
             return None;
         }
         let id = self.events.len() as u64 + 1;
-        self.events.push(TraceEvent { id, round: self.round, site, data });
+        let region = match (&self.site_region, site) {
+            (Some(map), Some(s)) => map.get(s as usize).copied(),
+            _ => None,
+        };
+        self.events.push(TraceEvent { id, round: self.round, site, region, data });
         Some(id)
     }
 

@@ -22,6 +22,9 @@ use crate::util::Json;
 #[derive(Debug, Clone, Default)]
 pub struct TraceFilter {
     pub site: Option<i64>,
+    /// Region index (§16): matches lines the sink tagged with a region.
+    /// Region-free traces carry no `region` key, so this matches nothing.
+    pub region: Option<i64>,
     pub round: Option<(i64, i64)>,
     pub kind: Option<String>,
 }
@@ -73,6 +76,11 @@ impl TraceFilter {
                 return false;
             }
         }
+        if let Some(region) = self.region {
+            if !mentions_u64(line, "region", region) {
+                return false;
+            }
+        }
         true
     }
 
@@ -85,6 +93,11 @@ impl TraceFilter {
         }
         if let Some(site) = self.site {
             if field_i64(v, "site") != Some(site) {
+                return false;
+            }
+        }
+        if let Some(region) = self.region {
+            if field_i64(v, "region") != Some(region) {
                 return false;
             }
         }
@@ -205,7 +218,11 @@ fn event_summary(v: &Json) -> String {
 
 /// Two-pass causal-chain reconstruction for one site's cap moves.
 pub fn explain_site(path: &Path, site: i64) -> Result<Vec<CapMove>> {
-    let filter = TraceFilter { site: Some(site), kind: Some("cap_change".into()), round: None };
+    let filter = TraceFilter {
+        site: Some(site),
+        kind: Some("cap_change".into()),
+        ..TraceFilter::default()
+    };
     let mut moves: Vec<CapMove> = Vec::new();
     scan(path, &filter, |_, v| {
         moves.push(CapMove {
@@ -268,10 +285,10 @@ mod tests {
 
     const TRACE: &str = "\
 {\"id\":1,\"round\":1,\"t_s\":0,\"kind\":\"round_start\"}
-{\"id\":2,\"round\":1,\"t_s\":0,\"kind\":\"scenario\",\"site\":2,\"detail\":\"site 2 outage\"}
-{\"id\":3,\"round\":1,\"t_s\":0,\"kind\":\"cap_change\",\"site\":2,\"cause\":\"water-fill\",\"from\":1,\"to\":0.5,\"trigger\":2}
+{\"id\":2,\"round\":1,\"t_s\":0,\"kind\":\"scenario\",\"site\":2,\"region\":0,\"detail\":\"site 2 outage\"}
+{\"id\":3,\"round\":1,\"t_s\":0,\"kind\":\"cap_change\",\"site\":2,\"region\":0,\"cause\":\"water-fill\",\"from\":1,\"to\":0.5,\"trigger\":2}
 {\"id\":4,\"round\":2,\"t_s\":150,\"kind\":\"round_start\"}
-{\"id\":5,\"round\":2,\"t_s\":150,\"kind\":\"cap_change\",\"site\":12,\"cause\":\"lease-fallback\",\"from\":0.5,\"to\":0.2,\"trigger\":4}
+{\"id\":5,\"round\":2,\"t_s\":150,\"kind\":\"cap_change\",\"site\":12,\"region\":1,\"cause\":\"lease-fallback\",\"from\":0.5,\"to\":0.2,\"trigger\":4}
 ";
 
     #[test]
@@ -288,7 +305,7 @@ mod tests {
     #[test]
     fn filters_compose_and_prefilter_never_drops_a_match() {
         let path = write_temp("frost_trace_query_filters.jsonl", TRACE);
-        let f = TraceFilter { site: Some(2), kind: None, round: None };
+        let f = TraceFilter { site: Some(2), ..Default::default() };
         let mut seen = Vec::new();
         let (scanned, matched) =
             scan(&path, &f, |_, v| seen.push(field_i64(v, "id").unwrap())).unwrap();
@@ -305,6 +322,17 @@ mod tests {
         let fk = TraceFilter { kind: Some("cap_change".into()), ..Default::default() };
         let (_, mk) = scan(&path, &fk, |_, _| {}).unwrap();
         assert_eq!(mk, 2);
+        // Region filter (§16): region 0 owns site 2's two events, region 1
+        // owns site 12's one; region 9 was never recorded.
+        let f0 = TraceFilter { region: Some(0), ..Default::default() };
+        let (_, m0) = scan(&path, &f0, |_, _| {}).unwrap();
+        assert_eq!(m0, 2);
+        let f1 = TraceFilter { region: Some(1), ..Default::default() };
+        let (_, m1) = scan(&path, &f1, |_, _| {}).unwrap();
+        assert_eq!(m1, 1);
+        let f9 = TraceFilter { region: Some(9), ..Default::default() };
+        let (_, m9) = scan(&path, &f9, |_, _| {}).unwrap();
+        assert_eq!(m9, 0);
     }
 
     #[test]

@@ -1,0 +1,1254 @@
+//! The fleet coordinator: construction, the per-round orchestration
+//! loop, scenario-event dispatch, the flat budget water-fill and the
+//! checkpoint hooks.  The region tier's round phases (steady replay,
+//! gateway fold, two-level water-fill) live in [`super::region`]; the
+//! per-site round and the worker pool live in [`super::round`].
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::config::{setup_no1, setup_no2, HardwareConfig};
+use crate::frost::{EnergyPolicy, QosClass};
+use crate::obs::{CapCause, MetricsRegistry, TraceData, TraceSink};
+use crate::power::{allocate_budget, HostProfile};
+use crate::scenario::ScenarioEvent;
+use crate::telemetry::hub::TelemetryHub;
+use crate::telemetry::sampler::PowerSampler;
+use crate::util::Seconds;
+use crate::zoo::all_models;
+
+use crate::oran::bus::{Bus, EndpointId};
+use crate::oran::faults::FaultPlan;
+use crate::oran::host::{HostCapKind, InferenceHost};
+use crate::oran::messages::{LifecycleEvent, OranMessage};
+use crate::oran::nonrt_ric::{
+    lock_recovering, FleetAssignments, FleetProfileScheduler, NonRtRic, ProfileHealth,
+    ProfileHealthState,
+};
+use crate::oran::smo::Smo;
+
+use super::region::RegionRt;
+use super::round::{FleetSite, SitePool, SiteTraffic};
+use super::{site_seed, FleetConfig, FleetReport};
+
+/// Mutable state of a running scenario script (the script itself is
+/// frozen inside the shared `FleetConfig`).  All transitions happen on
+/// the coordinator thread at round boundaries, so the §6 determinism
+/// contract is untouched.
+struct ScenarioRt {
+    /// Index of the next unfired event in `Scenario::events`.
+    next: usize,
+    /// Per-site flash-crowd multiplier (1.0 outside surge windows).
+    /// (Outage state is NOT duplicated here — `FleetSite::down` is the
+    /// single source of truth every reader consults.)
+    surge: Vec<f64>,
+    /// Per-site thermal cap ceiling (1.0 = no derate in force).
+    derate: Vec<f64>,
+    /// (policy max_cap_frac, enforced cap) captured at derate time, so
+    /// `DerateEnd` can restore the ceiling (and, on stock-cap fleets, the
+    /// cap itself).
+    pre_derate: Vec<Option<(f64, f64)>>,
+    /// The budget fraction currently in force (starts at
+    /// `FleetConfig::budget_frac`, moved by `BudgetStep` events).
+    budget_frac: f64,
+}
+
+/// One fired scenario event, for the per-event ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FiredEvent {
+    pub round: u32,
+    pub event: ScenarioEvent,
+    /// Human-readable description (the CLI ledger line).
+    pub detail: String,
+}
+
+/// The fleet simulator (see module docs for the round structure).
+pub struct Fleet {
+    /// The scenario, frozen at construction: the worker pool and the
+    /// coordinator read the same shared snapshot, so the configuration
+    /// cannot drift mid-run (`Arc` makes it immutable by construction).
+    pub config: Arc<FleetConfig>,
+    pub bus: Arc<Bus>,
+    pub smo: Smo,
+    pub nonrt: NonRtRic,
+    pub sites: Vec<FleetSite>,
+    assignments: FleetAssignments,
+    pub(crate) pool: SitePool,
+    /// Interned global-fabric ids the gateway routes by.
+    pub(crate) smo_id: EndpointId,
+    pub(crate) nonrt_id: EndpointId,
+    pub round: u32,
+    profiles_ingested: usize,
+    lifecycle_ingested: usize,
+    pub(crate) budget_applied: bool,
+    /// True once at least one full water-fill has been pushed (gates the
+    /// reservation path in `enforce_budget`).
+    pub(crate) ever_enforced: bool,
+    /// Mutable scenario state (None when the fleet runs no scenario).
+    scenario_rt: Option<ScenarioRt>,
+    /// Region-tier runtime (§16): Some iff the configured [`RegionMap`]
+    /// is hierarchical (more than one region).  A flat fleet — or a
+    /// single-region map, which is roll-up metadata only — keeps this
+    /// None and steps exactly as before.
+    ///
+    /// [`RegionMap`]: super::RegionMap
+    pub(crate) region_rt: Option<RegionRt>,
+    /// The flight recorder (§14): the coordinator-recorded trace spine.
+    /// Scenario events land here even with tracing off — the per-event
+    /// ledger ([`Fleet::fired_events`]) is derived from the sink.
+    pub trace: TraceSink,
+    /// Fleet-level named counters/gauges/summaries (§14); [`Fleet::report`]
+    /// merges the per-site, SMO and bus counters on top of a clone.
+    pub(crate) metrics: MetricsRegistry,
+    /// The first cap-affecting trigger awaiting the next water-fill push:
+    /// `(cause, trigger event id)`.  First setter per pending fill wins;
+    /// consumed only when `enforce_budget` actually pushes allocations,
+    /// so a trigger survives waiting rounds until the fill lands (§14).
+    pub(crate) pending_cause: Option<(CapCause, Option<u64>)>,
+    /// Profile-path health shared with the scheduler rApp (§13): the
+    /// scheduler writes quarantine decisions, the coordinator acts on
+    /// them (blank assignment + budget reservation) and lifts them.
+    pub(crate) profile_health: ProfileHealth,
+    /// Per-site quarantine release round (None = not quarantined).
+    quarantine_release: Vec<Option<u32>>,
+}
+
+/// How often a traffic-driven fleet re-runs the load-weighted budget
+/// water-fill (in rounds).  Non-traffic fleets allocate once, as before.
+const BUDGET_REFRESH_ROUNDS: u32 = 4;
+/// Lower bound on a site's offered-load budget weight: even a site whose
+/// last slot saw zero demand keeps a quarter share, so its throughput
+/// curve never collapses to all-zeros (which would pin it at min_cap).
+/// The top-level regional split (§16) applies the same floor to a
+/// region's load factor.
+pub(crate) const MIN_BUDGET_WEIGHT: f64 = 0.25;
+
+impl Fleet {
+    pub fn new(config: FleetConfig) -> Result<Fleet> {
+        anyhow::ensure!(config.sites > 0, "fleet needs at least one site");
+        anyhow::ensure!(config.budget_frac > 0.0, "budget_frac must be positive");
+        anyhow::ensure!(
+            config.policy_lease_rounds != 1,
+            "policy_lease_rounds of 1 expires before any renewal can land; \
+             use 0 (no leases) or >= 2"
+        );
+        if let Some(tr) = &config.traffic {
+            tr.validate().context("invalid traffic config")?;
+        }
+        if let Some(scen) = &config.scenario {
+            let tr = config
+                .traffic
+                .as_ref()
+                .context("a scenario script requires FleetConfig::traffic")?;
+            scen.validate(config.sites, tr).context("invalid scenario script")?;
+        }
+        if let Some(rm) = &config.regions {
+            rm.validate(config.sites).context("invalid region map")?;
+        }
+        let bus = Bus::new();
+        if let Some(fc) = &config.faults {
+            let mut plan = FaultPlan::new(fc.clone()).context("invalid fault config")?;
+            plan.set_trace(config.trace);
+            bus.set_fault_plan(Some(plan));
+        }
+        let mut smo = Smo::new(bus.clone());
+        smo.set_trace(config.trace);
+        let mut nonrt = NonRtRic::new(bus.clone(), config.min_accuracy);
+        let smo_id = bus.resolve("smo");
+        let nonrt_id = bus.resolve("nonrt-ric");
+        // Region gateways intern their fabric handles up front (§16);
+        // hierarchical only — a single-region map is roll-up metadata and
+        // must leave the stepping path (and the fabric) untouched.
+        let region_rt = config
+            .regions
+            .as_ref()
+            .filter(|rm| rm.is_hierarchical())
+            .map(|rm| RegionRt::new(rm.clone(), &bus));
+        let zoo = all_models();
+        let reference_gpu = setup_no1().gpu;
+        let assignments: FleetAssignments = Arc::new(Mutex::new(Vec::new()));
+        let retention =
+            if config.sample_retention > 0 { Some(config.sample_retention) } else { None };
+        let mut sites = Vec::with_capacity(config.sites);
+        for i in 0..config.sites {
+            let name = format!("site{:02}", i + 1);
+            let global_ep = bus.endpoint(&name); // downward routing target
+            let hw: HardwareConfig = if i % 2 == 0 { setup_no1() } else { setup_no2() };
+            let tdp_w = hw.gpu.tdp_w;
+            let min_cap_frac = hw.gpu.min_cap_frac;
+            let zoo_index = i % zoo.len();
+            let entry = &zoo[zoo_index];
+            let model_id = format!("{}@{}", entry.name, name);
+            let mut workload = entry.workload(&reference_gpu);
+            workload.name = model_id.clone();
+            let local_bus = Bus::new();
+            let local_smo = local_bus.endpoint("smo");
+            local_bus.endpoint("nonrt-ric");
+            let mut host =
+                InferenceHost::new(local_bus.clone(), &name, hw, site_seed(config.seed, i));
+            host.deploy(&model_id, workload.clone(), true);
+            host.set_trace_caps(config.trace);
+            let hub = Arc::new(TelemetryHub::new());
+            let sampler = PowerSampler::with_retention(
+                hub.clone(),
+                tdp_w,
+                min_cap_frac,
+                Seconds(0.1),
+                site_seed(config.seed, i) ^ 0x5A3F,
+                retention,
+            );
+            let qos = [QosClass::EnergySaver, QosClass::Balanced, QosClass::LatencyCritical]
+                [i % 3];
+            // Traffic state is seeded per site so arrival streams replay
+            // bit-for-bit regardless of worker-thread count (§6).
+            let phases = config.scenario.as_ref().map_or(0, |s| s.phases.len());
+            let traffic = config
+                .traffic
+                .as_ref()
+                .map(|tr| SiteTraffic::new(tr, i, qos, site_seed(config.seed, i), phases));
+            let policy = EnergyPolicy {
+                id: format!("{name}-qos"),
+                qos,
+                enabled: config.frost_enabled,
+                lease_rounds: config.policy_lease_rounds,
+                ..EnergyPolicy::default_policy()
+            };
+            // Per-site A1 policy, waiting in the local fabric for round 1.
+            // Recorded as the SMO's intent so lease renewals re-assert it.
+            smo.record_policy(&name, policy.clone());
+            local_bus.send("smo", &name, OranMessage::PolicyUpdate(policy));
+            smo.enrol_host(&name);
+            lock_recovering(&assignments).push((name.clone(), model_id.clone()));
+            sites.push(FleetSite {
+                index: i,
+                name,
+                global_ep,
+                local_bus,
+                local_smo,
+                host,
+                hub,
+                sampler,
+                zoo_index,
+                zoo_model: entry.name,
+                model_id,
+                workload,
+                qos,
+                trained: false,
+                epochs_trained: 0,
+                outbox: Vec::new(),
+                workload_energy_j: 0.0,
+                round_energy_j: 0.0,
+                profiling_energy_j: 0.0,
+                wall_s: 0.0,
+                samples: 0,
+                accuracy: 0.0,
+                last_gpu_power_w: 0.0,
+                rounds_run: 0,
+                down: false,
+                traffic,
+            });
+        }
+        if let Some(scen) = &config.scenario {
+            // Derate ceilings must stay above each target site's driver
+            // floor, or the clamp could not be enforced.  Checked against
+            // the *constructed* sites so the hardware-mix rule lives in
+            // exactly one place (the loop above).
+            for te in &scen.events {
+                if let ScenarioEvent::Derate { site, max_cap_frac } = te.event {
+                    let gpu = &sites[site].host.testbed.hw.gpu;
+                    anyhow::ensure!(
+                        max_cap_frac >= gpu.min_cap_frac,
+                        "derate cap {max_cap_frac} at site {site} is below the {} driver \
+                         floor {}",
+                        gpu.name,
+                        gpu.min_cap_frac
+                    );
+                }
+            }
+        }
+        let profile_health: ProfileHealth = Arc::new(Mutex::new(ProfileHealthState::default()));
+        if config.frost_enabled {
+            let mut scheduler =
+                FleetProfileScheduler::new(assignments.clone(), config.max_concurrent_profiles);
+            if config.profile_timeout_rounds > 0 {
+                scheduler = scheduler.with_resilience(
+                    config.profile_timeout_rounds,
+                    config.profile_max_attempts,
+                    config.seed ^ 0x0F0F_5CED,
+                    profile_health.clone(),
+                );
+            }
+            nonrt.add_rapp(Box::new(scheduler));
+        }
+        let requested = if config.threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            config.threads
+        };
+        let workers = requested.clamp(1, config.sites);
+        let scenario_rt = config.scenario.as_ref().map(|_| ScenarioRt {
+            next: 0,
+            surge: vec![1.0; config.sites],
+            derate: vec![1.0; config.sites],
+            pre_derate: vec![None; config.sites],
+            budget_frac: config.budget_frac,
+        });
+        let quarantine_release = vec![None; config.sites];
+        // One trace round = one traffic slot of sim time (0 s/round for
+        // fixed-workload fleets, which have no wall-synchronised clock).
+        let round_s = config.traffic.as_ref().map_or(0.0, |t| t.slot_s());
+        let mut trace = TraceSink::new(config.trace, round_s);
+        if let Some(rm) = &config.regions {
+            // Single-region maps register too: the roll-up dimension is
+            // metadata, valid whether or not the fleet steps hierarchically.
+            trace.set_region_map(rm.site_region.clone());
+        }
+        let config = Arc::new(config);
+        let pool = SitePool::spawn(workers, config.clone());
+        Ok(Fleet {
+            config,
+            bus,
+            smo,
+            nonrt,
+            sites,
+            assignments,
+            pool,
+            smo_id,
+            nonrt_id,
+            round: 0,
+            profiles_ingested: 0,
+            lifecycle_ingested: 0,
+            budget_applied: false,
+            ever_enforced: false,
+            scenario_rt,
+            region_rt,
+            trace,
+            metrics: MetricsRegistry::new(),
+            pending_cause: None,
+            profile_health,
+            quarantine_release,
+        })
+    }
+
+    /// Execute one orchestration round (module docs, steps 1–7).
+    pub fn run_round(&mut self) -> Result<()> {
+        self.round += 1;
+        // Flight recorder (§14): open the round span; its id anchors any
+        // cap change this round cannot attribute to a sharper trigger.
+        self.trace.begin_round(self.round);
+        // Fault clock (§13): the installed plan (if any) advances to this
+        // round and releases held-back messages whose delay elapsed.
+        self.bus.advance_fault_round();
+
+        // 0. Scenario events due this round fire first, on the
+        //    coordinator (DESIGN.md §11): outage/recovery topology,
+        //    surge multipliers, budget steps and derates are all settled
+        //    before the scheduler or any site acts, so the round is one
+        //    consistent world state for every worker-thread count.
+        self.apply_due_events()?;
+        //    Quarantines due for release re-enter the fleet before the
+        //    scheduler steps, so the re-stagger can start this round.
+        self.release_due_quarantines();
+
+        // 1. Non-RT RIC: ingest lifecycle events, stagger ProfileRequests.
+        self.nonrt.step()?;
+        //    Act on fresh quarantine decisions and renew A1 leases before
+        //    the fabric pumps, so both ride this round's delivery (§13).
+        self.absorb_quarantines();
+        self.renew_leases()?;
+        self.bus.deliver_all();
+
+        // 2. Gateway down: global → site-local, moving each message (the
+        //    sender rides along as a shared intern-table handle).  A down
+        //    site receives nothing — its global endpoint queues traffic
+        //    until recovery (bounded by `holdback_cap`, oldest dropped
+        //    first), so a pre-outage profile request is processed at most
+        //    once, after the site returns.  Any delivered message is a
+        //    disturbance (§16): it evicts the site from steady replay so
+        //    the message is actually processed.
+        for (i, site) in self.sites.iter().enumerate() {
+            if site.down {
+                if self.config.holdback_cap > 0 {
+                    let dropped =
+                        site.global_ep.truncate_oldest(self.config.holdback_cap) as u64;
+                    self.metrics.inc("holdback.dropped", dropped);
+                }
+                continue;
+            }
+            let mut delivered = false;
+            for (from, msg) in site.global_ep.drain() {
+                site.local_bus.send(&from, &site.name, msg);
+                delivered = true;
+            }
+            if delivered {
+                if let Some(rt) = self.region_rt.as_mut() {
+                    rt.dirty[i] = true;
+                }
+            }
+        }
+
+        // 3. Parallel site phase on the persistent pool; hierarchical
+        //    fleets replay steady sites on the coordinator first (§16)
+        //    and run only the active remainder.
+        if self.region_rt.is_some() {
+            self.run_site_phase_regions()?;
+        } else {
+            self.pool.run_phase(&mut self.sites).context("parallel site phase")?;
+        }
+        //    Ingest worker-side cap moves (lease fallbacks/restores,
+        //    policy clamps) in site-index order on the coordinator —
+        //    same §6 discipline as the gateway merge — so the trace is
+        //    bit-identical for any worker-thread count.
+        if self.trace.enabled() {
+            let anchor = self.trace.round_anchor();
+            for i in 0..self.sites.len() {
+                for ev in self.sites[i].host.drain_cap_events() {
+                    let cause = match ev.kind {
+                        HostCapKind::LeaseFallback => CapCause::LeaseFallback,
+                        HostCapKind::LeaseRestore => CapCause::Recovery,
+                        HostCapKind::PolicyClamp => CapCause::WaterFill,
+                    };
+                    self.trace.record(
+                        Some(i as u32),
+                        TraceData::CapChange {
+                            cause,
+                            from: ev.from,
+                            to: ev.to,
+                            trigger: anchor,
+                        },
+                    );
+                }
+            }
+        }
+
+        // 4. Gateway up, in site order (thread-count independent), with
+        //    training/deployment lifecycle fanned out to the non-RT RIC.
+        //    Hierarchical fleets fold per-site KPMs into one aggregate
+        //    per region instead (§16) — O(regions) on the global fabric.
+        if self.region_rt.is_some() {
+            self.gateway_up_regions();
+        } else {
+            for site in &mut self.sites {
+                let from = site.global_ep.id();
+                for msg in site.outbox.drain(..) {
+                    let for_ric = matches!(
+                        &msg,
+                        OranMessage::Lifecycle(
+                            LifecycleEvent::TrainingFinished { .. }
+                                | LifecycleEvent::Deployed { .. }
+                        )
+                    );
+                    if for_ric {
+                        self.bus.fanout_ids(from, &[self.smo_id, self.nonrt_id], msg);
+                    } else {
+                        self.bus.send_ids(from, self.smo_id, msg);
+                    }
+                }
+            }
+        }
+        self.bus.deliver_all();
+        self.smo.step();
+        if self.trace.enabled() {
+            for (host, reason) in self.smo.drain_trace_rejects() {
+                let site =
+                    self.sites.iter().position(|s| s.name == host).map(|i| i as u32);
+                self.trace.record(site, TraceData::KpmReject { host, reason });
+            }
+        }
+
+        // 5. Record fresh FROST decisions in the catalogue so the
+        //    scheduler stops re-requesting them, and react to validation
+        //    failures: a flagged model retrains next round with an
+        //    escalated epoch budget. Both logs are ingested by index —
+        //    no per-record cloning.
+        while self.profiles_ingested < self.smo.profile_records.len() {
+            let r = &self.smo.profile_records[self.profiles_ingested];
+            let _ = self.nonrt.catalogue.set_optimal_cap(&r.model, r.optimal_cap);
+            self.profiles_ingested += 1;
+        }
+        while self.lifecycle_ingested < self.smo.lifecycle_log.len() {
+            if self.trace.enabled() {
+                let detail =
+                    format!("{:?}", self.smo.lifecycle_log[self.lifecycle_ingested]);
+                self.trace.record(None, TraceData::Lifecycle { detail });
+            }
+            if let LifecycleEvent::FlaggedForRetraining { model, .. } =
+                &self.smo.lifecycle_log[self.lifecycle_ingested]
+            {
+                if let Some(site) = self.sites.iter_mut().find(|s| &s.model_id == model) {
+                    site.trained = false;
+                }
+            }
+            self.lifecycle_ingested += 1;
+        }
+        // Demand-shift re-profiles route through the scheduler: forget
+        // the model's recorded cap, and the FleetProfileScheduler
+        // re-requests it at ≤ max_concurrent_profiles sites per round.
+        for site in &mut self.sites {
+            if let Some(t) = site.traffic.as_mut() {
+                if std::mem::take(&mut t.reprofile_pending) {
+                    let _ = self.nonrt.catalogue.clear_optimal_cap(&site.model_id);
+                    self.trace.record(Some(site.index as u32), TraceData::Reprofile);
+                }
+            }
+        }
+
+        // 6. Global power budget, as soon as enough of the stagger has
+        //    profiled (unprofiled or down sites have their current cap
+        //    wattage *reserved*, so partial allocations still conserve
+        //    the budget).  Traffic-driven fleets re-balance periodically:
+        //    the water-fill weights sites by offered load, and the
+        //    diurnal day keeps moving that load around.  Scenario events
+        //    (budget steps, outages, recoveries, derates) force an
+        //    immediate re-water-fill by clearing `budget_applied`.
+        //    Hierarchical fleets run the two-level fill (§16).
+        if self.config.frost_enabled && self.current_budget_frac() < 1.0 {
+            let refresh = self.config.traffic.is_some()
+                && self.budget_applied
+                && self.round % BUDGET_REFRESH_ROUNDS == 0;
+            if !self.budget_applied || refresh {
+                if self.region_rt.is_some() {
+                    self.enforce_budget_regions()?;
+                } else {
+                    self.enforce_budget()?;
+                }
+            }
+        }
+
+        // 7. Workload churn.
+        if self.config.churn_every > 0 && self.round % self.config.churn_every == 0 {
+            self.churn();
+        }
+
+        // Round close.  The cap-wattage sum is a cheap O(sites)
+        // coordinator pass fed to the metrics summary on every run —
+        // traced or not, so reports are identical either way; the trace
+        // additionally records the fabric's fault fates, one line per
+        // site, and the round_end span.
+        let mut cap_w = 0.0;
+        for site in &self.sites {
+            cap_w += site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+        }
+        self.metrics.observe("round.cap_w", cap_w);
+        if self.trace.enabled() {
+            for (fate, interface, count) in self.bus.drain_fault_trace() {
+                self.trace.record(None, TraceData::Fault { fate, interface, count });
+            }
+            for site in &self.sites {
+                self.trace.record(
+                    Some(site.index as u32),
+                    TraceData::SiteRound {
+                        cap_frac: site.host.testbed.cap_frac(),
+                        down: site.down,
+                    },
+                );
+            }
+            self.trace.record(None, TraceData::RoundEnd { cap_power_w: cap_w });
+        }
+        Ok(())
+    }
+
+    /// Remember the round's first cap-affecting trigger (§14): the next
+    /// water-fill push attributes its cap changes to `(cause, trigger)`.
+    /// No-op with tracing off; first setter wins until the pending fill
+    /// consumes it.
+    fn note_cause(&mut self, cause: CapCause, trigger: Option<u64>) {
+        if self.trace.enabled() && self.pending_cause.is_none() {
+            self.pending_cause = Some((cause, trigger));
+        }
+    }
+
+    /// The site index a scenario event targets (None = fleet-wide).
+    fn event_site(event: &ScenarioEvent) -> Option<u32> {
+        match event {
+            ScenarioEvent::SiteDown { site }
+            | ScenarioEvent::SiteUp { site }
+            | ScenarioEvent::Derate { site, .. }
+            | ScenarioEvent::DerateEnd { site } => Some(*site as u32),
+            ScenarioEvent::SurgeStart { site, .. } | ScenarioEvent::SurgeEnd { site } => {
+                site.map(|s| s as u32)
+            }
+            ScenarioEvent::BudgetStep { .. } => None,
+        }
+    }
+
+    /// The per-event scenario ledger, reconstructed from the trace spine
+    /// (scenario events are recorded even with tracing off), in dispatch
+    /// order — the typed successor of the old `event_log` field.
+    pub fn fired_events(&self) -> Vec<FiredEvent> {
+        self.trace
+            .events()
+            .iter()
+            .filter_map(|e| match &e.data {
+                TraceData::Scenario { event, detail } => Some(FiredEvent {
+                    round: e.round,
+                    event: *event,
+                    detail: detail.clone(),
+                }),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The budget fraction currently in force: the configured one, unless
+    /// a scenario `BudgetStep` has moved it.
+    pub fn current_budget_frac(&self) -> f64 {
+        self.scenario_rt.as_ref().map_or(self.config.budget_frac, |rt| rt.budget_frac)
+    }
+
+    /// The thermal cap ceiling in force at `site` (1.0 = no derate).
+    /// The flat and the regional water-fill both filter legal operating
+    /// points against it.
+    pub(crate) fn derate_ceiling(&self, site: usize) -> f64 {
+        self.scenario_rt.as_ref().map_or(1.0, |rt| rt.derate[site])
+    }
+
+    /// True while `site` sits in profile quarantine (§13).
+    pub fn is_quarantined(&self, site: usize) -> bool {
+        self.quarantine_release.get(site).map_or(false, |q| q.is_some())
+    }
+
+    /// Adopt fresh scheduler quarantine decisions (§13): blank the
+    /// site's assignment (like a scripted outage does), forget its stale
+    /// demand weight, and schedule its release.  The site keeps serving —
+    /// only the profile/budget control path treats it as untrusted.
+    fn absorb_quarantines(&mut self) {
+        if self.config.profile_timeout_rounds == 0 {
+            return;
+        }
+        let quarantined = lock_recovering(&self.profile_health).quarantined.clone();
+        if quarantined.is_empty() {
+            return;
+        }
+        for i in 0..self.sites.len() {
+            if self.quarantine_release[i].is_some()
+                || !quarantined.contains(self.sites[i].name.as_str())
+            {
+                continue;
+            }
+            self.quarantine_release[i] = Some(self.round + self.config.quarantine_rounds);
+            lock_recovering(&self.assignments)[i].1 = String::new();
+            let name = self.sites[i].name.clone();
+            self.smo.clear_host_load(&name);
+            let tid =
+                self.trace.record(Some(i as u32), TraceData::Quarantine {
+                    host: name,
+                    entered: true,
+                });
+            self.note_cause(CapCause::Quarantine, tid);
+            // Its cap wattage is reserved in the water-fill until release.
+            self.budget_applied = false;
+        }
+    }
+
+    /// Lift quarantines whose sit-out elapsed: restore the assignment so
+    /// the scheduler's rolling cursor re-staggers the site into a fresh
+    /// attempt cycle, and force a budget re-fill.
+    fn release_due_quarantines(&mut self) {
+        for i in 0..self.sites.len() {
+            let due = matches!(self.quarantine_release[i], Some(r) if r <= self.round);
+            if !due {
+                continue;
+            }
+            self.quarantine_release[i] = None;
+            let (name, down) = {
+                let site = &self.sites[i];
+                (site.name.clone(), site.down)
+            };
+            lock_recovering(&self.profile_health).quarantined.remove(name.as_str());
+            // A down site stays blanked; its recovery event restores it.
+            if !down {
+                let pair = (name.clone(), self.sites[i].model_id.clone());
+                lock_recovering(&self.assignments)[i] = pair;
+            }
+            let tid = self
+                .trace
+                .record(Some(i as u32), TraceData::Quarantine { host: name, entered: false });
+            self.note_cause(CapCause::Recovery, tid);
+            self.budget_applied = false;
+        }
+    }
+
+    /// Renew every up site's A1 lease (§13) by re-pushing the policy the
+    /// SMO *intends* for it (its policy book): on a healthy fabric no
+    /// lease ever lapses, while a droppy one starves the host into its
+    /// safe-cap fallback within `policy_lease_rounds` missed renewals.
+    /// A host in fallback heals the moment one renewal lands (it
+    /// restores the pre-fallback cap, clamped to the renewed bounds), and
+    /// a dropped budget push is re-asserted by the very next renewal —
+    /// the host's own view is never trusted, so a stale ceiling cannot
+    /// outlive one delivered A1 message.
+    fn renew_leases(&mut self) -> Result<()> {
+        if self.config.policy_lease_rounds == 0 {
+            return Ok(());
+        }
+        for site in &self.sites {
+            // Skip sites that have not applied their construction-time
+            // policy yet (round 1): it is still queued on the site-local
+            // fabric and a renewal would only duplicate it.
+            if site.down || site.rounds_run == 0 {
+                continue;
+            }
+            let Some(intended) = self.smo.intended_policy(&site.name) else { continue };
+            let mut policy = intended.clone();
+            policy.lease_rounds = self.config.policy_lease_rounds;
+            self.smo.push_policy_to(&site.name, policy)?;
+            self.metrics.inc("lease.renewals", 1);
+        }
+        Ok(())
+    }
+
+    /// Fire every scripted event due at the current round (coordinator
+    /// thread, before anything else in the round — see `run_round` step 0).
+    fn apply_due_events(&mut self) -> Result<()> {
+        loop {
+            let due = {
+                let Some(rt) = self.scenario_rt.as_ref() else { return Ok(()) };
+                let scen = self.config.scenario.as_ref().expect("rt implies scenario");
+                match scen.events.get(rt.next) {
+                    Some(te) if te.round <= self.round => *te,
+                    _ => return Ok(()),
+                }
+            };
+            if let Some(rt) = self.scenario_rt.as_mut() {
+                rt.next += 1;
+            }
+            // Ledger first (unconditionally — the fired-event log derives
+            // from the sink), so the transition below can cite the event
+            // id as the trigger of any cap change it records.
+            let tid = self.trace.record_scenario(Self::event_site(&due.event), due.event);
+            self.apply_event(due.event, tid)?;
+            match due.event {
+                ScenarioEvent::BudgetStep { .. } => {
+                    self.note_cause(CapCause::BudgetStep, tid)
+                }
+                ScenarioEvent::SiteDown { .. } => self.note_cause(CapCause::WaterFill, tid),
+                ScenarioEvent::SiteUp { .. } => self.note_cause(CapCause::Recovery, tid),
+                ScenarioEvent::Derate { .. } => self.note_cause(CapCause::DerateClamp, tid),
+                ScenarioEvent::DerateEnd { .. } => self.note_cause(CapCause::Recovery, tid),
+                ScenarioEvent::SurgeStart { .. } | ScenarioEvent::SurgeEnd { .. } => {}
+            }
+        }
+    }
+
+    fn apply_event(&mut self, event: ScenarioEvent, tid: Option<u64>) -> Result<()> {
+        // Take the runtime state out of `self` for the duration of the
+        // transition so sites, SMO and catalogue can be borrowed freely.
+        let mut rt = self.scenario_rt.take().expect("events only fire with a scenario");
+        let mut topology_changed = false;
+        match event {
+            ScenarioEvent::BudgetStep { budget_frac } => {
+                // Re-water-fill immediately at the new level (step 6 of
+                // this same round).
+                rt.budget_frac = budget_frac;
+                self.budget_applied = false;
+            }
+            ScenarioEvent::SiteDown { site } => {
+                let s = &mut self.sites[site];
+                s.down = true;
+                // Requests waiting at the failed site are lost, not
+                // teleported: shed them now, charge them to the first
+                // outage slot's ledger.
+                if let Some(t) = s.traffic.as_mut() {
+                    t.pending_shed += t.server.shed_all();
+                }
+                // Blank the scheduler assignment so the stagger skips the
+                // dark site instead of queueing duplicate profile
+                // requests against it every round (it would double-charge
+                // profiling energy at recovery).
+                lock_recovering(&self.assignments)[site].1 = String::new();
+                // And drop its stale demand weight at the SMO.
+                let name = self.sites[site].name.clone();
+                self.smo.clear_host_load(&name);
+                // Region tier: the intra-region ledger forgets the dark
+                // site too, and when its *last* up-site goes down the
+                // top-level allocator must forget the region's aggregate
+                // load weight — a stale entry would keep steering budget
+                // share to a region that offers nothing (§16).
+                if let Some(rrt) = self.region_rt.as_mut() {
+                    rrt.site_load[site] = 0.0;
+                    let r = rrt.map.site_region[site] as usize;
+                    if rrt.members[r].iter().all(|&i| self.sites[i].down) {
+                        let region_name = rrt.map.regions[r].name.clone();
+                        self.smo.clear_host_load(&region_name);
+                    }
+                }
+                self.budget_applied = false;
+                topology_changed = true;
+            }
+            ScenarioEvent::SiteUp { site } => {
+                let s = &mut self.sites[site];
+                s.down = false;
+                let pair = (s.name.clone(), s.model_id.clone());
+                lock_recovering(&self.assignments)[site] = pair;
+                // Its profile is still fresh (same model), so the forced
+                // refresh folds it straight back into the water-fill.
+                self.budget_applied = false;
+                topology_changed = true;
+            }
+            ScenarioEvent::SurgeStart { mult, site } => {
+                match site {
+                    Some(i) => rt.surge[i] = mult,
+                    None => rt.surge.fill(mult),
+                }
+                topology_changed = true;
+            }
+            ScenarioEvent::SurgeEnd { site } => {
+                match site {
+                    Some(i) => rt.surge[i] = 1.0,
+                    None => rt.surge.fill(1.0),
+                }
+                topology_changed = true;
+            }
+            ScenarioEvent::Derate { site, max_cap_frac } => {
+                rt.derate[site] = max_cap_frac;
+                let s = &mut self.sites[site];
+                rt.pre_derate[site] =
+                    Some((s.host.policy.max_cap_frac, s.host.testbed.cap_frac()));
+                // Clamp the A1 ceiling (the profiler obeys policy bounds)
+                // and the enforced cap itself; the cap change invalidates
+                // the site's step-estimate cache (`Testbed::set_cap_frac`).
+                s.host.policy.max_cap_frac = s.host.policy.max_cap_frac.min(max_cap_frac);
+                let pre_cap = s.host.testbed.cap_frac();
+                if pre_cap > max_cap_frac {
+                    s.host.testbed.set_cap_frac(max_cap_frac);
+                    self.trace.record(
+                        Some(site as u32),
+                        TraceData::CapChange {
+                            cause: CapCause::DerateClamp,
+                            from: pre_cap,
+                            to: max_cap_frac,
+                            trigger: tid,
+                        },
+                    );
+                }
+                if self.config.frost_enabled {
+                    // Online system tuning: forget the recorded optimum so
+                    // the scheduler re-profiles under the new ceiling.
+                    let _ = self.nonrt.catalogue.clear_optimal_cap(&s.model_id);
+                }
+                self.budget_applied = false;
+            }
+            ScenarioEvent::DerateEnd { site } => {
+                rt.derate[site] = 1.0;
+                if let Some((policy_max, pre_cap)) = rt.pre_derate[site].take() {
+                    let s = &mut self.sites[site];
+                    s.host.policy.max_cap_frac = policy_max;
+                    if self.config.frost_enabled {
+                        // Re-profile to exploit the restored headroom (or
+                        // let the budget refresh re-allocate it).
+                        let _ = self.nonrt.catalogue.clear_optimal_cap(&s.model_id);
+                    } else {
+                        // Stock caps: return to the pre-derate setting.
+                        let cur = s.host.testbed.cap_frac();
+                        s.host.testbed.set_cap_frac(pre_cap);
+                        if (cur - pre_cap).abs() > 1e-12 {
+                            self.trace.record(
+                                Some(site as u32),
+                                TraceData::CapChange {
+                                    cause: CapCause::Recovery,
+                                    from: cur,
+                                    to: pre_cap,
+                                    trigger: tid,
+                                },
+                            );
+                        }
+                    }
+                }
+                self.budget_applied = false;
+            }
+        }
+        self.scenario_rt = Some(rt);
+        if topology_changed {
+            self.recompute_rate_mults();
+        }
+        Ok(())
+    }
+
+    /// Push the effective arrival-rate multiplier to every site's
+    /// generator: the surge factor layered with outage redistribution —
+    /// a down site's users re-attach to the *up* sites of its region,
+    /// weighted by user counts, so regional demand is conserved while a
+    /// site is dark.  The redistribution domain is the configured
+    /// [`RegionMap`]'s region when one is present (§16), else contiguous
+    /// `Scenario::region_size` blocks — for region-free fleets the
+    /// float-sum order is unchanged, so runs stay bit-identical.
+    /// With no sites down and no surge the product is exactly 1.0 and the
+    /// arrival streams stay bit-identical to a scenario-free run.
+    ///
+    /// [`RegionMap`]: super::RegionMap
+    fn recompute_rate_mults(&mut self) {
+        let Some(rt) = self.scenario_rt.as_ref() else { return };
+        let scen = self.config.scenario.as_ref().expect("rt implies scenario");
+        let Some(tr) = self.config.traffic.as_ref() else { return };
+        let n = self.sites.len();
+        let groups: Vec<Vec<usize>> = match &self.config.regions {
+            Some(rm) => rm.members(),
+            None => {
+                let region = scen.region_size.max(1);
+                let mut groups = Vec::new();
+                let mut start = 0usize;
+                while start < n {
+                    let end = (start + region).min(n);
+                    groups.push((start..end).collect());
+                    start = end;
+                }
+                groups
+            }
+        };
+        let mut mults = vec![1.0f64; n];
+        for group in &groups {
+            let total: f64 = group.iter().map(|&i| tr.site_users(i)).sum();
+            let up: f64 = group
+                .iter()
+                .filter(|&&i| !self.sites[i].down)
+                .map(|&i| tr.site_users(i))
+                .sum();
+            for &i in group {
+                let redistribute = if self.sites[i].down || up <= 0.0 {
+                    // A dark site generates nothing; the multiplier is
+                    // moot but kept sane for its recovery round.
+                    1.0
+                } else if up < total {
+                    total / up
+                } else {
+                    1.0
+                };
+                mults[i] = rt.surge[i] * redistribute;
+            }
+        }
+        for (site, m) in self.sites.iter_mut().zip(&mults) {
+            if let Some(t) = site.traffic.as_mut() {
+                t.gen.set_rate_mult(*m);
+            }
+        }
+    }
+
+    /// Water-fill the global GPU budget across the profiled throughput
+    /// curves and push the allocation down as per-site A1 policies.
+    ///
+    /// **Budget conservation invariant (DESIGN.md §11).**  Sites that
+    /// cannot join the water-fill — a stale profile right after churn, a
+    /// scripted outage — do *not* silently vanish from the ledger (the
+    /// old behaviour would have spread the full budget over the rest
+    /// while the dropped site kept drawing under its old cap, busting the
+    /// global budget).  Instead each such site's **current cap wattage is
+    /// reserved** off the top, and only the remainder is allocated.  When
+    /// the remainder cannot cover the participating sites' driver floors
+    /// yet (early stagger), the allocation waits — caps are left as they
+    /// are, which is exactly the pre-enforcement state.
+    ///
+    /// Traffic-driven sites report their offered load on KPM; the
+    /// water-fill scales each site's throughput curve by its load share,
+    /// so budget watts flow to the sites with the most demand behind
+    /// them.  Without load reports every weight is exactly 1.0 and the
+    /// allocation is bit-identical to the unweighted one.  Derated sites
+    /// only offer operating points under their thermal ceiling.
+    fn enforce_budget(&mut self) -> Result<()> {
+        let loads = self.smo.offered_load_by_host();
+        let mean_load = if loads.is_empty() {
+            0.0
+        } else {
+            loads.values().sum::<f64>() / loads.len() as f64
+        };
+        let mut profiles = Vec::new();
+        let mut alloc_sites: Vec<usize> = Vec::new();
+        let mut reserved_w = 0.0;
+        let mut waiting = 0usize; // stale-profile sites (stagger/churn)
+        for (i, site) in self.sites.iter().enumerate() {
+            let down = site.down;
+            let quarantined = self.quarantine_release[i].is_some();
+            let derate_max = self.scenario_rt.as_ref().map_or(1.0, |rt| rt.derate[i]);
+            let fresh = matches!(
+                site.host.profile_log.last(),
+                Some(out) if out.model == site.model_id
+            );
+            if down || quarantined || !fresh {
+                // Reserve the site's worst-case draw under its current
+                // cap: a dark site still holds its cap for the recovery
+                // round, an unprofiled site keeps running under its old
+                // cap until the stagger reaches it, and a quarantined
+                // site's profile path is untrusted until release (§13).
+                // Neither dark nor quarantined sites count as "waiting" —
+                // their reservation *is* their allocation.
+                if !down && !quarantined {
+                    waiting += 1;
+                }
+                reserved_w += site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+                continue;
+            }
+            let out = site.host.profile_log.last().expect("checked fresh");
+            // Points below the site's policy minimum are not legal
+            // operating points; including them would let the allocator
+            // "spend" less than the later `.max(min)` raise actually
+            // enforces, silently busting the budget.  Points above a
+            // thermal derate ceiling are equally illegal — the hardware
+            // cannot run there.
+            let min_frac = site.host.policy.min_cap_frac;
+            let legal: Vec<_> = out
+                .points
+                .iter()
+                .filter(|p| {
+                    p.cap_frac >= min_frac - 1e-9 && p.cap_frac <= derate_max + 1e-9
+                })
+                .cloned()
+                .collect();
+            let pts = if legal.is_empty() {
+                if derate_max < 1.0 {
+                    // The profile has no point under the ceiling (a very
+                    // deep derate): hold the site at its clamped cap and
+                    // reserve those watts instead of allocating.
+                    reserved_w +=
+                        site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+                    continue;
+                }
+                out.points.clone()
+            } else {
+                legal
+            };
+            let mut profile =
+                HostProfile::from_profile(&site.name, site.host.testbed.hw.gpu.tdp_w, &pts);
+            // Floored: a site that reported zero demand for one slot must
+            // shrink, not vanish — weight 0 would zero its whole curve
+            // and pin it at min_cap until the next refresh, which a
+            // latency_critical site cannot afford at the next morning
+            // ramp.
+            let weight = match loads.get(&site.name) {
+                Some(&l) if mean_load > 0.0 => (l / mean_load).max(MIN_BUDGET_WEIGHT),
+                _ => 1.0,
+            };
+            for p in profile.points.iter_mut() {
+                p.1 *= weight;
+            }
+            profiles.push(profile);
+            alloc_sites.push(i);
+        }
+        if profiles.is_empty() {
+            return Ok(()); // nothing profiled yet; retry next round
+        }
+        // The *first* allocation is always full-fleet: mid-stagger the
+        // waiting sites still sit at stock caps, and allocating the thin
+        // remainder would clamp the profiled sites far below their final
+        // share (caps ratchet down, not up, between profiles).  Once a
+        // full water-fill has run, later rounds use the reservation path
+        // so churn, outages and derates re-balance immediately without
+        // ever busting the budget.
+        if waiting > 0 && !self.ever_enforced {
+            return Ok(());
+        }
+        // The budget is defined over the whole fleet's TDP — including
+        // reserved sites, whose watts come off the top.
+        let total_tdp: f64 =
+            self.sites.iter().map(|s| s.host.testbed.hw.gpu.tdp_w).sum();
+        let budget_w = total_tdp * self.current_budget_frac();
+        let remainder = budget_w - reserved_w;
+        let Some(allocs) = allocate_budget(&profiles, remainder, 5.0) else {
+            if reserved_w > 0.0 {
+                // The remainder cannot cover the participants' floors
+                // while reservations hold the rest: wait for the stagger
+                // or the recovery to free watts.
+                return Ok(());
+            }
+            anyhow::bail!("fleet power budget below the driver floors");
+        };
+        // Attribution (§14): consume the round's pending trigger — set by
+        // whatever forced this fill (budget step, outage, derate,
+        // quarantine) even if the fill had to wait a round — or fall back
+        // to a plain water-fill anchored at the round span.
+        let (cause, trigger) = self
+            .pending_cause
+            .take()
+            .unwrap_or((CapCause::WaterFill, self.trace.round_anchor()));
+        for (i, alloc) in alloc_sites.iter().zip(&allocs) {
+            let site = &mut self.sites[*i];
+            let mut policy = site.host.policy.clone();
+            policy.id = format!("{}-budget", site.name);
+            policy.max_cap_frac = alloc.cap_frac.max(policy.min_cap_frac);
+            let from = site.host.policy.max_cap_frac;
+            if (from - policy.max_cap_frac).abs() > 1e-12 {
+                self.trace.record(
+                    Some(*i as u32),
+                    TraceData::CapChange { cause, from, to: policy.max_cap_frac, trigger },
+                );
+            }
+            // Enact the ceiling immediately on the coordinator: budget
+            // conservation is a per-round invariant (a scripted budget
+            // step must bite in its own round), so the clamp cannot wait
+            // for the A1 message to land at the site next round.  The
+            // delivered policy then re-applies the same bound, a no-op.
+            if site.host.testbed.cap_frac() > policy.max_cap_frac {
+                site.host.testbed.set_cap_frac(policy.max_cap_frac);
+            }
+            self.smo.push_policy_to(&site.name, policy)?;
+        }
+        // Enforced-in-full only once no site is waiting on a fresh
+        // profile; until then, retry every round (down sites are excluded
+        // deliberately — their reservation *is* their allocation).
+        self.ever_enforced = true;
+        self.budget_applied = waiting == 0;
+        Ok(())
+    }
+
+    /// Rotate every site to its next zoo model (workload churn): deploy it
+    /// under a fresh catalogue id, mark the site untrained, and point the
+    /// profile scheduler at the new assignment.
+    fn churn(&mut self) {
+        let zoo = all_models();
+        let reference_gpu = setup_no1().gpu;
+        for site in &mut self.sites {
+            site.zoo_index = (site.zoo_index + 1) % zoo.len();
+            let entry = &zoo[site.zoo_index];
+            let model_id = format!("{}@{}#r{}", entry.name, site.name, self.round);
+            let mut workload = entry.workload(&reference_gpu);
+            workload.name = model_id.clone();
+            site.host.deploy(&model_id, workload.clone(), true);
+            site.workload = workload;
+            site.zoo_model = entry.name;
+            site.model_id = model_id.clone();
+            site.trained = false;
+            site.epochs_trained = 0;
+            // A down site stays blanked for the scheduler; its new
+            // assignment lands when the recovery event restores it.
+            let assigned = if site.down { String::new() } else { model_id };
+            lock_recovering(&self.assignments)[site.index] = (site.name.clone(), assigned);
+        }
+        // Churn is a fleet-wide disturbance: every site retrains from
+        // scratch, so no recorded steady delta can survive it (§16).
+        if let Some(rt) = self.region_rt.as_mut() {
+            rt.dirty.fill(true);
+        }
+        // New models re-profile; refresh the budget allocation afterwards.
+        self.budget_applied = false;
+    }
+
+    /// Run the configured number of rounds and return the roll-up.
+    pub fn run(&mut self) -> Result<FleetReport> {
+        for _ in 0..self.config.rounds {
+            self.run_round()?;
+        }
+        Ok(self.report())
+    }
+
+    // ---- checkpoint hooks (DESIGN.md §15) ------------------------------
+    //
+    // Everything below exists so `crate::ckpt::snapshot` can read and
+    // restore the coordinator's *private* state; pub fields (round, smo,
+    // nonrt, sites, bus, trace, config) are reached directly.  None of
+    // these run on the hot path.
+
+    /// Private coordinator scalars `(profiles_ingested,
+    /// lifecycle_ingested, budget_applied, ever_enforced,
+    /// pending_cause)`.  `round` is pub and travels in the snapshot
+    /// header instead.
+    #[allow(clippy::type_complexity)]
+    pub fn ckpt_coord_state(
+        &self,
+    ) -> (usize, usize, bool, bool, Option<(CapCause, Option<u64>)>) {
+        (
+            self.profiles_ingested,
+            self.lifecycle_ingested,
+            self.budget_applied,
+            self.ever_enforced,
+            self.pending_cause,
+        )
+    }
+
+    pub fn restore_ckpt_coord_state(
+        &mut self,
+        profiles_ingested: usize,
+        lifecycle_ingested: usize,
+        budget_applied: bool,
+        ever_enforced: bool,
+        pending_cause: Option<(CapCause, Option<u64>)>,
+    ) {
+        self.profiles_ingested = profiles_ingested;
+        self.lifecycle_ingested = lifecycle_ingested;
+        self.budget_applied = budget_applied;
+        self.ever_enforced = ever_enforced;
+        self.pending_cause = pending_cause;
+    }
+
+    /// Mutable scenario-runtime state `(next, surge, derate, pre_derate,
+    /// budget_frac)`; None when the fleet runs no scenario.
+    #[allow(clippy::type_complexity)]
+    pub fn ckpt_scenario_state(
+        &self,
+    ) -> Option<(usize, &[f64], &[f64], &[Option<(f64, f64)>], f64)> {
+        self.scenario_rt.as_ref().map(|rt| {
+            (
+                rt.next,
+                rt.surge.as_slice(),
+                rt.derate.as_slice(),
+                rt.pre_derate.as_slice(),
+                rt.budget_frac,
+            )
+        })
+    }
+
+    /// Restore the scenario runtime.  No-op on a scenario-free fleet
+    /// (whose snapshots carry no scenario section either).
+    pub fn restore_ckpt_scenario_state(
+        &mut self,
+        next: usize,
+        surge: Vec<f64>,
+        derate: Vec<f64>,
+        pre_derate: Vec<Option<(f64, f64)>>,
+        budget_frac: f64,
+    ) {
+        if let Some(rt) = self.scenario_rt.as_mut() {
+            rt.next = next;
+            rt.surge = surge;
+            rt.derate = derate;
+            rt.pre_derate = pre_derate;
+            rt.budget_frac = budget_frac;
+        }
+    }
+
+    /// Per-site quarantine release rounds (None = not quarantined).
+    pub fn ckpt_quarantine_release(&self) -> &[Option<u32>] {
+        &self.quarantine_release
+    }
+
+    pub fn restore_ckpt_quarantine_release(&mut self, release: Vec<Option<u32>>) {
+        self.quarantine_release = release;
+    }
+
+    /// The shared profile-health ledger `(quarantined sites,
+    /// quarantine_events)`, cloned out of its mutex.
+    pub fn ckpt_profile_health(&self) -> (Vec<String>, u64) {
+        let h = lock_recovering(&self.profile_health);
+        (h.quarantined.iter().cloned().collect(), h.quarantine_events)
+    }
+
+    pub fn restore_ckpt_profile_health(
+        &mut self,
+        quarantined: Vec<String>,
+        quarantine_events: u64,
+    ) {
+        let mut h = lock_recovering(&self.profile_health);
+        h.quarantined = quarantined.into_iter().collect();
+        h.quarantine_events = quarantine_events;
+    }
+
+    /// The scheduler's shared assignment table, cloned out of its mutex.
+    pub fn ckpt_assignments(&self) -> Vec<(String, String)> {
+        lock_recovering(&self.assignments).clone()
+    }
+
+    pub fn restore_ckpt_assignments(&mut self, assignments: Vec<(String, String)>) {
+        *lock_recovering(&self.assignments) = assignments;
+    }
+
+    /// The live coordinator metrics registry (lease renewals, holdback
+    /// drops, per-round cap-wattage summary — NOT the derived counters
+    /// [`Fleet::report`] folds in, which recompute from live state).
+    pub fn ckpt_metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn ckpt_metrics_mut(&mut self) -> &mut MetricsRegistry {
+        &mut self.metrics
+    }
+}

@@ -1,0 +1,716 @@
+//! The region tier (DESIGN.md §16): hierarchical coordination that takes
+//! the fleet from tens of sites to 10,000.
+//!
+//! A [`RegionMap`] partitions the sites into named, weighted regions.
+//! With more than one region the fleet steps through three region-local
+//! mechanisms, each replacing an O(sites) top-level pass with O(regions)
+//! top-level work plus region-local remainders:
+//!
+//! * **steady-state replay** — a site whose round-over-round state delta
+//!   is bitwise-identical twice in a row is *promoted*: its next rounds
+//!   are replayed on the coordinator by re-applying the recorded
+//!   [`SteadyDelta`] instead of travelling to a worker thread.  Any
+//!   disturbance (a delivered message, a budget push, churn) evicts it
+//!   back to the active set.  The promotion criterion is self-protecting:
+//!   state that draws RNG or drifts never produces two identical deltas,
+//!   so it simply stays active;
+//! * **gateway fabric** — per-site KPMs terminate at the region gateway,
+//!   which folds them into ONE aggregate KPM per region per round on the
+//!   global bus (sums for power/energy/samples, maxima for
+//!   utilisation/cap/p99, the region's offered-load ledger, a monotone
+//!   per-gateway sequence number and a logical round clock).  Profile
+//!   results and lifecycle events still ride upward individually —
+//!   the SMO and non-RT RIC need them per site;
+//! * **two-level water-fill** — the top level splits the budget
+//!   remainder across regions by `spec.weight × regional offered-load
+//!   factor` (O(regions)), and each region water-fills its sub-budget
+//!   over its own members' throughput curves.  Per-site classification
+//!   (down/quarantined/stale reservations, legal-point filtering,
+//!   deep-derate holds) is byte-for-byte the flat algorithm's, so the
+//!   §11 conservation invariant extends: Σ regional sub-budgets ≤ the
+//!   in-force global budget, and within each region Σ applied cap
+//!   wattage ≤ its sub-budget.
+//!
+//! A `RegionMap` with a single region is roll-up metadata only: the fleet
+//! steps on the flat path and stays bit-identical to a region-free run.
+
+use std::collections::BTreeSet;
+
+use anyhow::{Context, Result};
+
+use crate::obs::{CapCause, TraceData};
+use crate::oran::bus::{Bus, EndpointId};
+use crate::oran::messages::{KpmReport, LifecycleEvent, OranMessage};
+use crate::power::{allocate_budget, Allocation, HostProfile};
+use crate::util::Seconds;
+
+use super::coordinator::MIN_BUDGET_WEIGHT;
+use super::Fleet;
+
+/// One named region of the fleet: a top-level water-fill participant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionSpec {
+    /// Unique region name; the gateway reports KPMs under it, so it is
+    /// also the key of the SMO's per-region offered-load ledger.
+    pub name: String,
+    /// Static budget weight (multiplied by the live load factor at the
+    /// top-level split).  Must be positive and finite.
+    pub weight: f64,
+}
+
+/// The site → region partition of a fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionMap {
+    pub regions: Vec<RegionSpec>,
+    /// `site_region[i]` = index into `regions` of site `i`'s region.
+    pub site_region: Vec<u32>,
+}
+
+impl RegionMap {
+    /// Partition `sites` into `n` contiguous regions of near-equal size:
+    /// the first `sites % n` regions take one extra site, so **no region
+    /// is ever empty** (a chunked `div_ceil` split would leave trailing
+    /// regions without sites, e.g. 9 sites over 4 regions).
+    pub fn auto(sites: usize, n: usize) -> Result<RegionMap> {
+        anyhow::ensure!(n >= 1, "a fleet needs at least one region");
+        anyhow::ensure!(n <= sites, "--regions {n} exceeds the fleet's {sites} sites");
+        let base = sites / n;
+        let extra = sites % n;
+        let mut site_region = Vec::with_capacity(sites);
+        for r in 0..n {
+            let len = base + usize::from(r < extra);
+            site_region.extend(std::iter::repeat(r as u32).take(len));
+        }
+        let regions = (0..n)
+            .map(|r| RegionSpec { name: format!("region{:02}", r + 1), weight: 1.0 })
+            .collect();
+        Ok(RegionMap { regions, site_region })
+    }
+
+    /// True when the fleet actually steps hierarchically.  A one-region
+    /// map is roll-up metadata: the flat path runs and stays
+    /// bit-identical to a region-free fleet.
+    pub fn is_hierarchical(&self) -> bool {
+        self.regions.len() > 1
+    }
+
+    /// Member site indices per region, in site-index order.
+    pub fn members(&self) -> Vec<Vec<usize>> {
+        let mut m = vec![Vec::new(); self.regions.len()];
+        for (site, &r) in self.site_region.iter().enumerate() {
+            m[r as usize].push(site);
+        }
+        m
+    }
+
+    /// Hard-validate the map against the fleet size: full site coverage,
+    /// in-range assignments, unique non-empty names, positive finite
+    /// weights, and no empty region (a region owning no sites would
+    /// divide by zero in its regional load mean).
+    pub fn validate(&self, sites: usize) -> Result<()> {
+        anyhow::ensure!(!self.regions.is_empty(), "region map needs at least one region");
+        anyhow::ensure!(
+            self.site_region.len() == sites,
+            "region map assigns {} sites but the fleet has {sites}",
+            self.site_region.len()
+        );
+        let mut names = BTreeSet::new();
+        for spec in &self.regions {
+            anyhow::ensure!(!spec.name.is_empty(), "region names must be non-empty");
+            anyhow::ensure!(
+                spec.weight.is_finite() && spec.weight > 0.0,
+                "region '{}' weight {} must be positive and finite",
+                spec.name,
+                spec.weight
+            );
+            anyhow::ensure!(
+                names.insert(spec.name.as_str()),
+                "duplicate region name '{}'",
+                spec.name
+            );
+        }
+        let mut owned = vec![false; self.regions.len()];
+        for (site, &r) in self.site_region.iter().enumerate() {
+            anyhow::ensure!(
+                (r as usize) < self.regions.len(),
+                "site {site} mapped to undefined region {r}"
+            );
+            owned[r as usize] = true;
+        }
+        for (r, has) in owned.iter().enumerate() {
+            anyhow::ensure!(
+                *has,
+                "region '{}' owns no sites (every region must own at least one)",
+                self.regions[r].name
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The recorded round-over-round state delta of a steady site.  Replay
+/// re-applies it with the exact float adds the live round would have
+/// produced, so a promoted site's scalars stay bitwise on-trajectory; the
+/// site's telemetry shard and sampler are frozen while it is steady
+/// (documented telemetry decimation, §16).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SteadyDelta {
+    pub(crate) d_total_j: f64,
+    pub(crate) d_profiling_j: f64,
+    /// SET per round (not accumulated): `round_energy_j` is the
+    /// last-round figure; `workload_energy_j` grows by it.
+    pub(crate) round_j: f64,
+    pub(crate) d_wall_s: f64,
+    pub(crate) d_samples: u64,
+    /// SET per round, like the live path does.
+    pub(crate) last_gpu_power_w: f64,
+}
+
+impl SteadyDelta {
+    /// Bitwise equality — promotion demands the exact same delta twice;
+    /// "close enough" would let replay drift off the live trajectory.
+    pub(crate) fn bits_eq(&self, other: &SteadyDelta) -> bool {
+        self.d_total_j.to_bits() == other.d_total_j.to_bits()
+            && self.d_profiling_j.to_bits() == other.d_profiling_j.to_bits()
+            && self.round_j.to_bits() == other.round_j.to_bits()
+            && self.d_wall_s.to_bits() == other.d_wall_s.to_bits()
+            && self.d_samples == other.d_samples
+            && self.last_gpu_power_w.to_bits() == other.last_gpu_power_w.to_bits()
+    }
+}
+
+/// Mutable region-tier runtime (None on flat fleets).  All transitions
+/// happen on the coordinator thread at round boundaries, so the §6
+/// determinism contract is untouched.
+pub(crate) struct RegionRt {
+    pub(crate) map: RegionMap,
+    /// Member site indices per region, in site-index order (derived from
+    /// the map once at construction).
+    pub(crate) members: Vec<Vec<usize>>,
+    /// Interned global-fabric sender handles of the region gateways
+    /// (`"<region>-gw"`).  Send-only: nothing addresses a gateway, so no
+    /// `Endpoint` is ever created for one.
+    pub(crate) gateway_ids: Vec<EndpointId>,
+    /// Per-gateway monotone KPM sequence numbers.
+    pub(crate) gw_seq: Vec<u64>,
+    /// Last allocated regional sub-budget in watts (None until the first
+    /// two-level fill lands, or when the region's sub-fill failed).
+    pub(crate) sub_budget_w: Vec<Option<f64>>,
+    /// Per-site offered-load ledger (requests/s), updated from each KPM
+    /// the gateway folds; survives steady rounds, so the aggregate's
+    /// offered load is the region's standing demand, not just this
+    /// round's reporters.
+    pub(crate) site_load: Vec<f64>,
+    /// Per-site promoted delta (None = active).
+    pub(crate) steady: Vec<Option<SteadyDelta>>,
+    /// Per-site previous round's delta, awaiting its confirming twin.
+    pub(crate) prev_delta: Vec<Option<SteadyDelta>>,
+    /// Per-site disturbance flag: set whenever coordinator-side state
+    /// touched the site this round (a delivered message, a budget push,
+    /// churn); consumed at the next phase, evicting the site from steady.
+    pub(crate) dirty: Vec<bool>,
+    /// Per-region count of replayed (steady) site-rounds.
+    pub(crate) steady_rounds: Vec<u64>,
+    /// Times a promoted site was evicted by a disturbance.
+    pub(crate) disturbances: u64,
+}
+
+impl RegionRt {
+    pub(crate) fn new(map: RegionMap, bus: &Bus) -> RegionRt {
+        let members = map.members();
+        let gateway_ids = map
+            .regions
+            .iter()
+            .map(|spec| bus.resolve(&format!("{}-gw", spec.name)))
+            .collect();
+        let nregions = map.regions.len();
+        let nsites = map.site_region.len();
+        RegionRt {
+            members,
+            gateway_ids,
+            gw_seq: vec![0; nregions],
+            sub_budget_w: vec![None; nregions],
+            site_load: vec![0.0; nsites],
+            steady: vec![None; nsites],
+            prev_delta: vec![None; nsites],
+            dirty: vec![false; nsites],
+            steady_rounds: vec![0; nregions],
+            disturbances: 0,
+            map,
+        }
+    }
+}
+
+impl Fleet {
+    /// Could this site be promoted to steady replay?  Conservative: any
+    /// mechanism that can change per-round behaviour (traffic slots,
+    /// lease clocks, an unprofiled or churning model, an outage or
+    /// quarantine) keeps it active.
+    fn steady_eligible(&self, i: usize) -> bool {
+        let site = &self.sites[i];
+        if self.config.traffic.is_some()
+            || self.config.policy_lease_rounds > 0
+            || !site.trained
+            || site.down
+            || self.is_quarantined(i)
+        {
+            return false;
+        }
+        if self.config.frost_enabled
+            && !matches!(site.host.profile_log.last(), Some(out) if out.model == site.model_id)
+        {
+            return false;
+        }
+        true
+    }
+
+    /// The region tier's site phase: replay steady sites on the
+    /// coordinator (region-then-site index order, §6), run the active
+    /// rest on the worker pool, then promote sites whose last two deltas
+    /// match bitwise.
+    pub(crate) fn run_site_phase_regions(&mut self) -> Result<()> {
+        let mut rt = self.region_rt.take().expect("region phase requires a region runtime");
+        let mut active: Vec<usize> = Vec::new();
+        // (site, total_j, profiling_j, wall_s, samples) before the phase,
+        // for delta extraction afterwards.
+        let mut snaps: Vec<(usize, f64, f64, f64, u64)> = Vec::new();
+        for r in 0..rt.members.len() {
+            for idx in 0..rt.members[r].len() {
+                let i = rt.members[r][idx];
+                let was_dirty = std::mem::take(&mut rt.dirty[i]);
+                if was_dirty {
+                    // Disturbed: back to the active set; a promoted site
+                    // counts as an eviction.
+                    if rt.steady[i].take().is_some() {
+                        rt.disturbances += 1;
+                    }
+                    rt.prev_delta[i] = None;
+                    active.push(i);
+                    continue;
+                }
+                if let Some(delta) = rt.steady[i] {
+                    // Replay on the coordinator: the same scalar moves the
+                    // live round made, in the same order.  `wall_s` and the
+                    // sim clock advance by the same float add from the same
+                    // base, so they stay bitwise consistent with each other.
+                    let site = &mut self.sites[i];
+                    site.host.total_energy_j += delta.d_total_j;
+                    site.profiling_energy_j += delta.d_profiling_j;
+                    site.round_energy_j = delta.round_j;
+                    site.workload_energy_j += delta.round_j;
+                    site.wall_s += delta.d_wall_s;
+                    site.host.testbed.clock.advance(Seconds(delta.d_wall_s));
+                    site.samples += delta.d_samples;
+                    site.last_gpu_power_w = delta.last_gpu_power_w;
+                    site.rounds_run += 1;
+                    rt.steady_rounds[r] += 1;
+                    continue;
+                }
+                if self.steady_eligible(i) {
+                    let site = &self.sites[i];
+                    snaps.push((
+                        i,
+                        site.host.total_energy_j,
+                        site.profiling_energy_j,
+                        site.wall_s,
+                        site.samples,
+                    ));
+                } else {
+                    rt.prev_delta[i] = None;
+                }
+                active.push(i);
+            }
+        }
+        if let Err(e) = self.pool.run_phase_indices(&mut self.sites, &active) {
+            self.region_rt = Some(rt);
+            return Err(e).context("parallel site phase");
+        }
+        for (i, total0, prof0, wall0, samples0) in snaps {
+            let site = &self.sites[i];
+            let delta = SteadyDelta {
+                d_total_j: site.host.total_energy_j - total0,
+                d_profiling_j: site.profiling_energy_j - prof0,
+                round_j: site.round_energy_j,
+                d_wall_s: site.wall_s - wall0,
+                d_samples: site.samples - samples0,
+                last_gpu_power_w: site.last_gpu_power_w,
+            };
+            match rt.prev_delta[i] {
+                Some(prev) if prev.bits_eq(&delta) => {
+                    rt.steady[i] = Some(delta);
+                    rt.prev_delta[i] = None;
+                }
+                _ => rt.prev_delta[i] = Some(delta),
+            }
+        }
+        self.region_rt = Some(rt);
+        Ok(())
+    }
+
+    /// The region tier's upward gateway: fold each region's per-site KPMs
+    /// into one aggregate KPM on the global bus, forward everything else
+    /// (profile results, lifecycle) individually from the gateway handle.
+    /// Intra-region telemetry never touches the global bus — the
+    /// top-level fabric carries O(regions) KPM traffic per round.
+    pub(crate) fn gateway_up_regions(&mut self) {
+        let mut rt = self.region_rt.take().expect("region gateway requires a region runtime");
+        for r in 0..rt.members.len() {
+            let gw = rt.gateway_ids[r];
+            let mut saw_kpm = false;
+            let mut gpu_w = 0.0;
+            let mut cpu_w = 0.0;
+            let mut dram_w = 0.0;
+            let mut energy_j = 0.0;
+            let mut samples = 0u64;
+            let mut gpu_util = 0.0f64;
+            let mut cap_frac = 0.0f64;
+            let mut p99 = 0.0f64;
+            for idx in 0..rt.members[r].len() {
+                let i = rt.members[r][idx];
+                for msg in self.sites[i].outbox.drain(..) {
+                    match msg {
+                        OranMessage::Kpm(k) => {
+                            saw_kpm = true;
+                            rt.site_load[i] = k.offered_load_per_s;
+                            gpu_w += k.gpu_power_w;
+                            cpu_w += k.cpu_power_w;
+                            dram_w += k.dram_power_w;
+                            energy_j += k.energy_j;
+                            samples += k.samples_processed;
+                            gpu_util = gpu_util.max(k.gpu_util);
+                            cap_frac = cap_frac.max(k.cap_frac);
+                            p99 = p99.max(k.p99_latency_s);
+                        }
+                        msg @ OranMessage::Lifecycle(
+                            LifecycleEvent::TrainingFinished { .. }
+                            | LifecycleEvent::Deployed { .. },
+                        ) => {
+                            self.bus.fanout_ids(gw, &[self.smo_id, self.nonrt_id], msg);
+                        }
+                        other => self.bus.send_ids(gw, self.smo_id, other),
+                    }
+                }
+            }
+            if saw_kpm {
+                rt.gw_seq[r] += 1;
+                let offered: f64 = rt.members[r].iter().map(|&i| rt.site_load[i]).sum();
+                // The aggregate's timestamp is the *logical round clock*:
+                // member sim-clocks run at different rates (profiling,
+                // retraining), so the max member time could regress
+                // between rounds and trip the SMO staleness watermark;
+                // the round counter is monotone by construction.
+                let kpm = KpmReport {
+                    host: rt.map.regions[r].name.clone(),
+                    at: Seconds(f64::from(self.round)),
+                    model: None,
+                    gpu_power_w: gpu_w,
+                    cpu_power_w: cpu_w,
+                    dram_power_w: dram_w,
+                    gpu_util,
+                    cap_frac,
+                    samples_processed: samples,
+                    energy_j,
+                    offered_load_per_s: offered,
+                    p99_latency_s: p99,
+                    seq: rt.gw_seq[r],
+                };
+                self.bus.send_ids(gw, self.smo_id, OranMessage::Kpm(kpm));
+                self.metrics.inc("region.gateway_kpms", 1);
+            }
+        }
+        self.region_rt = Some(rt);
+    }
+
+    /// The two-level water-fill (§16).  Top level: split the budget
+    /// remainder across regions with participants, by static weight ×
+    /// live regional load factor — O(regions) allocator work.  Regional
+    /// level: water-fill each sub-remainder over the region's own legal
+    /// throughput curves and push the allocation region-locally.
+    ///
+    /// Two-pass: every region's sub-fill is solved before ANY policy is
+    /// pushed, so one region's infeasible sub-budget (all members below
+    /// their driver floors) leaves the whole fleet's caps untouched for
+    /// that region while the others proceed.
+    pub(crate) fn enforce_budget_regions(&mut self) -> Result<()> {
+        let mut rt = self.region_rt.take().expect("region budget requires a region runtime");
+        let result = self.enforce_budget_regions_inner(&mut rt);
+        self.region_rt = Some(rt);
+        result
+    }
+
+    fn enforce_budget_regions_inner(&mut self, rt: &mut RegionRt) -> Result<()> {
+        let nregions = rt.members.len();
+        // Per-site classification — byte-for-byte the flat algorithm
+        // (`enforce_budget`), bucketed per region: down/quarantined/stale
+        // sites reserve their current cap wattage, legal operating points
+        // are filtered against the policy floor and any derate ceiling,
+        // and a deep derate with no legal point holds its clamped watts.
+        let mut profiles: Vec<Vec<HostProfile>> = vec![Vec::new(); nregions];
+        let mut alloc_sites: Vec<Vec<usize>> = vec![Vec::new(); nregions];
+        let mut reserved: Vec<f64> = vec![0.0; nregions];
+        let mut waiting = 0usize; // stale-profile sites (stagger/churn)
+        for r in 0..nregions {
+            let mean_load = if rt.members[r].is_empty() {
+                0.0
+            } else {
+                let sum: f64 = rt.members[r].iter().map(|&i| rt.site_load[i]).sum();
+                sum / rt.members[r].len() as f64
+            };
+            for idx in 0..rt.members[r].len() {
+                let i = rt.members[r][idx];
+                let site = &self.sites[i];
+                let down = site.down;
+                let quarantined = self.is_quarantined(i);
+                let derate_max = self.derate_ceiling(i);
+                let fresh = matches!(
+                    site.host.profile_log.last(),
+                    Some(out) if out.model == site.model_id
+                );
+                if down || quarantined || !fresh {
+                    if !down && !quarantined {
+                        waiting += 1;
+                    }
+                    reserved[r] +=
+                        site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+                    continue;
+                }
+                let out = site.host.profile_log.last().expect("checked fresh");
+                let min_frac = site.host.policy.min_cap_frac;
+                let legal: Vec<_> = out
+                    .points
+                    .iter()
+                    .filter(|p| {
+                        p.cap_frac >= min_frac - 1e-9 && p.cap_frac <= derate_max + 1e-9
+                    })
+                    .cloned()
+                    .collect();
+                let pts = if legal.is_empty() {
+                    if derate_max < 1.0 {
+                        reserved[r] +=
+                            site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+                        continue;
+                    }
+                    out.points.clone()
+                } else {
+                    legal
+                };
+                let mut profile = HostProfile::from_profile(
+                    &site.name,
+                    site.host.testbed.hw.gpu.tdp_w,
+                    &pts,
+                );
+                // Intra-region demand weight, floored like the flat path:
+                // one zero-demand slot shrinks a site, never zeroes it.
+                let weight = if mean_load > 0.0 {
+                    (rt.site_load[i] / mean_load).max(MIN_BUDGET_WEIGHT)
+                } else {
+                    1.0
+                };
+                for p in profile.points.iter_mut() {
+                    p.1 *= weight;
+                }
+                profiles[r].push(profile);
+                alloc_sites[r].push(i);
+            }
+        }
+        if profiles.iter().all(|p| p.is_empty()) {
+            return Ok(()); // nothing profiled yet; retry next round
+        }
+        // The first allocation is always full-fleet, as on the flat path:
+        // caps ratchet down between profiles, so a thin early remainder
+        // would clamp the profiled sites far below their final share.
+        if waiting > 0 && !self.ever_enforced {
+            return Ok(());
+        }
+        let total_tdp: f64 = self.sites.iter().map(|s| s.host.testbed.hw.gpu.tdp_w).sum();
+        let total_reserved: f64 = reserved.iter().sum();
+        let budget_w = total_tdp * self.current_budget_frac();
+        let remainder = budget_w - total_reserved;
+
+        // Top-level split: regions with participants get
+        // `spec.weight × load factor` shares of the remainder.  The load
+        // factor comes from the SMO's gateway-aggregate ledger (keyed by
+        // region name) against the mean over reporting regions, floored
+        // like a site weight; regions that never reported stay at 1.0.
+        let region_loads = self.smo.offered_load_by_host();
+        let mut load_sum = 0.0;
+        let mut load_n = 0usize;
+        for r in 0..nregions {
+            if let Some(&l) = region_loads.get(rt.map.regions[r].name.as_str()) {
+                load_sum += l;
+                load_n += 1;
+            }
+        }
+        let mean_load = if load_n > 0 { load_sum / load_n as f64 } else { 0.0 };
+        let mut weights = vec![0.0f64; nregions];
+        let mut weight_sum = 0.0;
+        for r in 0..nregions {
+            if profiles[r].is_empty() {
+                continue;
+            }
+            let factor = match region_loads.get(rt.map.regions[r].name.as_str()) {
+                Some(&l) if mean_load > 0.0 => (l / mean_load).max(MIN_BUDGET_WEIGHT),
+                _ => 1.0,
+            };
+            weights[r] = rt.map.regions[r].weight * factor;
+            weight_sum += weights[r];
+        }
+
+        // Pass 1: solve every region's sub-fill.  A no-participant
+        // region's reservation IS its sub-budget.
+        let mut allocs: Vec<Option<Vec<Allocation>>> = Vec::with_capacity(nregions);
+        let mut any_failed = false;
+        let mut any_success = false;
+        for r in 0..nregions {
+            if profiles[r].is_empty() {
+                rt.sub_budget_w[r] = Some(reserved[r]);
+                allocs.push(None);
+                continue;
+            }
+            let share = if weight_sum > 0.0 { weights[r] / weight_sum } else { 0.0 };
+            let sub_remainder = remainder * share;
+            match allocate_budget(&profiles[r], sub_remainder, 5.0) {
+                Some(list) => {
+                    rt.sub_budget_w[r] = Some(reserved[r] + sub_remainder);
+                    any_success = true;
+                    allocs.push(Some(list));
+                }
+                None => {
+                    // This region's share cannot cover its members'
+                    // driver floors: no pushes for it this round, and its
+                    // sub-budget is unknown until a feasible fill lands.
+                    rt.sub_budget_w[r] = None;
+                    any_failed = true;
+                    allocs.push(None);
+                }
+            }
+        }
+        if !any_success {
+            if total_reserved > 0.0 {
+                // Reservations hold the rest of the budget: wait for the
+                // stagger or a recovery to free watts, as the flat path
+                // does.
+                return Ok(());
+            }
+            anyhow::bail!("fleet power budget below the driver floors");
+        }
+
+        // Pass 2: push.  Attribution consumes the round's pending trigger
+        // once, shared by every regional push (§14).
+        let (cause, trigger) = self
+            .pending_cause
+            .take()
+            .unwrap_or((CapCause::WaterFill, self.trace.round_anchor()));
+        for r in 0..nregions {
+            let Some(list) = &allocs[r] else { continue };
+            for (i, alloc) in alloc_sites[r].iter().zip(list) {
+                let site = &mut self.sites[*i];
+                let mut policy = site.host.policy.clone();
+                policy.id = format!("{}-budget", site.name);
+                policy.max_cap_frac = alloc.cap_frac.max(policy.min_cap_frac);
+                let from = site.host.policy.max_cap_frac;
+                if (from - policy.max_cap_frac).abs() > 1e-12 {
+                    self.trace.record(
+                        Some(*i as u32),
+                        TraceData::CapChange { cause, from, to: policy.max_cap_frac, trigger },
+                    );
+                }
+                // Enact the ceiling immediately on the coordinator, same
+                // as the flat path: conservation is a per-round invariant.
+                if site.host.testbed.cap_frac() > policy.max_cap_frac {
+                    site.host.testbed.set_cap_frac(policy.max_cap_frac);
+                }
+                policy.validate().context("region water-fill policy")?;
+                // Region-local push: the policy rides the site's own
+                // fabric shard, never the global bus, while the SMO's
+                // policy book records the same intent so lease renewals
+                // re-assert it.  The push disturbs the site out of any
+                // steady replay — the delivered policy must be applied.
+                self.smo.record_policy(&site.name, policy.clone());
+                site.local_bus.send("smo", &site.name, OranMessage::PolicyUpdate(policy));
+                rt.dirty[*i] = true;
+            }
+        }
+        self.ever_enforced = true;
+        self.budget_applied = waiting == 0 && !any_failed;
+        Ok(())
+    }
+
+    /// Checkpoint access to the region runtime (§15); None on flat
+    /// fleets, whose snapshots carry no regions section.
+    pub(crate) fn ckpt_region_state(&self) -> Option<&RegionRt> {
+        self.region_rt.as_ref()
+    }
+
+    pub(crate) fn ckpt_region_state_mut(&mut self) -> Option<&mut RegionRt> {
+        self.region_rt.as_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_partition_never_leaves_a_region_empty() {
+        // 9 sites over 4 regions: base/extra distribution gives 3,2,2,2 —
+        // a div_ceil chunking would have produced 3,3,3,0.
+        let map = RegionMap::auto(9, 4).unwrap();
+        assert_eq!(map.regions.len(), 4);
+        let members = map.members();
+        assert_eq!(members.iter().map(Vec::len).collect::<Vec<_>>(), vec![3, 2, 2, 2]);
+        map.validate(9).unwrap();
+        // Contiguous assignment, first region first.
+        assert_eq!(map.site_region, vec![0, 0, 0, 1, 1, 2, 2, 3, 3]);
+        // Degenerate shapes are hard errors, not clamps.
+        assert!(RegionMap::auto(4, 0).is_err());
+        assert!(RegionMap::auto(4, 5).is_err());
+        // One region per site is legal.
+        let map = RegionMap::auto(3, 3).unwrap();
+        assert!(map.members().iter().all(|m| m.len() == 1));
+    }
+
+    #[test]
+    fn region_map_validation_rejects_bad_shapes() {
+        let ok = RegionMap::auto(6, 2).unwrap();
+        ok.validate(6).unwrap();
+        // Coverage mismatch.
+        assert!(ok.validate(7).is_err());
+        // Out-of-range assignment names the site and the region.
+        let mut bad = ok.clone();
+        bad.site_region[5] = 9;
+        let err = bad.validate(6).unwrap_err().to_string();
+        assert!(err.contains("site 5 mapped to undefined region 9"), "got: {err}");
+        // Empty region (all sites crowd region 0).
+        let mut bad = ok.clone();
+        bad.site_region.fill(0);
+        let err = bad.validate(6).unwrap_err().to_string();
+        assert!(err.contains("owns no sites"), "got: {err}");
+        // Duplicate names.
+        let mut bad = ok.clone();
+        bad.regions[1].name = bad.regions[0].name.clone();
+        assert!(bad.validate(6).is_err());
+        // Non-positive or non-finite weights.
+        let mut bad = ok.clone();
+        bad.regions[0].weight = 0.0;
+        assert!(bad.validate(6).is_err());
+        bad.regions[0].weight = f64::NAN;
+        assert!(bad.validate(6).is_err());
+    }
+
+    #[test]
+    fn steady_delta_promotion_is_bitwise() {
+        let a = SteadyDelta {
+            d_total_j: 1.25,
+            d_profiling_j: 0.0,
+            round_j: 1.25,
+            d_wall_s: 0.5,
+            d_samples: 128,
+            last_gpu_power_w: 200.0,
+        };
+        let mut b = a;
+        assert!(a.bits_eq(&b));
+        b.d_total_j += 1e-12;
+        assert!(!a.bits_eq(&b));
+    }
+}

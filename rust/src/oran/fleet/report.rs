@@ -1,0 +1,302 @@
+//! Fleet roll-up types and [`Fleet::report`]: the deterministic
+//! KPM/energy/metrics summary every front-end (CLI tables, JSON export,
+//! figures) consumes.  Region-tier fleets (§16) additionally roll up one
+//! [`RegionReport`] per region.
+
+use crate::frost::QosClass;
+use crate::obs::MetricsRegistry;
+use crate::oran::faults::FaultLedger;
+use crate::oran::nonrt_ric::lock_recovering;
+
+use super::Fleet;
+
+/// Per-site slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct SiteReport {
+    pub name: String,
+    pub model: String,
+    pub hw_name: String,
+    pub qos: QosClass,
+    pub cap_frac: f64,
+    pub tdp_w: f64,
+    pub accuracy: f64,
+    pub workload_energy_j: f64,
+    pub round_energy_j: f64,
+    pub profiling_energy_j: f64,
+    /// Energy integrated by this site's telemetry shard.
+    pub hub_energy_j: f64,
+    pub wall_s: f64,
+    pub samples: u64,
+    /// FROST's estimated energy saving for this site (0 if not profiled).
+    pub est_saving: f64,
+}
+
+/// Per-region slice of a [`FleetReport`] (§16).  Present whenever the
+/// fleet was configured with a [`RegionMap`] — including a single-region
+/// map, whose one row is the whole-fleet roll-up.
+///
+/// [`RegionMap`]: super::RegionMap
+#[derive(Debug, Clone)]
+pub struct RegionReport {
+    pub name: String,
+    /// Sites assigned to the region.
+    pub sites: usize,
+    /// Members currently up (not in a scripted outage).
+    pub up_sites: usize,
+    pub workload_energy_j: f64,
+    /// Final-round workload energy of the region's members.
+    pub round_energy_j: f64,
+    pub samples: u64,
+    /// Σ cap_frac·TDP over the members — the region's enforced
+    /// worst-case GPU power.
+    pub cap_power_w: f64,
+    /// The region's last allocated sub-budget in watts (None on flat
+    /// stepping, before the first two-level fill, or while the region's
+    /// sub-fill is infeasible).  Invariant: Σ over regions ≤ the in-force
+    /// global budget.
+    pub sub_budget_w: Option<f64>,
+    /// The region's standing offered load (requests/s) from the gateway
+    /// ledger (hierarchical) or the SMO's per-site ledger (single-region).
+    pub offered_load_per_s: f64,
+    /// Site-rounds served by steady replay instead of a worker trip.
+    pub steady_site_rounds: u64,
+}
+
+/// Fleet KPM/energy roll-up.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub sites: Vec<SiteReport>,
+    /// Per-region roll-up (§16); empty on region-free fleets.
+    pub regions: Vec<RegionReport>,
+    pub fleet_workload_energy_j: f64,
+    /// Workload energy of the final round only — the steady-state number
+    /// baseline comparisons should use (training rounds dominate totals).
+    pub fleet_round_energy_j: f64,
+    pub fleet_profiling_energy_j: f64,
+    pub fleet_samples: u64,
+    pub kpm_reports: usize,
+    /// Per-host KPM aggregation from the SMO: (host, energy J, samples,
+    /// latest reported GPU power W), sorted by host.
+    pub kpm_by_host: Vec<(String, f64, u64, f64)>,
+    /// Latest KPM-reported day p99 request latency per host, in host
+    /// order (traffic-driven fleets; empty otherwise).  The SMO-side
+    /// view of the serving tail — what a latency-aware rApp would act
+    /// on (DESIGN.md §10).
+    pub kpm_p99_by_host: Vec<(String, f64)>,
+    pub mean_cap_frac: f64,
+    /// Mean of FROST's per-site estimated savings (profiled sites only).
+    pub mean_est_saving: f64,
+    /// Global GPU budget in watts, when enforcement is on.
+    pub budget_w: Option<f64>,
+    /// True once the water-fill allocation has actually been pushed to
+    /// every site (false while the profiling stagger is still pending).
+    pub budget_enforced: bool,
+    /// Σ cap_frac·TDP — the fleet's enforced worst-case GPU power.
+    pub cap_power_w: f64,
+    /// Fault-injection ledger of the global fabric (None = no plan
+    /// installed; §13).
+    pub fault_ledger: Option<FaultLedger>,
+    /// KPM reports the SMO rejected as corrupt/stale/duplicate (§13).
+    pub kpm_rejected: u64,
+    /// A1 lease expiries across the fleet (hosts that fell back to their
+    /// safe cap at least once; §13).
+    pub lease_expiries: u64,
+    /// Profile-path quarantine entries over the run (§13).
+    pub quarantine_events: u64,
+    /// Messages dropped from down sites' bounded hold-back queues (§13).
+    pub holdback_dropped: u64,
+    /// A1 lease renewals the SMO pushed over the run (§13).
+    pub lease_renewals: u64,
+    /// Named counters/gauges/summaries aggregated fleet-wide (§14):
+    /// estimate-cache hits/misses/invalidations, monitor triggers, bus
+    /// message counts per interface, lease/holdback ledgers, and the
+    /// per-round cap-wattage summary.
+    pub metrics: MetricsRegistry,
+}
+
+impl Fleet {
+    /// Fleet KPM/energy roll-up (deterministic: site order everywhere).
+    pub fn report(&self) -> FleetReport {
+        // Metrics (§14): clone the live registry (lease renewals,
+        // holdback drops, round cap-wattage summary), then fold in the
+        // per-site counters in site-index order and the SMO/bus totals —
+        // one name-ordered surface replacing the scattered counters.
+        let mut metrics = self.metrics.clone();
+        for site in &self.sites {
+            let (hits, misses) = site.host.testbed.cache.stats();
+            metrics.inc("cache.hits", hits);
+            metrics.inc("cache.misses", misses);
+            metrics.inc("cache.invalidations", site.host.testbed.cache.invalidations());
+            metrics.inc("lease.expiries", site.host.lease_expiries);
+            if let Some(t) = &site.traffic {
+                let (reprofiles, load_shifts, rejected) = t.monitor_counters();
+                metrics.inc("monitor.reprofiles", reprofiles);
+                metrics.inc("monitor.load_shifts", load_shifts);
+                metrics.inc("monitor.rejected", rejected);
+            }
+        }
+        metrics.inc("kpm.rejected", self.smo.kpm_rejected_total());
+        metrics
+            .inc("quarantine.events", lock_recovering(&self.profile_health).quarantine_events);
+        for (key, count) in self.bus.stats() {
+            let name = match key {
+                "A1" => "bus.A1",
+                "O1" => "bus.O1",
+                "O2" => "bus.O2",
+                "dropped" => "bus.dropped",
+                _ => continue,
+            };
+            metrics.inc(name, count);
+        }
+        // Deliberately no worker-count gauge: the report must stay
+        // bit-identical for any `threads` setting (§6).
+        metrics.set_gauge("fleet.sites", self.sites.len() as f64);
+        if let Some(rm) = &self.config.regions {
+            metrics.set_gauge("fleet.regions", rm.regions.len() as f64);
+        }
+        if let Some(rt) = &self.region_rt {
+            metrics.inc("region.steady_rounds", rt.steady_rounds.iter().sum());
+            metrics.inc("region.disturbances", rt.disturbances);
+        }
+
+        let mut sites = Vec::new();
+        let mut workload_j = 0.0;
+        let mut round_j = 0.0;
+        let mut profiling_j = 0.0;
+        let mut samples = 0u64;
+        let mut cap_sum = 0.0;
+        let mut cap_power_w = 0.0;
+        let mut total_tdp = 0.0;
+        let mut est_savings = Vec::new();
+        for site in &self.sites {
+            let cap = site.host.testbed.cap_frac();
+            let tdp = site.host.testbed.hw.gpu.tdp_w;
+            cap_sum += cap;
+            cap_power_w += cap * tdp;
+            total_tdp += tdp;
+            let est_saving = self
+                .smo
+                .profile_records
+                .iter()
+                .rev()
+                .find(|r| r.host == site.name)
+                .map(|r| r.est_energy_saving)
+                .unwrap_or(0.0);
+            if site.host.profile_log.last().is_some() {
+                est_savings.push(est_saving);
+            }
+            let (gpu_j, cpu_j, dram_j) = site.hub.true_energy();
+            sites.push(SiteReport {
+                name: site.name.clone(),
+                model: site.model_id.clone(),
+                hw_name: site.host.testbed.hw.name.clone(),
+                qos: site.qos,
+                cap_frac: cap,
+                tdp_w: tdp,
+                accuracy: site.accuracy,
+                workload_energy_j: site.workload_energy_j,
+                round_energy_j: site.round_energy_j,
+                profiling_energy_j: site.profiling_energy_j,
+                hub_energy_j: gpu_j + cpu_j + dram_j,
+                wall_s: site.wall_s,
+                samples: site.samples,
+                est_saving,
+            });
+            workload_j += site.workload_energy_j;
+            round_j += site.round_energy_j;
+            profiling_j += site.profiling_energy_j;
+            samples += site.samples;
+        }
+
+        // Region roll-up (§16): one row per configured region, member
+        // sums in region-then-site index order.  On the flat stepping
+        // path (single-region map) the offered load comes from the SMO's
+        // per-site ledger and there is no sub-budget.
+        let mut regions = Vec::new();
+        if let Some(rm) = &self.config.regions {
+            let members = rm.members();
+            for (r, spec) in rm.regions.iter().enumerate() {
+                let mut workload_energy_j = 0.0;
+                let mut region_round_j = 0.0;
+                let mut region_samples = 0u64;
+                let mut region_cap_w = 0.0;
+                let mut up_sites = 0usize;
+                let mut offered = 0.0;
+                for &i in &members[r] {
+                    let site = &self.sites[i];
+                    workload_energy_j += site.workload_energy_j;
+                    region_round_j += site.round_energy_j;
+                    region_samples += site.samples;
+                    region_cap_w +=
+                        site.host.testbed.cap_frac() * site.host.testbed.hw.gpu.tdp_w;
+                    if !site.down {
+                        up_sites += 1;
+                    }
+                    offered += match &self.region_rt {
+                        Some(rt) => rt.site_load[i],
+                        None => self
+                            .smo
+                            .offered_load_by_host()
+                            .get(&site.name)
+                            .copied()
+                            .unwrap_or(0.0),
+                    };
+                }
+                let (sub_budget_w, steady_site_rounds) = match &self.region_rt {
+                    Some(rt) => (rt.sub_budget_w[r], rt.steady_rounds[r]),
+                    None => (None, 0),
+                };
+                regions.push(RegionReport {
+                    name: spec.name.clone(),
+                    sites: members[r].len(),
+                    up_sites,
+                    workload_energy_j,
+                    round_energy_j: region_round_j,
+                    samples: region_samples,
+                    cap_power_w: region_cap_w,
+                    sub_budget_w,
+                    offered_load_per_s: offered,
+                    steady_site_rounds,
+                });
+            }
+        }
+
+        let n = self.sites.len().max(1) as f64;
+        FleetReport {
+            sites,
+            regions,
+            fleet_workload_energy_j: workload_j,
+            fleet_round_energy_j: round_j,
+            fleet_profiling_energy_j: profiling_j,
+            fleet_samples: samples,
+            kpm_reports: self.smo.kpms.len(),
+            kpm_by_host: self.smo.kpm_rollup(),
+            kpm_p99_by_host: self
+                .smo
+                .latency_p99_by_host()
+                .iter()
+                .map(|(h, p)| (h.clone(), *p))
+                .collect(),
+            mean_cap_frac: cap_sum / n,
+            mean_est_saving: if est_savings.is_empty() {
+                0.0
+            } else {
+                est_savings.iter().sum::<f64>() / est_savings.len() as f64
+            },
+            budget_w: if self.current_budget_frac() < 1.0 {
+                Some(total_tdp * self.current_budget_frac())
+            } else {
+                None
+            },
+            budget_enforced: self.budget_applied,
+            cap_power_w,
+            fault_ledger: self.bus.fault_ledger(),
+            kpm_rejected: self.smo.kpm_rejected_total(),
+            lease_expiries: metrics.counter("lease.expiries"),
+            quarantine_events: metrics.counter("quarantine.events"),
+            holdback_dropped: metrics.counter("holdback.dropped"),
+            lease_renewals: metrics.counter("lease.renewals"),
+            metrics,
+        }
+    }
+}

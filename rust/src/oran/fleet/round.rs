@@ -1,0 +1,687 @@
+//! The per-site round: traffic state ([`SiteTraffic`]), the site itself
+//! ([`FleetSite`]) and the persistent worker pool ([`SitePool`]) that
+//! steps sites in parallel.  Everything here runs on (or feeds) the
+//! worker threads; all cross-site traffic is deferred to each site's
+//! outbox, which the coordinator's gateway merges in site-index order —
+//! the §6 determinism contract.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::frost::{ContinuousMonitor, MonitorAction, MonitorConfig, Observation, QosClass};
+use crate::metrics::LatencyHistogram;
+use crate::oran::bus::{Bus, Endpoint};
+use crate::oran::host::InferenceHost;
+use crate::oran::messages::OranMessage;
+use crate::simulator::WorkloadDescriptor;
+use crate::telemetry::hub::{PowerReading, TelemetryHub};
+use crate::telemetry::sampler::PowerSampler;
+use crate::traffic::{
+    ArrivalBuffers, ArrivalGen, BatchFormer, SlotLatencies, SlotReport, SlotWindow,
+    TrafficConfig, TrafficServer,
+};
+use crate::util::Seconds;
+
+use super::FleetConfig;
+
+/// Per-site traffic state: the seeded arrival stream, the persistent
+/// serving queue, the SLO ledger and the demand monitor.  Lives entirely
+/// on the site (stepped on the worker thread), so the §6 determinism
+/// contract holds untouched.
+pub struct SiteTraffic {
+    pub(crate) gen: ArrivalGen,
+    pub server: TrafficServer,
+    former: BatchFormer,
+    monitor: ContinuousMonitor,
+    /// This site's QoS deadline (seconds of traffic time).
+    pub deadline_s: f64,
+    /// True when this site serves via the aggregated count path
+    /// (DESIGN.md §10): decided once per scenario from the expected
+    /// requests per slot vs `TrafficConfig::exact_request_threshold`
+    /// (or forced by `TrafficConfig::path`), never mid-day.
+    pub aggregated: bool,
+    /// Arrival-count resolution of the aggregated path (sub-windows per
+    /// slot, sized to a small fraction of this site's deadline).
+    agg_windows: u32,
+    /// Reusable per-slot arrival buffers (exact times / aggregated
+    /// windows): steady-state slots allocate nothing, and generation +
+    /// enqueueing share one definition with the traffic bench
+    /// (`traffic::ArrivalBuffers`).
+    bufs: ArrivalBuffers,
+    /// Per-request latencies of the current day (cleared at day rollover
+    /// so multi-day runs stay bounded in memory).  **Exact path only** —
+    /// the aggregated path accounts latencies solely in [`Self::hist`],
+    /// which is what makes a 10⁶-users/site day O(1) in memory.
+    pub latencies: Vec<f64>,
+    /// O(1) log-bin latency histogram of the current day (both paths;
+    /// cleared at day rollover).  Fleet roll-ups merge these in
+    /// site-index order (§6).
+    pub hist: LatencyHistogram,
+    /// Per-scenario-phase latency histograms (DESIGN.md §11): one per
+    /// `Scenario::phases` entry, fed by the same recording pass as
+    /// [`Self::hist`]; empty when the fleet runs no scenario.  Cleared at
+    /// day rollover with the rest of the day ledgers.
+    pub phase_hists: Vec<LatencyHistogram>,
+    /// Requests shed when this site went down (queue failed at the outage
+    /// event); charged as `dropped` to the first outage slot's report so
+    /// slot-level accounting still conserves.
+    pub(crate) pending_shed: u64,
+    /// Per-slot records of the current day.
+    pub slot_log: Vec<SlotReport>,
+    /// Total slots served over the site's lifetime (day index derives
+    /// from it).
+    pub slots_served: u32,
+    /// Current-day aggregates.
+    pub offered_today: u64,
+    pub day_energy_j: f64,
+    /// Re-profiles the monitor has requested (signature drift OR demand
+    /// shift; see [`Self::load_shift_reprofiles`] for the demand subset).
+    pub reprofile_requests: u64,
+    /// Set on the worker thread when the monitor fires; the coordinator
+    /// consumes it by clearing the catalogue cap, so the re-profile goes
+    /// through the scheduler's stagger instead of stampeding the fleet.
+    pub(crate) reprofile_pending: bool,
+}
+
+impl SiteTraffic {
+    /// How many of the requested re-profiles carried an offered-load
+    /// shift past the monitor's threshold (demand-driven, as opposed to
+    /// pure signature drift).
+    pub fn load_shift_reprofiles(&self) -> u64 {
+        self.monitor.load_shifts
+    }
+
+    /// The demand monitor's counter triple `(reprofiles, load_shifts,
+    /// rejected)` — read whole by the fleet metrics registry (§14).
+    pub fn monitor_counters(&self) -> (u64, u64, u64) {
+        self.monitor.counters()
+    }
+
+    /// Checkpoint access to the arrival generator (§15).  Together with
+    /// the monitor and the shed ledger these are the only private fields
+    /// with live state at a round boundary: `reprofile_pending` is
+    /// consumed by the coordinator every round, and the batch former /
+    /// arrival buffers carry no state between slots, so all of those
+    /// rebuild from config.
+    pub fn ckpt_gen(&self) -> &ArrivalGen {
+        &self.gen
+    }
+
+    pub fn ckpt_gen_mut(&mut self) -> &mut ArrivalGen {
+        &mut self.gen
+    }
+
+    /// Checkpoint access to the demand monitor (§15).
+    pub fn ckpt_monitor(&self) -> &ContinuousMonitor {
+        &self.monitor
+    }
+
+    pub fn ckpt_monitor_mut(&mut self) -> &mut ContinuousMonitor {
+        &mut self.monitor
+    }
+
+    /// Requests shed during an outage but not yet charged to a slot
+    /// ledger — live across round boundaries while a site is dark (§15).
+    pub fn ckpt_pending_shed(&self) -> u64 {
+        self.pending_shed
+    }
+
+    pub fn restore_ckpt_pending_shed(&mut self, shed: u64) {
+        self.pending_shed = shed;
+    }
+
+    /// Roll the day ledgers over when this slot starts a new day and
+    /// return `(slot_in_day, t0)` — shared by the serving path and the
+    /// outage idle path, so a down slot keeps the day clock honest.
+    fn begin_slot(&mut self, tr: &TrafficConfig) -> (u32, f64) {
+        let slot_in_day = self.slots_served % tr.slots_per_day;
+        if slot_in_day == 0 && self.slots_served > 0 {
+            // Day rollover: the previous day flushed its queue at the
+            // last slot; reset the per-day ledgers so multi-day runs
+            // stay bounded in memory.
+            self.latencies.clear();
+            self.hist.clear();
+            for h in self.phase_hists.iter_mut() {
+                h.clear();
+            }
+            self.slot_log.clear();
+            self.offered_today = 0;
+            self.day_energy_j = 0.0;
+        }
+        (slot_in_day, self.slots_served as f64 * tr.slot_s())
+    }
+
+    pub(crate) fn new(
+        cfg: &TrafficConfig,
+        site_index: usize,
+        qos: QosClass,
+        seed: u64,
+        phases: usize,
+    ) -> SiteTraffic {
+        let deadline_s = cfg.slo.deadline_for(qos);
+        SiteTraffic {
+            gen: ArrivalGen::new(
+                cfg.kind,
+                cfg.diurnal.clone(),
+                cfg.site_base_rate(site_index),
+                cfg.day_s,
+                seed,
+            )
+            .expect("validated traffic config"),
+            server: TrafficServer::new(),
+            former: BatchFormer::new(cfg.max_batch, deadline_s),
+            aggregated: cfg.aggregate_for_site(site_index),
+            agg_windows: cfg.agg_windows(deadline_s),
+            bufs: ArrivalBuffers::new(),
+            hist: LatencyHistogram::new(),
+            phase_hists: (0..phases).map(|_| LatencyHistogram::new()).collect(),
+            pending_shed: 0,
+            // Slot-cadence monitoring: settle after a few slots, then
+            // re-profile on demand shifts with a cooldown of roughly a
+            // sixth of a day so one diurnal ramp triggers once.
+            monitor: ContinuousMonitor::new(MonitorConfig {
+                alpha: 0.4,
+                drift_threshold: 0.25,
+                warmup: 3,
+                cooldown: Seconds(cfg.day_s / 6.0),
+                load_shift_threshold: 0.5,
+            }),
+            deadline_s,
+            latencies: Vec::new(),
+            slot_log: Vec::new(),
+            slots_served: 0,
+            offered_today: 0,
+            day_energy_j: 0.0,
+            reprofile_requests: 0,
+            reprofile_pending: false,
+        }
+    }
+}
+
+/// One ML-enabled site: host + private fabric shard + telemetry shard.
+pub struct FleetSite {
+    pub index: usize,
+    pub name: String,
+    /// This site's endpoint on the *global* fabric (downward gateway
+    /// target; resolved once at construction).
+    pub(crate) global_ep: Arc<Endpoint>,
+    /// The site-local fabric: everything the host sends during the
+    /// parallel phase stays here until the gateway merges it upward.
+    pub(crate) local_bus: Arc<Bus>,
+    pub(crate) local_smo: Arc<Endpoint>,
+    pub host: InferenceHost,
+    /// Per-host telemetry shard (the fleet's sharded `TelemetryHub`).
+    pub hub: Arc<TelemetryHub>,
+    /// Periodic power sampling against this site's shard, with a bounded
+    /// retention ring (`FleetConfig::sample_retention`).
+    pub sampler: PowerSampler,
+    pub(crate) zoo_index: usize,
+    pub zoo_model: &'static str,
+    /// Catalogue-unique deployment id, e.g. `ResNet@site03`.
+    pub model_id: String,
+    pub workload: WorkloadDescriptor,
+    pub qos: QosClass,
+    pub trained: bool,
+    /// Cumulative epochs the current model has been trained for. Grows on
+    /// each retraining pass (validation failures escalate the budget), so
+    /// the accuracy ramp converges past any threshold below the model's
+    /// reference accuracy.
+    pub epochs_trained: u32,
+    /// Messages bound for the SMO once the gateway merges outboxes upward
+    /// (in site-index order). Moved, never cloned.
+    pub(crate) outbox: Vec<OranMessage>,
+    /// Workload (training + inference) energy, profiling excluded.
+    pub workload_energy_j: f64,
+    /// Workload energy of the most recent round only (steady-state metric).
+    pub round_energy_j: f64,
+    /// Energy charged to FROST profiling sweeps (Eqs. 4–5).
+    pub profiling_energy_j: f64,
+    pub wall_s: f64,
+    pub samples: u64,
+    pub accuracy: f64,
+    pub last_gpu_power_w: f64,
+    /// Rounds this site has run (drives the warm-up → traffic handover).
+    pub(crate) rounds_run: u32,
+    /// Scripted outage (DESIGN.md §11): set by the coordinator at event
+    /// dispatch.  A down site serves nothing, processes no fabric
+    /// traffic, and draws idle power for the slot.
+    pub down: bool,
+    /// Traffic state when the scenario is traffic-driven.
+    pub traffic: Option<SiteTraffic>,
+}
+
+impl FleetSite {
+    /// Checkpoint access to the site-local fabric shard (§15), so the
+    /// snapshot layer can serialise its queue/inboxes/stats by endpoint
+    /// name.
+    pub fn ckpt_local_bus(&self) -> &Arc<Bus> {
+        &self.local_bus
+    }
+
+    /// Private per-site scalars a checkpoint must carry (§15): the zoo
+    /// cursor (churn state) and the round counter (drives the warm-up →
+    /// traffic handover).  The outbox is always empty at a round
+    /// boundary — the upward gateway drains it every round — so it is
+    /// deliberately not part of the snapshot.
+    pub fn ckpt_site_state(&self) -> (usize, u32) {
+        (self.zoo_index, self.rounds_run)
+    }
+
+    pub fn restore_ckpt_site_state(&mut self, zoo_index: usize, rounds_run: u32) {
+        self.zoo_index = zoo_index;
+        self.rounds_run = rounds_run;
+    }
+
+    /// One site round, run on a worker thread. Touches only site-local
+    /// state; cross-site traffic is deferred to `outbox`.
+    fn run_round(&mut self, cfg: &FleetConfig) {
+        if self.down {
+            self.run_down_round(cfg);
+            return;
+        }
+        self.rounds_run += 1;
+        // Apply coordinator-injected traffic (A1 policies, profile
+        // requests). Profiling runs here, on the worker thread.
+        self.local_bus.deliver_all();
+        let before = self.host.total_energy_j;
+        self.host.step();
+        self.profiling_energy_j += self.host.total_energy_j - before;
+        // The A1 lease clock ticks after this round's policies applied:
+        // a renewal that landed above re-armed it; a missed one brings
+        // the host a round closer to its safe-cap fallback (§13).
+        self.host.tick_lease();
+
+        // Workload phase under the (possibly just-updated) cap. The
+        // estimate is memoized: in steady state this is a cache hit, not a
+        // fixed-point solve.
+        let est = if self.trained {
+            self.host.testbed.infer_estimate(&self.workload, self.host.batch)
+        } else {
+            self.host.testbed.train_estimate(&self.workload, self.host.batch)
+        };
+        let t0 = self.host.testbed.clock.now();
+        let (gpu, cpu, dram) = self.host.testbed.instantaneous(Some(&est));
+        self.hub.publish(PowerReading {
+            at: t0,
+            gpu,
+            cpu,
+            dram,
+            gpu_util: est.gpu_util,
+            freq_mhz: est.op.freq_mhz,
+        });
+        self.sampler.poll(t0);
+        self.last_gpu_power_w = gpu.0;
+
+        let before = self.host.total_energy_j;
+        let traffic_now = self.trained
+            && self.traffic.is_some()
+            && cfg.traffic.as_ref().map_or(false, |t| self.rounds_run > t.warmup_rounds);
+        if traffic_now {
+            let tr = cfg.traffic.as_ref().expect("checked above");
+            self.serve_traffic_slot(cfg, tr, cfg.frost_enabled);
+        } else if self.trained {
+            let _ = self.host.run_inference(&self.model_id, cfg.infer_steps_per_round);
+            self.samples += cfg.infer_steps_per_round * self.host.batch as u64;
+        } else {
+            // Retraining after a validation failure escalates the epoch
+            // budget (fresh run with more epochs), so accuracy ramps past
+            // the threshold instead of repeating the same failing run.
+            let epochs = self.epochs_trained.saturating_add(cfg.train_epochs);
+            let (acc, _wall, _energy) = self
+                .host
+                .run_training(&self.model_id, epochs, cfg.samples_per_epoch)
+                .expect("deployed model trains");
+            self.accuracy = acc;
+            self.trained = true;
+            self.epochs_trained = epochs;
+            self.samples += epochs as u64 * cfg.samples_per_epoch;
+        }
+        self.round_energy_j = self.host.total_energy_j - before;
+        self.workload_energy_j += self.round_energy_j;
+
+        let t1 = self.host.testbed.clock.now();
+        let (gi, ci, di) = self.host.testbed.instantaneous(None);
+        self.hub.publish(PowerReading {
+            at: t1,
+            gpu: gi,
+            cpu: ci,
+            dram: di,
+            gpu_util: 0.0,
+            freq_mhz: 0.0,
+        });
+        self.sampler.poll(t1);
+        self.wall_s = t1.0;
+
+        // Everything the host reported on the local fabric goes upward
+        // once the coordinator merges outboxes (in site order). Messages
+        // move; nothing is re-serialised or cloned on the hop.
+        self.local_bus.deliver_all();
+        for (_from, msg) in self.local_smo.drain() {
+            self.outbox.push(msg);
+        }
+    }
+
+    /// A scripted-outage round (DESIGN.md §11): the site is dark.  It
+    /// processes no fabric messages (pending policies and profile
+    /// requests wait in the queues for recovery), serves nothing, and
+    /// draws idle power for one traffic slot — the slot counter keeps
+    /// advancing so the diurnal clock is intact when it comes back, and
+    /// the slot ledger records a zero-offered, idle-energy slot (plus any
+    /// requests the outage shed from the queue, as drops).
+    fn run_down_round(&mut self, cfg: &FleetConfig) {
+        self.rounds_run += 1;
+        let tr = cfg.traffic.as_ref().expect("scenario outages require traffic");
+        let slot_s = tr.slot_s();
+        let t0c = self.host.testbed.clock.now();
+        let (gi, ci, di) = self.host.testbed.instantaneous(None);
+        self.hub.publish(PowerReading {
+            at: t0c,
+            gpu: gi,
+            cpu: ci,
+            dram: di,
+            gpu_util: 0.0,
+            freq_mhz: 0.0,
+        });
+        self.sampler.poll(t0c);
+        self.last_gpu_power_w = gi.0;
+
+        let agg = self.host.testbed.idle_window(Seconds(slot_s));
+        self.host.total_energy_j += agg.energy.0;
+        self.round_energy_j = agg.energy.0;
+        self.workload_energy_j += agg.energy.0;
+
+        let t1 = self.host.testbed.clock.now();
+        self.sampler.poll(t1);
+        self.wall_s = t1.0;
+
+        let cap_frac = self.host.testbed.cap_frac();
+        let serving = self.trained && self.rounds_run > tr.warmup_rounds;
+        if let Some(t) = self.traffic.as_mut() {
+            if serving {
+                let (slot_in_day, t0) = t.begin_slot(tr);
+                let dropped = std::mem::take(&mut t.pending_shed);
+                t.slot_log.push(SlotReport {
+                    slot_in_day,
+                    t0,
+                    offered: 0,
+                    served: 0,
+                    dropped,
+                    late: 0,
+                    batches: 0,
+                    batch_samples: 0,
+                    busy_s: 0.0,
+                    energy_j: agg.energy.0,
+                    gpu_busy_power_w: 0.0,
+                    offered_rate_per_s: 0.0,
+                    cap_frac,
+                });
+                t.slots_served += 1;
+                t.day_energy_j += agg.energy.0;
+            }
+        }
+    }
+
+    /// Serve the site's next traffic slot (DESIGN.md §9/§10): generate
+    /// the slot's seeded arrivals — individually below the aggregation
+    /// threshold, as per-window counts above it, both into reusable
+    /// buffers — push them through the host's batch former under the
+    /// current cap, and feed the demand monitor, which may ask FROST to
+    /// re-profile (routed through the scheduler stagger via the
+    /// coordinator — see `reprofile_pending`).
+    fn serve_traffic_slot(&mut self, cfg: &FleetConfig, tr: &TrafficConfig, frost_enabled: bool) {
+        let slot_s = tr.slot_s();
+        let t = self.traffic.as_mut().expect("traffic state initialised");
+        let (slot_in_day, t0) = t.begin_slot(tr);
+        let deadline_s = t.deadline_s;
+        let offered = t.bufs.generate_and_enqueue(
+            &mut t.gen,
+            &mut t.server,
+            t.aggregated,
+            t.agg_windows,
+            t0,
+            slot_s,
+            deadline_s,
+        );
+        let window = SlotWindow {
+            t0,
+            dur: slot_s,
+            slot_in_day,
+            flush: slot_in_day + 1 == tr.slots_per_day,
+        };
+        // Scenario-driven fleets route this slot's samples into its phase
+        // histogram as well (same recording pass; DESIGN.md §11).
+        let phase_idx = cfg.scenario.as_ref().map(|s| s.phase_of_slot(slot_in_day));
+        let mut lat = SlotLatencies {
+            exact: if t.aggregated { None } else { Some(&mut t.latencies) },
+            hist: &mut t.hist,
+            phase: match phase_idx {
+                Some(p) => t.phase_hists.get_mut(p),
+                None => None,
+            },
+        };
+        let mut report = self
+            .host
+            .serve_slot(&self.model_id, &mut t.server, &t.former, offered, window, &mut lat)
+            .expect("deployed model serves traffic");
+        // Shed drops that were never ledgered while the site was dark
+        // (e.g. it was retraining through the outage, so no down-slot
+        // report was pushed) land on the first served slot instead — the
+        // slot ledger must account every drop the server counted.
+        report.dropped += std::mem::take(&mut t.pending_shed);
+        t.slots_served += 1;
+        t.offered_today += report.offered;
+        t.day_energy_j += report.energy_j;
+        self.samples += report.served;
+        // Close the loop: the monitor watches the busy-power /
+        // service-throughput signature plus the offered load.
+        let service_tput =
+            if report.busy_s > 0.0 { report.batch_samples as f64 / report.busy_s } else { 0.0 };
+        let action = t.monitor.observe(Observation {
+            at: Seconds(t0 + slot_s),
+            gpu_power_w: report.gpu_busy_power_w,
+            samples_per_s: service_tput,
+            offered_load_per_s: report.offered_rate_per_s,
+        });
+        if frost_enabled && action == MonitorAction::Reprofile {
+            t.reprofile_requests += 1;
+            // Don't self-issue a ProfileRequest: a diurnal ramp shifts
+            // every site in the same round, and direct requests would
+            // stampede N concurrent profiles.  The coordinator clears the
+            // catalogue cap instead, and the FleetProfileScheduler
+            // re-requests it under max_concurrent_profiles.
+            t.reprofile_pending = true;
+        }
+        t.slot_log.push(report);
+    }
+}
+
+/// Sites in flight between the coordinator and a worker: the original
+/// site index rides along so the merge is in site-index order.
+type SiteBatch = Vec<(usize, FleetSite)>;
+
+/// Persistent channel-fed worker pool for the parallel site phase.
+///
+/// Spawned once in [`super::Fleet::new`]; every round the coordinator
+/// partitions the sites into contiguous index chunks (the same
+/// deterministic partition the old per-round `thread::scope` used), moves
+/// each chunk to a worker, and reassembles the returned sites by index.
+/// Worker panics are caught and re-raised on the coordinator thread.
+pub(crate) struct SitePool {
+    injectors: Vec<Sender<SiteBatch>>,
+    results: Receiver<thread::Result<SiteBatch>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl SitePool {
+    pub(crate) fn spawn(workers: usize, cfg: Arc<FleetConfig>) -> SitePool {
+        let workers = workers.max(1);
+        let (results_tx, results) = channel::<thread::Result<SiteBatch>>();
+        let mut injectors = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<SiteBatch>();
+            let results_tx = results_tx.clone();
+            let cfg = cfg.clone();
+            handles.push(thread::spawn(move || {
+                while let Ok(mut batch) = rx.recv() {
+                    let ran = catch_unwind(AssertUnwindSafe(|| {
+                        for (_, site) in batch.iter_mut() {
+                            site.run_round(&cfg);
+                        }
+                        batch
+                    }));
+                    if results_tx.send(ran).is_err() {
+                        break; // coordinator gone
+                    }
+                }
+            }));
+            injectors.push(tx);
+        }
+        SitePool { injectors, results, handles }
+    }
+
+    pub(crate) fn workers(&self) -> usize {
+        self.injectors.len()
+    }
+
+    /// Run one parallel site phase over `sites`, in place.
+    ///
+    /// A dead worker (its channel hung up without a panic payload —
+    /// satellite of §13) surfaces as a proper `Err` instead of a
+    /// coordinator panic, so the caller can report the fleet as failed.
+    /// A *panicking* site is a site bug and is still re-raised verbatim.
+    pub(crate) fn run_phase(&self, sites: &mut Vec<FleetSite>) -> Result<()> {
+        let n = sites.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let chunk = n.div_ceil(self.workers());
+        let mut slots: Vec<Option<FleetSite>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+
+        let mut batches = 0usize;
+        let mut batch: SiteBatch = Vec::with_capacity(chunk);
+        for (i, site) in std::mem::take(sites).into_iter().enumerate() {
+            batch.push((i, site));
+            if batch.len() == chunk {
+                self.injectors[batches]
+                    .send(std::mem::replace(&mut batch, Vec::with_capacity(chunk)))
+                    .map_err(|_| {
+                        anyhow::anyhow!("site worker {batches} died: injector hung up")
+                    })?;
+                batches += 1;
+            }
+        }
+        if !batch.is_empty() {
+            self.injectors[batches]
+                .send(batch)
+                .map_err(|_| anyhow::anyhow!("site worker {batches} died: injector hung up"))?;
+            batches += 1;
+        }
+
+        self.collect(sites, slots, batches, n)
+    }
+
+    /// Run one parallel phase over only the listed site indices, in
+    /// place — the region tier's *active set* (sites replaying a steady
+    /// delta never travel to a worker at all).  The chunking is over the
+    /// active list, but merge order, panic handling and the dead-worker
+    /// error surface are identical to [`Self::run_phase`]; with every
+    /// index listed the partition matches `run_phase` exactly, which is
+    /// what keeps a single-region fleet bit-identical to a flat one.
+    pub(crate) fn run_phase_indices(
+        &self,
+        sites: &mut Vec<FleetSite>,
+        indices: &[usize],
+    ) -> Result<()> {
+        if indices.is_empty() {
+            return Ok(()); // fully steady fleet: nothing travels
+        }
+        let n = sites.len();
+        let chunk = indices.len().div_ceil(self.workers());
+        let mut slots: Vec<Option<FleetSite>> =
+            std::mem::take(sites).into_iter().map(Some).collect();
+
+        let mut batches = 0usize;
+        let mut batch: SiteBatch = Vec::with_capacity(chunk);
+        for &i in indices {
+            let site = slots[i].take().expect("active index listed once");
+            batch.push((i, site));
+            if batch.len() == chunk {
+                self.injectors[batches]
+                    .send(std::mem::replace(&mut batch, Vec::with_capacity(chunk)))
+                    .map_err(|_| {
+                        anyhow::anyhow!("site worker {batches} died: injector hung up")
+                    })?;
+                batches += 1;
+            }
+        }
+        if !batch.is_empty() {
+            self.injectors[batches]
+                .send(batch)
+                .map_err(|_| anyhow::anyhow!("site worker {batches} died: injector hung up"))?;
+            batches += 1;
+        }
+
+        self.collect(sites, slots, batches, n)
+    }
+
+    /// Receive `batches` results, merge them back into `slots` by index,
+    /// re-raise the first worker panic, and rebuild `sites` in index
+    /// order — shared tail of both phase runners.
+    fn collect(
+        &self,
+        sites: &mut Vec<FleetSite>,
+        mut slots: Vec<Option<FleetSite>>,
+        batches: usize,
+        n: usize,
+    ) -> Result<()> {
+        let mut panicked: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..batches {
+            match self.results.recv() {
+                Err(_) => anyhow::bail!("site worker pool died mid-phase: results hung up"),
+                Ok(Ok(done)) => {
+                    for (i, site) in done {
+                        slots[i] = Some(site);
+                    }
+                }
+                // Keep draining the remaining batches so the pool is not
+                // left with stale results, then re-raise.
+                Ok(Err(payload)) => {
+                    panicked.get_or_insert(payload);
+                }
+            }
+        }
+        if let Some(payload) = panicked {
+            resume_unwind(payload);
+        }
+        let mut rebuilt = Vec::with_capacity(n);
+        for slot in slots {
+            rebuilt.push(slot.context("site lost by the worker pool")?);
+        }
+        *sites = rebuilt;
+        Ok(())
+    }
+
+    /// Test hook: replace a worker's injector with a dead channel so the
+    /// next phase observes a hung-up worker.
+    #[cfg(test)]
+    pub(crate) fn kill_worker_for_test(&mut self) {
+        let (tx, _) = channel::<SiteBatch>();
+        self.injectors[0] = tx;
+    }
+}
+
+impl Drop for SitePool {
+    fn drop(&mut self) {
+        // Closing the injector channels ends every worker's recv loop.
+        self.injectors.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}

@@ -15,8 +15,9 @@
 //!   microservice;
 //! * [`lifecycle`] — the six-step AI/ML workflow the O-RAN spec defines;
 //! * [`fleet`] — N-host fleet simulation: thread-pooled sites, staggered
-//!   FROST profiling, global power budgets as per-site A1 policies, and
-//!   user-driven traffic serving ([`crate::traffic`], DESIGN.md §9).
+//!   FROST profiling, global power budgets as per-site A1 policies,
+//!   user-driven traffic serving ([`crate::traffic`], DESIGN.md §9), and
+//!   the region tier (§16) that carries coordination to 10,000 sites.
 
 pub mod a1;
 pub mod bus;
@@ -35,8 +36,9 @@ pub use bus::{Bus, Endpoint, EndpointId};
 pub use catalogue::{CatalogueEntry, ModelCatalogue, ModelState};
 pub use faults::{FabricFate, FaultConfig, FaultLedger, FaultPlan, CHAOS_PRESETS};
 pub use fleet::{
-    bench_config, run_bench_suite, site_seed, FiredEvent, Fleet, FleetConfig, FleetReport,
-    FleetSite, SiteReport, SiteTraffic,
+    bench_config, region_bench_config, run_bench_suite, site_seed, FiredEvent, Fleet,
+    FleetConfig, FleetReport, FleetSite, RegionMap, RegionReport, RegionSpec, SiteReport,
+    SiteTraffic,
 };
 pub use host::{HostCapEvent, HostCapKind, InferenceHost};
 pub use lifecycle::{LifecycleStage, MlLifecycle};

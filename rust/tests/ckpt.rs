@@ -19,11 +19,12 @@ use frost::ckpt::{
     CkptOptions, DriveOutcome, Snapshot,
 };
 use frost::figures::{
-    chaos_config, chaos_resume, chaos_run, chaos_run_ckpt, fleet_resume,
-    scenario_comparison, scenario_comparison_ckpt, scenario_resume,
+    chaos_config, chaos_resume, chaos_run, chaos_run_ckpt, fleet_comparison,
+    fleet_comparison_ckpt, fleet_resume, scenario_comparison, scenario_comparison_ckpt,
+    scenario_resume,
 };
 use frost::obs::export::write_trace;
-use frost::oran::{Fleet, FleetConfig};
+use frost::oran::{Fleet, FleetConfig, RegionMap};
 use frost::scenario::Scenario;
 use frost::traffic::TrafficConfig;
 
@@ -172,6 +173,61 @@ fn chaos_crash_resume_is_bit_identical_for_every_preset_and_thread_count() {
     }
 }
 
+#[test]
+fn region_fleet_crash_resume_is_bit_identical_across_thread_counts() {
+    // A hierarchical fleet (§16) snapshots its region tier — gateway
+    // sequence numbers, sub-budgets, steady-replay deltas — and a resumed
+    // run is byte-identical to the uninterrupted one under any --threads.
+    let cfg = FleetConfig {
+        sites: 8,
+        seed: 23,
+        threads: 1,
+        rounds: 8,
+        train_epochs: 5,
+        samples_per_epoch: 1_000,
+        infer_steps_per_round: 4,
+        budget_frac: 0.85,
+        churn_every: 3,
+        regions: Some(RegionMap::auto(8, 3).unwrap()),
+        trace: true,
+        ..FleetConfig::default()
+    };
+    let gold = fleet_comparison(&cfg).unwrap();
+    let gold_fp = format!("{gold:?}");
+    let dir = tmpdir("region-fleet");
+    let gold_trace = dir.join("gold.jsonl");
+    write_trace(&gold_trace, &gold.trace).unwrap();
+
+    let mut opts = CkptOptions::at(dir.clone());
+    opts.every = 2;
+    opts.crash_at = Some(5);
+    let snapshot = match fleet_comparison_ckpt(&cfg, &opts).unwrap() {
+        DriveOutcome::Crashed { round, snapshot } => {
+            assert_eq!(round, 5, "crash at the armed round");
+            snapshot
+        }
+        DriveOutcome::Done(_) => panic!("crash injection must fire"),
+    };
+
+    let snap = Snapshot::load(&snapshot).unwrap();
+    opts.crash_at = None;
+    for threads in [1usize, 2, 0] {
+        let out = match fleet_resume(&snap, Some(threads), &opts).unwrap() {
+            DriveOutcome::Done(out) => out,
+            DriveOutcome::Crashed { .. } => unreachable!("crash disarmed"),
+        };
+        assert_eq!(format!("{out:?}"), gold_fp, "threads={threads}: resumed output diverged");
+        let rt = dir.join(format!("resume-{threads}.jsonl"));
+        write_trace(&rt, &out.trace).unwrap();
+        assert_eq!(
+            std::fs::read(&rt).unwrap(),
+            std::fs::read(&gold_trace).unwrap(),
+            "threads={threads}: trace bytes diverged"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Plain (non-traffic) fleet used by the failure-path tests.
 fn plain_cfg() -> FleetConfig {
     FleetConfig {
@@ -223,18 +279,29 @@ fn version_mismatched_snapshot_is_rejected_with_a_clear_error() {
 
     // Doctor the header's version and re-checksum so ONLY the version
     // check can reject the file.
-    let text = std::fs::read_to_string(&path).unwrap();
-    let footer_start = text[..text.len() - 1].rfind('\n').unwrap() + 1;
-    let body = text[..footer_start].replacen("\"version\":1", "\"version\":99", 1);
-    assert_ne!(body, text[..footer_start], "the header must carry a version");
-    let doctored = format!(
-        "{body}{{\"s\":\"footer\",\"fnv64\":\"{}\"}}\n",
-        hex_u64(fnv1a64(body.as_bytes()))
-    );
-    std::fs::write(&path, doctored).unwrap();
+    let doctor = |to: &str| {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let footer_start = text[..text.len() - 1].rfind('\n').unwrap() + 1;
+        let body = text[..footer_start].replacen("\"version\":2", to, 1);
+        assert_ne!(body, text[..footer_start], "the header must carry version 2");
+        let doctored = format!(
+            "{body}{{\"s\":\"footer\",\"fnv64\":\"{}\"}}\n",
+            hex_u64(fnv1a64(body.as_bytes()))
+        );
+        let p = path.with_extension("doctored.frostsnap");
+        std::fs::write(&p, doctored).unwrap();
+        p
+    };
 
-    let err = format!("{:#}", Snapshot::load(&path).unwrap_err());
+    let err = format!("{:#}", Snapshot::load(&doctor("\"version\":99")).unwrap_err());
     assert!(err.contains("format version"), "got: {err}");
     assert!(err.contains("99"), "got: {err}");
+
+    // A pre-region (v1) snapshot is hard-rejected too — version 2 added
+    // the region tier (trace region tags, config regions map, regions
+    // state section), so v1 files cannot be half-restored.
+    let err = format!("{:#}", Snapshot::load(&doctor("\"version\":1")).unwrap_err());
+    assert!(err.contains("format version 1"), "got: {err}");
+    assert!(err.contains("reads version 2"), "got: {err}");
     let _ = std::fs::remove_dir_all(&dir);
 }

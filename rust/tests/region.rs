@@ -1,0 +1,337 @@
+//! Region-tier integration battery (DESIGN.md §16): hierarchical
+//! determinism across worker-thread counts, single-region transparency
+//! over the flat path, the two-level budget-conservation audit under
+//! scripted days and chaos presets, and the stale-region-load pin
+//! (a fully-down region must vanish from the top-level allocator's
+//! load ledger, exactly as a down site vanishes from the flat one).
+
+use frost::figures::{chaos_config, chaos_run, scenario_comparison};
+use frost::oran::{Fleet, FleetConfig, FleetReport, RegionMap};
+use frost::scenario::{Phase, Scenario, ScenarioEvent, TimedEvent};
+use frost::traffic::TrafficConfig;
+
+fn hier_cfg(sites: usize, regions: usize, seed: u64) -> FleetConfig {
+    FleetConfig {
+        sites,
+        seed,
+        rounds: 7,
+        train_epochs: 5,
+        samples_per_epoch: 1_000,
+        infer_steps_per_round: 4,
+        max_concurrent_profiles: 4,
+        budget_frac: 0.8,
+        churn_every: 3,
+        regions: Some(RegionMap::auto(sites, regions).unwrap()),
+        ..FleetConfig::default()
+    }
+}
+
+/// Bitwise fingerprint of everything the region tier decides or rolls
+/// up; `Option<f64>` sub-budgets compare through their bit patterns.
+fn region_bits(r: &FleetReport) -> Vec<(String, Vec<u64>)> {
+    r.regions
+        .iter()
+        .map(|reg| {
+            (reg.name.clone(), vec![
+                reg.sites as u64,
+                reg.up_sites as u64,
+                reg.workload_energy_j.to_bits(),
+                reg.round_energy_j.to_bits(),
+                reg.samples,
+                reg.cap_power_w.to_bits(),
+                reg.sub_budget_w.map(f64::to_bits).unwrap_or(u64::MAX),
+                reg.offered_load_per_s.to_bits(),
+                reg.steady_site_rounds,
+            ])
+        })
+        .collect()
+}
+
+#[test]
+fn hierarchical_fleet_bit_identical_across_thread_counts() {
+    // The §6 contract extended to the region tier: gateway aggregation,
+    // steady-delta replay, and the two-level water-fill all run on the
+    // coordinator in region-then-site index order, so the whole
+    // trajectory — caps, energies, sub-budgets, roll-ups — is
+    // bit-identical for any worker-pool width.
+    let mut reports = Vec::new();
+    for threads in [1, 2, 0] {
+        let mut c = hier_cfg(12, 4, 42);
+        c.threads = threads;
+        reports.push(Fleet::new(c).unwrap().run().unwrap());
+    }
+    let first = &reports[0];
+    assert_eq!(first.regions.len(), 4);
+    for r in &reports[1..] {
+        assert_eq!(
+            first.fleet_workload_energy_j.to_bits(),
+            r.fleet_workload_energy_j.to_bits()
+        );
+        assert_eq!(first.fleet_round_energy_j.to_bits(), r.fleet_round_energy_j.to_bits());
+        assert_eq!(first.fleet_samples, r.fleet_samples);
+        assert_eq!(first.kpm_reports, r.kpm_reports);
+        for (a, b) in first.sites.iter().zip(&r.sites) {
+            assert_eq!(a.cap_frac.to_bits(), b.cap_frac.to_bits(), "{}", a.name);
+            assert_eq!(
+                a.workload_energy_j.to_bits(),
+                b.workload_energy_j.to_bits(),
+                "{}",
+                a.name
+            );
+        }
+        assert_eq!(region_bits(first), region_bits(r));
+    }
+}
+
+#[test]
+fn single_region_fleet_is_transparent_over_flat() {
+    // A one-region map is roll-up metadata only: the flat stepping path
+    // runs and every decision stays bit-identical to a region-free
+    // fleet with the same seed and budget.
+    let flat_cfg = FleetConfig {
+        sites: 5,
+        seed: 42,
+        rounds: 6,
+        train_epochs: 5,
+        samples_per_epoch: 1_000,
+        infer_steps_per_round: 4,
+        max_concurrent_profiles: 2,
+        budget_frac: 0.85,
+        ..FleetConfig::default()
+    };
+    let mut one_cfg = flat_cfg.clone();
+    one_cfg.regions = Some(RegionMap::auto(5, 1).unwrap());
+    assert!(!one_cfg.regions.as_ref().unwrap().is_hierarchical());
+
+    let flat = Fleet::new(flat_cfg).unwrap().run().unwrap();
+    let one = Fleet::new(one_cfg).unwrap().run().unwrap();
+
+    assert_eq!(
+        flat.fleet_workload_energy_j.to_bits(),
+        one.fleet_workload_energy_j.to_bits()
+    );
+    assert_eq!(flat.fleet_round_energy_j.to_bits(), one.fleet_round_energy_j.to_bits());
+    assert_eq!(
+        flat.fleet_profiling_energy_j.to_bits(),
+        one.fleet_profiling_energy_j.to_bits()
+    );
+    assert_eq!(flat.fleet_samples, one.fleet_samples);
+    assert_eq!(flat.kpm_reports, one.kpm_reports);
+    assert_eq!(flat.cap_power_w.to_bits(), one.cap_power_w.to_bits());
+    for (a, b) in flat.sites.iter().zip(&one.sites) {
+        assert_eq!(a.cap_frac.to_bits(), b.cap_frac.to_bits(), "{}", a.name);
+        assert_eq!(
+            a.workload_energy_j.to_bits(),
+            b.workload_energy_j.to_bits(),
+            "{}",
+            a.name
+        );
+        assert_eq!(a.hub_energy_j.to_bits(), b.hub_energy_j.to_bits(), "{}", a.name);
+        assert_eq!(a.samples, b.samples, "{}", a.name);
+    }
+    // The roll-up metadata is the only difference: one region covering
+    // the whole fleet, with no sub-budget (flat stepping).
+    assert!(flat.regions.is_empty());
+    assert_eq!(one.regions.len(), 1);
+    assert_eq!(one.regions[0].sites, 5);
+    assert!(one.regions[0].sub_budget_w.is_none());
+}
+
+#[test]
+fn two_level_budget_audit_holds_under_scenario_presets() {
+    // Outage, budget-step, and derate rounds under hierarchical
+    // stepping: in every audited round Σ applied caps ≤ budget, Σ
+    // regional sub-budgets ≤ budget, and each region's applied watts
+    // stay within its own sub-budget.
+    for preset in ["outage-day", "grid-step", "heatwave"] {
+        let tr = TrafficConfig {
+            users_per_site: 100,
+            requests_per_user_per_day: 20.0,
+            day_s: 800.0,
+            slots_per_day: 4,
+            warmup_rounds: 2,
+            max_batch: 24,
+            ..TrafficConfig::default()
+        };
+        let sites = 4;
+        let scen = Scenario::preset(preset, sites, &tr).expect("preset builds");
+        let cfg = FleetConfig {
+            sites,
+            seed: 17,
+            threads: 1,
+            rounds: tr.rounds_for_one_day(),
+            train_epochs: 25,
+            samples_per_epoch: 4_000,
+            infer_steps_per_round: 6,
+            max_concurrent_profiles: sites,
+            budget_frac: 0.9,
+            regions: Some(RegionMap::auto(sites, 2).unwrap()),
+            traffic: Some(tr),
+            scenario: Some(scen),
+            ..FleetConfig::default()
+        };
+        let out = scenario_comparison(&cfg).unwrap();
+        assert!(out.budget_audited_rounds > 0, "{preset}: water-fill never engaged");
+        assert!(
+            out.region_audited_rounds > 0,
+            "{preset}: sub-budgets never in force"
+        );
+        assert!(
+            out.max_cap_excess_w <= 1e-6,
+            "{preset}: fleet budget exceeded by {} W",
+            out.max_cap_excess_w
+        );
+        assert!(
+            out.max_subbudget_excess_w <= 1e-6,
+            "{preset}: Σ sub-budgets exceed the budget by {} W",
+            out.max_subbudget_excess_w
+        );
+        assert!(
+            out.max_region_excess_w <= 1e-6,
+            "{preset}: a region exceeded its sub-budget by {} W",
+            out.max_region_excess_w
+        );
+    }
+}
+
+#[test]
+fn chaos_preset_with_regions_conserves_both_levels_and_heals() {
+    // Fault injection on a hierarchical fleet: both conservation levels
+    // hold through lost/duplicated/delayed fabric messages, and the
+    // §13 healing machinery still converges over the quiet tail.
+    let mut cfg = chaos_config("lossy-fabric", 6, 11, true).unwrap();
+    cfg.regions = Some(RegionMap::auto(6, 2).unwrap());
+    let out = chaos_run(&cfg).unwrap();
+    assert!(out.ledger.total() > 0, "the plan must inject something");
+    assert!(out.budget_audited_rounds > 0, "the water-fill must engage");
+    assert!(out.region_audited_rounds > 0, "sub-budgets must be in force");
+    assert!(
+        out.max_cap_excess_w <= 1e-6,
+        "fleet budget exceeded by {} W",
+        out.max_cap_excess_w
+    );
+    assert!(
+        out.max_subbudget_excess_w <= 1e-6,
+        "Σ sub-budgets exceed the budget by {} W",
+        out.max_subbudget_excess_w
+    );
+    assert!(
+        out.max_region_excess_w <= 1e-6,
+        "a region exceeded its sub-budget by {} W",
+        out.max_region_excess_w
+    );
+    assert!(out.healed, "the fleet must heal over the quiet tail");
+    assert_eq!(out.report.regions.len(), 2);
+}
+
+#[test]
+fn all_sites_down_in_a_region_clears_its_stale_load() {
+    // The region analogue of `Smo::clear_host_load`: when a region's
+    // last up-site goes down, the top-level allocator must forget the
+    // region's aggregate load weight — otherwise the blacked-out region
+    // keeps its busy-hour share of the budget while serving nothing.
+    let tr = TrafficConfig {
+        users_per_site: 100,
+        requests_per_user_per_day: 20.0,
+        day_s: 800.0,
+        slots_per_day: 4,
+        warmup_rounds: 2,
+        max_batch: 24,
+        ..TrafficConfig::default()
+    };
+    let sites = 4;
+    // Slots 0..4 are served in rounds 3..=6 (warmup 2).
+    let down_round = Scenario::round_for_slot(&tr, 1);
+    let up_round = Scenario::round_for_slot(&tr, 3);
+    let scen = Scenario {
+        name: "region-blackout".into(),
+        events: vec![
+            TimedEvent { round: down_round, event: ScenarioEvent::SiteDown { site: 0 } },
+            TimedEvent { round: down_round, event: ScenarioEvent::SiteDown { site: 1 } },
+            TimedEvent { round: up_round, event: ScenarioEvent::SiteUp { site: 0 } },
+            TimedEvent { round: up_round, event: ScenarioEvent::SiteUp { site: 1 } },
+        ],
+        phases: vec![
+            Phase { name: "pre".into(), from_slot: 0, to_slot: 1 },
+            Phase { name: "blackout".into(), from_slot: 1, to_slot: 3 },
+            Phase { name: "post".into(), from_slot: 3, to_slot: 4 },
+        ],
+        region_size: 2,
+    };
+    scen.validate(sites, &tr).expect("script is well-formed");
+    // RegionMap::auto(4, 2): sites {0, 1} form region01, {2, 3} region02
+    // — the script blacks out all of region01 for two rounds.
+    let cfg = FleetConfig {
+        sites,
+        seed: 17,
+        threads: 1,
+        rounds: tr.rounds_for_one_day(),
+        train_epochs: 25,
+        samples_per_epoch: 4_000,
+        infer_steps_per_round: 6,
+        max_concurrent_profiles: sites,
+        budget_frac: 0.9,
+        regions: Some(RegionMap::auto(sites, 2).unwrap()),
+        traffic: Some(tr),
+        scenario: Some(scen),
+        ..FleetConfig::default()
+    };
+    let mut fleet = Fleet::new(cfg).unwrap();
+    // Run up to and including the last pre-outage round: the gateway
+    // aggregates must have taught the SMO region01's offered load.
+    while fleet.round < down_round - 1 {
+        fleet.run_round().unwrap();
+    }
+    let before = fleet.smo.offered_load_by_host();
+    assert!(
+        before.get("region01").copied().unwrap_or(0.0) > 0.0,
+        "SMO never learned region01's load: {before:?}"
+    );
+
+    // The blackout rounds: both member sites down from `down_round`.
+    while fleet.round < up_round - 1 {
+        fleet.run_round().unwrap();
+        let rep = fleet.report();
+        assert_eq!(rep.regions[0].up_sites, 0, "round {}", fleet.round);
+        assert_eq!(rep.regions[1].up_sites, 2, "round {}", fleet.round);
+        assert_eq!(
+            rep.regions[0].offered_load_per_s, 0.0,
+            "round {}: a dark region offers no load",
+            fleet.round
+        );
+        // THE pin: the top-level ledger forgot the region's aggregate
+        // (not merely zeroed it — the entry is gone, like a down host's).
+        let ledger = fleet.smo.offered_load_by_host();
+        assert!(
+            !ledger.contains_key("region01"),
+            "round {}: stale region01 weight survives: {ledger:?}",
+            fleet.round
+        );
+        assert!(
+            ledger.contains_key("region02"),
+            "round {}: the surviving region must keep its weight",
+            fleet.round
+        );
+        // Conservation still holds with a no-participant region: its
+        // reservation is its sub-budget, and the sum stays under budget.
+        if let Some(budget) = rep.budget_w {
+            let sub_sum: f64 = rep.regions.iter().filter_map(|r| r.sub_budget_w).sum();
+            assert!(
+                sub_sum <= budget + 1e-6,
+                "round {}: Σ sub-budgets {sub_sum} > budget {budget}",
+                fleet.round
+            );
+        }
+    }
+
+    // Recovery: both sites return, and the gateway re-teaches the SMO.
+    while fleet.round < fleet.config.rounds {
+        fleet.run_round().unwrap();
+    }
+    let rep = fleet.report();
+    assert_eq!(rep.regions[0].up_sites, 2, "region01 must recover");
+    assert!(
+        fleet.smo.offered_load_by_host().contains_key("region01"),
+        "a recovered region must re-enter the ledger"
+    );
+}
